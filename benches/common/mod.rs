@@ -1,0 +1,107 @@
+//! Shared helpers for the figure/table benches: the paper-scale task
+//! specs keyed by the Table-2 workloads.
+
+#![allow(dead_code)]
+
+use mmserve::models::TaskKind;
+use mmserve::perfmodel::configs::{CHAMELEON_34B, CHAMELEON_7B, HSTU_14L,
+                                  LLAMA_34B, LLAMA_7B, SEAMLESS_M4T};
+use mmserve::perfmodel::latency::TaskSpec;
+use mmserve::workload::{spec_for, WorkloadSpec};
+
+/// Paper-scale spec for one Table-2 workload at a given batch.
+pub fn task_spec(task: TaskKind, batch: usize) -> TaskSpec {
+    let w: &WorkloadSpec = spec_for(task);
+    match task {
+        TaskKind::TextToText => TaskSpec::Decoder {
+            cfg: &LLAMA_34B,
+            batch,
+            prompt_len: w.input.avg as usize,
+            decode_steps: w.decode_steps as usize,
+            decodes_per_step: 1,
+        },
+        TaskKind::ImageToText | TaskKind::ImageTextToText => {
+            TaskSpec::Decoder {
+                cfg: &CHAMELEON_34B,
+                batch,
+                prompt_len: w.input.avg as usize,
+                decode_steps: w.decode_steps as usize,
+                decodes_per_step: 1,
+            }
+        }
+        TaskKind::TextToImage => TaskSpec::Decoder {
+            cfg: &CHAMELEON_34B,
+            batch,
+            prompt_len: w.input.avg as usize,
+            decode_steps: w.decode_steps as usize,
+            decodes_per_step: 2,
+        },
+        TaskKind::SpeechToSpeech
+        | TaskKind::SpeechToText
+        | TaskKind::TextToTextTrans
+        | TaskKind::TextToSpeech => TaskSpec::Seamless {
+            cfg: &SEAMLESS_M4T,
+            src_len: w.input.avg as usize,
+            text_steps: w.decode_steps as usize,
+            speech_out: matches!(task, TaskKind::SpeechToSpeech
+                                 | TaskKind::TextToSpeech),
+            reorder_fused: false,
+            speech_in: matches!(task, TaskKind::SpeechToSpeech
+                                | TaskKind::SpeechToText),
+        },
+        TaskKind::HistoryToAction => TaskSpec::Hstu {
+            cfg: &HSTU_14L,
+            batch,
+            seq: w.input.avg as usize,
+        },
+    }
+}
+
+/// 7B-class spec (LayerSkip figures use 7B and 34B).
+pub fn task_spec_7b(task: TaskKind, batch: usize) -> TaskSpec {
+    match task_spec(task, batch) {
+        TaskSpec::Decoder {
+            batch,
+            prompt_len,
+            decode_steps,
+            decodes_per_step,
+            ..
+        } => {
+            let cfg = match task.model() {
+                mmserve::models::ModelKind::Chameleon => &CHAMELEON_7B,
+                _ => &LLAMA_7B,
+            };
+            TaskSpec::Decoder {
+                cfg,
+                batch,
+                prompt_len,
+                decode_steps,
+                decodes_per_step,
+            }
+        }
+        other => other,
+    }
+}
+
+/// Paper Table-3 max batch sizes (used as the "maximum batch" setting).
+pub fn paper_max_batch(task: TaskKind) -> usize {
+    match task {
+        TaskKind::TextToText => 4,
+        TaskKind::ImageToText | TaskKind::ImageTextToText
+        | TaskKind::TextToImage => 16,
+        TaskKind::SpeechToSpeech | TaskKind::SpeechToText => 128,
+        TaskKind::TextToTextTrans | TaskKind::TextToSpeech => 384,
+        TaskKind::HistoryToAction => 32,
+    }
+}
+
+/// Whether real-artifact benches should run (artifacts present).
+pub fn artifacts_available() -> Option<std::path::PathBuf> {
+    let dir = mmserve::artifacts_dir();
+    if dir.join("llama").join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        println!("  (artifacts not built — real-CPU sections skipped)");
+        None
+    }
+}

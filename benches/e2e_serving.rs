@@ -1,0 +1,128 @@
+//! End-to-end serving benchmark on the real tiny models (CPU PJRT):
+//! continuous-batched Llama throughput under each lever configuration,
+//! plus Seamless and HSTU service latency. This is the "whole stack
+//! composes" measurement recorded in EXPERIMENTS.md.
+
+mod common;
+
+use std::time::Instant;
+
+use mmserve::coordinator::opts::{ExecMode, OptConfig};
+use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
+use mmserve::coordinator::seamless_pipe::ReorderMode;
+use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::models::{ModelKind, TaskKind};
+
+fn main() {
+    let Some(dir) = common::artifacts_available() else { return };
+    let fast = std::env::var("MMSERVE_BENCH_FAST").is_ok();
+    let n_req = if fast { 6 } else { 16 };
+    let max_new = if fast { 8 } else { 16 };
+
+    println!("=== E2E serving (real CPU, tiny models) ===");
+    // ---- Llama under lever configs -----------------------------------
+    for (label, opt, batch) in [
+        ("llama eager bs=1 (launch-overhead baseline)",
+         OptConfig::eager_baseline(), 1usize),
+        ("llama graph bs=1", OptConfig::baseline(), 1),
+        ("llama graph bs=4 (continuous batching)", OptConfig::baseline(), 4),
+        ("llama graph+flash bs=4", OptConfig::sdpa(), 4),
+        ("llama graph+flash+int8 bs=4", OptConfig::sys_opt(), 4),
+        ("llama layerskip bs=1", {
+            let mut o = OptConfig::baseline();
+            o.layerskip = true;
+            o
+        }, 1),
+    ] {
+        let router = Router::start(&dir, RouterConfig {
+            models: vec![ModelKind::Llama],
+            opt,
+            reorder: ReorderMode::Fused,
+            batch,
+            prefill_budget: 0,
+        });
+        // warm: one request compiles the stages
+        let _ = router.call(Request::text(router.fresh_id(),
+                                          TaskKind::TextToText, "warm", 2));
+        let t0 = Instant::now();
+        let mut rxs = vec![];
+        for i in 0..n_req {
+            let mut req = Request::text(
+                router.fresh_id(),
+                TaskKind::TextToText,
+                ["sort an array", "hello world function",
+                 "binary search impl", "compute a checksum"][i % 4],
+                max_new,
+            );
+            req.sampling = SamplingParams::greedy();
+            rxs.push(router.submit(req).expect("submit"));
+        }
+        let responses: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let stats = collect_stats(&responses, t0.elapsed().as_secs_f64());
+        println!(
+            "  {:<44} {:>7.1} tok/s  p50-ttft {:>7.2} ms  p50-e2e \
+             {:>8.2} ms",
+            label,
+            stats.throughput_tok_s(),
+            stats.ttft.percentile(50.0),
+            stats.e2e.percentile(50.0)
+        );
+        router.shutdown();
+        let _ = ExecMode::Graph;
+    }
+
+    // ---- Multimodal mixed batch ---------------------------------------
+    println!("\n  mixed multimodal batch (all four models):");
+    let router = Router::start(&dir, RouterConfig {
+        models: vec![ModelKind::Llama, ModelKind::Chameleon,
+                     ModelKind::Seamless, ModelKind::Hstu],
+        opt: OptConfig::baseline(),
+        reorder: ReorderMode::Fused,
+        batch: 4,
+        prefill_budget: 0,
+    });
+    let wav: Vec<f32> = (0..160 * 30).map(|i| (i as f32 * 0.03).sin())
+        .collect();
+    let px = vec![0.3f32; 64 * 64];
+    let history: Vec<i32> = (0..200).map(|i| (i * 37) % 6000).collect();
+    let t0 = Instant::now();
+    let reqs: Vec<Request> = vec![
+        Request::text(router.fresh_id(), TaskKind::TextToText,
+                      "write a parser", max_new),
+        Request {
+            id: router.fresh_id(),
+            task: TaskKind::ImageToText,
+            input: RequestInput::Image { pixels: px.clone(), h: 64, w: 64 },
+            max_new_tokens: 8,
+            sampling: SamplingParams::greedy(),
+        },
+        Request {
+            id: router.fresh_id(),
+            task: TaskKind::SpeechToText,
+            input: RequestInput::Speech(wav),
+            max_new_tokens: 12,
+            sampling: SamplingParams::greedy(),
+        },
+        Request {
+            id: router.fresh_id(),
+            task: TaskKind::HistoryToAction,
+            input: RequestInput::History(history),
+            max_new_tokens: 0,
+            sampling: SamplingParams::greedy(),
+        },
+    ];
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| (r.task, router.submit(r).unwrap()))
+        .collect();
+    for (task, rx) in rxs {
+        let r = rx.recv().unwrap().expect("response");
+        println!("    {:<6} e2e {:>8.2} ms  ({} decode steps)",
+                 task.notation(), r.e2e * 1e3, r.decode_steps);
+    }
+    println!("  mixed-batch wall: {:.2} s", t0.elapsed().as_secs_f64());
+    router.shutdown();
+}

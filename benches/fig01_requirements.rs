@@ -1,0 +1,34 @@
+//! Figure 1: per-task system requirements (latency, GPU utilization,
+//! memory capacity, compute) — the radar chart as a table.
+
+mod common;
+
+use mmserve::models::TaskKind;
+use mmserve::perfmodel::device::A100;
+use mmserve::perfmodel::levers::Levers;
+use mmserve::perfmodel::requirements::requirements;
+use mmserve::substrate::table::{fmt_bytes, Table};
+
+fn main() {
+    println!("=== Figure 1: system requirements per task (A100, bs=1, \
+              device model) ===");
+    let mut t = Table::new(&[
+        "task", "model", "latency(ms)", "gpu_util", "memory", "compute(GF)",
+    ]);
+    for task in TaskKind::all() {
+        let spec = common::task_spec(task, 1);
+        let r = requirements(task.notation(), &spec, &A100,
+                             &Levers::baseline());
+        t.row(&[
+            task.notation().to_string(),
+            format!("{:?}", task.model()),
+            format!("{:.1}", r.latency_s * 1e3),
+            format!("{:.0}%", r.gpu_utilization * 100.0),
+            fmt_bytes(r.memory_bytes),
+            format!("{:.1}", r.compute_flops / 1e9),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape check: T-I demands the most across all axes; \
+              HSTU has the highest GPU utilization.");
+}

@@ -1,0 +1,88 @@
+//! Figure 3: end-to-end latency distributions per workload — per-sample
+//! lengths drawn from the Table-2 generators, costed by the device
+//! model at bs=1 on A100 (the paper's Fig-3 methodology).
+
+mod common;
+
+use mmserve::models::TaskKind;
+use mmserve::perfmodel::configs::{CHAMELEON_34B, HSTU_14L, LLAMA_34B,
+                                  SEAMLESS_M4T};
+use mmserve::perfmodel::device::A100;
+use mmserve::perfmodel::latency::{task_cost, TaskSpec};
+use mmserve::perfmodel::levers::Levers;
+use mmserve::substrate::metrics::Histogram;
+use mmserve::substrate::table::Table;
+use mmserve::workload::{sample_workload, TABLE2};
+
+fn main() {
+    println!("=== Figure 3: latency distribution per workload \
+              (A100, bs=1, device model) ===");
+    let n = if std::env::var("MMSERVE_BENCH_FAST").is_ok() { 30 } else { 120 };
+    let mut t = Table::new(&[
+        "task", "dataset", "p10(ms)", "p50(ms)", "p90(ms)", "mean(ms)",
+        "stddev", "paper avg(ms)",
+    ]);
+    for w in &TABLE2 {
+        let mut h = Histogram::new();
+        for s in sample_workload(w, n, 7) {
+            let spec = match w.task {
+                TaskKind::TextToText => TaskSpec::Decoder {
+                    cfg: &LLAMA_34B,
+                    batch: 1,
+                    prompt_len: s.input_len,
+                    decode_steps: s.output_len.min(1200),
+                    decodes_per_step: 1,
+                },
+                TaskKind::ImageToText | TaskKind::ImageTextToText => {
+                    TaskSpec::Decoder {
+                        cfg: &CHAMELEON_34B,
+                        batch: 1,
+                        prompt_len: s.input_len,
+                        decode_steps: w.decode_steps as usize,
+                        decodes_per_step: 1,
+                    }
+                }
+                TaskKind::TextToImage => TaskSpec::Decoder {
+                    cfg: &CHAMELEON_34B,
+                    batch: 1,
+                    prompt_len: s.input_len,
+                    decode_steps: 1024,
+                    decodes_per_step: 2,
+                },
+                TaskKind::SpeechToSpeech
+                | TaskKind::SpeechToText
+                | TaskKind::TextToTextTrans
+                | TaskKind::TextToSpeech => TaskSpec::Seamless {
+                    cfg: &SEAMLESS_M4T,
+                    src_len: s.input_len,
+                    text_steps: w.decode_steps as usize,
+                    speech_out: matches!(w.task, TaskKind::SpeechToSpeech
+                                         | TaskKind::TextToSpeech),
+                    reorder_fused: false,
+                    speech_in: matches!(w.task, TaskKind::SpeechToSpeech
+                                        | TaskKind::SpeechToText),
+                },
+                TaskKind::HistoryToAction => TaskSpec::Hstu {
+                    cfg: &HSTU_14L,
+                    batch: 1,
+                    seq: s.input_len,
+                },
+            };
+            let c = task_cost(&spec, &A100, &Levers::baseline());
+            h.record(c.total * 1e3);
+        }
+        t.row(&[
+            w.task.notation().to_string(),
+            w.dataset.to_string(),
+            format!("{:.1}", h.percentile(10.0)),
+            format!("{:.1}", h.percentile(50.0)),
+            format!("{:.1}", h.percentile(90.0)),
+            format!("{:.1}", h.mean()),
+            format!("{:.1}", h.stddev()),
+            format!("{:.0}", w.paper_avg_ms),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape check: T-T widest spread (stddev), T-I the \
+              longest latency, H-A the shortest.");
+}

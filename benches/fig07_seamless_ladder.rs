@@ -1,0 +1,103 @@
+//! Figure 7 / Table 4: the Seamless incremental optimization ladder —
+//! compile the text decoder, add CUDA-Graph, compile the KV reorder,
+//! compile the vocoder — plus the real-CPU measured reorder disciplines
+//! (host copy vs fused gather, Obs #4).
+
+mod common;
+
+use mmserve::coordinator::seamless_pipe::{ReorderMode, SeamlessPipeline,
+                                          SeamlessTask};
+use mmserve::perfmodel::configs::SEAMLESS_M4T;
+use mmserve::perfmodel::device::{DeviceSpec, A100};
+use mmserve::perfmodel::levers::cost_walk;
+use mmserve::perfmodel::ops::{self, AttnKind, OpWalk};
+use mmserve::runtime::engine::Engine;
+use mmserve::substrate::bench::BenchSuite;
+use mmserve::workload::spec_for;
+
+/// Cost the S-S pipeline with per-module compile toggles (the Fig-7
+/// ladder): (text_dec_compiled, reorder_compiled, vocoder_compiled).
+fn ladder_cost(dev: &DeviceSpec, dec_c: bool, reorder_c: bool,
+               voc_c: bool) -> f64 {
+    let cfg = &SEAMLESS_M4T;
+    let w = spec_for(mmserve::models::TaskKind::SpeechToSpeech);
+    let src = w.input.avg as usize;
+    let steps = w.decode_steps as usize;
+    let enc = ops::seamless_encoder(cfg, src, AttnKind::Naive);
+    let (enc_wall, _) = cost_walk(&enc, dev, false);
+
+    let mut dec = OpWalk::default();
+    let mut reorder = OpWalk::default();
+    for i in 0..steps {
+        dec.extend(ops::seamless_dec_step(cfg, cfg.beam, i + 1, src,
+                                          AttnKind::Naive));
+        reorder.extend(ops::seamless_kv_reorder(cfg, cfg.beam, i + 1,
+                                                reorder_c));
+    }
+    let (dec_wall, _) = cost_walk(&dec, dev, dec_c);
+    let (re_wall, _) = cost_walk(&reorder, dev, reorder_c);
+
+    let t2u = ops::seamless_t2u(cfg, steps);
+    let (t2u_wall, _) = cost_walk(&t2u, dev, false);
+    let voc = ops::seamless_vocoder(cfg, steps * cfg.t2u_upsample);
+    let (voc_wall, _) = cost_walk(&voc, dev, voc_c);
+    enc_wall + dec_wall + re_wall + t2u_wall + voc_wall
+}
+
+fn main() {
+    println!("=== Figure 7 (device model): Seamless S-S incremental \
+              compile ladder, A100 bs=1 ===");
+    let base = ladder_cost(&A100, false, false, false);
+    let steps: [(&str, f64); 5] = [
+        ("baseline", base),
+        ("[TextDec] compile+graph", ladder_cost(&A100, true, false, false)),
+        ("+[KV reorder] compile", ladder_cost(&A100, true, true, false)),
+        ("+[Vocoder] compile+graph", ladder_cost(&A100, true, true, true)),
+        ("(paper end-to-end: 2.7x)", 0.0),
+    ];
+    for (label, cost) in &steps[..4] {
+        println!("  {:<28} {:>9.1} ms   {:>5.2}x", label, cost * 1e3,
+                 base / cost);
+    }
+    println!("  {}", steps[4].0);
+
+    real_cpu_part();
+}
+
+fn real_cpu_part() {
+    let Some(dir) = common::artifacts_available() else { return };
+    println!("\n=== Obs #4 (real CPU, tiny Seamless): KV reorder \
+              disciplines ===");
+    let engine = Engine::load(&dir.join("seamless")).expect("engine");
+    let wav: Vec<f32> = (0..160 * 40)
+        .map(|i| (i as f32 * 0.02).sin() * 0.4)
+        .collect();
+    let mut suite = BenchSuite::new("seamless S-T (beam=4) full pipeline");
+    for (label, mode) in [
+        ("reorder=host_copy (baseline index_select)", ReorderMode::HostCopy),
+        ("reorder=fused gather (compile'd copy_)", ReorderMode::Fused),
+    ] {
+        let pipe = SeamlessPipeline::new(&engine, mode).expect("pipe");
+        let w = wav.clone();
+        suite.bench(label, move || {
+            let r = pipe
+                .run(SeamlessTask::SpeechToText, Some(&w), None, 24)
+                .expect("run");
+            assert!(r.decode_steps > 0);
+        });
+    }
+    suite.speedup("fused reorder vs host copy",
+                  "reorder=host_copy (baseline index_select)",
+                  "reorder=fused gather (compile'd copy_)");
+
+    // Per-module time breakdown of one run (the Fig-4 Seamless bar).
+    let pipe = SeamlessPipeline::new(&engine, ReorderMode::HostCopy)
+        .expect("pipe");
+    let r = pipe
+        .run(SeamlessTask::SpeechToSpeech, Some(&wav), None, 24)
+        .expect("run");
+    println!("\n  per-module breakdown (S-S, host-copy reorder):");
+    for (k, v) in r.times.entries() {
+        println!("    {:<18} {:>8.2} ms", k, v * 1e3);
+    }
+}

@@ -1,0 +1,124 @@
+//! Figure 8: LayerSkip speedups at bs=1 (device model for the paper
+//! models + real-CPU measured self-speculative decoding on the tiny
+//! model), and the "putting it altogether" cross-stack geomean
+//! (paper: 1.58x LayerSkip alone → 3.88x with all levers).
+
+mod common;
+
+use mmserve::coordinator::decoder_loop::DecoderSession;
+use mmserve::coordinator::opts::OptConfig;
+use mmserve::coordinator::request::SamplingParams;
+use mmserve::models::TaskKind;
+use mmserve::perfmodel::device::A100;
+use mmserve::perfmodel::latency::{layerskip_speedup, task_cost,
+                                  LAYERSKIP_ACCEPT};
+use mmserve::perfmodel::levers::Levers;
+use mmserve::perfmodel::configs::{CHAMELEON_7B, LLAMA_34B, LLAMA_7B};
+use mmserve::runtime::engine::Engine;
+use mmserve::substrate::bench::{geomean, BenchSuite};
+
+fn main() {
+    device_model_part();
+    real_cpu_part();
+}
+
+fn device_model_part() {
+    println!("=== Figure 8 (device model): LayerSkip bs=1 speedups ===");
+    let rows = [
+        ("CodeLlama-7B  T-T", TaskKind::TextToText, true),
+        ("CodeLlama-34B T-T", TaskKind::TextToText, false),
+        ("Chameleon-7B  I-T", TaskKind::ImageToText, true),
+        ("Chameleon-7B  IT-T", TaskKind::ImageTextToText, true),
+    ];
+    let mut speedups = vec![];
+    for (label, task, use_7b) in rows {
+        let spec = if use_7b {
+            common::task_spec_7b(task, 1)
+        } else {
+            common::task_spec(task, 1)
+        };
+        let base = task_cost(&spec, &A100, &Levers::baseline()).total;
+        let ls = task_cost(
+            &spec,
+            &A100,
+            &Levers { layerskip: true, ..Levers::baseline() },
+        )
+        .total;
+        println!("  {:<20} {:.2}x", label, base / ls);
+        speedups.push(base / ls);
+    }
+    println!(
+        "geomean LayerSkip alone: {:.2}x (paper: 1.58x)\n\
+         analytic speedup @accept={LAYERSKIP_ACCEPT}: 7B {:.2}x, 34B \
+         {:.2}x, CM3-7B {:.2}x",
+        geomean(&speedups),
+        layerskip_speedup(&LLAMA_7B, LAYERSKIP_ACCEPT),
+        layerskip_speedup(&LLAMA_34B, LAYERSKIP_ACCEPT),
+        layerskip_speedup(&CHAMELEON_7B, LAYERSKIP_ACCEPT),
+    );
+
+    // "Putting it altogether": all levers vs baseline across the
+    // decoder tasks (the 3.88x headline).
+    let mut all = vec![];
+    for task in [TaskKind::TextToText, TaskKind::ImageToText,
+                 TaskKind::ImageTextToText, TaskKind::TextToImage] {
+        let spec = common::task_spec(task, 1);
+        let base = task_cost(&spec, &A100, &Levers::baseline()).total;
+        let opt = task_cost(&spec, &A100, &Levers::all()).total;
+        all.push(base / opt);
+        println!("  all-levers {:<6} {:.2}x", task.notation(), base / opt);
+    }
+    println!(
+        "geomean cross-stack (system + LayerSkip): {:.2}x \
+         (paper: 3.88x)",
+        geomean(&all)
+    );
+}
+
+fn real_cpu_part() {
+    let Some(dir) = common::artifacts_available() else { return };
+    println!("\n=== LayerSkip (real CPU, tiny Llama): draft E=2/L=4, \
+              verify K=4, greedy acceptance ===");
+    let engine = Engine::load(&dir.join("llama")).expect("engine");
+    let sp = SamplingParams::greedy();
+    let prompt: Vec<i32> = (2..26).collect();
+    let mut suite = BenchSuite::new("24-token generation");
+    {
+        let session =
+            DecoderSession::new(&engine, OptConfig::baseline()).unwrap();
+        let p = prompt.clone();
+        suite.bench("autoregressive baseline", move || {
+            session.generate(&p, 24, &sp).expect("gen");
+        });
+    }
+    {
+        let mut o = OptConfig::baseline();
+        o.layerskip = true;
+        let session = DecoderSession::new(&engine, o).unwrap();
+        let p = prompt.clone();
+        suite.bench("layerskip self-speculative", move || {
+            session.generate(&p, 24, &sp).expect("gen");
+        });
+    }
+    suite.speedup("layerskip vs baseline", "autoregressive baseline",
+                  "layerskip self-speculative");
+    // report acceptance
+    let mut o = OptConfig::baseline();
+    o.layerskip = true;
+    let session = DecoderSession::new(&engine, o).unwrap();
+    let r = session.generate(&prompt, 24, &sp).expect("gen");
+    println!(
+        "  acceptance: {}/{} drafts over {} rounds; outputs match \
+         baseline greedy: {}",
+        r.accepted_drafts,
+        r.draft_rounds * 3,
+        r.draft_rounds,
+        {
+            let b = DecoderSession::new(&engine, OptConfig::baseline())
+                .unwrap()
+                .generate(&prompt, 24, &sp)
+                .unwrap();
+            b.tokens == r.tokens
+        }
+    );
+}

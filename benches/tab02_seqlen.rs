@@ -1,0 +1,30 @@
+//! Table 2: sequence-length distributions — regenerate min/max/avg from
+//! the calibrated workload generators and compare to the paper's values.
+
+use mmserve::substrate::table::Table;
+use mmserve::workload::{sample_workload, stats, TABLE2};
+
+fn main() {
+    println!("=== Table 2: sequence-length distributions \
+              (generated vs paper) ===");
+    let mut t = Table::new(&[
+        "task", "dataset", "in min/max/avg (gen)", "in avg (paper)",
+        "out min/max/avg (gen)", "out avg (paper)",
+    ]);
+    for spec in &TABLE2 {
+        let samples = sample_workload(spec, 2000, 42);
+        let ins: Vec<usize> = samples.iter().map(|s| s.input_len).collect();
+        let outs: Vec<usize> = samples.iter().map(|s| s.output_len).collect();
+        let (imin, imax, iavg) = stats(&ins);
+        let (omin, omax, oavg) = stats(&outs);
+        t.row(&[
+            spec.task.notation().to_string(),
+            spec.dataset.to_string(),
+            format!("{imin}/{imax}/{iavg:.0}"),
+            format!("{:.0}", spec.input.avg),
+            format!("{omin}/{omax}/{oavg:.0}"),
+            format!("{:.0}", spec.output.avg),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,45 @@
+//! Characterization demo: the paper's Figure-4 methodology applied to
+//! the *real* tiny models — per-stage wall-time accounting from the
+//! engine, side by side with the A100 device-model projection.
+
+use mmserve::coordinator::decoder_loop::DecoderSession;
+use mmserve::coordinator::opts::OptConfig;
+use mmserve::coordinator::request::SamplingParams;
+use mmserve::perfmodel::breakdown::render;
+use mmserve::perfmodel::device::A100;
+use mmserve::perfmodel::levers::Levers;
+use mmserve::perfmodel::standard_breakdown_rows;
+use mmserve::runtime::engine::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // --- real CPU: stage-level breakdown of a llama generation --------
+    let dir = mmserve::artifacts_dir().join("llama");
+    let engine = Engine::load(&dir)?;
+    let session = DecoderSession::new(&engine, OptConfig::baseline())?;
+    let prompt: Vec<i32> = (2..30).collect();
+    // warm (compile) then measure
+    session.generate(&prompt, 4, &SamplingParams::greedy())?;
+    engine.stage_times.borrow_mut();
+    *engine.stage_times.borrow_mut() =
+        mmserve::substrate::metrics::OpTimes::new();
+    let r = session.generate(&prompt, 24, &SamplingParams::greedy())?;
+    println!("== real CPU (tiny llama): stage wall-time for a 24-token \
+              generation ==");
+    let times = engine.stage_times.borrow();
+    let total = times.total();
+    for (stage, secs) in times.entries() {
+        println!("  {:<20} {:>8.2} ms  ({:>4.1}%)", stage, secs * 1e3,
+                 secs / total * 100.0);
+    }
+    println!("  e2e: {:.2} ms, {} decode steps, ttft {:.2} ms\n",
+             r.e2e * 1e3, r.decode_steps, r.ttft * 1e3);
+
+    // --- device model: paper-scale Figure 4 ---------------------------
+    println!("== device model (paper scale, A100, baseline) ==");
+    println!("{}", render(&standard_breakdown_rows(&A100,
+                                                   &Levers::baseline())));
+    println!("== device model (paper scale, A100, Sys-Opt) ==");
+    println!("{}", render(&standard_breakdown_rows(&A100,
+                                                   &Levers::sys_opt())));
+    Ok(())
+}

@@ -1,0 +1,505 @@
+"""AOT compile path: lower every L2 stage to HLO text + write weights.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Per model this emits
+    artifacts/<model>/<stage>.hlo.txt      one per stage variant
+    artifacts/<model>/weights.bin          MMWB container (weights.py)
+    artifacts/<model>/manifest.json        stage → file/weights/args/outputs
+    artifacts/<model>/goldens.bin          input/output pairs for the Rust
+                                           integration tests
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Stage-variant axes = the paper's optimization levers:
+    attn:   naive (baseline)         | flash (SDPA / FlashAttention lever)
+    linear: f32 (baseline)           | int8_weight_only | int8_dynamic
+                                       (AutoQuant lever)
+    eager per-op stages              (launch-overhead / CUDA-Graph lever:
+                                      eager = many dispatches, graph = one)
+    draft / verify stages            (LayerSkip lever)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import weights as wio
+from .configs import TINY, config_to_dict
+from .models import hstu as hstu_m
+from .models import llama as llama_m
+from .models import seamless as seam_m
+
+F32, I32, I8 = jnp.float32, jnp.int32, jnp.int8
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # literals (e.g. RoPE cos/sin tables) as `{...}`, which the text
+    # parser then silently re-materializes as zeros — numerically wrong
+    # artifacts that only fail at golden-check time.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constant survived printing"
+    return text
+
+
+def _dt(d):
+    return {"float32": "f32", "int32": "i32", "int8": "i8"}[str(jnp.dtype(d))]
+
+
+class ModelEmitter:
+    """Collects stages for one model directory."""
+
+    def __init__(self, name: str, out_dir: str, cfg):
+        self.name = name
+        self.dir = os.path.join(out_dir, name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.cfg = cfg
+        self.stages: Dict[str, dict] = {}
+        self.weight_tensors: Dict[str, np.ndarray] = {}
+        self.weight_order: List[str] = []
+        self.goldens: Dict[str, np.ndarray] = {}
+
+    def set_weights(self, tensors: Dict[str, np.ndarray],
+                    order: List[str]) -> None:
+        self.weight_tensors = tensors
+        self.weight_order = list(order)
+
+    def add_stage(self, stage_name: str, fn, weight_names: List[str],
+                  args: List[tuple], outputs_meta: List[dict],
+                  meta: dict, donate_args: tuple = ()) -> None:
+        """Lower fn(*weights, *args) and record the manifest entry.
+
+        args: list of (name, shape, dtype). ``donate_args``: indices
+        into ``args`` whose buffers are donated (input_output_alias in
+        the HLO) — the state tensors (KV caches) that the Rust runtime
+        chains across steps update in place instead of copying."""
+        t0 = time.time()
+        w_specs = [spec(self.weight_tensors[n].shape,
+                        self.weight_tensors[n].dtype) for n in weight_names]
+        a_specs = [spec(s, d) for (_, s, d) in args]
+        donate = tuple(len(weight_names) + i for i in donate_args)
+        # keep_unused: the early-exit draft stage ignores layers ≥ E, but
+        # the runtime contract is "weights in manifest order" — dropping
+        # unused parameters would silently shift every later input.
+        lowered = jax.jit(fn, keep_unused=True,
+                          donate_argnums=donate).lower(*w_specs, *a_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{stage_name}.hlo.txt"
+        with open(os.path.join(self.dir, fname), "w") as f:
+            f.write(text)
+        self.stages[stage_name] = {
+            "file": fname,
+            "weights": weight_names,
+            "args": [{"name": n, "shape": list(s), "dtype": _dt(d)}
+                     for (n, s, d) in args],
+            "outputs": outputs_meta,
+            "meta": meta,
+        }
+        print(f"  [{self.name}] {stage_name}: {len(text)//1024} KiB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+    def add_golden(self, tag: str, arrays: Dict[str, np.ndarray]) -> None:
+        for k, v in arrays.items():
+            a = np.asarray(v)
+            if a.dtype == np.int64:
+                a = a.astype(np.int32)
+            if a.dtype == np.float64:
+                a = a.astype(np.float32)
+            self.goldens[f"{tag}.{k}"] = a
+
+    def finish(self) -> None:
+        wio.save(os.path.join(self.dir, "weights.bin"),
+                 self.weight_tensors, self.weight_order)
+        if self.goldens:
+            wio.save(os.path.join(self.dir, "goldens.bin"),
+                     self.goldens, sorted(self.goldens))
+        manifest = {
+            "model": self.name,
+            "config": config_to_dict(self.cfg),
+            "weights_file": "weights.bin",
+            "weight_order": self.weight_order,
+            "stages": self.stages,
+        }
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+def _wrap(fn, names):
+    """fn(params_dict, *args) → flat fn(*weights, *args)."""
+    n = len(names)
+
+    def flat(*xs):
+        params = dict(zip(names, xs[:n]))
+        return fn(params, *xs[n:])
+
+    return flat
+
+
+# ==========================================================================
+# Llama / Chameleon
+# ==========================================================================
+
+def emit_decoder(name: str, out_dir: str, *, fast: bool, seed: int) -> None:
+    cfg = TINY[name]
+    em = ModelEmitter(name, out_dir, cfg)
+    base = llama_m.init_params(cfg, seed=seed)
+    quant = llama_m.quantize_params(base)
+    tensors = {**base, **quant}
+    base_names = [n for n, _ in llama_m.param_specs(cfg)]
+    order = base_names + sorted(quant)
+    em.set_weights(tensors, order)
+
+    def quant_names():
+        out = []
+        for n in base_names:
+            leaf = n.split(".")[-1]
+            if leaf in llama_m.QUANTIZABLE:
+                out += [n + ".q", n + ".scale"]
+            else:
+                out.append(n)
+        return out
+
+    L, H, S, Dh, V = (cfg.n_layers, cfg.n_heads, cfg.max_seq,
+                      cfg.head_dim, cfg.vocab_size)
+
+    def kvs(b):
+        return (L, b, H, S, Dh)
+
+    def kv_out(b):
+        return [{"shape": list(kvs(b)), "dtype": "f32"},
+                {"shape": list(kvs(b)), "dtype": "f32"}]
+
+    # ---- prefill -----------------------------------------------------
+    buckets = cfg.prefill_buckets if not fast else cfg.prefill_buckets[:1]
+    for p in buckets:
+        for attn in ("naive", "flash"):
+            fn = llama_m.make_prefill(cfg, p, attn_impl=attn)
+            sfx = "" if attn == "naive" else "_flash"
+            em.add_stage(
+                f"prefill_b{p}{sfx}", _wrap(fn, base_names), base_names,
+                [("tokens", (1, p), I32), ("prompt_len", (1,), I32)],
+                [{"shape": [1, V], "dtype": "f32"}] + kv_out(1),
+                {"kind": "prefill", "bucket": p, "attn": attn,
+                 "linear": "f32", "batch": 1})
+    p = buckets[0]
+    fn = llama_m.make_prefill(cfg, p, attn_impl="naive",
+                              linear_mode="int8_weight_only")
+    names = quant_names()
+    em.add_stage(
+        f"prefill_b{p}_int8wo", _wrap(fn, names), names,
+        [("tokens", (1, p), I32), ("prompt_len", (1,), I32)],
+        [{"shape": [1, V], "dtype": "f32"}] + kv_out(1),
+        {"kind": "prefill", "bucket": p, "attn": "naive",
+         "linear": "int8_weight_only", "batch": 1})
+
+    # ---- decode ------------------------------------------------------
+    batches = cfg.decode_batch_sizes if not fast else (1,)
+    dec_variants = [("naive", "f32", ""), ("flash", "f32", "_flash"),
+                    ("naive", "int8_weight_only", "_int8wo"),
+                    ("naive", "int8_dynamic", "_int8dyn"),
+                    ("flash", "int8_weight_only", "_flash_int8wo")]
+    if fast:
+        dec_variants = dec_variants[:2]
+    for b in batches:
+        for attn, lm, sfx in dec_variants:
+            fn = llama_m.make_decode(cfg, b, attn_impl=attn, linear_mode=lm)
+            names = base_names if lm == "f32" else quant_names()
+            em.add_stage(
+                f"decode_b{b}{sfx}", _wrap(fn, names), names,
+                [("tokens", (b,), I32), ("positions", (b,), I32),
+                 ("cache_k", kvs(b), F32), ("cache_v", kvs(b), F32)],
+                [{"shape": [b, V], "dtype": "f32"}] + kv_out(b),
+                {"kind": "decode", "batch": b, "attn": attn, "linear": lm},
+                donate_args=(2, 3))
+
+    # ---- kv_pack (continuous-batching admission) -----------------------
+    for b in batches:
+        if b == 1:
+            continue
+        fn = llama_m.make_kv_pack(cfg, b)
+        em.add_stage(
+            f"kv_pack_b{b}", fn, [],
+            [("cache_k", kvs(b), F32), ("cache_v", kvs(b), F32),
+             ("ck1", kvs(1), F32), ("cv1", kvs(1), F32),
+             ("slot", (1,), I32)],
+            kv_out(b),
+            {"kind": "kv_pack", "batch": b}, donate_args=(0, 1))
+
+    # ---- LayerSkip draft + verify -------------------------------------
+    fn = llama_m.make_decode(cfg, 1, attn_impl="naive", early_exit=True)
+    em.add_stage(
+        "draft_b1", _wrap(fn, base_names), base_names,
+        [("tokens", (1,), I32), ("positions", (1,), I32),
+         ("cache_k", kvs(1), F32), ("cache_v", kvs(1), F32)],
+        [{"shape": [1, V], "dtype": "f32"}] + kv_out(1),
+        {"kind": "draft", "batch": 1,
+         "early_exit_layer": cfg.early_exit_layer}, donate_args=(2, 3))
+    K = cfg.verify_window
+    fn = llama_m.make_verify(cfg, K, attn_impl="naive")
+    em.add_stage(
+        f"verify_k{K}", _wrap(fn, base_names), base_names,
+        [("tokens", (1, K), I32), ("start_pos", (1,), I32),
+         ("cache_k", kvs(1), F32), ("cache_v", kvs(1), F32)],
+        [{"shape": [1, K, V], "dtype": "f32"}] + kv_out(1),
+        {"kind": "verify", "window": K}, donate_args=(2, 3))
+
+    # ---- eager per-op stages (launch-overhead baseline) ----------------
+    d = cfg.d_model
+    f = cfg.ffn_hidden
+    eager = [
+        ("eager_embed", llama_m.make_eager_embed(cfg), ["embed"],
+         [("tokens", (1,), I32)],
+         [{"shape": [1, d], "dtype": "f32"}]),
+        ("eager_norm", llama_m.make_eager_norm(cfg), [],
+         [("w", (d,), F32), ("x", (1, d), F32)],
+         [{"shape": [1, d], "dtype": "f32"}]),
+        ("eager_qkv", llama_m.make_eager_qkv(cfg), [],
+         [("wq", (d, d), F32), ("wk", (d, d), F32), ("wv", (d, d), F32),
+          ("x", (1, d), F32), ("positions", (1,), I32)],
+         [{"shape": [1, H, 1, Dh], "dtype": "f32"}] * 3),
+        ("eager_attn", llama_m.make_eager_attn_step(cfg), [],
+         [("q", (1, H, 1, Dh), F32), ("k", (1, H, 1, Dh), F32),
+          ("v", (1, H, 1, Dh), F32), ("positions", (1,), I32),
+          ("ck", (1, H, S, Dh), F32), ("cv", (1, H, S, Dh), F32)],
+         [{"shape": [1, d], "dtype": "f32"},
+          {"shape": [1, H, S, Dh], "dtype": "f32"},
+          {"shape": [1, H, S, Dh], "dtype": "f32"}]),
+        ("eager_oproj", llama_m.make_eager_oproj(cfg), [],
+         [("wo", (d, d), F32), ("attn_out", (1, d), F32),
+          ("resid", (1, d), F32)],
+         [{"shape": [1, d], "dtype": "f32"}]),
+        ("eager_ffn", llama_m.make_eager_ffn(cfg), [],
+         [("norm_w", (d,), F32), ("w_gate", (d, f), F32),
+          ("w_up", (d, f), F32), ("w_down", (f, d), F32),
+          ("x", (1, d), F32)],
+         [{"shape": [1, d], "dtype": "f32"}]),
+        ("eager_head", llama_m.make_eager_head(cfg), [],
+         [("final_norm", (d,), F32), ("lm_head", (d, V), F32),
+          ("x", (1, d), F32)],
+         [{"shape": [1, V], "dtype": "f32"}]),
+    ]
+    # Eager fns take (*weights, *args) directly — no params-dict wrapper.
+    for sname, efn, wnames, args, outs in eager:
+        em.add_stage(sname, efn, wnames, args, outs, {"kind": "eager_op"})
+
+    # ---- goldens -------------------------------------------------------
+    rng = np.random.default_rng(seed + 100)
+    p = buckets[0]
+    toks = rng.integers(0, V, size=(1, p)).astype(np.int32)
+    plen = np.array([p // 2 + 1], np.int32)
+    pre = llama_m.make_prefill(cfg, p, attn_impl="naive")
+    logits, ck, cv = jax.jit(pre)(base, toks, plen)
+    em.add_golden(f"prefill_b{p}", {
+        "in.tokens": toks, "in.prompt_len": plen,
+        "out.logits": np.asarray(logits)})
+    dec = llama_m.make_decode(cfg, 1, attn_impl="naive")
+    dt = rng.integers(0, V, size=(1,)).astype(np.int32)
+    dp = plen.copy()
+    dl, _, _ = jax.jit(dec)(base, dt, dp, ck, cv)
+    em.add_golden("decode_b1", {
+        "in.tokens": dt, "in.positions": dp,
+        "out.logits": np.asarray(dl)})
+    em.finish()
+
+
+# ==========================================================================
+# Seamless
+# ==========================================================================
+
+def emit_seamless(out_dir: str, *, fast: bool, seed: int = 1) -> None:
+    cfg = TINY["seamless"]
+    em = ModelEmitter("seamless", out_dir, cfg)
+    base = seam_m.init_params(cfg, seed=seed)
+    order = [n for n, _ in seam_m.param_specs(cfg)]
+    em.set_weights(base, order)
+
+    d = cfg.d_model
+    enc_names = [n for n in order if n.startswith("enc.")]
+    dec_names = [n for n in order if n.startswith("dec.")]
+    t2u_names = [n for n in order if n.startswith("t2u.")]
+    voc_names = [n for n in order if n.startswith("voc.")]
+    cross_names = [n for n in order
+                   if ".cross.wk" in n or ".cross.wv" in n]
+
+    tenc_names = [n for n in order if n.startswith("tenc.")]
+
+    enc_buckets = cfg.encoder_buckets if not fast else \
+        cfg.encoder_buckets[:1]
+    for t in enc_buckets:
+        # Text encoder sized to the same source length as this speech
+        # bucket (tp tokens), so cross_kv/dec_step stages are shared.
+        tp0 = t // cfg.enc_subsample
+        fn = seam_m.make_text_encoder(cfg, tp0)
+        em.add_stage(
+            f"text_encoder_t{tp0}", _wrap(fn, tenc_names), tenc_names,
+            [("tokens", (1, tp0), I32), ("text_len", (1,), I32)],
+            [{"shape": [1, tp0, d], "dtype": "f32"},
+             {"shape": [1], "dtype": "i32"}],
+            {"kind": "text_encoder", "bucket": tp0, "out_len": tp0})
+        tp = t // cfg.enc_subsample
+        fn = seam_m.make_encoder(cfg, t)
+        em.add_stage(
+            f"encoder_t{t}", _wrap(fn, enc_names), enc_names,
+            [("feats", (1, t, cfg.enc_feat_dim), F32),
+             ("feat_len", (1,), I32)],
+            [{"shape": [1, tp, d], "dtype": "f32"},
+             {"shape": [1], "dtype": "i32"}],
+            {"kind": "encoder", "bucket": t, "out_len": tp})
+        fn = seam_m.make_cross_kv(cfg, tp)
+        xshape = list(seam_m.cross_kv_shape(cfg, tp))
+        em.add_stage(
+            f"cross_kv_s{tp}", _wrap(fn, cross_names), cross_names,
+            [("enc_out", (1, tp, d), F32)],
+            [{"shape": xshape, "dtype": "f32"},
+             {"shape": xshape, "dtype": "f32"}],
+            {"kind": "cross_kv", "src_len": tp})
+        beams_list = (1, cfg.beam_size) if not fast else (cfg.beam_size,)
+        for bm in beams_list:
+            fn = seam_m.make_dec_step(cfg, bm, tp)
+            skv = list(seam_m.self_kv_shape(cfg, bm))
+            em.add_stage(
+                f"dec_step_b{bm}_s{tp}", _wrap(fn, dec_names), dec_names,
+                [("tokens", (bm,), I32), ("positions", (bm,), I32),
+                 ("self_ck", skv, F32), ("self_cv", skv, F32),
+                 ("cross_k", xshape, F32), ("cross_v", xshape, F32),
+                 ("enc_len", (1,), I32)],
+                [{"shape": [bm, cfg.text_vocab], "dtype": "f32"},
+                 {"shape": skv, "dtype": "f32"},
+                 {"shape": skv, "dtype": "f32"}],
+                {"kind": "dec_step", "beams": bm, "src_len": tp},
+                donate_args=(2, 3))
+
+    bm = cfg.beam_size
+    skv = list(seam_m.self_kv_shape(cfg, bm))
+    fn = seam_m.make_kv_reorder(cfg, bm)
+    em.add_stage(
+        f"kv_reorder_b{bm}", fn, [],
+        [("self_ck", skv, F32), ("self_cv", skv, F32),
+         ("beam_idx", (bm,), I32)],
+        [{"shape": skv, "dtype": "f32"}, {"shape": skv, "dtype": "f32"}],
+        {"kind": "kv_reorder", "beams": bm}, donate_args=(0, 1))
+
+    t2u_buckets = (16, 32) if not fast else (16,)
+    for tb in t2u_buckets:
+        fn = seam_m.make_t2u(cfg, tb)
+        ul = tb * cfg.t2u_upsample
+        em.add_stage(
+            f"t2u_t{tb}", _wrap(fn, t2u_names), t2u_names,
+            [("tokens", (1, tb), I32), ("text_len", (1,), I32)],
+            [{"shape": [1, ul, cfg.unit_vocab], "dtype": "f32"},
+             {"shape": [1], "dtype": "i32"}],
+            {"kind": "t2u", "bucket": tb, "upsample": cfg.t2u_upsample})
+    voc_buckets = (64, 128) if not fast else (64,)
+    r = cfg.voc_upsample ** cfg.voc_stages
+    for ub in voc_buckets:
+        fn = seam_m.make_vocoder(cfg, ub)
+        em.add_stage(
+            f"vocoder_u{ub}", _wrap(fn, voc_names), voc_names,
+            [("units", (1, ub), I32)],
+            [{"shape": [1, ub * r], "dtype": "f32"}],
+            {"kind": "vocoder", "bucket": ub, "rate": r})
+
+    rng = np.random.default_rng(seed + 100)
+    t = enc_buckets[0]
+    feats = rng.normal(0, 1, (1, t, cfg.enc_feat_dim)).astype(np.float32)
+    flen = np.array([t - 8], np.int32)
+    enc_out, enc_len = jax.jit(seam_m.make_encoder(cfg, t))(
+        base, feats, flen)
+    em.add_golden(f"encoder_t{t}", {
+        "in.feats": feats, "in.feat_len": flen,
+        "out.enc": np.asarray(enc_out),
+        "out.len": np.asarray(enc_len).astype(np.int32)})
+    em.finish()
+
+
+# ==========================================================================
+# HSTU
+# ==========================================================================
+
+def emit_hstu(out_dir: str, *, fast: bool, seed: int = 2) -> None:
+    cfg = TINY["hstu"]
+    em = ModelEmitter("hstu", out_dir, cfg)
+    base = hstu_m.init_params(cfg, seed=seed)
+    order = [n for n, _ in hstu_m.param_specs(cfg)]
+    em.set_weights(base, order)
+
+    combos = [(256, 1, "naive"), (256, 1, "fused"),
+              (256, 8, "naive"), (256, 8, "fused"),
+              (1024, 1, "naive"), (1024, 1, "fused")]
+    if fast:
+        combos = combos[:2]
+    for s, b, impl in combos:
+        fn = hstu_m.make_forward(cfg, s, b, attn_impl=impl)
+        sfx = "" if impl == "naive" else "_fused"
+        em.add_stage(
+            f"forward_s{s}_b{b}{sfx}", _wrap(fn, order), order,
+            [("item_ids", (b, s), I32), ("seq_len", (b,), I32)],
+            [{"shape": [b, s, cfg.action_vocab], "dtype": "f32"},
+             {"shape": [b, cfg.item_vocab], "dtype": "f32"}],
+            {"kind": "forward", "seq": s, "batch": b, "attn": impl})
+
+    rng = np.random.default_rng(seed + 100)
+    s, b = combos[0][0], combos[0][1]
+    ids = rng.integers(0, cfg.item_vocab, (b, s)).astype(np.int32)
+    sl = np.array([s - 11] * b, np.int32)
+    fn = jax.jit(hstu_m.make_forward(cfg, s, b, attn_impl="naive"))
+    rank, retr = fn(base, ids, sl)
+    em.add_golden(f"forward_s{s}_b{b}", {
+        "in.item_ids": ids, "in.seq_len": sl,
+        "out.rank": np.asarray(rank), "out.retrieval": np.asarray(retr)})
+    em.finish()
+
+
+# ==========================================================================
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="llama,chameleon,seamless,hstu")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced stage set (CI smoke)")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    for m in args.models.split(","):
+        m = m.strip()
+        print(f"== emitting {m} ==", flush=True)
+        if m == "llama":
+            emit_decoder("llama", out_dir, fast=args.fast, seed=0)
+        elif m == "chameleon":
+            emit_decoder("chameleon", out_dir, fast=args.fast, seed=7)
+        elif m == "seamless":
+            emit_seamless(out_dir, fast=args.fast)
+        elif m == "hstu":
+            emit_hstu(out_dir, fast=args.fast)
+        else:
+            raise SystemExit(f"unknown model {m!r}")
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(f"{time.time()}\n")
+    print(f"done in {time.time()-t0:.0f}s → {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

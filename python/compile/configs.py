@@ -1,0 +1,229 @@
+"""Model configurations for the four multimodal model families.
+
+Two tiers per family:
+
+* ``tiny_*``  — architecture-faithful scaled-down configs that the Rust
+  coordinator actually serves on the PJRT CPU client (real end-to-end
+  latency/throughput numbers come from these).
+* ``paper_*`` — the published dimensions (Code Llama 7B/34B, Chameleon
+  7B/34B, Seamless M4T-large, HSTU-14L). These are never executed on CPU;
+  they parameterize the analytical A100/H100 device model on the Rust side
+  and are exported into the artifact manifests so both sides agree on the
+  paper-scale operator walks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class DecoderConfig:
+    """Decoder-only transformer (Llama / Chameleon family)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    head_dim: int
+    ffn_hidden: int          # SwiGLU hidden size
+    vocab_size: int
+    max_seq: int             # static KV-cache capacity
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # LayerSkip parameters
+    early_exit_layer: int = 2   # draft uses layers [0, early_exit_layer)
+    verify_window: int = 4      # draft tokens verified per verify pass
+    # Graph-mode decode batch sizes compiled ahead of time.
+    decode_batch_sizes: tuple = (1, 4)
+    prefill_buckets: tuple = (32, 128)
+    # Chameleon-specific: number of image tokens emitted by the (tiny)
+    # image tokenizer; 0 for pure-text models.
+    image_tokens: int = 0
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        return self.n_layers * 2 * self.n_heads * self.head_dim * 4
+
+
+@dataclass(frozen=True)
+class SeamlessConfig:
+    """Seamless M4T-style four-module pipeline."""
+
+    name: str
+    d_model: int
+    # Conformer speech encoder
+    enc_layers: int
+    enc_feat_dim: int        # input filterbank feature dim (paper: 160)
+    enc_subsample: int       # conv front-end subsampling factor
+    conv_kernel: int         # depthwise conv kernel in conformer block
+    # Autoregressive text decoder (the only AR module)
+    dec_layers: int
+    n_heads: int
+    head_dim: int
+    ffn_hidden: int
+    text_vocab: int
+    max_src: int             # encoder-output capacity (cross-attn length)
+    max_tgt: int             # decoder static KV capacity
+    beam_size: int
+    # NAR text-to-unit
+    t2u_layers: int
+    t2u_upsample: int        # units per text token (fixed-ratio upsampler)
+    unit_vocab: int
+    # Vocoder (HiFi-GAN-style conv upsampler)
+    voc_channels: int
+    voc_stages: int
+    voc_upsample: int        # per-stage upsampling factor
+    norm_eps: float = 1e-5
+    encoder_buckets: tuple = (64, 256)
+
+
+@dataclass(frozen=True)
+class HstuConfig:
+    """HSTU generative-recommender stack (non-autoregressive)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    head_dim: int
+    item_vocab: int
+    action_vocab: int        # engagement types for the ranking head
+    max_seq: int
+    # Paper §3.1: later layers cap the sequence length for speed.
+    full_len_layers: int     # first k layers see the full sequence
+    capped_len: int          # remaining layers see at most this many tokens
+    rel_buckets: int = 32    # relative-attention-bias buckets
+    norm_eps: float = 1e-5
+    forward_buckets: tuple = (256, 1024)
+    batch_sizes: tuple = (1, 8)
+
+
+# --------------------------------------------------------------------------
+# Tiny (CPU-served) configurations
+# --------------------------------------------------------------------------
+
+TINY_LLAMA = DecoderConfig(
+    name="llama",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    head_dim=32,
+    ffn_hidden=688,
+    vocab_size=512,
+    max_seq=512,
+    early_exit_layer=2,
+    verify_window=4,
+    decode_batch_sizes=(1, 4),
+    prefill_buckets=(32, 128),
+)
+
+# Chameleon shares the Llama-2 architecture (paper §2.1.2); the tiny image
+# tokenizer emits an 8x8 grid = 64 image tokens (paper: 32x32 = 1024).
+TINY_CHAMELEON = dataclasses.replace(
+    TINY_LLAMA,
+    name="chameleon",
+    image_tokens=64,
+    prefill_buckets=(32, 128),
+)
+
+TINY_SEAMLESS = SeamlessConfig(
+    name="seamless",
+    d_model=256,
+    enc_layers=4,
+    enc_feat_dim=80,
+    enc_subsample=4,
+    conv_kernel=7,
+    dec_layers=4,
+    n_heads=8,
+    head_dim=32,
+    ffn_hidden=688,
+    text_vocab=512,
+    max_src=128,
+    max_tgt=128,
+    beam_size=4,
+    t2u_layers=2,
+    t2u_upsample=4,
+    unit_vocab=256,
+    voc_channels=64,
+    voc_stages=3,
+    voc_upsample=2,
+)
+
+TINY_HSTU = HstuConfig(
+    name="hstu",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    head_dim=32,
+    item_vocab=6000,
+    action_vocab=16,
+    max_seq=1024,
+    full_len_layers=1,
+    capped_len=256,
+    forward_buckets=(256, 1024),
+    batch_sizes=(1, 8),
+)
+
+# --------------------------------------------------------------------------
+# Paper-scale configurations (device-model only; exported to manifests)
+# --------------------------------------------------------------------------
+
+PAPER_LLAMA_7B = DecoderConfig(
+    name="llama-7b", n_layers=32, d_model=4096, n_heads=32, head_dim=128,
+    ffn_hidden=11008, vocab_size=32016, max_seq=16384,
+    early_exit_layer=8, verify_window=8,
+)
+PAPER_LLAMA_34B = DecoderConfig(
+    name="llama-34b", n_layers=48, d_model=8192, n_heads=64, head_dim=128,
+    ffn_hidden=22016, vocab_size=32016, max_seq=16384,
+    early_exit_layer=12, verify_window=8,
+)
+PAPER_CHAMELEON_7B = dataclasses.replace(
+    PAPER_LLAMA_7B, name="chameleon-7b", vocab_size=65536, image_tokens=1024,
+)
+PAPER_CHAMELEON_34B = dataclasses.replace(
+    PAPER_LLAMA_34B, name="chameleon-34b", vocab_size=65536, image_tokens=1024,
+)
+PAPER_SEAMLESS = SeamlessConfig(
+    name="seamless-m4t-large",
+    d_model=1024,
+    enc_layers=24, enc_feat_dim=160, enc_subsample=2, conv_kernel=31,
+    dec_layers=24, n_heads=16, head_dim=64, ffn_hidden=8192,
+    text_vocab=256000, max_src=4096, max_tgt=1024, beam_size=5,
+    t2u_layers=6, t2u_upsample=8, unit_vocab=10000,
+    voc_channels=512, voc_stages=4, voc_upsample=4,
+)
+PAPER_HSTU = HstuConfig(
+    name="hstu-14l",
+    n_layers=14, d_model=512, n_heads=8, head_dim=64,
+    item_vocab=6000, action_vocab=16, max_seq=8192,
+    full_len_layers=3, capped_len=1024,
+)
+
+TINY = {
+    "llama": TINY_LLAMA,
+    "chameleon": TINY_CHAMELEON,
+    "seamless": TINY_SEAMLESS,
+    "hstu": TINY_HSTU,
+}
+
+PAPER = {
+    "llama-7b": PAPER_LLAMA_7B,
+    "llama-34b": PAPER_LLAMA_34B,
+    "chameleon-7b": PAPER_CHAMELEON_7B,
+    "chameleon-34b": PAPER_CHAMELEON_34B,
+    "seamless-m4t-large": PAPER_SEAMLESS,
+    "hstu-14l": PAPER_HSTU,
+}
+
+
+def config_to_dict(cfg) -> dict:
+    d = dataclasses.asdict(cfg)
+    for k, v in d.items():
+        if isinstance(v, tuple):
+            d[k] = list(v)
+    d["kind"] = type(cfg).__name__
+    return d

@@ -1,0 +1,162 @@
+"""Flash-style tiled attention Pallas kernel (the paper's SDPA lever, L1).
+
+The paper accelerates attention with PyTorch SDPA / FlashAttention, whose
+core idea is to never materialize the [Sq, Sk] score matrix: stream KV tiles
+through fast on-chip memory while carrying an online-softmax running max and
+denominator. On TPU the "fast on-chip memory" is VMEM and the tile schedule
+is expressed with BlockSpecs instead of CUDA threadblocks (DESIGN.md
+§Hardware-Adaptation).
+
+Grid layout: one program per (batch, head, q-block); the kernel loops over
+KV blocks with ``jax.lax.fori_loop``, so VMEM residency is
+    q_tile [Bq, D] + k_tile/v_tile [Bk, D] + acc [Bq, D] + m/l [Bq]
+independent of sequence length.
+
+Lowered with ``interpret=True`` — CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    kv_len_ref,   # [B] int32 valid KV lengths
+    q_start_ref,  # [B] int32 absolute position of query row 0 (causal offset)
+    q_ref,        # [1, 1, block_q, D]
+    k_ref,        # [1, 1, Sk, D]   (full K for this (b, h); tiled in-loop)
+    v_ref,        # [1, 1, Sk, D]
+    o_ref,        # [1, 1, block_q, D]
+    *,
+    block_k: int,
+    sk: int,
+    causal: bool,
+    scale: float,
+):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    block_q = q_ref.shape[2]
+    d = q_ref.shape[3]
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale
+    valid_len = kv_len_ref[b]
+    q_start = q_start_ref[b]
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    n_kb = sk // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_tile = k_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        v_tile = v_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        s = q @ k_tile.T  # [block_q, block_k]
+
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] < valid_len
+        if causal:
+            # Query row r has absolute position q_start + qi*block_q + r
+            # (q_start = 0 for prefill where Sq == Sk; q_start = pos for a
+            # verify window sliding over a static KV cache).
+            qpos = q_start + qi * block_q + jax.lax.iota(jnp.int32, block_q)
+            mask = jnp.logical_and(mask, kpos[None, :] <= qpos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    kv_len=None,
+    q_start=None,
+    causal: bool = False,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+):
+    """Tiled attention. q: [B, H, Sq, D], k/v: [B, H, Sk, D].
+
+    ``kv_len``: [B] int32 number of valid KV entries (defaults to Sk).
+    ``q_start``: [B] int32 absolute position of the first query row (only
+    used when ``causal``; defaults to 0, the prefill case).
+    Returns [B, H, Sq, D]. Shapes must tile evenly (pad upstream).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"shape ({sq},{sk}) not divisible by blocks "
+                         f"({block_q},{block_k})")
+    if kv_len is None:
+        kv_len = jnp.full((b,), sk, dtype=jnp.int32)
+    if q_start is None:
+        q_start = jnp.zeros((b,), dtype=jnp.int32)
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, h, sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, sk=sk, causal=causal, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda bi, hi, qi: (0,)),
+            pl.BlockSpec((b,), lambda bi, hi, qi: (0,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q_start.astype(jnp.int32), q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one kernel program (EXPERIMENTS.md
+    §Perf L1): q tile, k/v tiles, accumulator, m/l carries, output tile."""
+    q_t = block_q * d * dtype_bytes
+    kv_t = 2 * block_k * d * dtype_bytes
+    acc = block_q * d * 4
+    carries = 2 * block_q * 4
+    out = block_q * d * dtype_bytes
+    return q_t + kv_t + acc + carries + out
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, d: int) -> float:
+    """Fraction of each 128x128 MXU issue that is useful work for the two
+    kernel matmuls (qk^T and pV)."""
+    def eff(m, n, kk):
+        pad = lambda x: ((x + 127) // 128) * 128
+        return (m * n * kk) / (pad(m) * pad(n) * pad(kk))
+    return 0.5 * (eff(block_q, block_k, d) + eff(block_q, d, block_k))

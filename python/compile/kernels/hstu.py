@@ -1,0 +1,137 @@
+"""Fused HSTU pointwise attention Pallas kernel (L1).
+
+The paper (§4.1.1) reports that for HSTU the bottlenecks are (a) the
+attention GEMMs and (b) *construction of the relative attention bias*,
+which is memory-bound when materialized as an [H, S, S] tensor. Their fix
+fuses relative-bias construction with the grouped GEMMs in one GPU kernel.
+
+This kernel reproduces that fusion on the TPU model: one program per
+(batch, head, q-block); KV tiles stream through VMEM and the bucketed
+relative bias is *computed in-register* from the [H, n_buckets] table —
+the [S, S] bias matrix never exists in memory. Weighting is HSTU's
+pointwise-normalized ``silu(qk^T + rab) / N`` (no softmax → no online
+max/denominator carry is even needed; the reduction is a plain sum).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hstu_kernel(
+    seq_len_ref,   # [B] int32 valid lengths
+    rab_table_ref,  # [1, n_buckets] bias table for this head
+    q_ref,         # [1, 1, block_q, D]
+    k_ref,         # [1, 1, S, D]
+    v_ref,         # [1, 1, S, D]
+    o_ref,         # [1, 1, block_q, D]
+    *,
+    block_k: int,
+    s: int,
+    n_buckets: int,
+    scale: float,
+    window: int,
+):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    block_q = q_ref.shape[2]
+    d = q_ref.shape[3]
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale
+    valid_len = seq_len_ref[b]
+    table = rab_table_ref[0, :].astype(jnp.float32)  # [n_buckets]
+
+    qpos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    n_kb = s // block_k
+
+    def body(kb, acc):
+        k_tile = k_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        v_tile = v_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(
+            jnp.float32
+        )
+        sc = q @ k_tile.T  # [block_q, block_k]
+
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        # In-register relative bias: bucket(i - j) clipped causally.
+        dist = jnp.clip(qpos[:, None] - kpos[None, :], 0, n_buckets - 1)
+        sc = sc + table[dist]
+
+        w = jax.nn.silu(sc)
+        mask = jnp.logical_and(
+            kpos[None, :] <= qpos[:, None],
+            kpos[None, :] < valid_len,
+        )
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos[None, :] > qpos[:, None] - window)
+        w = jnp.where(mask, w, 0.0)
+        return acc + w @ v_tile
+
+    acc = jax.lax.fori_loop(0, n_kb, body, acc0)
+    # Pointwise normalization by the per-row count of valid causal
+    # (windowed) key positions: |[lo, hi)| with lo = max(0, q-window+1),
+    # hi = min(q+1, valid_len).
+    lo = jnp.maximum(qpos - window + 1, 0) if window > 0 else \
+        jnp.zeros_like(qpos)
+    hi = jnp.minimum(qpos + 1, jnp.maximum(valid_len, 1))
+    n = jnp.maximum(hi - lo, 1).astype(jnp.float32)
+    o_ref[0, 0, :, :] = (acc / n[:, None]).astype(o_ref.dtype)
+
+
+def hstu_attention(
+    q,
+    k,
+    v,
+    rab_table,
+    *,
+    seq_len=None,
+    window=None,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+):
+    """Fused HSTU spatial aggregation.
+
+    q/k/v: [B, H, S, D]; rab_table: [H, n_buckets] bucketed bias table.
+    ``seq_len``: [B] int32 valid lengths (defaults to S). ``window``:
+    optional static sliding-window size (later-layer cap).
+    Matches ``ref.hstu_attention_ref`` with
+    ``rab = ref.relative_bias_ref(rab_table, S)``.
+    """
+    b, h, s, d = q.shape
+    n_buckets = rab_table.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} not divisible by blocks ({block_q},{block_k})")
+    if seq_len is None:
+        seq_len = jnp.full((b,), s, dtype=jnp.int32)
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, h, s // block_q)
+    kernel = functools.partial(
+        _hstu_kernel, block_k=block_k, s=s, n_buckets=n_buckets, scale=scale,
+        window=int(window) if window else 0,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b,), lambda bi, hi, qi: (0,)),
+            pl.BlockSpec((1, n_buckets), lambda bi, hi, qi: (hi, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(seq_len.astype(jnp.int32), rab_table, q, k, v)

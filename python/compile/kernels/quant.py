@@ -1,0 +1,109 @@
+"""Int8 quantized matmul Pallas kernels (the paper's AutoQuant lever, L1).
+
+torchao's AutoQuant picks between *int8 weight-only* (memory-bound layers:
+halve/quarter the bytes moved for weights) and *int8 dynamic* (compute-bound
+layers: integer-domain GEMM) per linear layer. Both variants are
+implemented here as tiled Pallas kernels so the Rust-side autoquant
+calibration pass (rust/src/coordinator/autoquant.rs) can time real
+executables per layer shape and pick the winner — the same decision
+procedure AutoQuant automates.
+
+Tiling: one program per (m-block, n-block); the K reduction streams
+``block_k`` tiles through VMEM. The int8 weight tile is dequantized (or
+kept integer for the dynamic variant) in VMEM — HBM traffic for weights is
+1 byte/elem instead of 4, which is the entire point of the lever.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wo_kernel(x_ref, wq_ref, scale_ref, o_ref, *, block_k: int, kdim: int):
+    """Weight-only: o = x @ (wq * scale)."""
+    block_m = x_ref.shape[0]
+    block_n = wq_ref.shape[1]
+    acc0 = jnp.zeros((block_m, block_n), dtype=jnp.float32)
+    n_kb = kdim // block_k
+
+    def body(kb, acc):
+        x_t = x_ref[:, pl.dslice(kb * block_k, block_k)].astype(jnp.float32)
+        w_t = wq_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        return acc + x_t @ w_t
+
+    acc = jax.lax.fori_loop(0, n_kb, body, acc0)
+    o_ref[...] = (acc * scale_ref[0, :][None, :]).astype(o_ref.dtype)
+
+
+def _dyn_kernel(x_ref, wq_ref, scale_ref, o_ref, *, block_k: int, kdim: int):
+    """Dynamic: per-row int8 activation quant, integer accumulate, rescale."""
+    block_m = x_ref.shape[0]
+    block_n = wq_ref.shape[1]
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-8)
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x / x_scale), -127, 127).astype(jnp.int32)
+
+    acc0 = jnp.zeros((block_m, block_n), dtype=jnp.int32)
+    n_kb = kdim // block_k
+
+    def body(kb, acc):
+        x_t = jax.lax.dynamic_slice(
+            x_q, (0, kb * block_k), (block_m, block_k)
+        )
+        w_t = wq_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.int32)
+        return acc + jax.lax.dot(
+            x_t, w_t, preferred_element_type=jnp.int32
+        )
+
+    acc = jax.lax.fori_loop(0, n_kb, body, acc0)
+    o_ref[...] = (
+        acc.astype(jnp.float32) * x_scale * scale_ref[0, :][None, :]
+    ).astype(o_ref.dtype)
+
+
+def _tiled_call(kernel, x, w_q, w_scale, block_m, block_n, block_k,
+                interpret):
+    m, kdim = x.shape
+    n = w_q.shape[1]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, kdim)
+    if m % block_m or n % block_n or kdim % block_k:
+        raise ValueError(
+            f"({m},{kdim},{n}) not divisible by ({block_m},{block_k},{block_n})"
+        )
+    grid = (m // block_m, n // block_n)
+    fn = functools.partial(kernel, block_k=block_k, kdim=kdim)
+    return pl.pallas_call(
+        fn,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, kdim), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((kdim, block_n), lambda mi, ni: (0, ni)),
+            pl.BlockSpec((1, block_n), lambda mi, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, w_scale[None, :])
+
+
+def int8_weight_only_matmul(x, w_q, w_scale, *, block_m: int = 64,
+                            block_n: int = 128, block_k: int = 128,
+                            interpret: bool = True):
+    """x [M, K] f32 @ dequant(w_q [K, N] int8, w_scale [N]) → [M, N] f32."""
+    return _tiled_call(_wo_kernel, x, w_q, w_scale, block_m, block_n,
+                       block_k, interpret)
+
+
+def int8_dynamic_matmul(x, w_q, w_scale, *, block_m: int = 64,
+                        block_n: int = 128, block_k: int = 128,
+                        interpret: bool = True):
+    """Dynamic-activation int8 GEMM; matches ref.int8_dynamic_matmul_ref."""
+    return _tiled_call(_dyn_kernel, x, w_q, w_scale, block_m, block_n,
+                       block_k, interpret)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the "naive" implementations the paper's baseline uses (attention
+that materializes the full N x N score matrix, straight f32 matmuls) and the
+ground truth the Pallas kernels are validated against in pytest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdpa_ref(q, k, v, *, causal: bool = False, kv_len=None, scale=None):
+    """Naive scaled dot-product attention.
+
+    q: [B, H, Sq, D], k/v: [B, H, Sk, D].
+    ``kv_len``: optional [B] int32 — only the first kv_len[b] KV positions
+    are valid (static-cache decode). ``causal`` applies a causal mask
+    aligned to the *end* of the valid KV region (standard for prefill).
+    Materializes the [B, H, Sq, Sk] score tensor — this is the baseline the
+    flash kernel avoids.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    neg = jnp.asarray(-1e30, dtype=scores.dtype)
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(sk)[None, :]
+        mask = ki <= qi + (sk - sq)
+        scores = jnp.where(mask[None, None], scores, neg)
+    if kv_len is not None:
+        ki = jnp.arange(sk)[None, None, None, :]
+        valid = ki < kv_len[:, None, None, None]
+        scores = jnp.where(valid, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def hstu_attention_ref(q, k, v, rab, *, seq_len=None, window=None):
+    """HSTU pointwise-normalized attention (paper §2.1.4).
+
+    Spatial aggregation replaces softmax with a pointwise
+    ``silu(QK^T + rab) / N`` weighting. q/k/v: [B, H, S, D];
+    rab: [H, S, S] relative attention bias; ``seq_len``: optional [B]
+    valid-length mask. Causal (sequential transduction). ``window``:
+    optional sliding attention window (the paper's later-layer
+    sequence-length cap, DESIGN.md §Substitutions).
+    """
+    b, h, s, d = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.array(d, q.dtype)
+    )
+    scores = scores + rab[None]
+    w = jax.nn.silu(scores)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = (ki <= qi)[None, None]
+    if window is not None:
+        mask = jnp.logical_and(mask, (ki > qi - window)[None, None])
+    if seq_len is not None:
+        valid = (jnp.arange(s)[None, :] < seq_len[:, None])[:, None, None, :]
+        mask = jnp.logical_and(mask, valid)
+    w = jnp.where(mask, w, 0.0)
+    # Pointwise normalization by the (masked) sequence length N.
+    n = jnp.maximum(jnp.sum(mask.astype(q.dtype), axis=-1, keepdims=True), 1.0)
+    w = w / n
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def relative_bias_ref(table, s: int):
+    """Bucketed relative attention bias: rab[h, i, j] = table[h, bucket(i-j)].
+
+    ``table``: [H, n_buckets]. Causal distances i-j are clipped into
+    [0, n_buckets).
+    """
+    n_buckets = table.shape[1]
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    dist = jnp.clip(i - j, 0, n_buckets - 1)
+    return table[:, dist]  # [H, S, S]
+
+
+def int8_weight_only_matmul_ref(x, w_q, w_scale):
+    """x [M, K] f32 @ dequant(w_q [K, N] int8, w_scale [N]) — weight-only."""
+    w = w_q.astype(jnp.float32) * w_scale[None, :]
+    return x @ w
+
+
+def int8_dynamic_matmul_ref(x, w_q, w_scale):
+    """Dynamic activation quantization: per-row symmetric int8 on x, then
+    integer-domain matmul rescaled back to f32."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True), 1e-8)
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x / x_scale), -127, 127).astype(jnp.int8)
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale[None, :]
+
+
+def quantize_weight(w, axis: int = 0):
+    """Symmetric per-output-channel int8 quantization of w [K, N] → (q, scale[N])."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=axis), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

@@ -1,0 +1,164 @@
+"""Shared L2 building blocks: RMSNorm, RoPE, SwiGLU, linear variants.
+
+Every function is pure jnp over explicit parameter arrays (no module
+state) so stages can be lowered with weights as ordinary positional
+inputs — the Rust runtime feeds them from artifacts/<model>/weights.bin
+in manifest order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.attention import flash_attention
+from .kernels.quant import int8_dynamic_matmul, int8_weight_only_matmul
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    """Root-mean-square layer norm (paper: Chameleon/Llama use RMSNorm)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * weight + bias
+
+
+def rope_tables(max_seq: int, head_dim: int, theta: float = 10000.0):
+    """Precomputed rotary cos/sin tables [max_seq, head_dim/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x, positions, cos_tab, sin_tab):
+    """Rotary positional embedding. x: [B, H, S, D]; positions: [B, S]."""
+    cos = cos_tab[positions][:, None]  # [B, 1, S, D/2]
+    sin = sin_tab[positions][:, None]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# --------------------------------------------------------------------------
+# Linear variants (f32 / int8 weight-only / int8 dynamic) — the AutoQuant
+# lever. mode is baked at lowering time; each produces a distinct HLO stage.
+# --------------------------------------------------------------------------
+
+LINEAR_MODES = ("f32", "int8_weight_only", "int8_dynamic")
+
+
+def linear(x, w, *, mode: str = "f32", w_scale=None, use_kernel: bool = True):
+    """x [..., K] @ w.
+
+    f32 mode: w is [K, N] f32. int8 modes: w is [K, N] int8 and ``w_scale``
+    [N] f32 must be given. ``use_kernel`` routes int8 through the Pallas
+    kernels (interpret mode); the plain-jnp path is the oracle.
+    """
+    if mode == "f32":
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "int8_weight_only":
+        fn = int8_weight_only_matmul if use_kernel else \
+            kref.int8_weight_only_matmul_ref
+    elif mode == "int8_dynamic":
+        fn = int8_dynamic_matmul if use_kernel else \
+            kref.int8_dynamic_matmul_ref
+    else:
+        raise ValueError(f"unknown linear mode {mode!r}")
+    if use_kernel:
+        # Pallas tiles must divide the problem shape exactly; pick the
+        # largest power-of-two block that divides each dim.
+        def blk(n, cap):
+            b = 1
+            while b * 2 <= cap and n % (b * 2) == 0:
+                b *= 2
+            return b
+        m, kk = x2.shape
+        n = w.shape[1]
+        out = fn(x2, w, w_scale, block_m=blk(m, 64), block_n=blk(n, 128),
+                 block_k=blk(kk, 128))
+    else:
+        out = fn(x2, w, w_scale)
+    return out.reshape(*lead, w.shape[1])
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down, *, mode: str = "f32", scales=None):
+    """SwiGLU feed-forward (paper: Chameleon/Llama use SwiGLU)."""
+    if scales is None:
+        scales = {}
+    g = linear(x, w_gate, mode=mode, w_scale=scales.get("gate"))
+    u = linear(x, w_up, mode=mode, w_scale=scales.get("up"))
+    h = jax.nn.silu(g) * u
+    return linear(h, w_down, mode=mode, w_scale=scales.get("down"))
+
+
+# --------------------------------------------------------------------------
+# Attention dispatch — the SDPA lever. "naive" materializes the score
+# matrix (baseline); "flash" is the tiled Pallas kernel.
+# --------------------------------------------------------------------------
+
+ATTN_IMPLS = ("naive", "flash")
+
+
+def attention(q, k, v, *, impl: str = "naive", causal: bool = False,
+              kv_len=None, q_start=None):
+    if impl == "flash":
+        return flash_attention(q, k, v, causal=causal, kv_len=kv_len,
+                               q_start=q_start)
+    if impl == "naive":
+        if causal and q_start is not None and q.shape[2] != k.shape[2]:
+            # Offset-causal (verify window over a static cache): build the
+            # mask explicitly.
+            b, h, sq, d = q.shape
+            sk = k.shape[2]
+            scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+                jnp.array(d, q.dtype))
+            kpos = jnp.arange(sk)[None, None, None, :]
+            qpos = q_start[:, None, None, None] + \
+                jnp.arange(sq)[None, None, :, None]
+            mask = kpos <= qpos
+            if kv_len is not None:
+                mask = jnp.logical_and(
+                    mask, kpos < kv_len[:, None, None, None])
+            scores = jnp.where(mask, scores, -1e30)
+            p = jax.nn.softmax(scores, axis=-1)
+            return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+        return kref.sdpa_ref(q, k, v, causal=causal, kv_len=kv_len)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def update_kv_cache(cache_k, cache_v, new_k, new_v, positions):
+    """Static-cache update (the CUDA-Graph-enabling trick, paper §4.1.2).
+
+    cache_k/v: [B, H, max_seq, D]; new_k/v: [B, H, S, D];
+    positions: [B] int32 start offsets per slot. vmap'd
+    dynamic_update_slice keeps the lowered HLO fully shape-static.
+    """
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+    ck = jax.vmap(upd)(cache_k, new_k, positions)
+    cv = jax.vmap(upd)(cache_v, new_v, positions)
+    return ck, cv
+
+
+def update_kv_cache_stacked(cache, new, positions, layer: int):
+    """In-place-friendly update of a stacked [L, B, H, max_seq, D] cache.
+
+    Writes only the [1, H, S_new, D] slab per batch element directly into
+    the 5D tensor (no layer-slice extract/reinsert, which would copy the
+    whole layer every step — the §Perf L2 fix). With the stage's
+    input_output_alias donation, XLA performs this without copying the
+    cache at all.
+    """
+    def upd(c, n, p):
+        # c: [L, H, max_seq, D] (one batch element), n: [H, S_new, D]
+        return jax.lax.dynamic_update_slice(
+            c, n[None], (jnp.int32(layer), jnp.int32(0), p, jnp.int32(0)))
+    return jax.vmap(upd, in_axes=(1, 0, 0), out_axes=1)(cache, new,
+                                                        positions)

@@ -1,0 +1,19 @@
+"""Facade re-exports: the L2 model zoo.
+
+Kept for discoverability (`from compile import model`); the real
+definitions live in ``compile.models.*`` and the stage lowering in
+``compile.aot``.
+"""
+
+from .models.hstu import make_forward as make_hstu_forward  # noqa: F401
+from .models.llama import (  # noqa: F401
+    make_decode,
+    make_prefill,
+    make_verify,
+)
+from .models.seamless import (  # noqa: F401
+    make_dec_step,
+    make_encoder,
+    make_t2u,
+    make_vocoder,
+)

@@ -1,0 +1,1 @@
+"""L2 model definitions for the four paper families."""

@@ -1,0 +1,121 @@
+"""HSTU generative recommender (L2), paper §2.1.4.
+
+A stack of identical layers, each with three sub-layers:
+
+* **Point-wise Projection** — one fused linear producing U, V, Q, K with a
+  SiLU gate (replaces separate QKV + FFN-up projections of a standard
+  Transformer, reducing matmul count).
+* **Spatial Aggregation** — pointwise-normalized attention
+  ``silu(QK^T + rab) / N`` with a bucketed relative attention bias
+  (L1 kernel: ``kernels.hstu.hstu_attention`` fuses bias construction).
+* **Pointwise Transformation** — norm(attn) gated by U, output linear,
+  residual.
+
+Non-autoregressive: one forward pass scores the whole user history
+(Obs #1 — no decode loop, hence the paper's dramatically lower latency).
+Later layers attend over a bounded window (the paper caps the sequence
+length of the last 11 of 14 layers at 1024; we express the cap as a
+sliding attention window so it composes with right-padded batches —
+DESIGN.md §Substitutions).
+
+Heads: ranking (engagement-type logits per position) and retrieval
+(next-item logits at the last valid position, tied to the item embedding).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import HstuConfig
+from ..kernels.hstu import hstu_attention
+from ..kernels.ref import hstu_attention_ref, relative_bias_ref
+from ..layers import rmsnorm
+
+
+def param_specs(cfg: HstuConfig):
+    d = cfg.d_model
+    hs = cfg.n_heads * cfg.head_dim
+    specs = [("item_embed", (cfg.item_vocab, d)),
+             ("pos_embed", (cfg.max_seq, d))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            (p + "norm", (d,)),
+            (p + "proj", (d, 3 * hs + d)),   # fused U(d) | V | Q | K
+            (p + "rab_table", (cfg.n_heads, cfg.rel_buckets)),
+            (p + "attn_norm", (cfg.head_dim,)),
+            (p + "out", (hs, d)),
+        ]
+    specs += [("final_norm", (d,)),
+              ("rank_head", (d, cfg.action_vocab)),
+              ("rank_bias", (cfg.action_vocab,))]
+    return specs
+
+
+def init_params(cfg: HstuConfig, seed: int = 2) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith("bias"):
+            params[name] = np.zeros(shape, np.float32)
+        elif name.endswith("rab_table"):
+            params[name] = (rng.normal(0, 0.1, shape)).astype(np.float32)
+        else:
+            std = 0.02 if "embed" in name else 1.0 / np.sqrt(shape[0])
+            params[name] = rng.normal(0, std, shape).astype(np.float32)
+    return params
+
+
+def _layer(cfg: HstuConfig, params, i: int, x, seq_len, *, attn_impl: str,
+           window):
+    """One HSTU layer. x: [B, S, D]; seq_len: [B] valid lengths."""
+    p = f"layers.{i}."
+    b, s, d = x.shape
+    hs = cfg.n_heads * cfg.head_dim
+    h = rmsnorm(x, params[p + "norm"], cfg.norm_eps)
+    f = jax.nn.silu(h @ params[p + "proj"])
+    u = f[..., :d]
+    v, q, k = (t.reshape(b, s, cfg.n_heads, cfg.head_dim)
+               .transpose(0, 2, 1, 3)
+               for t in jnp.split(f[..., d:], 3, axis=-1))
+
+    table = params[p + "rab_table"]
+    if attn_impl == "fused":
+        a = hstu_attention(q, k, v, table, seq_len=seq_len, window=window)
+    else:
+        rab = relative_bias_ref(table, s)
+        a = hstu_attention_ref(q, k, v, rab, seq_len=seq_len, window=window)
+    a = a.transpose(0, 2, 1, 3)
+    a = rmsnorm(a, params[p + "attn_norm"], cfg.norm_eps)
+    a = a.reshape(b, s, hs)
+    # Element-wise gating by U (requires hs == d, true for all configs).
+    return x + (a * u) @ params[p + "out"]
+
+
+def make_forward(cfg: HstuConfig, seq_bucket: int, batch: int, *,
+                 attn_impl: str = "naive"):
+    """fn(params, item_ids[B,S], seq_len[B]) →
+    (rank_logits[B,S,A], retrieval_logits[B,item_vocab])."""
+
+    def fn(params, item_ids, seq_len):
+        sl = seq_len.astype(jnp.int32)
+        x = params["item_embed"][item_ids]
+        x = x + params["pos_embed"][None, :seq_bucket]
+        for i in range(cfg.n_layers):
+            window = None if i < cfg.full_len_layers else cfg.capped_len
+            x = _layer(cfg, params, i, x, sl, attn_impl=attn_impl,
+                       window=window)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        rank = x @ params["rank_head"] + params["rank_bias"]
+        last = jnp.take_along_axis(
+            x, (sl - 1).clip(0)[:, None, None], axis=1)[:, 0]
+        retrieval = last @ params["item_embed"].T
+        return rank, retrieval
+
+    return fn

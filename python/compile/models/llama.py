@@ -1,0 +1,345 @@
+"""Code Llama / Chameleon decoder (L2).
+
+Decoder-only transformer with RMSNorm, RoPE and SwiGLU (paper §2.1.1,
+§2.1.2 — Chameleon "largely follows Llama-2", so both families share this
+module; they differ only in config and in how L3 drives decoding —
+Chameleon T-I runs the decode graph twice per step for contrastive
+decoding).
+
+Stages lowered by aot.py (all shape-static, static KV cache):
+
+* ``prefill_b{P}``   tokens[1,P], prompt_len[1] → last-token logits + KV
+* ``decode_b{B}``    tokens[B], positions[B], KV → logits[B,V] + KV'
+* ``draft_b1``       early-exit decode: first E layers + shared LM head
+* ``verify_k{K}``    K-token window through the full model (LayerSkip)
+* eager per-op stages (embed / norm / qkv+rope / attn_step / oproj /
+  ffn / head) — the "one dispatch per operator" baseline that shows the
+  paper's GPU-idle / launch-overhead effect (Obs #2).
+
+KV cache layout: stacked ``[L, B, H, max_seq, Dh]`` for K and V.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import DecoderConfig
+from ..kernels.ref import quantize_weight
+from ..layers import (apply_rope, attention, linear, rmsnorm, rope_tables,
+                      swiglu_ffn, update_kv_cache,
+                      update_kv_cache_stacked)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: DecoderConfig):
+    """Ordered (name, shape) list — the canonical weights.bin order."""
+    d, f, v = cfg.d_model, cfg.ffn_hidden, cfg.vocab_size
+    specs = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    specs += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return specs
+
+QUANTIZABLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "lm_head")
+
+
+def init_params(cfg: DecoderConfig, seed: int = 0,
+                early_exit_friendly: bool = True) -> Dict[str, np.ndarray]:
+    """Random weights, optionally "LayerSkip-finetuned" in structure.
+
+    The paper's LayerSkip recipe (layer dropout + early-exit loss over
+    50K iterations on 64 GPUs) trains the model so the first E layers
+    already predict well. We cannot train, so we reproduce the
+    *property* the recipe creates: with ``early_exit_friendly``, layers
+    ≥ E get down-scaled output projections, making the truncated model
+    agree with the full model often enough for speculative acceptance —
+    the serving-side behaviour LayerSkip's training buys
+    (DESIGN.md §Substitutions).
+    """
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, np.float32)
+        else:
+            std = 0.02 if name in ("embed", "lm_head") else \
+                1.0 / np.sqrt(shape[0])
+            params[name] = rng.normal(0, std, shape).astype(np.float32)
+    if early_exit_friendly:
+        for i in range(cfg.early_exit_layer, cfg.n_layers):
+            for leaf in ("wo", "w_down"):
+                params[f"layers.{i}.{leaf}"] *= 0.08
+    return params
+
+
+def quantize_params(params: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Int8 per-channel quantization of every linear weight (AutoQuant
+    lever). Returns {name+".q": int8, name+".scale": f32} entries."""
+    out = {}
+    for name, w in params.items():
+        base = name.split(".")[-1]
+        if base in QUANTIZABLE and w.ndim == 2:
+            q, s = quantize_weight(jnp.asarray(w))
+            out[name + ".q"] = np.asarray(q)
+            out[name + ".scale"] = np.asarray(s)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward pieces
+# --------------------------------------------------------------------------
+
+def _layer_weights(params, i, quant: bool):
+    p = f"layers.{i}."
+    if not quant:
+        return {k: params[p + k] for k in
+                ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm",
+                 "w_gate", "w_up", "w_down")}
+    w = {"attn_norm": params[p + "attn_norm"],
+         "ffn_norm": params[p + "ffn_norm"]}
+    for k in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+        w[k] = params[p + k + ".q"]
+        w[k + "_scale"] = params[p + k + ".scale"]
+    return w
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def decoder_layer(cfg: DecoderConfig, w, x, positions, ck, cv, layer, *,
+                  attn_impl: str, causal: bool, kv_len, q_start,
+                  linear_mode: str = "f32"):
+    """One transformer block writing into the stacked caches
+    ck/cv [L, B, H, max_seq, Dh] at ``layer`` (small in-place
+    dynamic-update-slice — the §Perf L2 hot-path fix).
+
+    ``positions``: [B, S] absolute positions of the new tokens (for RoPE +
+    cache writes, contiguous per sample). Returns (x', ck', cv')."""
+    lm = linear_mode
+    sc = (lambda k: w.get(k + "_scale")) if lm != "f32" else (lambda k: None)
+    h = rmsnorm(x, w["attn_norm"], cfg.norm_eps)
+    q = linear(h, w["wq"], mode=lm, w_scale=sc("wq"))
+    k = linear(h, w["wk"], mode=lm, w_scale=sc("wk"))
+    v = linear(h, w["wv"], mode=lm, w_scale=sc("wv"))
+    q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(k, cfg.n_heads, cfg.head_dim)
+    v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+    cos, sin = rope_tables(cfg.max_seq, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, positions, cos, sin)
+    k = apply_rope(k, positions, cos, sin)
+
+    start = positions[:, 0]
+    ck = update_kv_cache_stacked(ck, k, start, layer)
+    cv = update_kv_cache_stacked(cv, v, start, layer)
+    a = attention(q, ck[layer], cv[layer], impl=attn_impl, causal=causal,
+                  kv_len=kv_len, q_start=q_start)
+    x = x + linear(_merge_heads(a), w["wo"], mode=lm, w_scale=sc("wo"))
+
+    h = rmsnorm(x, w["ffn_norm"], cfg.norm_eps)
+    scales = {"gate": sc("w_gate"), "up": sc("w_up"), "down": sc("w_down")} \
+        if lm != "f32" else None
+    x = x + swiglu_ffn(h, w["w_gate"], w["w_up"], w["w_down"], mode=lm,
+                       scales=scales)
+    return x, ck, cv
+
+
+def forward(cfg: DecoderConfig, params, tokens, positions, ck, cv, *,
+            attn_impl: str, kv_len, q_start, causal: bool,
+            n_layers=None, linear_mode: str = "f32"):
+    """Run ``n_layers`` (default all) blocks. tokens: [B, S] int32;
+    ck/cv: [L, B, H, max_seq, Dh]. Returns (hidden [B,S,D], ck', cv')."""
+    quant = linear_mode != "f32"
+    nl = cfg.n_layers if n_layers is None else n_layers
+    x = params["embed"][tokens]
+    for i in range(nl):
+        w = _layer_weights(params, i, quant)
+        x, ck, cv = decoder_layer(
+            cfg, w, x, positions, ck, cv, i, attn_impl=attn_impl,
+            causal=causal, kv_len=kv_len, q_start=q_start,
+            linear_mode=linear_mode)
+    return x, ck, cv
+
+
+def lm_logits(cfg, params, x, *, linear_mode: str = "f32"):
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if linear_mode == "f32":
+        return linear(h, params["lm_head"])
+    return linear(h, params["lm_head.q"], mode=linear_mode,
+                  w_scale=params["lm_head.scale"])
+
+
+# --------------------------------------------------------------------------
+# Stage builders (closures over param *names*; aot.py lowers them with
+# weights as leading positional inputs)
+# --------------------------------------------------------------------------
+
+def kv_shape(cfg: DecoderConfig, batch: int):
+    return (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def make_prefill(cfg: DecoderConfig, prompt_bucket: int, *,
+                 attn_impl: str = "naive", linear_mode: str = "f32"):
+    """Returns fn(params, tokens[1,P], prompt_len[1]) →
+    (logits[1,V], ck, cv). The prompt is right-padded to the bucket; the
+    causal mask plus prompt_len-based gather make padding inert."""
+
+    def fn(params, tokens, prompt_len):
+        b = tokens.shape[0]
+        ck = jnp.zeros(kv_shape(cfg, b), jnp.float32)
+        cv = jnp.zeros(kv_shape(cfg, b), jnp.float32)
+        positions = jnp.broadcast_to(
+            jnp.arange(prompt_bucket, dtype=jnp.int32)[None], tokens.shape)
+        # q_start=0: queries are start-aligned in the max_seq-wide static
+        # cache (the end-aligned default of sdpa_ref would be wrong here).
+        x, ck, cv = forward(
+            cfg, params, tokens, positions, ck, cv, attn_impl=attn_impl,
+            kv_len=prompt_len.astype(jnp.int32),
+            q_start=jnp.zeros((b,), jnp.int32), causal=True,
+            linear_mode=linear_mode)
+        last = jnp.take_along_axis(
+            x, (prompt_len.astype(jnp.int32) - 1)[:, None, None]
+            .clip(0), axis=1)[:, 0]
+        logits = lm_logits(cfg, params, last, linear_mode=linear_mode)
+        return logits, ck, cv
+
+    return fn
+
+
+def make_decode(cfg: DecoderConfig, batch: int, *, attn_impl: str = "naive",
+                linear_mode: str = "f32", n_layers=None,
+                early_exit: bool = False):
+    """Returns fn(params, tokens[B], positions[B], ck, cv) →
+    (logits[B,V], ck', cv'). ``early_exit`` builds the LayerSkip draft
+    stage: only the first E layers run, then the shared LM head."""
+    nl = cfg.early_exit_layer if early_exit else n_layers
+
+    def fn(params, tokens, positions, ck, cv):
+        pos2 = positions.astype(jnp.int32)[:, None]
+        x, ck, cv = forward(
+            cfg, params, tokens[:, None], pos2, ck, cv,
+            attn_impl=attn_impl, kv_len=positions.astype(jnp.int32) + 1,
+            q_start=positions.astype(jnp.int32), causal=False,
+            n_layers=nl, linear_mode=linear_mode)
+        logits = lm_logits(cfg, params, x[:, 0], linear_mode=linear_mode)
+        return logits, ck, cv
+
+    return fn
+
+
+def make_verify(cfg: DecoderConfig, window: int, *,
+                attn_impl: str = "naive", linear_mode: str = "f32"):
+    """LayerSkip verify stage: fn(params, tokens[1,K], start_pos[1], ck, cv)
+    → (logits[1,K,V], ck', cv'). All K draft tokens go through the full
+    model in one pass (the speculative-decoding amortization)."""
+
+    def fn(params, tokens, start_pos, ck, cv):
+        start = start_pos.astype(jnp.int32)
+        positions = start[:, None] + jnp.arange(window, dtype=jnp.int32)[None]
+        x, ck, cv = forward(
+            cfg, params, tokens, positions, ck, cv, attn_impl=attn_impl,
+            kv_len=start + window, q_start=start, causal=True,
+            linear_mode=linear_mode)
+        logits = lm_logits(cfg, params, x, linear_mode=linear_mode)
+        return logits, ck, cv
+
+    return fn
+
+
+def make_kv_pack(cfg: DecoderConfig, batch: int):
+    """Insert a freshly-prefilled single-slot cache into batch slot
+    ``slot`` — the continuous-batching admission op.
+
+    fn(ck[L,B,H,S,Dh], cv, ck1[L,1,H,S,Dh], cv1, slot[1]) → (ck', cv')."""
+
+    def fn(ck, cv, ck1, cv1, slot):
+        s = slot.astype(jnp.int32)[0]
+        z = jnp.int32(0)
+        ck = jax.lax.dynamic_update_slice(ck, ck1, (z, s, z, z, z))
+        cv = jax.lax.dynamic_update_slice(cv, cv1, (z, s, z, z, z))
+        return ck, cv
+
+    return fn
+
+
+# ---- Eager per-op stages (dispatch-overhead baseline) ---------------------
+
+def make_eager_embed(cfg):
+    return lambda embed, tokens: embed[tokens]
+
+
+def make_eager_norm(cfg):
+    return lambda w, x: rmsnorm(x, w, cfg.norm_eps)
+
+
+def make_eager_qkv(cfg):
+    """fn(wq, wk, wv, x[B,D], positions[B]) → q,k,v [B,H,1,Dh], rope'd."""
+
+    def fn(wq, wk, wv, x, positions):
+        b = x.shape[0]
+        qkv = []
+        for w in (wq, wk, wv):
+            y = (x @ w).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            qkv.append(y.transpose(0, 2, 1, 3))
+        q, k, v = qkv
+        cos, sin = rope_tables(cfg.max_seq, cfg.head_dim, cfg.rope_theta)
+        pos2 = positions.astype(jnp.int32)[:, None]
+        return apply_rope(q, pos2, cos, sin), \
+            apply_rope(k, pos2, cos, sin), v
+
+    return fn
+
+
+def make_eager_attn_step(cfg, *, attn_impl: str = "naive"):
+    """fn(q, k, v, positions[B], ck_l, cv_l [B,H,S,Dh]) →
+    (attn_out[B,D], ck_l', cv_l') — one layer's cached attention."""
+
+    def fn(q, k, v, positions, ck_l, cv_l):
+        pos = positions.astype(jnp.int32)
+        ck_l, cv_l = update_kv_cache(ck_l, cv_l, k, v, pos)
+        a = attention(q, ck_l, cv_l, impl=attn_impl, kv_len=pos + 1,
+                      q_start=pos, causal=False)
+        return _merge_heads(a)[:, 0], ck_l, cv_l
+
+    return fn
+
+
+def make_eager_oproj(cfg):
+    return lambda wo, attn_out, resid: resid + attn_out @ wo
+
+
+def make_eager_ffn(cfg):
+    def fn(norm_w, w_gate, w_up, w_down, x):
+        h = rmsnorm(x, norm_w, cfg.norm_eps)
+        return x + swiglu_ffn(h, w_gate, w_up, w_down)
+    return fn
+
+
+def make_eager_head(cfg):
+    def fn(final_norm, lm_head, x):
+        return rmsnorm(x, final_norm, cfg.norm_eps) @ lm_head
+    return fn

@@ -1,0 +1,365 @@
+"""Seamless M4T-style four-module pipeline (L2), paper §2.1.3.
+
+* ``encoder_t{T}``  — Conformer-lite speech encoder (non-AR): conv
+  subsampling front-end + blocks of (½FFN, MHSA, depthwise-conv, ½FFN).
+* ``cross_kv``      — per-request projection of encoder output to each
+  decoder layer's cross-attention K/V (computed once, reused every step).
+* ``dec_step_b{B}`` — autoregressive text decoder step over B beams:
+  self-attention with static KV cache + cross-attention + FFN. This is the
+  *only* AR module (paper Table 1), which is why Seamless shows higher GPU
+  utilization than Llama/Chameleon (Obs #2).
+* ``kv_reorder_b{B}`` — beam-search KV gather, the operation that dominates
+  Seamless inference in the paper (Obs #4). Lowered as its own stage so L3
+  can execute it on-device (the paper's torch.compile'd ``copy_`` fix) or
+  emulate the baseline host-side ``index_select`` copy.
+* ``t2u_t{T}``      — non-autoregressive text-to-unit: fixed-ratio
+  upsampling + bidirectional transformer.
+* ``vocoder_u{U}``  — HiFi-GAN-flavoured conv upsampler producing a
+  waveform from discrete units.
+
+Text decoder uses LayerNorm + GELU (NLLB lineage), not RMSNorm/SwiGLU.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SeamlessConfig
+from ..layers import (attention, layernorm, update_kv_cache,
+                      update_kv_cache_stacked)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: SeamlessConfig):
+    d, f = cfg.d_model, cfg.ffn_hidden
+    hs = cfg.n_heads * cfg.head_dim
+    specs = []
+    # Encoder front-end: stack `enc_subsample` frames → project to d.
+    specs.append(("enc.frontend.w", (cfg.enc_feat_dim * cfg.enc_subsample, d)))
+    specs.append(("enc.frontend.b", (d,)))
+    for i in range(cfg.enc_layers):
+        p = f"enc.layers.{i}."
+        for ffn in ("ffn1", "ffn2"):
+            specs += [
+                (p + ffn + ".norm.w", (d,)), (p + ffn + ".norm.b", (d,)),
+                (p + ffn + ".w1", (d, f)), (p + ffn + ".b1", (f,)),
+                (p + ffn + ".w2", (f, d)), (p + ffn + ".b2", (d,)),
+            ]
+        specs += [
+            (p + "attn.norm.w", (d,)), (p + "attn.norm.b", (d,)),
+            (p + "attn.wq", (d, hs)), (p + "attn.wk", (d, hs)),
+            (p + "attn.wv", (d, hs)), (p + "attn.wo", (hs, d)),
+            (p + "conv.norm.w", (d,)), (p + "conv.norm.b", (d,)),
+            (p + "conv.pw1", (d, 2 * d)),          # pointwise → GLU
+            (p + "conv.dw", (cfg.conv_kernel, d)),  # depthwise
+            (p + "conv.pw2", (d, d)),
+            (p + "final.norm.w", (d,)), (p + "final.norm.b", (d,)),
+        ]
+    # Text decoder
+    specs.append(("dec.embed", (cfg.text_vocab, d)))
+    specs.append(("dec.pos_embed", (cfg.max_tgt, d)))
+    for i in range(cfg.dec_layers):
+        p = f"dec.layers.{i}."
+        specs += [
+            (p + "self.norm.w", (d,)), (p + "self.norm.b", (d,)),
+            (p + "self.wq", (d, hs)), (p + "self.wk", (d, hs)),
+            (p + "self.wv", (d, hs)), (p + "self.wo", (hs, d)),
+            (p + "cross.norm.w", (d,)), (p + "cross.norm.b", (d,)),
+            (p + "cross.wq", (d, hs)), (p + "cross.wk", (d, hs)),
+            (p + "cross.wv", (d, hs)), (p + "cross.wo", (hs, d)),
+            (p + "ffn.norm.w", (d,)), (p + "ffn.norm.b", (d,)),
+            (p + "ffn.w1", (d, f)), (p + "ffn.b1", (f,)),
+            (p + "ffn.w2", (f, d)), (p + "ffn.b2", (d,)),
+        ]
+    specs += [("dec.final.norm.w", (d,)), ("dec.final.norm.b", (d,)),
+              ("dec.lm_head", (d, cfg.text_vocab))]
+    # Text encoder (text-input tasks)
+    specs.append(("tenc.embed", (cfg.text_vocab, d)))
+    for i in range(cfg.t2u_layers):
+        p = f"tenc.layers.{i}."
+        specs += [
+            (p + "attn.norm.w", (d,)), (p + "attn.norm.b", (d,)),
+            (p + "attn.wq", (d, hs)), (p + "attn.wk", (d, hs)),
+            (p + "attn.wv", (d, hs)), (p + "attn.wo", (hs, d)),
+            (p + "ffn.norm.w", (d,)), (p + "ffn.norm.b", (d,)),
+            (p + "ffn.w1", (d, f)), (p + "ffn.b1", (f,)),
+            (p + "ffn.w2", (f, d)), (p + "ffn.b2", (d,)),
+        ]
+    specs += [("tenc.final.norm.w", (d,)), ("tenc.final.norm.b", (d,))]
+    # NAR T2U
+    specs.append(("t2u.embed", (cfg.text_vocab, d)))
+    for i in range(cfg.t2u_layers):
+        p = f"t2u.layers.{i}."
+        specs += [
+            (p + "attn.norm.w", (d,)), (p + "attn.norm.b", (d,)),
+            (p + "attn.wq", (d, hs)), (p + "attn.wk", (d, hs)),
+            (p + "attn.wv", (d, hs)), (p + "attn.wo", (hs, d)),
+            (p + "ffn.norm.w", (d,)), (p + "ffn.norm.b", (d,)),
+            (p + "ffn.w1", (d, f)), (p + "ffn.b1", (f,)),
+            (p + "ffn.w2", (f, d)), (p + "ffn.b2", (d,)),
+        ]
+    specs.append(("t2u.head", (d, cfg.unit_vocab)))
+    # Vocoder
+    specs.append(("voc.embed", (cfg.unit_vocab, cfg.voc_channels)))
+    ch = cfg.voc_channels
+    for i in range(cfg.voc_stages):
+        nxt = max(ch // 2, 8)
+        specs += [(f"voc.stages.{i}.conv", (7, ch, nxt)),
+                  (f"voc.stages.{i}.bias", (nxt,))]
+        ch = nxt
+    specs += [("voc.out.conv", (7, ch, 1)), ("voc.out.bias", (1,))]
+    return specs
+
+
+def init_params(cfg: SeamlessConfig, seed: int = 1) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("norm.w"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith((".b", ".b1", ".b2", ".bias", "norm.b")):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            std = 0.02 if "embed" in name else 1.0 / np.sqrt(
+                np.prod(shape[:-1]))
+            params[name] = rng.normal(0, std, shape).astype(np.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Encoder (conformer-lite)
+# --------------------------------------------------------------------------
+
+def _heads(x, cfg):
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _ffn(p, params, x, eps):
+    h = layernorm(x, params[p + ".norm.w"], params[p + ".norm.b"], eps)
+    h = jax.nn.gelu(h @ params[p + ".w1"] + params[p + ".b1"])
+    return h @ params[p + ".w2"] + params[p + ".b2"]
+
+
+def _mhsa(p, params, cfg, x, *, mask_len=None, attn_impl="naive"):
+    h = layernorm(x, params[p + ".norm.w"], params[p + ".norm.b"],
+                  cfg.norm_eps)
+    q = _heads(h @ params[p + ".wq"], cfg)
+    k = _heads(h @ params[p + ".wk"], cfg)
+    v = _heads(h @ params[p + ".wv"], cfg)
+    a = attention(q, k, v, impl=attn_impl, kv_len=mask_len)
+    return _merge(a) @ params[p + ".wo"]
+
+
+def _conv_module(p, params, cfg, x, valid_len):
+    """Conformer conv module: pointwise-GLU → depthwise → pointwise."""
+    h = layernorm(x, params[p + ".norm.w"], params[p + ".norm.b"],
+                  cfg.norm_eps)
+    h = h @ params[p + ".pw1"]
+    a, b = jnp.split(h, 2, axis=-1)
+    h = a * jax.nn.sigmoid(b)  # GLU
+    # Zero out padding so the depthwise conv does not smear it inward.
+    s = h.shape[1]
+    mask = (jnp.arange(s)[None, :] < valid_len[:, None])[..., None]
+    h = jnp.where(mask, h, 0.0)
+    # Depthwise conv along time, SAME padding.
+    dw = params[p + ".dw"]  # [K, D]
+    h = jax.lax.conv_general_dilated(
+        h, dw[:, None, :],
+        window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=cfg.d_model,
+    )
+    h = jax.nn.silu(h)
+    return h @ params[p + ".pw2"]
+
+
+def make_encoder(cfg: SeamlessConfig, t_bucket: int, *,
+                 attn_impl: str = "naive"):
+    """fn(params, feats[1,T,F], feat_len[1]) → (enc_out[1,T',D], enc_len[1]).
+
+    T must be a multiple of ``enc_subsample``; T' = T / enc_subsample.
+    """
+    sub = cfg.enc_subsample
+
+    def fn(params, feats, feat_len):
+        b, t, f = feats.shape
+        x = feats.reshape(b, t // sub, f * sub)
+        x = x @ params["enc.frontend.w"] + params["enc.frontend.b"]
+        enc_len = (feat_len.astype(jnp.int32) + sub - 1) // sub
+        for i in range(cfg.enc_layers):
+            p = f"enc.layers.{i}."
+            x = x + 0.5 * _ffn(p + "ffn1", params, x, cfg.norm_eps)
+            x = x + _mhsa(p + "attn", params, cfg, x, mask_len=enc_len,
+                          attn_impl=attn_impl)
+            x = x + _conv_module(p + "conv", params, cfg, x, enc_len)
+            x = x + 0.5 * _ffn(p + "ffn2", params, x, cfg.norm_eps)
+            x = layernorm(x, params[p + "final.norm.w"],
+                          params[p + "final.norm.b"], cfg.norm_eps)
+        return x, enc_len
+
+    return fn
+
+
+def make_text_encoder(cfg: SeamlessConfig, t_bucket: int, *,
+                      attn_impl: str = "naive"):
+    """T2TT text encoder for text-input tasks (T-T, T-S).
+
+    fn(params, tokens[1,T], text_len[1]) → (enc_out[1,T,D], enc_len[1])."""
+
+    def fn(params, tokens, text_len):
+        x = params["tenc.embed"][tokens]
+        enc_len = text_len.astype(jnp.int32)
+        for i in range(cfg.t2u_layers):  # same depth class as T2U
+            p = f"tenc.layers.{i}."
+            x = x + _mhsa(p + "attn", params, cfg, x, mask_len=enc_len,
+                          attn_impl=attn_impl)
+            x = x + _ffn(p + "ffn", params, x, cfg.norm_eps)
+        x = layernorm(x, params["tenc.final.norm.w"],
+                      params["tenc.final.norm.b"], cfg.norm_eps)
+        return x, enc_len
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Text decoder (AR, beam-ready)
+# --------------------------------------------------------------------------
+
+def cross_kv_shape(cfg: SeamlessConfig, src_len: int):
+    return (cfg.dec_layers, 1, cfg.n_heads, src_len, cfg.head_dim)
+
+
+def self_kv_shape(cfg: SeamlessConfig, beams: int):
+    return (cfg.dec_layers, beams, cfg.n_heads, cfg.max_tgt, cfg.head_dim)
+
+
+def make_cross_kv(cfg: SeamlessConfig, src_len: int):
+    """fn(params, enc_out[1,T',D]) → (cross_k, cross_v)
+    [L, 1, H, T', Dh] — computed once per request."""
+
+    def fn(params, enc_out):
+        ks, vs = [], []
+        for i in range(cfg.dec_layers):
+            p = f"dec.layers.{i}.cross"
+            ks.append(_heads(enc_out @ params[p + ".wk"], cfg))
+            vs.append(_heads(enc_out @ params[p + ".wv"], cfg))
+        return jnp.stack(ks), jnp.stack(vs)
+
+    return fn
+
+
+def make_dec_step(cfg: SeamlessConfig, beams: int, src_len: int, *,
+                  attn_impl: str = "naive"):
+    """One AR text-decoder step over B beams.
+
+    fn(params, tokens[B], positions[B], self_ck, self_cv, cross_k, cross_v,
+       enc_len[1]) → (logits[B,V], self_ck', self_cv')."""
+
+    def fn(params, tokens, positions, self_ck, self_cv, cross_k, cross_v,
+           enc_len):
+        pos = positions.astype(jnp.int32)
+        x = params["dec.embed"][tokens][:, None] + \
+            params["dec.pos_embed"][pos][:, None]
+        for i in range(cfg.dec_layers):
+            p = f"dec.layers.{i}."
+            # Self-attention over the static beam cache.
+            h = layernorm(x, params[p + "self.norm.w"],
+                          params[p + "self.norm.b"], cfg.norm_eps)
+            q = _heads(h @ params[p + "self.wq"], cfg)
+            k = _heads(h @ params[p + "self.wk"], cfg)
+            v = _heads(h @ params[p + "self.wv"], cfg)
+            self_ck = update_kv_cache_stacked(self_ck, k, pos, i)
+            self_cv = update_kv_cache_stacked(self_cv, v, pos, i)
+            a = attention(q, self_ck[i], self_cv[i], impl=attn_impl,
+                          kv_len=pos + 1, q_start=pos, causal=False)
+            x = x + _merge(a) @ params[p + "self.wo"]
+            # Cross-attention to the (shared) encoder output.
+            h = layernorm(x, params[p + "cross.norm.w"],
+                          params[p + "cross.norm.b"], cfg.norm_eps)
+            q = _heads(h @ params[p + "cross.wq"], cfg)
+            ck_x = jnp.broadcast_to(
+                cross_k[i], (beams,) + cross_k[i].shape[1:])
+            cv_x = jnp.broadcast_to(
+                cross_v[i], (beams,) + cross_v[i].shape[1:])
+            mask_len = jnp.broadcast_to(enc_len.astype(jnp.int32), (beams,))
+            a = attention(q, ck_x, cv_x, impl=attn_impl, kv_len=mask_len)
+            x = x + _merge(a) @ params[p + "cross.wo"]
+            x = x + _ffn(p + "ffn", params, x, cfg.norm_eps)
+        x = layernorm(x, params["dec.final.norm.w"],
+                      params["dec.final.norm.b"], cfg.norm_eps)
+        logits = x[:, 0] @ params["dec.lm_head"]
+        return logits, self_ck, self_cv
+
+    return fn
+
+
+def make_kv_reorder(cfg: SeamlessConfig, beams: int):
+    """Beam-search cache reorder (Obs #4): gather beams of the self cache.
+
+    fn(self_ck, self_cv, beam_idx[B]) → reordered (self_ck, self_cv)."""
+
+    def fn(self_ck, self_cv, beam_idx):
+        idx = beam_idx.astype(jnp.int32)
+        return jnp.take(self_ck, idx, axis=1), \
+            jnp.take(self_cv, idx, axis=1)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# NAR T2U + vocoder
+# --------------------------------------------------------------------------
+
+def make_t2u(cfg: SeamlessConfig, text_bucket: int, *,
+             attn_impl: str = "naive"):
+    """fn(params, text_tokens[1,T], text_len[1]) → unit logits
+    [1, T*upsample, unit_vocab]. Fully parallel (NAR)."""
+    u = cfg.t2u_upsample
+
+    def fn(params, tokens, text_len):
+        x = params["t2u.embed"][tokens]          # [1, T, D]
+        x = jnp.repeat(x, u, axis=1)             # fixed-ratio upsample
+        unit_len = text_len.astype(jnp.int32) * u
+        for i in range(cfg.t2u_layers):
+            p = f"t2u.layers.{i}."
+            x = x + _mhsa(p + "attn", params, cfg, x, mask_len=unit_len,
+                          attn_impl=attn_impl)
+            x = x + _ffn(p + "ffn", params, x, cfg.norm_eps)
+        return x @ params["t2u.head"], unit_len
+
+    return fn
+
+
+def make_vocoder(cfg: SeamlessConfig, unit_bucket: int):
+    """fn(params, units[1,U]) → waveform [1, U * voc_upsample**stages]."""
+
+    def fn(params, units):
+        x = params["voc.embed"][units]  # [1, U, C]
+        for i in range(cfg.voc_stages):
+            x = jnp.repeat(x, cfg.voc_upsample, axis=1)
+            w = params[f"voc.stages.{i}.conv"]  # [K, Cin, Cout]
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"))
+            x = jax.nn.leaky_relu(x + params[f"voc.stages.{i}.bias"], 0.1)
+        w = params["voc.out.conv"]
+        x = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1,), padding="SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        x = jnp.tanh(x + params["voc.out.bias"])
+        return x[..., 0]
+
+    return fn

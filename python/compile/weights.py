@@ -1,0 +1,71 @@
+"""weights.bin — the build-time → runtime parameter interchange format.
+
+A deliberately simple little-endian container the Rust side
+(rust/src/runtime/weights.rs) parses without external crates:
+
+    magic   4 bytes  b"MMWB"
+    version u32      1
+    count   u32      number of tensors
+    then per tensor:
+      name_len u16, name utf-8 bytes
+      dtype    u8   (0 = f32, 1 = i8, 2 = i32)
+      ndim     u8
+      dims     u32 * ndim
+      nbytes   u64
+      data     raw little-endian bytes
+
+Tensor order in the file is the manifest's canonical weight order.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List
+
+import numpy as np
+
+MAGIC = b"MMWB"
+VERSION = 1
+DTYPE_CODES = {"float32": 0, "int8": 1, "int32": 2}
+CODE_DTYPES = {v: k for k, v in DTYPE_CODES.items()}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray],
+         order: List[str]) -> None:
+    assert set(order) == set(tensors), (
+        sorted(set(order) ^ set(tensors)))
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(order)))
+        for name in order:
+            arr = np.ascontiguousarray(tensors[name])
+            code = DTYPE_CODES[str(arr.dtype)]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    """Round-trip reader (used by tests; Rust has its own parser)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim \
+                else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            out[name] = np.frombuffer(
+                data, dtype=CODE_DTYPES[code]).reshape(dims).copy()
+    return out

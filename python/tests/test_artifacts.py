@@ -1,0 +1,87 @@
+"""weights.bin round-trip + manifest/artifact integrity.
+
+The artifact-integrity tests run only if `make artifacts` has produced
+the artifacts/ tree (skipped otherwise so pytest works pre-build)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import weights as wio
+from compile.configs import TINY
+from compile.models import hstu as hstu_m
+from compile.models import llama as llama_m
+from compile.models import seamless as seam_m
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestWeightsFormat:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a": rng.normal(size=(3, 4)).astype(np.float32),
+            "b": rng.integers(-127, 128, (8,)).astype(np.int8),
+            "c": rng.integers(0, 100, (2, 2, 2)).astype(np.int32),
+            "scalar": np.float32(3.5).reshape(()),
+        }
+        p = str(tmp_path / "w.bin")
+        wio.save(p, tensors, ["a", "b", "c", "scalar"])
+        back = wio.load(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_order_mismatch_rejected(self, tmp_path):
+        with pytest.raises(AssertionError):
+            wio.save(str(tmp_path / "w.bin"),
+                     {"a": np.zeros(1, np.float32)}, ["a", "b"])
+
+
+def _manifest(model):
+    path = os.path.join(ART, model, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"artifacts for {model} not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+PARAM_SPECS = {
+    "llama": lambda: llama_m.param_specs(TINY["llama"]),
+    "chameleon": lambda: llama_m.param_specs(TINY["chameleon"]),
+    "seamless": lambda: seam_m.param_specs(TINY["seamless"]),
+    "hstu": lambda: hstu_m.param_specs(TINY["hstu"]),
+}
+
+
+@pytest.mark.parametrize("model", ["llama", "chameleon", "seamless", "hstu"])
+class TestArtifacts:
+    def test_every_stage_file_exists(self, model):
+        man = _manifest(model)
+        for name, st in man["stages"].items():
+            f = os.path.join(ART, model, st["file"])
+            assert os.path.exists(f), f"{name}: missing {st['file']}"
+            with open(f) as fh:
+                head = fh.read(200)
+            assert "HloModule" in head, f"{name}: not HLO text"
+
+    def test_weights_match_manifest_order(self, model):
+        man = _manifest(model)
+        w = wio.load(os.path.join(ART, model, man["weights_file"]))
+        assert list(w) == man["weight_order"]
+
+    def test_stage_weights_are_known(self, model):
+        man = _manifest(model)
+        known = set(man["weight_order"])
+        for name, st in man["stages"].items():
+            missing = set(st["weights"]) - known
+            assert not missing, f"{name}: unknown weights {missing}"
+
+    def test_base_param_shapes(self, model):
+        man = _manifest(model)
+        w = wio.load(os.path.join(ART, model, man["weights_file"]))
+        for name, shape in PARAM_SPECS[model]():
+            assert w[name].shape == tuple(shape), name

@@ -1,0 +1,126 @@
+"""Core kernel-vs-oracle correctness: flash attention (SDPA lever).
+
+Hypothesis sweeps shapes/dtypes per the repo testing strategy
+(DESIGN.md §7); deterministic cases pin the paper-relevant
+configurations (prefill causal, static-cache decode, verify window).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import (flash_attention,
+                                       mxu_utilization_estimate,
+                                       vmem_footprint_bytes)
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("s", [64, 128, 256])
+    @pytest.mark.parametrize("d", [32, 64])
+    def test_causal_matches_ref(self, s, d):
+        rng = np.random.default_rng(s * d)
+        q, k, v = (_rand(rng, 2, 4, s, d) for _ in range(3))
+        out = flash_attention(q, k, v, causal=True)
+        want = ref.sdpa_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_non_causal_full(self):
+        rng = np.random.default_rng(0)
+        q, k, v = (_rand(rng, 1, 2, 128, 32) for _ in range(3))
+        out = flash_attention(q, k, v)
+        want = ref.sdpa_ref(q, k, v)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_padded_prefill_prefix_only(self):
+        """Rows within the prompt must be unaffected by the padding rows —
+        the invariant the right-padded prefill bucket relies on."""
+        rng = np.random.default_rng(1)
+        q, k, v = (_rand(rng, 1, 2, 128, 32) for _ in range(3))
+        kv_len = jnp.array([77], jnp.int32)
+        out = flash_attention(q, k, v, causal=True, kv_len=kv_len)
+        # reference computed on the unpadded slice
+        want = ref.sdpa_ref(q[:, :, :77], k[:, :, :77], v[:, :, :77],
+                            causal=True)
+        np.testing.assert_allclose(out[:, :, :77], want, atol=2e-5)
+
+
+class TestFlashDecode:
+    def test_decode_step(self):
+        rng = np.random.default_rng(2)
+        q = _rand(rng, 3, 4, 1, 32)
+        k, v = (_rand(rng, 3, 4, 256, 32) for _ in range(2))
+        kv_len = jnp.array([1, 100, 256], jnp.int32)
+        out = flash_attention(q, k, v, kv_len=kv_len)
+        want = ref.sdpa_ref(q, k, v, kv_len=kv_len)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_verify_window_offset_causal(self):
+        rng = np.random.default_rng(3)
+        kwin = 4
+        q = _rand(rng, 2, 4, kwin, 32)
+        k, v = (_rand(rng, 2, 4, 128, 32) for _ in range(2))
+        start = jnp.array([10, 60], jnp.int32)
+        out = flash_attention(q, k, v, kv_len=start + kwin, q_start=start,
+                              causal=True)
+        # manual oracle
+        sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(32)
+        kpos = jnp.arange(128)
+        qpos = start[:, None, None, None] + \
+            jnp.arange(kwin)[None, None, :, None]
+        mask = (kpos[None, None, None, :] <= qpos) & \
+            (kpos[None, None, None, :] < (start + kwin)[:, None, None, None])
+        sc = jnp.where(mask, sc, -1e30)
+        want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), v)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_kv_len_one(self):
+        """Single valid KV entry: attention must return exactly v[0]."""
+        rng = np.random.default_rng(4)
+        q = _rand(rng, 1, 2, 1, 32)
+        k, v = (_rand(rng, 1, 2, 64, 32) for _ in range(2))
+        out = flash_attention(q, k, v, kv_len=jnp.array([1], jnp.int32))
+        np.testing.assert_allclose(out[0, :, 0], v[0, :, 0], atol=2e-5)
+
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    sq_blocks=st.integers(1, 3),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_hypothesis(b, h, sq_blocks, d, causal, seed):
+    """Property sweep: arbitrary (B, H, S, D) grids match the oracle."""
+    s = 64 * sq_blocks
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, b, h, s, d) for _ in range(3))
+    kv_len = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = flash_attention(q, k, v, causal=causal, kv_len=kv_len)
+    want = ref.sdpa_ref(q, k, v, causal=causal, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
+
+
+class TestKernelPerfEstimates:
+    def test_vmem_footprint_within_budget(self):
+        """Paper-scale shapes fit comfortably in 16 MiB of VMEM (the
+        EXPERIMENTS.md §Perf L1 target)."""
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+        assert vmem_footprint_bytes(256, 256, 128) < 16 * 2**20
+
+    def test_mxu_utilization_full_tiles(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(64, 64, 32) < 1.0

@@ -1,0 +1,98 @@
+"""Int8 matmul kernels vs oracles (AutoQuant lever)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.quant import int8_dynamic_matmul, int8_weight_only_matmul
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def _case(seed, m=64, k=256, n=512):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wq, ws = ref.quantize_weight(w)
+    return x, w, wq, ws
+
+
+class TestWeightOnly:
+    @pytest.mark.parametrize("shape", [(64, 256, 512), (8, 128, 128),
+                                       (128, 512, 256)])
+    def test_matches_ref(self, shape):
+        x, _, wq, ws = _case(sum(shape), *shape)
+        out = int8_weight_only_matmul(x, wq, ws)
+        want = ref.int8_weight_only_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-4)
+
+    def test_close_to_f32(self):
+        """Quantization error stays small relative to the f32 product."""
+        x, w, wq, ws = _case(3)
+        out = np.asarray(int8_weight_only_matmul(x, wq, ws))
+        exact = np.asarray(x @ w)
+        rel = np.abs(out - exact).mean() / np.abs(exact).mean()
+        assert rel < 0.01
+
+
+class TestDynamic:
+    @pytest.mark.parametrize("shape", [(64, 256, 512), (16, 128, 256)])
+    def test_matches_ref(self, shape):
+        x, _, wq, ws = _case(sum(shape) + 1, *shape)
+        out = int8_dynamic_matmul(x, wq, ws)
+        want = ref.int8_dynamic_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-3)
+
+    def test_row_scale_invariance(self):
+        """Scaling an activation row scales its output row (dynamic
+        per-row quantization must track magnitude)."""
+        x, _, wq, ws = _case(9, m=8)
+        x2 = x.at[3].multiply(100.0)
+        o1 = np.asarray(int8_dynamic_matmul(x, wq, ws))
+        o2 = np.asarray(int8_dynamic_matmul(x2, wq, ws))
+        np.testing.assert_allclose(o2[3], o1[3] * 100.0, rtol=2e-2,
+                                   atol=1e-2)
+
+
+class TestQuantizeWeight:
+    def test_roundtrip_error_bounded(self):
+        _, w, wq, ws = _case(5)
+        deq = np.asarray(wq, np.float32) * np.asarray(ws)[None, :]
+        err = np.abs(deq - np.asarray(w))
+        # symmetric int8: max error ≤ scale/2 per channel
+        assert (err <= np.asarray(ws)[None, :] * 0.5 + 1e-7).all()
+
+    def test_int8_range(self):
+        _, _, wq, _ = _case(6)
+        assert int(jnp.max(jnp.abs(wq.astype(jnp.int32)))) <= 127
+
+
+@hypothesis.given(
+    m=st.sampled_from([1, 8, 64]),
+    k=st.sampled_from([128, 256]),
+    n=st.sampled_from([128, 512]),
+    dynamic=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_hypothesis(m, k, n, dynamic, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    wq, ws = ref.quantize_weight(w)
+    bm = 1 if m == 1 else 8
+    if dynamic:
+        out = int8_dynamic_matmul(x, wq, ws, block_m=bm)
+        want = ref.int8_dynamic_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3)
+    else:
+        out = int8_weight_only_matmul(x, wq, ws, block_m=bm)
+        want = ref.int8_weight_only_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)

@@ -1,0 +1,132 @@
+"""L2 building-block semantics: norms, RoPE, linear modes, and the
+in-place stacked KV update (the §Perf L2 hot-path op)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+class TestNorms:
+    def test_rmsnorm_unit_scale(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 3, (4, 64)), jnp.float32)
+        y = L.rmsnorm(x, jnp.ones(64))
+        rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+    def test_layernorm_zero_mean_unit_var(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(5, 2, (4, 64)), jnp.float32)
+        y = L.layernorm(x, jnp.ones(64), jnp.zeros(64))
+        np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(jnp.var(y, -1), 1.0, atol=1e-2)
+
+
+class TestRope:
+    def test_rotation_preserves_norm(self):
+        cos, sin = L.rope_tables(128, 32)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(1, 2, 8, 32)), jnp.float32)
+        pos = jnp.arange(8, dtype=jnp.int32)[None]
+        y = L.apply_rope(x, pos, cos, sin)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+            atol=1e-4)
+
+    def test_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j (the RoPE point)."""
+        cos, sin = L.rope_tables(256, 32)
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+        def dot_at(i, j):
+            qi = L.apply_rope(q, jnp.array([[i]], jnp.int32), cos, sin)
+            kj = L.apply_rope(k, jnp.array([[j]], jnp.int32), cos, sin)
+            return float(jnp.sum(qi * kj))
+
+        assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-4
+        assert abs(dot_at(5, 3) - dot_at(5, 4)) > 1e-6
+
+    def test_position_zero_is_identity(self):
+        cos, sin = L.rope_tables(16, 32)
+        x = jnp.ones((1, 1, 1, 32))
+        y = L.apply_rope(x, jnp.zeros((1, 1), jnp.int32), cos, sin)
+        np.testing.assert_allclose(x, y, atol=1e-6)
+
+
+class TestStackedKvUpdate:
+    @hypothesis.given(
+        lidx=st.integers(0, 3),
+        b=st.integers(1, 3),
+        s_new=st.sampled_from([1, 4]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_per_layer_update(self, lidx, b, s_new, seed):
+        """The direct 5D write equals the reference extract→update→
+        reinsert formulation everywhere."""
+        rng = np.random.default_rng(seed)
+        L_, H, S, D = 4, 2, 32, 8
+        cache = jnp.asarray(rng.normal(size=(L_, b, H, S, D)), jnp.float32)
+        new = jnp.asarray(rng.normal(size=(b, H, s_new, D)), jnp.float32)
+        pos = jnp.asarray(rng.integers(0, S - s_new + 1, b), jnp.int32)
+        got = L.update_kv_cache_stacked(cache, new, pos, lidx)
+        ref_layer, _ = L.update_kv_cache(cache[lidx], cache[lidx], new, new,
+                                         pos)
+        want = cache.at[lidx].set(ref_layer)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=0)
+
+    def test_other_layers_untouched(self):
+        cache = jnp.zeros((4, 1, 2, 16, 8))
+        new = jnp.ones((1, 2, 1, 8))
+        out = L.update_kv_cache_stacked(cache, new,
+                                        jnp.array([3], jnp.int32), 2)
+        assert float(jnp.sum(jnp.abs(out[0]))) == 0.0
+        assert float(jnp.sum(jnp.abs(out[1]))) == 0.0
+        assert float(jnp.sum(jnp.abs(out[3]))) == 0.0
+        assert float(jnp.sum(out[2, 0, :, 3])) == 16.0
+
+
+class TestLinearModes:
+    @pytest.mark.parametrize("mode", ["int8_weight_only", "int8_dynamic"])
+    def test_kernel_and_ref_paths_agree(self, mode):
+        from compile.kernels.ref import quantize_weight
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+        wq, ws = quantize_weight(w)
+        a = L.linear(x, wq, mode=mode, w_scale=ws, use_kernel=True)
+        b = L.linear(x, wq, mode=mode, w_scale=ws, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError):
+            L.linear(jnp.zeros((2, 4)), jnp.zeros((4, 4)), mode="int4")
+
+
+class TestEarlyExitFriendlyInit:
+    def test_late_layers_downscaled(self):
+        from compile.configs import TINY_LLAMA
+        from compile.models import llama as M
+        p_friendly = M.init_params(TINY_LLAMA, 0, early_exit_friendly=True)
+        p_plain = M.init_params(TINY_LLAMA, 0, early_exit_friendly=False)
+        e = TINY_LLAMA.early_exit_layer
+        # early layers identical
+        np.testing.assert_array_equal(p_friendly["layers.0.wo"],
+                                      p_plain["layers.0.wo"])
+        # late layers scaled down
+        r = np.abs(p_friendly[f"layers.{e}.wo"]).mean() / \
+            np.abs(p_plain[f"layers.{e}.wo"]).mean()
+        assert r < 0.1

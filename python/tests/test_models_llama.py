@@ -1,0 +1,162 @@
+"""L2 decoder (Llama/Chameleon) semantics: prefill/decode equivalence,
+static-KV correctness, LayerSkip draft/verify consistency, quant parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import TINY_LLAMA
+from compile.models import llama as M
+
+CFG = TINY_LLAMA
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in M.init_params(CFG, seed=0).items()}
+
+
+@pytest.fixture(scope="module")
+def qparams(params):
+    q = M.quantize_params({k: np.asarray(v) for k, v in params.items()})
+    return {**params, **{k: jnp.asarray(v) for k, v in q.items()}}
+
+
+def _greedy_rollout(params, prompt, steps, attn="naive"):
+    """prefill + greedy decode loop — the canonical serving path."""
+    bucket = 32
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, :len(prompt)] = prompt
+    prefill = jax.jit(M.make_prefill(CFG, bucket, attn_impl=attn))
+    decode = jax.jit(M.make_decode(CFG, 1, attn_impl=attn))
+    logits, ck, cv = prefill(params, jnp.asarray(toks),
+                             jnp.array([len(prompt)], jnp.int32))
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.array([len(prompt)], jnp.int32)
+    for _ in range(steps):
+        out.append(int(tok[0]))
+        logits, ck, cv = decode(params, tok, pos, ck, cv)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+    return out, (ck, cv)
+
+
+class TestPrefillDecode:
+    def test_prefill_matches_stepwise_decode(self, params):
+        """Prefilling N tokens == decoding them one-by-one: the static-KV
+        incremental path must agree with the parallel path."""
+        prompt = [3, 100, 7, 250, 42]
+        bucket = 32
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        prefill = jax.jit(M.make_prefill(CFG, bucket))
+        decode = jax.jit(M.make_decode(CFG, 1))
+        plogits, _, _ = prefill(params, jnp.asarray(toks),
+                                jnp.array([len(prompt)], jnp.int32))
+        # stepwise: feed tokens one at a time through decode
+        L, H, S, Dh = CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim
+        ck = jnp.zeros((L, 1, H, S, Dh))
+        cv = jnp.zeros((L, 1, H, S, Dh))
+        for i, t in enumerate(prompt):
+            dlogits, ck, cv = decode(params, jnp.array([t], jnp.int32),
+                                     jnp.array([i], jnp.int32), ck, cv)
+        np.testing.assert_allclose(np.asarray(plogits), np.asarray(dlogits),
+                                   atol=1e-4)
+
+    def test_padding_is_inert(self, params):
+        """Changing tokens beyond prompt_len must not change the logits."""
+        bucket = 32
+        prefill = jax.jit(M.make_prefill(CFG, bucket))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :4] = [1, 2, 3, 4]
+        l1, _, _ = prefill(params, jnp.asarray(toks),
+                           jnp.array([4], jnp.int32))
+        toks2 = toks.copy()
+        toks2[0, 4:] = 499
+        l2, _, _ = prefill(params, jnp.asarray(toks2),
+                           jnp.array([4], jnp.int32))
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+    def test_flash_and_naive_agree_end_to_end(self, params):
+        o1, _ = _greedy_rollout(params, [5, 17, 300], 8, attn="naive")
+        o2, _ = _greedy_rollout(params, [5, 17, 300], 8, attn="flash")
+        assert o1 == o2
+
+    def test_batch_decode_matches_single(self, params):
+        """Slots of a B=4 decode batch behave exactly like B=1 decodes —
+        the batcher correctness invariant."""
+        L, H, S, Dh = CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim
+        dec1 = jax.jit(M.make_decode(CFG, 1))
+        dec4 = jax.jit(M.make_decode(CFG, 4))
+        rng = np.random.default_rng(0)
+        ck = jnp.asarray(rng.normal(size=(L, 4, H, S, Dh)), jnp.float32)
+        cv = jnp.asarray(rng.normal(size=(L, 4, H, S, Dh)), jnp.float32)
+        toks = jnp.array([9, 99, 199, 299], jnp.int32)
+        pos = jnp.array([3, 17, 0, 50], jnp.int32)
+        l4, _, _ = dec4(params, toks, pos, ck, cv)
+        for b in range(4):
+            l1, _, _ = dec1(params, toks[b:b+1], pos[b:b+1],
+                            ck[:, b:b+1], cv[:, b:b+1])
+            np.testing.assert_allclose(np.asarray(l4[b]), np.asarray(l1[0]),
+                                       atol=1e-4)
+
+
+class TestLayerSkip:
+    def test_verify_matches_sequential_decode(self, params):
+        """verify(K tokens) logits == K sequential decode steps' logits —
+        the property that makes draft acceptance exact."""
+        prompt = [10, 20, 30]
+        _, (ck, cv) = _greedy_rollout(params, prompt, 0)
+        K = CFG.verify_window
+        draft_toks = jnp.array([[7, 8, 9, 11]], jnp.int32)
+        verify = jax.jit(M.make_verify(CFG, K))
+        vl, _, _ = verify(params, draft_toks,
+                          jnp.array([len(prompt)], jnp.int32), ck, cv)
+        decode = jax.jit(M.make_decode(CFG, 1))
+        ck2, cv2 = ck, cv
+        for i in range(K):
+            dl, ck2, cv2 = decode(params, draft_toks[0, i:i+1],
+                                  jnp.array([len(prompt) + i], jnp.int32),
+                                  ck2, cv2)
+            np.testing.assert_allclose(np.asarray(vl[0, i]),
+                                       np.asarray(dl[0]), atol=1e-4)
+
+    def test_draft_runs_fewer_layers(self, params):
+        """Draft (early-exit) output differs from full decode (it skips
+        layers) but has the same shape; and it matches a manual forward
+        of the first E layers."""
+        L, H, S, Dh = CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim
+        ck = jnp.zeros((L, 1, H, S, Dh))
+        cv = jnp.zeros((L, 1, H, S, Dh))
+        draft = jax.jit(M.make_decode(CFG, 1, early_exit=True))
+        full = jax.jit(M.make_decode(CFG, 1))
+        t = jnp.array([42], jnp.int32)
+        p = jnp.array([0], jnp.int32)
+        dl, dck, _ = draft(params, t, p, ck, cv)
+        fl, _, _ = full(params, t, p, ck, cv)
+        assert dl.shape == fl.shape
+        assert not np.allclose(np.asarray(dl), np.asarray(fl), atol=1e-3)
+        # Draft must not touch layers >= E.
+        e = CFG.early_exit_layer
+        np.testing.assert_array_equal(np.asarray(dck[e:]),
+                                      np.asarray(ck[e:]))
+
+
+class TestQuantizedStages:
+    def test_int8_weight_only_close_to_f32(self, qparams):
+        dec = jax.jit(M.make_decode(CFG, 1))
+        dec8 = jax.jit(M.make_decode(CFG, 1,
+                                     linear_mode="int8_weight_only"))
+        L, H, S, Dh = CFG.n_layers, CFG.n_heads, CFG.max_seq, CFG.head_dim
+        ck = jnp.zeros((L, 1, H, S, Dh))
+        cv = jnp.zeros((L, 1, H, S, Dh))
+        t = jnp.array([7], jnp.int32)
+        p = jnp.array([0], jnp.int32)
+        lf, _, _ = dec(qparams, t, p, ck, cv)
+        l8, _, _ = dec8(qparams, t, p, ck, cv)
+        # top-1 prediction preserved under weight-only quantization
+        assert int(jnp.argmax(lf)) == int(jnp.argmax(l8))
+        rel = float(jnp.mean(jnp.abs(lf - l8)) / jnp.mean(jnp.abs(lf)))
+        assert rel < 0.05

@@ -1,0 +1,130 @@
+"""Seamless pipeline semantics: encoder masking, beam-cache reorder,
+cross-attention consistency, NAR module shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import TINY_SEAMLESS
+from compile.models import seamless as M
+
+CFG = TINY_SEAMLESS
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in M.init_params(CFG).items()}
+
+
+def _encode(params, t=64, valid=None):
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(1, t, CFG.enc_feat_dim)),
+                        jnp.float32)
+    flen = jnp.array([valid or t], jnp.int32)
+    enc = jax.jit(M.make_encoder(CFG, t))
+    return feats, flen, *enc(params, feats, flen)
+
+
+class TestEncoder:
+    def test_shapes(self, params):
+        _, _, enc_out, enc_len = _encode(params, 64)
+        assert enc_out.shape == (1, 64 // CFG.enc_subsample, CFG.d_model)
+        assert int(enc_len[0]) == 64 // CFG.enc_subsample
+
+    def test_padding_inert_on_valid_prefix(self, params):
+        """Garbage in padded frames must not leak into valid encoder
+        positions (attention + conv masking)."""
+        rng = np.random.default_rng(1)
+        t, valid = 64, 40
+        base = rng.normal(size=(1, t, CFG.enc_feat_dim)).astype(np.float32)
+        noisy = base.copy()
+        noisy[0, valid:] = 1000.0
+        enc = jax.jit(M.make_encoder(CFG, t))
+        flen = jnp.array([valid], jnp.int32)
+        o1, l1 = enc(params, jnp.asarray(base), flen)
+        o2, l2 = enc(params, jnp.asarray(noisy), flen)
+        vp = int(l1[0])
+        np.testing.assert_allclose(np.asarray(o1)[:, :vp],
+                                   np.asarray(o2)[:, :vp], atol=1e-3)
+
+
+class TestDecoder:
+    def test_beam1_vs_beamN_consistency(self, params):
+        """With identical caches per beam, every beam of dec_step_bN
+        produces the b1 logits."""
+        _, _, enc_out, enc_len = _encode(params, 64)
+        tp = enc_out.shape[1]
+        ckv = jax.jit(M.make_cross_kv(CFG, tp))
+        xk, xv = ckv({k: params[k] for k in params}, enc_out)
+        bm = CFG.beam_size
+        d1 = jax.jit(M.make_dec_step(CFG, 1, tp))
+        dn = jax.jit(M.make_dec_step(CFG, bm, tp))
+        s1 = jnp.zeros(M.self_kv_shape(CFG, 1))
+        sn = jnp.zeros(M.self_kv_shape(CFG, bm))
+        tok1 = jnp.array([5], jnp.int32)
+        tokn = jnp.full((bm,), 5, jnp.int32)
+        pos1 = jnp.array([0], jnp.int32)
+        posn = jnp.zeros((bm,), jnp.int32)
+        l1, _, _ = d1(params, tok1, pos1, s1, s1, xk, xv, enc_len)
+        ln, _, _ = dn(params, tokn, posn, sn, sn, xk, xv, enc_len)
+        for b in range(bm):
+            np.testing.assert_allclose(np.asarray(ln[b]), np.asarray(l1[0]),
+                                       atol=1e-4)
+
+    def test_kv_reorder_is_permutation(self, params):
+        """Reorder(idx) then reading beam b equals reading idx[b] before —
+        the beam-search invariant (paper Obs #4)."""
+        bm = CFG.beam_size
+        rng = np.random.default_rng(3)
+        shape = M.self_kv_shape(CFG, bm)
+        ck = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        cv = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        idx = jnp.array([2, 0, 3, 1], jnp.int32)
+        ro = jax.jit(M.make_kv_reorder(CFG, bm))
+        rk, rv = ro(ck, cv, idx)
+        for b in range(bm):
+            np.testing.assert_array_equal(np.asarray(rk[:, b]),
+                                          np.asarray(ck[:, int(idx[b])]))
+            np.testing.assert_array_equal(np.asarray(rv[:, b]),
+                                          np.asarray(cv[:, int(idx[b])]))
+
+    def test_enc_len_masks_cross_attention(self, params):
+        """Shortening enc_len changes logits (cross-attn actually reads
+        the mask); corrupting encoder output beyond enc_len does not."""
+        _, _, enc_out, enc_len = _encode(params, 64)
+        tp = enc_out.shape[1]
+        ckv = jax.jit(M.make_cross_kv(CFG, tp))
+        d1 = jax.jit(M.make_dec_step(CFG, 1, tp))
+        s1 = jnp.zeros(M.self_kv_shape(CFG, 1))
+        tok = jnp.array([5], jnp.int32)
+        pos = jnp.array([0], jnp.int32)
+        xk, xv = ckv(params, enc_out)
+        short = jnp.array([tp // 2], jnp.int32)
+        la, _, _ = d1(params, tok, pos, s1, s1, xk, xv, enc_len)
+        lb, _, _ = d1(params, tok, pos, s1, s1, xk, xv, short)
+        assert not np.allclose(np.asarray(la), np.asarray(lb), atol=1e-4)
+        # corrupt beyond short — must be inert
+        enc2 = enc_out.at[:, tp // 2:].set(99.0)
+        xk2, xv2 = ckv(params, enc2)
+        lc, _, _ = d1(params, tok, pos, s1, s1, xk2, xv2, short)
+        np.testing.assert_allclose(np.asarray(lb), np.asarray(lc), atol=1e-4)
+
+
+class TestNarModules:
+    def test_t2u_shapes_and_upsample(self, params):
+        t2u = jax.jit(M.make_t2u(CFG, 16))
+        toks = jnp.arange(16, dtype=jnp.int32)[None]
+        logits, ulen = t2u(params, toks, jnp.array([10], jnp.int32))
+        assert logits.shape == (1, 16 * CFG.t2u_upsample, CFG.unit_vocab)
+        assert int(ulen[0]) == 10 * CFG.t2u_upsample
+
+    def test_vocoder_output_range(self, params):
+        voc = jax.jit(M.make_vocoder(CFG, 64))
+        units = jnp.asarray(
+            np.random.default_rng(5).integers(0, CFG.unit_vocab, (1, 64)),
+            jnp.int32)
+        wav = voc(params, units)
+        r = CFG.voc_upsample ** CFG.voc_stages
+        assert wav.shape == (1, 64 * r)
+        assert float(jnp.max(jnp.abs(wav))) <= 1.0  # tanh-bounded

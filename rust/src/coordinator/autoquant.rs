@@ -1,0 +1,85 @@
+//! AutoQuant calibration (§4.2): measure the lowered quantization
+//! variants on representative inputs and pick the fastest — torchao
+//! AutoQuant's decision loop ported to the AOT-stage world.
+//!
+//! torchao decides per *layer shape*; in the tiny configs every decode
+//! layer shares one shape, so the decision granularity here is per
+//! (model, stage-kind): f32 vs int8 weight-only vs int8 dynamic decode
+//! executables are timed head-to-head and the winner becomes the
+//! serving default (DESIGN.md §Substitutions).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::tensor::{DType, Tensor};
+
+use super::opts::QuantMode;
+
+#[derive(Debug, Clone)]
+pub struct QuantTiming {
+    pub mode: QuantMode,
+    pub stage: String,
+    pub mean_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub timings: Vec<QuantTiming>,
+    pub chosen: QuantMode,
+}
+
+/// Time candidate decode variants (bs=1) and pick the fastest.
+pub fn calibrate_decode(engine: &Engine, iters: usize)
+                        -> Result<CalibrationReport> {
+    let candidates = [
+        (QuantMode::F32, "decode_b1"),
+        (QuantMode::Int8WeightOnly, "decode_b1_int8wo"),
+        (QuantMode::Int8Dynamic, "decode_b1_int8dyn"),
+    ];
+    let dims = super::decoder_loop::DecoderDims::from_engine(engine)?;
+    let kv_shape = dims.kv_shape(1);
+    let zero = Tensor::zeros(DType::F32, &kv_shape);
+    let t_tok = Tensor::from_i32(&[1], &[5]);
+    let t_pos = Tensor::from_i32(&[1], &[3]);
+
+    let mut timings = Vec::new();
+    for (mode, stage) in candidates {
+        if !engine.has_stage(stage) {
+            continue;
+        }
+        let h = engine.stage(stage)?;
+        let mut ck = engine.upload(&zero)?;
+        let mut cv = engine.upload(&zero)?;
+        // warmup
+        for _ in 0..2 {
+            let outs = engine.run(&h, &[Arg::Host(&t_tok), Arg::Host(&t_pos),
+                                        Arg::Dev(&ck), Arg::Dev(&cv)])?;
+            let mut it = outs.into_iter();
+            let _ = it.next();
+            ck = it.next().unwrap();
+            cv = it.next().unwrap();
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let outs = engine.run(&h, &[Arg::Host(&t_tok), Arg::Host(&t_pos),
+                                        Arg::Dev(&ck), Arg::Dev(&cv)])?;
+            let mut it = outs.into_iter();
+            let _ = it.next();
+            ck = it.next().unwrap();
+            cv = it.next().unwrap();
+        }
+        timings.push(QuantTiming {
+            mode,
+            stage: stage.to_string(),
+            mean_s: t0.elapsed().as_secs_f64() / iters.max(1) as f64,
+        });
+    }
+    let chosen = timings
+        .iter()
+        .min_by(|a, b| a.mean_s.partial_cmp(&b.mean_s).unwrap())
+        .map(|t| t.mode)
+        .unwrap_or(QuantMode::F32);
+    Ok(CalibrationReport { timings, chosen })
+}

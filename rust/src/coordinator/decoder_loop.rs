@@ -1,0 +1,289 @@
+//! Llama / Chameleon serving sessions over the PJRT engine.
+//!
+//! Graph-mode execution: one AOT executable per prefill bucket, one per
+//! decode step; KV caches stay device-resident and chain across steps
+//! (the CUDA-Graph discipline of §4.1.2). Contrastive decoding for
+//! Chameleon T-I runs the decode graph twice per step (§2.1.2) with
+//! separate conditional/unconditional caches.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::models::tokenizer::{self, TextTokenizer};
+use crate::runtime::engine::{Arg, Engine, StageHandle};
+use crate::runtime::tensor::Tensor;
+use crate::substrate::rng::Rng;
+
+use super::opts::{ExecMode, OptConfig};
+use super::request::SamplingParams;
+use super::sampling;
+
+/// Tiny-config dims read from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct DecoderDims {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub early_exit_layer: usize,
+    pub verify_window: usize,
+}
+
+impl DecoderDims {
+    pub fn from_engine(e: &Engine) -> Result<Self> {
+        let m = &e.manifest;
+        Ok(DecoderDims {
+            n_layers: m.cfg_usize("n_layers")?,
+            n_heads: m.cfg_usize("n_heads")?,
+            head_dim: m.cfg_usize("head_dim")?,
+            max_seq: m.cfg_usize("max_seq")?,
+            vocab: m.cfg_usize("vocab_size")?,
+            early_exit_layer: m.cfg_usize("early_exit_layer")?,
+            verify_window: m.cfg_usize("verify_window")?,
+        })
+    }
+
+    pub fn kv_shape(&self, batch: usize) -> Vec<usize> {
+        vec![self.n_layers, batch, self.n_heads, self.max_seq, self.head_dim]
+    }
+}
+
+/// Device-resident KV pair.
+pub struct KvBufs {
+    pub k: PjRtBuffer,
+    pub v: PjRtBuffer,
+}
+
+/// A single-request decoder session (bs = 1).
+pub struct DecoderSession<'e> {
+    pub engine: &'e Engine,
+    pub dims: DecoderDims,
+    pub opt: OptConfig,
+    prefill_buckets: Vec<usize>,
+    decode: StageHandle,
+}
+
+/// Result of a generation loop.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub decode_steps: usize,
+    pub ttft: f64,
+    pub e2e: f64,
+    /// LayerSkip stats (draft acceptance), if the lever was on.
+    pub accepted_drafts: usize,
+    pub draft_rounds: usize,
+}
+
+impl<'e> DecoderSession<'e> {
+    pub fn new(engine: &'e Engine, opt: OptConfig) -> Result<Self> {
+        let dims = DecoderDims::from_engine(engine)?;
+        let mut prefill_buckets: Vec<usize> = engine
+            .manifest
+            .stages_of_kind("prefill")
+            .iter()
+            .filter_map(|s| s.meta_usize("bucket"))
+            .collect();
+        prefill_buckets.sort();
+        prefill_buckets.dedup();
+        if prefill_buckets.is_empty() {
+            bail!("no prefill stages in manifest");
+        }
+        let decode = engine.stage(&Self::decode_stage_name(engine, 1, &opt)?)?;
+        Ok(DecoderSession { engine, dims, opt, prefill_buckets, decode })
+    }
+
+    /// Resolve the decode stage for a batch size + levers, falling back
+    /// to the baseline variant when a combination wasn't lowered.
+    pub fn decode_stage_name(engine: &Engine, batch: usize,
+                             opt: &OptConfig) -> Result<String> {
+        let want = format!("decode_b{batch}{}", opt.stage_suffix());
+        if engine.has_stage(&want) {
+            return Ok(want);
+        }
+        let base = format!("decode_b{batch}");
+        if engine.has_stage(&base) {
+            return Ok(base);
+        }
+        bail!("no decode stage for batch {batch}");
+    }
+
+    /// Pick the smallest prefill bucket ≥ len (falls back to largest).
+    pub fn bucket_for(&self, len: usize) -> usize {
+        *self
+            .prefill_buckets
+            .iter()
+            .find(|&&b| b >= len)
+            .unwrap_or(self.prefill_buckets.last().unwrap())
+    }
+
+    fn prefill_stage_name(&self, bucket: usize) -> String {
+        let want = format!("prefill_b{bucket}{}", self.opt.stage_suffix());
+        if self.engine.has_stage(&want) {
+            want
+        } else {
+            format!("prefill_b{bucket}")
+        }
+    }
+
+    /// Run a bucketed prefill; returns (logits, kv) with KV on device.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<(Vec<f32>, KvBufs)> {
+        let bucket = self.bucket_for(prompt.len());
+        let plen = prompt.len().min(bucket);
+        let mut toks = vec![0i32; bucket];
+        toks[..plen].copy_from_slice(&prompt[..plen]);
+        let stage = self.engine.stage(&self.prefill_stage_name(bucket))?;
+        let t_tokens = Tensor::from_i32(&[1, bucket], &toks);
+        let t_len = Tensor::from_i32(&[1], &[plen as i32]);
+        let outs = self.engine.run(
+            &stage,
+            &[Arg::Host(&t_tokens), Arg::Host(&t_len)],
+        )?;
+        let mut it = outs.into_iter();
+        let logits_buf = it.next().context("logits")?;
+        let k = it.next().context("ck")?;
+        let v = it.next().context("cv")?;
+        let logits = self.engine.download(&logits_buf)?.as_f32()?;
+        Ok((logits, KvBufs { k, v }))
+    }
+
+    /// One decode step (bs=1): feed token at `pos`, return next logits.
+    pub fn decode_step(&self, token: i32, pos: usize, kv: &mut KvBufs)
+                       -> Result<Vec<f32>> {
+        let t_tok = Tensor::from_i32(&[1], &[token]);
+        let t_pos = Tensor::from_i32(&[1], &[pos as i32]);
+        let outs = self.engine.run(
+            &self.decode,
+            &[Arg::Host(&t_tok), Arg::Host(&t_pos), Arg::Dev(&kv.k),
+              Arg::Dev(&kv.v)],
+        )?;
+        let mut it = outs.into_iter();
+        let logits_buf = it.next().context("logits")?;
+        kv.k = it.next().context("ck")?;
+        kv.v = it.next().context("cv")?;
+        self.engine.download(&logits_buf)?.as_f32()
+    }
+
+    /// Full greedy/sampled generation (graph mode, bs=1).
+    pub fn generate(&self, prompt: &[i32], max_new: usize,
+                    sp: &SamplingParams) -> Result<GenResult> {
+        if self.opt.exec == ExecMode::Eager {
+            return super::eager::generate_eager(
+                self.engine, &self.dims, prompt, max_new, sp);
+        }
+        if self.opt.layerskip {
+            return super::layerskip::generate_layerskip(
+                self.engine, &self.dims, prompt, max_new, sp);
+        }
+        let t0 = Instant::now();
+        let mut rng = Rng::new(sp.seed);
+        let (mut logits, mut kv) = self.prefill(prompt)?;
+        let ttft = t0.elapsed().as_secs_f64();
+        let mut pos = prompt.len();
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let tok = sampling::sample(&logits, sp, &mut rng);
+            out.push(tok);
+            if tok == tokenizer::EOS || pos + 1 >= self.dims.max_seq {
+                break;
+            }
+            logits = self.decode_step(tok, pos, &mut kv)?;
+            pos += 1;
+        }
+        Ok(GenResult {
+            prompt_tokens: prompt.len(),
+            decode_steps: out.len(),
+            tokens: out,
+            ttft,
+            e2e: t0.elapsed().as_secs_f64(),
+            accepted_drafts: 0,
+            draft_rounds: 0,
+        })
+    }
+
+    /// Chameleon T-I contrastive generation: two caches (conditional on
+    /// the prompt, unconditional on BOS), decode both per step, mix
+    /// logits with the guidance scale, restrict sampling to image
+    /// tokens. Produces exactly `n_image_tokens` tokens.
+    pub fn generate_image(&self, prompt: &[i32], n_image_tokens: usize,
+                          sp: &SamplingParams) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(sp.seed);
+        let (cond_logits, mut kv_c) = self.prefill(prompt)?;
+        let (uncond_logits, mut kv_u) =
+            self.prefill(&[tokenizer::BOS])?;
+        let ttft = t0.elapsed().as_secs_f64();
+        let mut pos_c = prompt.len();
+        let mut pos_u = 1usize;
+        let mut lc = cond_logits;
+        let mut lu = uncond_logits;
+        let mut out = Vec::with_capacity(n_image_tokens);
+        for _ in 0..n_image_tokens {
+            let mixed = sampling::contrastive_mix(&lc, &lu,
+                                                  self.opt.cfg_alpha);
+            let tok = sample_image_token(&mixed, sp, &mut rng);
+            out.push(tok);
+            if out.len() == n_image_tokens {
+                break;
+            }
+            // Two decodes per step — the paper's 2× decode cost for T-I.
+            lc = self.decode_step(tok, pos_c, &mut kv_c)?;
+            lu = self.decode_step(tok, pos_u, &mut kv_u)?;
+            pos_c += 1;
+            pos_u += 1;
+        }
+        Ok(GenResult {
+            prompt_tokens: prompt.len(),
+            decode_steps: out.len(),
+            tokens: out,
+            ttft,
+            e2e: t0.elapsed().as_secs_f64(),
+            accepted_drafts: 0,
+            draft_rounds: 0,
+        })
+    }
+}
+
+/// Restrict sampling to the image-token slice of the vocab.
+fn sample_image_token(logits: &[f32], sp: &SamplingParams,
+                      rng: &mut Rng) -> i32 {
+    let base = tokenizer::IMG_BASE as usize;
+    let slice = &logits[base..base + tokenizer::IMG_TOKENS];
+    base as i32 + sampling::sample(slice, sp, rng)
+}
+
+/// Tokenize request text for the decoder models.
+pub fn encode_prompt(text: &str) -> Vec<i32> {
+    let tk = TextTokenizer::new();
+    let mut ids = vec![tokenizer::BOS];
+    ids.extend(tk.encode(text));
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_token_sampling_stays_in_range() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0f32; tokenizer::VOCAB];
+        let sp = SamplingParams::default();
+        for _ in 0..100 {
+            let t = sample_image_token(&logits, &sp, &mut rng);
+            assert!(t >= tokenizer::IMG_BASE);
+            assert!(t < tokenizer::IMG_BASE + tokenizer::IMG_TOKENS as i32);
+        }
+    }
+
+    #[test]
+    fn encode_prompt_starts_with_bos() {
+        let ids = encode_prompt("hello");
+        assert_eq!(ids[0], tokenizer::BOS);
+        assert!(ids.len() > 1);
+    }
+}

@@ -1,0 +1,131 @@
+//! HSTU (gDLRM) inference — non-autoregressive (Obs #1): one forward
+//! pass scores the whole user history and produces ranking + retrieval
+//! outputs.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HstuAttn {
+    Naive,
+    /// Fused Pallas kernel (relative bias built in-register, §4.1.1).
+    Fused,
+}
+
+#[derive(Debug)]
+pub struct HstuResult {
+    /// Engagement-type argmax for the last `tail` valid positions
+    /// (ranking head).
+    pub engagement: Vec<i32>,
+    /// Top-k next items (retrieval head).
+    pub top_items: Vec<i32>,
+    pub e2e: f64,
+}
+
+pub struct HstuRunner<'e> {
+    pub engine: &'e Engine,
+    pub attn: HstuAttn,
+    pub action_vocab: usize,
+    pub item_vocab: usize,
+    buckets: Vec<usize>,
+    batches: Vec<usize>,
+}
+
+impl<'e> HstuRunner<'e> {
+    pub fn new(engine: &'e Engine, attn: HstuAttn) -> Result<Self> {
+        let mut buckets = vec![];
+        let mut batches = vec![];
+        for s in engine.manifest.stages_of_kind("forward") {
+            if let (Some(sq), Some(b)) =
+                (s.meta_usize("seq"), s.meta_usize("batch"))
+            {
+                buckets.push(sq);
+                batches.push(b);
+            }
+        }
+        buckets.sort();
+        buckets.dedup();
+        batches.sort();
+        batches.dedup();
+        Ok(HstuRunner {
+            engine,
+            attn,
+            action_vocab: engine.manifest.cfg_usize("action_vocab")?,
+            item_vocab: engine.manifest.cfg_usize("item_vocab")?,
+            buckets,
+            batches,
+        })
+    }
+
+    fn stage_name(&self, seq: usize, batch: usize) -> String {
+        let sfx = if self.attn == HstuAttn::Fused { "_fused" } else { "" };
+        format!("forward_s{seq}_b{batch}{sfx}")
+    }
+
+    /// Smallest lowered (seq, batch) covering the request.
+    pub fn pick_shape(&self, seq_len: usize, batch: usize)
+                      -> Result<(usize, usize)> {
+        for &s in &self.buckets {
+            for &b in &self.batches {
+                if s >= seq_len
+                    && b >= batch
+                    && self.engine.has_stage(&self.stage_name(s, b))
+                {
+                    return Ok((s, b));
+                }
+            }
+        }
+        // fall back to the largest available
+        let s = *self.buckets.last().context("no hstu buckets")?;
+        let b = *self.batches.last().context("no hstu batches")?;
+        Ok((s, b))
+    }
+
+    /// Run one batch of user histories. Each history is right-padded to
+    /// the bucket; `tail` engagement predictions are returned per user.
+    pub fn run_batch(&self, histories: &[Vec<i32>], tail: usize,
+                     top_k: usize) -> Result<Vec<HstuResult>> {
+        let t0 = Instant::now();
+        let maxlen = histories.iter().map(|h| h.len()).max().unwrap_or(1);
+        let (s, b) = self.pick_shape(maxlen, histories.len())?;
+        let mut ids = vec![0i32; b * s];
+        let mut lens = vec![1i32; b];
+        for (i, h) in histories.iter().enumerate() {
+            let n = h.len().min(s);
+            ids[i * s..i * s + n].copy_from_slice(&h[..n]);
+            lens[i] = n as i32;
+        }
+        let stage = self.engine.stage(&self.stage_name(s, b))?;
+        let t_ids = Tensor::from_i32(&[b, s], &ids);
+        let t_len = Tensor::from_i32(&[b], &lens);
+        let outs = self
+            .engine
+            .run(&stage, &[Arg::Host(&t_ids), Arg::Host(&t_len)])?;
+        let rank = self.engine.download(&outs[0])?.as_f32()?;
+        let retr = self.engine.download(&outs[1])?.as_f32()?;
+        let e2e = t0.elapsed().as_secs_f64();
+
+        let mut results = Vec::with_capacity(histories.len());
+        for (i, h) in histories.iter().enumerate() {
+            let n = h.len().min(s);
+            let a = self.action_vocab;
+            let mut engagement = Vec::with_capacity(tail.min(n));
+            for p in n.saturating_sub(tail)..n {
+                let row = &rank[(i * s + p) * a..(i * s + p + 1) * a];
+                engagement.push(super::sampling::greedy(row));
+            }
+            let iv = self.item_vocab;
+            let row = &retr[i * iv..(i + 1) * iv];
+            let mut idx: Vec<usize> = (0..iv).collect();
+            idx.sort_by(|&x, &y| row[y].partial_cmp(&row[x]).unwrap());
+            let top_items: Vec<i32> =
+                idx.into_iter().take(top_k).map(|x| x as i32).collect();
+            results.push(HstuResult { engagement, top_items, e2e });
+        }
+        Ok(results)
+    }
+}

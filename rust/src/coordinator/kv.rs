@@ -1,0 +1,236 @@
+//! Static KV-cache slot manager.
+//!
+//! The decode graph is compiled for a fixed batch B with a
+//! `[L, B, H, max_seq, Dh]` cache (paper §4.1.2: static shapes are what
+//! make CUDA-Graph-style AOT execution possible). This module tracks
+//! which batch slots are live, each slot's fill position, and the free
+//! list — the bookkeeping the scheduler uses for admission.
+
+use anyhow::{bail, Result};
+
+/// State of one batch slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    /// Occupied by request `id` with `pos` tokens already in the cache.
+    Live { request: u64, pos: usize },
+}
+
+/// Slot bookkeeping for one fixed-batch decode graph.
+#[derive(Debug, Clone)]
+pub struct KvSlots {
+    slots: Vec<SlotState>,
+    max_seq: usize,
+}
+
+impl KvSlots {
+    pub fn new(batch: usize, max_seq: usize) -> Self {
+        KvSlots { slots: vec![SlotState::Free; batch], max_seq }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.slots.iter().filter(|s| **s == SlotState::Free).count()
+    }
+    pub fn live_count(&self) -> usize {
+        self.slots.len() - self.free_count()
+    }
+
+    /// Claim a free slot for `request`, pre-filled with `pos` tokens.
+    pub fn alloc(&mut self, request: u64, pos: usize) -> Result<usize> {
+        if pos >= self.max_seq {
+            bail!("prompt {pos} tokens >= max_seq {}", self.max_seq);
+        }
+        if self.slots.iter().any(
+            |s| matches!(s, SlotState::Live { request: r, .. } if *r == request),
+        ) {
+            bail!("request {request} already has a slot");
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if *s == SlotState::Free {
+                *s = SlotState::Live { request, pos };
+                return Ok(i);
+            }
+        }
+        bail!("no free slot");
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        match self.slots.get(slot) {
+            Some(SlotState::Live { .. }) => {
+                self.slots[slot] = SlotState::Free;
+                Ok(())
+            }
+            Some(SlotState::Free) => bail!("slot {slot} already free"),
+            None => bail!("slot {slot} out of range"),
+        }
+    }
+
+    pub fn state(&self, slot: usize) -> SlotState {
+        self.slots[slot]
+    }
+
+    /// Position of a live slot.
+    pub fn pos(&self, slot: usize) -> Result<usize> {
+        match self.slots[slot] {
+            SlotState::Live { pos, .. } => Ok(pos),
+            SlotState::Free => bail!("slot {slot} is free"),
+        }
+    }
+
+    /// Advance a live slot by one token; errors at capacity.
+    pub fn advance(&mut self, slot: usize) -> Result<usize> {
+        match &mut self.slots[slot] {
+            SlotState::Live { pos, .. } => {
+                if *pos + 1 >= self.max_seq {
+                    bail!("slot {slot} hit max_seq {}", self.max_seq);
+                }
+                *pos += 1;
+                Ok(*pos)
+            }
+            SlotState::Free => bail!("slot {slot} is free"),
+        }
+    }
+
+    /// Rewind (LayerSkip rollback after partial acceptance).
+    pub fn rewind_to(&mut self, slot: usize, new_pos: usize) -> Result<()> {
+        match &mut self.slots[slot] {
+            SlotState::Live { pos, .. } => {
+                if new_pos > *pos {
+                    bail!("rewind forward ({new_pos} > {pos})");
+                }
+                *pos = new_pos;
+                Ok(())
+            }
+            SlotState::Free => bail!("slot {slot} is free"),
+        }
+    }
+
+    pub fn live_slots(&self) -> Vec<(usize, u64, usize)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                SlotState::Live { request, pos } => Some((i, *request, *pos)),
+                SlotState::Free => None,
+            })
+            .collect()
+    }
+
+    /// KV bytes held live (for the Table-3 capacity accounting).
+    pub fn live_kv_bytes(&self, bytes_per_token: usize) -> usize {
+        self.live_slots()
+            .iter()
+            .map(|(_, _, pos)| pos * bytes_per_token)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::prop_check;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut kv = KvSlots::new(2, 128);
+        let a = kv.alloc(10, 5).unwrap();
+        let b = kv.alloc(11, 7).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(kv.free_count(), 0);
+        assert!(kv.alloc(12, 1).is_err());
+        kv.release(a).unwrap();
+        assert_eq!(kv.free_count(), 1);
+        let c = kv.alloc(12, 1).unwrap();
+        assert_eq!(c, a); // lowest-index reuse
+    }
+
+    #[test]
+    fn advance_and_capacity() {
+        let mut kv = KvSlots::new(1, 4);
+        let s = kv.alloc(1, 1).unwrap();
+        assert_eq!(kv.advance(s).unwrap(), 2);
+        assert_eq!(kv.advance(s).unwrap(), 3);
+        assert!(kv.advance(s).is_err()); // 3+1 == max_seq
+    }
+
+    #[test]
+    fn rewind_only_backward() {
+        let mut kv = KvSlots::new(1, 16);
+        let s = kv.alloc(1, 8).unwrap();
+        kv.rewind_to(s, 4).unwrap();
+        assert_eq!(kv.pos(s).unwrap(), 4);
+        assert!(kv.rewind_to(s, 10).is_err());
+    }
+
+    #[test]
+    fn duplicate_request_rejected() {
+        let mut kv = KvSlots::new(2, 16);
+        kv.alloc(7, 0).unwrap();
+        assert!(kv.alloc(7, 0).is_err());
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut kv = KvSlots::new(1, 16);
+        let s = kv.alloc(1, 0).unwrap();
+        kv.release(s).unwrap();
+        assert!(kv.release(s).is_err());
+    }
+
+    /// Property: a random walk of alloc/advance/release never leaks slots
+    /// — free + live == batch, and live positions stay < max_seq.
+    #[test]
+    fn prop_no_slot_leaks() {
+        prop_check(
+            100,
+            42,
+            |r: &mut Rng| {
+                let n = r.usize(1, 60);
+                (0..n).map(|_| r.usize(0, 3)).collect::<Vec<usize>>()
+            },
+            |ops| {
+                let mut kv = KvSlots::new(4, 32);
+                let mut next_id = 0u64;
+                for &op in ops {
+                    match op {
+                        0 => {
+                            next_id += 1;
+                            let _ = kv.alloc(next_id, 1);
+                        }
+                        1 => {
+                            if let Some((s, _, _)) =
+                                kv.live_slots().first().copied()
+                            {
+                                let _ = kv.advance(s);
+                            }
+                        }
+                        _ => {
+                            if let Some((s, _, _)) =
+                                kv.live_slots().last().copied()
+                            {
+                                let _ = kv.release(s);
+                            }
+                        }
+                    }
+                    if kv.free_count() + kv.live_count() != kv.batch() {
+                        return Err("slot leak".into());
+                    }
+                    for (_, _, pos) in kv.live_slots() {
+                        if pos >= kv.max_seq() {
+                            return Err(format!("pos {pos} >= max_seq"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

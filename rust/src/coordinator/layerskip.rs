@@ -1,0 +1,163 @@
+//! LayerSkip self-speculative decoding (§4.3).
+//!
+//! Draft tokens are produced by the first E layers + the shared LM head
+//! (the `draft_b1` stage); a window of K tokens is then verified in one
+//! parallel pass through the full model (`verify_k{K}`), amortizing
+//! per-token weight loading exactly as in Elhoushi et al. Greedy
+//! longest-prefix acceptance; on partial acceptance the slot position is
+//! rewound (stale cache entries beyond the accepted prefix are
+//! overwritten by later writes, which is sound because attention masks
+//! beyond the fill position).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::models::tokenizer;
+use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::tensor::Tensor;
+use crate::substrate::rng::Rng;
+
+use super::decoder_loop::{DecoderDims, DecoderSession, GenResult, KvBufs};
+use super::opts::OptConfig;
+use super::request::SamplingParams;
+use super::sampling;
+
+/// Generate with the self-speculative loop (bs = 1, greedy acceptance).
+pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
+                          prompt: &[i32], max_new: usize,
+                          sp: &SamplingParams) -> Result<GenResult> {
+    let t0 = Instant::now();
+    let k_window = dims.verify_window;
+    let draft_stage = engine.stage("draft_b1")?;
+    let verify_stage = engine.stage(&format!("verify_k{k_window}"))?;
+    // Reuse the session prefills (baseline stages).
+    let session = DecoderSession::new(engine, OptConfig::baseline())?;
+    let mut rng = Rng::new(sp.seed);
+
+    let (logits, kv) = session.prefill(prompt)?;
+    let mut kv: KvBufs = kv;
+    let ttft = t0.elapsed().as_secs_f64();
+
+    let mut out: Vec<i32> = Vec::with_capacity(max_new);
+    let mut pos = prompt.len();
+    // `pending` = last sampled token not yet written into the cache.
+    let mut pending = sampling::sample(&logits, sp, &mut rng);
+    out.push(pending);
+
+    let mut accepted_total = 0usize;
+    let mut rounds = 0usize;
+
+    'outer: while out.len() < max_new && pending != tokenizer::EOS {
+        if pos + k_window + 1 >= dims.max_seq {
+            break;
+        }
+        rounds += 1;
+        // ---- draft phase: K-1 cheap tokens after `pending` ------------
+        let mut window = Vec::with_capacity(k_window);
+        window.push(pending);
+        let mut dkv_pos = pos;
+        for _ in 0..k_window - 1 {
+            let t_tok = Tensor::from_i32(&[1], &[*window.last().unwrap()]);
+            let t_pos = Tensor::from_i32(&[1], &[dkv_pos as i32]);
+            let outs = engine.run(
+                &draft_stage,
+                &[Arg::Host(&t_tok), Arg::Host(&t_pos), Arg::Dev(&kv.k),
+                  Arg::Dev(&kv.v)],
+            )?;
+            let mut it = outs.into_iter();
+            let logits_buf = it.next().context("draft logits")?;
+            kv.k = it.next().context("draft ck")?;
+            kv.v = it.next().context("draft cv")?;
+            let dl = engine.download(&logits_buf)?.as_f32()?;
+            // Drafts are greedy (standard for self-spec draft phase).
+            window.push(sampling::greedy(&dl));
+            dkv_pos += 1;
+        }
+        // ---- verify phase: all K tokens in one full-model pass --------
+        let t_toks = Tensor::from_i32(&[1, k_window], &window);
+        let t_start = Tensor::from_i32(&[1], &[pos as i32]);
+        let outs = engine.run(
+            &verify_stage,
+            &[Arg::Host(&t_toks), Arg::Host(&t_start), Arg::Dev(&kv.k),
+              Arg::Dev(&kv.v)],
+        )?;
+        let mut it = outs.into_iter();
+        let vlogits_buf = it.next().context("verify logits")?;
+        kv.k = it.next().context("verify ck")?;
+        kv.v = it.next().context("verify cv")?;
+        let vl = engine.download(&vlogits_buf)?.as_f32()?;
+        let vocab = dims.vocab;
+
+        // Longest prefix of drafts matching the full model (greedy).
+        // vl[j] is the full model's next-token dist after window[j].
+        let mut accepted = 0usize;
+        for j in 1..k_window {
+            let full_tok =
+                sampling::greedy(&vl[(j - 1) * vocab..j * vocab]);
+            if full_tok == window[j] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        accepted_total += accepted;
+        // Emit accepted drafts (window[1..=accepted]).
+        for &d in window.iter().skip(1).take(accepted) {
+            out.push(d);
+            if out.len() >= max_new || d == tokenizer::EOS {
+                pos += accepted + 1;
+                break 'outer;
+            }
+        }
+        // Bonus token from the verify logits at the last accepted slot.
+        let bonus =
+            sampling::greedy(&vl[accepted * vocab..(accepted + 1) * vocab]);
+        out.push(bonus);
+        // Cache now holds correct entries for window[0..=accepted] at
+        // pos..pos+accepted; rewind the logical position there.
+        pos += accepted + 1;
+        pending = bonus;
+    }
+
+    Ok(GenResult {
+        prompt_tokens: prompt.len(),
+        decode_steps: out.len(),
+        tokens: out,
+        ttft,
+        e2e: t0.elapsed().as_secs_f64(),
+        accepted_drafts: accepted_total,
+        draft_rounds: rounds,
+    })
+}
+
+/// Expected speedup of LayerSkip given acceptance rate `a`, draft cost
+/// ratio `c = E/L`, and window K — the analytical model used by the
+/// Fig-8 bench to cross-check measured numbers.
+///
+/// Per round: (K-1) drafts at cost c + 1 verify at cost ≈ K·(1/K
+/// amortized weight loading → ~1 full step for memory-bound decode),
+/// yielding `1 + a·(K-1)` tokens.
+pub fn expected_speedup(accept_rate: f64, draft_cost: f64,
+                        k_window: usize) -> f64 {
+    let k = k_window as f64;
+    let tokens_per_round = 1.0 + accept_rate * (k - 1.0);
+    let cost_per_round = (k - 1.0) * draft_cost + 1.0;
+    tokens_per_round / cost_per_round
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_model_sane() {
+        // Perfect acceptance, cheap drafts → large speedup.
+        assert!(expected_speedup(1.0, 0.25, 4) > 2.0);
+        // Zero acceptance with non-free drafts → slowdown (< 1).
+        assert!(expected_speedup(0.0, 0.5, 4) < 1.0);
+        // Paper's ≈1.58x regime: moderate acceptance, E/L ≈ 0.25.
+        let s = expected_speedup(0.7, 0.25, 4);
+        assert!(s > 1.2 && s < 2.2, "{s}");
+    }
+}

@@ -1,0 +1,35 @@
+//! L3 coordinator — the serving system (the paper's system contribution
+//! surface).
+//!
+//! * [`request`] — request/response/event types flowing through the stack.
+//! * [`sampling`] — greedy / top-k / top-p / temperature samplers.
+//! * [`kv`] — static KV-cache slot manager (CUDA-Graph-style fixed
+//!   buffers, §4.1.2).
+//! * [`batcher`] — continuous batcher: decode-batch occupancy + prefill
+//!   admission under a token budget.
+//! * [`opts`] — the optimization-lever configuration (SDPA / graph mode /
+//!   quant / LayerSkip), §4's knobs as a struct.
+//! * [`decoder_loop`] — Llama/Chameleon serving: bucketed prefill,
+//!   batched static-KV decode, contrastive decoding for T-I.
+//! * [`eager`] — per-operator dispatch baseline (the launch-overhead
+//!   regime of Obs #2).
+//! * [`layerskip`] — self-speculative decoding (draft E layers, verify K
+//!   tokens in parallel), §4.3.
+//! * [`seamless_pipe`] — the four-module Seamless pipeline with beam
+//!   search and KV reorder (Obs #4).
+//! * [`hstu_loop`] — non-autoregressive HSTU ranking/retrieval.
+//! * [`autoquant`] — per-layer-shape quantization calibration (§4.2).
+//! * [`server`] — multi-model router with per-model engine threads.
+
+pub mod autoquant;
+pub mod batcher;
+pub mod decoder_loop;
+pub mod eager;
+pub mod hstu_loop;
+pub mod kv;
+pub mod layerskip;
+pub mod opts;
+pub mod request;
+pub mod sampling;
+pub mod seamless_pipe;
+pub mod server;

@@ -1,0 +1,136 @@
+//! The optimization-lever configuration — §4's knobs as a struct.
+//!
+//! Every lever maps to a different set of AOT stages (or a different
+//! execution discipline), so flipping a knob changes which executables
+//! the decode loop dispatches:
+//!
+//! | paper lever                | knob            | effect |
+//! |----------------------------|-----------------|--------|
+//! | SDPA / FlashAttention      | `attn`          | `*_flash` stages (Pallas tiled kernel) |
+//! | torch.compile + CUDA Graph | `exec`          | `Graph` = one fused stage per step; `Eager` = per-op dispatch |
+//! | AutoQuant                  | `quant`         | `*_int8wo` / `*_int8dyn` stages |
+//! | LayerSkip                  | `layerskip`     | draft/verify self-speculative loop |
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnImpl {
+    /// Baseline: materialized softmax(QKᵀ)V.
+    Naive,
+    /// Flash-style tiled Pallas kernel (the SDPA lever).
+    Flash,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One AOT-compiled executable per step (torch.compile + CUDA Graph
+    /// regime: no per-op dispatch, static shapes).
+    Graph,
+    /// One dispatch per operator group (the launch-overhead baseline of
+    /// Obs #2).
+    Eager,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    F32,
+    Int8WeightOnly,
+    Int8Dynamic,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptConfig {
+    pub attn: AttnImpl,
+    pub exec: ExecMode,
+    pub quant: QuantMode,
+    pub layerskip: bool,
+    /// Contrastive-decoding guidance scale for Chameleon T-I.
+    pub cfg_alpha: f32,
+}
+
+impl Default for OptConfig {
+    fn default() -> Self {
+        OptConfig::baseline()
+    }
+}
+
+impl OptConfig {
+    /// Paper baseline: eager-ish naive attention, f32.
+    pub fn baseline() -> Self {
+        OptConfig {
+            attn: AttnImpl::Naive,
+            exec: ExecMode::Graph,
+            quant: QuantMode::F32,
+            layerskip: false,
+            cfg_alpha: 3.0,
+        }
+    }
+
+    /// The true unoptimized regime (per-op dispatch) for Obs #2 studies.
+    pub fn eager_baseline() -> Self {
+        OptConfig { exec: ExecMode::Eager, ..Self::baseline() }
+    }
+
+    /// +SDPA.
+    pub fn sdpa() -> Self {
+        OptConfig { attn: AttnImpl::Flash, ..Self::baseline() }
+    }
+
+    /// +SDPA +compile (graph) +AutoQuant — the paper's "Sys-Opt" point.
+    pub fn sys_opt() -> Self {
+        OptConfig {
+            attn: AttnImpl::Flash,
+            exec: ExecMode::Graph,
+            quant: QuantMode::Int8WeightOnly,
+            layerskip: false,
+            cfg_alpha: 3.0,
+        }
+    }
+
+    /// Everything incl. LayerSkip — the 3.88× cross-stack point.
+    pub fn all_levers() -> Self {
+        OptConfig { layerskip: true, ..Self::sys_opt() }
+    }
+
+    /// Stage-name suffix selecting the right AOT variant, e.g.
+    /// `"_flash_int8wo"`.
+    pub fn stage_suffix(&self) -> String {
+        let mut s = String::new();
+        if self.attn == AttnImpl::Flash {
+            s.push_str("_flash");
+        }
+        match self.quant {
+            QuantMode::F32 => {}
+            QuantMode::Int8WeightOnly => s.push_str("_int8wo"),
+            QuantMode::Int8Dynamic => s.push_str("_int8dyn"),
+        }
+        s
+    }
+}
+
+impl fmt::Display for OptConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "attn={:?} exec={:?} quant={:?} layerskip={}",
+            self.attn, self.exec, self.quant, self.layerskip
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(OptConfig::baseline().stage_suffix(), "");
+        assert_eq!(OptConfig::sdpa().stage_suffix(), "_flash");
+        assert_eq!(OptConfig::sys_opt().stage_suffix(), "_flash_int8wo");
+        let dyn8 = OptConfig {
+            quant: QuantMode::Int8Dynamic,
+            ..OptConfig::baseline()
+        };
+        assert_eq!(dyn8.stage_suffix(), "_int8dyn");
+    }
+}

@@ -1,0 +1,113 @@
+//! Request/response types flowing through the coordinator.
+
+use crate::models::TaskKind;
+
+/// Raw request input per modality.
+#[derive(Debug, Clone)]
+pub enum RequestInput {
+    /// Plain text (tokenized by the router).
+    Text(String),
+    /// Grayscale image (pixels in [0,1], h, w) — Chameleon tasks.
+    Image { pixels: Vec<f32>, h: usize, w: usize },
+    /// Image + question (IT-T).
+    ImageText { pixels: Vec<f32>, h: usize, w: usize, text: String },
+    /// Raw waveform (Seamless speech tasks).
+    Speech(Vec<f32>),
+    /// User interaction history (HSTU): item ids.
+    History(Vec<i32>),
+    /// Pre-tokenized ids (bench/testing path).
+    Tokens(Vec<i32>),
+}
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    pub top_p: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    /// Greedy overrides the stochastic knobs.
+    pub greedy: bool,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 1.0,
+            top_p: 0.9,
+            top_k: 0,
+            seed: 0,
+            greedy: false,
+        }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        SamplingParams { greedy: true, ..Default::default() }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: TaskKind,
+    pub input: RequestInput,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    pub fn text(id: u64, task: TaskKind, text: &str, max_new: usize) -> Self {
+        Request {
+            id,
+            task,
+            input: RequestInput::Text(text.to_string()),
+            max_new_tokens: max_new,
+            sampling: SamplingParams::greedy(),
+        }
+    }
+}
+
+/// Output payload per modality.
+#[derive(Debug, Clone)]
+pub enum ResponseOutput {
+    Text(String),
+    /// Decoded image thumbnail (grayscale [0,1], 8×8 for the tiny model).
+    Image(Vec<f32>),
+    /// Waveform samples.
+    Speech(Vec<f32>),
+    /// HSTU: (engagement-type logits argmax per position tail, top items).
+    Actions { engagement: Vec<i32>, top_items: Vec<i32> },
+}
+
+/// Completed response with serving metrics.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub task: TaskKind,
+    pub output: ResponseOutput,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub decode_steps: usize,
+    /// Time to first token (seconds).
+    pub ttft: f64,
+    /// End-to-end latency (seconds).
+    pub e2e: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let s = SamplingParams::default();
+        assert!(!s.greedy);
+        assert!(SamplingParams::greedy().greedy);
+        let r = Request::text(1, TaskKind::TextToText, "hi", 4);
+        assert_eq!(r.max_new_tokens, 4);
+        assert!(matches!(r.input, RequestInput::Text(_)));
+    }
+}

@@ -1,0 +1,182 @@
+//! Next-token samplers: greedy, temperature, top-k, top-p (the paper's
+//! "decoding strategy" taxonomy in Obs #4 — Llama/Chameleon use top-p;
+//! Seamless uses beam search, implemented in `seamless_pipe`).
+
+use crate::substrate::rng::Rng;
+
+use super::request::SamplingParams;
+
+/// argmax over logits.
+pub fn greedy(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Numerically-stable softmax (in place on a copy).
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z.max(1e-30)).collect()
+}
+
+/// Sample a token according to the params.
+pub fn sample(logits: &[f32], p: &SamplingParams, rng: &mut Rng) -> i32 {
+    if p.greedy || p.temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let scaled: Vec<f32> =
+        logits.iter().map(|&x| x / p.temperature).collect();
+    let mut probs = softmax(&scaled);
+
+    // top-k: zero everything beyond the k-th largest
+    if p.top_k > 0 && p.top_k < probs.len() {
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        for &i in &idx[p.top_k..] {
+            probs[i] = 0.0;
+        }
+    }
+    // top-p (nucleus): keep the smallest prefix of the sorted probs whose
+    // mass reaches top_p
+    if p.top_p > 0.0 && p.top_p < 1.0 {
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut mass = 0.0f32;
+        let mut cut = idx.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            mass += probs[i];
+            if mass >= p.top_p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        for &i in &idx[cut..] {
+            probs[i] = 0.0;
+        }
+    }
+    let z: f32 = probs.iter().sum();
+    if z <= 0.0 {
+        return greedy(logits);
+    }
+    let mut r = rng.f64() as f32 * z;
+    for (i, &q) in probs.iter().enumerate() {
+        r -= q;
+        if r <= 0.0 {
+            return i as i32;
+        }
+    }
+    (probs.len() - 1) as i32
+}
+
+/// Contrastive (classifier-free-guidance style) logit mix for Chameleon
+/// T-I (§2.1.2): conditioned logits are the "strong" model, unconditional
+/// the "weak"; alpha > 1 sharpens toward the conditional distribution.
+pub fn contrastive_mix(cond: &[f32], uncond: &[f32], alpha: f32) -> Vec<f32> {
+    cond.iter()
+        .zip(uncond)
+        .map(|(&c, &u)| u + alpha * (c - u))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::prop_check;
+
+    fn params(temp: f32, top_p: f32, top_k: usize) -> SamplingParams {
+        SamplingParams {
+            temperature: temp,
+            top_p,
+            top_k,
+            seed: 0,
+            greedy: false,
+        }
+    }
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(0);
+        let l = [0.0, 5.0, 1.0];
+        assert_eq!(sample(&l, &params(0.0, 0.9, 0), &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        // top_k = 1 must always return the argmax
+        let mut rng = Rng::new(1);
+        let l = [1.0, 4.0, 2.0, 0.5];
+        for _ in 0..50 {
+            assert_eq!(sample(&l, &params(1.0, 1.0, 1), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_nucleus_property() {
+        // With a sharply peaked distribution, tiny top_p keeps only the
+        // argmax.
+        let mut rng = Rng::new(2);
+        let l = [0.0, 10.0, 0.1, 0.2];
+        for _ in 0..50 {
+            assert_eq!(sample(&l, &params(1.0, 0.5, 0), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_covers_support_at_high_temp() {
+        let mut rng = Rng::new(3);
+        let l = [1.0, 1.0, 1.0, 1.0];
+        let mut seen = [false; 4];
+        for _ in 0..300 {
+            seen[sample(&l, &params(1.0, 1.0, 0), &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn contrastive_alpha_one_is_cond() {
+        let m = contrastive_mix(&[1.0, 2.0], &[0.5, 0.5], 1.0);
+        assert_eq!(m, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_sample_in_range() {
+        prop_check(
+            300,
+            7,
+            |r| {
+                let n = r.usize(1, 40);
+                (0..n).map(|_| r.usize(0, 1000)).collect::<Vec<_>>()
+            },
+            |xs| {
+                let logits: Vec<f32> =
+                    xs.iter().map(|&x| x as f32 / 100.0).collect();
+                let mut rng = Rng::new(9);
+                let p = params(0.8, 0.9, 3);
+                let t = sample(&logits, &p, &mut rng);
+                if (t as usize) < logits.len() {
+                    Ok(())
+                } else {
+                    Err(format!("token {t} out of range {}", logits.len()))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,503 @@
+//! Seamless four-module pipeline with beam search (paper §2.1.3, Obs #4).
+//!
+//! S-T / S-S: speech features → conformer encoder → cross-KV → AR text
+//! decoder with beam search → (speech tasks) NAR T2U → vocoder.
+//! T-T / T-S: text → text encoder → same tail.
+//!
+//! Beam-search KV reorder is the paper's Seamless bottleneck (Obs #4);
+//! both disciplines are implemented:
+//! * `ReorderMode::HostCopy` — the baseline `index_select`-style copy:
+//!   download the whole self-KV, gather on host, upload (new memory each
+//!   step, exactly the pattern the paper calls out).
+//! * `ReorderMode::Fused` — the `torch.compile`d fix: a device-side
+//!   gather stage, buffers swapped in place.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::models::tokenizer::{SpeechFeaturizer, TextTokenizer, BOS, EOS};
+use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::substrate::metrics::OpTimes;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderMode {
+    /// Baseline: host-side gather copy of the self-KV each step.
+    HostCopy,
+    /// Optimized: on-device gather stage (compile'd copy_).
+    Fused,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeamlessTask {
+    SpeechToText,
+    SpeechToSpeech,
+    TextToText,
+    TextToSpeech,
+}
+
+impl SeamlessTask {
+    pub fn speech_in(self) -> bool {
+        matches!(self, SeamlessTask::SpeechToText | SeamlessTask::SpeechToSpeech)
+    }
+    pub fn speech_out(self) -> bool {
+        matches!(self, SeamlessTask::SpeechToSpeech | SeamlessTask::TextToSpeech)
+    }
+}
+
+/// Pipeline configuration read from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct SeamlessDims {
+    pub d_model: usize,
+    pub dec_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_tgt: usize,
+    pub beam: usize,
+    pub text_vocab: usize,
+    pub enc_subsample: usize,
+    pub t2u_upsample: usize,
+    pub voc_rate: usize,
+}
+
+impl SeamlessDims {
+    pub fn from_engine(e: &Engine) -> Result<Self> {
+        let m = &e.manifest;
+        let voc_rate = {
+            let up = m.cfg_usize("voc_upsample")?;
+            let st = m.cfg_usize("voc_stages")?;
+            up.pow(st as u32)
+        };
+        Ok(SeamlessDims {
+            d_model: m.cfg_usize("d_model")?,
+            dec_layers: m.cfg_usize("dec_layers")?,
+            n_heads: m.cfg_usize("n_heads")?,
+            head_dim: m.cfg_usize("head_dim")?,
+            max_tgt: m.cfg_usize("max_tgt")?,
+            beam: m.cfg_usize("beam_size")?,
+            text_vocab: m.cfg_usize("text_vocab")?,
+            enc_subsample: m.cfg_usize("enc_subsample")?,
+            t2u_upsample: m.cfg_usize("t2u_upsample")?,
+            voc_rate,
+        })
+    }
+
+    pub fn self_kv_shape(&self, beams: usize) -> Vec<usize> {
+        vec![self.dec_layers, beams, self.n_heads, self.max_tgt,
+             self.head_dim]
+    }
+}
+
+/// Result of a pipeline run with per-module timings (Fig 7's ladder).
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub text_tokens: Vec<i32>,
+    pub text: String,
+    pub units: Vec<i32>,
+    pub waveform: Vec<f32>,
+    pub decode_steps: usize,
+    pub times: OpTimes,
+    pub e2e: f64,
+}
+
+pub struct SeamlessPipeline<'e> {
+    pub engine: &'e Engine,
+    pub dims: SeamlessDims,
+    pub reorder: ReorderMode,
+    /// Beam length-penalty exponent (GNMT-style).
+    pub len_penalty: f32,
+}
+
+impl<'e> SeamlessPipeline<'e> {
+    pub fn new(engine: &'e Engine, reorder: ReorderMode) -> Result<Self> {
+        let dims = SeamlessDims::from_engine(engine)?;
+        Ok(SeamlessPipeline { engine, dims, reorder, len_penalty: 1.0 })
+    }
+
+    /// Encoder bucket (speech frames) for an input of `n` frames.
+    fn enc_bucket(&self, frames: usize) -> Result<usize> {
+        let mut buckets: Vec<usize> = self
+            .engine
+            .manifest
+            .stages_of_kind("encoder")
+            .iter()
+            .filter_map(|s| s.meta_usize("bucket"))
+            .collect();
+        buckets.sort();
+        buckets
+            .iter()
+            .find(|&&b| b >= frames)
+            .or(buckets.last())
+            .copied()
+            .context("no encoder buckets")
+    }
+
+    /// Run the full pipeline on a speech waveform or text input.
+    pub fn run(&self, task: SeamlessTask, speech: Option<&[f32]>,
+               text: Option<&str>, max_text: usize) -> Result<PipelineResult> {
+        let t0 = Instant::now();
+        let mut times = OpTimes::new();
+
+        // ---- encoder ----------------------------------------------------
+        let (enc_out, enc_len_buf, src_len) = if task.speech_in() {
+            let wav = speech.context("speech input required")?;
+            let sf = SpeechFeaturizer::default();
+            let frames = (wav.len() / sf.frame).max(1);
+            let bucket = self.enc_bucket(frames)?;
+            let (feats, n) = sf.featurize(wav, bucket);
+            let t = Instant::now();
+            let stage = self.engine.stage(&format!("encoder_t{bucket}"))?;
+            let t_len = Tensor::from_i32(&[1], &[n as i32]);
+            let outs = self
+                .engine
+                .run(&stage, &[Arg::Host(&feats), Arg::Host(&t_len)])?;
+            times.add("SpeechEncoder", t.elapsed().as_secs_f64());
+            let mut it = outs.into_iter();
+            (
+                it.next().context("enc_out")?,
+                it.next().context("enc_len")?,
+                bucket / self.dims.enc_subsample,
+            )
+        } else {
+            let txt = text.context("text input required")?;
+            let tk = TextTokenizer::new();
+            let ids = tk.encode(txt);
+            let mut buckets: Vec<usize> = self
+                .engine
+                .manifest
+                .stages_of_kind("text_encoder")
+                .iter()
+                .filter_map(|s| s.meta_usize("bucket"))
+                .collect();
+            buckets.sort();
+            let bucket = *buckets
+                .iter()
+                .find(|&&b| b >= ids.len())
+                .or(buckets.last())
+                .context("no text_encoder buckets")?;
+            let n = ids.len().min(bucket);
+            let mut toks = vec![0i32; bucket];
+            toks[..n].copy_from_slice(&ids[..n]);
+            let t = Instant::now();
+            let stage =
+                self.engine.stage(&format!("text_encoder_t{bucket}"))?;
+            let t_toks = Tensor::from_i32(&[1, bucket], &toks);
+            let t_len = Tensor::from_i32(&[1], &[n as i32]);
+            let outs = self
+                .engine
+                .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])?;
+            times.add("TextEncoder", t.elapsed().as_secs_f64());
+            let mut it = outs.into_iter();
+            (
+                it.next().context("enc_out")?,
+                it.next().context("enc_len")?,
+                bucket,
+            )
+        };
+
+        // ---- cross-KV (once per request) ---------------------------------
+        let t = Instant::now();
+        let ckv_stage = self.engine.stage(&format!("cross_kv_s{src_len}"))?;
+        let outs = self.engine.run(&ckv_stage, &[Arg::Dev(&enc_out)])?;
+        let mut it = outs.into_iter();
+        let cross_k = it.next().context("cross_k")?;
+        let cross_v = it.next().context("cross_v")?;
+        times.add("CrossKV", t.elapsed().as_secs_f64());
+
+        // ---- beam-search text decoding ------------------------------------
+        let (text_tokens, steps) = self.beam_decode(
+            src_len, &cross_k, &cross_v, &enc_len_buf, max_text, &mut times,
+        )?;
+        let tk = TextTokenizer::new();
+        let text_out = tk.decode(&text_tokens);
+
+        // ---- speech tail ---------------------------------------------------
+        let (units, waveform) = if task.speech_out() {
+            let units = self.t2u(&text_tokens, &mut times)?;
+            let wav = self.vocode(&units, &mut times)?;
+            (units, wav)
+        } else {
+            (vec![], vec![])
+        };
+
+        Ok(PipelineResult {
+            text_tokens,
+            text: text_out,
+            units,
+            waveform,
+            decode_steps: steps,
+            times,
+            e2e: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Beam search over the AR text decoder.
+    fn beam_decode(&self, src_len: usize, cross_k: &PjRtBuffer,
+                   cross_v: &PjRtBuffer, enc_len: &PjRtBuffer,
+                   max_text: usize, times: &mut OpTimes)
+                   -> Result<(Vec<i32>, usize)> {
+        let bm = self.dims.beam;
+        let dec_stage = self
+            .engine
+            .stage(&format!("dec_step_b{bm}_s{src_len}"))?;
+        let reorder_stage = self.engine.stage(&format!("kv_reorder_b{bm}"))?;
+
+        let kv_shape = self.dims.self_kv_shape(bm);
+        let zero = Tensor::zeros(DType::F32, &kv_shape);
+        let mut ck = self.engine.upload(&zero)?;
+        let mut cv = self.engine.upload(&zero)?;
+
+        // Beam state on host.
+        let mut tokens = vec![BOS; bm];
+        let mut seqs: Vec<Vec<i32>> = vec![vec![]; bm];
+        let mut scores = vec![f32::NEG_INFINITY; bm];
+        scores[0] = 0.0; // only beam 0 live initially
+        let mut finished: Vec<(Vec<i32>, f32)> = Vec::new();
+        let mut steps = 0usize;
+
+        for pos in 0..max_text.min(self.dims.max_tgt - 1) {
+            // one batched decode step over the beams
+            let t = Instant::now();
+            let t_toks = Tensor::from_i32(&[bm], &tokens);
+            let t_pos = Tensor::from_i32(&[bm], &vec![pos as i32; bm]);
+            let outs = self.engine.run(
+                &dec_stage,
+                &[Arg::Host(&t_toks), Arg::Host(&t_pos), Arg::Dev(&ck),
+                  Arg::Dev(&cv), Arg::Dev(cross_k), Arg::Dev(cross_v),
+                  Arg::Dev(enc_len)],
+            )?;
+            let mut it = outs.into_iter();
+            let logits_buf = it.next().context("logits")?;
+            ck = it.next().context("self_ck")?;
+            cv = it.next().context("self_cv")?;
+            times.add("TextDecoder", t.elapsed().as_secs_f64());
+            steps += 1;
+
+            let logits = self.engine.download(&logits_buf)?.as_f32()?;
+            let v = self.dims.text_vocab;
+
+            // expand: per live beam, top candidates by logprob
+            let mut cands: Vec<(f32, usize, i32)> = Vec::new();
+            for b in 0..bm {
+                if scores[b] == f32::NEG_INFINITY {
+                    continue;
+                }
+                let lp = log_softmax(&logits[b * v..(b + 1) * v]);
+                for (tok, &l) in top_n(&lp, bm + 1) {
+                    cands.push((scores[b] + l, b, tok as i32));
+                }
+            }
+            cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+            let mut new_scores = vec![f32::NEG_INFINITY; bm];
+            let mut new_tokens = vec![EOS; bm];
+            let mut beam_idx = vec![0i32; bm];
+            let mut new_seqs: Vec<Vec<i32>> = vec![vec![]; bm];
+            let mut filled = 0usize;
+            for (score, src, tok) in cands {
+                if filled == bm {
+                    break;
+                }
+                if tok == EOS {
+                    let seq = seqs[src].clone();
+                    let norm = score
+                        / ((seq.len() + 1) as f32).powf(self.len_penalty);
+                    finished.push((seq, norm));
+                    continue;
+                }
+                new_scores[filled] = score;
+                new_tokens[filled] = tok;
+                beam_idx[filled] = src as i32;
+                let mut s = seqs[src].clone();
+                s.push(tok);
+                new_seqs[filled] = s;
+                filled += 1;
+            }
+            if filled == 0 {
+                break; // all beams finished
+            }
+
+            // ---- KV reorder (the Obs #4 operation) ------------------
+            let t = Instant::now();
+            match self.reorder {
+                ReorderMode::Fused => {
+                    let t_idx = Tensor::from_i32(&[bm], &beam_idx);
+                    let outs = self.engine.run(
+                        &reorder_stage,
+                        &[Arg::Dev(&ck), Arg::Dev(&cv), Arg::Host(&t_idx)],
+                    )?;
+                    let mut it = outs.into_iter();
+                    ck = it.next().context("ck")?;
+                    cv = it.next().context("cv")?;
+                }
+                ReorderMode::HostCopy => {
+                    // Baseline: full round-trip + host gather — the
+                    // `index_select` allocation pattern.
+                    let hk = self.engine.download(&ck)?;
+                    let hv = self.engine.download(&cv)?;
+                    let gk = gather_beams(&hk, &beam_idx)?;
+                    let gv = gather_beams(&hv, &beam_idx)?;
+                    ck = self.engine.upload(&gk)?;
+                    cv = self.engine.upload(&gv)?;
+                }
+            }
+            times.add("KV_Cache_Reorder", t.elapsed().as_secs_f64());
+
+            scores = new_scores;
+            tokens = new_tokens;
+            seqs = new_seqs;
+        }
+
+        // pick best finished (or best live) sequence
+        for b in 0..bm {
+            if scores[b] > f32::NEG_INFINITY {
+                let norm = scores[b]
+                    / (seqs[b].len().max(1) as f32).powf(self.len_penalty);
+                finished.push((seqs[b].clone(), norm));
+            }
+        }
+        finished.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let best = finished.into_iter().next().map(|(s, _)| s)
+            .unwrap_or_default();
+        Ok((best, steps))
+    }
+
+    /// NAR text-to-unit.
+    fn t2u(&self, text_tokens: &[i32], times: &mut OpTimes)
+           -> Result<Vec<i32>> {
+        let mut buckets: Vec<usize> = self
+            .engine
+            .manifest
+            .stages_of_kind("t2u")
+            .iter()
+            .filter_map(|s| s.meta_usize("bucket"))
+            .collect();
+        buckets.sort();
+        if buckets.is_empty() {
+            bail!("no t2u stages");
+        }
+        let n = text_tokens.len().max(1);
+        let bucket = *buckets.iter().find(|&&b| b >= n)
+            .unwrap_or(buckets.last().unwrap());
+        let n = n.min(bucket);
+        let mut toks = vec![0i32; bucket];
+        toks[..n].copy_from_slice(&text_tokens[..n]);
+        let t = Instant::now();
+        let stage = self.engine.stage(&format!("t2u_t{bucket}"))?;
+        let t_toks = Tensor::from_i32(&[1, bucket], &toks);
+        let t_len = Tensor::from_i32(&[1], &[n as i32]);
+        let outs = self
+            .engine
+            .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])?;
+        let mut it = outs.into_iter();
+        let logits = self.engine.download(&it.next().context("t2u")?)?;
+        times.add("T2U", t.elapsed().as_secs_f64());
+        let l = logits.as_f32()?;
+        let uv = self.engine.manifest.cfg_usize("unit_vocab")?;
+        let n_units = n * self.dims.t2u_upsample;
+        let mut units = Vec::with_capacity(n_units);
+        for u in 0..n_units {
+            units.push(crate::coordinator::sampling::greedy(
+                &l[u * uv..(u + 1) * uv]));
+        }
+        Ok(units)
+    }
+
+    /// HiFi-GAN-style vocoder.
+    fn vocode(&self, units: &[i32], times: &mut OpTimes) -> Result<Vec<f32>> {
+        let mut buckets: Vec<usize> = self
+            .engine
+            .manifest
+            .stages_of_kind("vocoder")
+            .iter()
+            .filter_map(|s| s.meta_usize("bucket"))
+            .collect();
+        buckets.sort();
+        if buckets.is_empty() {
+            bail!("no vocoder stages");
+        }
+        let n = units.len().max(1);
+        let bucket = *buckets.iter().find(|&&b| b >= n)
+            .unwrap_or(buckets.last().unwrap());
+        let n = n.min(bucket);
+        let mut u = vec![0i32; bucket];
+        u[..n].copy_from_slice(&units[..n]);
+        let t = Instant::now();
+        let stage = self.engine.stage(&format!("vocoder_u{bucket}"))?;
+        let t_units = Tensor::from_i32(&[1, bucket], &u);
+        let outs = self.engine.run(&stage, &[Arg::Host(&t_units)])?;
+        let wav = self.engine.download(&outs[0])?.as_f32()?;
+        times.add("Vocoder", t.elapsed().as_secs_f64());
+        Ok(wav[..n * self.dims.voc_rate].to_vec())
+    }
+}
+
+fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let z: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
+    let lz = z.ln() + m;
+    logits.iter().map(|&x| x - lz).collect()
+}
+
+/// Top-n (index, value) pairs by value, descending.
+fn top_n(xs: &[f32], n: usize) -> Vec<(usize, &f32)> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.into_iter().take(n).map(|i| (i, &xs[i])).collect()
+}
+
+/// Host-side beam gather of a [L, B, H, S, Dh] tensor along axis 1.
+fn gather_beams(t: &Tensor, beam_idx: &[i32]) -> Result<Tensor> {
+    let l = t.shape[0];
+    let b = t.shape[1];
+    let inner: usize = t.shape[2..].iter().product();
+    let row = inner * 4; // f32 bytes per (l, b)
+    let mut out = vec![0u8; t.data.len()];
+    for li in 0..l {
+        for (bi, &src) in beam_idx.iter().enumerate() {
+            let s = (li * b + src as usize) * row;
+            let d = (li * b + bi) * row;
+            out[d..d + row].copy_from_slice(&t.data[s..s + row]);
+        }
+    }
+    Tensor::new(t.dtype, t.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let z: f32 = lp.iter().map(|x| x.exp()).sum();
+        assert!((z - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn top_n_ordering() {
+        let xs = [0.1f32, 5.0, 3.0, 4.0];
+        let t = top_n(&xs, 2);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t[1].0, 3);
+    }
+
+    #[test]
+    fn gather_beams_permutes() {
+        // L=1, B=2, inner=2
+        let t = Tensor::from_f32(&[1, 2, 2], &[1., 2., 3., 4.]);
+        let g = gather_beams(&t, &[1, 0]).unwrap();
+        assert_eq!(g.as_f32().unwrap(), vec![3., 4., 1., 2.]);
+    }
+
+    #[test]
+    fn task_modality_flags() {
+        assert!(SeamlessTask::SpeechToSpeech.speech_in());
+        assert!(SeamlessTask::SpeechToSpeech.speech_out());
+        assert!(!SeamlessTask::TextToText.speech_out());
+        assert!(SeamlessTask::TextToSpeech.speech_out());
+        assert!(!SeamlessTask::TextToSpeech.speech_in());
+    }
+}

@@ -1,0 +1,480 @@
+//! Multi-model router + per-model engine workers.
+//!
+//! `Router` owns one worker thread per model family. Each worker builds
+//! its own PJRT `Engine` (engines hold raw PJRT handles and are
+//! deliberately thread-local) and serves requests from an mpsc queue:
+//!
+//! * **Llama / Chameleon text tasks** — continuous batching: free batch
+//!   slots are filled by bucketed prefills (`kv_pack` inserts the fresh
+//!   KV into the batched cache), then one batched decode step per tick
+//!   serves all live slots (vLLM-style, over the static-batch graph).
+//! * **Chameleon T-I** — bs=1 contrastive decoding (two decodes/step).
+//! * **Seamless** — the four-module pipeline with beam search.
+//! * **HSTU** — non-AR batch forward.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::models::tokenizer::{self, ImageTokenizer, TextTokenizer};
+use crate::models::{ModelKind, TaskKind};
+use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::substrate::metrics::ServeStats;
+use crate::substrate::rng::Rng;
+
+use super::batcher::{Batcher, QueuedRequest};
+use super::decoder_loop::{encode_prompt, DecoderSession};
+use super::hstu_loop::{HstuAttn, HstuRunner};
+use super::kv::KvSlots;
+use super::opts::{ExecMode, OptConfig};
+use super::request::{Request, RequestInput, Response, ResponseOutput};
+use super::sampling;
+use super::seamless_pipe::{ReorderMode, SeamlessPipeline, SeamlessTask};
+
+pub struct WorkItem {
+    pub request: Request,
+    pub respond: Sender<Result<Response>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub models: Vec<ModelKind>,
+    pub opt: OptConfig,
+    pub reorder: ReorderMode,
+    /// Decode batch for the continuous batcher (must match a lowered
+    /// `decode_b{N}` stage; 1 disables batching).
+    pub batch: usize,
+    /// Prefill token budget per tick (0 = unlimited).
+    pub prefill_budget: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            models: vec![ModelKind::Llama],
+            opt: OptConfig::baseline(),
+            reorder: ReorderMode::Fused,
+            batch: 4,
+            prefill_budget: 0,
+        }
+    }
+}
+
+/// The multi-model front door.
+pub struct Router {
+    senders: HashMap<ModelKind, Sender<WorkItem>>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn start(artifacts: &std::path::Path, cfg: RouterConfig) -> Self {
+        let mut senders = HashMap::new();
+        let mut handles = Vec::new();
+        for model in cfg.models.clone() {
+            let (tx, rx) = channel::<WorkItem>();
+            senders.insert(model, tx);
+            let dir = artifacts.join(model.dir_name());
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) = worker_main(model, &dir, cfg, rx) {
+                    eprintln!("[mmserve] {model:?} worker exited: {e:#}");
+                }
+            }));
+        }
+        Router { senders, handles, next_id: AtomicU64::new(1) }
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
+        let model = request.task.model();
+        let tx = self
+            .senders
+            .get(&model)
+            .with_context(|| format!("model {model:?} not serving"))?;
+        let (rtx, rrx) = channel();
+        tx.send(WorkItem { request, respond: rtx })
+            .map_err(|_| anyhow!("worker for {model:?} is gone"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        let rx = self.submit(request)?;
+        rx.recv().context("worker dropped response")?
+    }
+
+    /// Drop queues and join workers.
+    pub fn shutdown(mut self) {
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ==========================================================================
+// Workers
+// ==========================================================================
+
+fn worker_main(model: ModelKind, dir: &std::path::Path, cfg: RouterConfig,
+               rx: Receiver<WorkItem>) -> Result<()> {
+    let engine = Engine::load(dir)
+        .with_context(|| format!("load engine {}", dir.display()))?;
+    match model {
+        ModelKind::Llama | ModelKind::Chameleon => {
+            decoder_worker(&engine, cfg, rx)
+        }
+        ModelKind::Seamless => seamless_worker(&engine, cfg, rx),
+        ModelKind::Hstu => hstu_worker(&engine, rx),
+    }
+}
+
+// ---- Llama / Chameleon ----------------------------------------------------
+
+/// Per-slot in-flight generation state.
+struct SlotJob {
+    item: WorkItem,
+    prompt_len: usize,
+    tokens: Vec<i32>,
+    rng: Rng,
+    started: Instant,
+    ttft: f64,
+}
+
+fn decoder_worker(engine: &Engine, cfg: RouterConfig,
+                  rx: Receiver<WorkItem>) -> Result<()> {
+    let session = DecoderSession::new(engine, cfg.opt)?;
+    let dims = session.dims;
+    let batch = if cfg.opt.exec == ExecMode::Eager || cfg.opt.layerskip {
+        1 // eager / layerskip paths are bs=1 regimes (paper Fig 8)
+    } else {
+        cfg.batch
+    };
+    let use_batched = batch > 1
+        && engine.has_stage(&format!("kv_pack_b{batch}"))
+        && DecoderSession::decode_stage_name(engine, batch, &cfg.opt).is_ok();
+
+    if !use_batched {
+        // Sequential (bs=1) serving loop.
+        while let Ok(item) = rx.recv() {
+            let resp = serve_one_decoder(&session, &item.request);
+            let _ = item.respond.send(resp);
+        }
+        return Ok(());
+    }
+
+    // ---- continuous batching loop ------------------------------------
+    let decode_name =
+        DecoderSession::decode_stage_name(engine, batch, &cfg.opt)?;
+    let decode = engine.stage(&decode_name)?;
+    let kv_pack = engine.stage(&format!("kv_pack_b{batch}"))?;
+    let kv_shape = dims.kv_shape(batch);
+    let zero = Tensor::zeros(DType::F32, &kv_shape);
+    let mut ck: PjRtBuffer = engine.upload(&zero)?;
+    let mut cv: PjRtBuffer = engine.upload(&zero)?;
+    let mut slots = KvSlots::new(batch, dims.max_seq);
+    let mut jobs: Vec<Option<SlotJob>> = (0..batch).map(|_| None).collect();
+    let mut batcher = Batcher::new(cfg.prefill_budget);
+    let mut staging: HashMap<u64, WorkItem> = HashMap::new();
+    let mut closed = false;
+
+    loop {
+        // Drain the queue without blocking while work is live.
+        loop {
+            match rx.try_recv() {
+                Ok(item) => {
+                    // Non-batchable tasks (T-I contrastive) run inline.
+                    if item.request.task == TaskKind::TextToImage {
+                        let resp = serve_one_decoder(&session, &item.request);
+                        let _ = item.respond.send(resp);
+                        continue;
+                    }
+                    let prompt = tokenize_decoder_input(&item.request)?;
+                    batcher.push(QueuedRequest {
+                        id: item.request.id,
+                        prompt_len: prompt.len(),
+                        max_new_tokens: item.request.max_new_tokens,
+                    });
+                    staging.insert(item.request.id, item);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if closed && slots.live_count() == 0 && batcher.pending() == 0 {
+            return Ok(());
+        }
+        if slots.live_count() == 0 && batcher.pending() == 0 {
+            // Idle: block for the next request.
+            match rx.recv() {
+                Ok(item) => {
+                    if item.request.task == TaskKind::TextToImage {
+                        let resp = serve_one_decoder(&session, &item.request);
+                        let _ = item.respond.send(resp);
+                        continue;
+                    }
+                    let prompt = tokenize_decoder_input(&item.request)?;
+                    batcher.push(QueuedRequest {
+                        id: item.request.id,
+                        prompt_len: prompt.len(),
+                        max_new_tokens: item.request.max_new_tokens,
+                    });
+                    staging.insert(item.request.id, item);
+                }
+                Err(_) => return Ok(()),
+            }
+            continue;
+        }
+
+        // Admission: prefill into free slots.
+        let adm = batcher.tick(slots.free_count(), slots.live_count());
+        for q in adm.admit {
+            let item = staging.remove(&q.id).context("staged item")?;
+            let started = Instant::now();
+            let prompt = tokenize_decoder_input(&item.request)?;
+            let (logits, kv1) = session.prefill(&prompt)?;
+            let slot = slots.alloc(q.id, prompt.len())?;
+            // insert the prefilled KV into the batch cache
+            let t_slot = Tensor::from_i32(&[1], &[slot as i32]);
+            let outs = engine.run(
+                &kv_pack,
+                &[Arg::Dev(&ck), Arg::Dev(&cv), Arg::Dev(&kv1.k),
+                  Arg::Dev(&kv1.v), Arg::Host(&t_slot)],
+            )?;
+            let mut it = outs.into_iter();
+            ck = it.next().context("ck")?;
+            cv = it.next().context("cv")?;
+            // sample the first token right away from the prefill logits
+            let mut rng = Rng::new(item.request.sampling.seed ^ q.id);
+            let first = sampling::sample(&logits, &item.request.sampling,
+                                         &mut rng);
+            let ttft = started.elapsed().as_secs_f64();
+            jobs[slot] = Some(SlotJob {
+                prompt_len: prompt.len(),
+                tokens: vec![first],
+                rng,
+                started,
+                ttft,
+                item,
+            });
+        }
+
+        if slots.live_count() == 0 {
+            continue;
+        }
+
+        // One batched decode step for all live slots.
+        let mut toks = vec![0i32; batch];
+        let mut poss = vec![0i32; batch];
+        for (slot, _, pos) in slots.live_slots() {
+            let job = jobs[slot].as_ref().unwrap();
+            toks[slot] = *job.tokens.last().unwrap();
+            poss[slot] = pos as i32;
+        }
+        let t_toks = Tensor::from_i32(&[batch], &toks);
+        let t_poss = Tensor::from_i32(&[batch], &poss);
+        let outs = engine.run(
+            &decode,
+            &[Arg::Host(&t_toks), Arg::Host(&t_poss), Arg::Dev(&ck),
+              Arg::Dev(&cv)],
+        )?;
+        let mut it = outs.into_iter();
+        let logits_buf = it.next().context("logits")?;
+        ck = it.next().context("ck")?;
+        cv = it.next().context("cv")?;
+        let logits = engine.download(&logits_buf)?.as_f32()?;
+
+        for (slot, _, _) in slots.live_slots() {
+            let job = jobs[slot].as_mut().unwrap();
+            let row = &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
+            let tok =
+                sampling::sample(row, &job.item.request.sampling, &mut job.rng);
+            job.tokens.push(tok);
+            let done = tok == tokenizer::EOS
+                || job.tokens.len() >= job.item.request.max_new_tokens
+                || slots.advance(slot).is_err();
+            if done {
+                let job = jobs[slot].take().unwrap();
+                slots.release(slot)?;
+                let resp = finish_decoder_response(&job);
+                let _ = job.item.respond.send(Ok(resp));
+            }
+        }
+    }
+}
+
+fn tokenize_decoder_input(req: &Request) -> Result<Vec<i32>> {
+    Ok(match &req.input {
+        RequestInput::Text(t) => encode_prompt(t),
+        RequestInput::Tokens(ts) => ts.clone(),
+        RequestInput::Image { pixels, h, w } => {
+            let mut ids = vec![tokenizer::BOS];
+            ids.extend(ImageTokenizer::encode(pixels, *h, *w));
+            // "Describe the figure" prompt suffix (paper §3.1, I-T).
+            ids.extend(TextTokenizer::new().encode("Describe"));
+            ids
+        }
+        RequestInput::ImageText { pixels, h, w, text } => {
+            let mut ids = vec![tokenizer::BOS];
+            ids.extend(ImageTokenizer::encode(pixels, *h, *w));
+            ids.extend(TextTokenizer::new().encode(text));
+            ids
+        }
+        other => bail!("unsupported decoder input {other:?}"),
+    })
+}
+
+fn serve_one_decoder(session: &DecoderSession, req: &Request)
+                     -> Result<Response> {
+    let started = Instant::now();
+    let prompt = tokenize_decoder_input(req)?;
+    if req.task == TaskKind::TextToImage {
+        let gen = session.generate_image(&prompt, tokenizer::IMG_TOKENS,
+                                         &req.sampling)?;
+        return Ok(Response {
+            id: req.id,
+            task: req.task,
+            output: ResponseOutput::Image(ImageTokenizer::decode(&gen.tokens)),
+            tokens: gen.tokens.clone(),
+            prompt_tokens: gen.prompt_tokens,
+            decode_steps: gen.decode_steps,
+            ttft: gen.ttft,
+            e2e: started.elapsed().as_secs_f64(),
+        });
+    }
+    let gen = session.generate(&prompt, req.max_new_tokens, &req.sampling)?;
+    let text = TextTokenizer::new().decode(&gen.tokens);
+    Ok(Response {
+        id: req.id,
+        task: req.task,
+        output: ResponseOutput::Text(text),
+        tokens: gen.tokens.clone(),
+        prompt_tokens: gen.prompt_tokens,
+        decode_steps: gen.decode_steps,
+        ttft: gen.ttft,
+        e2e: started.elapsed().as_secs_f64(),
+    })
+}
+
+fn finish_decoder_response(job: &SlotJob) -> Response {
+    let text = TextTokenizer::new().decode(&job.tokens);
+    Response {
+        id: job.item.request.id,
+        task: job.item.request.task,
+        output: ResponseOutput::Text(text),
+        tokens: job.tokens.clone(),
+        prompt_tokens: job.prompt_len,
+        decode_steps: job.tokens.len(),
+        ttft: job.ttft,
+        e2e: job.started.elapsed().as_secs_f64(),
+    }
+}
+
+// ---- Seamless ---------------------------------------------------------------
+
+fn seamless_worker(engine: &Engine, cfg: RouterConfig,
+                   rx: Receiver<WorkItem>) -> Result<()> {
+    let pipe = SeamlessPipeline::new(engine, cfg.reorder)?;
+    while let Ok(item) = rx.recv() {
+        let resp = serve_one_seamless(&pipe, &item.request);
+        let _ = item.respond.send(resp);
+    }
+    Ok(())
+}
+
+fn serve_one_seamless(pipe: &SeamlessPipeline, req: &Request)
+                      -> Result<Response> {
+    let started = Instant::now();
+    let task = match req.task {
+        TaskKind::SpeechToText => SeamlessTask::SpeechToText,
+        TaskKind::SpeechToSpeech => SeamlessTask::SpeechToSpeech,
+        TaskKind::TextToTextTrans => SeamlessTask::TextToText,
+        TaskKind::TextToSpeech => SeamlessTask::TextToSpeech,
+        t => bail!("not a seamless task: {t}"),
+    };
+    let (speech, text): (Option<&[f32]>, Option<&str>) = match &req.input {
+        RequestInput::Speech(w) => (Some(w.as_slice()), None),
+        RequestInput::Text(t) => (None, Some(t.as_str())),
+        other => bail!("unsupported seamless input {other:?}"),
+    };
+    let out = pipe.run(task, speech, text, req.max_new_tokens)?;
+    let output = if task.speech_out() {
+        ResponseOutput::Speech(out.waveform.clone())
+    } else {
+        ResponseOutput::Text(out.text.clone())
+    };
+    Ok(Response {
+        id: req.id,
+        task: req.task,
+        output,
+        tokens: out.text_tokens.clone(),
+        prompt_tokens: 0,
+        decode_steps: out.decode_steps,
+        ttft: out.e2e, // beam search emits only on completion
+        e2e: started.elapsed().as_secs_f64(),
+    })
+}
+
+// ---- HSTU --------------------------------------------------------------------
+
+fn hstu_worker(engine: &Engine, rx: Receiver<WorkItem>) -> Result<()> {
+    let runner = HstuRunner::new(engine, HstuAttn::Fused)?;
+    while let Ok(item) = rx.recv() {
+        let resp = serve_one_hstu(&runner, &item.request);
+        let _ = item.respond.send(resp);
+    }
+    Ok(())
+}
+
+fn serve_one_hstu(runner: &HstuRunner, req: &Request) -> Result<Response> {
+    let started = Instant::now();
+    let RequestInput::History(h) = &req.input else {
+        bail!("hstu expects History input");
+    };
+    let results = runner.run_batch(std::slice::from_ref(h), 8, 10)?;
+    let r = results.into_iter().next().context("hstu result")?;
+    Ok(Response {
+        id: req.id,
+        task: req.task,
+        output: ResponseOutput::Actions {
+            engagement: r.engagement,
+            top_items: r.top_items,
+        },
+        tokens: vec![],
+        prompt_tokens: h.len(),
+        decode_steps: 0, // non-autoregressive (Obs #1)
+        ttft: r.e2e,
+        e2e: started.elapsed().as_secs_f64(),
+    })
+}
+
+/// Aggregate responses into serving statistics.
+pub fn collect_stats(responses: &[Response], wall_secs: f64) -> ServeStats {
+    let mut s = ServeStats { wall_secs, ..Default::default() };
+    for r in responses {
+        s.requests_completed += 1;
+        s.tokens_generated += r.decode_steps as u64;
+        s.prefill_tokens += r.prompt_tokens as u64;
+        s.ttft.record(r.ttft * 1e3);
+        s.e2e.record(r.e2e * 1e3);
+        if r.decode_steps > 1 {
+            s.tpot
+                .record(r.e2e * 1e3 / r.decode_steps as f64);
+        }
+    }
+    s
+}

@@ -1,0 +1,48 @@
+//! # mmserve
+//!
+//! A three-layer Rust + JAX + Pallas serving framework reproducing
+//! *"Characterizing and Efficiently Accelerating Multimodal Generation
+//! Model Inference"* (Meta AI Research, 2024).
+//!
+//! Layers:
+//! * **L3 (this crate)** — the serving coordinator: request routing,
+//!   continuous batching, static KV-cache management, beam search with
+//!   cache reorder, contrastive decoding, LayerSkip self-speculative
+//!   decoding, plus the paper's analytical A100/H100 device model.
+//! * **L2 (python/compile)** — JAX model graphs for the four families
+//!   (Llama, Chameleon, Seamless, HSTU), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas kernels: flash-style
+//!   attention, fused HSTU pointwise attention, int8 matmuls.
+//!
+//! Python never runs on the request path: `artifacts/` are compiled once
+//! by `make artifacts`; this crate loads them via PJRT (`runtime`).
+
+pub mod coordinator;
+pub mod models;
+pub mod perfmodel;
+pub mod runtime;
+pub mod substrate;
+pub mod workload;
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$MMSERVE_ARTIFACTS` or `./artifacts`
+/// relative to the current working directory (walking up a few parents so
+/// tests/benches work from target subdirs).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MMSERVE_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("llama").join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    ARTIFACTS_DIR.into()
+}

@@ -1,0 +1,219 @@
+//! mmserve CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`        — start the multi-model router and run a demo batch
+//!                    of requests against it (in-process client).
+//! * `characterize` — print the paper's Figure-4-style operator
+//!                    breakdown from the analytical device model.
+//! * `autoquant`    — run the §4.2 quantization calibration on real
+//!                    executables.
+//! * `stages`       — list AOT stages available per model.
+
+use anyhow::{bail, Result};
+
+use mmserve::coordinator::autoquant;
+use mmserve::coordinator::opts::{AttnImpl, ExecMode, OptConfig, QuantMode};
+use mmserve::coordinator::request::{Request, SamplingParams};
+use mmserve::coordinator::seamless_pipe::ReorderMode;
+use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::models::{ModelKind, TaskKind};
+use mmserve::perfmodel::breakdown::render;
+use mmserve::perfmodel::device::DeviceSpec;
+use mmserve::perfmodel::levers::Levers;
+use mmserve::perfmodel::standard_breakdown_rows;
+use mmserve::runtime::engine::Engine;
+use mmserve::substrate::cli::Command;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("mmserve: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "mmserve <serve|characterize|autoquant|stages> [options]\n\
+     run `mmserve <cmd> --help` for command options"
+        .to_string()
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "characterize" => cmd_characterize(rest),
+        "autoquant" => cmd_autoquant(rest),
+        "stages" => cmd_stages(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn opt_from_args(a: &mmserve::substrate::cli::Args) -> OptConfig {
+    let mut opt = OptConfig::baseline();
+    if a.flag("sdpa") {
+        opt.attn = AttnImpl::Flash;
+    }
+    if a.flag("eager") {
+        opt.exec = ExecMode::Eager;
+    }
+    match a.get_or("quant", "f32").as_str() {
+        "int8wo" => opt.quant = QuantMode::Int8WeightOnly,
+        "int8dyn" => opt.quant = QuantMode::Int8Dynamic,
+        _ => {}
+    }
+    if a.flag("layerskip") {
+        opt.layerskip = true;
+    }
+    opt
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "serve a demo request batch")
+        .opt("models", "comma list of models", Some("llama"))
+        .opt("requests", "number of demo requests", Some("8"))
+        .opt("max-new", "max new tokens per request", Some("16"))
+        .opt("batch", "decode batch size", Some("4"))
+        .opt("quant", "f32|int8wo|int8dyn", Some("f32"))
+        .flag("sdpa", "enable the flash-attention stages")
+        .flag("eager", "per-op dispatch (launch-overhead baseline)")
+        .flag("layerskip", "self-speculative decoding")
+        .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let models: Vec<ModelKind> = a
+        .get_or("models", "llama")
+        .split(',')
+        .filter_map(ModelKind::parse)
+        .collect();
+    if models.is_empty() {
+        bail!("no valid models given");
+    }
+    let opt = opt_from_args(&a);
+    let n = a.get_usize("requests", 8);
+    let max_new = a.get_usize("max-new", 16);
+
+    println!("starting router: models={models:?} opt=[{opt}]");
+    let router = Router::start(
+        &mmserve::artifacts_dir(),
+        RouterConfig {
+            models: models.clone(),
+            opt,
+            reorder: ReorderMode::Fused,
+            batch: a.get_usize("batch", 4),
+            prefill_budget: 0,
+        },
+    );
+
+    let prompts = [
+        "write a function to reverse a string",
+        "def fib(n): compute the fibonacci numbers",
+        "explain the borrow checker",
+        "sort a list of integers in rust",
+    ];
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let mut req = Request::text(
+            router.fresh_id(),
+            TaskKind::TextToText,
+            prompts[i % prompts.len()],
+            max_new,
+        );
+        req.sampling = SamplingParams::greedy();
+        rxs.push(router.submit(req)?);
+    }
+    let mut responses = Vec::new();
+    for rx in rxs {
+        responses.push(rx.recv()??);
+    }
+    let stats = collect_stats(&responses, t0.elapsed().as_secs_f64());
+    println!("{}", stats.report());
+    for r in responses.iter().take(2) {
+        if let mmserve::coordinator::request::ResponseOutput::Text(t) =
+            &r.output
+        {
+            println!("  [{}] {} tokens: {:?}", r.id, r.decode_steps, t);
+        }
+    }
+    router.shutdown();
+    Ok(())
+}
+
+fn cmd_characterize(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("characterize",
+                           "Figure-4 style breakdown (device model)")
+        .opt("device", "A100|H100", Some("A100"))
+        .flag("sys-opt", "apply SDPA+compile+AutoQuant levers")
+        .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let dev: &DeviceSpec = DeviceSpec::by_name(&a.get_or("device", "A100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let lv = if a.flag("sys-opt") {
+        Levers::sys_opt()
+    } else {
+        Levers::baseline()
+    };
+    let rows = standard_breakdown_rows(dev, &lv);
+    println!("{}", render(&rows));
+    Ok(())
+}
+
+fn cmd_autoquant(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("autoquant", "calibrate quantization (§4.2)")
+        .opt("model", "llama|chameleon", Some("llama"))
+        .opt("iters", "timing iterations", Some("20"))
+        .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let dir = mmserve::artifacts_dir().join(a.get_or("model", "llama"));
+    let engine = Engine::load(&dir)?;
+    let rep = autoquant::calibrate_decode(&engine, a.get_usize("iters", 20))?;
+    for t in &rep.timings {
+        println!("  {:<24} {:>9.3} ms", t.stage, t.mean_s * 1e3);
+    }
+    println!("chosen: {:?}", rep.chosen);
+    Ok(())
+}
+
+fn cmd_stages(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("stages", "list AOT stages per model")
+        .opt("model", "model dir name", Some("llama"))
+        .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let dir = mmserve::artifacts_dir().join(a.get_or("model", "llama"));
+    let man = mmserve::runtime::manifest::Manifest::load(&dir)?;
+    println!("model {} — {} stages", man.model, man.stages.len());
+    for name in man.stage_names() {
+        let s = man.stage(name)?;
+        println!("  {:<28} {} weights, {} args, {} outputs",
+                 name, s.weights.len(), s.args.len(), s.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! Model & task registry — the paper's Table 1 as code.
+//!
+//! Four model families × nine tasks, each task declaring its input and
+//! output modalities. The registry is what the router validates requests
+//! against and what the workload generators and the device model key on.
+
+pub mod tokenizer;
+
+use std::fmt;
+
+/// The four model families characterized by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Code Llama — text-based LLM (autoregressive).
+    Llama,
+    /// Chameleon — early-fusion text+image generation (autoregressive).
+    Chameleon,
+    /// Seamless M4T — speech/text translation (only the text decoder is
+    /// autoregressive).
+    Seamless,
+    /// HSTU — generative DLRM (non-autoregressive).
+    Hstu,
+}
+
+impl ModelKind {
+    pub fn dir_name(self) -> &'static str {
+        match self {
+            ModelKind::Llama => "llama",
+            ModelKind::Chameleon => "chameleon",
+            ModelKind::Seamless => "seamless",
+            ModelKind::Hstu => "hstu",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "llama" => ModelKind::Llama,
+            "chameleon" => ModelKind::Chameleon,
+            "seamless" => ModelKind::Seamless,
+            "hstu" => ModelKind::Hstu,
+            _ => return None,
+        })
+    }
+    pub fn all() -> [ModelKind; 4] {
+        [ModelKind::Llama, ModelKind::Chameleon, ModelKind::Seamless,
+         ModelKind::Hstu]
+    }
+    /// Paper Table 1 "Auto-regressive" column.
+    pub fn autoregressive(self) -> Autoregressive {
+        match self {
+            ModelKind::Llama | ModelKind::Chameleon => Autoregressive::Full,
+            ModelKind::Seamless => Autoregressive::TextDecoderOnly,
+            ModelKind::Hstu => Autoregressive::No,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Autoregressive {
+    Full,
+    TextDecoderOnly,
+    No,
+}
+
+/// Input/output modalities (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    Text,
+    Image,
+    Speech,
+    UserHistory,
+    Action,
+}
+
+/// The nine tasks characterized in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Llama: code completion / instruction (T-T).
+    TextToText,
+    /// Chameleon image captioning (I-T).
+    ImageToText,
+    /// Chameleon image generation (T-I) — contrastive decoding, 1024
+    /// image tokens.
+    TextToImage,
+    /// Chameleon VQA (IT-T).
+    ImageTextToText,
+    /// Seamless S-S.
+    SpeechToSpeech,
+    /// Seamless S-T.
+    SpeechToText,
+    /// Seamless T-T translation.
+    TextToTextTrans,
+    /// Seamless T-S.
+    TextToSpeech,
+    /// HSTU ranking + retrieval (H-A).
+    HistoryToAction,
+}
+
+impl TaskKind {
+    pub fn notation(self) -> &'static str {
+        match self {
+            TaskKind::TextToText => "T-T",
+            TaskKind::ImageToText => "I-T",
+            TaskKind::TextToImage => "T-I",
+            TaskKind::ImageTextToText => "IT-T",
+            TaskKind::SpeechToSpeech => "S-S",
+            TaskKind::SpeechToText => "S-T",
+            TaskKind::TextToTextTrans => "T-T(tr)",
+            TaskKind::TextToSpeech => "T-S",
+            TaskKind::HistoryToAction => "H-A",
+        }
+    }
+
+    pub fn model(self) -> ModelKind {
+        match self {
+            TaskKind::TextToText => ModelKind::Llama,
+            TaskKind::ImageToText
+            | TaskKind::TextToImage
+            | TaskKind::ImageTextToText => ModelKind::Chameleon,
+            TaskKind::SpeechToSpeech
+            | TaskKind::SpeechToText
+            | TaskKind::TextToTextTrans
+            | TaskKind::TextToSpeech => ModelKind::Seamless,
+            TaskKind::HistoryToAction => ModelKind::Hstu,
+        }
+    }
+
+    pub fn input_modalities(self) -> &'static [Modality] {
+        match self {
+            TaskKind::TextToText | TaskKind::TextToImage
+            | TaskKind::TextToTextTrans | TaskKind::TextToSpeech => {
+                &[Modality::Text]
+            }
+            TaskKind::ImageToText => &[Modality::Image],
+            TaskKind::ImageTextToText => &[Modality::Image, Modality::Text],
+            TaskKind::SpeechToSpeech | TaskKind::SpeechToText => {
+                &[Modality::Speech]
+            }
+            TaskKind::HistoryToAction => &[Modality::UserHistory],
+        }
+    }
+
+    pub fn output_modality(self) -> Modality {
+        match self {
+            TaskKind::TextToText
+            | TaskKind::ImageToText
+            | TaskKind::ImageTextToText
+            | TaskKind::SpeechToText
+            | TaskKind::TextToTextTrans => Modality::Text,
+            TaskKind::TextToImage => Modality::Image,
+            TaskKind::SpeechToSpeech | TaskKind::TextToSpeech => {
+                Modality::Speech
+            }
+            TaskKind::HistoryToAction => Modality::Action,
+        }
+    }
+
+    /// Chameleon T-I decodes twice per step (contrastive decoding).
+    pub fn decodes_per_step(self) -> usize {
+        if self == TaskKind::TextToImage {
+            2
+        } else {
+            1
+        }
+    }
+
+    pub fn all() -> [TaskKind; 9] {
+        [
+            TaskKind::TextToText,
+            TaskKind::ImageToText,
+            TaskKind::TextToImage,
+            TaskKind::ImageTextToText,
+            TaskKind::SpeechToSpeech,
+            TaskKind::SpeechToText,
+            TaskKind::TextToTextTrans,
+            TaskKind::TextToSpeech,
+            TaskKind::HistoryToAction,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::all().into_iter().find(|t| {
+            t.notation().eq_ignore_ascii_case(s)
+        })
+    }
+}
+
+impl fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.notation())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_task_model_mapping() {
+        assert_eq!(TaskKind::TextToText.model(), ModelKind::Llama);
+        assert_eq!(TaskKind::TextToImage.model(), ModelKind::Chameleon);
+        assert_eq!(TaskKind::SpeechToSpeech.model(), ModelKind::Seamless);
+        assert_eq!(TaskKind::HistoryToAction.model(), ModelKind::Hstu);
+    }
+
+    #[test]
+    fn autoregressive_column() {
+        assert_eq!(ModelKind::Llama.autoregressive(), Autoregressive::Full);
+        assert_eq!(
+            ModelKind::Seamless.autoregressive(),
+            Autoregressive::TextDecoderOnly
+        );
+        assert_eq!(ModelKind::Hstu.autoregressive(), Autoregressive::No);
+    }
+
+    #[test]
+    fn contrastive_decode_only_ti() {
+        for t in TaskKind::all() {
+            let want = if t == TaskKind::TextToImage { 2 } else { 1 };
+            assert_eq!(t.decodes_per_step(), want, "{t}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in TaskKind::all() {
+            assert_eq!(TaskKind::parse(t.notation()), Some(t));
+        }
+        assert_eq!(TaskKind::parse("nope"), None);
+        for m in ModelKind::all() {
+            assert_eq!(ModelKind::parse(m.dir_name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn modalities_match_table1() {
+        assert_eq!(
+            TaskKind::ImageTextToText.input_modalities(),
+            &[Modality::Image, Modality::Text]
+        );
+        assert_eq!(TaskKind::TextToImage.output_modality(), Modality::Image);
+        assert_eq!(
+            TaskKind::HistoryToAction.output_modality(),
+            Modality::Action
+        );
+    }
+}

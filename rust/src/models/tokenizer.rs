@@ -1,0 +1,248 @@
+//! Modality front-ends: text tokenizer, image tokenizer, speech
+//! featurizer.
+//!
+//! The paper's models use BPE (text), a learned VQ image tokenizer
+//! (1024 tokens per image), and 80-dim filterbank features (speech).
+//! These are substrate components we rebuild at tiny scale: a
+//! deterministic byte-bigram text tokenizer over the tiny 512-entry
+//! vocab, an 8×8-patch mean-quantizing image tokenizer (64 tokens per
+//! image, the scaled analogue of Chameleon's 32×32 grid), and a framed
+//! log-energy filterbank-style speech featurizer.
+
+use crate::runtime::tensor::Tensor;
+
+/// Vocab layout for the tiny decoder models (vocab_size = 512):
+///   [0]           BOS
+///   [1]           EOS
+///   [2..258)      byte tokens (256)
+///   [258..322)    image tokens (64) — Chameleon only
+///   [322..512)    merged bigram tokens
+pub const BOS: i32 = 0;
+pub const EOS: i32 = 1;
+pub const BYTE_BASE: i32 = 2;
+pub const IMG_BASE: i32 = 258;
+pub const IMG_TOKENS: usize = 64;
+pub const BIGRAM_BASE: i32 = 322;
+pub const VOCAB: usize = 512;
+
+/// Characters allowed in merge pairs — frequency-ordered letters plus
+/// space. 14 × 14 = 196 candidate pairs; the first 190 become merges.
+const MERGE_CHARS: &[u8] = b"etaoinshrdlu c";
+
+/// Deterministic byte-level tokenizer with a fixed bigram merge table —
+/// a stand-in for BPE with identical interface properties (variable-rate
+/// compression, exactly reversible decode).
+pub struct TextTokenizer {
+    /// pair → merged token id.
+    merges: std::collections::HashMap<(u8, u8), i32>,
+    /// merged token id − BIGRAM_BASE → pair.
+    pairs: Vec<(u8, u8)>,
+}
+
+impl Default for TextTokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TextTokenizer {
+    pub fn new() -> Self {
+        let n_bigrams = (VOCAB as i32 - BIGRAM_BASE) as usize;
+        let mut merges = std::collections::HashMap::new();
+        let mut pairs = Vec::with_capacity(n_bigrams);
+        'outer: for &a in MERGE_CHARS {
+            for &b in MERGE_CHARS {
+                if pairs.len() == n_bigrams {
+                    break 'outer;
+                }
+                merges.insert((a, b), BIGRAM_BASE + pairs.len() as i32);
+                pairs.push((a, b));
+            }
+        }
+        TextTokenizer { merges, pairs }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let bytes = text.as_bytes();
+        let mut out = Vec::with_capacity(bytes.len() / 2 + 1);
+        let mut i = 0;
+        while i < bytes.len() {
+            if i + 1 < bytes.len() {
+                if let Some(&id) = self.merges.get(&(bytes[i], bytes[i + 1]))
+                {
+                    out.push(id);
+                    i += 2;
+                    continue;
+                }
+            }
+            out.push(BYTE_BASE + bytes[i] as i32);
+            i += 1;
+        }
+        out
+    }
+
+    /// Decode token ids back to text. Unknown/image ids map to U+FFFD.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id == BOS || id == EOS {
+                continue;
+            } else if (BYTE_BASE..IMG_BASE).contains(&id) {
+                bytes.push((id - BYTE_BASE) as u8);
+            } else if id >= BIGRAM_BASE && (id as usize) < VOCAB {
+                let (a, b) = self.pairs[(id - BIGRAM_BASE) as usize];
+                bytes.push(a);
+                bytes.push(b);
+            } else {
+                bytes.extend_from_slice("\u{fffd}".as_bytes());
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Image tokenizer: quantize 8×8 patch means of a grayscale image into
+/// the 64 image-token slots (the tiny analogue of Chameleon's
+/// Make-A-Scene VQ tokenizer producing a fixed-length token grid).
+pub struct ImageTokenizer;
+
+impl ImageTokenizer {
+    /// `pixels`: HxW grayscale in [0,1], H and W multiples of 8.
+    /// Returns exactly [`IMG_TOKENS`] tokens.
+    pub fn encode(pixels: &[f32], h: usize, w: usize) -> Vec<i32> {
+        assert_eq!(pixels.len(), h * w, "pixel count");
+        let gh = 8;
+        let gw = 8;
+        let ph = (h / gh).max(1);
+        let pw = (w / gw).max(1);
+        let mut out = Vec::with_capacity(IMG_TOKENS);
+        for gy in 0..gh {
+            for gx in 0..gw {
+                let mut sum = 0.0f32;
+                let mut n = 0usize;
+                for y in gy * ph..((gy + 1) * ph).min(h) {
+                    for x in gx * pw..((gx + 1) * pw).min(w) {
+                        sum += pixels[y * w + x];
+                        n += 1;
+                    }
+                }
+                let mean = if n > 0 { sum / n as f32 } else { 0.0 };
+                let q = ((mean.clamp(0.0, 1.0)) * 63.0).round() as i32;
+                out.push(IMG_BASE + q);
+            }
+        }
+        out
+    }
+
+    /// Decode image tokens back to an 8×8 grayscale thumbnail.
+    pub fn decode(tokens: &[i32]) -> Vec<f32> {
+        tokens
+            .iter()
+            .map(|&t| ((t - IMG_BASE).clamp(0, 63) as f32) / 63.0)
+            .collect()
+    }
+}
+
+/// Speech featurizer: frame a waveform into 80-dim log-energy features
+/// (the tiny analogue of the paper's 80-dim filterbanks at 100 Hz).
+pub struct SpeechFeaturizer {
+    pub frame: usize,
+    pub n_mels: usize,
+}
+
+impl Default for SpeechFeaturizer {
+    fn default() -> Self {
+        SpeechFeaturizer { frame: 160, n_mels: 80 }
+    }
+}
+
+impl SpeechFeaturizer {
+    /// waveform → [n_frames, n_mels] features as a Tensor [1, T, 80].
+    /// T is padded up to `pad_to` frames (0 ⇒ no padding).
+    pub fn featurize(&self, wav: &[f32], pad_to: usize) -> (Tensor, usize) {
+        let n_frames = (wav.len() / self.frame).max(1);
+        let t = if pad_to > 0 { pad_to } else { n_frames };
+        let mut feats = vec![0f32; t * self.n_mels];
+        for f in 0..n_frames.min(t) {
+            let seg = &wav[f * self.frame..
+                ((f + 1) * self.frame).min(wav.len())];
+            // banded log-energies: split the frame into n_mels bands
+            for m in 0..self.n_mels {
+                let lo = m * seg.len() / self.n_mels;
+                let hi = ((m + 1) * seg.len() / self.n_mels).max(lo + 1);
+                let e: f32 = seg[lo..hi.min(seg.len())]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum();
+                feats[f * self.n_mels + m] =
+                    (e / (hi - lo) as f32 + 1e-6).ln();
+            }
+        }
+        (
+            Tensor::from_f32(&[1, t, self.n_mels], &feats),
+            n_frames.min(t),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let tk = TextTokenizer::new();
+        for s in ["hello world", "fn main() { return 42; }", "über-café"] {
+            let ids = tk.encode(s);
+            assert!(!ids.is_empty());
+            assert!(ids.iter().all(|&i| (0..VOCAB as i32).contains(&i)));
+            assert_eq!(tk.decode(&ids), s, "roundtrip {s:?}");
+        }
+    }
+
+    #[test]
+    fn text_compresses() {
+        let tk = TextTokenizer::new();
+        let s = "the quick brown fox jumps over the lazy dog";
+        let ids = tk.encode(s);
+        assert!(ids.len() < s.len(), "{} !< {}", ids.len(), s.len());
+    }
+
+    #[test]
+    fn image_tokens_fixed_length_and_range() {
+        let px = vec![0.5f32; 64 * 64];
+        let ids = ImageTokenizer::encode(&px, 64, 64);
+        assert_eq!(ids.len(), IMG_TOKENS);
+        assert!(ids.iter().all(|&i| {
+            (IMG_BASE..IMG_BASE + IMG_TOKENS as i32).contains(&i)
+        }));
+        // uniform 0.5 image → all tokens equal
+        assert!(ids.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn image_decode_inverts_quantization() {
+        let px: Vec<f32> = (0..64 * 64).map(|i| (i % 64) as f32 / 63.0)
+            .collect();
+        let ids = ImageTokenizer::encode(&px, 64, 64);
+        let back = ImageTokenizer::decode(&ids);
+        assert_eq!(back.len(), IMG_TOKENS);
+        assert!(back.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn speech_features_shape_and_padding() {
+        let sf = SpeechFeaturizer::default();
+        let wav: Vec<f32> = (0..160 * 10).map(|i| (i as f32 * 0.01).sin())
+            .collect();
+        let (t, n) = sf.featurize(&wav, 64);
+        assert_eq!(t.shape, vec![1, 64, 80]);
+        assert_eq!(n, 10);
+        // louder signal ⇒ larger energy in frame 0
+        let quiet: Vec<f32> = wav.iter().map(|x| x * 0.1).collect();
+        let (tq, _) = sf.featurize(&quiet, 64);
+        let a = t.as_f32().unwrap();
+        let b = tq.as_f32().unwrap();
+        assert!(a[0] > b[0]);
+    }
+}

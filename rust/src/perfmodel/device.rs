@@ -1,0 +1,87 @@
+//! GPU device specifications (public datasheet numbers — nothing fitted).
+
+/// Device parameters used by the roofline cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Dense fp32 (CUDA-core) peak, FLOP/s.
+    pub peak_f32: f64,
+    /// TF32/bf16 tensor-core peak used for GEMMs, FLOP/s.
+    pub peak_tensor: f64,
+    /// Int8 tensor peak, OP/s.
+    pub peak_int8: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: f64,
+    /// CPU-side cost per kernel in the eager regime, seconds — Python
+    /// interpreter + framework dispatcher + CUDA launch (the paper's
+    /// Obs #2: "GPU computations can be faster than the time it takes
+    /// to execute the corresponding python code on CPU"). Calibrated to
+    /// PyTorch-eager per-op costs (~25 µs), not the bare ~5 µs driver
+    /// launch.
+    pub launch_overhead: f64,
+    /// Fixed overhead to replay one captured graph, seconds.
+    pub graph_launch: f64,
+    /// Achievable fraction of peak for well-shaped GEMMs.
+    pub gemm_eff: f64,
+    /// Achievable fraction of peak BW for streaming kernels.
+    pub mem_eff: f64,
+}
+
+/// NVIDIA A100-SXM4-80GB (Ampere).
+pub const A100: DeviceSpec = DeviceSpec {
+    name: "A100",
+    peak_f32: 19.5e12,
+    peak_tensor: 156e12, // TF32 tensor core
+    peak_int8: 624e12,
+    hbm_bw: 2.039e12,
+    hbm_capacity: 80e9,
+    launch_overhead: 25e-6,
+    graph_launch: 20e-6,
+    gemm_eff: 0.75,
+    mem_eff: 0.80,
+};
+
+/// NVIDIA H100-SXM5-80GB (Hopper): ≈3× peak FLOPS, ≈1.5–1.6× HBM BW
+/// vs A100 (paper §4.5).
+pub const H100: DeviceSpec = DeviceSpec {
+    name: "H100",
+    peak_f32: 67e12,
+    peak_tensor: 495e12, // TF32 tensor core (dense)
+    peak_int8: 1979e12,
+    hbm_bw: 3.35e12,
+    hbm_capacity: 80e9,
+    launch_overhead: 25e-6, // host-bound Python/dispatch cost, unchanged
+    graph_launch: 20e-6,
+    gemm_eff: 0.75,
+    mem_eff: 0.80,
+};
+
+impl DeviceSpec {
+    pub fn by_name(name: &str) -> Option<&'static DeviceSpec> {
+        match name.to_ascii_uppercase().as_str() {
+            "A100" => Some(&A100),
+            "H100" => Some(&H100),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_beats_a100_everywhere() {
+        assert!(H100.peak_tensor > 2.5 * A100.peak_tensor);
+        assert!(H100.hbm_bw > 1.4 * A100.hbm_bw);
+        assert_eq!(A100.hbm_capacity, H100.hbm_capacity);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(DeviceSpec::by_name("a100").unwrap().name, "A100");
+        assert!(DeviceSpec::by_name("tpu").is_none());
+    }
+}

@@ -1,0 +1,270 @@
+//! Task-level latency model: compose operator walks into end-to-end
+//! inference costs for each of the paper's nine tasks.
+
+use crate::substrate::metrics::OpTimes;
+
+use super::configs::{PaperDecoder, PaperHstu, PaperSeamless};
+use super::device::DeviceSpec;
+use super::levers::{cost_walk, Levers};
+use super::ops::{self, OpWalk};
+
+/// Paper-scale description of one inference sample.
+#[derive(Debug, Clone, Copy)]
+pub enum TaskSpec {
+    /// Llama / Chameleon: prompt → `decode_steps` tokens.
+    /// `decodes_per_step` = 2 for Chameleon T-I (contrastive).
+    Decoder {
+        cfg: &'static PaperDecoder,
+        batch: usize,
+        prompt_len: usize,
+        decode_steps: usize,
+        decodes_per_step: usize,
+    },
+    /// Seamless: encoder frames → beam text decode → optional speech
+    /// tail.
+    Seamless {
+        cfg: &'static PaperSeamless,
+        src_len: usize,
+        text_steps: usize,
+        speech_out: bool,
+        /// Reorder fused (compile'd) vs baseline copy.
+        reorder_fused: bool,
+        speech_in: bool,
+    },
+    /// HSTU: one non-AR forward.
+    Hstu { cfg: &'static PaperHstu, batch: usize, seq: usize },
+}
+
+/// Cost decomposition of one sample.
+#[derive(Debug, Clone)]
+pub struct TaskCost {
+    pub prefill_wall: f64,
+    pub decode_wall: f64,
+    pub total: f64,
+    pub prefill_times: OpTimes,
+    pub decode_times: OpTimes,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// LayerSkip economics (paper §4.3): effective decode speedup given
+/// acceptance rate, draft-cost ratio E/L and window K.
+pub fn layerskip_speedup(cfg: &PaperDecoder, accept: f64) -> f64 {
+    let c = cfg.early_exit_layer as f64 / cfg.n_layers as f64;
+    let k = cfg.verify_window as f64;
+    let tokens = 1.0 + accept * (k - 1.0);
+    let cost = (k - 1.0) * c + 1.0;
+    tokens / cost
+}
+
+/// Default LayerSkip acceptance rate (paper reports ~1.5–1.8× at
+/// K=8, E/L=0.25 ⇒ acceptance ≈ 0.55 for code/caption workloads).
+pub const LAYERSKIP_ACCEPT: f64 = 0.55;
+
+/// Cost one sample under a lever configuration.
+pub fn task_cost(spec: &TaskSpec, dev: &DeviceSpec, lv: &Levers) -> TaskCost {
+    match *spec {
+        TaskSpec::Decoder {
+            cfg,
+            batch,
+            prompt_len,
+            decode_steps,
+            decodes_per_step,
+        } => {
+            let attn = lv.attn_kind();
+            let lin = lv.linear_kind();
+            let pre = ops::decoder_prefill(cfg, batch, prompt_len, attn, lin);
+            let (pre_wall, pre_times) = cost_walk(&pre, dev, lv.compile);
+            // decode at the average context length
+            let mut dec_all = OpWalk::default();
+            let steps = decode_steps.max(1);
+            // sample context at 8 points to approximate the growth
+            let samples = 8.min(steps);
+            for i in 0..samples {
+                let ctx = prompt_len + (i + 1) * steps / samples;
+                let w = ops::decoder_decode_step(cfg, batch, ctx, attn, lin);
+                dec_all.extend(w.repeat(steps / samples.max(1)));
+            }
+            let mut dec = OpWalk::default();
+            for _ in 0..decodes_per_step {
+                dec.extend(dec_all.clone());
+            }
+            let (mut dec_wall, dec_times) = cost_walk(&dec, dev, lv.compile);
+            if lv.layerskip {
+                dec_wall /= layerskip_speedup(cfg, LAYERSKIP_ACCEPT);
+            }
+            TaskCost {
+                prefill_wall: pre_wall,
+                decode_wall: dec_wall,
+                total: pre_wall + dec_wall,
+                flops: pre.total_flops() + dec.total_flops(),
+                bytes: pre.total_bytes() + dec.total_bytes(),
+                prefill_times: pre_times,
+                decode_times: dec_times,
+            }
+        }
+        TaskSpec::Seamless {
+            cfg,
+            src_len,
+            text_steps,
+            speech_out,
+            reorder_fused,
+            speech_in,
+        } => {
+            let attn = lv.attn_kind();
+            let mut pre = OpWalk::default();
+            if speech_in {
+                pre.extend(ops::seamless_encoder(cfg, src_len, attn));
+            } else {
+                // text encoder ≈ ¼ the conformer cost per token
+                let mut enc = ops::seamless_encoder(cfg, src_len, attn);
+                for op in &mut enc.ops {
+                    op.flops *= 0.25;
+                    op.bytes *= 0.25;
+                }
+                pre.extend(enc);
+            }
+            let (pre_wall, pre_times) = cost_walk(&pre, dev, lv.compile);
+
+            let mut dec = OpWalk::default();
+            let steps = text_steps.max(1);
+            for i in 0..steps {
+                dec.extend(ops::seamless_dec_step(cfg, cfg.beam, i + 1,
+                                                  src_len, attn));
+                dec.extend(ops::seamless_kv_reorder(
+                    cfg, cfg.beam, i + 1,
+                    reorder_fused || lv.compile,
+                ));
+            }
+            if speech_out {
+                dec.extend(ops::seamless_t2u(cfg, steps));
+                dec.extend(ops::seamless_vocoder(
+                    cfg, steps * cfg.t2u_upsample));
+            }
+            let (dec_wall, dec_times) = cost_walk(&dec, dev, lv.compile);
+            TaskCost {
+                prefill_wall: pre_wall,
+                decode_wall: dec_wall,
+                total: pre_wall + dec_wall,
+                flops: pre.total_flops() + dec.total_flops(),
+                bytes: pre.total_bytes() + dec.total_bytes(),
+                prefill_times: pre_times,
+                decode_times: dec_times,
+            }
+        }
+        TaskSpec::Hstu { cfg, batch, seq } => {
+            let w = ops::hstu_forward(cfg, batch, seq, lv.sdpa);
+            let (wall, times) = cost_walk(&w, dev, lv.compile);
+            TaskCost {
+                prefill_wall: 0.0,
+                decode_wall: wall,
+                total: wall,
+                flops: w.total_flops(),
+                bytes: w.total_bytes(),
+                prefill_times: OpTimes::new(),
+                decode_times: times,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::configs::{HSTU_14L, LLAMA_34B, SEAMLESS_M4T};
+    use super::super::device::A100;
+    use super::*;
+
+    fn llama_tt() -> TaskSpec {
+        TaskSpec::Decoder {
+            cfg: &LLAMA_34B,
+            batch: 1,
+            prompt_len: 154,
+            decode_steps: 538,
+            decodes_per_step: 1,
+        }
+    }
+
+    #[test]
+    fn decode_dominates_autoregressive_latency() {
+        // Obs #1: many decode steps ⇒ decode ≫ prefill.
+        let c = task_cost(&llama_tt(), &A100, &Levers::baseline());
+        assert!(c.decode_wall > 5.0 * c.prefill_wall);
+    }
+
+    #[test]
+    fn levers_strictly_improve_decoder_latency() {
+        let base = task_cost(&llama_tt(), &A100, &Levers::baseline()).total;
+        let sdpa = task_cost(&llama_tt(), &A100, &Levers::sdpa()).total;
+        let cmp = task_cost(&llama_tt(), &A100, &Levers::sdpa_compile()).total;
+        let opt = task_cost(&llama_tt(), &A100, &Levers::sys_opt()).total;
+        let all = task_cost(&llama_tt(), &A100, &Levers::all()).total;
+        assert!(sdpa <= base);
+        assert!(cmp < sdpa);
+        assert!(opt < cmp);
+        assert!(all < opt);
+    }
+
+    #[test]
+    fn contrastive_doubles_decode() {
+        let t1 = TaskSpec::Decoder {
+            cfg: &LLAMA_34B,
+            batch: 1,
+            prompt_len: 14,
+            decode_steps: 1024,
+            decodes_per_step: 1,
+        };
+        let t2 = TaskSpec::Decoder {
+            cfg: &LLAMA_34B,
+            batch: 1,
+            prompt_len: 14,
+            decode_steps: 1024,
+            decodes_per_step: 2,
+        };
+        let c1 = task_cost(&t1, &A100, &Levers::baseline());
+        let c2 = task_cost(&t2, &A100, &Levers::baseline());
+        let r = c2.decode_wall / c1.decode_wall;
+        assert!(r > 1.8 && r < 2.2, "{r}");
+    }
+
+    #[test]
+    fn hstu_much_faster_than_ar(){
+        let h = TaskSpec::Hstu { cfg: &HSTU_14L, batch: 1, seq: 4814 };
+        let ch = task_cost(&h, &A100, &Levers::baseline());
+        let cl = task_cost(&llama_tt(), &A100, &Levers::baseline());
+        assert!(ch.total < cl.total / 10.0);
+    }
+
+    #[test]
+    fn seamless_speech_out_slower_than_text_out() {
+        let st = TaskSpec::Seamless {
+            cfg: &SEAMLESS_M4T,
+            src_len: 493,
+            text_steps: 36,
+            speech_out: false,
+            reorder_fused: false,
+            speech_in: true,
+        };
+        let ss = TaskSpec::Seamless {
+            cfg: &SEAMLESS_M4T,
+            src_len: 493,
+            text_steps: 36,
+            speech_out: true,
+            reorder_fused: false,
+            speech_in: true,
+        };
+        let c_st = task_cost(&st, &A100, &Levers::baseline()).total;
+        let c_ss = task_cost(&ss, &A100, &Levers::baseline()).total;
+        // paper: S-S ≈ 24% slower than S-T. Our analytical model puts
+        // the NAR tail much cheaper (the paper's gap is fairseq2 Python
+        // overhead we deliberately do not inflate) — we only assert the
+        // *direction* here and record the magnitude in EXPERIMENTS.md.
+        assert!(c_ss > c_st * 1.005 && c_ss < c_st * 1.9,
+                "{}", c_ss / c_st);
+    }
+
+    #[test]
+    fn layerskip_speedup_in_paper_band() {
+        let s = layerskip_speedup(&LLAMA_34B, LAYERSKIP_ACCEPT);
+        assert!(s > 1.3 && s < 2.0, "{s}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Analytical A100/H100 device performance model.
+//!
+//! The paper's GPU-side results (Figs 1, 3–11) are regenerated here by
+//! walking each model's operator graph at paper scale and costing every
+//! operator with the classic roofline rule
+//!
+//! ```text
+//! t_gpu(op)  = max(flops / peak_flops, bytes / hbm_bw) / efficiency
+//! t_step     = Σ max(t_gpu, t_launch)        (eager: launch-bound ops
+//!                                             leave the GPU idle — Obs #2)
+//!            | max(Σ t_gpu, t_graph_launch)  (graph/CUDA-Graph mode)
+//! ```
+//!
+//! The optimization levers (§4) are modeled as operator-walk transforms:
+//! SDPA changes attention's memory traffic (+8% FLOPs, paper §4.4),
+//! torch.compile+CUDA Graph changes the launch discipline and fuses
+//! element-wise ops, AutoQuant shrinks weight bytes (and switches the
+//! GEMM peak for dynamic int8), LayerSkip scales the per-token cost by
+//! the draft/verify economics. Device parameters come from public
+//! A100/H100 specs; nothing is fitted to the paper's numbers.
+
+pub mod breakdown;
+pub mod configs;
+pub mod device;
+pub mod latency;
+pub mod levers;
+pub mod ops;
+pub mod requirements;
+pub mod roofline;
+
+pub use configs::{PaperDecoder, PaperHstu, PaperSeamless};
+pub use device::DeviceSpec;
+pub use levers::Levers;
+pub use ops::{Op, OpCategory, OpWalk};
+
+use crate::models::TaskKind;
+use crate::workload;
+
+/// The Figure-4 task set at paper scale (shared by the CLI and the
+/// fig04/fig10 benches).
+pub fn standard_breakdown_rows(dev: &DeviceSpec, lv: &Levers)
+                               -> Vec<breakdown::Breakdown> {
+    use breakdown::breakdown;
+    use latency::TaskSpec;
+    let t2 = workload::spec_for;
+    let mut rows = Vec::new();
+    let tt = t2(TaskKind::TextToText);
+    rows.push(breakdown(
+        "Llama T-T",
+        &TaskSpec::Decoder {
+            cfg: &configs::LLAMA_34B,
+            batch: 4,
+            prompt_len: tt.input.avg as usize,
+            decode_steps: tt.decode_steps as usize,
+            decodes_per_step: 1,
+        },
+        dev, lv,
+    ));
+    let it = t2(TaskKind::ImageToText);
+    rows.push(breakdown(
+        "CM3 I-T",
+        &TaskSpec::Decoder {
+            cfg: &configs::CHAMELEON_34B,
+            batch: 16,
+            prompt_len: it.input.avg as usize,
+            decode_steps: it.decode_steps as usize,
+            decodes_per_step: 1,
+        },
+        dev, lv,
+    ));
+    let ti = t2(TaskKind::TextToImage);
+    rows.push(breakdown(
+        "CM3 T-I",
+        &TaskSpec::Decoder {
+            cfg: &configs::CHAMELEON_34B,
+            batch: 16,
+            prompt_len: ti.input.avg as usize,
+            decode_steps: ti.decode_steps as usize,
+            decodes_per_step: 2,
+        },
+        dev, lv,
+    ));
+    let ss = t2(TaskKind::SpeechToSpeech);
+    rows.push(breakdown(
+        "Seamless S-S",
+        &TaskSpec::Seamless {
+            cfg: &configs::SEAMLESS_M4T,
+            src_len: ss.input.avg as usize,
+            text_steps: ss.decode_steps as usize,
+            speech_out: true,
+            reorder_fused: false,
+            speech_in: true,
+        },
+        dev, lv,
+    ));
+    let ha = t2(TaskKind::HistoryToAction);
+    rows.push(breakdown(
+        "HSTU H-A",
+        &TaskSpec::Hstu {
+            cfg: &configs::HSTU_14L,
+            batch: 32,
+            seq: ha.input.avg as usize,
+        },
+        dev, lv,
+    ));
+    rows
+}

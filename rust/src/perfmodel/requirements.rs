@@ -1,0 +1,94 @@
+//! Figure 1: per-task system requirements — end-to-end latency, GPU
+//! utilization, memory capacity, and compute demand.
+
+use super::device::DeviceSpec;
+use super::latency::{task_cost, TaskSpec};
+use super::levers::Levers;
+
+#[derive(Debug, Clone)]
+pub struct Requirements {
+    pub label: String,
+    pub latency_s: f64,
+    /// Busy / wall over the whole sample.
+    pub gpu_utilization: f64,
+    /// Weights + KV + activation working set, bytes.
+    pub memory_bytes: f64,
+    /// Total FLOPs for one sample.
+    pub compute_flops: f64,
+}
+
+/// Memory requirement for a spec (weights + KV at final context).
+pub fn memory_bytes(spec: &TaskSpec) -> f64 {
+    match *spec {
+        TaskSpec::Decoder { cfg, batch, prompt_len, decode_steps,
+                            decodes_per_step } => {
+            let ctx = (prompt_len + decode_steps) as f64;
+            cfg.weight_bytes()
+                + decodes_per_step as f64
+                    * batch as f64 * ctx * cfg.kv_bytes_per_token()
+        }
+        TaskSpec::Seamless { cfg, src_len, text_steps, .. } => {
+            cfg.weight_bytes()
+                + cfg.beam as f64
+                    * text_steps as f64 * cfg.kv_bytes_per_token()
+                + (src_len * cfg.d_model * 2) as f64
+        }
+        TaskSpec::Hstu { cfg, batch, seq } => {
+            cfg.weight_bytes()
+                + (batch * seq * cfg.d_model * 2 * 4) as f64 // activations
+        }
+    }
+}
+
+pub fn requirements(label: &str, spec: &TaskSpec, dev: &DeviceSpec,
+                    lv: &Levers) -> Requirements {
+    let c = task_cost(spec, dev, lv);
+    let idle = c.prefill_times.get("Idle") + c.decode_times.get("Idle");
+    let busy = (c.total - idle).max(0.0);
+    Requirements {
+        label: label.to_string(),
+        latency_s: c.total,
+        gpu_utilization: (busy / c.total.max(1e-12)).clamp(0.0, 1.0),
+        memory_bytes: memory_bytes(spec),
+        compute_flops: c.flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::configs::{CHAMELEON_34B, HSTU_14L};
+    use super::super::device::A100;
+    use super::*;
+
+    #[test]
+    fn ti_task_demands_most() {
+        // Fig 1: Chameleon T-I is the heaviest task across the axes.
+        let ti = TaskSpec::Decoder {
+            cfg: &CHAMELEON_34B,
+            batch: 1,
+            prompt_len: 14,
+            decode_steps: 1024,
+            decodes_per_step: 2,
+        };
+        let it = TaskSpec::Decoder {
+            cfg: &CHAMELEON_34B,
+            batch: 1,
+            prompt_len: 1040,
+            decode_steps: 10,
+            decodes_per_step: 1,
+        };
+        let r_ti = requirements("T-I", &ti, &A100, &Levers::baseline());
+        let r_it = requirements("IT-T", &it, &A100, &Levers::baseline());
+        assert!(r_ti.latency_s > 5.0 * r_it.latency_s);
+        assert!(r_ti.compute_flops > r_it.compute_flops);
+        assert!(r_ti.memory_bytes > r_it.memory_bytes);
+    }
+
+    #[test]
+    fn hstu_high_utilization() {
+        // Obs #2: HSTU's big batched matmuls keep the GPU busy.
+        let h = TaskSpec::Hstu { cfg: &HSTU_14L, batch: 32, seq: 4814 };
+        let r = requirements("H-A", &h, &A100, &Levers::baseline());
+        assert!(r.gpu_utilization > 0.5, "{}", r.gpu_utilization);
+    }
+}

@@ -1,0 +1,90 @@
+//! Figure 9: roofline analysis — arithmetic intensity vs achieved
+//! FLOP/s per workload, baseline vs Sys-Opt.
+
+use super::device::DeviceSpec;
+use super::latency::{task_cost, TaskSpec};
+use super::levers::Levers;
+
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// FLOP / byte.
+    pub intensity: f64,
+    /// Achieved FLOP/s.
+    pub perf: f64,
+    /// Fraction of the device roofline at this intensity.
+    pub roof_frac: f64,
+}
+
+/// Device roofline at a given arithmetic intensity.
+pub fn roof(dev: &DeviceSpec, intensity: f64) -> f64 {
+    (intensity * dev.hbm_bw).min(dev.peak_tensor)
+}
+
+/// The knee (intensity where memory- and compute-bound meet).
+pub fn knee(dev: &DeviceSpec) -> f64 {
+    dev.peak_tensor / dev.hbm_bw
+}
+
+/// Compute a roofline point for a task under a lever set.
+pub fn point(label: &str, spec: &TaskSpec, dev: &DeviceSpec,
+             lv: &Levers) -> RooflinePoint {
+    let c = task_cost(spec, dev, lv);
+    let intensity = c.flops / c.bytes.max(1.0);
+    let perf = c.flops / c.total.max(1e-12);
+    RooflinePoint {
+        label: label.to_string(),
+        intensity,
+        perf,
+        roof_frac: perf / roof(dev, intensity),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::configs::LLAMA_34B;
+    use super::super::device::A100;
+    use super::*;
+
+    fn spec() -> TaskSpec {
+        TaskSpec::Decoder {
+            cfg: &LLAMA_34B,
+            batch: 1,
+            prompt_len: 154,
+            decode_steps: 538,
+            decodes_per_step: 1,
+        }
+    }
+
+    #[test]
+    fn sys_opt_moves_up_and_right() {
+        // §4.4: optimizations increase both arithmetic intensity and
+        // achieved performance.
+        let base = point("T-T", &spec(), &A100, &Levers::baseline());
+        let opt = point("T-T", &spec(), &A100, &Levers::sys_opt());
+        assert!(opt.intensity > base.intensity);
+        assert!(opt.perf > base.perf);
+    }
+
+    #[test]
+    fn points_under_the_roof() {
+        for lv in [Levers::baseline(), Levers::sys_opt()] {
+            let p = point("T-T", &spec(), &A100, &lv);
+            assert!(p.roof_frac <= 1.0 + 1e-9, "{}", p.roof_frac);
+        }
+    }
+
+    #[test]
+    fn knee_position_sane() {
+        // A100: 156e12 / 2.04e12 ≈ 76 FLOP/B
+        let k = knee(&A100);
+        assert!(k > 50.0 && k < 100.0, "{k}");
+    }
+
+    #[test]
+    fn decode_is_left_of_knee() {
+        // bs=1 AR decode lives deep in the memory-bound region.
+        let p = point("T-T", &spec(), &A100, &Levers::baseline());
+        assert!(p.intensity < knee(&A100));
+    }
+}

@@ -1,0 +1,295 @@
+//! The PJRT engine: compile-once, execute-many.
+//!
+//! One `Engine` per model directory. Weights are uploaded to the device
+//! once at load; stages are compiled lazily on first use and cached.
+//! Stage outputs are `PjRtBuffer`s (one per output-tuple leaf, thanks to
+//! the `untuple_result` patch in `third_party_xla`), so state tensors
+//! (KV caches) chain across decode steps without host round-trips —
+//! the same static-buffer discipline that enables CUDA Graphs in the
+//! paper (§4.1.2).
+//!
+//! `Engine` is deliberately `!Send`: PJRT handles are raw pointers. The
+//! coordinator gives each model its own engine thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use crate::substrate::metrics::OpTimes;
+
+use super::manifest::{Manifest, StageSpec};
+use super::tensor::{DType, Tensor};
+use super::weights::WeightsFile;
+
+fn elem_type(dt: DType) -> ElementType {
+    match dt {
+        DType::F32 => ElementType::F32,
+        DType::I8 => ElementType::S8,
+        DType::I32 => ElementType::S32,
+    }
+}
+
+/// A stage input: host tensor (uploaded per call) or device buffer.
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Dev(&'a PjRtBuffer),
+}
+
+/// Compiled stage + its spec.
+#[derive(Clone)]
+pub struct StageHandle {
+    pub spec: StageSpec,
+    exe: Rc<PjRtLoadedExecutable>,
+}
+
+/// Engine statistics (compile times, per-stage dispatch counts).
+#[derive(Default, Debug, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub dispatches: u64,
+    pub dispatch_secs: f64,
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    weights: WeightsFile,
+    weight_bufs: RefCell<HashMap<String, Rc<PjRtBuffer>>>,
+    execs: RefCell<HashMap<String, StageHandle>>,
+    pub stats: RefCell<EngineStats>,
+    /// Per-dispatch stage timing (stage name → accumulated seconds).
+    pub stage_times: RefCell<OpTimes>,
+}
+
+impl Engine {
+    /// Load manifest + weights for `artifacts/<model>`; creates a PJRT
+    /// CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu()?;
+        Self::load_with_client(dir, client)
+    }
+
+    /// Share one PJRT client across engines (one process-wide CPU device).
+    pub fn load_with_client(dir: &Path, client: PjRtClient) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let weights = WeightsFile::load(&dir.join(&manifest.weights_file))?;
+        for name in &manifest.weight_order {
+            if !weights.tensors.contains_key(name) {
+                bail!("weights.bin missing {name:?}");
+            }
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            weights,
+            weight_bufs: RefCell::new(HashMap::new()),
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+            stage_times: RefCell::new(OpTimes::new()),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn model(&self) -> &str {
+        &self.manifest.model
+    }
+
+    /// Host copy of a weight tensor (used by tests / eager planning).
+    pub fn weight_host(&self, name: &str) -> Result<&Tensor> {
+        self.weights.get(name)
+    }
+
+    /// Device buffer for a weight (uploaded once, cached).
+    pub fn weight_buf(&self, name: &str) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let t = self.weights.get(name)?;
+        let buf = Rc::new(self.upload(t)?);
+        self.weight_bufs
+            .borrow_mut()
+            .insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_raw_bytes(elem_type(t.dtype), &t.data,
+                                        &t.shape, None)
+            .context("upload")
+    }
+
+    /// Download a device buffer to a host tensor.
+    pub fn download(&self, b: &PjRtBuffer) -> Result<Tensor> {
+        let lit = b.to_literal_sync()?;
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|d| *d as usize).collect();
+        let dt = match shape.ty() {
+            ElementType::F32 => DType::F32,
+            ElementType::S8 => DType::I8,
+            ElementType::S32 => DType::I32,
+            other => bail!("unsupported download type {other:?}"),
+        };
+        let mut data = vec![0u8; lit.size_bytes()];
+        match dt {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                data.clear();
+                for x in v {
+                    data.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>()?;
+                data.clear();
+                for x in v {
+                    data.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            DType::I8 => {
+                let v = lit.to_vec::<i8>()?;
+                data = v.into_iter().map(|x| x as u8).collect();
+            }
+        }
+        Tensor::new(dt, dims, data)
+    }
+
+    /// Compile (or fetch the cached) executable for a stage.
+    pub fn stage(&self, name: &str) -> Result<StageHandle> {
+        if let Some(h) = self.execs.borrow().get(name) {
+            return Ok(h.clone());
+        }
+        let spec = self.manifest.stage(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )
+        .with_context(|| format!("load {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile stage {name}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        let h = StageHandle { spec, exe: Rc::new(exe) };
+        self.execs.borrow_mut().insert(name.to_string(), h.clone());
+        Ok(h)
+    }
+
+    /// Whether a stage exists in the manifest.
+    pub fn has_stage(&self, name: &str) -> bool {
+        self.manifest.stages.contains_key(name)
+    }
+
+    /// Execute a stage: weights (from cache) are prepended, then `args`.
+    /// Returns one `PjRtBuffer` per declared output.
+    pub fn run(&self, h: &StageHandle, args: &[Arg]) -> Result<Vec<PjRtBuffer>> {
+        if args.len() != h.spec.args.len() {
+            bail!(
+                "stage {}: {} args given, {} expected",
+                h.spec.name,
+                args.len(),
+                h.spec.args.len()
+            );
+        }
+        // Upload host args first (two-pass so references stay stable).
+        let mut uploads: Vec<Option<PjRtBuffer>> =
+            Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Dev(_) => uploads.push(None),
+                Arg::Host(t) => {
+                    let spec = &h.spec.args[i];
+                    if t.shape != spec.shape || t.dtype != spec.dtype {
+                        bail!(
+                            "stage {} arg {} ({}): got {:?} {:?}, want {:?} {:?}",
+                            h.spec.name, i, spec.name, t.dtype, t.shape,
+                            spec.dtype, spec.shape
+                        );
+                    }
+                    uploads.push(Some(self.upload(t)?));
+                }
+            }
+        }
+        // Assemble the full input list as device-buffer references.
+        let mut owned: Vec<Rc<PjRtBuffer>> = Vec::new();
+        for w in &h.spec.weights {
+            owned.push(self.weight_buf(w)?);
+        }
+        let mut ptrs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(owned.len() + args.len());
+        for o in &owned {
+            ptrs.push(o);
+        }
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                Arg::Dev(b) => ptrs.push(b),
+                Arg::Host(_) => ptrs.push(uploads[i].as_ref().unwrap()),
+            }
+        }
+        let t0 = Instant::now();
+        let mut res = h.exe.execute_b(&ptrs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.dispatches += 1;
+            st.dispatch_secs += dt;
+        }
+        self.stage_times.borrow_mut().add(&h.spec.name, dt);
+        if res.is_empty() || res[0].len() != h.spec.outputs.len() {
+            bail!(
+                "stage {}: got {} outputs, manifest says {}",
+                h.spec.name,
+                res.first().map(|r| r.len()).unwrap_or(0),
+                h.spec.outputs.len()
+            );
+        }
+        Ok(res.remove(0))
+    }
+
+    /// Convenience: run with host tensors only, download all outputs.
+    pub fn run_host(&self, stage: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let h = self.stage(stage)?;
+        let dev_args: Vec<Arg> = args.iter().map(|t| Arg::Host(t)).collect();
+        let outs = self.run(&h, &dev_args)?;
+        outs.iter().map(|b| self.download(b)).collect()
+    }
+
+    /// Pre-compile a set of stages (startup warm; returns total seconds).
+    pub fn warm(&self, stages: &[&str]) -> Result<f64> {
+        let t0 = Instant::now();
+        for s in stages {
+            self.stage(s)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_type_mapping() {
+        assert_eq!(elem_type(DType::F32), ElementType::F32);
+        assert_eq!(elem_type(DType::I8), ElementType::S8);
+        assert_eq!(elem_type(DType::I32), ElementType::S32);
+    }
+}

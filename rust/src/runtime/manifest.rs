@@ -1,0 +1,258 @@
+//! Typed view of `artifacts/<model>/manifest.json`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::substrate::json::Json;
+
+use super::tensor::DType;
+
+/// One runtime argument of a stage (non-weight input).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One output of a stage.
+#[derive(Debug, Clone)]
+pub struct OutSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// A lowered stage: HLO file + input contract.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub file: String,
+    /// Weight names passed (in order) before the runtime args.
+    pub weights: Vec<String>,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutSpec>,
+    /// Free-form metadata from the emitter (kind, bucket, attn, linear…).
+    pub meta: HashMap<String, String>,
+}
+
+impl StageSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|s| s.parse().ok())
+    }
+}
+
+/// Parsed manifest for one model directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub weights_file: String,
+    pub weight_order: Vec<String>,
+    pub stages: HashMap<String, StageSpec>,
+    /// Raw config object from the emitter (tiny-config dims).
+    pub config: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .context("manifest.model")?
+            .to_string();
+        let weights_file = j
+            .get("weights_file")
+            .and_then(Json::as_str)
+            .context("manifest.weights_file")?
+            .to_string();
+        let weight_order = j
+            .get("weight_order")
+            .and_then(Json::as_arr)
+            .context("manifest.weight_order")?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .context("weight_order strings")?;
+        let mut stages = HashMap::new();
+        let stage_obj = j
+            .get("stages")
+            .and_then(Json::obj_entries)
+            .context("manifest.stages")?;
+        for (name, sj) in stage_obj {
+            stages.insert(name.clone(), parse_stage(name, sj)?);
+        }
+        let config = j.get("config").cloned().unwrap_or(Json::Null);
+        Ok(Manifest {
+            model,
+            dir: dir.to_path_buf(),
+            weights_file,
+            weight_order,
+            stages,
+            config,
+        })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageSpec> {
+        self.stages
+            .get(name)
+            .with_context(|| format!("model {}: no stage {name:?}", self.model))
+    }
+
+    pub fn stage_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.stages.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Stages whose meta.kind matches.
+    pub fn stages_of_kind(&self, kind: &str) -> Vec<&StageSpec> {
+        let mut v: Vec<&StageSpec> = self
+            .stages
+            .values()
+            .filter(|s| s.meta_str("kind") == Some(kind))
+            .collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Config integer field (tiny-config dims).
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .and_then(Json::as_usize)
+            .with_context(|| format!("config.{key}"))
+    }
+}
+
+fn parse_stage(name: &str, j: &Json) -> Result<StageSpec> {
+    let file = j
+        .get("file")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{name}.file"))?
+        .to_string();
+    let weights = j
+        .get("weights")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{name}.weights"))?
+        .iter()
+        .map(|v| v.as_str().map(str::to_string))
+        .collect::<Option<Vec<_>>>()
+        .with_context(|| format!("{name}.weights strings"))?;
+    let mut args = Vec::new();
+    for aj in j
+        .get("args")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{name}.args"))?
+    {
+        args.push(ArgSpec {
+            name: aj
+                .get("name")
+                .and_then(Json::as_str)
+                .context("arg.name")?
+                .to_string(),
+            shape: shape_of(aj.get("shape").context("arg.shape")?)?,
+            dtype: DType::from_name(
+                aj.get("dtype").and_then(Json::as_str).context("arg.dtype")?,
+            )?,
+        });
+    }
+    let mut outputs = Vec::new();
+    for oj in j
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{name}.outputs"))?
+    {
+        outputs.push(OutSpec {
+            shape: shape_of(oj.get("shape").context("out.shape")?)?,
+            dtype: DType::from_name(
+                oj.get("dtype").and_then(Json::as_str).context("out.dtype")?,
+            )?,
+        });
+    }
+    let mut meta = HashMap::new();
+    if let Some(entries) = j.get("meta").and_then(Json::obj_entries) {
+        for (k, v) in entries {
+            let vs = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                other => other.to_string(),
+            };
+            meta.insert(k.clone(), vs);
+        }
+    }
+    Ok(StageSpec { name: name.to_string(), file, weights, args, outputs, meta })
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape array")?
+        .iter()
+        .map(|v| v.as_usize().context("shape int"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "llama",
+      "weights_file": "weights.bin",
+      "weight_order": ["embed", "final_norm"],
+      "config": {"d_model": 256, "n_layers": 4},
+      "stages": {
+        "decode_b1": {
+          "file": "decode_b1.hlo.txt",
+          "weights": ["embed", "final_norm"],
+          "args": [
+            {"name": "tokens", "shape": [1], "dtype": "i32"},
+            {"name": "cache_k", "shape": [4,1,8,512,32], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [1, 512], "dtype": "f32"}],
+          "meta": {"kind": "decode", "batch": 1, "attn": "naive"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        assert_eq!(m.model, "llama");
+        assert_eq!(m.weight_order.len(), 2);
+        let s = m.stage("decode_b1").unwrap();
+        assert_eq!(s.args[1].shape, vec![4, 1, 8, 512, 32]);
+        assert_eq!(s.meta_usize("batch"), Some(1));
+        assert_eq!(s.meta_str("attn"), Some("naive"));
+        assert_eq!(m.cfg_usize("d_model").unwrap(), 256);
+        assert_eq!(m.stages_of_kind("decode").len(), 1);
+        assert!(m.stage("nope").is_err());
+    }
+}

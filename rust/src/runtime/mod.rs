@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the
+//! serving hot path with device-resident buffers.
+//!
+//! * [`weights`] — parser for the `weights.bin` MMWB container written by
+//!   `python/compile/weights.py` (also reads `goldens.bin`).
+//! * [`manifest`] — typed view of `manifest.json` (stages, arg specs).
+//! * [`tensor`] — host-side tensor (shape + dtype + bytes) used at the
+//!   runtime boundary.
+//! * [`engine`] — the PJRT engine: `HloModuleProto::from_text_file` →
+//!   `client.compile` at load, `execute_b` over device buffers per step.
+//!   The patched `xla` crate returns one buffer per output-tuple leaf so
+//!   KV caches chain across steps without host round-trips (the
+//!   CUDA-Graph-style static-buffer discipline, paper §4.1.2).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{Engine, StageHandle};
+pub use manifest::{Manifest, StageSpec};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,142 @@
+//! Host tensor type at the runtime boundary.
+//!
+//! Deliberately minimal: shape + dtype + contiguous little-endian bytes.
+//! Conversions to/from `xla::Literal` live in `engine`.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            c => bail!("unknown dtype code {c}"),
+        })
+    }
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "f32" => DType::F32,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            n => bail!("unknown dtype name {n:?}"),
+        })
+    }
+}
+
+/// A host-resident dense tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let want = shape.iter().product::<usize>() * dtype.size();
+        if data.len() != want {
+            bail!(
+                "tensor data {} bytes but shape {:?} x {:?} needs {}",
+                data.len(),
+                shape,
+                dtype,
+                want
+            );
+        }
+        Ok(Tensor { dtype, shape, data })
+    }
+
+    pub fn from_f32(shape: &[usize], vals: &[f32]) -> Self {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::new(DType::F32, shape.to_vec(), data).expect("shape/f32")
+    }
+
+    pub fn from_i32(shape: &[usize], vals: &[i32]) -> Self {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor::new(DType::I32, shape.to_vec(), data).expect("shape/i32")
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::from_i32(&[1], &[v])
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n = shape.iter().product::<usize>() * dtype.size();
+        Tensor { dtype, shape: to_vec(shape), data: vec![0u8; n] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("not f32: {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("not i32: {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn to_vec(s: &[usize]) -> Vec<usize> {
+    s.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 2], &[1.0, -2.5, 3.0, 0.0]);
+        assert_eq!(t.elems(), 4);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.0, 0.0]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn size_checked() {
+        assert!(Tensor::new(DType::F32, vec![3], vec![0u8; 11]).is_err());
+        assert!(Tensor::new(DType::I8, vec![3], vec![0u8; 3]).is_ok());
+    }
+
+    #[test]
+    fn zeros() {
+        let t = Tensor::zeros(DType::I32, &[4, 2]);
+        assert_eq!(t.as_i32().unwrap(), vec![0; 8]);
+    }
+}

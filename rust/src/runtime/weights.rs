@@ -1,0 +1,177 @@
+//! Reader for the MMWB weights container (`python/compile/weights.py`).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   4B  b"MMWB"
+//! version u32 (1)
+//! count   u32
+//! per tensor: name_len u16, name, dtype u8, ndim u8, dims u32*ndim,
+//!             nbytes u64, raw data
+//! ```
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{DType, Tensor};
+
+pub const MAGIC: &[u8; 4] = b"MMWB";
+pub const VERSION: u32 = 1;
+
+/// Named tensors in file order.
+#[derive(Debug, Default)]
+pub struct WeightsFile {
+    pub order: Vec<String>,
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut c = Cursor { b: buf, i: 0 };
+        if c.bytes(4)? != MAGIC {
+            bail!("bad magic");
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            bail!("unsupported version {version}");
+        }
+        let count = c.u32()? as usize;
+        let mut out = WeightsFile::default();
+        for _ in 0..count {
+            let nlen = c.u16()? as usize;
+            let name = String::from_utf8(c.bytes(nlen)?.to_vec())
+                .context("tensor name utf8")?;
+            let dtype = DType::from_code(c.u8()?)?;
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let nbytes = c.u64()? as usize;
+            let data = c.bytes(nbytes)?.to_vec();
+            let t = Tensor::new(dtype, shape, data)
+                .with_context(|| format!("tensor {name}"))?;
+            out.order.push(name.clone());
+            if out.tensors.insert(name.clone(), t).is_some() {
+                bail!("duplicate tensor {name}");
+            }
+        }
+        if c.i != buf.len() {
+            bail!("{} trailing bytes", buf.len() - c.i);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing weight {name:?}"))
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated at {}+{}", self.i, n);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(entries: &[(&str, DType, &[usize], &[u8])]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (name, dt, shape, data) in entries {
+            b.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            b.extend_from_slice(name.as_bytes());
+            b.push(match dt {
+                DType::F32 => 0,
+                DType::I8 => 1,
+                DType::I32 => 2,
+            });
+            b.push(shape.len() as u8);
+            for d in *shape {
+                b.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            b.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            b.extend_from_slice(data);
+        }
+        b
+    }
+
+    #[test]
+    fn parses_two_tensors() {
+        let f32_data = [1f32, 2., 3., 4.]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect::<Vec<_>>();
+        let buf = mk(&[
+            ("a.w", DType::F32, &[2, 2], &f32_data),
+            ("b", DType::I8, &[3], &[1u8, 2, 3]),
+        ]);
+        let w = WeightsFile::parse(&buf).unwrap();
+        assert_eq!(w.order, vec!["a.w", "b"]);
+        assert_eq!(w.get("a.w").unwrap().as_f32().unwrap()[3], 4.0);
+        assert_eq!(w.get("b").unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(WeightsFile::parse(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let buf = mk(&[("x", DType::I8, &[2], &[1, 2])]);
+        assert!(WeightsFile::parse(&buf[..buf.len() - 1]).is_err());
+        let mut b2 = buf.clone();
+        b2.push(0);
+        assert!(WeightsFile::parse(&b2).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_data_mismatch() {
+        let buf = mk(&[("x", DType::F32, &[2], &[0u8; 4])]); // needs 8
+        assert!(WeightsFile::parse(&buf).is_err());
+    }
+}

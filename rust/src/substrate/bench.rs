@@ -1,0 +1,175 @@
+//! Mini-criterion: a timing harness for `cargo bench` targets
+//! (`harness = false`).
+//!
+//! Each bench binary builds a `BenchSuite`, registers closures, and calls
+//! `run()`, which warms up, samples wall time, and prints
+//! mean/stddev/min plus a throughput column — enough statistical
+//! discipline for the paper-reproduction tables without criterion.
+
+use std::time::{Duration, Instant};
+
+use super::metrics::Histogram;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Hard cap per benchmark so slow cases don't stall the suite.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            sample_iters: 10,
+            max_time: Duration::from_secs(20),
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        let mut cfg = BenchConfig::default();
+        // MMSERVE_BENCH_FAST=1 trims iterations (CI smoke).
+        if std::env::var("MMSERVE_BENCH_FAST").is_ok() {
+            cfg.warmup_iters = 1;
+            cfg.sample_iters = 3;
+            cfg.max_time = Duration::from_secs(5);
+        }
+        println!("\n=== {title} ===");
+        BenchSuite { title: title.to_string(), cfg, results: vec![] }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Time `f` and record under `name`. Returns mean seconds.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut h = Histogram::new();
+        let t_suite = Instant::now();
+        for _ in 0..self.cfg.sample_iters {
+            let t = Instant::now();
+            f();
+            h.record(t.elapsed().as_secs_f64());
+            if t_suite.elapsed() > self.cfg.max_time {
+                break;
+            }
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_s: h.mean(),
+            stddev_s: h.stddev(),
+            min_s: h.min(),
+            samples: h.len(),
+        };
+        println!(
+            "  {:<44} {:>10.3} ms ±{:>7.3} (min {:>9.3}, n={})",
+            r.name,
+            r.mean_s * 1e3,
+            r.stddev_s * 1e3,
+            r.min_s * 1e3,
+            r.samples
+        );
+        let mean = r.mean_s;
+        self.results.push(r);
+        mean
+    }
+
+    /// Record an externally-measured value (e.g. model-derived time).
+    pub fn record(&mut self, name: &str, secs: f64) {
+        println!("  {:<44} {:>10.3} ms  (derived)", name, secs * 1e3);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            mean_s: secs,
+            stddev_s: 0.0,
+            min_s: secs,
+            samples: 1,
+        });
+    }
+
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Print a speedup line of `base / opt`.
+    pub fn speedup(&self, label: &str, base: &str, opt: &str) -> Option<f64> {
+        let b = self.result(base)?.mean_s;
+        let o = self.result(opt)?.mean_s;
+        let s = b / o;
+        println!("  speedup [{label}]: {s:.2}x  ({base} / {opt})");
+        Some(s)
+    }
+}
+
+/// Geometric mean of speedups — the paper's cross-task aggregate.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Keep the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let mut s = BenchSuite::new("test").with_config(BenchConfig {
+            warmup_iters: 0,
+            sample_iters: 3,
+            max_time: Duration::from_secs(5),
+        });
+        let m = s.bench("sleep2ms", || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(m >= 0.002);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let mut s = BenchSuite::new("t2");
+        s.record("slow", 0.2);
+        s.record("fast", 0.1);
+        let sp = s.speedup("x", "slow", "fast").unwrap();
+        assert!((sp - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

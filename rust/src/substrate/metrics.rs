@@ -1,0 +1,221 @@
+//! Latency histograms, percentile summaries, and scoped timers.
+//!
+//! The paper's characterization methodology (Figs 3–4) is built on
+//! per-operator wall-time accounting and end-to-end latency
+//! distributions; this module is the measurement substrate for both.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Reservoir of raw samples with percentile queries (exact, sorted on
+/// demand — sample counts here are small enough that this is fine).
+#[derive(Default, Clone, Debug)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+    /// p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3} p50={:.3} p95={:.3} p99={:.3} min={:.3} max={:.3}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.min(),
+            self.max()
+        )
+    }
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Named wall-time accumulators — the operator-breakdown collector.
+/// Keys are operator categories ("Linear", "Attention", "KV_Reorder",
+/// "Idle", …) exactly as in the paper's Figure 4.
+#[derive(Default, Clone, Debug)]
+pub struct OpTimes {
+    acc: BTreeMap<String, f64>,
+}
+
+impl OpTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&mut self, key: &str, secs: f64) {
+        *self.acc.entry(key.to_string()).or_insert(0.0) += secs;
+    }
+    pub fn merge(&mut self, other: &OpTimes) {
+        for (k, v) in &other.acc {
+            self.add(k, *v);
+        }
+    }
+    pub fn get(&self, key: &str) -> f64 {
+        self.acc.get(key).copied().unwrap_or(0.0)
+    }
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+    pub fn entries(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.acc.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+    /// Fractions summing to 1 (empty → empty).
+    pub fn fractions(&self) -> Vec<(String, f64)> {
+        let t = self.total();
+        if t == 0.0 {
+            return vec![];
+        }
+        self.acc.iter().map(|(k, v)| (k.clone(), v / t)).collect()
+    }
+}
+
+/// RAII timer recording into an `OpTimes` on drop.
+pub struct ScopedTimer<'a> {
+    times: &'a mut OpTimes,
+    key: &'a str,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(times: &'a mut OpTimes, key: &'a str) -> Self {
+        ScopedTimer { times, key, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.times.add(self.key, self.start.elapsed().as_secs_f64());
+    }
+}
+
+/// Throughput/latency counters for a serving run.
+#[derive(Default, Debug, Clone)]
+pub struct ServeStats {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub wall_secs: f64,
+    pub ttft: Histogram,
+    pub tpot: Histogram,
+    pub e2e: Histogram,
+}
+
+impl ServeStats {
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_secs
+    }
+    pub fn requests_per_s(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            return 0.0;
+        }
+        self.requests_completed as f64 / self.wall_secs
+    }
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} wall={:.2}s thpt={:.1} tok/s \
+             ttft(ms) [{}] tpot(ms) [{}] e2e(ms) [{}]",
+            self.requests_completed,
+            self.tokens_generated,
+            self.wall_secs,
+            self.throughput_tok_s(),
+            self.ttft.summary(),
+            self.tpot.summary(),
+            self.e2e.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn op_times_accumulate_and_fraction() {
+        let mut t = OpTimes::new();
+        t.add("Linear", 3.0);
+        t.add("Attention", 1.0);
+        t.add("Linear", 1.0);
+        assert_eq!(t.get("Linear"), 4.0);
+        assert_eq!(t.total(), 5.0);
+        let f = t.fractions();
+        let lin = f.iter().find(|(k, _)| k == "Linear").unwrap().1;
+        assert!((lin - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scoped_timer_records() {
+        let mut t = OpTimes::new();
+        {
+            let _g = ScopedTimer::new(&mut t, "op");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(t.get("op") >= 0.004);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

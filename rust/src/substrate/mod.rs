@@ -1,0 +1,15 @@
+//! Std-only infrastructure substrates.
+//!
+//! The build environment has no network access to crates.io, so the
+//! conveniences a serving framework would normally pull in (serde_json,
+//! clap, criterion, proptest, rand) are implemented here from scratch
+//! (DESIGN.md §Substitutions). Each module is small, tested, and scoped
+//! to exactly what the coordinator needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod table;

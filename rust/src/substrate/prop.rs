@@ -1,0 +1,181 @@
+//! Mini-proptest: seeded randomized property testing with shrinking.
+//!
+//! `prop_check(cases, gen, prop)` draws `cases` random inputs from `gen`,
+//! asserts `prop` on each, and on failure greedily shrinks the input via
+//! `Shrink` before panicking with the minimal counterexample. Used for
+//! the coordinator invariants in DESIGN.md §7.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller values (empty when minimal).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves, drop one element, shrink one element
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs. `gen` draws an input from
+/// the RNG; `prop` returns Err(reason) on violation.
+pub fn prop_check<T, G, P>(cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            // shrink
+            let mut best = input;
+            let mut best_reason = reason;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in best.shrink() {
+                    budget -= 1;
+                    if let Err(r) = prop(&cand) {
+                        best = cand;
+                        best_reason = r;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  \
+                 input: {best:?}\n  reason: {best_reason}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        prop_check(
+            200,
+            1,
+            |r| r.usize(0, 100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        prop_check(
+            100,
+            2,
+            |r| r.usize(0, 1000),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Capture the panic message and check the counterexample shrank
+        // to something small.
+        let res = std::panic::catch_unwind(|| {
+            prop_check(
+                100,
+                3,
+                |r| r.usize(0, 10_000),
+                |&x| if x < 50 { Ok(()) } else { Err("big".into()) },
+            )
+        });
+        let msg = match res {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("expected failure"),
+        };
+        // greedy shrink should land on exactly 50
+        assert!(msg.contains("input: 50"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![5usize, 6, 7, 8];
+        for s in v.shrink() {
+            assert!(
+                s.len() < v.len() || s.iter().sum::<usize>() < v.iter().sum()
+            );
+        }
+    }
+}

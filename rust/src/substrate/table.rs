@@ -1,0 +1,117 @@
+//! Plain-text table rendering for bench/characterization reports —
+//! prints the same rows/series the paper's tables and figures show.
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+/// Format byte counts adaptively.
+pub fn fmt_bytes(b: f64) -> String {
+    const K: f64 = 1024.0;
+    if b < K {
+        format!("{b:.0}B")
+    } else if b < K * K {
+        format!("{:.1}KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1}MiB", b / K / K)
+    } else {
+        format!("{:.2}GiB", b / K / K / K)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["task", "ms"]);
+        t.rowf(&["T-T", "1.5"]);
+        t.rowf(&["longer-task-name", "100.25"]);
+        let r = t.render();
+        assert!(r.contains("| task "));
+        assert!(r.contains("| longer-task-name |"));
+        assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.rowf(&["only-one"]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_time(0.0025), "2.50ms");
+        assert_eq!(fmt_time(2.5), "2.50s");
+        assert_eq!(fmt_bytes(2048.0), "2.0KiB");
+    }
+}

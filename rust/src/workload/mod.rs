@@ -1,0 +1,255 @@
+//! Workload generators calibrated to the paper's Table 2.
+//!
+//! Each dataset row (HumanEval, MBPP, Fleurs, MSCOCO, Vizwiz, synthetic
+//! HSTU) is described by its min/max/avg input and output sequence
+//! lengths; samples are drawn from a truncated lognormal matched to
+//! those statistics — the evaluation consumes only length
+//! distributions, which Table 2 fully specifies (DESIGN.md
+//! §Substitutions).
+
+pub mod batchcfg;
+
+use crate::models::TaskKind;
+use crate::substrate::rng::Rng;
+
+/// Length statistics for one modality stream (Table 2 row slice).
+#[derive(Debug, Clone, Copy)]
+pub struct LenStats {
+    pub min: usize,
+    pub max: usize,
+    pub avg: f64,
+}
+
+impl LenStats {
+    pub const fn new(min: usize, max: usize, avg: f64) -> Self {
+        LenStats { min, max, avg }
+    }
+
+    /// Draw from a core-plus-tail mixture matched to (min, max, avg):
+    /// with probability 1−q a normal around a core mean (clipped to the
+    /// bounds), with probability q a uniform tail over [avg, max] — the
+    /// long right tails of code-generation outputs (Table 2's 10k max)
+    /// without dragging the mean.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if self.min == self.max {
+            return self.min;
+        }
+        const Q: f64 = 0.05;
+        let tail_mean = (self.avg + self.max as f64) / 2.0;
+        let core_mean =
+            ((self.avg - Q * tail_mean) / (1.0 - Q)).max(self.min as f64);
+        let x = if rng.f64() < Q {
+            self.avg + rng.f64() * (self.max as f64 - self.avg)
+        } else {
+            core_mean + rng.normal() * (core_mean / 3.0)
+        };
+        (x.round() as i64)
+            .clamp(self.min as i64, self.max as i64) as usize
+    }
+}
+
+/// One Table-2 row: a (model, dataset, task) workload.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub task: TaskKind,
+    pub dataset: &'static str,
+    pub input: LenStats,
+    pub output: LenStats,
+    /// Average decode step count (paper's "Decode Step Count").
+    pub decode_steps: f64,
+    /// Paper-reported average per-sample latency on A100, ms (Table 2
+    /// "Avg. Time"), used as reference in EXPERIMENTS.md comparisons.
+    pub paper_avg_ms: f64,
+}
+
+/// The paper's Table 2 (averaged rows; T-T uses HumanEval as the primary
+/// dataset and MBPP is listed separately).
+pub const TABLE2: [WorkloadSpec; 10] = [
+    WorkloadSpec {
+        task: TaskKind::TextToText,
+        dataset: "HumanEval",
+        input: LenStats::new(44, 430, 154.0),
+        output: LenStats::new(55, 10_000, 692.0),
+        decode_steps: 538.0,
+        paper_avg_ms: 4494.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::TextToText,
+        dataset: "MBPP",
+        input: LenStats::new(29, 1748, 59.0),
+        output: LenStats::new(38, 10_000, 1076.0),
+        decode_steps: 1016.0,
+        paper_avg_ms: 5567.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::SpeechToSpeech,
+        dataset: "Fleurs",
+        input: LenStats::new(179, 1464, 493.0),
+        output: LenStats::new(129, 1029, 385.0),
+        decode_steps: 35.0,
+        paper_avg_ms: 1578.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::SpeechToText,
+        dataset: "Fleurs",
+        input: LenStats::new(179, 1464, 493.0),
+        output: LenStats::new(15, 98, 36.0),
+        decode_steps: 30.0,
+        paper_avg_ms: 1321.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::TextToSpeech,
+        dataset: "Fleurs",
+        input: LenStats::new(12, 80, 31.0),
+        output: LenStats::new(145, 1030, 393.0),
+        decode_steps: 34.0,
+        paper_avg_ms: 1432.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::TextToTextTrans,
+        dataset: "Fleurs",
+        input: LenStats::new(12, 80, 31.0),
+        output: LenStats::new(14, 95, 35.0),
+        decode_steps: 34.0,
+        paper_avg_ms: 1187.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::ImageToText,
+        dataset: "MSCOCO",
+        input: LenStats::new(1030, 1030, 1030.0),
+        output: LenStats::new(30, 30, 30.0),
+        decode_steps: 30.0,
+        paper_avg_ms: 2913.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::ImageTextToText,
+        dataset: "Vizwiz",
+        input: LenStats::new(1033, 1095, 1040.0),
+        output: LenStats::new(10, 10, 10.0),
+        decode_steps: 10.0,
+        paper_avg_ms: 1253.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::TextToImage,
+        dataset: "MSCOCO",
+        input: LenStats::new(10, 22, 13.9),
+        output: LenStats::new(1025, 1025, 1025.0),
+        decode_steps: 1024.0,
+        paper_avg_ms: 159_702.0,
+    },
+    WorkloadSpec {
+        task: TaskKind::HistoryToAction,
+        dataset: "Synthetic",
+        input: LenStats::new(4507, 5121, 4814.0),
+        output: LenStats::new(4507, 5121, 4813.9),
+        decode_steps: 0.0,
+        paper_avg_ms: 50.0,
+    },
+];
+
+/// Find the primary Table-2 row for a task.
+pub fn spec_for(task: TaskKind) -> &'static WorkloadSpec {
+    TABLE2
+        .iter()
+        .find(|w| w.task == task)
+        .expect("every task has a Table-2 row")
+}
+
+/// One sampled workload item (paper-scale lengths).
+#[derive(Debug, Clone)]
+pub struct WorkItemSample {
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+/// Draw `n` samples from a workload spec.
+pub fn sample_workload(spec: &WorkloadSpec, n: usize, seed: u64)
+                       -> Vec<WorkItemSample> {
+    let mut rng = Rng::new(seed ^ 0x9d2c_5680);
+    (0..n)
+        .map(|_| WorkItemSample {
+            input_len: spec.input.sample(&mut rng),
+            output_len: spec.output.sample(&mut rng),
+        })
+        .collect()
+}
+
+/// Generate synthetic HSTU user histories (random item ids, lengths from
+/// the spec) — the paper's synthetic dataset (§3.1: random indices in
+/// [0, 6000)).
+pub fn hstu_histories(n: usize, max_len: usize, seed: u64) -> Vec<Vec<i32>> {
+    let spec = spec_for(TaskKind::HistoryToAction);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = spec.input.sample(&mut rng).min(max_len).max(1);
+            (0..len).map(|_| rng.range(0, 6000) as i32).collect()
+        })
+        .collect()
+}
+
+/// Summary statistics over sampled lengths (Tab-2 regeneration).
+pub fn stats(xs: &[usize]) -> (usize, usize, f64) {
+    let min = xs.iter().copied().min().unwrap_or(0);
+    let max = xs.iter().copied().max().unwrap_or(0);
+    let avg = xs.iter().sum::<usize>() as f64 / xs.len().max(1) as f64;
+    (min, max, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_bounds() {
+        let mut rng = Rng::new(1);
+        let s = LenStats::new(10, 100, 30.0);
+        for _ in 0..2000 {
+            let x = s.sample(&mut rng);
+            assert!((10..=100).contains(&x));
+        }
+    }
+
+    #[test]
+    fn sample_mean_tracks_avg() {
+        for spec in &TABLE2 {
+            let xs: Vec<usize> = sample_workload(spec, 4000, 7)
+                .into_iter()
+                .map(|s| s.input_len)
+                .collect();
+            let (_, _, avg) = stats(&xs);
+            let rel = (avg - spec.input.avg).abs() / spec.input.avg;
+            assert!(
+                rel < 0.35,
+                "{} {}: avg {avg} vs {}",
+                spec.dataset,
+                spec.task,
+                spec.input.avg
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_length_rows_are_constant() {
+        let it = spec_for(TaskKind::ImageToText);
+        let xs = sample_workload(it, 50, 3);
+        assert!(xs.iter().all(|s| s.input_len == 1030));
+    }
+
+    #[test]
+    fn hstu_histories_in_range() {
+        let hs = hstu_histories(20, 1024, 5);
+        assert_eq!(hs.len(), 20);
+        for h in hs {
+            assert!(!h.is_empty() && h.len() <= 1024);
+            assert!(h.iter().all(|&i| (0..6000).contains(&i)));
+        }
+    }
+
+    #[test]
+    fn every_task_has_a_row() {
+        for t in TaskKind::all() {
+            let _ = spec_for(t);
+        }
+    }
+}

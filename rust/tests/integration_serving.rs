@@ -1,0 +1,205 @@
+//! Integration: the full coordinator serving paths over real artifacts —
+//! continuous batching, contrastive image generation, the Seamless
+//! pipeline, HSTU, LayerSkip equivalence, and beam-reorder discipline
+//! equivalence.
+
+use mmserve::coordinator::decoder_loop::{encode_prompt, DecoderSession};
+use mmserve::coordinator::opts::OptConfig;
+use mmserve::coordinator::request::{Request, RequestInput, ResponseOutput,
+                                    SamplingParams};
+use mmserve::coordinator::seamless_pipe::{ReorderMode, SeamlessPipeline,
+                                          SeamlessTask};
+use mmserve::coordinator::server::{Router, RouterConfig};
+use mmserve::models::tokenizer::{IMG_BASE, IMG_TOKENS};
+use mmserve::models::{ModelKind, TaskKind};
+use mmserve::runtime::engine::Engine;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = mmserve::artifacts_dir();
+    if dir.join("llama").join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built — skipping");
+        None
+    }
+}
+
+#[test]
+fn batched_router_serves_text_requests() {
+    let Some(dir) = artifacts() else { return };
+    let router = Router::start(&dir, RouterConfig {
+        models: vec![ModelKind::Llama],
+        opt: OptConfig::baseline(),
+        reorder: ReorderMode::Fused,
+        batch: 4,
+        prefill_budget: 0,
+    });
+    let mut rxs = vec![];
+    for i in 0..7 {
+        let mut req = Request::text(router.fresh_id(), TaskKind::TextToText,
+                                    "hello world", 6 + i % 3);
+        req.sampling = SamplingParams::greedy();
+        rxs.push((req.id, req.max_new_tokens, router.submit(req).unwrap()));
+    }
+    for (id, max_new, rx) in rxs {
+        let r = rx.recv().unwrap().expect("response");
+        assert_eq!(r.id, id);
+        assert!(r.decode_steps <= max_new);
+        assert!(r.decode_steps > 0);
+        assert!(matches!(r.output, ResponseOutput::Text(_)));
+    }
+    router.shutdown();
+}
+
+#[test]
+fn batched_results_match_single_stream() {
+    // Continuous batching must not change greedy outputs vs bs=1.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("llama")).unwrap();
+    let session = DecoderSession::new(&engine, OptConfig::baseline())
+        .unwrap();
+    let prompts = ["alpha beta", "the function returns", "zzz"];
+    let mut singles = vec![];
+    for p in prompts {
+        let ids = encode_prompt(p);
+        singles.push(
+            session.generate(&ids, 8, &SamplingParams::greedy()).unwrap()
+                .tokens,
+        );
+    }
+    let router = Router::start(&dir, RouterConfig {
+        models: vec![ModelKind::Llama],
+        opt: OptConfig::baseline(),
+        reorder: ReorderMode::Fused,
+        batch: 4,
+        prefill_budget: 0,
+    });
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut req = Request::text(router.fresh_id(),
+                                        TaskKind::TextToText, p, 8);
+            req.sampling = SamplingParams::greedy();
+            router.submit(req).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.tokens, singles[i], "prompt {i} diverged in batch");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn layerskip_greedy_equals_baseline_greedy() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("llama")).unwrap();
+    let base = DecoderSession::new(&engine, OptConfig::baseline()).unwrap();
+    let mut o = OptConfig::baseline();
+    o.layerskip = true;
+    let ls = DecoderSession::new(&engine, o).unwrap();
+    for p in ["speculate on this", "fn main() {"] {
+        let ids = encode_prompt(p);
+        let sp = SamplingParams::greedy();
+        let rb = base.generate(&ids, 20, &sp).unwrap();
+        let rl = ls.generate(&ids, 20, &sp).unwrap();
+        let n = rb.tokens.len().min(rl.tokens.len());
+        assert_eq!(rb.tokens[..n], rl.tokens[..n],
+                   "greedy layerskip must match baseline ({p})");
+        assert!(rl.draft_rounds > 0);
+    }
+}
+
+#[test]
+fn eager_and_graph_agree() {
+    // The per-op dispatch pipeline computes the same function as the
+    // fused graph (Obs #2 is about *time*, not values).
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("llama")).unwrap();
+    let graph = DecoderSession::new(&engine, OptConfig::baseline()).unwrap();
+    let eager = DecoderSession::new(&engine, OptConfig::eager_baseline())
+        .unwrap();
+    let ids = encode_prompt("compare modes");
+    let sp = SamplingParams::greedy();
+    let rg = graph.generate(&ids, 10, &sp).unwrap();
+    let re = eager.generate(&ids, 10, &sp).unwrap();
+    let n = rg.tokens.len().min(re.tokens.len());
+    assert_eq!(rg.tokens[..n], re.tokens[..n]);
+}
+
+#[test]
+fn contrastive_image_generation_emits_image_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("chameleon")).unwrap();
+    let session = DecoderSession::new(&engine, OptConfig::baseline())
+        .unwrap();
+    let ids = encode_prompt("a red square");
+    let r = session
+        .generate_image(&ids, IMG_TOKENS, &SamplingParams::greedy())
+        .unwrap();
+    assert_eq!(r.tokens.len(), IMG_TOKENS);
+    assert!(r.tokens.iter().all(|&t| {
+        t >= IMG_BASE && t < IMG_BASE + IMG_TOKENS as i32
+    }));
+}
+
+#[test]
+fn seamless_reorder_disciplines_agree() {
+    // HostCopy (baseline index_select) and Fused (device gather) are two
+    // implementations of the same reorder — beams must match exactly.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("seamless")).unwrap();
+    let wav: Vec<f32> = (0..160 * 32).map(|i| (i as f32 * 0.05).sin())
+        .collect();
+    let host = SeamlessPipeline::new(&engine, ReorderMode::HostCopy)
+        .unwrap()
+        .run(SeamlessTask::SpeechToText, Some(&wav), None, 16)
+        .unwrap();
+    let fused = SeamlessPipeline::new(&engine, ReorderMode::Fused)
+        .unwrap()
+        .run(SeamlessTask::SpeechToText, Some(&wav), None, 16)
+        .unwrap();
+    assert_eq!(host.text_tokens, fused.text_tokens);
+}
+
+#[test]
+fn seamless_speech_tail_produces_waveform() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("seamless")).unwrap();
+    let pipe = SeamlessPipeline::new(&engine, ReorderMode::Fused).unwrap();
+    let r = pipe
+        .run(SeamlessTask::TextToSpeech, None, Some("hello there"), 12)
+        .unwrap();
+    assert!(!r.units.is_empty());
+    assert_eq!(r.waveform.len(), r.units.len() * pipe.dims.voc_rate);
+    assert!(r.waveform.iter().all(|v| v.abs() <= 1.0));
+}
+
+#[test]
+fn hstu_router_returns_actions() {
+    let Some(dir) = artifacts() else { return };
+    let router = Router::start(&dir, RouterConfig {
+        models: vec![ModelKind::Hstu],
+        opt: OptConfig::baseline(),
+        reorder: ReorderMode::Fused,
+        batch: 1,
+        prefill_budget: 0,
+    });
+    let history: Vec<i32> = (0..150).map(|i| (i * 13) % 6000).collect();
+    let req = Request {
+        id: router.fresh_id(),
+        task: TaskKind::HistoryToAction,
+        input: RequestInput::History(history),
+        max_new_tokens: 0,
+        sampling: SamplingParams::greedy(),
+    };
+    let r = router.call(req).unwrap();
+    let ResponseOutput::Actions { engagement, top_items } = r.output else {
+        panic!("expected actions");
+    };
+    assert!(!engagement.is_empty());
+    assert_eq!(top_items.len(), 10);
+    assert!(top_items.iter().all(|&i| (0..6000).contains(&i)));
+    assert_eq!(r.decode_steps, 0, "HSTU is non-autoregressive (Obs #1)");
+    router.shutdown();
+}

@@ -1,0 +1,181 @@
+//! Cross-module property tests: device-model monotonicity, lever
+//! soundness, and workload-generator invariants over randomized task
+//! specifications (mini-proptest, DESIGN.md §7).
+
+use mmserve::perfmodel::configs::{CHAMELEON_34B, HSTU_14L, LLAMA_34B,
+                                  LLAMA_7B, SEAMLESS_M4T};
+use mmserve::perfmodel::device::{A100, H100};
+use mmserve::perfmodel::latency::{task_cost, TaskSpec};
+use mmserve::perfmodel::levers::Levers;
+use mmserve::perfmodel::roofline;
+use mmserve::substrate::prop::prop_check;
+use mmserve::substrate::rng::Rng;
+use mmserve::workload::TABLE2;
+
+fn random_decoder_spec(r: &mut Rng) -> TaskSpec {
+    let cfg = if r.f64() < 0.5 { &LLAMA_7B } else { &LLAMA_34B };
+    TaskSpec::Decoder {
+        cfg,
+        batch: r.usize(1, 17),
+        prompt_len: r.usize(8, 2048),
+        decode_steps: r.usize(1, 1024),
+        decodes_per_step: 1 + r.usize(0, 2),
+    }
+}
+
+#[test]
+fn prop_h100_never_slower_than_a100() {
+    prop_check(
+        60,
+        1,
+        |r| (r.usize(0, 1_000_000), 0usize),
+        |&(seed, _)| {
+            let mut r = Rng::new(seed as u64);
+            let spec = random_decoder_spec(&mut r);
+            let a = task_cost(&spec, &A100, &Levers::baseline()).total;
+            let h = task_cost(&spec, &H100, &Levers::baseline()).total;
+            if h <= a * 1.0001 {
+                Ok(())
+            } else {
+                Err(format!("H100 {h} > A100 {a}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_levers_never_hurt_at_paper_scale() {
+    // The DM lever ladder is monotone: each added lever reduces (or
+    // holds) latency for every random decoder workload.
+    prop_check(
+        60,
+        2,
+        |r| (r.usize(0, 1_000_000), 0usize),
+        |&(seed, _)| {
+            let mut r = Rng::new(seed as u64);
+            let spec = random_decoder_spec(&mut r);
+            let ladder = [
+                Levers::baseline(),
+                Levers::sdpa(),
+                Levers::sdpa_compile(),
+                Levers::sys_opt(),
+            ];
+            let mut prev = f64::INFINITY;
+            for lv in ladder {
+                let t = task_cost(&spec, &A100, &lv).total;
+                if t > prev * 1.0001 {
+                    return Err(format!("{} regressed: {t} > {prev}",
+                                       lv.label()));
+                }
+                prev = t;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_roofline_points_under_roof() {
+    prop_check(
+        60,
+        3,
+        |r| (r.usize(0, 1_000_000), 0usize),
+        |&(seed, _)| {
+            let mut r = Rng::new(seed as u64);
+            let spec = random_decoder_spec(&mut r);
+            for lv in [Levers::baseline(), Levers::sys_opt()] {
+                let p = roofline::point("x", &spec, &A100, &lv);
+                if p.roof_frac > 1.0 + 1e-9 {
+                    return Err(format!("above roof: {}", p.roof_frac));
+                }
+                if !(p.intensity.is_finite() && p.perf.is_finite()) {
+                    return Err("non-finite point".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_more_decode_steps_more_latency() {
+    prop_check(
+        60,
+        4,
+        |r| (r.usize(1, 512), r.usize(1, 512)),
+        |&(s1, s2)| {
+            let (lo, hi) = (s1.min(s2), s1.max(s2).max(s1 + 1));
+            let mk = |steps| TaskSpec::Decoder {
+                cfg: &CHAMELEON_34B,
+                batch: 1,
+                prompt_len: 64,
+                decode_steps: steps,
+                decodes_per_step: 1,
+            };
+            let a = task_cost(&mk(lo), &A100, &Levers::baseline()).total;
+            let b = task_cost(&mk(hi), &A100, &Levers::baseline()).total;
+            if b >= a {
+                Ok(())
+            } else {
+                Err(format!("steps {hi} cheaper than {lo}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_workload_samples_within_bounds_and_positive_cost() {
+    prop_check(
+        40,
+        5,
+        |r| (r.usize(0, 1_000_000), 0usize),
+        |&(seed, _)| {
+            for w in &TABLE2 {
+                let xs = mmserve::workload::sample_workload(w, 20,
+                                                            seed as u64);
+                for s in xs {
+                    if s.input_len < w.input.min || s.input_len > w.input.max
+                    {
+                        return Err(format!(
+                            "{}: input {} outside [{}, {}]",
+                            w.dataset, s.input_len, w.input.min, w.input.max
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_seamless_and_hstu_costs_finite_and_ordered() {
+    prop_check(
+        40,
+        6,
+        |r| (r.usize(32, 2048), r.usize(4, 128)),
+        |&(src, steps)| {
+            let st = TaskSpec::Seamless {
+                cfg: &SEAMLESS_M4T,
+                src_len: src,
+                text_steps: steps,
+                speech_out: false,
+                reorder_fused: false,
+                speech_in: true,
+            };
+            let c = task_cost(&st, &A100, &Levers::baseline());
+            if !(c.total.is_finite() && c.total > 0.0) {
+                return Err("bad seamless cost".into());
+            }
+            let h1 = TaskSpec::Hstu { cfg: &HSTU_14L, batch: 1, seq: src };
+            let h2 = TaskSpec::Hstu { cfg: &HSTU_14L, batch: 2, seq: src };
+            let t1 = task_cost(&h1, &A100, &Levers::baseline()).total;
+            let t2 = task_cost(&h2, &A100, &Levers::baseline()).total;
+            if t2 + 1e-12 < t1 {
+                return Err("hstu batch 2 cheaper than batch 1".into());
+            }
+            let _ = &LLAMA_34B;
+            Ok(())
+        },
+    );
+}
