@@ -40,6 +40,7 @@ fn main() {
             reorder: ReorderMode::Fused,
             batch,
             prefill_budget: 0,
+            tracer: None,
         });
         // warm: one request compiles the stages
         let _ = router.call(Request::text(router.fresh_id(),
@@ -83,6 +84,7 @@ fn main() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        tracer: None,
     });
     let wav: Vec<f32> = (0..160 * 30).map(|i| (i as f32 * 0.03).sin())
         .collect();

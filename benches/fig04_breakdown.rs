@@ -1,10 +1,20 @@
 //! Figure 4: operator time breakdown on A100 (prefill/decode phases,
-//! with the GPU-Idle bucket) for the four model families.
+//! with the GPU-Idle bucket) for the four model families — plus, when
+//! artifacts are built, the *measured* counterpart from the telemetry
+//! subsystem: a traced tiny-llama generation with its per-stage
+//! dispatch times and idle-gap attribution.
 
+mod common;
+
+use mmserve::coordinator::decoder_loop::DecoderSession;
+use mmserve::coordinator::opts::OptConfig;
+use mmserve::coordinator::request::SamplingParams;
 use mmserve::perfmodel::breakdown::render;
 use mmserve::perfmodel::device::A100;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
+use mmserve::runtime::engine::Engine;
+use mmserve::telemetry::{Tracer, TraceReport};
 
 fn main() {
     println!("=== Figure 4: operator time breakdown (A100, max batch, \
@@ -28,4 +38,30 @@ fn main() {
     println!("\npaper: decode idle dominates for Llama/CM3 (Obs #2); \
               Linear ≥ Attention for Llama/CM3 (Obs #3); Attention \
               dominates HSTU; KV_Reorder visible for Seamless (Obs #4).");
+
+    if let Some(dir) = common::artifacts_available() {
+        if let Err(e) = measured_breakdown(&dir) {
+            println!("  (measured section failed: {e:#})");
+        }
+    }
+}
+
+/// The measured analogue over the real tiny model: trace a generation,
+/// fold it into per-stage times + the idle-gap attribution, and print
+/// it under the model projection for side-by-side comparison.
+fn measured_breakdown(dir: &std::path::Path) -> anyhow::Result<()> {
+    println!("\n=== measured (telemetry, tiny llama on CPU) ===");
+    let tracer = Tracer::off();
+    let mut engine = Engine::load(&dir.join("llama"))?;
+    engine.set_tracer(tracer.worker("llama"));
+    let session = DecoderSession::new(&engine, OptConfig::baseline())?;
+    let prompt: Vec<i32> = (2..30).collect();
+    session.generate(&prompt, 4, &SamplingParams::greedy())?; // warm
+    tracer.set_enabled(true);
+    session.generate(&prompt, 32, &SamplingParams::greedy())?;
+    tracer.set_enabled(false);
+    let trace = tracer.drain();
+    let report = TraceReport::from_trace(&trace);
+    println!("{}", report.render());
+    Ok(())
 }

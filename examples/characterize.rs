@@ -1,6 +1,7 @@
 //! Characterization demo: the paper's Figure-4 methodology applied to
-//! the *real* tiny models — per-stage wall-time accounting from the
-//! engine, side by side with the A100 device-model projection.
+//! the *real* tiny models — per-stage wall-time and idle-gap
+//! attribution measured by the telemetry subsystem, side by side with
+//! the A100 device-model projection.
 
 use mmserve::coordinator::decoder_loop::DecoderSession;
 use mmserve::coordinator::opts::OptConfig;
@@ -10,28 +11,28 @@ use mmserve::perfmodel::device::A100;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
 use mmserve::runtime::engine::Engine;
+use mmserve::telemetry::{Tracer, TraceReport};
 
 fn main() -> anyhow::Result<()> {
-    // --- real CPU: stage-level breakdown of a llama generation --------
+    // --- real CPU: traced breakdown of a llama generation -------------
     let dir = mmserve::artifacts_dir().join("llama");
-    let engine = Engine::load(&dir)?;
+    let tracer = Tracer::off(); // off during compile/warmup
+    let mut engine = Engine::load(&dir)?;
+    engine.set_tracer(tracer.worker("llama"));
     let session = DecoderSession::new(&engine, OptConfig::baseline())?;
     let prompt: Vec<i32> = (2..30).collect();
-    // warm (compile) then measure
+    // warm (compile) then measure with tracing on
     session.generate(&prompt, 4, &SamplingParams::greedy())?;
-    engine.stage_times.borrow_mut();
-    *engine.stage_times.borrow_mut() =
-        mmserve::substrate::metrics::OpTimes::new();
+    tracer.set_enabled(true);
     let r = session.generate(&prompt, 24, &SamplingParams::greedy())?;
-    println!("== real CPU (tiny llama): stage wall-time for a 24-token \
-              generation ==");
-    let times = engine.stage_times.borrow();
-    let total = times.total();
-    for (stage, secs) in times.entries() {
-        println!("  {:<20} {:>8.2} ms  ({:>4.1}%)", stage, secs * 1e3,
-                 secs / total * 100.0);
-    }
-    println!("  e2e: {:.2} ms, {} decode steps, ttft {:.2} ms\n",
+    tracer.set_enabled(false);
+    let trace = tracer.drain();
+
+    println!("== real CPU (tiny llama): measured breakdown for a \
+              24-token generation ==");
+    let report = TraceReport::from_trace(&trace);
+    println!("{}", report.render());
+    println!("e2e: {:.2} ms, {} decode steps, ttft {:.2} ms\n",
              r.e2e * 1e3, r.decode_steps, r.ttft * 1e3);
 
     // --- device model: paper-scale Figure 4 ---------------------------

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        tracer: None,
     });
 
     let mut rng = Rng::new(11);

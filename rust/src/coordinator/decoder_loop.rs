@@ -15,6 +15,7 @@ use crate::models::tokenizer::{self, TextTokenizer};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
 use crate::substrate::rng::Rng;
+use crate::telemetry::tracer::Cat;
 
 use super::opts::{ExecMode, OptConfig};
 use super::request::SamplingParams;
@@ -180,13 +181,24 @@ impl<'e> DecoderSession<'e> {
                 self.engine, &self.dims, prompt, max_new, sp);
         }
         let t0 = Instant::now();
+        let tele = self.engine.tracer();
+        let _tick_scope = tele.map(|t| t.tick_scope());
         let mut rng = Rng::new(sp.seed);
+        let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
         let (mut logits, mut kv) = self.prefill(prompt)?;
+        drop(prefill_span);
         let ttft = t0.elapsed().as_secs_f64();
         let mut pos = prompt.len();
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
-            let tok = sampling::sample(&logits, sp, &mut rng);
+            if let Some(t) = tele {
+                t.next_tick();
+            }
+            let _step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
+            let tok = {
+                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
+                sampling::sample(&logits, sp, &mut rng)
+            };
             out.push(tok);
             if tok == tokenizer::EOS || pos + 1 >= self.dims.max_seq {
                 break;
@@ -212,10 +224,14 @@ impl<'e> DecoderSession<'e> {
     pub fn generate_image(&self, prompt: &[i32], n_image_tokens: usize,
                           sp: &SamplingParams) -> Result<GenResult> {
         let t0 = Instant::now();
+        let tele = self.engine.tracer();
+        let _tick_scope = tele.map(|t| t.tick_scope());
         let mut rng = Rng::new(sp.seed);
+        let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
         let (cond_logits, mut kv_c) = self.prefill(prompt)?;
         let (uncond_logits, mut kv_u) =
             self.prefill(&[tokenizer::BOS])?;
+        drop(prefill_span);
         let ttft = t0.elapsed().as_secs_f64();
         let mut pos_c = prompt.len();
         let mut pos_u = 1usize;
@@ -223,9 +239,16 @@ impl<'e> DecoderSession<'e> {
         let mut lu = uncond_logits;
         let mut out = Vec::with_capacity(n_image_tokens);
         for _ in 0..n_image_tokens {
-            let mixed = sampling::contrastive_mix(&lc, &lu,
-                                                  self.opt.cfg_alpha);
-            let tok = sample_image_token(&mixed, sp, &mut rng);
+            if let Some(t) = tele {
+                t.next_tick();
+            }
+            let _step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
+            let tok = {
+                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
+                let mixed = sampling::contrastive_mix(&lc, &lu,
+                                                      self.opt.cfg_alpha);
+                sample_image_token(&mixed, sp, &mut rng)
+            };
             out.push(tok);
             if out.len() == n_image_tokens {
                 break;

@@ -16,6 +16,7 @@ use crate::models::tokenizer;
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
 use crate::substrate::rng::Rng;
+use crate::telemetry::tracer::Cat;
 
 use super::decoder_loop::{DecoderDims, GenResult};
 use super::request::SamplingParams;
@@ -79,14 +80,25 @@ pub fn generate_eager(engine: &Engine, dims: &DecoderDims, prompt: &[i32],
     let mut logits: Vec<f32> = Vec::new();
     let mut ttft = 0.0;
     // Feed prompt tokens, then generate.
+    let tele = engine.tracer();
+    let _tick_scope = tele.map(|t| t.tick_scope());
     let mut out = Vec::with_capacity(max_new);
     let mut pos = 0usize;
     let total = prompt.len() + max_new;
     for step in 0..total {
-        let token = if step < prompt.len() {
+        if let Some(t) = tele {
+            t.next_tick();
+        }
+        let in_prompt = step < prompt.len();
+        let phase = if in_prompt { Cat::Prefill } else { Cat::Decode };
+        let _step_span = tele.map(|t| t.span(phase, "eager_step"));
+        let token = if in_prompt {
             prompt[step]
         } else {
-            let tok = sampling::sample(&logits, sp, &mut rng);
+            let tok = {
+                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
+                sampling::sample(&logits, sp, &mut rng)
+            };
             out.push(tok);
             if tok == tokenizer::EOS {
                 break;

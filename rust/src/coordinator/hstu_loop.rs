@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::Tensor;
+use crate::telemetry::tracer::Cat;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HstuAttn {
@@ -90,8 +91,10 @@ impl<'e> HstuRunner<'e> {
     pub fn run_batch(&self, histories: &[Vec<i32>], tail: usize,
                      top_k: usize) -> Result<Vec<HstuResult>> {
         let t0 = Instant::now();
+        let tele = self.engine.tracer();
         let maxlen = histories.iter().map(|h| h.len()).max().unwrap_or(1);
         let (s, b) = self.pick_shape(maxlen, histories.len())?;
+        let pack_span = tele.map(|t| t.span(Cat::Tokenize, "pack_history"));
         let mut ids = vec![0i32; b * s];
         let mut lens = vec![1i32; b];
         for (i, h) in histories.iter().enumerate() {
@@ -99,6 +102,7 @@ impl<'e> HstuRunner<'e> {
             ids[i * s..i * s + n].copy_from_slice(&h[..n]);
             lens[i] = n as i32;
         }
+        drop(pack_span);
         let stage = self.engine.stage(&self.stage_name(s, b))?;
         let t_ids = Tensor::from_i32(&[b, s], &ids);
         let t_len = Tensor::from_i32(&[b], &lens);
@@ -109,6 +113,7 @@ impl<'e> HstuRunner<'e> {
         let retr = self.engine.download(&outs[1])?.as_f32()?;
         let e2e = t0.elapsed().as_secs_f64();
 
+        let _rank_span = tele.map(|t| t.span(Cat::Sample, "rank_retrieve"));
         let mut results = Vec::with_capacity(histories.len());
         for (i, h) in histories.iter().enumerate() {
             let n = h.len().min(s);

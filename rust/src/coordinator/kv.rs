@@ -185,6 +185,56 @@ mod tests {
         assert!(kv.release(s).is_err());
     }
 
+    #[test]
+    fn alloc_at_max_seq_rejected() {
+        // A prompt that already fills the cache leaves no room for even
+        // one decode step — admission must refuse it.
+        let mut kv = KvSlots::new(2, 8);
+        assert!(kv.alloc(1, 8).is_err());
+        assert!(kv.alloc(1, 9).is_err());
+        assert_eq!(kv.free_count(), 2, "failed alloc must not leak a slot");
+        let s = kv.alloc(1, 7).unwrap(); // last admissible position
+        assert_eq!(kv.pos(s).unwrap(), 7);
+    }
+
+    #[test]
+    fn alloc_when_all_slots_live_rejected() {
+        let mut kv = KvSlots::new(3, 16);
+        for id in 0..3 {
+            kv.alloc(id, 1).unwrap();
+        }
+        assert_eq!(kv.free_count(), 0);
+        let err = kv.alloc(99, 1).unwrap_err();
+        assert!(err.to_string().contains("no free slot"), "{err}");
+        assert_eq!(kv.live_count(), 3);
+    }
+
+    #[test]
+    fn release_of_non_live_slot_rejected() {
+        let mut kv = KvSlots::new(2, 16);
+        // Never-allocated slot (in range) and out-of-range slot.
+        assert!(kv.release(0).is_err());
+        assert!(kv.release(5).is_err());
+        // State queries on a free slot also refuse.
+        assert_eq!(kv.state(0), SlotState::Free);
+        assert!(kv.pos(0).is_err());
+        assert!(kv.advance(0).is_err());
+    }
+
+    #[test]
+    fn slot_reuse_is_lowest_index_first() {
+        let mut kv = KvSlots::new(4, 32);
+        let slots: Vec<usize> =
+            (0..4).map(|id| kv.alloc(id, 1).unwrap()).collect();
+        assert_eq!(slots, vec![0, 1, 2, 3]);
+        // Free 2 then 0: reuse must hand out 0 first, then 2, then fail.
+        kv.release(2).unwrap();
+        kv.release(0).unwrap();
+        assert_eq!(kv.alloc(10, 1).unwrap(), 0);
+        assert_eq!(kv.alloc(11, 1).unwrap(), 2);
+        assert!(kv.alloc(12, 1).is_err());
+    }
+
     /// Property: a random walk of alloc/advance/release never leaks slots
     /// — free + live == batch, and live positions stay < max_seq.
     #[test]

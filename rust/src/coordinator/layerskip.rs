@@ -17,6 +17,7 @@ use crate::models::tokenizer;
 use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::Tensor;
 use crate::substrate::rng::Rng;
+use crate::telemetry::tracer::Cat;
 
 use super::decoder_loop::{DecoderDims, DecoderSession, GenResult, KvBufs};
 use super::opts::OptConfig;
@@ -34,15 +35,22 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
     // Reuse the session prefills (baseline stages).
     let session = DecoderSession::new(engine, OptConfig::baseline())?;
     let mut rng = Rng::new(sp.seed);
+    let tele = engine.tracer();
+    let _tick_scope = tele.map(|t| t.tick_scope());
 
+    let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
     let (logits, kv) = session.prefill(prompt)?;
+    drop(prefill_span);
     let mut kv: KvBufs = kv;
     let ttft = t0.elapsed().as_secs_f64();
 
     let mut out: Vec<i32> = Vec::with_capacity(max_new);
     let mut pos = prompt.len();
     // `pending` = last sampled token not yet written into the cache.
-    let mut pending = sampling::sample(&logits, sp, &mut rng);
+    let mut pending = {
+        let _s = tele.map(|t| t.span(Cat::Sample, "sample_first"));
+        sampling::sample(&logits, sp, &mut rng)
+    };
     out.push(pending);
 
     let mut accepted_total = 0usize;
@@ -53,6 +61,10 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
             break;
         }
         rounds += 1;
+        if let Some(t) = tele {
+            t.next_tick();
+        }
+        let _round_span = tele.map(|t| t.span(Cat::Decode, "spec_round"));
         // ---- draft phase: K-1 cheap tokens after `pending` ------------
         let mut window = Vec::with_capacity(k_window);
         window.push(pending);
@@ -91,6 +103,7 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
 
         // Longest prefix of drafts matching the full model (greedy).
         // vl[j] is the full model's next-token dist after window[j].
+        let _accept_span = tele.map(|t| t.span(Cat::Sample, "accept"));
         let mut accepted = 0usize;
         for j in 1..k_window {
             let full_tok =

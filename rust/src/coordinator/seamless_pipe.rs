@@ -21,6 +21,7 @@ use crate::models::tokenizer::{SpeechFeaturizer, TextTokenizer, BOS, EOS};
 use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::substrate::metrics::OpTimes;
+use crate::telemetry::tracer::Cat;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReorderMode {
@@ -146,7 +147,11 @@ impl<'e> SeamlessPipeline<'e> {
             let sf = SpeechFeaturizer::default();
             let frames = (wav.len() / sf.frame).max(1);
             let bucket = self.enc_bucket(frames)?;
-            let (feats, n) = sf.featurize(wav, bucket);
+            let (feats, n) = {
+                let _t = self.engine.tracer()
+                    .map(|t| t.span(Cat::Tokenize, "featurize"));
+                sf.featurize(wav, bucket)
+            };
             let t = Instant::now();
             let stage = self.engine.stage(&format!("encoder_t{bucket}"))?;
             let t_len = Tensor::from_i32(&[1], &[n as i32]);
@@ -163,7 +168,11 @@ impl<'e> SeamlessPipeline<'e> {
         } else {
             let txt = text.context("text input required")?;
             let tk = TextTokenizer::new();
-            let ids = tk.encode(txt);
+            let ids = {
+                let _t = self.engine.tracer()
+                    .map(|t| t.span(Cat::Tokenize, "tokenize"));
+                tk.encode(txt)
+            };
             let mut buckets: Vec<usize> = self
                 .engine
                 .manifest
@@ -257,7 +266,13 @@ impl<'e> SeamlessPipeline<'e> {
         let mut finished: Vec<(Vec<i32>, f32)> = Vec::new();
         let mut steps = 0usize;
 
+        let tele = self.engine.tracer();
+        let _tick_scope = tele.map(|t| t.tick_scope());
         for pos in 0..max_text.min(self.dims.max_tgt - 1) {
+            if let Some(t) = tele {
+                t.next_tick();
+            }
+            let _step_span = tele.map(|t| t.span(Cat::Decode, "beam_step"));
             // one batched decode step over the beams
             let t = Instant::now();
             let t_toks = Tensor::from_i32(&[bm], &tokens);
@@ -279,6 +294,7 @@ impl<'e> SeamlessPipeline<'e> {
             let v = self.dims.text_vocab;
 
             // expand: per live beam, top candidates by logprob
+            let beam_span = tele.map(|t| t.span(Cat::Sample, "beam_expand"));
             let mut cands: Vec<(f32, usize, i32)> = Vec::new();
             for b in 0..bm {
                 if scores[b] == f32::NEG_INFINITY {
@@ -318,6 +334,7 @@ impl<'e> SeamlessPipeline<'e> {
             if filled == 0 {
                 break; // all beams finished
             }
+            drop(beam_span);
 
             // ---- KV reorder (the Obs #4 operation) ------------------
             let t = Instant::now();
@@ -349,6 +366,7 @@ impl<'e> SeamlessPipeline<'e> {
             tokens = new_tokens;
             seqs = new_seqs;
         }
+        drop(_tick_scope);
 
         // pick best finished (or best live) sequence
         for b in 0..bm {

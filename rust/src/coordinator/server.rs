@@ -27,6 +27,7 @@ use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
+use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
 use super::batcher::{Batcher, QueuedRequest};
 use super::decoder_loop::{encode_prompt, DecoderSession};
@@ -52,6 +53,10 @@ pub struct RouterConfig {
     pub batch: usize,
     /// Prefill token budget per tick (0 = unlimited).
     pub prefill_budget: usize,
+    /// Request-path tracing: each worker registers itself and records
+    /// spans for scheduling, tokenization, dispatch, and sampling.
+    /// `None` (the default) keeps the serving path instrumentation-free.
+    pub tracer: Option<Tracer>,
 }
 
 impl Default for RouterConfig {
@@ -62,6 +67,7 @@ impl Default for RouterConfig {
             reorder: ReorderMode::Fused,
             batch: 4,
             prefill_budget: 0,
+            tracer: None,
         }
     }
 }
@@ -129,8 +135,11 @@ impl Router {
 
 fn worker_main(model: ModelKind, dir: &std::path::Path, cfg: RouterConfig,
                rx: Receiver<WorkItem>) -> Result<()> {
-    let engine = Engine::load(dir)
+    let mut engine = Engine::load(dir)
         .with_context(|| format!("load engine {}", dir.display()))?;
+    if let Some(tracer) = &cfg.tracer {
+        engine.set_tracer(tracer.worker(&format!("{model:?}")));
+    }
     match model {
         ModelKind::Llama | ModelKind::Chameleon => {
             decoder_worker(&engine, cfg, rx)
@@ -188,26 +197,14 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     let mut batcher = Batcher::new(cfg.prefill_budget);
     let mut staging: HashMap<u64, WorkItem> = HashMap::new();
     let mut closed = false;
+    let tele = engine.tracer();
 
     loop {
         // Drain the queue without blocking while work is live.
         loop {
             match rx.try_recv() {
-                Ok(item) => {
-                    // Non-batchable tasks (T-I contrastive) run inline.
-                    if item.request.task == TaskKind::TextToImage {
-                        let resp = serve_one_decoder(&session, &item.request);
-                        let _ = item.respond.send(resp);
-                        continue;
-                    }
-                    let prompt = tokenize_decoder_input(&item.request)?;
-                    batcher.push(QueuedRequest {
-                        id: item.request.id,
-                        prompt_len: prompt.len(),
-                        max_new_tokens: item.request.max_new_tokens,
-                    });
-                    staging.insert(item.request.id, item);
-                }
+                Ok(item) => intake_decoder_item(item, &session, &mut batcher,
+                                                &mut staging, tele)?,
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     closed = true;
@@ -221,31 +218,32 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         if slots.live_count() == 0 && batcher.pending() == 0 {
             // Idle: block for the next request.
             match rx.recv() {
-                Ok(item) => {
-                    if item.request.task == TaskKind::TextToImage {
-                        let resp = serve_one_decoder(&session, &item.request);
-                        let _ = item.respond.send(resp);
-                        continue;
-                    }
-                    let prompt = tokenize_decoder_input(&item.request)?;
-                    batcher.push(QueuedRequest {
-                        id: item.request.id,
-                        prompt_len: prompt.len(),
-                        max_new_tokens: item.request.max_new_tokens,
-                    });
-                    staging.insert(item.request.id, item);
-                }
+                Ok(item) => intake_decoder_item(item, &session, &mut batcher,
+                                                &mut staging, tele)?,
                 Err(_) => return Ok(()),
             }
             continue;
         }
 
+        // One scheduler tick: admission, then one batched decode step.
+        if let Some(t) = tele {
+            t.next_tick();
+        }
+
         // Admission: prefill into free slots.
-        let adm = batcher.tick(slots.free_count(), slots.live_count());
+        let adm = {
+            let _s = tele.map(|t| t.span(Cat::Schedule, "admission"));
+            batcher.tick(slots.free_count(), slots.live_count())
+        };
         for q in adm.admit {
             let item = staging.remove(&q.id).context("staged item")?;
+            let _req_scope = tele.map(|t| t.req_scope(q.id));
+            let prefill_span = tele.map(|t| t.span(Cat::Prefill, "admit"));
             let started = Instant::now();
-            let prompt = tokenize_decoder_input(&item.request)?;
+            let prompt = {
+                let _t = tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
+                tokenize_decoder_input(&item.request)?
+            };
             let (logits, kv1) = session.prefill(&prompt)?;
             let slot = slots.alloc(q.id, prompt.len())?;
             // insert the prefilled KV into the batch cache
@@ -260,9 +258,12 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             cv = it.next().context("cv")?;
             // sample the first token right away from the prefill logits
             let mut rng = Rng::new(item.request.sampling.seed ^ q.id);
-            let first = sampling::sample(&logits, &item.request.sampling,
-                                         &mut rng);
+            let first = {
+                let _s = tele.map(|t| t.span(Cat::Sample, "sample_first"));
+                sampling::sample(&logits, &item.request.sampling, &mut rng)
+            };
             let ttft = started.elapsed().as_secs_f64();
+            drop(prefill_span);
             jobs[slot] = Some(SlotJob {
                 prompt_len: prompt.len(),
                 tokens: vec![first],
@@ -278,6 +279,7 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         }
 
         // One batched decode step for all live slots.
+        let step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
         let mut toks = vec![0i32; batch];
         let mut poss = vec![0i32; batch];
         for (slot, _, pos) in slots.live_slots() {
@@ -300,6 +302,10 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
 
         for (slot, _, _) in slots.live_slots() {
             let job = jobs[slot].as_mut().unwrap();
+            // Per-slot Sample span carries the request id so the
+            // time-between-tokens histogram works in batched mode.
+            let _s = tele.map(|t| t.span_req(Cat::Sample, "sample",
+                                             job.item.request.id));
             let row = &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
             let tok =
                 sampling::sample(row, &job.item.request.sampling, &mut job.rng);
@@ -314,7 +320,34 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
                 let _ = job.item.respond.send(Ok(resp));
             }
         }
+        drop(step_span);
     }
+}
+
+/// Take one arriving request into the batched decoder: serve
+/// non-batchable tasks inline, otherwise tokenize (traced) and queue.
+fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
+                       batcher: &mut Batcher,
+                       staging: &mut HashMap<u64, WorkItem>,
+                       tele: Option<&WorkerTracer>) -> Result<()> {
+    // Non-batchable tasks (T-I contrastive) run inline.
+    if item.request.task == TaskKind::TextToImage {
+        let resp = serve_one_decoder(session, &item.request);
+        let _ = item.respond.send(resp);
+        return Ok(());
+    }
+    let prompt = {
+        let _t = tele.map(|t| t.span_req(Cat::Tokenize, "tokenize",
+                                         item.request.id));
+        tokenize_decoder_input(&item.request)?
+    };
+    batcher.push(QueuedRequest {
+        id: item.request.id,
+        prompt_len: prompt.len(),
+        max_new_tokens: item.request.max_new_tokens,
+    });
+    staging.insert(item.request.id, item);
+    Ok(())
 }
 
 fn tokenize_decoder_input(req: &Request) -> Result<Vec<i32>> {
@@ -341,7 +374,12 @@ fn tokenize_decoder_input(req: &Request) -> Result<Vec<i32>> {
 fn serve_one_decoder(session: &DecoderSession, req: &Request)
                      -> Result<Response> {
     let started = Instant::now();
-    let prompt = tokenize_decoder_input(req)?;
+    let tele = session.engine.tracer();
+    let _req_scope = tele.map(|t| t.req_scope(req.id));
+    let prompt = {
+        let _t = tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
+        tokenize_decoder_input(req)?
+    };
     if req.task == TaskKind::TextToImage {
         let gen = session.generate_image(&prompt, tokenizer::IMG_TOKENS,
                                          &req.sampling)?;
@@ -411,6 +449,7 @@ fn serve_one_seamless(pipe: &SeamlessPipeline, req: &Request)
         RequestInput::Text(t) => (None, Some(t.as_str())),
         other => bail!("unsupported seamless input {other:?}"),
     };
+    let _req_scope = pipe.engine.tracer().map(|t| t.req_scope(req.id));
     let out = pipe.run(task, speech, text, req.max_new_tokens)?;
     let output = if task.speech_out() {
         ResponseOutput::Speech(out.waveform.clone())
@@ -445,6 +484,7 @@ fn serve_one_hstu(runner: &HstuRunner, req: &Request) -> Result<Response> {
     let RequestInput::History(h) = &req.input else {
         bail!("hstu expects History input");
     };
+    let _req_scope = runner.engine.tracer().map(|t| t.req_scope(req.id));
     let results = runner.run_batch(std::slice::from_ref(h), 8, 10)?;
     let r = results.into_iter().next().context("hstu result")?;
     Ok(Response {

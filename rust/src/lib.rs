@@ -14,6 +14,14 @@
 //! * **L1 (python/compile/kernels)** — Pallas kernels: flash-style
 //!   attention, fused HSTU pointwise attention, int8 matmuls.
 //!
+//! Cross-cutting the three layers, [`telemetry`] records the live
+//! request path: spans around every PJRT dispatch plus the host-side
+//! scheduling / tokenization / sampling work, folded into per-tick
+//! timelines, an idle-gap attribution (the paper's "GPU idle"
+//! decomposition, Obs #2), Chrome-trace JSON export and the serving
+//! histograms. `mmserve trace` drives it end to end; tracing is off by
+//! default and costs nothing on the serving path when disabled.
+//!
 //! Python never runs on the request path: `artifacts/` are compiled once
 //! by `make artifacts`; this crate loads them via PJRT (`runtime`).
 
@@ -22,6 +30,7 @@ pub mod models;
 pub mod perfmodel;
 pub mod runtime;
 pub mod substrate;
+pub mod telemetry;
 pub mod workload;
 
 /// Default artifacts directory relative to the repo root.

@@ -1,6 +1,9 @@
 //! mmserve CLI — leader entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (the list below is *derived* from [`SUBCOMMANDS`], the
+//! single source of truth that also drives dispatch, so the help text
+//! cannot drift):
+//!
 //! * `serve`        — start the multi-model router and run a demo batch
 //!                    of requests against it (in-process client).
 //! * `characterize` — print the paper's Figure-4-style operator
@@ -8,12 +11,16 @@
 //! * `autoquant`    — run the §4.2 quantization calibration on real
 //!                    executables.
 //! * `stages`       — list AOT stages available per model.
+//! * `trace`        — run a traced request mix; write a Chrome-trace
+//!                    JSON and print the measured breakdown with
+//!                    idle-gap attribution next to the perfmodel
+//!                    projection.
 
 use anyhow::{bail, Result};
 
 use mmserve::coordinator::autoquant;
 use mmserve::coordinator::opts::{AttnImpl, ExecMode, OptConfig, QuantMode};
-use mmserve::coordinator::request::{Request, SamplingParams};
+use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
 use mmserve::models::{ModelKind, TaskKind};
@@ -23,6 +30,46 @@ use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
 use mmserve::runtime::engine::Engine;
 use mmserve::substrate::cli::Command;
+use mmserve::telemetry::chrome_trace;
+use mmserve::telemetry::tracer::Tracer;
+use mmserve::telemetry::TraceReport;
+
+/// One CLI subcommand: its name, a one-line summary, and its entry
+/// point. `usage()` and `run()` both read this table — adding a
+/// subcommand here is the only step needed to register it.
+struct Subcommand {
+    name: &'static str,
+    summary: &'static str,
+    run: fn(&[String]) -> Result<()>,
+}
+
+const SUBCOMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "serve",
+        summary: "start the router and serve a demo request batch",
+        run: cmd_serve,
+    },
+    Subcommand {
+        name: "characterize",
+        summary: "Figure-4-style breakdown from the device model",
+        run: cmd_characterize,
+    },
+    Subcommand {
+        name: "autoquant",
+        summary: "quantization calibration on real executables (§4.2)",
+        run: cmd_autoquant,
+    },
+    Subcommand {
+        name: "stages",
+        summary: "list AOT stages available per model",
+        run: cmd_stages,
+    },
+    Subcommand {
+        name: "trace",
+        summary: "trace a request mix; export Chrome trace + breakdown",
+        run: cmd_trace,
+    },
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,9 +84,13 @@ fn main() {
 }
 
 fn usage() -> String {
-    "mmserve <serve|characterize|autoquant|stages> [options]\n\
-     run `mmserve <cmd> --help` for command options"
-        .to_string()
+    let names: Vec<&str> = SUBCOMMANDS.iter().map(|s| s.name).collect();
+    let mut s = format!("mmserve <{}> [options]\n", names.join("|"));
+    for sub in SUBCOMMANDS {
+        s.push_str(&format!("  {:<13} {}\n", sub.name, sub.summary));
+    }
+    s.push_str("run `mmserve <cmd> --help` for command options");
+    s
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -48,11 +99,10 @@ fn run(argv: &[String]) -> Result<()> {
         return Ok(());
     };
     let rest = &argv[1..];
+    if let Some(sub) = SUBCOMMANDS.iter().find(|s| s.name == cmd.as_str()) {
+        return (sub.run)(rest);
+    }
     match cmd.as_str() {
-        "serve" => cmd_serve(rest),
-        "characterize" => cmd_characterize(rest),
-        "autoquant" => cmd_autoquant(rest),
-        "stages" => cmd_stages(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -80,6 +130,67 @@ fn opt_from_args(a: &mmserve::substrate::cli::Args) -> OptConfig {
     opt
 }
 
+fn parse_models(a: &mmserve::substrate::cli::Args) -> Result<Vec<ModelKind>> {
+    let models: Vec<ModelKind> = a
+        .get_or("models", "llama")
+        .split(',')
+        .filter_map(ModelKind::parse)
+        .collect();
+    if models.is_empty() {
+        bail!("no valid models given");
+    }
+    Ok(models)
+}
+
+/// A representative request for one model family (used by the demo
+/// batch in `serve` warmups and by the `trace` request mix).
+fn demo_request(router: &Router, model: ModelKind, i: usize,
+                max_new: usize) -> Request {
+    let prompts = [
+        "write a function to reverse a string",
+        "def fib(n): compute the fibonacci numbers",
+        "explain the borrow checker",
+        "sort a list of integers in rust",
+    ];
+    match model {
+        ModelKind::Llama => {
+            let mut req = Request::text(router.fresh_id(),
+                                        TaskKind::TextToText,
+                                        prompts[i % prompts.len()], max_new);
+            req.sampling = SamplingParams::greedy();
+            req
+        }
+        ModelKind::Chameleon => Request {
+            id: router.fresh_id(),
+            task: TaskKind::ImageToText,
+            input: RequestInput::Image {
+                pixels: vec![0.25 + 0.1 * (i % 5) as f32; 64 * 64],
+                h: 64,
+                w: 64,
+            },
+            max_new_tokens: max_new,
+            sampling: SamplingParams::greedy(),
+        },
+        ModelKind::Seamless => Request {
+            id: router.fresh_id(),
+            task: TaskKind::TextToTextTrans,
+            input: RequestInput::Text(prompts[i % prompts.len()].into()),
+            max_new_tokens: max_new,
+            sampling: SamplingParams::greedy(),
+        },
+        ModelKind::Hstu => Request {
+            id: router.fresh_id(),
+            task: TaskKind::HistoryToAction,
+            input: RequestInput::History(
+                (0..120 + (i % 4) * 30).map(|k| (k * 13 % 6000) as i32)
+                    .collect(),
+            ),
+            max_new_tokens: 0,
+            sampling: SamplingParams::greedy(),
+        },
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "serve a demo request batch")
         .opt("models", "comma list of models", Some("llama"))
@@ -96,14 +207,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("{}", cmd.usage());
         return Ok(());
     }
-    let models: Vec<ModelKind> = a
-        .get_or("models", "llama")
-        .split(',')
-        .filter_map(ModelKind::parse)
-        .collect();
-    if models.is_empty() {
-        bail!("no valid models given");
-    }
+    let models = parse_models(&a)?;
     let opt = opt_from_args(&a);
     let n = a.get_usize("requests", 8);
     let max_new = a.get_usize("max-new", 16);
@@ -117,25 +221,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             reorder: ReorderMode::Fused,
             batch: a.get_usize("batch", 4),
             prefill_budget: 0,
+            tracer: None,
         },
     );
 
-    let prompts = [
-        "write a function to reverse a string",
-        "def fib(n): compute the fibonacci numbers",
-        "explain the borrow checker",
-        "sort a list of integers in rust",
-    ];
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for i in 0..n {
-        let mut req = Request::text(
-            router.fresh_id(),
-            TaskKind::TextToText,
-            prompts[i % prompts.len()],
-            max_new,
-        );
-        req.sampling = SamplingParams::greedy();
+        let req = demo_request(&router, models[i % models.len()], i, max_new);
         rxs.push(router.submit(req)?);
     }
     let mut responses = Vec::new();
@@ -215,5 +308,93 @@ fn cmd_stages(argv: &[String]) -> Result<()> {
         println!("  {:<28} {} weights, {} args, {} outputs",
                  name, s.weights.len(), s.args.len(), s.outputs.len());
     }
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("trace",
+                           "trace a request mix; write Chrome-trace JSON")
+        .opt("models", "comma list of models", Some("llama"))
+        .opt("requests", "number of traced requests", Some("8"))
+        .opt("max-new", "max new tokens per request", Some("16"))
+        .opt("batch", "decode batch size", Some("4"))
+        .opt("quant", "f32|int8wo|int8dyn", Some("f32"))
+        .opt("out", "Chrome-trace output path", Some("trace.json"))
+        .opt("device", "A100|H100 for the perfmodel projection",
+             Some("A100"))
+        .flag("sdpa", "enable the flash-attention stages")
+        .flag("eager", "per-op dispatch (launch-overhead baseline)")
+        .flag("layerskip", "self-speculative decoding")
+        .flag("trace-warmup", "include compile/warmup in the trace")
+        .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let models = parse_models(&a)?;
+    let opt = opt_from_args(&a);
+    let n = a.get_usize("requests", 8);
+    let max_new = a.get_usize("max-new", 16);
+    let out = a.get_or("out", "trace.json");
+
+    // Tracing starts disabled so the compile-heavy warmup pass doesn't
+    // drown the steady-state timeline (--trace-warmup keeps it).
+    let tracer = if a.flag("trace-warmup") {
+        Tracer::new()
+    } else {
+        Tracer::off()
+    };
+    println!("starting traced router: models={models:?} opt=[{opt}]");
+    let router = Router::start(
+        &mmserve::artifacts_dir(),
+        RouterConfig {
+            models: models.clone(),
+            opt,
+            reorder: ReorderMode::Fused,
+            batch: a.get_usize("batch", 4),
+            prefill_budget: 0,
+            tracer: Some(tracer.clone()),
+        },
+    );
+
+    // Warmup: one request per model compiles the stages.
+    for (i, &m) in models.iter().enumerate() {
+        let rx = router.submit(demo_request(&router, m, i, max_new))?;
+        rx.recv()??;
+    }
+    tracer.set_enabled(true);
+
+    // The traced request mix, round-robin over the model families.
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let req = demo_request(&router, models[i % models.len()], i, max_new);
+        rxs.push(router.submit(req)?);
+    }
+    let mut responses = Vec::new();
+    for rx in rxs {
+        responses.push(rx.recv()??);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    tracer.set_enabled(false);
+    router.shutdown();
+
+    let trace = tracer.drain();
+    chrome_trace::write(std::path::Path::new(&out), &trace)?;
+    println!("wrote {} spans to {out} (open in chrome://tracing or \
+              ui.perfetto.dev)\n", trace.len());
+
+    let stats = collect_stats(&responses, wall);
+    println!("{}\n", stats.report());
+    println!("== measured (traced run) ==");
+    let report = TraceReport::from_trace(&trace);
+    println!("{}", report.render());
+
+    let dev: &DeviceSpec = DeviceSpec::by_name(&a.get_or("device", "A100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    println!("== device-model projection (paper scale, baseline) ==");
+    println!("{}", render(&standard_breakdown_rows(dev,
+                                                   &Levers::baseline())));
     Ok(())
 }

@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use xla::{ElementType, HloModuleProto, PjRtBuffer, PjRtClient,
           PjRtLoadedExecutable, XlaComputation};
 
-use crate::substrate::metrics::OpTimes;
+use crate::telemetry::tracer::{Cat, WorkerTracer};
 
 use super::manifest::{Manifest, StageSpec};
 use super::tensor::{DType, Tensor};
@@ -64,8 +64,10 @@ pub struct Engine {
     weight_bufs: RefCell<HashMap<String, Rc<PjRtBuffer>>>,
     execs: RefCell<HashMap<String, StageHandle>>,
     pub stats: RefCell<EngineStats>,
-    /// Per-dispatch stage timing (stage name → accumulated seconds).
-    pub stage_times: RefCell<OpTimes>,
+    /// Telemetry recorder; `None` (the default) costs nothing on the
+    /// dispatch path. Spans cover compile / upload / execute / download
+    /// and inherit the worker's current request id and scheduler tick.
+    tracer: Option<WorkerTracer>,
 }
 
 impl Engine {
@@ -92,8 +94,19 @@ impl Engine {
             weight_bufs: RefCell::new(HashMap::new()),
             execs: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
-            stage_times: RefCell::new(OpTimes::new()),
+            tracer: None,
         })
+    }
+
+    /// Attach a telemetry recorder: every subsequent compile, host
+    /// transfer and PJRT execute is recorded as a span.
+    pub fn set_tracer(&mut self, tracer: WorkerTracer) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The attached telemetry recorder, if any.
+    pub fn tracer(&self) -> Option<&WorkerTracer> {
+        self.tracer.as_ref()
     }
 
     pub fn client(&self) -> &PjRtClient {
@@ -124,6 +137,8 @@ impl Engine {
 
     /// Upload a host tensor to the device.
     pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        let _span = self.tracer.as_ref().map(|w| w.span(Cat::Upload,
+                                                        "upload"));
         self.client
             .buffer_from_host_raw_bytes(elem_type(t.dtype), &t.data,
                                         &t.shape, None)
@@ -132,6 +147,8 @@ impl Engine {
 
     /// Download a device buffer to a host tensor.
     pub fn download(&self, b: &PjRtBuffer) -> Result<Tensor> {
+        let _span = self.tracer.as_ref().map(|w| w.span(Cat::Download,
+                                                        "download"));
         let lit = b.to_literal_sync()?;
         let shape = lit.array_shape()?;
         let dims: Vec<usize> =
@@ -173,6 +190,7 @@ impl Engine {
         }
         let spec = self.manifest.stage(name)?.clone();
         let path = self.manifest.dir.join(&spec.file);
+        let _span = self.tracer.as_ref().map(|w| w.span(Cat::Compile, name));
         let t0 = Instant::now();
         let proto = HloModuleProto::from_text_file(
             path.to_str().context("path utf8")?,
@@ -244,15 +262,17 @@ impl Engine {
                 Arg::Host(_) => ptrs.push(uploads[i].as_ref().unwrap()),
             }
         }
+        let span = self.tracer.as_ref().map(|w| w.span(Cat::Execute,
+                                                       &h.spec.name));
         let t0 = Instant::now();
         let mut res = h.exe.execute_b(&ptrs)?;
         let dt = t0.elapsed().as_secs_f64();
+        drop(span);
         {
             let mut st = self.stats.borrow_mut();
             st.dispatches += 1;
             st.dispatch_secs += dt;
         }
-        self.stage_times.borrow_mut().add(&h.spec.name, dt);
         if res.is_empty() || res[0].len() != h.spec.outputs.len() {
             bail!(
                 "stage {}: got {} outputs, manifest says {}",

@@ -33,10 +33,18 @@ impl Histogram {
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Smallest sample (0.0 on an empty reservoir, matching `mean()`).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
+    /// Largest sample (0.0 on an empty reservoir, matching `mean()`).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
     pub fn stddev(&self) -> f64 {
@@ -217,5 +225,20 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.percentile(50.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_min_max_finite() {
+        // Regression: these used to return ±INFINITY on an empty
+        // reservoir, leaking "inf" into report strings.
+        let h = Histogram::new();
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert!(!h.summary().contains("inf"), "{}", h.summary());
+        let mut h = Histogram::new();
+        h.record(-2.5);
+        h.record(4.0);
+        assert_eq!(h.min(), -2.5);
+        assert_eq!(h.max(), 4.0);
     }
 }

@@ -1,0 +1,162 @@
+//! Aggregation layer: fold a trace into the existing
+//! `substrate::metrics` structures — per-category and per-stage
+//! wall-time totals (`OpTimes`) and the serving-latency histograms
+//! (TTFT, time-between-tokens) the paper's Figure-3 distributions use.
+
+use std::collections::HashMap;
+
+use crate::substrate::metrics::{Histogram, OpTimes};
+use crate::substrate::table::Table;
+
+use super::tracer::{Cat, Trace};
+
+/// Metrics folded from one trace.
+#[derive(Debug, Clone, Default)]
+pub struct Aggregate {
+    /// Wall time per span category (keys are `Cat::as_str()`).
+    pub per_category: OpTimes,
+    /// Wall time per `Execute` span name — the per-stage breakdown
+    /// that used to live in the engine's ad-hoc `stage_times`.
+    pub per_stage: OpTimes,
+    /// Time from a request's first span to its first sampled token (ms).
+    pub ttft_ms: Histogram,
+    /// Time between consecutive sampled tokens per request (ms).
+    pub tbt_ms: Histogram,
+    pub span_count: usize,
+}
+
+impl Aggregate {
+    pub fn from_trace(tr: &Trace) -> Aggregate {
+        let mut agg = Aggregate { span_count: tr.len(), ..Default::default() };
+        // Single pass: category/stage totals + per-request latency raw
+        // material (first span start, sample-span ends).
+        let mut per_req: HashMap<u64, (f64, Vec<f64>)> = HashMap::new();
+        for s in &tr.spans {
+            // Phase wrappers would double-count the nested work.
+            if !matches!(s.cat, Cat::Prefill | Cat::Decode | Cat::Other) {
+                agg.per_category.add(s.cat.as_str(), s.dur());
+            }
+            if s.cat == Cat::Execute {
+                agg.per_stage.add(&s.name, s.dur());
+            }
+            if let Some(req) = s.req {
+                let e = per_req
+                    .entry(req)
+                    .or_insert((f64::INFINITY, Vec::new()));
+                e.0 = e.0.min(s.t0);
+                if s.cat == Cat::Sample {
+                    e.1.push(s.t1);
+                }
+            }
+        }
+        // Deterministic histogram fill order.
+        let mut reqs: Vec<u64> = per_req.keys().copied().collect();
+        reqs.sort_unstable();
+        for req in reqs {
+            let (first, mut samples) = per_req.remove(&req).unwrap();
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if let Some(&t) = samples.first() {
+                agg.ttft_ms.record((t - first) * 1e3);
+            }
+            for w in samples.windows(2) {
+                agg.tbt_ms.record((w[1] - w[0]) * 1e3);
+            }
+        }
+        agg
+    }
+
+    /// Per-category table, largest first.
+    pub fn render_categories(&self) -> String {
+        render_optimes(&self.per_category, "category")
+    }
+
+    /// Per-stage table (Execute spans), largest first.
+    pub fn render_stages(&self) -> String {
+        render_optimes(&self.per_stage, "stage")
+    }
+
+    pub fn latency_summary(&self) -> String {
+        format!(
+            "ttft(ms) [{}]\ntbt(ms)  [{}]",
+            self.ttft_ms.summary(),
+            self.tbt_ms.summary()
+        )
+    }
+}
+
+/// Shared renderer: one named-accumulator table, largest first.
+fn render_optimes(times: &OpTimes, key_col: &str) -> String {
+    let total = times.total();
+    let mut rows: Vec<(String, f64)> =
+        times.entries().map(|(k, v)| (k.to_string(), v)).collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut table = Table::new(&[key_col, "time(ms)", "share"]);
+    for (k, v) in rows {
+        let share = if total > 0.0 { v / total * 100.0 } else { 0.0 };
+        table.row(&[k, format!("{:.3}", v * 1e3), format!("{share:.1}%")]);
+    }
+    table.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::Span;
+    use super::*;
+
+    fn sp(cat: Cat, name: &str, t0: f64, t1: f64, req: Option<u64>) -> Span {
+        Span { name: name.into(), cat, t0, t1, tid: 1, req, tick: None }
+    }
+
+    #[test]
+    fn folds_categories_stages_and_latencies() {
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Tokenize, "tokenize", 0.0, 0.1, Some(1)),
+                sp(Cat::Execute, "prefill_b32", 0.1, 0.5, Some(1)),
+                sp(Cat::Sample, "sample", 0.5, 0.6, Some(1)),
+                sp(Cat::Execute, "decode_b1", 0.6, 0.8, Some(1)),
+                sp(Cat::Sample, "sample", 0.8, 0.9, Some(1)),
+                sp(Cat::Decode, "step", 0.6, 0.9, Some(1)), // wrapper
+            ],
+            workers: vec![(1, "w".into())],
+        };
+        let agg = Aggregate::from_trace(&tr);
+        assert_eq!(agg.span_count, 6);
+        assert!((agg.per_category.get("Execute") - 0.6).abs() < 1e-9);
+        assert!((agg.per_category.get("Sample") - 0.2).abs() < 1e-9);
+        assert_eq!(agg.per_category.get("Decode"), 0.0);
+        assert!((agg.per_stage.get("prefill_b32") - 0.4).abs() < 1e-9);
+        assert!((agg.per_stage.get("decode_b1") - 0.2).abs() < 1e-9);
+        // ttft: first span at 0.0, first sample ends 0.6 → 600 ms
+        assert_eq!(agg.ttft_ms.len(), 1);
+        assert!((agg.ttft_ms.mean() - 600.0).abs() < 1e-6);
+        // tbt: 0.9 - 0.6 → 300 ms
+        assert_eq!(agg.tbt_ms.len(), 1);
+        assert!((agg.tbt_ms.mean() - 300.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn renders_sorted_tables() {
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Execute, "big", 0.0, 1.0, None),
+                sp(Cat::Execute, "small", 1.0, 1.1, None),
+            ],
+            workers: vec![],
+        };
+        let agg = Aggregate::from_trace(&tr);
+        let s = agg.render_stages();
+        let big = s.find("big").unwrap();
+        let small = s.find("small").unwrap();
+        assert!(big < small, "largest stage first");
+        assert!(agg.render_categories().contains("Execute"));
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let agg = Aggregate::from_trace(&Trace::default());
+        assert_eq!(agg.span_count, 0);
+        assert_eq!(agg.ttft_ms.len(), 0);
+        assert!(agg.latency_summary().contains("n=0"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Idle-gap attribution: the paper's "GPU idle" decomposition.
+//!
+//! The characterization result driving every optimization lever is
+//! that auto-regressive generation is typically dominated by time the
+//! device spends *not* executing (Obs #2). This pass takes a trace,
+//! finds the gaps between device dispatches on each worker, and
+//! classifies each gap by the host-side work recorded inside it:
+//! scheduling (batcher admission), tokenization, sampling,
+//! host-device sync (uploads/downloads), stage compilation, or
+//! unattributed host time.
+
+use crate::substrate::metrics::OpTimes;
+use crate::substrate::table::Table;
+
+use super::tracer::{union_len, Cat, Trace};
+
+/// Gap-classification buckets. `Sync` covers both transfer directions.
+pub const GAP_CATEGORIES: [&str; 6] = [
+    "Scheduling", "Sampling", "Tokenization", "Sync", "Compile", "Other",
+];
+
+fn gap_label(cat: Cat) -> Option<&'static str> {
+    match cat {
+        Cat::Schedule => Some("Scheduling"),
+        Cat::Sample => Some("Sampling"),
+        Cat::Tokenize => Some("Tokenization"),
+        Cat::Upload | Cat::Download => Some("Sync"),
+        Cat::Compile => Some("Compile"),
+        // Phase wrappers and Execute itself never attribute gap time.
+        _ => None,
+    }
+}
+
+/// The measured split of a run's wall time into device-execute time
+/// and classified idle gaps.
+#[derive(Debug, Clone, Default)]
+pub struct Attribution {
+    /// Union of device-execute intervals (device busy).
+    pub execute: f64,
+    /// Idle-gap time by `GAP_CATEGORIES` bucket.
+    pub gaps: OpTimes,
+    /// Analyzed wall time (first dispatch start → last dispatch end,
+    /// summed over workers).
+    pub wall: f64,
+}
+
+impl Attribution {
+    /// Classify inter-dispatch gaps for every worker in the trace.
+    pub fn from_trace(tr: &Trace) -> Attribution {
+        let mut out = Attribution::default();
+        for key in GAP_CATEGORIES {
+            out.gaps.add(key, 0.0); // all buckets always present
+        }
+        let mut tids: Vec<u64> = tr.spans.iter().map(|s| s.tid).collect();
+        tids.sort();
+        tids.dedup();
+        for tid in tids {
+            out.accumulate_tid(tr, tid);
+        }
+        out
+    }
+
+    fn accumulate_tid(&mut self, tr: &Trace, tid: u64) {
+        let spans = tr.spans_on(tid);
+        let exec: Vec<(f64, f64)> = spans
+            .iter()
+            .filter(|s| s.cat == Cat::Execute)
+            .map(|s| (s.t0, s.t1))
+            .collect();
+        if exec.is_empty() {
+            return;
+        }
+        let w0 = exec.iter().map(|e| e.0).fold(f64::INFINITY, f64::min);
+        let w1 = exec.iter().map(|e| e.1).fold(f64::NEG_INFINITY, f64::max);
+        self.wall += w1 - w0;
+        self.execute += union_len(exec.clone());
+
+        // Complement of the execute union inside [w0, w1] = the gaps.
+        let mut merged = exec;
+        merged.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut gaps: Vec<(f64, f64)> = Vec::new();
+        let mut cursor = w0;
+        for (a, b) in merged {
+            if a > cursor {
+                gaps.push((cursor, a));
+            }
+            cursor = cursor.max(b);
+        }
+
+        // Attributable host work on this worker, time-ordered.
+        let mut host: Vec<(f64, f64, &'static str)> = spans
+            .iter()
+            .filter_map(|s| gap_label(s.cat).map(|l| (s.t0, s.t1, l)))
+            .collect();
+        host.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        // Both `gaps` and `host` are time-ordered, so a host span that
+        // ends before the current gap's start can never matter again —
+        // `hi` advances monotonically and the sweep is O(gaps + host).
+        let mut hi = 0usize;
+        for (g0, g1) in gaps {
+            while hi < host.len() && host[hi].1 <= g0 {
+                hi += 1;
+            }
+            let mut p = g0;
+            for &(h0, h1, label) in &host[hi..] {
+                if h0 >= g1 {
+                    break;
+                }
+                if h1 <= p {
+                    continue;
+                }
+                let start = h0.max(p);
+                if start > p {
+                    self.gaps.add("Other", start - p);
+                    p = start;
+                }
+                let end = h1.min(g1);
+                if end > p {
+                    self.gaps.add(label, end - p);
+                    p = end;
+                }
+                if p >= g1 {
+                    break;
+                }
+            }
+            if p < g1 {
+                self.gaps.add("Other", g1 - p);
+            }
+        }
+    }
+
+    /// Total classified idle time.
+    pub fn idle_total(&self) -> f64 {
+        self.gaps.total()
+    }
+
+    /// Device-busy fraction of the analyzed wall time.
+    pub fn execute_fraction(&self) -> f64 {
+        if self.wall == 0.0 {
+            return 0.0;
+        }
+        self.execute / self.wall
+    }
+
+    /// Render as a percentage table — the measured counterpart of the
+    /// perfmodel's Idle bucket, split by cause.
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&["bucket", "time(ms)", "% of wall"]);
+        let pct = |t: f64| {
+            if self.wall > 0.0 { t / self.wall * 100.0 } else { 0.0 }
+        };
+        table.row(&[
+            "Execute (device busy)".to_string(),
+            format!("{:.3}", self.execute * 1e3),
+            format!("{:.1}%", pct(self.execute)),
+        ]);
+        for key in GAP_CATEGORIES {
+            let t = self.gaps.get(key);
+            table.row(&[
+                format!("Idle / {key}"),
+                format!("{:.3}", t * 1e3),
+                format!("{:.1}%", pct(t)),
+            ]);
+        }
+        table.row(&[
+            "wall (dispatch window)".to_string(),
+            format!("{:.3}", self.wall * 1e3),
+            "100.0%".to_string(),
+        ]);
+        table.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::Span;
+    use super::*;
+
+    fn sp(cat: Cat, t0: f64, t1: f64) -> Span {
+        Span { name: cat.as_str().to_string(), cat, t0, t1, tid: 1,
+               req: None, tick: None }
+    }
+
+    fn trace(spans: Vec<Span>) -> Trace {
+        Trace { spans, workers: vec![(1, "w".into())] }
+    }
+
+    #[test]
+    fn splits_gap_into_categories() {
+        // execute [0,1] … gap [1,2] … execute [2,3]
+        // gap = 0.3 schedule + 0.2 tokenize + 0.2 sample + 0.2 sync
+        //       + 0.1 unattributed
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Schedule, 1.0, 1.3),
+            sp(Cat::Tokenize, 1.3, 1.5),
+            sp(Cat::Sample, 1.5, 1.7),
+            sp(Cat::Upload, 1.7, 1.9),
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        assert!((a.wall - 3.0).abs() < 1e-9);
+        assert!((a.execute - 2.0).abs() < 1e-9);
+        assert!((a.gaps.get("Scheduling") - 0.3).abs() < 1e-9);
+        assert!((a.gaps.get("Tokenization") - 0.2).abs() < 1e-9);
+        assert!((a.gaps.get("Sampling") - 0.2).abs() < 1e-9);
+        assert!((a.gaps.get("Sync") - 0.2).abs() < 1e-9);
+        assert!((a.gaps.get("Other") - 0.1).abs() < 1e-9);
+        // execute + idle == wall
+        assert!((a.execute + a.idle_total() - a.wall).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_work_overlapping_execute_not_counted() {
+        // A sample span inside the execute window must not create idle.
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Sample, 0.2, 0.4),
+            sp(Cat::Execute, 1.0, 2.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        assert!((a.idle_total()).abs() < 1e-9);
+        assert!((a.execute_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_buckets_always_present() {
+        let a = Attribution::from_trace(&trace(vec![]));
+        for key in GAP_CATEGORIES {
+            assert!(a.gaps.entries().any(|(k, _)| k == key), "{key}");
+        }
+        assert_eq!(a.wall, 0.0);
+        let s = a.render();
+        assert!(s.contains("Scheduling"));
+        assert!(s.contains("Sync"));
+    }
+
+    #[test]
+    fn phase_spans_do_not_attribute() {
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Decode, 0.0, 3.0), // wrapper over the whole tick
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        assert!((a.gaps.get("Other") - 1.0).abs() < 1e-9);
+        assert!((a.gaps.get("Scheduling")).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! Chrome-trace exporter: `about://tracing` / Perfetto-compatible JSON.
+//!
+//! Emits the Trace Event Format's "X" (complete) events with
+//! microsecond timestamps plus "M" metadata events naming each worker
+//! thread, via `substrate::json` (no serde in this crate).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::substrate::json::Json;
+
+use super::tracer::Trace;
+
+/// Build the Chrome-trace JSON document for a trace.
+pub fn to_json(tr: &Trace) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(
+        tr.spans.len() + tr.workers.len(),
+    );
+    for (tid, name) in &tr.workers {
+        events.push(Json::from_obj(vec![
+            ("name".into(), Json::Str("thread_name".into())),
+            ("ph".into(), Json::Str("M".into())),
+            ("pid".into(), Json::Num(0.0)),
+            ("tid".into(), Json::Num(*tid as f64)),
+            ("args".into(), Json::from_obj(vec![
+                ("name".into(), Json::Str(name.clone())),
+            ])),
+        ]));
+    }
+    for s in &tr.spans {
+        let mut args = Vec::new();
+        if let Some(r) = s.req {
+            args.push(("req".into(), Json::Num(r as f64)));
+        }
+        if let Some(t) = s.tick {
+            args.push(("tick".into(), Json::Num(t as f64)));
+        }
+        events.push(Json::from_obj(vec![
+            ("name".into(), Json::Str(s.name.clone())),
+            ("cat".into(), Json::Str(s.cat.as_str().into())),
+            ("ph".into(), Json::Str("X".into())),
+            ("ts".into(), Json::Num(s.t0 * 1e6)),
+            ("dur".into(), Json::Num(s.dur() * 1e6)),
+            ("pid".into(), Json::Num(0.0)),
+            ("tid".into(), Json::Num(s.tid as f64)),
+            ("args".into(), Json::from_obj(args)),
+        ]));
+    }
+    Json::from_obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ])
+}
+
+/// Serialize and write `trace.json` for `chrome://tracing` / Perfetto.
+pub fn write(path: &Path, tr: &Trace) -> Result<()> {
+    std::fs::write(path, to_json(tr).to_string())
+        .with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::{Cat, Span};
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            spans: vec![
+                Span {
+                    name: "decode_b4".into(),
+                    cat: Cat::Execute,
+                    t0: 0.001,
+                    t1: 0.003,
+                    tid: 1,
+                    req: Some(42),
+                    tick: Some(7),
+                },
+                Span {
+                    name: "sample".into(),
+                    cat: Cat::Sample,
+                    t0: 0.003,
+                    t1: 0.004,
+                    tid: 1,
+                    req: None,
+                    tick: None,
+                },
+            ],
+            workers: vec![(1, "Llama".into())],
+        }
+    }
+
+    #[test]
+    fn emits_valid_trace_event_json() {
+        let j = to_json(&sample_trace());
+        // must round-trip through the JSON parser
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3); // 1 metadata + 2 spans
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(
+            meta.get("args").unwrap().get("name").unwrap().as_str(),
+            Some("Llama")
+        );
+        let e = &events[1];
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("cat").unwrap().as_str(), Some("Execute"));
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let dur = e.get("dur").unwrap().as_f64().unwrap();
+        assert!((ts - 1000.0).abs() < 1e-3, "ts {ts}");
+        assert!((dur - 2000.0).abs() < 1e-3, "dur {dur}");
+        assert_eq!(e.get("args").unwrap().get("req").unwrap().as_i64(),
+                   Some(42));
+        assert_eq!(e.get("args").unwrap().get("tick").unwrap().as_i64(),
+                   Some(7));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mmserve_chrome_trace_test.json");
+        write(&path, &sample_trace()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&body).unwrap();
+        assert!(parsed.get("traceEvents").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

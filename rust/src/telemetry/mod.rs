@@ -1,0 +1,43 @@
+//! Request-path tracing & idle-time attribution.
+//!
+//! The paper's core characterization result (Obs #2) is that
+//! auto-regressive generation is typically dominated by GPU *idle*
+//! time, and its Figure-3/4 methodology rests on per-operator
+//! wall-time timelines. This subsystem records exactly that timeline
+//! from the live serving path and decomposes the gaps between device
+//! dispatches into their host-side causes:
+//!
+//! * [`tracer`] — low-overhead span recorder: begin/end spans with
+//!   worker id, category, request id and scheduler tick, buffered
+//!   per worker; a single relaxed atomic load when disabled.
+//! * [`timeline`] — per-scheduler-tick step records folded from
+//!   tick-tagged spans (prefill/decode/sample/host-gap phases).
+//! * [`attribution`] — classifies inter-dispatch gaps into
+//!   scheduling / tokenization / sampling / host-device sync /
+//!   compile / other — the measured "GPU idle" decomposition.
+//! * [`chrome_trace`] — `about://tracing`-compatible JSON export.
+//! * [`aggregate`] — folds spans into `substrate::metrics` (TTFT and
+//!   time-between-tokens histograms, per-category/per-stage totals).
+//! * [`report`] — the text report printed by `mmserve trace` next to
+//!   the analytical perfmodel projection.
+//!
+//! Wiring: `Engine` holds an optional [`tracer::WorkerTracer`] and
+//! wraps every PJRT execute / upload / download / compile in a span;
+//! the coordinator workers tag spans with the current request and
+//! scheduler tick. Pass a [`tracer::Tracer`] in `RouterConfig` (or
+//! call `Engine::set_tracer`) to turn it on; when absent or disabled
+//! the serving path is unaffected.
+
+pub mod aggregate;
+pub mod attribution;
+pub mod chrome_trace;
+pub mod report;
+pub mod timeline;
+pub mod tracer;
+
+pub use aggregate::Aggregate;
+pub use attribution::Attribution;
+pub use report::TraceReport;
+pub use timeline::Timeline;
+pub use tracer::{Cat, ReqScope, Span, SpanGuard, TickScope, Trace,
+                 Tracer, WorkerTracer};

@@ -1,0 +1,97 @@
+//! Text-report exporter: the measured Fig-3/4-style breakdown of a
+//! trace, suitable for printing next to the analytical perfmodel
+//! projection (`mmserve trace` does exactly that).
+
+use super::aggregate::Aggregate;
+use super::attribution::Attribution;
+use super::timeline::Timeline;
+use super::tracer::Trace;
+
+/// Everything the text report derives from one trace.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub aggregate: Aggregate,
+    pub attribution: Attribution,
+    pub timeline: Timeline,
+    pub coverage: f64,
+    pub wall: f64,
+}
+
+impl TraceReport {
+    pub fn from_trace(tr: &Trace) -> TraceReport {
+        TraceReport {
+            aggregate: Aggregate::from_trace(tr),
+            attribution: Attribution::from_trace(tr),
+            timeline: Timeline::from_trace(tr),
+            coverage: tr.coverage(),
+            wall: tr.wall(),
+        }
+    }
+
+    /// Render the full measured report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace: {} spans, wall {:.2} ms, span coverage {:.1}%\n",
+            self.aggregate.span_count,
+            self.wall * 1e3,
+            self.coverage * 100.0
+        ));
+        out.push_str(&self.aggregate.latency_summary());
+        out.push('\n');
+        out.push_str("\n-- measured category breakdown --\n");
+        out.push_str(&self.aggregate.render_categories());
+        out.push_str("\n-- per-stage dispatch time --\n");
+        out.push_str(&self.aggregate.render_stages());
+        out.push_str("\n-- idle-gap attribution (the paper's GPU-idle \
+                      decomposition) --\n");
+        out.push_str(&self.attribution.render());
+        if !self.timeline.is_empty() {
+            out.push_str(&format!(
+                "\n-- step timeline ({} ticks, mean {:.3} ms, execute \
+                 fraction {:.1}%) --\n",
+                self.timeline.len(),
+                self.timeline.mean_tick_secs() * 1e3,
+                self.timeline.execute_fraction() * 100.0
+            ));
+            out.push_str(&self.timeline.render(12));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::{Cat, Span, Trace};
+    use super::*;
+
+    #[test]
+    fn report_renders_all_sections() {
+        let sp = |cat: Cat, t0: f64, t1: f64, tick: Option<u64>| Span {
+            name: cat.as_str().to_string(),
+            cat,
+            t0,
+            t1,
+            tid: 1,
+            req: Some(1),
+            tick,
+        };
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Execute, 0.0, 0.4, Some(0)),
+                sp(Cat::Sample, 0.4, 0.5, Some(0)),
+                sp(Cat::Execute, 0.5, 0.9, Some(1)),
+                sp(Cat::Sample, 0.9, 1.0, Some(1)),
+            ],
+            workers: vec![(1, "w".into())],
+        };
+        let rep = TraceReport::from_trace(&tr);
+        let s = rep.render();
+        assert!(s.contains("span coverage 100.0%"));
+        assert!(s.contains("measured category breakdown"));
+        assert!(s.contains("idle-gap attribution"));
+        assert!(s.contains("step timeline"));
+        assert!(rep.coverage > 0.99);
+        assert_eq!(rep.timeline.len(), 2);
+    }
+}

@@ -1,0 +1,229 @@
+//! Step timeline: per-scheduler-tick records folded from a trace.
+//!
+//! The continuous batcher tags every span with the current tick (via
+//! `WorkerTracer::set_tick`); this module groups those spans back into
+//! one record per tick — when the tick started/ended, how much of it
+//! was prefill / decode-execute / sampling / host gap — which is the
+//! per-step timeline the paper's Figure-3 methodology is built on.
+
+use std::collections::HashMap;
+
+use crate::substrate::metrics::OpTimes;
+use crate::substrate::table::Table;
+
+use super::tracer::{union_len, Cat, Trace};
+
+/// One scheduler tick (or one bs=1 decode step).
+#[derive(Debug, Clone)]
+pub struct TickRecord {
+    /// Worker the tick ran on (ticks are per-worker, never reused).
+    pub tid: u64,
+    pub index: u64,
+    pub t0: f64,
+    pub t1: f64,
+    /// Per-category time within the tick (keys are `Cat::as_str()`).
+    pub phases: OpTimes,
+    /// Distinct requests touched during the tick.
+    pub requests: usize,
+}
+
+impl TickRecord {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// The tick-ordered timeline of a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub ticks: Vec<TickRecord>,
+}
+
+impl Timeline {
+    /// Fold tick-tagged spans of a trace into per-tick records, keyed
+    /// by `(worker, tick)` — tick indices are per-worker monotonic
+    /// (`WorkerTracer::next_tick`), so the key is unique per step.
+    /// Phase spans (`Prefill`/`Decode`/`Other`) wrap the finer-grained
+    /// work and are not added to the per-category accumulators (they
+    /// would double-count), but they do extend the tick bounds.
+    pub fn from_trace(tr: &Trace) -> Timeline {
+        let mut recs: HashMap<(u64, u64), (TickRecord, Vec<u64>)> =
+            HashMap::new();
+        for s in &tr.spans {
+            let Some(tick) = s.tick else { continue };
+            let (rec, reqs) = recs
+                .entry((s.tid, tick))
+                .or_insert_with(|| (TickRecord {
+                    tid: s.tid,
+                    index: tick,
+                    t0: s.t0,
+                    t1: s.t1,
+                    phases: OpTimes::new(),
+                    requests: 0,
+                }, Vec::new()));
+            rec.t0 = rec.t0.min(s.t0);
+            rec.t1 = rec.t1.max(s.t1);
+            if !matches!(s.cat, Cat::Prefill | Cat::Decode | Cat::Other) {
+                rec.phases.add(s.cat.as_str(), s.dur());
+            }
+            if let Some(req) = s.req {
+                reqs.push(req);
+            }
+        }
+        let mut ticks: Vec<TickRecord> = recs
+            .into_values()
+            .map(|(mut rec, mut reqs)| {
+                reqs.sort_unstable();
+                reqs.dedup();
+                rec.requests = reqs.len();
+                rec
+            })
+            .collect();
+        ticks.sort_by(|a, b| {
+            a.t0.partial_cmp(&b.t0)
+                .unwrap()
+                .then_with(|| (a.tid, a.index).cmp(&(b.tid, b.index)))
+        });
+        Timeline { ticks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ticks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ticks.is_empty()
+    }
+
+    /// Mean tick duration in seconds (0 when empty).
+    pub fn mean_tick_secs(&self) -> f64 {
+        if self.ticks.is_empty() {
+            return 0.0;
+        }
+        self.ticks.iter().map(|t| t.dur()).sum::<f64>()
+            / self.ticks.len() as f64
+    }
+
+    /// Fraction of total tick time spent in device execution.
+    pub fn execute_fraction(&self) -> f64 {
+        let total: f64 = self.ticks.iter().map(|t| t.dur()).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let exec: f64 = self
+            .ticks
+            .iter()
+            .map(|t| t.phases.get(Cat::Execute.as_str()))
+            .sum();
+        exec / total
+    }
+
+    /// Render the timeline as a per-tick table (first `max_rows` ticks).
+    pub fn render(&self, max_rows: usize) -> String {
+        let mut table = Table::new(&[
+            "tick", "start(ms)", "dur(ms)", "exec(ms)", "sample(ms)",
+            "sched(ms)", "sync(ms)", "reqs",
+        ]);
+        for t in self.ticks.iter().take(max_rows) {
+            let sync = t.phases.get(Cat::Upload.as_str())
+                + t.phases.get(Cat::Download.as_str());
+            table.row(&[
+                t.index.to_string(),
+                format!("{:.3}", t.t0 * 1e3),
+                format!("{:.3}", t.dur() * 1e3),
+                format!("{:.3}", t.phases.get(Cat::Execute.as_str()) * 1e3),
+                format!("{:.3}", t.phases.get(Cat::Sample.as_str()) * 1e3),
+                format!("{:.3}", t.phases.get(Cat::Schedule.as_str()) * 1e3),
+                format!("{:.3}", sync * 1e3),
+                t.requests.to_string(),
+            ]);
+        }
+        let mut out = table.render();
+        if self.ticks.len() > max_rows {
+            out.push_str(&format!("  … {} more ticks\n",
+                                  self.ticks.len() - max_rows));
+        }
+        out
+    }
+
+    /// Union of tick windows (the active portion of the run).
+    pub fn active_secs(&self) -> f64 {
+        union_len(self.ticks.iter().map(|t| (t.t0, t.t1)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tracer::Span;
+    use super::*;
+
+    fn sp(cat: Cat, t0: f64, t1: f64, tick: Option<u64>, req: Option<u64>)
+          -> Span {
+        Span { name: cat.as_str().to_string(), cat, t0, t1, tid: 1, req,
+               tick }
+    }
+
+    #[test]
+    fn folds_ticks_in_order() {
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Execute, 1.0, 1.5, Some(1), Some(10)),
+                sp(Cat::Sample, 1.5, 1.6, Some(1), Some(10)),
+                sp(Cat::Execute, 0.0, 0.5, Some(0), Some(10)),
+                sp(Cat::Schedule, 0.5, 0.6, Some(0), None),
+                sp(Cat::Other, 2.0, 2.1, None, None),
+            ],
+            workers: vec![(1, "w".into())],
+        };
+        let tl = Timeline::from_trace(&tr);
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl.ticks[0].index, 0);
+        assert!((tl.ticks[0].dur() - 0.6).abs() < 1e-12);
+        assert!((tl.ticks[0].phases.get("Execute") - 0.5).abs() < 1e-12);
+        assert_eq!(tl.ticks[0].requests, 1);
+        assert_eq!(tl.ticks[1].index, 1);
+        assert!((tl.mean_tick_secs() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_spans_extend_bounds_but_do_not_double_count() {
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Decode, 0.0, 1.0, Some(0), None),
+                sp(Cat::Execute, 0.2, 0.7, Some(0), None),
+            ],
+            workers: vec![],
+        };
+        let tl = Timeline::from_trace(&tr);
+        assert_eq!(tl.len(), 1);
+        assert!((tl.ticks[0].dur() - 1.0).abs() < 1e-12);
+        assert!((tl.ticks[0].phases.total() - 0.5).abs() < 1e-12);
+        assert!((tl.execute_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_tick_index_on_different_workers_stays_separate() {
+        let mut a = sp(Cat::Execute, 0.0, 0.5, Some(0), Some(1));
+        let mut b = sp(Cat::Execute, 0.1, 0.6, Some(0), Some(2));
+        a.tid = 1;
+        b.tid = 2;
+        let tl = Timeline::from_trace(&Trace {
+            spans: vec![a, b],
+            workers: vec![(1, "w1".into()), (2, "w2".into())],
+        });
+        assert_eq!(tl.len(), 2, "tick 0 of two workers must not merge");
+        assert!((tl.ticks[0].dur() - 0.5).abs() < 1e-12);
+        assert_eq!(tl.ticks[0].tid, 1);
+        assert_eq!(tl.ticks[1].tid, 2);
+    }
+
+    #[test]
+    fn render_caps_rows() {
+        let spans: Vec<Span> = (0..10)
+            .map(|i| sp(Cat::Execute, i as f64, i as f64 + 0.5,
+                        Some(i as u64), None))
+            .collect();
+        let tl = Timeline::from_trace(&Trace { spans, workers: vec![] });
+        let s = tl.render(3);
+        assert!(s.contains("… 7 more ticks"));
+    }
+}

@@ -1,0 +1,541 @@
+//! Low-overhead span recorder for the live serving path.
+//!
+//! A `Tracer` is a cloneable process-level handle; each worker thread
+//! registers a `WorkerTracer` whose spans land in its own
+//! mutex-protected buffer (uncontended except at drain time, so the
+//! hot path is effectively lock-free). Spans carry a category, an
+//! optional request id and scheduler-tick index, and wall-clock bounds
+//! measured against the tracer's monotonic epoch.
+//!
+//! Disabled mode is a single relaxed atomic load per would-be span —
+//! no clock read, no allocation, no lock — so the serving path is
+//! unaffected when tracing is off.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Sentinel for "no request / no tick" in the per-worker context cells.
+const NONE: u64 = u64::MAX;
+
+/// Span categories — the vocabulary of the paper's Fig-3/4 timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Cat {
+    /// A PJRT executable dispatch (device busy time).
+    Execute,
+    /// Stage compilation (startup / first-use).
+    Compile,
+    /// Host→device transfer (sync).
+    Upload,
+    /// Device→host transfer (sync).
+    Download,
+    /// Batcher admission / slot bookkeeping.
+    Schedule,
+    /// Text/image/speech (de)tokenization and featurization.
+    Tokenize,
+    /// Host-side sampling / beam bookkeeping.
+    Sample,
+    /// Logical prefill phase (wraps nested Execute/Upload spans).
+    Prefill,
+    /// Logical decode-step phase (wraps one scheduler tick's work).
+    Decode,
+    /// Anything else (phase markers, setup).
+    Other,
+}
+
+impl Cat {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Cat::Execute => "Execute",
+            Cat::Compile => "Compile",
+            Cat::Upload => "Upload",
+            Cat::Download => "Download",
+            Cat::Schedule => "Schedule",
+            Cat::Tokenize => "Tokenize",
+            Cat::Sample => "Sample",
+            Cat::Prefill => "Prefill",
+            Cat::Decode => "Decode",
+            Cat::Other => "Other",
+        }
+    }
+}
+
+/// A completed span. Times are seconds since the tracer epoch.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub cat: Cat,
+    pub t0: f64,
+    pub t1: f64,
+    /// Worker (thread) id assigned at registration.
+    pub tid: u64,
+    pub req: Option<u64>,
+    /// Scheduler tick the span belongs to, if any.
+    pub tick: Option<u64>,
+}
+
+impl Span {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+#[derive(Debug)]
+struct TracerCore {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_tid: AtomicU64,
+    /// (tid, worker name, span buffer) per registered worker.
+    sinks: Mutex<Vec<(u64, String, Arc<Mutex<Vec<Span>>>)>>,
+}
+
+/// Process-level tracing handle (cheap to clone; `Send + Sync`).
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    core: Arc<TracerCore>,
+}
+
+impl Tracer {
+    /// An enabled tracer.
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// A disabled tracer: spans are no-ops until `set_enabled(true)`.
+    pub fn off() -> Self {
+        Self::with_enabled(false)
+    }
+
+    fn with_enabled(on: bool) -> Self {
+        Tracer {
+            core: Arc::new(TracerCore {
+                enabled: AtomicBool::new(on),
+                epoch: Instant::now(),
+                next_tid: AtomicU64::new(1),
+                sinks: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.core.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Register a worker thread; spans from the returned handle are
+    /// tagged with a fresh tid and buffered separately.
+    pub fn worker(&self, name: &str) -> WorkerTracer {
+        let tid = self.core.next_tid.fetch_add(1, Ordering::Relaxed);
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        self.core
+            .sinks
+            .lock()
+            .unwrap()
+            .push((tid, name.to_string(), sink.clone()));
+        WorkerTracer {
+            core: self.core.clone(),
+            sink,
+            tid,
+            cur_req: Arc::new(AtomicU64::new(NONE)),
+            cur_tick: Arc::new(AtomicU64::new(NONE)),
+            tick_counter: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Collect (and clear) all recorded spans, sorted by start time.
+    pub fn drain(&self) -> Trace {
+        let mut spans = Vec::new();
+        let mut workers = Vec::new();
+        for (tid, name, sink) in self.core.sinks.lock().unwrap().iter() {
+            workers.push((*tid, name.clone()));
+            spans.append(&mut sink.lock().unwrap());
+        }
+        spans.sort_by(|a, b| a.t0.partial_cmp(&b.t0).unwrap());
+        Trace { spans, workers }
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+/// Per-worker recording handle. Clones share the same buffer and
+/// request/tick context cells (the engine holds a clone so its dispatch
+/// spans inherit the worker's current request/tick).
+#[derive(Debug, Clone)]
+pub struct WorkerTracer {
+    core: Arc<TracerCore>,
+    sink: Arc<Mutex<Vec<Span>>>,
+    tid: u64,
+    cur_req: Arc<AtomicU64>,
+    cur_tick: Arc<AtomicU64>,
+    /// Monotonic per-worker tick source (never reused, so ticks from
+    /// different requests on one worker can't collide).
+    tick_counter: Arc<AtomicU64>,
+}
+
+impl WorkerTracer {
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Set the ambient request id inherited by subsequent spans.
+    pub fn set_req(&self, id: u64) {
+        self.cur_req.store(id, Ordering::Relaxed);
+    }
+    pub fn clear_req(&self) {
+        self.cur_req.store(NONE, Ordering::Relaxed);
+    }
+
+    /// RAII scope that makes `id` the ambient request and clears it on
+    /// drop — survives early `?` returns, so a failed request can't
+    /// leak its id onto the next request's spans.
+    pub fn req_scope(&self, id: u64) -> ReqScope<'_> {
+        self.set_req(id);
+        ReqScope { wt: self }
+    }
+
+    /// Set the ambient scheduler-tick index.
+    pub fn set_tick(&self, tick: u64) {
+        self.cur_tick.store(tick, Ordering::Relaxed);
+    }
+    pub fn clear_tick(&self) {
+        self.cur_tick.store(NONE, Ordering::Relaxed);
+    }
+
+    /// Advance to a fresh, worker-unique tick and make it ambient.
+    /// The counter is shared by all clones (worker + engine), so ticks
+    /// stay monotonic across requests on the same worker.
+    pub fn next_tick(&self) -> u64 {
+        let t = self.tick_counter.fetch_add(1, Ordering::Relaxed);
+        self.cur_tick.store(t, Ordering::Relaxed);
+        t
+    }
+
+    /// RAII scope that clears the ambient tick on entry and on drop —
+    /// use around a per-request generation so neither a stale tick
+    /// from an enclosing loop nor an early `?` exit can mis-tag spans.
+    pub fn tick_scope(&self) -> TickScope<'_> {
+        self.clear_tick();
+        TickScope { wt: self }
+    }
+
+    /// Begin a span; it records itself on drop. Near-zero cost when
+    /// tracing is disabled (one relaxed load, no clock read).
+    pub fn span(&self, cat: Cat, name: &str) -> SpanGuard<'_> {
+        self.begin(cat, name, None)
+    }
+
+    /// Begin a span explicitly bound to a request id.
+    pub fn span_req(&self, cat: Cat, name: &str, req: u64) -> SpanGuard<'_> {
+        self.begin(cat, name, Some(req))
+    }
+
+    fn begin(&self, cat: Cat, name: &str, req: Option<u64>) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { wt: self, meta: None };
+        }
+        SpanGuard {
+            wt: self,
+            meta: Some(SpanMeta {
+                name: name.to_string(),
+                cat,
+                req,
+                start: Instant::now(),
+            }),
+        }
+    }
+}
+
+/// Clears the worker's ambient tick when dropped (see
+/// [`WorkerTracer::tick_scope`]).
+pub struct TickScope<'a> {
+    wt: &'a WorkerTracer,
+}
+
+impl Drop for TickScope<'_> {
+    fn drop(&mut self) {
+        self.wt.clear_tick();
+    }
+}
+
+/// Clears the worker's ambient request id when dropped (see
+/// [`WorkerTracer::req_scope`]).
+pub struct ReqScope<'a> {
+    wt: &'a WorkerTracer,
+}
+
+impl Drop for ReqScope<'_> {
+    fn drop(&mut self) {
+        self.wt.clear_req();
+    }
+}
+
+struct SpanMeta {
+    name: String,
+    cat: Cat,
+    req: Option<u64>,
+    start: Instant,
+}
+
+/// RAII span: records into the worker buffer on drop.
+pub struct SpanGuard<'a> {
+    wt: &'a WorkerTracer,
+    meta: Option<SpanMeta>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(m) = self.meta.take() else { return };
+        let now = Instant::now();
+        let epoch = self.wt.core.epoch;
+        let cell = |c: &AtomicU64| {
+            let v = c.load(Ordering::Relaxed);
+            if v == NONE { None } else { Some(v) }
+        };
+        let span = Span {
+            name: m.name,
+            cat: m.cat,
+            t0: m.start.duration_since(epoch).as_secs_f64(),
+            t1: now.duration_since(epoch).as_secs_f64(),
+            tid: self.wt.tid,
+            req: m.req.or_else(|| cell(&self.wt.cur_req)),
+            tick: cell(&self.wt.cur_tick),
+        };
+        self.wt.sink.lock().unwrap().push(span);
+    }
+}
+
+/// A drained collection of spans (sorted by start time).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+    /// (tid, worker name) registry.
+    pub workers: Vec<(u64, String)>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Wall span of the whole trace (first start to last end).
+    pub fn wall(&self) -> f64 {
+        let t0 = self.spans.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+        let t1 = self
+            .spans
+            .iter()
+            .map(|s| s.t1)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if t1 > t0 { t1 - t0 } else { 0.0 }
+    }
+
+    /// Total recorded time in one category (may double-count nested
+    /// spans of the same category; categories here don't nest).
+    pub fn total(&self, cat: Cat) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.cat == cat)
+            .map(|s| s.dur())
+            .sum()
+    }
+
+    pub fn spans_on(&self, tid: u64) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.tid == tid).collect()
+    }
+
+    /// Fraction of the trace wall time covered by the union of all
+    /// span intervals (across workers, projected on one time axis) —
+    /// the acceptance metric for "spans cover ≥ X% of the generation".
+    pub fn coverage(&self) -> f64 {
+        let wall = self.wall();
+        if wall == 0.0 {
+            return 0.0;
+        }
+        let ivs: Vec<(f64, f64)> =
+            self.spans.iter().map(|s| (s.t0, s.t1)).collect();
+        union_len(ivs) / wall
+    }
+
+    /// Distinct request ids appearing in the trace.
+    pub fn request_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.spans.iter().filter_map(|s| s.req).collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+}
+
+/// Total length of the union of a set of (start, end) intervals.
+pub(crate) fn union_len(mut ivs: Vec<(f64, f64)>) -> f64 {
+    ivs.retain(|(a, b)| b > a);
+    ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (a, b) in ivs {
+        match cur {
+            Some((c0, c1)) if a <= c1 => {
+                cur = Some((c0, c1.max(b)));
+            }
+            Some((c0, c1)) => {
+                total += c1 - c0;
+                cur = Some((a, b));
+            }
+            None => cur = Some((a, b)),
+        }
+    }
+    if let Some((c0, c1)) = cur {
+        total += c1 - c0;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_spans_with_context() {
+        let tr = Tracer::new();
+        let wt = tr.worker("w0");
+        wt.set_req(7);
+        wt.set_tick(3);
+        {
+            let _g = wt.span(Cat::Execute, "decode_b4");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        wt.clear_req();
+        {
+            let _g = wt.span_req(Cat::Sample, "sample", 9);
+        }
+        let t = tr.drain();
+        assert_eq!(t.len(), 2);
+        let exec = &t.spans[0];
+        assert_eq!(exec.cat, Cat::Execute);
+        assert_eq!(exec.req, Some(7));
+        assert_eq!(exec.tick, Some(3));
+        assert!(exec.dur() >= 0.001);
+        assert_eq!(t.spans[1].req, Some(9));
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let tr = Tracer::off();
+        let wt = tr.worker("w0");
+        for _ in 0..100 {
+            let _g = wt.span(Cat::Execute, "x");
+        }
+        assert_eq!(tr.drain().len(), 0, "disabled mode must record 0 spans");
+    }
+
+    #[test]
+    fn drain_clears_and_sorts() {
+        let tr = Tracer::new();
+        let wt = tr.worker("w0");
+        {
+            let _a = wt.span(Cat::Schedule, "outer");
+            let _b = wt.span(Cat::Sample, "inner");
+        } // inner drops first but starts later
+        let t = tr.drain();
+        assert_eq!(t.len(), 2);
+        assert!(t.spans[0].t0 <= t.spans[1].t0);
+        assert_eq!(t.spans[0].name, "outer");
+        assert_eq!(tr.drain().len(), 0);
+    }
+
+    #[test]
+    fn union_len_merges_overlaps() {
+        assert_eq!(union_len(vec![]), 0.0);
+        let u = union_len(vec![(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]);
+        assert!((u - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_full_and_partial() {
+        let mut t = Trace::default();
+        let sp = |t0: f64, t1: f64| Span {
+            name: "s".into(),
+            cat: Cat::Execute,
+            t0,
+            t1,
+            tid: 1,
+            req: None,
+            tick: None,
+        };
+        t.spans = vec![sp(0.0, 1.0), sp(1.0, 2.0)];
+        assert!((t.coverage() - 1.0).abs() < 1e-12);
+        t.spans = vec![sp(0.0, 1.0), sp(3.0, 4.0)];
+        assert!((t.coverage() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn req_scope_clears_on_early_exit() {
+        let tr = Tracer::new();
+        let wt = tr.worker("w0");
+        let failing = || -> Result<(), ()> {
+            let _scope = wt.req_scope(42);
+            let _g = wt.span(Cat::Tokenize, "tokenize");
+            Err(()) // early exit must still clear the ambient req
+        };
+        assert!(failing().is_err());
+        {
+            let _g = wt.span(Cat::Schedule, "later");
+        }
+        let t = tr.drain();
+        let tok = t.spans.iter().find(|s| s.name == "tokenize").unwrap();
+        assert_eq!(tok.req, Some(42));
+        let later = t.spans.iter().find(|s| s.name == "later").unwrap();
+        assert_eq!(later.req, None, "req must not leak past the scope");
+    }
+
+    #[test]
+    fn next_tick_is_monotonic_and_scope_clears() {
+        let tr = Tracer::new();
+        let wt = tr.worker("w0");
+        {
+            let _scope = wt.tick_scope();
+            assert_eq!(wt.next_tick(), 0);
+            assert_eq!(wt.next_tick(), 1);
+            let _g = wt.span(Cat::Execute, "x");
+        } // scope drops → ambient tick cleared
+        {
+            let _scope = wt.tick_scope();
+            assert_eq!(wt.next_tick(), 2, "counter never rewinds");
+        }
+        let _g = wt.span(Cat::Other, "after");
+        drop(_g);
+        let t = tr.drain();
+        let exec = t.spans.iter().find(|s| s.name == "x").unwrap();
+        assert_eq!(exec.tick, Some(1));
+        let after = t.spans.iter().find(|s| s.name == "after").unwrap();
+        assert_eq!(after.tick, None, "tick must not leak past the scope");
+    }
+
+    #[test]
+    fn workers_get_distinct_tids() {
+        let tr = Tracer::new();
+        let a = tr.worker("a");
+        let b = tr.worker("b");
+        assert_ne!(a.tid(), b.tid());
+        {
+            let _x = a.span(Cat::Other, "x");
+            let _y = b.span(Cat::Other, "y");
+        }
+        let t = tr.drain();
+        assert_eq!(t.workers.len(), 2);
+        assert_eq!(t.spans_on(a.tid()).len(), 1);
+    }
+}

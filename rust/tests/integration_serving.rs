@@ -33,6 +33,7 @@ fn batched_router_serves_text_requests() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        tracer: None,
     });
     let mut rxs = vec![];
     for i in 0..7 {
@@ -73,6 +74,7 @@ fn batched_results_match_single_stream() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        tracer: None,
     });
     let rxs: Vec<_> = prompts
         .iter()
@@ -184,6 +186,7 @@ fn hstu_router_returns_actions() {
         reorder: ReorderMode::Fused,
         batch: 1,
         prefill_budget: 0,
+        tracer: None,
     });
     let history: Vec<i32> = (0..150).map(|i| (i * 13) % 6000).collect();
     let req = Request {
