@@ -11,6 +11,7 @@ use mmserve::coordinator::opts::{ExecMode, OptConfig};
 use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 
 fn main() {
@@ -40,6 +41,7 @@ fn main() {
             reorder: ReorderMode::Fused,
             batch,
             prefill_budget: 0,
+            kv: KvPoolConfig::default(),
             tracer: None,
         });
         // warm: one request compiles the stages
@@ -84,6 +86,7 @@ fn main() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: None,
     });
     let wav: Vec<f32> = (0..160 * 30).map(|i| (i as f32 * 0.03).sin())

@@ -1,0 +1,101 @@
+//! kvpool hot-path microbench: the per-token and per-request costs the
+//! paged pool adds to the serving loop.
+//!
+//! Regimes over the same request shapes:
+//! * `dense_slots`    — the seed's `KvSlots` alloc/advance/release,
+//!                      the baseline the pool must stay close to,
+//! * `paged_cold`     — pool alloc/advance/release with an empty
+//!                      prefix cache (every page fresh),
+//! * `paged_shared`   — same traffic with a hot shared system prompt
+//!                      (the prefix-cache fast path admission hits),
+//! * `paged_churn`    — release-heavy traffic that keeps parking and
+//!                      evicting cached prefixes (LRU pressure).
+//!
+//! CI runs this in test mode (`MMSERVE_BENCH_FAST=1`) so a hot-path
+//! regression fails the gate, not just compile errors.
+
+use mmserve::coordinator::kv::KvSlots;
+use mmserve::kvpool::KvPool;
+use mmserve::substrate::bench::{black_box, BenchSuite};
+
+const REQUESTS: usize = 64;
+const DECODE: usize = 32;
+const PAGE: usize = 16;
+const MAX_SEQ: usize = 512;
+
+fn prompt(sys: &[i32], id: u64) -> Vec<i32> {
+    let mut p = sys.to_vec();
+    p.extend((0..12).map(|j| 1000 + id as i32 * 13 + j));
+    p
+}
+
+fn main() {
+    let mut suite =
+        BenchSuite::new("kvpool hot path (64 requests × 32 decode steps)");
+    let sys: Vec<i32> = (0..48).map(|i| i % 200).collect();
+
+    suite.bench("dense_slots", || {
+        let mut kv = KvSlots::new(8, MAX_SEQ);
+        for id in 0..REQUESTS as u64 {
+            let slot = kv.alloc(id, 60).unwrap();
+            for _ in 0..DECODE {
+                kv.advance(slot).unwrap();
+            }
+            kv.release(slot).unwrap();
+        }
+        black_box(kv.free_count());
+    });
+
+    suite.bench("paged_cold", || {
+        // Fresh pool per iteration: no cache carry-over between
+        // requests either (unique prompts).
+        let mut pool = KvPool::new(64, PAGE, MAX_SEQ);
+        for id in 0..REQUESTS as u64 {
+            let p = prompt(&[], id);
+            pool.alloc(id, &p).unwrap();
+            for t in 0..DECODE {
+                pool.advance(id, t as i32).unwrap();
+            }
+            pool.release(id).unwrap();
+        }
+        black_box(pool.stats.blocks_allocated);
+    });
+
+    let mut shared_hits = 0u64;
+    suite.bench("paged_shared", || {
+        let mut pool = KvPool::new(64, PAGE, MAX_SEQ);
+        for id in 0..REQUESTS as u64 {
+            let p = prompt(&sys, id);
+            pool.alloc(id, &p).unwrap();
+            for t in 0..DECODE {
+                pool.advance(id, t as i32).unwrap();
+            }
+            pool.release(id).unwrap();
+        }
+        shared_hits = pool.stats.prefix_hits;
+        black_box(pool.stats.prefix_hit_tokens);
+    });
+    assert!(shared_hits > 0, "shared system prompt must hit the cache");
+
+    suite.bench("paged_churn", || {
+        // A pool sized below the working set: every request evicts the
+        // previous one's cached blocks.
+        let mut pool = KvPool::new(8, PAGE, MAX_SEQ);
+        for id in 0..REQUESTS as u64 {
+            let p = prompt(&[], id);
+            pool.alloc(id, &p).unwrap();
+            for t in 0..DECODE {
+                pool.advance(id, t as i32).unwrap();
+            }
+            pool.release(id).unwrap();
+        }
+        black_box(pool.stats.evictions);
+    });
+
+    suite.speedup("paged-vs-dense", "paged_cold", "dense_slots");
+    println!(
+        "  the pool's per-token cost must stay within a small factor of \
+         the dense slot view; prefix sharing then buys admission \
+         capacity the dense path cannot reach."
+    );
+}

@@ -15,6 +15,7 @@ use mmserve::coordinator::request::{Request, RequestInput, ResponseOutput,
                                     SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::substrate::metrics::Histogram;
 use mmserve::substrate::rng::Rng;
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: None,
     });
 

@@ -1,4 +1,5 @@
-//! Continuous batcher: decode-batch occupancy + prefill admission.
+//! Continuous batcher: decode-batch occupancy + capacity-aware prefill
+//! admission.
 //!
 //! Policy (vLLM-flavoured, scaled to the static-batch decode graph):
 //! requests queue FCFS; whenever a batch slot is free, the next request
@@ -7,8 +8,18 @@
 //! batched decode step for all live slots. A token budget caps how much
 //! prefill work may be admitted per tick so decode latency for running
 //! requests stays bounded (the prefill/decode interference knob).
+//!
+//! Admission is driven by a [`CapacityView`]: slots only (the dense
+//! seed behavior), or slots *plus* the paged pool's page budget — a
+//! request is admitted when its prompt's pages fit the free pages left
+//! after a one-page-per-live-sequence growth watermark. That converts
+//! the Table-3 capacity bound from "fixed worst-case slots" into "pages
+//! actually needed", which is what lets short chats stack deeper than
+//! the dense slot count (the paper's biggest idle-time lever).
 
 use std::collections::VecDeque;
+
+use crate::kvpool::CapacityView;
 
 #[derive(Debug, Clone)]
 pub struct QueuedRequest {
@@ -24,6 +35,10 @@ pub struct Admission {
     pub admit: Vec<QueuedRequest>,
     /// Whether a decode step should run (any live slots after admission).
     pub run_decode: bool,
+    /// A free slot existed but the page budget could not cover the next
+    /// request — the tick is (partially) blocked on KV capacity. Feeds
+    /// the `KvCapacity` idle-attribution bucket.
+    pub blocked_on_capacity: bool,
 }
 
 impl PartialEq<QueuedRequest> for QueuedRequest {
@@ -57,30 +72,68 @@ impl Batcher {
         self.queue.push_back(r);
     }
 
+    /// Requeue at the head (preemption victims resume FCFS-first).
+    pub fn push_front(&mut self, r: QueuedRequest) {
+        self.queue.push_front(r);
+    }
+
+    /// Remove the head request (used to shed work that can never fit).
+    pub fn pop_front(&mut self) -> Option<QueuedRequest> {
+        self.queue.pop_front()
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Decide admissions for a tick given `free_slots` and `live_slots`.
-    pub fn tick(&mut self, free_slots: usize, live_slots: usize) -> Admission {
+    /// Decide admissions for a tick against `cap`.
+    ///
+    /// FCFS with no head-of-line bypass: the first request that fits
+    /// neither the remaining token budget nor the remaining page budget
+    /// stops admission for the tick. One exception prevents permanent
+    /// starvation: a prompt *larger than the whole per-tick budget*
+    /// (which could otherwise never be admitted) is admitted alone when
+    /// the tick's budget is still untouched.
+    pub fn tick(&mut self, cap: &CapacityView) -> Admission {
         let mut adm = Admission::default();
         let mut budget = self.prefill_token_budget;
-        let mut free = free_slots;
+        let mut free = cap.free_slots;
+        // Pages still grantable this tick (None = dense, unmetered).
+        let mut pages_left = cap
+            .pages
+            .as_ref()
+            .map(|p| p.available_pages.saturating_sub(p.reserved_growth));
         while free > 0 {
             let Some(front) = self.queue.front() else { break };
             if self.prefill_token_budget > 0 && budget < front.prompt_len {
-                // Budget exhausted for this tick; FCFS ⇒ stop (no
-                // head-of-line bypass, preserving fairness).
-                break;
+                // Oversize prompt on an untouched budget: admit it
+                // alone rather than starving it (and everyone behind
+                // it) forever.
+                let untouched = budget == self.prefill_token_budget;
+                let oversize =
+                    front.prompt_len > self.prefill_token_budget;
+                if !(untouched && oversize) {
+                    // Budget exhausted for this tick; FCFS ⇒ stop (no
+                    // head-of-line bypass, preserving fairness).
+                    break;
+                }
+            }
+            let need = cap.pages_needed(front.prompt_len);
+            if let Some(left) = &mut pages_left {
+                if need > *left {
+                    adm.blocked_on_capacity = true;
+                    break;
+                }
+                *left -= need;
             }
             let r = self.queue.pop_front().unwrap();
             if self.prefill_token_budget > 0 {
-                budget -= r.prompt_len;
+                budget = budget.saturating_sub(r.prompt_len);
             }
             adm.admit.push(r);
             free -= 1;
         }
-        adm.run_decode = live_slots + adm.admit.len() > 0;
+        adm.run_decode = cap.live_slots + adm.admit.len() > 0;
         adm
     }
 }
@@ -88,6 +141,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvpool::{KvPool, PageBudget};
     use crate::substrate::prop::prop_check;
     use crate::substrate::rng::Rng;
 
@@ -101,12 +155,13 @@ mod tests {
         for i in 0..5 {
             b.push(rq(i, 10));
         }
-        let adm = b.tick(3, 0);
+        let adm = b.tick(&CapacityView::dense(3, 0));
         assert_eq!(
             adm.admit.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![0, 1, 2]
         );
         assert!(adm.run_decode);
+        assert!(!adm.blocked_on_capacity);
         assert_eq!(b.pending(), 2);
     }
 
@@ -116,7 +171,7 @@ mod tests {
         b.push(rq(0, 60));
         b.push(rq(1, 60));
         b.push(rq(2, 30));
-        let adm = b.tick(3, 0);
+        let adm = b.tick(&CapacityView::dense(3, 0));
         // 60 admitted; next 60 would exceed the 100 budget; FCFS stops
         // (id 2 must NOT jump the queue).
         assert_eq!(adm.admit.len(), 1);
@@ -127,15 +182,115 @@ mod tests {
     #[test]
     fn decode_runs_with_live_only() {
         let mut b = Batcher::new(0);
-        let adm = b.tick(4, 2);
+        let adm = b.tick(&CapacityView::dense(4, 2));
         assert!(adm.admit.is_empty());
         assert!(adm.run_decode);
-        let adm2 = b.tick(4, 0);
+        let adm2 = b.tick(&CapacityView::dense(4, 0));
         assert!(!adm2.run_decode);
     }
 
+    /// Regression (satellite): a prompt larger than the whole per-tick
+    /// prefill budget used to block the FCFS queue forever. It must be
+    /// admitted alone on an untouched budget, and never alongside
+    /// other admissions.
+    #[test]
+    fn oversize_prompt_is_admitted_alone_not_starved() {
+        let mut b = Batcher::new(50);
+        b.push(rq(0, 120)); // > whole budget
+        b.push(rq(1, 10));
+        // Untouched budget: the oversize prompt goes in, alone.
+        let adm = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(
+            adm.admit.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0],
+            "oversize prompt admitted alone"
+        );
+        // The queue keeps draining normally afterwards.
+        let adm2 = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(adm2.admit.len(), 1);
+        assert_eq!(adm2.admit[0].id, 1);
+        assert_eq!(b.pending(), 0);
+
+        // A touched budget never lets the oversize prompt piggyback.
+        let mut b = Batcher::new(50);
+        b.push(rq(0, 30));
+        b.push(rq(1, 120));
+        let adm = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(adm.admit.len(), 1, "only the in-budget prompt");
+        assert_eq!(adm.admit[0].id, 0);
+        let adm2 = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(adm2.admit.len(), 1, "oversize admitted next tick");
+        assert_eq!(adm2.admit[0].id, 1);
+    }
+
+    #[test]
+    fn page_budget_gates_admission_and_reports_blocking() {
+        // 12 available pages, 2 reserved for growth, page_size 4:
+        // 10 grantable pages cover all three prompts (4 + 4 + 1).
+        let cap = CapacityView {
+            free_slots: 4,
+            live_slots: 2,
+            pages: Some(PageBudget {
+                page_size: 4,
+                available_pages: 12,
+                reserved_growth: 2,
+            }),
+        };
+        let mut b = Batcher::new(0);
+        b.push(rq(0, 15)); // 15+1 tokens → 4 pages
+        b.push(rq(1, 12)); // 12+1 → 4 pages
+        b.push(rq(2, 3)); //  3+1 → 1 page
+        let adm = b.tick(&cap);
+        assert_eq!(adm.admit.len(), 3, "10 pages cover all three");
+        assert!(!adm.blocked_on_capacity);
+
+        // A tight tick: a free slot exists but the pages don't cover
+        // the prompt → blocked flag raised for the telemetry bucket.
+        let tight = CapacityView {
+            free_slots: 2,
+            live_slots: 4,
+            pages: Some(PageBudget {
+                page_size: 4,
+                available_pages: 4,
+                reserved_growth: 4,
+            }),
+        };
+        b.push(rq(3, 9)); // 9+1 → 3 pages, 0 grantable
+        let adm = b.tick(&tight);
+        assert!(adm.admit.is_empty());
+        assert!(adm.blocked_on_capacity);
+        assert_eq!(b.pending(), 1, "request stays queued, not dropped");
+    }
+
+    #[test]
+    fn pool_view_drives_admission_end_to_end() {
+        // A real pool: 8 pages of 4 tokens, nothing live.
+        let pool = KvPool::new(8, 4, 64);
+        let cap = pool.capacity_view(4, 0);
+        let mut b = Batcher::new(0);
+        b.push(rq(0, 11)); // 3 pages
+        b.push(rq(1, 11)); // 3 pages
+        b.push(rq(2, 11)); // 3 pages — only 2 left
+        let adm = b.tick(&cap);
+        assert_eq!(adm.admit.len(), 2);
+        assert!(adm.blocked_on_capacity);
+    }
+
+    #[test]
+    fn push_front_requeues_ahead_of_fcfs() {
+        let mut b = Batcher::new(0);
+        b.push(rq(1, 5));
+        b.push_front(rq(9, 5)); // preemption victim resumes first
+        let adm = b.tick(&CapacityView::dense(2, 0));
+        assert_eq!(
+            adm.admit.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![9, 1]
+        );
+    }
+
     /// Properties: (1) never admit more than free slots; (2) budget
-    /// respected; (3) FCFS order preserved; (4) no request lost.
+    /// respected (modulo the oversize-alone exception); (3) FCFS order
+    /// preserved; (4) no request lost; (5) page budget respected.
     #[test]
     fn prop_batcher_invariants() {
         prop_check(
@@ -154,16 +309,35 @@ mod tests {
                 for (i, &plen) in reqs.iter().enumerate() {
                     b.push(rq(i as u64, plen));
                 }
-                let adm = b.tick(*free, 1);
+                let cap = CapacityView {
+                    free_slots: *free,
+                    live_slots: 1,
+                    pages: Some(PageBudget {
+                        page_size: 8,
+                        available_pages: 12,
+                        reserved_growth: 1,
+                    }),
+                };
+                let adm = b.tick(&cap);
                 if adm.admit.len() > *free {
                     return Err("admitted more than free slots".into());
                 }
                 if *budget > 0 {
                     let tot: usize =
                         adm.admit.iter().map(|r| r.prompt_len).sum();
-                    if tot > *budget {
+                    let oversize_alone = adm.admit.len() == 1
+                        && adm.admit[0].prompt_len > *budget;
+                    if tot > *budget && !oversize_alone {
                         return Err(format!("budget {tot} > {budget}"));
                     }
+                }
+                let pages: usize = adm
+                    .admit
+                    .iter()
+                    .map(|r| cap.pages_needed(r.prompt_len))
+                    .sum();
+                if pages > 11 {
+                    return Err(format!("page budget exceeded: {pages}"));
                 }
                 let ids: Vec<u64> = adm.admit.iter().map(|r| r.id).collect();
                 if ids.windows(2).any(|w| w[0] >= w[1]) {

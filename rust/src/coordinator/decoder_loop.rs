@@ -11,6 +11,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::PjRtBuffer;
 
+use crate::kvpool::{pages_for, KvPool, DEFAULT_PAGE_SIZE};
 use crate::models::tokenizer::{self, TextTokenizer};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
@@ -188,6 +189,12 @@ impl<'e> DecoderSession<'e> {
         let (mut logits, mut kv) = self.prefill(prompt)?;
         drop(prefill_span);
         let ttft = t0.elapsed().as_secs_f64();
+        // Position bookkeeping runs through a single-sequence block
+        // table, so the bs=1 path exercises the same allocator the
+        // batched scheduler admits against.
+        let mut pool = KvPool::solo(self.dims.max_seq);
+        let table_len = prompt.len().min(self.dims.max_seq - 1);
+        pool.alloc(0, &prompt[..table_len])?;
         let mut pos = prompt.len();
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
@@ -204,8 +211,10 @@ impl<'e> DecoderSession<'e> {
                 break;
             }
             logits = self.decode_step(tok, pos, &mut kv)?;
-            pos += 1;
+            pos = pool.advance(0, tok)?;
         }
+        pool.release(0)?;
+        debug_assert!(pool.check_invariants().is_ok());
         Ok(GenResult {
             prompt_tokens: prompt.len(),
             decode_steps: out.len(),
@@ -233,6 +242,16 @@ impl<'e> DecoderSession<'e> {
             self.prefill(&[tokenizer::BOS])?;
         drop(prefill_span);
         let ttft = t0.elapsed().as_secs_f64();
+        // Two block tables (conditional / unconditional streams) in one
+        // pool — the paper's 2× KV footprint for T-I, page-accounted.
+        let mut pool = KvPool::new(
+            2 * pages_for(self.dims.max_seq, DEFAULT_PAGE_SIZE),
+            DEFAULT_PAGE_SIZE,
+            self.dims.max_seq,
+        );
+        let table_len = prompt.len().min(self.dims.max_seq - 1);
+        pool.alloc(0, &prompt[..table_len])?;
+        pool.alloc(1, &[tokenizer::BOS])?;
         let mut pos_c = prompt.len();
         let mut pos_u = 1usize;
         let mut lc = cond_logits;
@@ -253,12 +272,20 @@ impl<'e> DecoderSession<'e> {
             if out.len() == n_image_tokens {
                 break;
             }
+            if pos_c + 1 >= self.dims.max_seq
+                || pos_u + 1 >= self.dims.max_seq
+            {
+                break; // sequence cap, as in the text loop
+            }
             // Two decodes per step — the paper's 2× decode cost for T-I.
             lc = self.decode_step(tok, pos_c, &mut kv_c)?;
             lu = self.decode_step(tok, pos_u, &mut kv_u)?;
-            pos_c += 1;
-            pos_u += 1;
+            pos_c = pool.advance(0, tok)?;
+            pos_u = pool.advance(1, tok)?;
         }
+        pool.release(0)?;
+        pool.release(1)?;
+        debug_assert!(pool.check_invariants().is_ok());
         Ok(GenResult {
             prompt_tokens: prompt.len(),
             decode_steps: out.len(),

@@ -12,6 +12,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
+use crate::kvpool::KvPool;
 use crate::models::tokenizer;
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
@@ -82,6 +83,10 @@ pub fn generate_eager(engine: &Engine, dims: &DecoderDims, prompt: &[i32],
     // Feed prompt tokens, then generate.
     let tele = engine.tracer();
     let _tick_scope = tele.map(|t| t.tick_scope());
+    // Eager consumes the prompt token-by-token, so its block table
+    // starts empty and grows with every fed position.
+    let mut pool = KvPool::solo(dims.max_seq);
+    pool.alloc(0, &[])?;
     let mut out = Vec::with_capacity(max_new);
     let mut pos = 0usize;
     let total = prompt.len() + max_new;
@@ -112,8 +117,10 @@ pub fn generate_eager(engine: &Engine, dims: &DecoderDims, prompt: &[i32],
         if step + 1 == prompt.len() {
             ttft = t0.elapsed().as_secs_f64();
         }
-        pos += 1;
+        pos = pool.advance(0, token)?;
     }
+    pool.release(0)?;
+    debug_assert!(pool.check_invariants().is_ok());
     Ok(GenResult {
         prompt_tokens: prompt.len(),
         decode_steps: out.len(),

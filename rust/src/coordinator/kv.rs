@@ -1,12 +1,24 @@
-//! Static KV-cache slot manager.
+//! KV-cache views: the dense slot manager for the compiled decode
+//! graphs, and the paged wrapper that layers it over `kvpool`.
 //!
 //! The decode graph is compiled for a fixed batch B with a
 //! `[L, B, H, max_seq, Dh]` cache (paper §4.1.2: static shapes are what
-//! make CUDA-Graph-style AOT execution possible). This module tracks
+//! make CUDA-Graph-style AOT execution possible). [`KvSlots`] tracks
 //! which batch slots are live, each slot's fill position, and the free
 //! list — the bookkeeping the scheduler uses for admission.
+//!
+//! [`PagedKvSlots`] keeps that slot view (the graph still indexes a
+//! dense per-slot cache) but meters *capacity* through a
+//! [`KvPool`]: admission claims pages for the actual prompt length
+//! (sharing cached prefixes), decode grows page by page, and when the
+//! pool runs dry the scheduler preempts instead of over-reserving.
+//! Errors are the structured [`KvError`] vocabulary — callers match on
+//! variants, never on message strings.
 
-use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::kvpool::{AllocOutcome, CapacityView, KvError, KvPool,
+                    KvPoolConfig, PoolStats, Preempted, PreemptMode};
 
 /// State of one batch slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,12 +32,19 @@ pub enum SlotState {
 #[derive(Debug, Clone)]
 pub struct KvSlots {
     slots: Vec<SlotState>,
+    /// request → slot, so duplicate checks and preemption lookups are
+    /// O(1) instead of an O(B) scan per call.
+    by_request: HashMap<u64, usize>,
     max_seq: usize,
 }
 
 impl KvSlots {
     pub fn new(batch: usize, max_seq: usize) -> Self {
-        KvSlots { slots: vec![SlotState::Free; batch], max_seq }
+        KvSlots {
+            slots: vec![SlotState::Free; batch],
+            by_request: HashMap::new(),
+            max_seq,
+        }
     }
 
     pub fn batch(&self) -> usize {
@@ -36,79 +55,97 @@ impl KvSlots {
     }
 
     pub fn free_count(&self) -> usize {
-        self.slots.iter().filter(|s| **s == SlotState::Free).count()
+        self.slots.len() - self.by_request.len()
     }
     pub fn live_count(&self) -> usize {
-        self.slots.len() - self.free_count()
+        self.by_request.len()
+    }
+
+    /// Slot currently held by `request`, if any.
+    pub fn slot_of(&self, request: u64) -> Option<usize> {
+        self.by_request.get(&request).copied()
     }
 
     /// Claim a free slot for `request`, pre-filled with `pos` tokens.
-    pub fn alloc(&mut self, request: u64, pos: usize) -> Result<usize> {
+    pub fn alloc(&mut self, request: u64, pos: usize)
+                 -> Result<usize, KvError> {
         if pos >= self.max_seq {
-            bail!("prompt {pos} tokens >= max_seq {}", self.max_seq);
+            return Err(KvError::MaxSeq { pos, max_seq: self.max_seq });
         }
-        if self.slots.iter().any(
-            |s| matches!(s, SlotState::Live { request: r, .. } if *r == request),
-        ) {
-            bail!("request {request} already has a slot");
+        if self.by_request.contains_key(&request) {
+            return Err(KvError::DuplicateRequest(request));
         }
         for (i, s) in self.slots.iter_mut().enumerate() {
             if *s == SlotState::Free {
                 *s = SlotState::Live { request, pos };
+                self.by_request.insert(request, i);
                 return Ok(i);
             }
         }
-        bail!("no free slot");
+        Err(KvError::NoFreeSlot)
     }
 
-    pub fn release(&mut self, slot: usize) -> Result<()> {
-        match self.slots.get(slot) {
-            Some(SlotState::Live { .. }) => {
-                self.slots[slot] = SlotState::Free;
-                Ok(())
-            }
-            Some(SlotState::Free) => bail!("slot {slot} already free"),
-            None => bail!("slot {slot} out of range"),
-        }
+    pub fn release(&mut self, slot: usize) -> Result<(), KvError> {
+        let request = self.request_at(slot)?;
+        self.by_request.remove(&request);
+        self.slots[slot] = SlotState::Free;
+        Ok(())
     }
 
     pub fn state(&self, slot: usize) -> SlotState {
         self.slots[slot]
     }
 
+    /// Request occupying a live slot.
+    pub fn request_at(&self, slot: usize) -> Result<u64, KvError> {
+        match self.slots.get(slot) {
+            Some(SlotState::Live { request, .. }) => Ok(*request),
+            Some(SlotState::Free) => Err(KvError::SlotFree(slot)),
+            None => Err(KvError::UnknownSlot(slot)),
+        }
+    }
+
     /// Position of a live slot.
-    pub fn pos(&self, slot: usize) -> Result<usize> {
-        match self.slots[slot] {
-            SlotState::Live { pos, .. } => Ok(pos),
-            SlotState::Free => bail!("slot {slot} is free"),
+    pub fn pos(&self, slot: usize) -> Result<usize, KvError> {
+        match self.slots.get(slot) {
+            Some(SlotState::Live { pos, .. }) => Ok(*pos),
+            Some(SlotState::Free) => Err(KvError::SlotFree(slot)),
+            None => Err(KvError::UnknownSlot(slot)),
         }
     }
 
     /// Advance a live slot by one token; errors at capacity.
-    pub fn advance(&mut self, slot: usize) -> Result<usize> {
-        match &mut self.slots[slot] {
-            SlotState::Live { pos, .. } => {
-                if *pos + 1 >= self.max_seq {
-                    bail!("slot {slot} hit max_seq {}", self.max_seq);
+    pub fn advance(&mut self, slot: usize) -> Result<usize, KvError> {
+        let max_seq = self.max_seq;
+        match self.slots.get_mut(slot) {
+            Some(SlotState::Live { pos, .. }) => {
+                if *pos + 1 >= max_seq {
+                    return Err(KvError::MaxSeq { pos: *pos, max_seq });
                 }
                 *pos += 1;
                 Ok(*pos)
             }
-            SlotState::Free => bail!("slot {slot} is free"),
+            Some(SlotState::Free) => Err(KvError::SlotFree(slot)),
+            None => Err(KvError::UnknownSlot(slot)),
         }
     }
 
     /// Rewind (LayerSkip rollback after partial acceptance).
-    pub fn rewind_to(&mut self, slot: usize, new_pos: usize) -> Result<()> {
-        match &mut self.slots[slot] {
-            SlotState::Live { pos, .. } => {
+    pub fn rewind_to(&mut self, slot: usize, new_pos: usize)
+                     -> Result<(), KvError> {
+        match self.slots.get_mut(slot) {
+            Some(SlotState::Live { pos, .. }) => {
                 if new_pos > *pos {
-                    bail!("rewind forward ({new_pos} > {pos})");
+                    return Err(KvError::RewindForward {
+                        from: *pos,
+                        to: new_pos,
+                    });
                 }
                 *pos = new_pos;
                 Ok(())
             }
-            SlotState::Free => bail!("slot {slot} is free"),
+            Some(SlotState::Free) => Err(KvError::SlotFree(slot)),
+            None => Err(KvError::UnknownSlot(slot)),
         }
     }
 
@@ -132,9 +169,178 @@ impl KvSlots {
     }
 }
 
+// ==========================================================================
+// Paged wrapper
+// ==========================================================================
+
+/// The compiled-graph slot view layered over the paged pool.
+///
+/// In dense mode (paging disabled) this is exactly the seed's
+/// `KvSlots` behavior. In paged mode every slot operation is mirrored
+/// into the pool's block tables, so admission sees real page
+/// availability (with prefix sharing) and decode growth can trigger
+/// preemption instead of silently over-reserving.
+#[derive(Debug, Clone)]
+pub struct PagedKvSlots {
+    slots: KvSlots,
+    pool: Option<KvPool>,
+}
+
+impl PagedKvSlots {
+    /// Dense slot view only (the seed behavior).
+    pub fn dense(batch: usize, max_seq: usize) -> Self {
+        PagedKvSlots { slots: KvSlots::new(batch, max_seq), pool: None }
+    }
+
+    /// Slot view + paged pool per `cfg` (`cfg.page_size == 0` falls
+    /// back to dense).
+    pub fn paged(batch: usize, max_seq: usize, cfg: KvPoolConfig) -> Self {
+        let pool = if cfg.enabled() {
+            Some(KvPool::for_batch(batch, max_seq, cfg))
+        } else {
+            None
+        };
+        PagedKvSlots { slots: KvSlots::new(batch, max_seq), pool }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.pool.is_some()
+    }
+    pub fn batch(&self) -> usize {
+        self.slots.batch()
+    }
+    pub fn max_seq(&self) -> usize {
+        self.slots.max_seq()
+    }
+    pub fn free_count(&self) -> usize {
+        self.slots.free_count()
+    }
+    pub fn live_count(&self) -> usize {
+        self.slots.live_count()
+    }
+    pub fn live_slots(&self) -> Vec<(usize, u64, usize)> {
+        self.slots.live_slots()
+    }
+    pub fn pos(&self, slot: usize) -> Result<usize, KvError> {
+        self.slots.pos(slot)
+    }
+    pub fn slot_of(&self, request: u64) -> Option<usize> {
+        self.slots.slot_of(request)
+    }
+    pub fn request_at(&self, slot: usize) -> Result<u64, KvError> {
+        self.slots.request_at(slot)
+    }
+    pub fn pool(&self) -> Option<&KvPool> {
+        self.pool.as_ref()
+    }
+    pub fn stats(&self) -> Option<&PoolStats> {
+        self.pool.as_ref().map(|p| &p.stats)
+    }
+
+    /// What the batcher admits against this tick.
+    pub fn capacity_view(&self) -> CapacityView {
+        match &self.pool {
+            Some(p) => p.capacity_view(self.slots.free_count(),
+                                       self.slots.live_count()),
+            None => CapacityView::dense(self.slots.free_count(),
+                                        self.slots.live_count()),
+        }
+    }
+
+    /// Note a scheduler tick blocked on KV capacity (telemetry).
+    pub fn note_capacity_wait(&mut self) {
+        if let Some(p) = &mut self.pool {
+            p.note_capacity_wait();
+        }
+    }
+
+    /// Admit `request` with its prompt tokens: claim pages (sharing
+    /// cached prefixes), then a graph slot. No partial state survives
+    /// a failure.
+    pub fn alloc(&mut self, request: u64, tokens: &[i32])
+                 -> Result<(usize, AllocOutcome), KvError> {
+        let outcome = match &mut self.pool {
+            Some(p) => p.alloc(request, tokens)?,
+            None => AllocOutcome { pages: 0, shared_pages: 0,
+                                   shared_tokens: 0 },
+        };
+        match self.slots.alloc(request, tokens.len()) {
+            Ok(slot) => Ok((slot, outcome)),
+            Err(e) => {
+                if let Some(p) = &mut self.pool {
+                    // Roll the pool back so the failed admission leaks
+                    // nothing.
+                    let _ = p.release(request);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Advance a live slot by the token it just emitted. Pool growth
+    /// runs first (it can fail with `CapacityExhausted` → preempt);
+    /// the slot position follows in lockstep.
+    pub fn advance(&mut self, slot: usize, token: i32)
+                   -> Result<usize, KvError> {
+        let request = self.slots.request_at(slot)?;
+        let pos = self.slots.pos(slot)?;
+        if let Some(p) = &mut self.pool {
+            p.advance(request, token)?;
+            if let Err(e) = self.slots.advance(slot) {
+                // Keep the views in lockstep even on the error path.
+                let _ = p.rewind_to(request, pos);
+                return Err(e);
+            }
+            Ok(pos + 1)
+        } else {
+            self.slots.advance(slot)
+        }
+    }
+
+    /// LayerSkip rollback on both views.
+    pub fn rewind_to(&mut self, slot: usize, new_pos: usize)
+                     -> Result<(), KvError> {
+        let request = self.slots.request_at(slot)?;
+        self.slots.rewind_to(slot, new_pos)?;
+        if let Some(p) = &mut self.pool {
+            p.rewind_to(request, new_pos)?;
+        }
+        Ok(())
+    }
+
+    /// Finish a request: free the slot, return its pages (full blocks
+    /// stay cached for prefix reuse).
+    pub fn release(&mut self, slot: usize) -> Result<(), KvError> {
+        let request = self.slots.request_at(slot)?;
+        self.slots.release(slot)?;
+        if let Some(p) = &mut self.pool {
+            p.release(request)?;
+        }
+        Ok(())
+    }
+
+    /// Preempt the latest-admitted live sequence (paged mode only):
+    /// frees its slot and pages, returns its slot and token history so
+    /// the scheduler can requeue it for recompute / swap-in.
+    pub fn preempt(&mut self, mode: PreemptMode)
+                   -> Option<(usize, Preempted)> {
+        let p = self.pool.as_mut()?;
+        let pre = p.preempt(mode)?;
+        let slot = self
+            .slots
+            .slot_of(pre.request)
+            .expect("preempted request holds a slot");
+        self.slots
+            .release(slot)
+            .expect("victim slot is live");
+        Some((slot, pre))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvpool::DEFAULT_PAGE_SIZE;
     use crate::substrate::prop::prop_check;
     use crate::substrate::rng::Rng;
 
@@ -145,7 +351,7 @@ mod tests {
         let b = kv.alloc(11, 7).unwrap();
         assert_ne!(a, b);
         assert_eq!(kv.free_count(), 0);
-        assert!(kv.alloc(12, 1).is_err());
+        assert_eq!(kv.alloc(12, 1).unwrap_err(), KvError::NoFreeSlot);
         kv.release(a).unwrap();
         assert_eq!(kv.free_count(), 1);
         let c = kv.alloc(12, 1).unwrap();
@@ -158,7 +364,9 @@ mod tests {
         let s = kv.alloc(1, 1).unwrap();
         assert_eq!(kv.advance(s).unwrap(), 2);
         assert_eq!(kv.advance(s).unwrap(), 3);
-        assert!(kv.advance(s).is_err()); // 3+1 == max_seq
+        // 3+1 == max_seq
+        assert_eq!(kv.advance(s).unwrap_err(),
+                   KvError::MaxSeq { pos: 3, max_seq: 4 });
     }
 
     #[test]
@@ -167,14 +375,16 @@ mod tests {
         let s = kv.alloc(1, 8).unwrap();
         kv.rewind_to(s, 4).unwrap();
         assert_eq!(kv.pos(s).unwrap(), 4);
-        assert!(kv.rewind_to(s, 10).is_err());
+        assert_eq!(kv.rewind_to(s, 10).unwrap_err(),
+                   KvError::RewindForward { from: 4, to: 10 });
     }
 
     #[test]
     fn duplicate_request_rejected() {
         let mut kv = KvSlots::new(2, 16);
         kv.alloc(7, 0).unwrap();
-        assert!(kv.alloc(7, 0).is_err());
+        assert_eq!(kv.alloc(7, 0).unwrap_err(),
+                   KvError::DuplicateRequest(7));
     }
 
     #[test]
@@ -182,7 +392,7 @@ mod tests {
         let mut kv = KvSlots::new(1, 16);
         let s = kv.alloc(1, 0).unwrap();
         kv.release(s).unwrap();
-        assert!(kv.release(s).is_err());
+        assert_eq!(kv.release(s).unwrap_err(), KvError::SlotFree(s));
     }
 
     #[test]
@@ -190,7 +400,8 @@ mod tests {
         // A prompt that already fills the cache leaves no room for even
         // one decode step — admission must refuse it.
         let mut kv = KvSlots::new(2, 8);
-        assert!(kv.alloc(1, 8).is_err());
+        assert_eq!(kv.alloc(1, 8).unwrap_err(),
+                   KvError::MaxSeq { pos: 8, max_seq: 8 });
         assert!(kv.alloc(1, 9).is_err());
         assert_eq!(kv.free_count(), 2, "failed alloc must not leak a slot");
         let s = kv.alloc(1, 7).unwrap(); // last admissible position
@@ -204,8 +415,7 @@ mod tests {
             kv.alloc(id, 1).unwrap();
         }
         assert_eq!(kv.free_count(), 0);
-        let err = kv.alloc(99, 1).unwrap_err();
-        assert!(err.to_string().contains("no free slot"), "{err}");
+        assert_eq!(kv.alloc(99, 1).unwrap_err(), KvError::NoFreeSlot);
         assert_eq!(kv.live_count(), 3);
     }
 
@@ -213,12 +423,12 @@ mod tests {
     fn release_of_non_live_slot_rejected() {
         let mut kv = KvSlots::new(2, 16);
         // Never-allocated slot (in range) and out-of-range slot.
-        assert!(kv.release(0).is_err());
-        assert!(kv.release(5).is_err());
+        assert_eq!(kv.release(0).unwrap_err(), KvError::SlotFree(0));
+        assert_eq!(kv.release(5).unwrap_err(), KvError::UnknownSlot(5));
         // State queries on a free slot also refuse.
         assert_eq!(kv.state(0), SlotState::Free);
-        assert!(kv.pos(0).is_err());
-        assert!(kv.advance(0).is_err());
+        assert_eq!(kv.pos(0).unwrap_err(), KvError::SlotFree(0));
+        assert_eq!(kv.advance(0).unwrap_err(), KvError::SlotFree(0));
     }
 
     #[test]
@@ -232,11 +442,24 @@ mod tests {
         kv.release(0).unwrap();
         assert_eq!(kv.alloc(10, 1).unwrap(), 0);
         assert_eq!(kv.alloc(11, 1).unwrap(), 2);
-        assert!(kv.alloc(12, 1).is_err());
+        assert_eq!(kv.alloc(12, 1).unwrap_err(), KvError::NoFreeSlot);
+    }
+
+    #[test]
+    fn slot_of_tracks_alloc_and_release() {
+        let mut kv = KvSlots::new(3, 32);
+        assert_eq!(kv.slot_of(7), None);
+        let s = kv.alloc(7, 1).unwrap();
+        assert_eq!(kv.slot_of(7), Some(s));
+        kv.alloc(8, 1).unwrap();
+        kv.release(s).unwrap();
+        assert_eq!(kv.slot_of(7), None);
+        assert!(kv.slot_of(8).is_some());
     }
 
     /// Property: a random walk of alloc/advance/release never leaks slots
-    /// — free + live == batch, and live positions stay < max_seq.
+    /// — free + live == batch, live positions stay < max_seq, and the
+    /// request→slot map mirrors the slot array exactly.
     #[test]
     fn prop_no_slot_leaks() {
         prop_check(
@@ -273,14 +496,105 @@ mod tests {
                     if kv.free_count() + kv.live_count() != kv.batch() {
                         return Err("slot leak".into());
                     }
-                    for (_, _, pos) in kv.live_slots() {
+                    for (s, req, pos) in kv.live_slots() {
                         if pos >= kv.max_seq() {
                             return Err(format!("pos {pos} >= max_seq"));
+                        }
+                        if kv.slot_of(req) != Some(s) {
+                            return Err(format!(
+                                "map drift: request {req} slot {s}"
+                            ));
                         }
                     }
                 }
                 Ok(())
             },
         );
+    }
+
+    // ---- PagedKvSlots ------------------------------------------------
+
+    fn small_cfg() -> KvPoolConfig {
+        KvPoolConfig { page_size: 4, total_pages: 8 }
+    }
+
+    #[test]
+    fn paged_alloc_mirrors_slot_and_pool() {
+        let mut kv = PagedKvSlots::paged(2, 64, small_cfg());
+        assert!(kv.is_paged());
+        let (slot, out) = kv.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(out.pages, 2);
+        assert_eq!(kv.pos(slot).unwrap(), 5);
+        assert_eq!(kv.pool().unwrap().pos(1).unwrap(), 5);
+        kv.advance(slot, 6).unwrap();
+        assert_eq!(kv.pos(slot).unwrap(), 6);
+        assert_eq!(kv.pool().unwrap().pos(1).unwrap(), 6);
+        kv.rewind_to(slot, 5).unwrap();
+        assert_eq!(kv.pool().unwrap().pos(1).unwrap(), 5);
+        kv.release(slot).unwrap();
+        assert_eq!(kv.live_count(), 0);
+        assert_eq!(kv.pool().unwrap().live_pages(), 0);
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn paged_alloc_slot_failure_rolls_back_pool() {
+        let mut kv = PagedKvSlots::paged(1, 64, small_cfg());
+        kv.alloc(1, &[1, 2, 3]).unwrap();
+        // Pool has pages, but the single slot is taken.
+        let err = kv.alloc(2, &[4, 5, 6]).unwrap_err();
+        assert_eq!(err, KvError::NoFreeSlot);
+        assert!(!kv.pool().unwrap().has_table(2), "pool rolled back");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn paged_preempt_frees_slot_and_pages() {
+        // 4 pages of 4 tokens: two 2-page sequences fill the pool.
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 4 };
+        let mut kv = PagedKvSlots::paged(2, 64, cfg);
+        let (s1, _) = kv.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
+        let (s2, _) = kv.alloc(2, &[9, 8, 7, 6, 5]).unwrap();
+        // Growing request 1 past its partial page needs a 5th page.
+        for t in 0..3 {
+            kv.advance(s1, t).unwrap(); // fills the partial page
+        }
+        let err = kv.advance(s1, 99).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        let (slot, pre) = kv.preempt(PreemptMode::Recompute).unwrap();
+        assert_eq!(slot, s2);
+        assert_eq!(pre.request, 2);
+        assert_eq!(pre.tokens, vec![9, 8, 7, 6, 5]);
+        assert_eq!(kv.live_count(), 1);
+        // The freed capacity lets the stalled advance proceed.
+        kv.advance(s1, 99).unwrap();
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dense_mode_matches_seed_semantics() {
+        let mut kv = PagedKvSlots::dense(2, 8);
+        assert!(!kv.is_paged());
+        let (s, out) = kv.alloc(1, &[1, 2, 3]).unwrap();
+        assert_eq!(out.shared_tokens, 0);
+        for t in 0..4 {
+            kv.advance(s, t).unwrap();
+        }
+        assert_eq!(kv.advance(s, 9).unwrap_err(),
+                   KvError::MaxSeq { pos: 7, max_seq: 8 });
+        let view = kv.capacity_view();
+        assert_eq!(view.pages, None);
+        assert_eq!(view.free_slots, 1);
+        assert!(kv.preempt(PreemptMode::Recompute).is_none());
+        kv.release(s).unwrap();
+    }
+
+    #[test]
+    fn paged_default_budget_is_dense_equivalent() {
+        let cfg = KvPoolConfig { page_size: DEFAULT_PAGE_SIZE,
+                                 total_pages: 0 };
+        let kv = PagedKvSlots::paged(4, 512, cfg);
+        let pool = kv.pool().unwrap();
+        assert_eq!(pool.total_pages(), 4 * 512 / DEFAULT_PAGE_SIZE);
     }
 }

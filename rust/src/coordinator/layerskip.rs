@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::kvpool::KvPool;
 use crate::models::tokenizer;
 use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::Tensor;
@@ -44,6 +45,13 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
     let mut kv: KvBufs = kv;
     let ttft = t0.elapsed().as_secs_f64();
 
+    // Block-table view of the speculative cache: drafts advance it,
+    // verification rewinds and overwrites — the same rewind path the
+    // dense slot view used, now at page granularity.
+    let mut pool = KvPool::solo(dims.max_seq);
+    let table_len = prompt.len().min(dims.max_seq - 1);
+    pool.alloc(0, &prompt[..table_len])?;
+
     let mut out: Vec<i32> = Vec::with_capacity(max_new);
     let mut pos = prompt.len();
     // `pending` = last sampled token not yet written into the cache.
@@ -70,7 +78,8 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
         window.push(pending);
         let mut dkv_pos = pos;
         for _ in 0..k_window - 1 {
-            let t_tok = Tensor::from_i32(&[1], &[*window.last().unwrap()]);
+            let fed = *window.last().unwrap();
+            let t_tok = Tensor::from_i32(&[1], &[fed]);
             let t_pos = Tensor::from_i32(&[1], &[dkv_pos as i32]);
             let outs = engine.run(
                 &draft_stage,
@@ -84,9 +93,16 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
             let dl = engine.download(&logits_buf)?.as_f32()?;
             // Drafts are greedy (standard for self-spec draft phase).
             window.push(sampling::greedy(&dl));
+            pool.advance(0, fed)?;
             dkv_pos += 1;
         }
         // ---- verify phase: all K tokens in one full-model pass --------
+        // The verify pass overwrites positions pos..pos+K: rewind the
+        // block table and replay the window through it.
+        pool.rewind_to(0, pos)?;
+        for &w in &window {
+            pool.advance(0, w)?;
+        }
         let t_toks = Tensor::from_i32(&[1, k_window], &window);
         let t_start = Tensor::from_i32(&[1], &[pos as i32]);
         let outs = engine.run(
@@ -130,9 +146,12 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
         // Cache now holds correct entries for window[0..=accepted] at
         // pos..pos+accepted; rewind the logical position there.
         pos += accepted + 1;
+        pool.rewind_to(0, pos)?;
         pending = bonus;
     }
 
+    pool.release(0)?;
+    debug_assert!(pool.check_invariants().is_ok());
     Ok(GenResult {
         prompt_tokens: prompt.len(),
         decode_steps: out.len(),

@@ -3,10 +3,11 @@
 //!
 //! * [`request`] — request/response/event types flowing through the stack.
 //! * [`sampling`] — greedy / top-k / top-p / temperature samplers.
-//! * [`kv`] — static KV-cache slot manager (CUDA-Graph-style fixed
-//!   buffers, §4.1.2).
+//! * [`kv`] — KV-cache views: the static slot manager for the compiled
+//!   graphs (CUDA-Graph-style fixed buffers, §4.1.2) and the paged
+//!   wrapper that meters capacity through `crate::kvpool`.
 //! * [`batcher`] — continuous batcher: decode-batch occupancy + prefill
-//!   admission under a token budget.
+//!   admission under a token budget and the paged pool's capacity view.
 //! * [`opts`] — the optimization-lever configuration (SDPA / graph mode /
 //!   quant / LayerSkip), §4's knobs as a struct.
 //! * [`decoder_loop`] — Llama/Chameleon serving: bucketed prefill,

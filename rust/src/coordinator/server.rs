@@ -21,18 +21,19 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::PjRtBuffer;
 
+use crate::kvpool::{KvError, KvPoolConfig, PreemptMode};
 use crate::models::tokenizer::{self, ImageTokenizer, TextTokenizer};
 use crate::models::{ModelKind, TaskKind};
-use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
 use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
 use super::batcher::{Batcher, QueuedRequest};
-use super::decoder_loop::{encode_prompt, DecoderSession};
+use super::decoder_loop::{encode_prompt, DecoderSession, KvBufs};
 use super::hstu_loop::{HstuAttn, HstuRunner};
-use super::kv::KvSlots;
+use super::kv::PagedKvSlots;
 use super::opts::{ExecMode, OptConfig};
 use super::request::{Request, RequestInput, Response, ResponseOutput};
 use super::sampling;
@@ -53,6 +54,11 @@ pub struct RouterConfig {
     pub batch: usize,
     /// Prefill token budget per tick (0 = unlimited).
     pub prefill_budget: usize,
+    /// Paged KV pool sizing for the batched decoder: admission meters
+    /// pages (with prefix sharing) instead of worst-case slots. The
+    /// default is a dense-equivalent page budget; `page_size: 0`
+    /// disables paging entirely (the seed's slot-only behavior).
+    pub kv: KvPoolConfig,
     /// Request-path tracing: each worker registers itself and records
     /// spans for scheduling, tokenization, dispatch, and sampling.
     /// `None` (the default) keeps the serving path instrumentation-free.
@@ -67,6 +73,7 @@ impl Default for RouterConfig {
             reorder: ReorderMode::Fused,
             batch: 4,
             prefill_budget: 0,
+            kv: KvPoolConfig::default(),
             tracer: None,
         }
     }
@@ -161,6 +168,80 @@ struct SlotJob {
     ttft: f64,
 }
 
+/// A request parked in the staging map between scheduler ticks.
+enum Staged {
+    /// Never admitted yet: tokenize + prefill on admission.
+    Fresh(WorkItem),
+    /// Preempted mid-decode: re-prefill prompt + generated tokens
+    /// (the recompute half of the preemption policy) and continue.
+    Resume(SlotJob),
+}
+
+/// Outcome of growing a slot's KV when the pool was out of pages.
+enum Growth {
+    /// A victim was evicted and the advance went through.
+    Advanced,
+    /// The growing request was itself the preemption victim; it has
+    /// been requeued for recompute.
+    SelfPreempted,
+    /// Nothing left to evict — treat like the sequence cap.
+    Capped,
+}
+
+/// Insert one prefilled KV into the batched cache at `slot`.
+fn pack_slot(engine: &Engine, kv_pack: &StageHandle, ck: &PjRtBuffer,
+             cv: &PjRtBuffer, kv1: &KvBufs, slot: usize)
+             -> Result<(PjRtBuffer, PjRtBuffer)> {
+    let t_slot = Tensor::from_i32(&[1], &[slot as i32]);
+    let outs = engine.run(
+        kv_pack,
+        &[Arg::Dev(ck), Arg::Dev(cv), Arg::Dev(&kv1.k), Arg::Dev(&kv1.v),
+          Arg::Host(&t_slot)],
+    )?;
+    let mut it = outs.into_iter();
+    Ok((it.next().context("ck")?, it.next().context("cv")?))
+}
+
+/// The pool ran dry while `slot` needed a page for `fed`: preempt
+/// latest-admitted sequences (requeueing them for recompute) until the
+/// advance fits, we evict ourselves, or nothing is left to evict.
+fn preempt_for_growth(slots: &mut PagedKvSlots, batcher: &mut Batcher,
+                      staging: &mut HashMap<u64, Staged>,
+                      jobs: &mut [Option<SlotJob>], slot: usize, fed: i32)
+                      -> Result<Growth> {
+    let this_req = slots.request_at(slot)?;
+    loop {
+        let Some((vslot, pre)) = slots.preempt(PreemptMode::Recompute)
+        else {
+            return Ok(Growth::Capped);
+        };
+        let job = jobs[vslot].take().context("preempted slot job")?;
+        // Readmission prefills prompt + all-but-pending tokens; the
+        // queue entry carries that length for capacity accounting.
+        let prefix_len = job.prompt_len + job.tokens.len() - 1;
+        let remaining = job
+            .item
+            .request
+            .max_new_tokens
+            .saturating_sub(job.tokens.len())
+            .max(1);
+        batcher.push_front(QueuedRequest {
+            id: pre.request,
+            prompt_len: prefix_len,
+            max_new_tokens: remaining,
+        });
+        staging.insert(pre.request, Staged::Resume(job));
+        if pre.request == this_req {
+            return Ok(Growth::SelfPreempted);
+        }
+        match slots.advance(slot, fed) {
+            Ok(_) => return Ok(Growth::Advanced),
+            Err(KvError::CapacityExhausted { .. }) => continue,
+            Err(_) => return Ok(Growth::Capped),
+        }
+    }
+}
+
 fn decoder_worker(engine: &Engine, cfg: RouterConfig,
                   rx: Receiver<WorkItem>) -> Result<()> {
     let session = DecoderSession::new(engine, cfg.opt)?;
@@ -192,11 +273,17 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     let zero = Tensor::zeros(DType::F32, &kv_shape);
     let mut ck: PjRtBuffer = engine.upload(&zero)?;
     let mut cv: PjRtBuffer = engine.upload(&zero)?;
-    let mut slots = KvSlots::new(batch, dims.max_seq);
+    // The compiled graph keeps its dense per-slot cache; the paged pool
+    // meters capacity (prefix sharing, growth, preemption) under it.
+    let mut slots = PagedKvSlots::paged(batch, dims.max_seq, cfg.kv);
     let mut jobs: Vec<Option<SlotJob>> = (0..batch).map(|_| None).collect();
     let mut batcher = Batcher::new(cfg.prefill_budget);
-    let mut staging: HashMap<u64, WorkItem> = HashMap::new();
+    let mut staging: HashMap<u64, Staged> = HashMap::new();
     let mut closed = false;
+    // Consecutive empty ticks with queued work: a request larger than
+    // the whole page budget can never be admitted; shed it instead of
+    // spinning forever.
+    let mut stalled = 0usize;
     let tele = engine.tracer();
 
     loop {
@@ -230,49 +317,143 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             t.next_tick();
         }
 
-        // Admission: prefill into free slots.
+        // Admission: prefill into free slots, against the capacity
+        // view (free slots + free pages − growth watermark).
         let adm = {
             let _s = tele.map(|t| t.span(Cat::Schedule, "admission"));
-            batcher.tick(slots.free_count(), slots.live_count())
+            batcher.tick(&slots.capacity_view())
         };
-        for q in adm.admit {
-            let item = staging.remove(&q.id).context("staged item")?;
-            let _req_scope = tele.map(|t| t.req_scope(q.id));
-            let prefill_span = tele.map(|t| t.span(Cat::Prefill, "admit"));
-            let started = Instant::now();
-            let prompt = {
-                let _t = tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
-                tokenize_decoder_input(&item.request)?
-            };
-            let (logits, kv1) = session.prefill(&prompt)?;
-            let slot = slots.alloc(q.id, prompt.len())?;
-            // insert the prefilled KV into the batch cache
-            let t_slot = Tensor::from_i32(&[1], &[slot as i32]);
-            let outs = engine.run(
-                &kv_pack,
-                &[Arg::Dev(&ck), Arg::Dev(&cv), Arg::Dev(&kv1.k),
-                  Arg::Dev(&kv1.v), Arg::Host(&t_slot)],
-            )?;
-            let mut it = outs.into_iter();
-            ck = it.next().context("ck")?;
-            cv = it.next().context("cv")?;
-            // sample the first token right away from the prefill logits
-            let mut rng = Rng::new(item.request.sampling.seed ^ q.id);
-            let first = {
-                let _s = tele.map(|t| t.span(Cat::Sample, "sample_first"));
-                sampling::sample(&logits, &item.request.sampling, &mut rng)
-            };
-            let ttft = started.elapsed().as_secs_f64();
-            drop(prefill_span);
-            jobs[slot] = Some(SlotJob {
-                prompt_len: prompt.len(),
-                tokens: vec![first],
-                rng,
-                started,
-                ttft,
-                item,
-            });
+        // A free slot existed but pages didn't cover the next prompt:
+        // count the tick and mark the host window so the idle-gap
+        // attribution can bucket it as KvCapacity, not Scheduling. The
+        // span is held only when the tick admitted *nothing* — on a
+        // partially blocked tick the admitted requests' tokenize /
+        // prefill / sample time must keep its own buckets.
+        let kv_wait_span = if adm.blocked_on_capacity {
+            slots.note_capacity_wait();
+            if adm.admit.is_empty() {
+                tele.map(|t| t.span(Cat::KvWait, "kv_capacity_wait"))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        if adm.admit.is_empty() && slots.live_count() == 0
+            && batcher.pending() > 0
+        {
+            stalled += 1;
+            if stalled > 2 {
+                if let Some(q) = batcher.pop_front() {
+                    if let Some(staged) = staging.remove(&q.id) {
+                        let item = match staged {
+                            Staged::Fresh(item) => item,
+                            Staged::Resume(job) => job.item,
+                        };
+                        let _ = item.respond.send(Err(anyhow!(
+                            "request {} exceeds the KV page budget",
+                            q.id
+                        )));
+                    }
+                }
+                stalled = 0;
+            }
+        } else {
+            stalled = 0;
         }
+        for q in adm.admit {
+            let staged = staging.remove(&q.id).context("staged item")?;
+            let _req_scope = tele.map(|t| t.req_scope(q.id));
+            match staged {
+                Staged::Fresh(item) => {
+                    let prefill_span =
+                        tele.map(|t| t.span(Cat::Prefill, "admit"));
+                    let started = Instant::now();
+                    let prompt = {
+                        let _t =
+                            tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
+                        tokenize_decoder_input(&item.request)?
+                    };
+                    let (logits, kv1) = session.prefill(&prompt)?;
+                    let slot = match slots.alloc(q.id, &prompt) {
+                        Ok((slot, _share)) => slot,
+                        Err(KvError::CapacityExhausted { .. }) => {
+                            // Decode growth raced the admission view;
+                            // retry next tick, FCFS position intact.
+                            let id = q.id;
+                            batcher.push_front(q);
+                            staging.insert(id, Staged::Fresh(item));
+                            continue;
+                        }
+                        Err(e) => {
+                            // Structural refusal (prompt ≥ max_seq, …):
+                            // fail the request, keep the worker alive.
+                            let _ = item.respond.send(Err(e.into()));
+                            continue;
+                        }
+                    };
+                    let (nck, ncv) =
+                        pack_slot(engine, &kv_pack, &ck, &cv, &kv1, slot)?;
+                    ck = nck;
+                    cv = ncv;
+                    // sample the first token from the prefill logits
+                    let mut rng =
+                        Rng::new(item.request.sampling.seed ^ q.id);
+                    let first = {
+                        let _s =
+                            tele.map(|t| t.span(Cat::Sample, "sample_first"));
+                        sampling::sample(&logits, &item.request.sampling,
+                                         &mut rng)
+                    };
+                    let ttft = started.elapsed().as_secs_f64();
+                    drop(prefill_span);
+                    jobs[slot] = Some(SlotJob {
+                        prompt_len: prompt.len(),
+                        tokens: vec![first],
+                        rng,
+                        started,
+                        ttft,
+                        item,
+                    });
+                }
+                Staged::Resume(job) => {
+                    // Recompute half of preemption: re-prefill prompt +
+                    // all-but-pending generated tokens, then continue
+                    // decoding from the job's saved state.
+                    let prefill_span =
+                        tele.map(|t| t.span(Cat::Prefill, "resume"));
+                    let mut prefix = {
+                        let _t =
+                            tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
+                        tokenize_decoder_input(&job.item.request)?
+                    };
+                    prefix.extend_from_slice(
+                        &job.tokens[..job.tokens.len() - 1],
+                    );
+                    let (_logits, kv1) = session.prefill(&prefix)?;
+                    let slot = match slots.alloc(q.id, &prefix) {
+                        Ok((slot, _share)) => slot,
+                        Err(KvError::CapacityExhausted { .. }) => {
+                            let id = q.id;
+                            batcher.push_front(q);
+                            staging.insert(id, Staged::Resume(job));
+                            continue;
+                        }
+                        Err(e) => {
+                            let _ = job.item.respond.send(Err(e.into()));
+                            continue;
+                        }
+                    };
+                    let (nck, ncv) =
+                        pack_slot(engine, &kv_pack, &ck, &cv, &kv1, slot)?;
+                    ck = nck;
+                    cv = ncv;
+                    drop(prefill_span);
+                    jobs[slot] = Some(job);
+                }
+            }
+        }
+        drop(kv_wait_span);
 
         if slots.live_count() == 0 {
             continue;
@@ -301,18 +482,42 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         let logits = engine.download(&logits_buf)?.as_f32()?;
 
         for (slot, _, _) in slots.live_slots() {
-            let job = jobs[slot].as_mut().unwrap();
-            // Per-slot Sample span carries the request id so the
-            // time-between-tokens histogram works in batched mode.
-            let _s = tele.map(|t| t.span_req(Cat::Sample, "sample",
-                                             job.item.request.id));
-            let row = &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
-            let tok =
-                sampling::sample(row, &job.item.request.sampling, &mut job.rng);
-            job.tokens.push(tok);
-            let done = tok == tokenizer::EOS
-                || job.tokens.len() >= job.item.request.max_new_tokens
-                || slots.advance(slot).is_err();
+            // A preemption earlier in this pass may have emptied the
+            // slot; skip it rather than unwrap.
+            let (tok, sampled_done) = {
+                let Some(job) = jobs[slot].as_mut() else { continue };
+                // Per-slot Sample span carries the request id so the
+                // time-between-tokens histogram works in batched mode.
+                let _s = tele.map(|t| t.span_req(Cat::Sample, "sample",
+                                                 job.item.request.id));
+                let row =
+                    &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
+                let tok = sampling::sample(row, &job.item.request.sampling,
+                                           &mut job.rng);
+                job.tokens.push(tok);
+                (tok, tok == tokenizer::EOS
+                    || job.tokens.len() >= job.item.request.max_new_tokens)
+            };
+            let mut done = sampled_done;
+            if !done {
+                // The cache now holds the token we just fed; record it
+                // in the block table (this is where pages grow).
+                let fed = toks[slot];
+                match slots.advance(slot, fed) {
+                    Ok(_) => {}
+                    Err(KvError::CapacityExhausted { .. }) => {
+                        match preempt_for_growth(&mut slots, &mut batcher,
+                                                 &mut staging, &mut jobs,
+                                                 slot, fed)? {
+                            Growth::Advanced => {}
+                            Growth::SelfPreempted => continue,
+                            Growth::Capped => done = true,
+                        }
+                    }
+                    // Sequence cap (max_seq): finish the request.
+                    Err(_) => done = true,
+                }
+            }
             if done {
                 let job = jobs[slot].take().unwrap();
                 slots.release(slot)?;
@@ -328,7 +533,7 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
 /// non-batchable tasks inline, otherwise tokenize (traced) and queue.
 fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
                        batcher: &mut Batcher,
-                       staging: &mut HashMap<u64, WorkItem>,
+                       staging: &mut HashMap<u64, Staged>,
                        tele: Option<&WorkerTracer>) -> Result<()> {
     // Non-batchable tasks (T-I contrastive) run inline.
     if item.request.task == TaskKind::TextToImage {
@@ -346,7 +551,7 @@ fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
         prompt_len: prompt.len(),
         max_new_tokens: item.request.max_new_tokens,
     });
-    staging.insert(item.request.id, item);
+    staging.insert(item.request.id, Staged::Fresh(item));
     Ok(())
 }
 

@@ -1,0 +1,238 @@
+//! Ref-counted page allocator over a fixed page budget.
+//!
+//! A page holds `page_size` tokens of KV for one sequence position
+//! range. Pages move between three states:
+//!
+//! * **Free** — on the free list, content undefined.
+//! * **Live** — referenced by ≥ 1 block table (refcount counts tables).
+//! * **Cached** — refcount 0 but retained by the prefix cache so a
+//!   future request with the same prefix can reuse it; evictable.
+//!
+//! The pool itself knows nothing about hashes or tables — it only
+//! enforces the state machine and the conservation invariant
+//! `free + live + cached == total` that the property tests check.
+
+/// Index of a page inside the pool's budget.
+pub type PageId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageState {
+    Free,
+    Live,
+    Cached,
+}
+
+#[derive(Debug, Clone)]
+struct Page {
+    state: PageState,
+    /// Number of block tables referencing the page (0 unless Live).
+    refs: usize,
+}
+
+/// Fixed-budget page allocator with free-list reuse.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    pages: Vec<Page>,
+    /// LIFO free list seeded in reverse so the lowest index pops first.
+    free: Vec<PageId>,
+    page_size: usize,
+}
+
+impl BlockPool {
+    pub fn new(total_pages: usize, page_size: usize) -> Self {
+        assert!(page_size > 0, "page_size must be positive");
+        BlockPool {
+            pages: vec![
+                Page { state: PageState::Free, refs: 0 };
+                total_pages
+            ],
+            free: (0..total_pages).rev().collect(),
+            page_size,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+    pub fn total(&self) -> usize {
+        self.pages.len()
+    }
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+    pub fn live_count(&self) -> usize {
+        self.pages
+            .iter()
+            .filter(|p| p.state == PageState::Live)
+            .count()
+    }
+    pub fn cached_count(&self) -> usize {
+        self.pages
+            .iter()
+            .filter(|p| p.state == PageState::Cached)
+            .count()
+    }
+
+    pub fn state(&self, id: PageId) -> PageState {
+        self.pages[id].state
+    }
+    pub fn refs(&self, id: PageId) -> usize {
+        self.pages[id].refs
+    }
+
+    /// Claim a free page (refcount 1). `None` when the free list is
+    /// empty — the caller decides whether to evict a cached page.
+    pub fn alloc(&mut self) -> Option<PageId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.pages[id].state, PageState::Free);
+        self.pages[id] = Page { state: PageState::Live, refs: 1 };
+        Some(id)
+    }
+
+    /// Add one reference to a live page (prefix sharing).
+    pub fn retain(&mut self, id: PageId) {
+        debug_assert_eq!(self.pages[id].state, PageState::Live);
+        self.pages[id].refs += 1;
+    }
+
+    /// Drop one reference; returns the remaining count. A page at zero
+    /// stays Live until the caller parks or frees it.
+    pub fn release(&mut self, id: PageId) -> usize {
+        let p = &mut self.pages[id];
+        debug_assert_eq!(p.state, PageState::Live);
+        debug_assert!(p.refs > 0, "release of zero-ref page {id}");
+        p.refs -= 1;
+        p.refs
+    }
+
+    /// Return a zero-ref live page to the free list.
+    pub fn free_page(&mut self, id: PageId) {
+        let p = &mut self.pages[id];
+        debug_assert_eq!(p.state, PageState::Live);
+        debug_assert_eq!(p.refs, 0, "freeing referenced page {id}");
+        p.state = PageState::Free;
+        self.free.push(id);
+    }
+
+    /// Park a zero-ref live page as a cached prefix (evictable).
+    pub fn park_cached(&mut self, id: PageId) {
+        let p = &mut self.pages[id];
+        debug_assert_eq!(p.state, PageState::Live);
+        debug_assert_eq!(p.refs, 0, "caching referenced page {id}");
+        p.state = PageState::Cached;
+    }
+
+    /// Revive a cached page for a new table (refcount 1).
+    pub fn unpark(&mut self, id: PageId) {
+        let p = &mut self.pages[id];
+        debug_assert_eq!(p.state, PageState::Cached);
+        p.state = PageState::Live;
+        p.refs = 1;
+    }
+
+    /// Evict a cached page back to the free list.
+    pub fn evict_cached(&mut self, id: PageId) {
+        let p = &mut self.pages[id];
+        debug_assert_eq!(p.state, PageState::Cached);
+        p.state = PageState::Free;
+        p.refs = 0;
+        self.free.push(id);
+    }
+
+    /// Conservation check: every page is in exactly one state and the
+    /// state counts add up to the budget.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let free = self.free_count();
+        let live = self.live_count();
+        let cached = self.cached_count();
+        if free + live + cached != self.total() {
+            return Err(format!(
+                "page leak: free {free} + live {live} + cached {cached} \
+                 != total {}",
+                self.total()
+            ));
+        }
+        for (i, p) in self.pages.iter().enumerate() {
+            match p.state {
+                PageState::Free | PageState::Cached => {
+                    if p.refs != 0 {
+                        return Err(format!(
+                            "page {i} {:?} with refs {}", p.state, p.refs
+                        ));
+                    }
+                }
+                PageState::Live => {
+                    // refs 0 is a transient mid-release state; a settled
+                    // pool must not hold zero-ref live pages.
+                    if p.refs == 0 {
+                        return Err(format!("page {i} live with refs 0"));
+                    }
+                }
+            }
+        }
+        let on_free_list = self.free.iter().filter(|&&id| {
+            self.pages[id].state == PageState::Free
+        });
+        if on_free_list.count() != self.free.len() {
+            return Err("free list holds a non-free page".into());
+        }
+        Ok(())
+    }
+
+    /// Convenience for error reporting: pages obtainable right now.
+    pub fn available(&self, cached_evictable: usize) -> usize {
+        self.free_count() + cached_evictable
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle_reuses_lowest_first() {
+        let mut bp = BlockPool::new(3, 16);
+        assert_eq!(bp.alloc(), Some(0));
+        assert_eq!(bp.alloc(), Some(1));
+        assert_eq!(bp.alloc(), Some(2));
+        assert_eq!(bp.alloc(), None);
+        assert_eq!(bp.release(1), 0);
+        bp.free_page(1);
+        assert_eq!(bp.alloc(), Some(1));
+        bp.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn retain_release_counts() {
+        let mut bp = BlockPool::new(2, 8);
+        let p = bp.alloc().unwrap();
+        bp.retain(p);
+        bp.retain(p);
+        assert_eq!(bp.refs(p), 3);
+        assert_eq!(bp.release(p), 2);
+        assert_eq!(bp.release(p), 1);
+        assert_eq!(bp.release(p), 0);
+        bp.free_page(p);
+        assert_eq!(bp.state(p), PageState::Free);
+        bp.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn cached_park_unpark_evict() {
+        let mut bp = BlockPool::new(2, 8);
+        let p = bp.alloc().unwrap();
+        bp.release(p);
+        bp.park_cached(p);
+        assert_eq!(bp.state(p), PageState::Cached);
+        assert_eq!(bp.cached_count(), 1);
+        bp.check_conservation().unwrap();
+        bp.unpark(p);
+        assert_eq!(bp.refs(p), 1);
+        bp.release(p);
+        bp.park_cached(p);
+        bp.evict_cached(p);
+        assert_eq!(bp.state(p), PageState::Free);
+        assert_eq!(bp.free_count(), 2);
+        bp.check_conservation().unwrap();
+    }
+}

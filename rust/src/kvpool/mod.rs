@@ -1,0 +1,131 @@
+//! Paged KV-cache pool: block-granular capacity management with prefix
+//! sharing, capacity-aware admission, and preemption.
+//!
+//! The paper's Table 3 shows KV-cache capacity is what bounds the
+//! achievable decode batch — the single biggest lever on the GPU idle
+//! time of Obs #2. The dense `[L, B, H, max_seq, Dh]` reservation of
+//! `coordinator::kv::KvSlots` pins a worst-case sequence per slot, so a
+//! 30-token chat request blocks as much memory as a max-length
+//! document. This subsystem manages the same capacity at *page*
+//! granularity (vLLM-style paged attention, cf. arXiv:2407.09111):
+//!
+//! * [`block`] — [`BlockPool`]: a fixed budget of ref-counted pages
+//!   with free-list reuse; every page is Free, Live, or Cached.
+//! * [`table`] — [`BlockTable`]: one request's token-position → page
+//!   mapping, plus the token history that makes blocks hashable.
+//! * [`prefix`] — [`PrefixCache`]: chain-hash → page map with an LRU
+//!   over zero-ref cached pages; full blocks are shared across
+//!   requests (copy-on-write on divergence).
+//! * [`pool`] — [`KvPool`]: the manager tying the three together:
+//!   alloc / advance / rewind / release / preempt, the capacity view
+//!   the batcher admits against, and the pool counters (prefix hit
+//!   rate, block churn, evictions, preemptions, capacity waits).
+//! * [`replay`] — a deterministic workload replay that drives the pool
+//!   (or the dense slot baseline) through a request mix and reports
+//!   mean batch occupancy — the `mmserve kv` engine.
+//!
+//! Scope: the pool is the *logical* capacity layer. The compiled decode
+//! graphs keep their dense per-slot caches (`KvSlots` stays the
+//! slot view layered on top — see `coordinator::kv::PagedKvSlots`);
+//! pages meter admission, growth, sharing, and preemption exactly as a
+//! device-side paged allocator would, which is what the Table-3
+//! accounting and the batcher need. Device-side paged attention kernels
+//! are a recorded follow-on (ROADMAP).
+
+pub mod block;
+pub mod pool;
+pub mod prefix;
+pub mod replay;
+pub mod table;
+
+pub use block::{BlockPool, PageId, PageState};
+pub use pool::{AllocOutcome, CapacityView, KvPool, KvPoolConfig,
+               PageBudget, PoolStats, Preempted, PreemptMode};
+pub use prefix::PrefixCache;
+pub use table::BlockTable;
+
+/// Default tokens per KV page (vLLM's default block size).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Pages needed to hold `tokens` tokens at `page_size` granularity.
+pub fn pages_for(tokens: usize, page_size: usize) -> usize {
+    let ps = page_size.max(1);
+    (tokens + ps - 1) / ps
+}
+
+/// Structured error vocabulary shared by the paged pool and the dense
+/// slot manager — callers match on variants instead of error strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvError {
+    /// The pool cannot supply `needed` pages (free + evictable-cached
+    /// < needed). The caller should preempt or queue.
+    CapacityExhausted { needed: usize, available: usize },
+    /// All batch slots are live (dense slot view).
+    NoFreeSlot,
+    /// The request already holds a table / slot.
+    DuplicateRequest(u64),
+    /// No table / slot is registered for the request.
+    UnknownRequest(u64),
+    /// Slot index outside the batch.
+    UnknownSlot(usize),
+    /// Operation on a slot that is not live.
+    SlotFree(usize),
+    /// Position would reach or pass the sequence capacity.
+    MaxSeq { pos: usize, max_seq: usize },
+    /// Rewind target is ahead of the current position.
+    RewindForward { from: usize, to: usize },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::CapacityExhausted { needed, available } => write!(
+                f,
+                "kv capacity exhausted: need {needed} pages, \
+                 {available} available"
+            ),
+            KvError::NoFreeSlot => write!(f, "no free slot"),
+            KvError::DuplicateRequest(r) => {
+                write!(f, "request {r} already has a kv allocation")
+            }
+            KvError::UnknownRequest(r) => {
+                write!(f, "request {r} has no kv allocation")
+            }
+            KvError::UnknownSlot(s) => write!(f, "slot {s} out of range"),
+            KvError::SlotFree(s) => write!(f, "slot {s} is free"),
+            KvError::MaxSeq { pos, max_seq } => {
+                write!(f, "position {pos} reaches max_seq {max_seq}")
+            }
+            KvError::RewindForward { from, to } => {
+                write!(f, "rewind forward ({to} > {from})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0, 16), 0);
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
+        assert_eq!(pages_for(5, 1), 5);
+    }
+
+    #[test]
+    fn errors_render_and_compare() {
+        let e = KvError::CapacityExhausted { needed: 3, available: 1 };
+        assert!(e.to_string().contains("need 3"));
+        assert_eq!(e, KvError::CapacityExhausted { needed: 3, available: 1 });
+        assert_ne!(e, KvError::NoFreeSlot);
+        // KvError converts into anyhow::Error via `?` in worker code.
+        let any: anyhow::Error = KvError::NoFreeSlot.into();
+        assert!(any.downcast_ref::<KvError>().is_some());
+    }
+}

@@ -1,0 +1,834 @@
+//! The pool manager: block tables over a shared page budget, prefix
+//! sharing with copy-on-write, LRU eviction, capacity-aware admission
+//! views, and preemption.
+//!
+//! Lifecycle of a request's KV:
+//!
+//! ```text
+//! alloc(tokens)   — match the longest cached full-block prefix
+//!                   (retain shared pages), claim fresh pages for the
+//!                   rest (evicting LRU cached prefixes under
+//!                   pressure), register fresh full blocks for future
+//!                   sharing.
+//! advance(token)  — append one decode position: new page on a block
+//!                   boundary, copy-on-write fork before overwriting a
+//!                   shared page, cache invalidation when the sole
+//!                   owner diverges from a cached block.
+//! rewind_to(pos)  — LayerSkip rollback; pages are kept (overwrite
+//!                   semantics, like the dense slot view).
+//! release()       — register finished full blocks, then drop refs;
+//!                   zero-ref hashed pages park on the cache LRU,
+//!                   the rest return to the free list.
+//! preempt(mode)   — evict the latest-admitted sequence when decode
+//!                   outgrows the pool: Recompute drops its pages and
+//!                   the caller re-prefills on readmission; SwapOut
+//!                   additionally ledgers the sequence for
+//!                   `resume_swapped` (host-side copy accounting).
+//! ```
+
+use std::collections::HashMap;
+
+use crate::substrate::table::Table;
+
+use super::block::{BlockPool, PageId, PageState};
+use super::prefix::{block_hashes, PrefixCache};
+use super::table::BlockTable;
+use super::{pages_for, KvError, DEFAULT_PAGE_SIZE};
+
+/// Pool sizing knobs carried by `RouterConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolConfig {
+    /// Tokens per page. 0 disables paging (dense slot admission only).
+    pub page_size: usize,
+    /// Total page budget. 0 = dense-equivalent: `batch` full sequences.
+    pub total_pages: usize,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        KvPoolConfig { page_size: DEFAULT_PAGE_SIZE, total_pages: 0 }
+    }
+}
+
+impl KvPoolConfig {
+    pub fn enabled(&self) -> bool {
+        self.page_size > 0
+    }
+
+    /// Resolve the page budget for a decode batch of `batch` slots.
+    pub fn resolve_pages(&self, batch: usize, max_seq: usize) -> usize {
+        if self.total_pages > 0 {
+            self.total_pages
+        } else {
+            batch * pages_for(max_seq, self.page_size)
+        }
+    }
+}
+
+/// Counters the telemetry report and `mmserve kv` print.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+    pub blocks_allocated: u64,
+    pub blocks_freed: u64,
+    pub evictions: u64,
+    pub cow_forks: u64,
+    pub preemptions: u64,
+    pub swapped_out_tokens: u64,
+    /// Scheduler ticks where admission was blocked on KV capacity —
+    /// the counter behind the `KvCapacity` idle-attribution bucket.
+    pub capacity_wait_ticks: u64,
+    pub seqs_admitted: u64,
+}
+
+impl PoolStats {
+    /// Fraction of full-block lookups served from the prefix cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+
+    /// Page alloc + free traffic (the hot-path cost the bench tracks).
+    pub fn block_churn(&self) -> u64 {
+        self.blocks_allocated + self.blocks_freed
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["counter", "value"]);
+        t.row(&["prefix lookups".into(), self.prefix_lookups.to_string()]);
+        t.row(&["prefix hits".into(), self.prefix_hits.to_string()]);
+        t.row(&[
+            "prefix hit rate".into(),
+            format!("{:.1}%", self.hit_rate() * 100.0),
+        ]);
+        t.row(&[
+            "prefix hit tokens".into(),
+            self.prefix_hit_tokens.to_string(),
+        ]);
+        t.row(&["blocks allocated".into(), self.blocks_allocated.to_string()]);
+        t.row(&["blocks freed".into(), self.blocks_freed.to_string()]);
+        t.row(&["block churn".into(), self.block_churn().to_string()]);
+        t.row(&["evictions (LRU)".into(), self.evictions.to_string()]);
+        t.row(&["copy-on-write forks".into(), self.cow_forks.to_string()]);
+        t.row(&["preemptions".into(), self.preemptions.to_string()]);
+        t.row(&[
+            "swapped-out tokens".into(),
+            self.swapped_out_tokens.to_string(),
+        ]);
+        t.row(&[
+            "capacity-wait ticks".into(),
+            self.capacity_wait_ticks.to_string(),
+        ]);
+        t.row(&["sequences admitted".into(), self.seqs_admitted.to_string()]);
+        t.render()
+    }
+}
+
+/// What to do with a preemption victim's KV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Drop the pages; the scheduler re-prefills prompt + generated
+    /// tokens on readmission (compute pays, no transfer).
+    Recompute,
+    /// Drop the pages but ledger the sequence host-side; `resume_swapped`
+    /// reallocates it (transfer pays, no recompute).
+    SwapOut,
+}
+
+/// A preempted sequence, returned to the scheduler for requeueing.
+#[derive(Debug, Clone)]
+pub struct Preempted {
+    pub request: u64,
+    /// Full token history (prompt + generated) at preemption time.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub mode: PreemptMode,
+}
+
+/// Page-budget half of a capacity view (absent in dense mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageBudget {
+    pub page_size: usize,
+    /// Free pages plus evictable cached pages.
+    pub available_pages: usize,
+    /// Growth watermark: one lookahead page per live sequence, so
+    /// admission stays optimistic and preemption handles the tail.
+    pub reserved_growth: usize,
+}
+
+/// What the batcher admits against each tick: slots (the compiled
+/// graph's fixed batch) plus, when paging is on, the page budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CapacityView {
+    pub free_slots: usize,
+    pub live_slots: usize,
+    pub pages: Option<PageBudget>,
+}
+
+impl CapacityView {
+    /// Slot-only view — the dense `KvSlots` admission of the seed.
+    pub fn dense(free_slots: usize, live_slots: usize) -> Self {
+        CapacityView { free_slots, live_slots, pages: None }
+    }
+
+    /// Pages a `prompt_len` admission claims, worst-case (no sharing,
+    /// +1 position for the first decode token).
+    pub fn pages_needed(&self, prompt_len: usize) -> usize {
+        match &self.pages {
+            Some(p) => pages_for(prompt_len + 1, p.page_size),
+            None => 0,
+        }
+    }
+}
+
+/// The paged KV-cache pool.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    blocks: BlockPool,
+    cache: PrefixCache,
+    tables: HashMap<u64, BlockTable>,
+    /// Swapped-out sequences awaiting `resume_swapped`.
+    swapped: HashMap<u64, (Vec<i32>, usize)>,
+    max_seq: usize,
+    next_seq: u64,
+    pub stats: PoolStats,
+}
+
+/// Outcome of one allocation (the admission-side sharing report).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocOutcome {
+    pub pages: usize,
+    pub shared_pages: usize,
+    pub shared_tokens: usize,
+}
+
+impl KvPool {
+    pub fn new(total_pages: usize, page_size: usize, max_seq: usize) -> Self {
+        KvPool {
+            blocks: BlockPool::new(total_pages, page_size),
+            cache: PrefixCache::new(),
+            tables: HashMap::new(),
+            swapped: HashMap::new(),
+            max_seq,
+            next_seq: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Pool for a `batch`-slot decode graph under `cfg`.
+    pub fn for_batch(batch: usize, max_seq: usize, cfg: KvPoolConfig)
+                     -> Self {
+        KvPool::new(cfg.resolve_pages(batch, max_seq), cfg.page_size,
+                    max_seq)
+    }
+
+    /// Pool sized for a single dense sequence (the bs=1 decode loops).
+    pub fn solo(max_seq: usize) -> Self {
+        KvPool::new(pages_for(max_seq, DEFAULT_PAGE_SIZE),
+                    DEFAULT_PAGE_SIZE, max_seq)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.blocks.page_size()
+    }
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+    pub fn total_pages(&self) -> usize {
+        self.blocks.total()
+    }
+    pub fn free_pages(&self) -> usize {
+        self.blocks.free_count()
+    }
+    pub fn live_pages(&self) -> usize {
+        self.blocks.live_count()
+    }
+    pub fn cached_pages(&self) -> usize {
+        self.blocks.cached_count()
+    }
+    pub fn live_seqs(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn has_table(&self, request: u64) -> bool {
+        self.tables.contains_key(&request)
+    }
+
+    pub fn table(&self, request: u64) -> Option<&BlockTable> {
+        self.tables.get(&request)
+    }
+
+    /// Fill position of a live sequence.
+    pub fn pos(&self, request: u64) -> Result<usize, KvError> {
+        self.tables
+            .get(&request)
+            .map(|t| t.pos())
+            .ok_or(KvError::UnknownRequest(request))
+    }
+
+    /// Admit a sequence: share the longest cached full-block prefix,
+    /// claim fresh pages for the rest. Rolls back cleanly (no page
+    /// leak) when the budget cannot cover the remainder.
+    pub fn alloc(&mut self, request: u64, tokens: &[i32])
+                 -> Result<AllocOutcome, KvError> {
+        if self.tables.contains_key(&request) {
+            return Err(KvError::DuplicateRequest(request));
+        }
+        let n = tokens.len();
+        if n >= self.max_seq {
+            return Err(KvError::MaxSeq { pos: n, max_seq: self.max_seq });
+        }
+        let ps = self.blocks.page_size();
+        let total_blocks = pages_for(n, ps);
+        let hashes = block_hashes(tokens, ps);
+
+        // Phase 1: longest cached prefix (stops at the first miss —
+        // chain hashes make any later match impossible anyway).
+        let mut pages: Vec<PageId> = Vec::with_capacity(total_blocks);
+        let mut shared = 0usize;
+        for &h in &hashes {
+            self.stats.prefix_lookups += 1;
+            let Some(pid) = self.cache.lookup(h) else { break };
+            match self.blocks.state(pid) {
+                PageState::Live => self.blocks.retain(pid),
+                PageState::Cached => {
+                    self.cache.reuse(pid);
+                    self.blocks.unpark(pid);
+                }
+                PageState::Free => {
+                    unreachable!("cached hash maps to a free page")
+                }
+            }
+            pages.push(pid);
+            shared += 1;
+            self.stats.prefix_hits += 1;
+        }
+        self.stats.prefix_hit_tokens += (shared * ps) as u64;
+
+        // Phase 2: fresh pages for the remainder.
+        for i in shared..total_blocks {
+            match self.grab_page() {
+                Some(pid) => {
+                    if i < hashes.len() {
+                        // Full prompt block: publish for future sharing.
+                        self.cache.insert(hashes[i], pid);
+                    }
+                    pages.push(pid);
+                }
+                None => {
+                    let needed = total_blocks - pages.len();
+                    let available =
+                        self.blocks.available(self.cache.evictable());
+                    // Roll back: shared pages return to the cache LRU,
+                    // fresh ones to the free list.
+                    for (idx, &pid) in pages.iter().enumerate() {
+                        self.release_page_ref(pid, idx < shared);
+                    }
+                    return Err(KvError::CapacityExhausted {
+                        needed,
+                        available,
+                    });
+                }
+            }
+        }
+
+        self.stats.seqs_admitted += 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.tables.insert(
+            request,
+            BlockTable::new(request, tokens.to_vec(), pages, seq, shared),
+        );
+        Ok(AllocOutcome {
+            pages: total_blocks,
+            shared_pages: shared,
+            shared_tokens: shared * ps,
+        })
+    }
+
+    /// Append one decode token: grow onto a new page at a block
+    /// boundary; fork (copy-on-write) before overwriting a shared
+    /// page; invalidate the cache entry when a sole owner diverges.
+    pub fn advance(&mut self, request: u64, token: i32)
+                   -> Result<usize, KvError> {
+        let ps = self.blocks.page_size();
+        let (pos, cur_page) = {
+            let t = self
+                .tables
+                .get(&request)
+                .ok_or(KvError::UnknownRequest(request))?;
+            (t.pos(), t.page_at(t.pos() / ps))
+        };
+        if pos + 1 >= self.max_seq {
+            return Err(KvError::MaxSeq { pos, max_seq: self.max_seq });
+        }
+        let block_idx = pos / ps;
+        match cur_page {
+            None => {
+                let pid = self.grab_page().ok_or(
+                    KvError::CapacityExhausted { needed: 1, available: 0 },
+                )?;
+                self.tables.get_mut(&request).unwrap().push_page(pid);
+            }
+            Some(pid) => {
+                if self.blocks.refs(pid) > 1 {
+                    // Shared page about to be overwritten: fork. The
+                    // device-side analogue is a page copy; here the
+                    // table's own token history is the content.
+                    let fresh = self.grab_page().ok_or(
+                        KvError::CapacityExhausted {
+                            needed: 1,
+                            available: 0,
+                        },
+                    )?;
+                    self.blocks.release(pid); // refs > 1 ⇒ stays live
+                    self.tables
+                        .get_mut(&request)
+                        .unwrap()
+                        .remap(block_idx, fresh);
+                    self.stats.cow_forks += 1;
+                } else if self.cache.contains_page(pid) {
+                    // Sole owner diverging from the published content.
+                    self.cache.invalidate(pid);
+                }
+            }
+        }
+        let t = self.tables.get_mut(&request).unwrap();
+        t.push_token(token);
+        Ok(t.pos())
+    }
+
+    /// LayerSkip rollback: lower the fill position, keep the pages.
+    pub fn rewind_to(&mut self, request: u64, new_pos: usize)
+                     -> Result<(), KvError> {
+        let t = self
+            .tables
+            .get_mut(&request)
+            .ok_or(KvError::UnknownRequest(request))?;
+        let from = t.pos();
+        if new_pos > from {
+            return Err(KvError::RewindForward { from, to: new_pos });
+        }
+        t.rewind_to(new_pos);
+        Ok(())
+    }
+
+    /// Finish a sequence: publish its full blocks, then drop refs.
+    pub fn release(&mut self, request: u64) -> Result<(), KvError> {
+        let t = self
+            .tables
+            .remove(&request)
+            .ok_or(KvError::UnknownRequest(request))?;
+        self.finish_table(t);
+        Ok(())
+    }
+
+    /// Evict the latest-admitted live sequence to relieve pressure.
+    /// Its full blocks stay cached (evictable), so a prompt resume hits
+    /// the prefix cache when pressure has eased.
+    pub fn preempt(&mut self, mode: PreemptMode) -> Option<Preempted> {
+        let victim = self.tables.values().max_by_key(|t| t.seq)?.request;
+        let t = self.tables.remove(&victim).unwrap();
+        let tokens = t.tokens().to_vec();
+        let prompt_len = t.prompt_len;
+        self.finish_table(t);
+        self.stats.preemptions += 1;
+        if mode == PreemptMode::SwapOut {
+            self.stats.swapped_out_tokens += tokens.len() as u64;
+            self.swapped.insert(victim, (tokens.clone(), prompt_len));
+        }
+        Some(Preempted { request: victim, tokens, prompt_len, mode })
+    }
+
+    /// Bring a swapped-out sequence back (the swap-in): reallocates its
+    /// pages, sharing whatever prefix blocks survived in the cache.
+    pub fn resume_swapped(&mut self, request: u64)
+                          -> Result<AllocOutcome, KvError> {
+        let (tokens, prompt_len) = self
+            .swapped
+            .remove(&request)
+            .ok_or(KvError::UnknownRequest(request))?;
+        match self.alloc(request, &tokens) {
+            Ok(out) => {
+                self.tables.get_mut(&request).unwrap().prompt_len =
+                    prompt_len;
+                Ok(out)
+            }
+            Err(e) => {
+                self.swapped.insert(request, (tokens, prompt_len));
+                Err(e)
+            }
+        }
+    }
+
+    /// The admission view for this tick: slots plus page budget.
+    pub fn capacity_view(&self, free_slots: usize, live_slots: usize)
+                         -> CapacityView {
+        CapacityView {
+            free_slots,
+            live_slots,
+            pages: Some(PageBudget {
+                page_size: self.blocks.page_size(),
+                available_pages: self
+                    .blocks
+                    .available(self.cache.evictable()),
+                reserved_growth: self.tables.len(),
+            }),
+        }
+    }
+
+    /// Note one scheduler tick spent blocked on KV capacity.
+    pub fn note_capacity_wait(&mut self) {
+        self.stats.capacity_wait_ticks += 1;
+    }
+
+    // ---- internals -------------------------------------------------
+
+    /// Free page, else evict the LRU cached prefix, else None.
+    fn grab_page(&mut self) -> Option<PageId> {
+        if let Some(pid) = self.blocks.alloc() {
+            self.stats.blocks_allocated += 1;
+            return Some(pid);
+        }
+        let victim = self.cache.evict_lru()?;
+        self.blocks.evict_cached(victim);
+        self.stats.evictions += 1;
+        let pid = self.blocks.alloc().expect("page just evicted");
+        self.stats.blocks_allocated += 1;
+        Some(pid)
+    }
+
+    /// Drop one table reference; a zero-ref page parks on the cache
+    /// LRU when `cacheable` and it has a hash entry, else frees.
+    fn release_page_ref(&mut self, pid: PageId, cacheable: bool) {
+        if self.blocks.release(pid) == 0 {
+            if cacheable && self.cache.park(pid) {
+                self.blocks.park_cached(pid);
+            } else {
+                self.cache.invalidate(pid);
+                self.blocks.free_page(pid);
+                self.stats.blocks_freed += 1;
+            }
+        }
+    }
+
+    fn finish_table(&mut self, t: BlockTable) {
+        let ps = self.blocks.page_size();
+        let (pages, tokens, _prompt_len) = t.into_parts();
+        // Publish completed full blocks (decode-filled ones included)
+        // so the next same-prefix request shares them.
+        let hashes = block_hashes(&tokens, ps);
+        for (i, &h) in hashes.iter().enumerate() {
+            if i < pages.len() {
+                self.cache.insert(h, pages[i]);
+            }
+        }
+        let full = tokens.len() / ps;
+        for (i, &pid) in pages.iter().enumerate() {
+            self.release_page_ref(pid, i < full);
+        }
+    }
+
+    /// The conservation + refcount invariants the property tests walk:
+    /// `free + live + cached == total`, every page's refcount equals
+    /// the number of block tables referencing it, and the cache LRU is
+    /// exactly the set of Cached pages.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.blocks.check_conservation()?;
+        let mut expected: HashMap<PageId, usize> = HashMap::new();
+        for t in self.tables.values() {
+            for &pid in t.pages() {
+                *expected.entry(pid).or_insert(0) += 1;
+            }
+        }
+        for pid in 0..self.blocks.total() {
+            let want = expected.get(&pid).copied().unwrap_or(0);
+            let got = self.blocks.refs(pid);
+            if want != got {
+                return Err(format!(
+                    "page {pid}: refcount {got} != {want} table refs"
+                ));
+            }
+            let state = self.blocks.state(pid);
+            if state == PageState::Live && want == 0 {
+                return Err(format!("page {pid} live but unreferenced"));
+            }
+            if state != PageState::Live && want > 0 {
+                return Err(format!(
+                    "page {pid} {state:?} but referenced by {want} tables"
+                ));
+            }
+        }
+        for &pid in self.cache.lru_pages() {
+            if self.blocks.state(pid) != PageState::Cached {
+                return Err(format!("LRU page {pid} not Cached"));
+            }
+        }
+        if self.cache.evictable() != self.blocks.cached_count() {
+            return Err(format!(
+                "cached mismatch: LRU {} vs pool {}",
+                self.cache.evictable(),
+                self.blocks.cached_count()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::prop_check;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn alloc_advance_release_roundtrip() {
+        let mut p = KvPool::new(8, 4, 64);
+        let out = p.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(out.pages, 2);
+        assert_eq!(out.shared_pages, 0);
+        assert_eq!(p.pos(1).unwrap(), 5);
+        assert_eq!(p.live_pages(), 2);
+        // advance within the partial page, then onto a new page
+        for tok in 6..=9 {
+            p.advance(1, tok).unwrap();
+        }
+        assert_eq!(p.pos(1).unwrap(), 9);
+        assert_eq!(p.table(1).unwrap().num_pages(), 3);
+        p.release(1).unwrap();
+        assert_eq!(p.live_pages(), 0);
+        // full blocks [1..4] and [5..8] stay cached, partial one freed
+        assert_eq!(p.cached_pages(), 2);
+        assert_eq!(p.free_pages(), 6);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_is_refcounted_not_copied() {
+        let mut p = KvPool::new(16, 4, 64);
+        let sys: Vec<i32> = (0..8).collect(); // two full blocks
+        let mut a = sys.clone();
+        a.extend([100, 101]);
+        let mut b = sys.clone();
+        b.extend([200]);
+        p.alloc(1, &a).unwrap();
+        let out = p.alloc(2, &b).unwrap();
+        assert_eq!(out.shared_pages, 2, "system prompt blocks shared");
+        assert_eq!(out.shared_tokens, 8);
+        // 3 pages for a (2 full + partial) + only 1 fresh for b
+        assert_eq!(p.live_pages(), 4);
+        let pa = p.table(1).unwrap().pages().to_vec();
+        let pb = p.table(2).unwrap().pages().to_vec();
+        assert_eq!(pa[..2], pb[..2], "same physical prefix pages");
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        // shared pages still live under b's reference
+        assert!(p.live_pages() >= 3);
+        p.release(2).unwrap();
+        assert_eq!(p.live_pages(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn released_prefix_rehits_from_cache() {
+        let mut p = KvPool::new(8, 4, 64);
+        p.alloc(1, &[1, 2, 3, 4, 9]).unwrap();
+        p.release(1).unwrap();
+        assert_eq!(p.cached_pages(), 1);
+        let out = p.alloc(2, &[1, 2, 3, 4, 7]).unwrap();
+        assert_eq!(out.shared_pages, 1, "cached block revived");
+        assert_eq!(p.cached_pages(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_exhausted_alloc_rolls_back() {
+        let mut p = KvPool::new(3, 4, 64);
+        p.alloc(1, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap(); // 2 pages
+        let err = p.alloc(2, &[9; 10]).unwrap_err(); // needs 3
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        assert_eq!(p.free_pages(), 1, "partial grab fully rolled back");
+        assert!(!p.has_table(2));
+        p.check_invariants().unwrap();
+        // A fitting request still goes through afterwards.
+        p.alloc(3, &[9, 9, 9]).unwrap();
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_fork_on_shared_page_overwrite() {
+        let mut p = KvPool::new(16, 4, 64);
+        let sys: Vec<i32> = (0..8).collect();
+        p.alloc(1, &sys).unwrap();
+        p.alloc(2, &sys).unwrap(); // shares both blocks
+        assert_eq!(p.live_pages(), 2);
+        // Request 2 rewinds into the shared second block and overwrites.
+        p.rewind_to(2, 6).unwrap();
+        p.advance(2, 42).unwrap();
+        assert_eq!(p.stats.cow_forks, 1);
+        assert_eq!(p.live_pages(), 3, "fork claimed a fresh page");
+        let pa = p.table(1).unwrap().pages().to_vec();
+        let pb = p.table(2).unwrap().pages().to_vec();
+        assert_eq!(pa[0], pb[0]);
+        assert_ne!(pa[1], pb[1], "diverged block remapped");
+        assert_eq!(p.pos(1).unwrap(), 8, "sharer unaffected");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_frees_oldest_cached_prefix() {
+        let mut p = KvPool::new(2, 4, 64);
+        p.alloc(1, &[1, 2, 3, 4]).unwrap();
+        p.release(1).unwrap(); // block cached
+        p.alloc(2, &[5, 6, 7, 8]).unwrap();
+        p.release(2).unwrap(); // second block cached
+        assert_eq!(p.cached_pages(), 2);
+        // A new 2-page request must evict both cached prefixes.
+        p.alloc(3, &[9, 9, 9, 9, 9]).unwrap();
+        assert_eq!(p.stats.evictions, 2);
+        assert_eq!(p.cached_pages(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempt_picks_latest_admission_and_resume_rehits() {
+        let mut p = KvPool::new(8, 4, 64);
+        p.alloc(10, &[1, 2, 3, 4]).unwrap();
+        p.alloc(11, &[5, 6, 7, 8]).unwrap();
+        let pre = p.preempt(PreemptMode::SwapOut).unwrap();
+        assert_eq!(pre.request, 11, "latest admission is the victim");
+        assert_eq!(pre.tokens, vec![5, 6, 7, 8]);
+        assert!(!p.has_table(11));
+        assert_eq!(p.stats.preemptions, 1);
+        p.check_invariants().unwrap();
+        // Swap-in reallocates; the full block survived in the cache.
+        let out = p.resume_swapped(11).unwrap();
+        assert_eq!(out.shared_pages, 1);
+        assert_eq!(p.pos(11).unwrap(), 4);
+        p.check_invariants().unwrap();
+        assert!(p.resume_swapped(99).is_err());
+    }
+
+    #[test]
+    fn advance_errors_at_max_seq_and_when_pool_is_dry() {
+        let mut p = KvPool::new(2, 4, 8);
+        p.alloc(1, &[1, 2, 3, 4, 5, 6]).unwrap();
+        p.advance(1, 7).unwrap(); // pos 7
+        let err = p.advance(1, 8).unwrap_err();
+        assert_eq!(err, KvError::MaxSeq { pos: 7, max_seq: 8 });
+        // Dry pool: a second sequence can't grow past its pages.
+        let mut p = KvPool::new(2, 2, 64);
+        p.alloc(1, &[1, 2, 3]).unwrap(); // both pages
+        p.advance(1, 4).unwrap(); // fills page 2 in place
+        let err = p.advance(1, 5).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_view_reports_budget_and_watermark() {
+        let mut p = KvPool::new(8, 4, 64);
+        p.alloc(1, &[1, 2, 3, 4, 5]).unwrap(); // 2 pages
+        let v = p.capacity_view(3, 1);
+        let b = v.pages.unwrap();
+        assert_eq!(b.available_pages, 6);
+        assert_eq!(b.reserved_growth, 1);
+        assert_eq!(v.pages_needed(8), 3, "8+1 tokens → 3 pages");
+        let d = CapacityView::dense(3, 1);
+        assert_eq!(d.pages_needed(1000), 0);
+    }
+
+    /// Satellite: random alloc/fork/advance/evict/preempt walks never
+    /// leak pages (`free + live + cached == total`), never double-free,
+    /// and keep every shared page's refcount equal to the number of
+    /// block tables referencing it.
+    #[test]
+    fn prop_pool_walk_conserves_pages_and_refcounts() {
+        prop_check(
+            120,
+            7,
+            |r: &mut Rng| {
+                let n = r.usize(1, 80);
+                (0..n).map(|_| r.usize(0, 4000)).collect::<Vec<usize>>()
+            },
+            |ops| {
+                let mut pool = KvPool::new(24, 4, 64);
+                let mut next_id = 0u64;
+                let mut live: Vec<u64> = Vec::new();
+                // Shared stems exercise the prefix cache; stem 2 is a
+                // strict prefix of stem 0 (partial chain overlap).
+                let stems: [Vec<i32>; 3] = [
+                    (0..12).collect(),
+                    (100..112).collect(),
+                    (0..8).collect(),
+                ];
+                for &x in ops {
+                    let op = x % 8;
+                    let p = x / 8;
+                    match op {
+                        0..=2 => {
+                            next_id += 1;
+                            let mut toks = stems[p % 3].clone();
+                            toks.extend(
+                                (0..p % 5)
+                                    .map(|j| 1000 + next_id as i32 + j as i32),
+                            );
+                            if pool.alloc(next_id, &toks).is_ok() {
+                                live.push(next_id);
+                            }
+                        }
+                        3 | 4 => {
+                            if !live.is_empty() {
+                                let id = live[p % live.len()];
+                                let _ = pool.advance(id, (p % 50) as i32);
+                            }
+                        }
+                        5 => {
+                            if !live.is_empty() {
+                                let id = live[p % live.len()];
+                                let pos = pool.pos(id).unwrap();
+                                let _ = pool.rewind_to(
+                                    id,
+                                    pos.saturating_sub(p % 3),
+                                );
+                            }
+                        }
+                        6 => {
+                            if !live.is_empty() {
+                                let id = live.remove(p % live.len());
+                                pool.release(id)
+                                    .map_err(|e| e.to_string())?;
+                            }
+                        }
+                        _ => {
+                            let mode = if p % 2 == 0 {
+                                PreemptMode::Recompute
+                            } else {
+                                PreemptMode::SwapOut
+                            };
+                            if let Some(pre) = pool.preempt(mode) {
+                                live.retain(|&r| r != pre.request);
+                            }
+                        }
+                    }
+                    pool.check_invariants()?;
+                }
+                for id in live.drain(..) {
+                    pool.release(id).map_err(|e| e.to_string())?;
+                }
+                pool.check_invariants()?;
+                if pool.live_pages() != 0 {
+                    return Err(format!(
+                        "live pages after drain: {}",
+                        pool.live_pages()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

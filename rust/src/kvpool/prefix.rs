@@ -1,0 +1,188 @@
+//! Hash-based prefix cache: content-addressed full blocks with an LRU
+//! over the zero-ref (evictable) ones.
+//!
+//! Each *full* block of a sequence gets a chain hash
+//! `h[i] = fnv(h[i-1], tokens in block i)`, so equal hashes imply an
+//! identical token prefix up to that block boundary. The cache maps
+//! hash → page; a hit lets a new request reference the page instead of
+//! recomputing its KV (the shared-system-prompt win the replay
+//! measures). Pages whose last table releases them are *parked* rather
+//! than freed and queue here in LRU order until capacity pressure
+//! evicts them.
+
+use std::collections::HashMap;
+
+use super::block::PageId;
+
+/// FNV-1a over a hash chain + token block (stable, dependency-free).
+pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET ^ prev.wrapping_mul(PRIME);
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Chain hashes for every full `page_size` block of `tokens`.
+pub fn block_hashes(tokens: &[i32], page_size: usize) -> Vec<u64> {
+    let full = tokens.len() / page_size.max(1);
+    let mut out = Vec::with_capacity(full);
+    let mut prev = 0u64;
+    for i in 0..full {
+        prev = chain_hash(prev, &tokens[i * page_size..(i + 1) * page_size]);
+        out.push(prev);
+    }
+    out
+}
+
+/// hash → page map plus the LRU of zero-ref cached pages.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixCache {
+    by_hash: HashMap<u64, PageId>,
+    by_page: HashMap<PageId, u64>,
+    /// Zero-ref cached pages, least-recently-used first. Scale is the
+    /// page budget, so the O(n) removals below are fine.
+    lru: Vec<PageId>,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_hash.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.by_hash.is_empty()
+    }
+    /// Pages reclaimable by LRU eviction right now.
+    pub fn evictable(&self) -> usize {
+        self.lru.len()
+    }
+
+    pub fn lookup(&self, hash: u64) -> Option<PageId> {
+        self.by_hash.get(&hash).copied()
+    }
+
+    pub fn contains_page(&self, page: PageId) -> bool {
+        self.by_page.contains_key(&page)
+    }
+
+    /// Register a page's content hash. First writer wins: an existing
+    /// entry for the hash keeps its canonical page.
+    pub fn insert(&mut self, hash: u64, page: PageId) {
+        if self.by_hash.contains_key(&hash) || self.by_page.contains_key(&page)
+        {
+            return;
+        }
+        self.by_hash.insert(hash, page);
+        self.by_page.insert(page, hash);
+    }
+
+    /// The page's last reference went away: queue it for LRU reuse.
+    /// Returns false (caller should free) when the page has no hash
+    /// entry — nothing could ever look it up again.
+    pub fn park(&mut self, page: PageId) -> bool {
+        if !self.by_page.contains_key(&page) {
+            return false;
+        }
+        debug_assert!(!self.lru.contains(&page), "page {page} parked twice");
+        self.lru.push(page);
+        true
+    }
+
+    /// A cached (zero-ref) page got a cache hit: pull it off the LRU.
+    pub fn reuse(&mut self, page: PageId) {
+        self.lru.retain(|&p| p != page);
+    }
+
+    /// Reclaim the least-recently-used cached page, dropping its hash
+    /// entry. The caller returns the page to the free list.
+    pub fn evict_lru(&mut self) -> Option<PageId> {
+        if self.lru.is_empty() {
+            return None;
+        }
+        let page = self.lru.remove(0);
+        if let Some(h) = self.by_page.remove(&page) {
+            self.by_hash.remove(&h);
+        }
+        Some(page)
+    }
+
+    /// Drop the hash entry for a page whose content is diverging
+    /// (in-place overwrite by its sole owner).
+    pub fn invalidate(&mut self, page: PageId) {
+        if let Some(h) = self.by_page.remove(&page) {
+            self.by_hash.remove(&h);
+        }
+        self.lru.retain(|&p| p != page);
+    }
+
+    /// Pages currently parked on the LRU (oldest first) — test hook.
+    pub fn lru_pages(&self) -> &[PageId] {
+        &self.lru
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_is_prefix_sensitive() {
+        let a = block_hashes(&[1, 2, 3, 4, 5, 6, 7, 8], 4);
+        let b = block_hashes(&[1, 2, 3, 4, 9, 9, 9, 9], 4);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0], b[0], "identical first block, identical hash");
+        assert_ne!(a[1], b[1], "divergent second block");
+        // Same tokens, different position in the chain → different hash.
+        let c = block_hashes(&[5, 6, 7, 8, 5, 6, 7, 8], 4);
+        assert_ne!(c[0], c[1]);
+    }
+
+    #[test]
+    fn partial_blocks_are_not_hashed() {
+        assert!(block_hashes(&[1, 2, 3], 4).is_empty());
+        assert_eq!(block_hashes(&[1, 2, 3, 4, 5], 4).len(), 1);
+    }
+
+    #[test]
+    fn insert_lookup_park_evict() {
+        let mut c = PrefixCache::new();
+        c.insert(10, 0);
+        c.insert(20, 1);
+        assert_eq!(c.lookup(10), Some(0));
+        assert_eq!(c.evictable(), 0);
+        assert!(c.park(0));
+        assert!(c.park(1));
+        assert!(!c.park(5), "unhashed page is not cacheable");
+        assert_eq!(c.evictable(), 2);
+        // Reuse pulls a page out of LRU but keeps its hash entry.
+        c.reuse(0);
+        assert_eq!(c.evictable(), 1);
+        assert_eq!(c.lookup(10), Some(0));
+        // Eviction drops the oldest remaining entry entirely.
+        assert_eq!(c.evict_lru(), Some(1));
+        assert_eq!(c.lookup(20), None);
+        assert_eq!(c.evict_lru(), None);
+    }
+
+    #[test]
+    fn first_writer_wins_and_invalidate_clears() {
+        let mut c = PrefixCache::new();
+        c.insert(10, 0);
+        c.insert(10, 1); // same hash, later page: ignored
+        assert_eq!(c.lookup(10), Some(0));
+        c.insert(30, 0); // same page, second hash: ignored
+        assert_eq!(c.lookup(30), None);
+        c.invalidate(0);
+        assert_eq!(c.lookup(10), None);
+        assert!(!c.contains_page(0));
+    }
+}

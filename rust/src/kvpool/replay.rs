@@ -1,0 +1,403 @@
+//! Deterministic workload replay: paged pool vs. dense slots under the
+//! same page budget.
+//!
+//! Drives a mixed request stream (short-chat-heavy, shared system
+//! prompt, a long-document tail) through the real admission path — the
+//! continuous [`Batcher`] over a [`PagedKvSlots`] view — one scheduler
+//! tick per batched decode step, exactly like the serving loop but
+//! without a device. The dense baseline gets the *same byte budget*
+//! expressed as worst-case slots (`pages · page_size / max_seq`); the
+//! paged run gets it as pages. The difference in sustained batch
+//! occupancy is the paper's Table-3 capacity lever, measured end to
+//! end with the pool's own telemetry counters.
+
+use std::collections::HashMap;
+
+use crate::coordinator::batcher::{Batcher, QueuedRequest};
+use crate::coordinator::kv::PagedKvSlots;
+use crate::substrate::rng::Rng;
+use crate::substrate::table::Table;
+
+use super::{KvError, KvPoolConfig, PoolStats, PreemptMode};
+
+/// The replayed request mix (defaults: short-chat-heavy with a shared
+/// system prompt — the regime where paging pays most).
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub requests: usize,
+    /// Shared system-prompt length (tokens) prefixed to every prompt.
+    pub system_prompt_len: usize,
+    /// Unique prompt-suffix length range for short chats (inclusive).
+    pub short_prompt: (usize, usize),
+    pub short_decode: (usize, usize),
+    /// Long-document tail of the mix.
+    pub long_prompt: (usize, usize),
+    pub long_decode: (usize, usize),
+    /// Percent of requests drawn from the long ranges.
+    pub long_percent: usize,
+    pub page_size: usize,
+    /// The shared capacity budget, in pages.
+    pub total_pages: usize,
+    /// Decode-graph batch for the paged run (the dense run's slot count
+    /// is derived from the page budget instead).
+    pub batch_slots: usize,
+    pub max_seq: usize,
+    pub prefill_budget: usize,
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            requests: 64,
+            system_prompt_len: 48,
+            short_prompt: (4, 24),
+            short_decode: (8, 32),
+            long_prompt: (64, 160),
+            long_decode: (32, 96),
+            long_percent: 20,
+            page_size: 16,
+            total_pages: 96,
+            batch_slots: 16,
+            max_seq: 512,
+            prefill_budget: 0,
+            seed: 7,
+        }
+    }
+}
+
+impl ReplayConfig {
+    /// Worst-case slots the dense baseline gets from the same budget.
+    pub fn dense_slots(&self) -> usize {
+        (self.total_pages * self.page_size / self.max_seq).max(1)
+    }
+}
+
+/// One replay's outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayResult {
+    pub label: &'static str,
+    pub slots: usize,
+    pub decode_ticks: u64,
+    pub completed: usize,
+    pub dropped: usize,
+    pub tokens_decoded: u64,
+    /// Mean live requests per decode tick — the Table-3 headline.
+    pub mean_occupancy: f64,
+    pub peak_occupancy: usize,
+    /// Mean live-page fraction of the budget (paged runs only).
+    pub mean_pool_utilization: f64,
+    /// Pool counters (zeros for the dense baseline).
+    pub stats: PoolStats,
+}
+
+struct Pending {
+    tokens: Vec<i32>,
+    remaining: usize,
+}
+
+/// Replay the mix through a paged pool (`paged`) or the dense slot
+/// baseline under the same byte budget.
+pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
+    let slots = if paged { cfg.batch_slots } else { cfg.dense_slots() };
+    let mut kv = if paged {
+        PagedKvSlots::paged(slots, cfg.max_seq, KvPoolConfig {
+            page_size: cfg.page_size,
+            total_pages: cfg.total_pages,
+        })
+    } else {
+        PagedKvSlots::dense(slots, cfg.max_seq)
+    };
+    let mut batcher = Batcher::new(cfg.prefill_budget);
+    let mut staging: HashMap<u64, Pending> = HashMap::new();
+    let mut remaining: HashMap<u64, usize> = HashMap::new();
+
+    // Closed-loop arrival: the full mix queues up front (the regime
+    // where admission policy, not arrival spacing, bounds occupancy).
+    let mut rng = Rng::new(cfg.seed);
+    let sys: Vec<i32> = (0..cfg.system_prompt_len)
+        .map(|i| (i % 200) as i32)
+        .collect();
+    for i in 0..cfg.requests {
+        let id = i as u64 + 1;
+        let long = rng.usize(0, 100) < cfg.long_percent;
+        let (pr, dr) = if long {
+            (cfg.long_prompt, cfg.long_decode)
+        } else {
+            (cfg.short_prompt, cfg.short_decode)
+        };
+        let extra = rng.usize(pr.0, pr.1 + 1);
+        let decode = rng.usize(dr.0, dr.1 + 1).max(1);
+        let mut tokens = sys.clone();
+        tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
+        batcher.push(QueuedRequest {
+            id,
+            prompt_len: tokens.len(),
+            max_new_tokens: decode,
+        });
+        staging.insert(id, Pending { tokens, remaining: decode });
+    }
+
+    let mut decode_ticks = 0u64;
+    let mut occupancy_sum = 0u64;
+    let mut peak = 0usize;
+    let mut completed = 0usize;
+    let mut dropped = 0usize;
+    let mut tokens_decoded = 0u64;
+    let mut util_sum = 0.0f64;
+    let mut stalled = 0usize;
+
+    while (batcher.pending() > 0 || kv.live_count() > 0)
+        && decode_ticks < 1_000_000
+    {
+        // ---- admission -------------------------------------------------
+        let view = kv.capacity_view();
+        let adm = batcher.tick(&view);
+        if adm.blocked_on_capacity {
+            kv.note_capacity_wait();
+        }
+        if adm.admit.is_empty() && kv.live_count() == 0 {
+            // Nothing live and nothing admissible: a request larger
+            // than the whole budget would stall forever — drop it.
+            stalled += 1;
+            if stalled > 2 {
+                if let Some(q) = batcher.pop_front() {
+                    staging.remove(&q.id);
+                    dropped += 1;
+                }
+                stalled = 0;
+            }
+            continue;
+        }
+        stalled = 0;
+        for q in adm.admit {
+            let Some(p) = staging.remove(&q.id) else { continue };
+            match kv.alloc(q.id, &p.tokens) {
+                Ok(_) => {
+                    remaining.insert(q.id, p.remaining);
+                }
+                Err(KvError::CapacityExhausted { .. }) => {
+                    // Growth raced the view; retry next tick.
+                    batcher.push_front(QueuedRequest {
+                        id: q.id,
+                        prompt_len: p.tokens.len(),
+                        max_new_tokens: p.remaining,
+                    });
+                    staging.insert(q.id, p);
+                }
+                Err(_) => {
+                    dropped += 1;
+                }
+            }
+        }
+
+        // ---- one batched decode step ----------------------------------
+        if kv.live_count() == 0 {
+            continue;
+        }
+        decode_ticks += 1;
+        let live = kv.live_slots();
+        occupancy_sum += live.len() as u64;
+        peak = peak.max(live.len());
+        if let Some(pool) = kv.pool() {
+            util_sum +=
+                pool.live_pages() as f64 / pool.total_pages() as f64;
+        }
+        for (slot, req, pos) in live {
+            // A preemption earlier in this step may have freed the slot.
+            if kv.slot_of(req) != Some(slot) {
+                continue;
+            }
+            let rem = {
+                let r = remaining.get_mut(&req).expect("live job");
+                *r -= 1;
+                *r
+            };
+            tokens_decoded += 1;
+            if rem == 0 {
+                kv.release(slot).expect("live slot");
+                remaining.remove(&req);
+                completed += 1;
+                continue;
+            }
+            let tok = 900 + (pos as i32 % 50);
+            match kv.advance(slot, tok) {
+                Ok(_) => {}
+                Err(KvError::MaxSeq { .. }) => {
+                    // Sequence cap: finish early, like the server loop.
+                    kv.release(slot).expect("live slot");
+                    remaining.remove(&req);
+                    completed += 1;
+                }
+                Err(KvError::CapacityExhausted { .. }) => {
+                    // Decode outgrew the pool: preempt (latest-admitted
+                    // first) until the advance fits or we evicted
+                    // ourselves.
+                    loop {
+                        let Some((_vslot, pre)) =
+                            kv.preempt(PreemptMode::Recompute)
+                        else {
+                            break;
+                        };
+                        let rem_v =
+                            remaining.remove(&pre.request).unwrap_or(0);
+                        batcher.push_front(QueuedRequest {
+                            id: pre.request,
+                            prompt_len: pre.tokens.len(),
+                            max_new_tokens: rem_v,
+                        });
+                        staging.insert(pre.request, Pending {
+                            tokens: pre.tokens,
+                            remaining: rem_v,
+                        });
+                        if pre.request == req {
+                            break; // we evicted ourselves; resume later
+                        }
+                        match kv.advance(slot, tok) {
+                            Ok(_) => break,
+                            Err(KvError::CapacityExhausted { .. }) => {}
+                            Err(_) => {
+                                kv.release(slot).expect("live slot");
+                                remaining.remove(&req);
+                                completed += 1;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    kv.release(slot).expect("live slot");
+                    remaining.remove(&req);
+                    completed += 1;
+                }
+            }
+        }
+    }
+
+    if let Some(pool) = kv.pool() {
+        pool.check_invariants().expect("pool invariants after replay");
+    }
+    let stats = kv.stats().cloned().unwrap_or_default();
+    ReplayResult {
+        label: if paged { "paged" } else { "dense" },
+        slots,
+        decode_ticks,
+        completed,
+        dropped,
+        tokens_decoded,
+        mean_occupancy: if decode_ticks == 0 {
+            0.0
+        } else {
+            occupancy_sum as f64 / decode_ticks as f64
+        },
+        peak_occupancy: peak,
+        mean_pool_utilization: if decode_ticks == 0 {
+            0.0
+        } else {
+            util_sum / decode_ticks as f64
+        },
+        stats,
+    }
+}
+
+/// Side-by-side table for `mmserve kv`.
+pub fn render_comparison(paged: &ReplayResult, dense: &ReplayResult)
+                         -> String {
+    let mut t = Table::new(&["metric", "paged", "dense (same budget)"]);
+    let f2 = |x: f64| format!("{x:.2}");
+    t.row(&["slots".into(), paged.slots.to_string(),
+            dense.slots.to_string()]);
+    t.row(&["mean batch occupancy".into(), f2(paged.mean_occupancy),
+            f2(dense.mean_occupancy)]);
+    t.row(&["peak batch occupancy".into(),
+            paged.peak_occupancy.to_string(),
+            dense.peak_occupancy.to_string()]);
+    t.row(&["decode ticks".into(), paged.decode_ticks.to_string(),
+            dense.decode_ticks.to_string()]);
+    t.row(&["requests completed".into(), paged.completed.to_string(),
+            dense.completed.to_string()]);
+    t.row(&["tokens decoded".into(), paged.tokens_decoded.to_string(),
+            dense.tokens_decoded.to_string()]);
+    t.row(&["mean pool utilization".into(),
+            format!("{:.1}%", paged.mean_pool_utilization * 100.0),
+            "-".into()]);
+    t.row(&["prefix hit rate".into(),
+            format!("{:.1}%", paged.stats.hit_rate() * 100.0),
+            "-".into()]);
+    t.row(&["preemptions".into(), paged.stats.preemptions.to_string(),
+            "0".into()]);
+    t.row(&["LRU evictions".into(), paged.stats.evictions.to_string(),
+            "0".into()]);
+    t.row(&["capacity-wait ticks".into(),
+            paged.stats.capacity_wait_ticks.to_string(),
+            "0".into()]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance criterion: the short-chat-heavy mix with a shared
+    /// system prompt sustains strictly higher mean batch occupancy
+    /// under paged allocation than dense slots get from the same page
+    /// budget, with a nonzero prefix hit rate.
+    #[test]
+    fn paged_beats_dense_on_shared_prefix_chat_mix() {
+        let cfg = ReplayConfig::default();
+        let paged = replay(&cfg, true);
+        let dense = replay(&cfg, false);
+        assert_eq!(paged.completed, cfg.requests, "paged completes all");
+        assert_eq!(dense.completed, cfg.requests, "dense completes all");
+        assert_eq!(paged.dropped + dense.dropped, 0);
+        assert!(
+            paged.mean_occupancy > dense.mean_occupancy,
+            "paged {:.2} must beat dense {:.2}",
+            paged.mean_occupancy,
+            dense.mean_occupancy
+        );
+        assert!(paged.stats.hit_rate() > 0.0, "system prompt must share");
+        assert!(paged.stats.prefix_hit_tokens > 0);
+        // Paged finishes the same work in fewer scheduler ticks.
+        assert!(paged.decode_ticks < dense.decode_ticks);
+    }
+
+    #[test]
+    fn tight_budget_exercises_preemption_and_still_completes() {
+        let cfg = ReplayConfig {
+            total_pages: 40,
+            batch_slots: 12,
+            ..ReplayConfig::default()
+        };
+        let r = replay(&cfg, true);
+        assert_eq!(r.completed, cfg.requests, "no request lost: {r:?}");
+        assert_eq!(r.dropped, 0);
+        assert!(
+            r.stats.preemptions > 0 || r.stats.evictions > 0,
+            "a 40-page budget must create pressure: {:?}",
+            r.stats
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let cfg = ReplayConfig::default();
+        let a = replay(&cfg, true);
+        let b = replay(&cfg, true);
+        assert_eq!(a.mean_occupancy, b.mean_occupancy);
+        assert_eq!(a.decode_ticks, b.decode_ticks);
+        assert_eq!(a.stats.prefix_hits, b.stats.prefix_hits);
+        assert_eq!(a.stats.preemptions, b.stats.preemptions);
+    }
+
+    #[test]
+    fn comparison_table_renders_counters() {
+        let cfg = ReplayConfig { requests: 8, ..ReplayConfig::default() };
+        let p = replay(&cfg, true);
+        let d = replay(&cfg, false);
+        let s = render_comparison(&p, &d);
+        assert!(s.contains("mean batch occupancy"));
+        assert!(s.contains("prefix hit rate"));
+        assert!(s.contains("preemptions"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Per-request block table: token positions → pages, plus the token
+//! history that makes full blocks content-addressable.
+//!
+//! The table is the request's logical sequence view: `pos` tokens are
+//! filled, covered by `pages` (page `i` holds positions
+//! `[i·ps, (i+1)·ps)`). Rewind (LayerSkip rollback, §4.3) lowers `pos`
+//! without dropping pages — the stale tail is overwritten by later
+//! writes, exactly like the dense slot view; the pool's copy-on-write
+//! check in `advance` keeps shared pages safe from those overwrites.
+
+use super::block::PageId;
+
+#[derive(Debug, Clone)]
+pub struct BlockTable {
+    pub request: u64,
+    /// Page per block, in position order.
+    pages: Vec<PageId>,
+    /// Full token history up to `pos` (prompt + decoded).
+    tokens: Vec<i32>,
+    /// Prompt length at allocation (for preemption/recompute).
+    pub prompt_len: usize,
+    /// Admission sequence number (monotonic; preemption victims are
+    /// chosen latest-first, vLLM-style).
+    pub seq: u64,
+    /// Leading pages that came from the prefix cache (shared).
+    pub shared_prefix_pages: usize,
+}
+
+impl BlockTable {
+    pub fn new(request: u64, tokens: Vec<i32>, pages: Vec<PageId>,
+               seq: u64, shared_prefix_pages: usize) -> Self {
+        BlockTable {
+            request,
+            prompt_len: tokens.len(),
+            tokens,
+            pages,
+            seq,
+            shared_prefix_pages,
+        }
+    }
+
+    /// Filled token count (== next write position).
+    pub fn pos(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Page backing block `idx`, if mapped.
+    pub fn page_at(&self, idx: usize) -> Option<PageId> {
+        self.pages.get(idx).copied()
+    }
+
+    /// Map block `idx` to a new page (copy-on-write fork).
+    pub fn remap(&mut self, idx: usize, page: PageId) {
+        self.pages[idx] = page;
+        if idx < self.shared_prefix_pages {
+            self.shared_prefix_pages = idx;
+        }
+    }
+
+    pub fn push_page(&mut self, page: PageId) {
+        self.pages.push(page);
+    }
+
+    /// Record one appended token (the pool has already ensured a
+    /// writable page backs the position).
+    pub fn push_token(&mut self, token: i32) {
+        self.tokens.push(token);
+    }
+
+    /// Rewind the fill position; pages are kept (overwrite semantics).
+    pub fn rewind_to(&mut self, new_pos: usize) {
+        debug_assert!(new_pos <= self.tokens.len());
+        self.tokens.truncate(new_pos);
+    }
+
+    /// Take the pages out (release/preempt teardown).
+    pub fn into_parts(self) -> (Vec<PageId>, Vec<i32>, usize) {
+        (self.pages, self.tokens, self.prompt_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pos_tracks_tokens_and_rewind_truncates() {
+        let mut t = BlockTable::new(7, vec![1, 2, 3], vec![0], 0, 0);
+        assert_eq!(t.pos(), 3);
+        assert_eq!(t.prompt_len, 3);
+        t.push_token(4);
+        assert_eq!(t.pos(), 4);
+        assert_eq!(t.tokens(), &[1, 2, 3, 4]);
+        t.rewind_to(2);
+        assert_eq!(t.pos(), 2);
+        assert_eq!(t.tokens(), &[1, 2]);
+        assert_eq!(t.num_pages(), 1, "rewind keeps pages");
+    }
+
+    #[test]
+    fn remap_clears_shared_marker() {
+        let mut t = BlockTable::new(1, vec![0; 32], vec![4, 5], 0, 2);
+        t.remap(1, 9);
+        assert_eq!(t.page_at(1), Some(9));
+        assert_eq!(t.shared_prefix_pages, 1);
+        t.remap(0, 8);
+        assert_eq!(t.shared_prefix_pages, 0);
+    }
+}

@@ -22,10 +22,19 @@
 //! histograms. `mmserve trace` drives it end to end; tracing is off by
 //! default and costs nothing on the serving path when disabled.
 //!
+//! [`kvpool`] is the capacity layer under the coordinator: a paged
+//! KV-cache pool (ref-counted blocks, hash-based prefix sharing with
+//! copy-on-write, LRU eviction, preemption) that the batcher admits
+//! against and the decode loops advance through — the Table-3
+//! capacity bound managed at page granularity instead of worst-case
+//! slots. `mmserve kv` replays a workload through it and prints the
+//! paged-vs-dense occupancy comparison.
+//!
 //! Python never runs on the request path: `artifacts/` are compiled once
 //! by `make artifacts`; this crate loads them via PJRT (`runtime`).
 
 pub mod coordinator;
+pub mod kvpool;
 pub mod models;
 pub mod perfmodel;
 pub mod runtime;

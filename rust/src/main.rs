@@ -15,6 +15,11 @@
 //!                    JSON and print the measured breakdown with
 //!                    idle-gap attribution next to the perfmodel
 //!                    projection.
+//! * `kv`           — replay a mixed workload through the paged KV
+//!                    pool vs. the dense slot baseline (same page
+//!                    budget) and print occupancy, prefix hit rate,
+//!                    eviction/preemption counters, and the Table-3
+//!                    paged-vs-dense achievable-batch projection.
 
 use anyhow::{bail, Result};
 
@@ -23,6 +28,8 @@ use mmserve::coordinator::opts::{AttnImpl, ExecMode, OptConfig, QuantMode};
 use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::kvpool::replay::{render_comparison, replay, ReplayConfig};
+use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
 use mmserve::perfmodel::device::DeviceSpec;
@@ -68,6 +75,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
         name: "trace",
         summary: "trace a request mix; export Chrome trace + breakdown",
         run: cmd_trace,
+    },
+    Subcommand {
+        name: "kv",
+        summary: "replay a workload through the paged KV pool vs dense",
+        run: cmd_kv,
     },
 ];
 
@@ -221,6 +233,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             reorder: ReorderMode::Fused,
             batch: a.get_usize("batch", 4),
             prefill_budget: 0,
+            kv: KvPoolConfig::default(),
             tracer: None,
         },
     );
@@ -354,6 +367,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             reorder: ReorderMode::Fused,
             batch: a.get_usize("batch", 4),
             prefill_budget: 0,
+            kv: KvPoolConfig::default(),
             tracer: Some(tracer.clone()),
         },
     );
@@ -396,5 +410,83 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     println!("== device-model projection (paper scale, baseline) ==");
     println!("{}", render(&standard_breakdown_rows(dev,
                                                    &Levers::baseline())));
+    Ok(())
+}
+
+fn cmd_kv(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "kv",
+        "replay a mixed workload through the paged KV pool vs dense",
+    )
+    .opt("requests", "number of replayed requests", Some("64"))
+    .opt("pages", "total page budget shared by both runs", Some("96"))
+    .opt("page-size", "tokens per KV page", Some("16"))
+    .opt("slots", "decode-graph batch for the paged run", Some("16"))
+    .opt("max-seq", "sequence capacity (dense slots pin this)",
+         Some("512"))
+    .opt("system-prompt", "shared system-prompt length (tokens)",
+         Some("48"))
+    .opt("long-percent", "percent of long-document requests", Some("20"))
+    .opt("prefill-budget", "prefill token budget per tick (0 = off)",
+         Some("0"))
+    .opt("seed", "workload seed", Some("7"))
+    .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
+    .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let cfg = ReplayConfig {
+        requests: a.get_usize("requests", 64),
+        system_prompt_len: a.get_usize("system-prompt", 48),
+        long_percent: a.get_usize("long-percent", 20),
+        page_size: a.get_usize("page-size", 16).max(1),
+        total_pages: a.get_usize("pages", 96).max(1),
+        batch_slots: a.get_usize("slots", 16).max(1),
+        max_seq: a.get_usize("max-seq", 512),
+        prefill_budget: a.get_usize("prefill-budget", 0),
+        seed: a.get_usize("seed", 7) as u64,
+        ..ReplayConfig::default()
+    };
+    println!(
+        "== kvpool replay: {} requests, {}% long, {} shared system-prompt \
+         tokens ==",
+        cfg.requests, cfg.long_percent, cfg.system_prompt_len
+    );
+    println!(
+        "budget: {} pages × {} tokens = {} KV token slots \
+         (dense equivalent: {} full-length slots)\n",
+        cfg.total_pages,
+        cfg.page_size,
+        cfg.total_pages * cfg.page_size,
+        cfg.dense_slots()
+    );
+    let paged = replay(&cfg, true);
+    let dense = replay(&cfg, false);
+    println!("{}", render_comparison(&paged, &dense));
+    println!("\n== paged pool counters (telemetry) ==");
+    println!("{}", paged.stats.render());
+
+    let dev: &DeviceSpec = DeviceSpec::by_name(&a.get_or("device", "A100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    println!(
+        "\n== Table-3 projection on {}: achievable batch, dense vs \
+         paged (page {} tokens) ==",
+        dev.name, cfg.page_size
+    );
+    let mut t = mmserve::substrate::table::Table::new(
+        &["task", "dense batch", "paged batch"],
+    );
+    for row in mmserve::workload::batchcfg::paged_vs_dense_rows(
+        dev, cfg.page_size,
+    ) {
+        t.row(&[
+            format!("{}", row.task),
+            row.dense.to_string(),
+            row.paged.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }

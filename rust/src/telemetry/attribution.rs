@@ -14,14 +14,19 @@ use crate::substrate::table::Table;
 
 use super::tracer::{union_len, Cat, Trace};
 
-/// Gap-classification buckets. `Sync` covers both transfer directions.
-pub const GAP_CATEGORIES: [&str; 6] = [
-    "Scheduling", "Sampling", "Tokenization", "Sync", "Compile", "Other",
+/// Gap-classification buckets. `Sync` covers both transfer directions;
+/// `KvCapacity` is admission time blocked on the paged KV pool (free
+/// slots existed but no pages — the capacity wait the kvpool subsystem
+/// turns into batch occupancy).
+pub const GAP_CATEGORIES: [&str; 7] = [
+    "Scheduling", "KvCapacity", "Sampling", "Tokenization", "Sync",
+    "Compile", "Other",
 ];
 
 fn gap_label(cat: Cat) -> Option<&'static str> {
     match cat {
         Cat::Schedule => Some("Scheduling"),
+        Cat::KvWait => Some("KvCapacity"),
         Cat::Sample => Some("Sampling"),
         Cat::Tokenize => Some("Tokenization"),
         Cat::Upload | Cat::Download => Some("Sync"),
@@ -234,6 +239,23 @@ mod tests {
         let s = a.render();
         assert!(s.contains("Scheduling"));
         assert!(s.contains("Sync"));
+    }
+
+    #[test]
+    fn kv_capacity_wait_gets_its_own_bucket() {
+        // execute [0,1] … blocked admission [1,1.6] … execute [2,3]
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::KvWait, 1.0, 1.6),
+            sp(Cat::Schedule, 1.6, 1.8),
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        assert!((a.gaps.get("KvCapacity") - 0.6).abs() < 1e-9);
+        assert!((a.gaps.get("Scheduling") - 0.2).abs() < 1e-9);
+        assert!((a.gaps.get("Other") - 0.2).abs() < 1e-9);
+        let s = a.render();
+        assert!(s.contains("KvCapacity"));
     }
 
     #[test]

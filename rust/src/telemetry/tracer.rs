@@ -31,6 +31,11 @@ pub enum Cat {
     Download,
     /// Batcher admission / slot bookkeeping.
     Schedule,
+    /// Admission blocked on KV-cache capacity (free slots exist but the
+    /// page budget cannot cover the next prompt) — the paged-pool
+    /// analogue of queueing delay, split out so the idle attribution
+    /// can separate "scheduler busy" from "waiting for pages".
+    KvWait,
     /// Text/image/speech (de)tokenization and featurization.
     Tokenize,
     /// Host-side sampling / beam bookkeeping.
@@ -51,6 +56,7 @@ impl Cat {
             Cat::Upload => "Upload",
             Cat::Download => "Download",
             Cat::Schedule => "Schedule",
+            Cat::KvWait => "KvWait",
             Cat::Tokenize => "Tokenize",
             Cat::Sample => "Sample",
             Cat::Prefill => "Prefill",

@@ -1,6 +1,9 @@
 //! Table 3: maximum batch size per task that fits a single A100's 80 GB
-//! HBM — solved from weights + per-sample KV/activation footprints.
+//! HBM — solved from weights + per-sample KV/activation footprints,
+//! under dense worst-case allocation and under paged allocation (pages
+//! sized to the lengths the workload actually reaches).
 
+use crate::kvpool::pages_for;
 use crate::models::TaskKind;
 use crate::perfmodel::configs::{PaperDecoder, PaperHstu, PaperSeamless,
                                 CHAMELEON_34B, HSTU_14L, LLAMA_34B,
@@ -73,6 +76,80 @@ pub fn max_batch(task: TaskKind, dev: &DeviceSpec) -> usize {
     (free / per_sample_bytes(task)).floor() as usize
 }
 
+/// Per-sample footprint under *paged* KV allocation: pages cover the
+/// context a sample actually reaches (Table-2 average input + decode
+/// steps, rounded up to page granularity) instead of the task's
+/// worst-case `max` — the dense reservation the kvpool subsystem
+/// eliminates. Non-KV activation terms are unchanged.
+pub fn per_sample_bytes_paged(task: TaskKind, page_size: usize) -> f64 {
+    let w = spec_for(task);
+    let page = |tokens: f64| -> f64 {
+        (pages_for(tokens.ceil() as usize, page_size) * page_size) as f64
+    };
+    // Page-granularity rounding can only waste up to one page; a paged
+    // sample never costs more than the dense worst-case reservation.
+    let paged = match task {
+        TaskKind::TextToText => {
+            let ctx = page(w.input.avg + w.decode_steps);
+            ctx * LLAMA_34B.kv_bytes_per_token()
+                + 8.0 * ctx * LLAMA_34B.d_model as f64 * 2.0
+        }
+        TaskKind::ImageToText | TaskKind::ImageTextToText => {
+            let ctx = page(w.input.avg + w.decode_steps);
+            ctx * CHAMELEON_34B.kv_bytes_per_token()
+                + 8.0 * ctx * CHAMELEON_34B.d_model as f64 * 2.0
+        }
+        TaskKind::TextToImage => {
+            let ctx = page(w.input.avg + w.decode_steps);
+            2.0 * ctx * CHAMELEON_34B.kv_bytes_per_token()
+                + 8.0 * ctx * CHAMELEON_34B.d_model as f64 * 2.0
+        }
+        // Seamless beams and HSTU activations are not KV-slot bound;
+        // paging gives them nothing beyond the dense solve.
+        _ => per_sample_bytes(task),
+    };
+    paged.min(per_sample_bytes(task))
+}
+
+/// Table 3 under paged allocation (same reserve policy as
+/// [`max_batch`]).
+pub fn max_batch_paged(task: TaskKind, dev: &DeviceSpec,
+                       page_size: usize) -> usize {
+    let reserve = 0.10 * dev.hbm_capacity;
+    let free = dev.hbm_capacity - reserve - weight_bytes(task);
+    if free <= 0.0 {
+        return 0;
+    }
+    (free / per_sample_bytes_paged(task, page_size)).floor() as usize
+}
+
+/// One Table-3 comparison row: achievable batch dense vs. paged.
+#[derive(Debug, Clone)]
+pub struct PagedBatchRow {
+    pub task: TaskKind,
+    pub dense: usize,
+    pub paged: usize,
+}
+
+/// The paged-vs-dense Table-3 rows for the decoder tasks (the ones KV
+/// capacity bounds), in `TaskKind::all()` order.
+pub fn paged_vs_dense_rows(dev: &DeviceSpec, page_size: usize)
+                           -> Vec<PagedBatchRow> {
+    [
+        TaskKind::TextToText,
+        TaskKind::ImageToText,
+        TaskKind::ImageTextToText,
+        TaskKind::TextToImage,
+    ]
+    .into_iter()
+    .map(|task| PagedBatchRow {
+        task,
+        dense: max_batch(task, dev),
+        paged: max_batch_paged(task, dev, page_size),
+    })
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +175,36 @@ mod tests {
         for t in TaskKind::all() {
             assert!(max_batch(t, &A100) >= 1, "{t}");
         }
+    }
+
+    /// Paged allocation sizes KV for reached context, not worst case —
+    /// every decoder task's achievable batch must grow, and by the
+    /// most for the long-max/short-avg tasks (T-T's 10k output cap).
+    #[test]
+    fn paged_batch_dominates_dense() {
+        for row in paged_vs_dense_rows(&A100, 16) {
+            assert!(
+                row.paged >= row.dense,
+                "{:?}: paged {} < dense {}",
+                row.task, row.paged, row.dense
+            );
+        }
+        let tt = max_batch(TaskKind::TextToText, &A100);
+        let tt_paged = max_batch_paged(TaskKind::TextToText, &A100, 16);
+        assert!(
+            tt_paged >= 4 * tt.max(1),
+            "T-T paged {tt_paged} should be ≫ dense {tt}"
+        );
+    }
+
+    #[test]
+    fn paged_footprint_rounds_to_page_multiples() {
+        let a = per_sample_bytes_paged(TaskKind::ImageToText, 16);
+        let b = per_sample_bytes_paged(TaskKind::ImageToText, 1);
+        // Coarser pages can only round up.
+        assert!(a >= b);
+        // Non-KV-bound tasks are unchanged by paging.
+        let h = per_sample_bytes_paged(TaskKind::HistoryToAction, 16);
+        assert_eq!(h, per_sample_bytes(TaskKind::HistoryToAction));
     }
 }

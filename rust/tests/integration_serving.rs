@@ -10,6 +10,7 @@ use mmserve::coordinator::request::{Request, RequestInput, ResponseOutput,
 use mmserve::coordinator::seamless_pipe::{ReorderMode, SeamlessPipeline,
                                           SeamlessTask};
 use mmserve::coordinator::server::{Router, RouterConfig};
+use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::tokenizer::{IMG_BASE, IMG_TOKENS};
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::runtime::engine::Engine;
@@ -33,6 +34,7 @@ fn batched_router_serves_text_requests() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: None,
     });
     let mut rxs = vec![];
@@ -74,6 +76,7 @@ fn batched_results_match_single_stream() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: None,
     });
     let rxs: Vec<_> = prompts
@@ -186,6 +189,7 @@ fn hstu_router_returns_actions() {
         reorder: ReorderMode::Fused,
         batch: 1,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: None,
     });
     let history: Vec<i32> = (0..150).map(|i| (i * 13) % 6000).collect();

@@ -9,6 +9,7 @@ use mmserve::coordinator::opts::OptConfig;
 use mmserve::coordinator::request::{Request, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{Router, RouterConfig};
+use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::runtime::engine::Engine;
 use mmserve::substrate::json::Json;
@@ -92,6 +93,7 @@ fn traced_router_run_exports_chrome_json() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
     });
     let mut rxs = vec![];
@@ -155,6 +157,7 @@ fn disabled_tracer_records_zero_spans_end_to_end() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
     });
     let rx = router
