@@ -41,6 +41,7 @@ fn main() {
             reorder: ReorderMode::Fused,
             batch,
             prefill_budget: 0,
+            chunk_prefill: 0,
             kv: KvPoolConfig::default(),
             tracer: None,
         });
@@ -77,6 +78,59 @@ fn main() {
         let _ = ExecMode::Graph;
     }
 
+    // ---- Chunked vs whole-prefill under a long-prompt mix --------------
+    // Mean TBT (tpot) should improve with chunking — long admissions no
+    // longer stack a whole prompt's prefill into one decode tick — while
+    // p99 TTFT may regress by at most the chunk count's one-tick bound.
+    println!("\n  chunked vs whole prefill (long-prompt mix):");
+    let long_prompt =
+        "characterize and accelerate multimodal generation inference "
+            .repeat(12);
+    for (label, chunk) in
+        [("whole-prompt admission", 0usize), ("chunk-prefill 32", 32)]
+    {
+        let router = Router::start(&dir, RouterConfig {
+            models: vec![ModelKind::Llama],
+            opt: OptConfig::baseline(),
+            reorder: ReorderMode::Fused,
+            batch: 4,
+            prefill_budget: 0,
+            chunk_prefill: chunk,
+            kv: KvPoolConfig::default(),
+            tracer: None,
+        });
+        let _ = router.call(Request::text(router.fresh_id(),
+                                          TaskKind::TextToText, "warm", 2));
+        let t0 = Instant::now();
+        let mut rxs = vec![];
+        for i in 0..n_req {
+            let text = if i % 2 == 0 {
+                long_prompt.as_str()
+            } else {
+                "short chat turn"
+            };
+            let mut req = Request::text(router.fresh_id(),
+                                        TaskKind::TextToText, text,
+                                        max_new);
+            req.sampling = SamplingParams::greedy();
+            rxs.push(router.submit(req).expect("submit"));
+        }
+        let responses: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
+        let stats = collect_stats(&responses, t0.elapsed().as_secs_f64());
+        println!(
+            "  {:<44} mean-tbt {:>7.2} ms  p99-ttft {:>8.2} ms  p50-e2e \
+             {:>8.2} ms",
+            label,
+            stats.tpot.mean(),
+            stats.ttft.percentile(99.0),
+            stats.e2e.percentile(50.0)
+        );
+        router.shutdown();
+    }
+
     // ---- Multimodal mixed batch ---------------------------------------
     println!("\n  mixed multimodal batch (all four models):");
     let router = Router::start(&dir, RouterConfig {
@@ -86,6 +140,7 @@ fn main() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
     });

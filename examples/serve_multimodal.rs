@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
     });

@@ -77,6 +77,23 @@ impl Batcher {
         self.queue.push_front(r);
     }
 
+    /// Requeue a group at the head preserving `rs` order: `rs[0]` ends
+    /// up at the front. Calling `push_front` per item in processing
+    /// order *reverses* the group — exactly the bug that let a later
+    /// admission jump ahead of a requeued preemption victim (and, with
+    /// a token budget, let the oversize-alone rule fire for the wrong
+    /// request). Always requeue batches through this.
+    pub fn requeue_all(&mut self, rs: Vec<QueuedRequest>) {
+        for r in rs.into_iter().rev() {
+            self.queue.push_front(r);
+        }
+    }
+
+    /// Head of the queue (the chunked planner peeks before popping).
+    pub fn front(&self) -> Option<&QueuedRequest> {
+        self.queue.front()
+    }
+
     /// Remove the head request (used to shed work that can never fit).
     pub fn pop_front(&mut self) -> Option<QueuedRequest> {
         self.queue.pop_front()
@@ -274,6 +291,55 @@ mod tests {
         let adm = b.tick(&cap);
         assert_eq!(adm.admit.len(), 2);
         assert!(adm.blocked_on_capacity);
+    }
+
+    /// Regression (satellite): requeueing a *group* of requests with
+    /// per-item `push_front` in processing order reverses them, so a
+    /// preemption victim admitted earlier could end up behind one
+    /// admitted later. `requeue_all` must preserve FCFS order.
+    #[test]
+    fn requeue_all_preserves_fcfs_order() {
+        let mut b = Batcher::new(0);
+        b.push(rq(5, 4));
+        // Requests 1 and 2 failed admission this tick, in FCFS order.
+        b.requeue_all(vec![rq(1, 4), rq(2, 4)]);
+        let adm = b.tick(&CapacityView::dense(3, 0));
+        assert_eq!(
+            adm.admit.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2, 5],
+            "requeued group keeps its internal order ahead of the queue"
+        );
+
+        // The buggy pattern for contrast: per-item push_front reverses.
+        let mut b = Batcher::new(0);
+        b.push_front(rq(1, 4));
+        b.push_front(rq(2, 4));
+        let adm = b.tick(&CapacityView::dense(2, 0));
+        assert_eq!(adm.admit[0].id, 2, "push_front-per-item reverses");
+    }
+
+    /// Regression (satellite): a requeued preemption victim whose
+    /// recompute prefix exceeds the whole per-tick token budget must
+    /// keep its front-of-queue priority — admitted alone via the
+    /// oversize exception on the next untouched tick, never starved
+    /// behind (or bypassed by) smaller fresh requests.
+    #[test]
+    fn requeued_oversize_victim_keeps_front_priority() {
+        let mut b = Batcher::new(50);
+        b.push(rq(1, 10)); // fresh small request already queued
+        // Victim 9 was preempted mid-decode; its prompt+generated
+        // recompute prefix (120) exceeds the 50-token budget.
+        b.requeue_all(vec![rq(9, 120)]);
+        let adm = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(
+            adm.admit.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![9],
+            "oversize victim admitted alone, ahead of the fresh request"
+        );
+        let adm2 = b.tick(&CapacityView::dense(4, 0));
+        assert_eq!(adm2.admit.len(), 1);
+        assert_eq!(adm2.admit[0].id, 1);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

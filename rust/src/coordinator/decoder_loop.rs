@@ -15,6 +15,7 @@ use crate::kvpool::{pages_for, KvPool, DEFAULT_PAGE_SIZE};
 use crate::models::tokenizer::{self, TextTokenizer};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
+use crate::sched::{ExecDims, SlotFeed, StepExecutor};
 use crate::substrate::rng::Rng;
 use crate::telemetry::tracer::Cat;
 
@@ -170,7 +171,10 @@ impl<'e> DecoderSession<'e> {
         self.engine.download(&logits_buf)?.as_f32()
     }
 
-    /// Full greedy/sampled generation (graph mode, bs=1).
+    /// Full greedy/sampled generation (bs=1): dispatch to the right
+    /// [`StepExecutor`] and run the shared `sched` decode driver. The
+    /// loop that used to live here is now written once in
+    /// [`crate::sched::exec::generate`].
     pub fn generate(&self, prompt: &[i32], max_new: usize,
                     sp: &SamplingParams) -> Result<GenResult> {
         if self.opt.exec == ExecMode::Eager {
@@ -181,49 +185,9 @@ impl<'e> DecoderSession<'e> {
             return super::layerskip::generate_layerskip(
                 self.engine, &self.dims, prompt, max_new, sp);
         }
-        let t0 = Instant::now();
-        let tele = self.engine.tracer();
-        let _tick_scope = tele.map(|t| t.tick_scope());
-        let mut rng = Rng::new(sp.seed);
-        let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
-        let (mut logits, mut kv) = self.prefill(prompt)?;
-        drop(prefill_span);
-        let ttft = t0.elapsed().as_secs_f64();
-        // Position bookkeeping runs through a single-sequence block
-        // table, so the bs=1 path exercises the same allocator the
-        // batched scheduler admits against.
-        let mut pool = KvPool::solo(self.dims.max_seq);
-        let table_len = prompt.len().min(self.dims.max_seq - 1);
-        pool.alloc(0, &prompt[..table_len])?;
-        let mut pos = prompt.len();
-        let mut out = Vec::with_capacity(max_new);
-        for _ in 0..max_new {
-            if let Some(t) = tele {
-                t.next_tick();
-            }
-            let _step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
-            let tok = {
-                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
-                sampling::sample(&logits, sp, &mut rng)
-            };
-            out.push(tok);
-            if tok == tokenizer::EOS || pos + 1 >= self.dims.max_seq {
-                break;
-            }
-            logits = self.decode_step(tok, pos, &mut kv)?;
-            pos = pool.advance(0, tok)?;
-        }
-        pool.release(0)?;
-        debug_assert!(pool.check_invariants().is_ok());
-        Ok(GenResult {
-            prompt_tokens: prompt.len(),
-            decode_steps: out.len(),
-            tokens: out,
-            ttft,
-            e2e: t0.elapsed().as_secs_f64(),
-            accepted_drafts: 0,
-            draft_rounds: 0,
-        })
+        let mut exec = GraphExecutor::new(self);
+        crate::sched::generate(&mut exec, self.engine.tracer(), prompt,
+                               max_new, sp)
     }
 
     /// Chameleon T-I contrastive generation: two caches (conditional on
@@ -295,6 +259,44 @@ impl<'e> DecoderSession<'e> {
             accepted_drafts: 0,
             draft_rounds: 0,
         })
+    }
+}
+
+/// The compiled-graph bs=1 engine as a [`StepExecutor`]: one bucketed
+/// prefill consumes the whole prompt, each decode step is one fused
+/// dispatch with the device-resident KV chained through.
+pub struct GraphExecutor<'s, 'e> {
+    session: &'s DecoderSession<'e>,
+    kv: Option<KvBufs>,
+}
+
+impl<'s, 'e> GraphExecutor<'s, 'e> {
+    pub fn new(session: &'s DecoderSession<'e>) -> Self {
+        GraphExecutor { session, kv: None }
+    }
+}
+
+impl StepExecutor for GraphExecutor<'_, '_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: 1,
+            max_seq: self.session.dims.max_seq,
+            vocab: self.session.dims.vocab,
+        }
+    }
+
+    fn prefill_chunk(&mut self, _slot: usize, tokens: &[i32], start: usize,
+                     is_last: bool) -> Result<Option<Vec<f32>>> {
+        debug_assert_eq!(start, 0, "bs=1 graph prefill is one chunk");
+        let (logits, kv) = self.session.prefill(tokens)?;
+        self.kv = Some(kv);
+        Ok(is_last.then_some(logits))
+    }
+
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        let f = feeds.first().context("bs=1 executor needs one feed")?;
+        let kv = self.kv.as_mut().context("decode before prefill")?;
+        self.session.decode_step(f.token, f.pos, kv)
     }
 }
 

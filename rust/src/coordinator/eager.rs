@@ -6,22 +6,23 @@
 //! between this and graph mode is the real, measured analogue of
 //! Obs #2's "GPU idle time dominated by kernel-launch overhead" and of
 //! the torch.compile + CUDA Graph speedups in Figs 5–7.
-
-use std::time::Instant;
+//!
+//! The generate loop itself lives in [`crate::sched::exec::generate`];
+//! this module only implements the [`StepExecutor`] hooks: the prompt
+//! is consumed token-by-token through the eager step (no prefill graph
+//! — the fully unoptimized pipeline), and each decode step is one
+//! `eager_step` dispatch chain.
 
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
 
-use crate::kvpool::KvPool;
-use crate::models::tokenizer;
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
-use crate::substrate::rng::Rng;
+use crate::sched::{ExecDims, SlotFeed, StepExecutor};
 use crate::telemetry::tracer::Cat;
 
 use super::decoder_loop::{DecoderDims, GenResult};
 use super::request::SamplingParams;
-use super::sampling;
 
 struct EagerStages {
     embed: StageHandle,
@@ -59,77 +60,80 @@ pub fn dispatches_per_token(n_layers: usize) -> usize {
     2 + n_layers * 5
 }
 
-/// Eager generation (bs=1). The prompt is consumed token-by-token
-/// through the eager step (no prefill graph — the fully unoptimized
-/// pipeline).
+/// The per-operator dispatch pipeline as a [`StepExecutor`] (bs=1).
+pub struct EagerExecutor<'e> {
+    engine: &'e Engine,
+    dims: DecoderDims,
+    stages: EagerStages,
+    kv: EagerKv,
+}
+
+impl<'e> EagerExecutor<'e> {
+    pub fn new(engine: &'e Engine, dims: &DecoderDims) -> Result<Self> {
+        let stages = EagerStages::load(engine)?;
+        // zero per-layer caches [1, H, S, Dh]
+        let kv_shape =
+            [1, dims.n_heads, dims.max_seq, dims.head_dim];
+        let zero =
+            Tensor::zeros(crate::runtime::tensor::DType::F32, &kv_shape);
+        let mut kv = EagerKv { k: Vec::new(), v: Vec::new() };
+        for _ in 0..dims.n_layers {
+            kv.k.push(engine.upload(&zero)?);
+            kv.v.push(engine.upload(&zero)?);
+        }
+        Ok(EagerExecutor { engine, dims: *dims, stages, kv })
+    }
+}
+
+impl StepExecutor for EagerExecutor<'_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: 1,
+            max_seq: self.dims.max_seq,
+            vocab: self.dims.vocab,
+        }
+    }
+
+    fn step_span_name(&self) -> &'static str {
+        "eager_step"
+    }
+
+    /// Eager has no prefill graph: the prompt is fed one token at a
+    /// time through the eager step (one telemetry tick per token).
+    /// Stops at the sequence capacity — `Ok(None)` tells the driver
+    /// the prompt never finished and nothing can be generated.
+    fn prefill_chunk(&mut self, _slot: usize, tokens: &[i32], start: usize,
+                     is_last: bool) -> Result<Option<Vec<f32>>> {
+        let tele = self.engine.tracer();
+        let mut logits = Vec::new();
+        for (i, &tok) in tokens.iter().enumerate() {
+            let pos = start + i;
+            if pos + 1 >= self.dims.max_seq {
+                return Ok(None);
+            }
+            if let Some(t) = tele {
+                t.next_tick();
+            }
+            let _step_span = tele.map(|t| t.span(Cat::Prefill, "eager_step"));
+            logits = eager_step(self.engine, &self.stages, &self.dims, tok,
+                                pos, &mut self.kv)?;
+        }
+        Ok((is_last && !logits.is_empty()).then_some(logits))
+    }
+
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        let f = feeds.first().context("bs=1 executor needs one feed")?;
+        eager_step(self.engine, &self.stages, &self.dims, f.token, f.pos,
+                   &mut self.kv)
+    }
+}
+
+/// Eager generation (bs=1): build the executor, run the shared driver.
 pub fn generate_eager(engine: &Engine, dims: &DecoderDims, prompt: &[i32],
                       max_new: usize, sp: &SamplingParams)
                       -> Result<GenResult> {
-    let t0 = Instant::now();
-    let stages = EagerStages::load(engine)?;
-    let mut rng = Rng::new(sp.seed);
-
-    // zero per-layer caches [1, H, S, Dh]
-    let kv_shape = [1, dims.n_heads, dims.max_seq, dims.head_dim];
-    let zero = Tensor::zeros(crate::runtime::tensor::DType::F32, &kv_shape);
-    let mut kv = EagerKv { k: Vec::new(), v: Vec::new() };
-    for _ in 0..dims.n_layers {
-        kv.k.push(engine.upload(&zero)?);
-        kv.v.push(engine.upload(&zero)?);
-    }
-
-    let mut logits: Vec<f32> = Vec::new();
-    let mut ttft = 0.0;
-    // Feed prompt tokens, then generate.
-    let tele = engine.tracer();
-    let _tick_scope = tele.map(|t| t.tick_scope());
-    // Eager consumes the prompt token-by-token, so its block table
-    // starts empty and grows with every fed position.
-    let mut pool = KvPool::solo(dims.max_seq);
-    pool.alloc(0, &[])?;
-    let mut out = Vec::with_capacity(max_new);
-    let mut pos = 0usize;
-    let total = prompt.len() + max_new;
-    for step in 0..total {
-        if let Some(t) = tele {
-            t.next_tick();
-        }
-        let in_prompt = step < prompt.len();
-        let phase = if in_prompt { Cat::Prefill } else { Cat::Decode };
-        let _step_span = tele.map(|t| t.span(phase, "eager_step"));
-        let token = if in_prompt {
-            prompt[step]
-        } else {
-            let tok = {
-                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
-                sampling::sample(&logits, sp, &mut rng)
-            };
-            out.push(tok);
-            if tok == tokenizer::EOS {
-                break;
-            }
-            tok
-        };
-        if pos + 1 >= dims.max_seq || out.len() >= max_new {
-            break;
-        }
-        logits = eager_step(engine, &stages, dims, token, pos, &mut kv)?;
-        if step + 1 == prompt.len() {
-            ttft = t0.elapsed().as_secs_f64();
-        }
-        pos = pool.advance(0, token)?;
-    }
-    pool.release(0)?;
-    debug_assert!(pool.check_invariants().is_ok());
-    Ok(GenResult {
-        prompt_tokens: prompt.len(),
-        decode_steps: out.len(),
-        tokens: out,
-        ttft,
-        e2e: t0.elapsed().as_secs_f64(),
-        accepted_drafts: 0,
-        draft_rounds: 0,
-    })
+    let mut exec = EagerExecutor::new(engine, dims)?;
+    crate::sched::generate(&mut exec, engine.tracer(), prompt, max_new, sp)
 }
 
 /// One eager decode step: 2 + 5·L separate dispatches.

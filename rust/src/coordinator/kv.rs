@@ -297,6 +297,26 @@ impl PagedKvSlots {
         }
     }
 
+    /// Chunked-prefill append: extend a live slot by a whole chunk,
+    /// claiming pages as blocks fill. All-or-nothing at the position
+    /// level (both views rewind to the pre-call position on failure;
+    /// pages claimed by the partial extension stay mapped, overwrite
+    /// semantics, reclaimed at release/preemption). Returns the new
+    /// fill position.
+    pub fn extend_chunk(&mut self, slot: usize, tokens: &[i32])
+                        -> Result<usize, KvError> {
+        let start = self.slots.pos(slot)?;
+        for (i, &t) in tokens.iter().enumerate() {
+            if let Err(e) = self.advance(slot, t) {
+                if i > 0 {
+                    let _ = self.rewind_to(slot, start);
+                }
+                return Err(e);
+            }
+        }
+        Ok(start + tokens.len())
+    }
+
     /// LayerSkip rollback on both views.
     pub fn rewind_to(&mut self, slot: usize, new_pos: usize)
                      -> Result<(), KvError> {
@@ -569,6 +589,33 @@ mod tests {
         // The freed capacity lets the stalled advance proceed.
         kv.advance(s1, 99).unwrap();
         kv.pool().unwrap().check_invariants().unwrap();
+    }
+
+    /// Chunked prefill: `extend_chunk` keeps the slot view and the
+    /// pool's block table in lockstep, and rolls both back when the
+    /// chunk cannot be covered.
+    #[test]
+    fn extend_chunk_mirrors_both_views_and_rolls_back() {
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 3 };
+        let mut kv = PagedKvSlots::paged(1, 64, cfg);
+        let (slot, _) = kv.alloc(1, &[1, 2, 3]).unwrap();
+        assert_eq!(kv.extend_chunk(slot, &[4, 5, 6, 7, 8]).unwrap(), 8);
+        assert_eq!(kv.pos(slot).unwrap(), 8);
+        assert_eq!(kv.pool().unwrap().pos(1).unwrap(), 8);
+        let err = kv.extend_chunk(slot, &[9; 9]).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        assert_eq!(kv.pos(slot).unwrap(), 8, "slot view rolled back");
+        assert_eq!(kv.pool().unwrap().pos(1).unwrap(), 8,
+                   "block table rolled back");
+        kv.pool().unwrap().check_invariants().unwrap();
+
+        // Dense mode: the slot position alone advances and rewinds.
+        let mut kv = PagedKvSlots::dense(1, 8);
+        let (s, _) = kv.alloc(2, &[1, 2]).unwrap();
+        assert_eq!(kv.extend_chunk(s, &[3, 4, 5]).unwrap(), 5);
+        let err = kv.extend_chunk(s, &[6, 7, 8, 9]).unwrap_err();
+        assert_eq!(err, KvError::MaxSeq { pos: 7, max_seq: 8 });
+        assert_eq!(kv.pos(s).unwrap(), 5, "dense rollback");
     }
 
     #[test]

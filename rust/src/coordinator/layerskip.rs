@@ -8,105 +8,100 @@
 //! rewound (stale cache entries beyond the accepted prefix are
 //! overwritten by later writes, which is sound because attention masks
 //! beyond the fill position).
-
-use std::time::Instant;
+//!
+//! The round loop itself lives in
+//! [`crate::sched::exec::generate_speculative`]; this module implements
+//! the [`StepExecutor`] hooks: `decode_step` is the cheap *draft* step
+//! and `verify` is the full-model window pass.
 
 use anyhow::{Context, Result};
 
-use crate::kvpool::KvPool;
-use crate::models::tokenizer;
-use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::Tensor;
-use crate::substrate::rng::Rng;
-use crate::telemetry::tracer::Cat;
+use crate::sched::{ExecDims, SlotFeed, StepExecutor};
 
 use super::decoder_loop::{DecoderDims, DecoderSession, GenResult, KvBufs};
 use super::opts::OptConfig;
 use super::request::SamplingParams;
-use super::sampling;
 
-/// Generate with the self-speculative loop (bs = 1, greedy acceptance).
-pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
-                          prompt: &[i32], max_new: usize,
-                          sp: &SamplingParams) -> Result<GenResult> {
-    let t0 = Instant::now();
-    let k_window = dims.verify_window;
-    let draft_stage = engine.stage("draft_b1")?;
-    let verify_stage = engine.stage(&format!("verify_k{k_window}"))?;
-    // Reuse the session prefills (baseline stages).
-    let session = DecoderSession::new(engine, OptConfig::baseline())?;
-    let mut rng = Rng::new(sp.seed);
-    let tele = engine.tracer();
-    let _tick_scope = tele.map(|t| t.tick_scope());
+/// The self-speculative engine as a [`StepExecutor`] (bs=1): prefill
+/// through the baseline bucketed stages, draft through the early-exit
+/// head, verify K tokens in one full-model pass. One device-resident
+/// KV chain is shared by all three (the cache-reuse property that makes
+/// self-speculation cheap).
+pub struct LayerSkipExecutor<'e> {
+    engine: &'e Engine,
+    session: DecoderSession<'e>,
+    dims: DecoderDims,
+    draft: StageHandle,
+    verify: StageHandle,
+    k_window: usize,
+    kv: Option<KvBufs>,
+}
 
-    let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
-    let (logits, kv) = session.prefill(prompt)?;
-    drop(prefill_span);
-    let mut kv: KvBufs = kv;
-    let ttft = t0.elapsed().as_secs_f64();
+impl<'e> LayerSkipExecutor<'e> {
+    pub fn new(engine: &'e Engine, dims: &DecoderDims) -> Result<Self> {
+        let k_window = dims.verify_window;
+        let draft = engine.stage("draft_b1")?;
+        let verify = engine.stage(&format!("verify_k{k_window}"))?;
+        // Reuse the session prefills (baseline stages).
+        let session = DecoderSession::new(engine, OptConfig::baseline())?;
+        Ok(LayerSkipExecutor {
+            engine,
+            session,
+            dims: *dims,
+            draft,
+            verify,
+            k_window,
+            kv: None,
+        })
+    }
+}
 
-    // Block-table view of the speculative cache: drafts advance it,
-    // verification rewinds and overwrites — the same rewind path the
-    // dense slot view used, now at page granularity.
-    let mut pool = KvPool::solo(dims.max_seq);
-    let table_len = prompt.len().min(dims.max_seq - 1);
-    pool.alloc(0, &prompt[..table_len])?;
-
-    let mut out: Vec<i32> = Vec::with_capacity(max_new);
-    let mut pos = prompt.len();
-    // `pending` = last sampled token not yet written into the cache.
-    let mut pending = {
-        let _s = tele.map(|t| t.span(Cat::Sample, "sample_first"));
-        sampling::sample(&logits, sp, &mut rng)
-    };
-    out.push(pending);
-
-    let mut accepted_total = 0usize;
-    let mut rounds = 0usize;
-
-    'outer: while out.len() < max_new && pending != tokenizer::EOS {
-        if pos + k_window + 1 >= dims.max_seq {
-            break;
+impl StepExecutor for LayerSkipExecutor<'_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: 1,
+            max_seq: self.dims.max_seq,
+            vocab: self.dims.vocab,
         }
-        rounds += 1;
-        if let Some(t) = tele {
-            t.next_tick();
-        }
-        let _round_span = tele.map(|t| t.span(Cat::Decode, "spec_round"));
-        // ---- draft phase: K-1 cheap tokens after `pending` ------------
-        let mut window = Vec::with_capacity(k_window);
-        window.push(pending);
-        let mut dkv_pos = pos;
-        for _ in 0..k_window - 1 {
-            let fed = *window.last().unwrap();
-            let t_tok = Tensor::from_i32(&[1], &[fed]);
-            let t_pos = Tensor::from_i32(&[1], &[dkv_pos as i32]);
-            let outs = engine.run(
-                &draft_stage,
-                &[Arg::Host(&t_tok), Arg::Host(&t_pos), Arg::Dev(&kv.k),
-                  Arg::Dev(&kv.v)],
-            )?;
-            let mut it = outs.into_iter();
-            let logits_buf = it.next().context("draft logits")?;
-            kv.k = it.next().context("draft ck")?;
-            kv.v = it.next().context("draft cv")?;
-            let dl = engine.download(&logits_buf)?.as_f32()?;
-            // Drafts are greedy (standard for self-spec draft phase).
-            window.push(sampling::greedy(&dl));
-            pool.advance(0, fed)?;
-            dkv_pos += 1;
-        }
-        // ---- verify phase: all K tokens in one full-model pass --------
-        // The verify pass overwrites positions pos..pos+K: rewind the
-        // block table and replay the window through it.
-        pool.rewind_to(0, pos)?;
-        for &w in &window {
-            pool.advance(0, w)?;
-        }
-        let t_toks = Tensor::from_i32(&[1, k_window], &window);
-        let t_start = Tensor::from_i32(&[1], &[pos as i32]);
-        let outs = engine.run(
-            &verify_stage,
+    }
+
+    fn prefill_chunk(&mut self, _slot: usize, tokens: &[i32], _start: usize,
+                     is_last: bool) -> Result<Option<Vec<f32>>> {
+        let (logits, kv) = self.session.prefill(tokens)?;
+        self.kv = Some(kv);
+        Ok(is_last.then_some(logits))
+    }
+
+    /// The draft step: first E layers + shared LM head, writing the
+    /// draft's KV into the shared cache.
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        let f = feeds.first().context("bs=1 executor needs one feed")?;
+        let kv = self.kv.as_mut().context("draft before prefill")?;
+        let t_tok = Tensor::from_i32(&[1], &[f.token]);
+        let t_pos = Tensor::from_i32(&[1], &[f.pos as i32]);
+        let outs = self.engine.run(
+            &self.draft,
+            &[Arg::Host(&t_tok), Arg::Host(&t_pos), Arg::Dev(&kv.k),
+              Arg::Dev(&kv.v)],
+        )?;
+        let mut it = outs.into_iter();
+        let logits_buf = it.next().context("draft logits")?;
+        kv.k = it.next().context("draft ck")?;
+        kv.v = it.next().context("draft cv")?;
+        self.engine.download(&logits_buf)?.as_f32()
+    }
+
+    /// The verify pass: all K window tokens through the full model in
+    /// one dispatch, overwriting cache positions `start..start+K`.
+    fn verify(&mut self, _slot: usize, window: &[i32], start: usize)
+              -> Result<Vec<f32>> {
+        let kv = self.kv.as_mut().context("verify before prefill")?;
+        let t_toks = Tensor::from_i32(&[1, self.k_window], window);
+        let t_start = Tensor::from_i32(&[1], &[start as i32]);
+        let outs = self.engine.run(
+            &self.verify,
             &[Arg::Host(&t_toks), Arg::Host(&t_start), Arg::Dev(&kv.k),
               Arg::Dev(&kv.v)],
         )?;
@@ -114,53 +109,22 @@ pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
         let vlogits_buf = it.next().context("verify logits")?;
         kv.k = it.next().context("verify ck")?;
         kv.v = it.next().context("verify cv")?;
-        let vl = engine.download(&vlogits_buf)?.as_f32()?;
-        let vocab = dims.vocab;
-
-        // Longest prefix of drafts matching the full model (greedy).
-        // vl[j] is the full model's next-token dist after window[j].
-        let _accept_span = tele.map(|t| t.span(Cat::Sample, "accept"));
-        let mut accepted = 0usize;
-        for j in 1..k_window {
-            let full_tok =
-                sampling::greedy(&vl[(j - 1) * vocab..j * vocab]);
-            if full_tok == window[j] {
-                accepted += 1;
-            } else {
-                break;
-            }
-        }
-        accepted_total += accepted;
-        // Emit accepted drafts (window[1..=accepted]).
-        for &d in window.iter().skip(1).take(accepted) {
-            out.push(d);
-            if out.len() >= max_new || d == tokenizer::EOS {
-                pos += accepted + 1;
-                break 'outer;
-            }
-        }
-        // Bonus token from the verify logits at the last accepted slot.
-        let bonus =
-            sampling::greedy(&vl[accepted * vocab..(accepted + 1) * vocab]);
-        out.push(bonus);
-        // Cache now holds correct entries for window[0..=accepted] at
-        // pos..pos+accepted; rewind the logical position there.
-        pos += accepted + 1;
-        pool.rewind_to(0, pos)?;
-        pending = bonus;
+        self.engine.download(&vlogits_buf)?.as_f32()
     }
 
-    pool.release(0)?;
-    debug_assert!(pool.check_invariants().is_ok());
-    Ok(GenResult {
-        prompt_tokens: prompt.len(),
-        decode_steps: out.len(),
-        tokens: out,
-        ttft,
-        e2e: t0.elapsed().as_secs_f64(),
-        accepted_drafts: accepted_total,
-        draft_rounds: rounds,
-    })
+    fn verify_window(&self) -> usize {
+        self.k_window
+    }
+}
+
+/// Generate with the self-speculative loop (bs = 1, greedy acceptance):
+/// build the executor, run the shared draft/verify round driver.
+pub fn generate_layerskip(engine: &Engine, dims: &DecoderDims,
+                          prompt: &[i32], max_new: usize,
+                          sp: &SamplingParams) -> Result<GenResult> {
+    let mut exec = LayerSkipExecutor::new(engine, dims)?;
+    crate::sched::generate_speculative(&mut exec, engine.tracer(), prompt,
+                                       max_new, sp)
 }
 
 /// Expected speedup of LayerSkip given acceptance rate `a`, draft cost

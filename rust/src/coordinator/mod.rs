@@ -1,26 +1,54 @@
 //! L3 coordinator — the serving system (the paper's system contribution
 //! surface).
 //!
+//! Scheduling is centralized in `crate::sched`, which sits between the
+//! queue/capacity layers here and the execution engines:
+//!
+//! ```text
+//!   requests ─► batcher (FCFS queue, token budget)
+//!                   │
+//!                   ▼           CapacityView (slots + pages)
+//!            sched::Scheduler ◄────────── kv::PagedKvSlots ◄── kvpool
+//!                   │ TickPlan (decode set ∪ prefill chunks)
+//!                   ▼
+//!          server::run_tick(plan, executor)
+//!                   │ prefill_chunk / decode_step / verify
+//!                   ▼
+//!        ┌──────────┴──────────┬───────────────┬───────────────┐
+//!   BatchedExecutor      GraphExecutor    EagerExecutor  LayerSkipExecutor
+//!   (server, b=N graph)  (decoder_loop)   (eager)        (layerskip)
+//! ```
+//!
+//! All four text-generation paths implement `sched::StepExecutor`;
+//! their generate loops live once in the sched drivers. Chunked
+//! prefill (`RouterConfig::chunk_prefill`) is therefore a pure
+//! scheduler policy: long prompts split into budget-sized chunks
+//! interleaved with decode ticks, pages claimed chunk by chunk.
+//!
 //! * [`request`] — request/response/event types flowing through the stack.
 //! * [`sampling`] — greedy / top-k / top-p / temperature samplers.
 //! * [`kv`] — KV-cache views: the static slot manager for the compiled
 //!   graphs (CUDA-Graph-style fixed buffers, §4.1.2) and the paged
-//!   wrapper that meters capacity through `crate::kvpool`.
+//!   wrapper that meters capacity through `crate::kvpool` (including
+//!   `extend_chunk`, the chunked-prefill append).
 //! * [`batcher`] — continuous batcher: decode-batch occupancy + prefill
-//!   admission under a token budget and the paged pool's capacity view.
+//!   admission under a token budget and the paged pool's capacity view
+//!   (whole-prompt mode delegates admission here unchanged).
 //! * [`opts`] — the optimization-lever configuration (SDPA / graph mode /
 //!   quant / LayerSkip), §4's knobs as a struct.
-//! * [`decoder_loop`] — Llama/Chameleon serving: bucketed prefill,
-//!   batched static-KV decode, contrastive decoding for T-I.
+//! * [`decoder_loop`] — Llama/Chameleon sessions: bucketed prefill,
+//!   static-KV decode steps, contrastive decoding for T-I, plus the
+//!   bs=1 `GraphExecutor`.
 //! * [`eager`] — per-operator dispatch baseline (the launch-overhead
-//!   regime of Obs #2).
-//! * [`layerskip`] — self-speculative decoding (draft E layers, verify K
-//!   tokens in parallel), §4.3.
+//!   regime of Obs #2) as an executor.
+//! * [`layerskip`] — self-speculative draft/verify stages (§4.3) as an
+//!   executor.
 //! * [`seamless_pipe`] — the four-module Seamless pipeline with beam
 //!   search and KV reorder (Obs #4).
 //! * [`hstu_loop`] — non-autoregressive HSTU ranking/retrieval.
 //! * [`autoquant`] — per-layer-shape quantization calibration (§4.2).
-//! * [`server`] — multi-model router with per-model engine threads.
+//! * [`server`] — multi-model router with per-model engine threads and
+//!   the generic `run_tick` tick driver.
 
 pub mod autoquant;
 pub mod batcher;

@@ -4,10 +4,16 @@
 //! its own PJRT `Engine` (engines hold raw PJRT handles and are
 //! deliberately thread-local) and serves requests from an mpsc queue:
 //!
-//! * **Llama / Chameleon text tasks** — continuous batching: free batch
-//!   slots are filled by bucketed prefills (`kv_pack` inserts the fresh
-//!   KV into the batched cache), then one batched decode step per tick
-//!   serves all live slots (vLLM-style, over the static-batch graph).
+//! * **Llama / Chameleon text tasks** — continuous batching through the
+//!   unified tick scheduler: every tick, `sched::Scheduler::plan` turns
+//!   the queue + the kvpool capacity view into a `TickPlan` (decode set
+//!   ∪ prefill chunks), and [`run_tick`] executes it against the
+//!   [`BatchedExecutor`] (vLLM-style, over the static-batch graph).
+//!   With `--chunk-prefill` long prompts are fed in budget-sized
+//!   chunks interleaved with decode steps: the first chunk goes
+//!   through the bucketed prefill + `kv_pack`, continuation tokens
+//!   append incrementally through the batched decode graph while the
+//!   block tables claim pages chunk by chunk.
 //! * **Chameleon T-I** — bs=1 contrastive decoding (two decodes/step).
 //! * **Seamless** — the four-module pipeline with beam search.
 //! * **HSTU** — non-AR batch forward.
@@ -26,11 +32,13 @@ use crate::models::tokenizer::{self, ImageTokenizer, TextTokenizer};
 use crate::models::{ModelKind, TaskKind};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::{DType, Tensor};
+use crate::sched::{ExecDims, PlannedChunk, SchedConfig, Scheduler,
+                   SlotFeed, SlotStateError, StepExecutor, TickPlan};
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
 use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
-use super::batcher::{Batcher, QueuedRequest};
+use super::batcher::QueuedRequest;
 use super::decoder_loop::{encode_prompt, DecoderSession, KvBufs};
 use super::hstu_loop::{HstuAttn, HstuRunner};
 use super::kv::PagedKvSlots;
@@ -54,6 +62,11 @@ pub struct RouterConfig {
     pub batch: usize,
     /// Prefill token budget per tick (0 = unlimited).
     pub prefill_budget: usize,
+    /// Chunked prefill: max new prompt tokens fed per scheduler tick
+    /// (0 = whole-prompt admission, the seed behavior). Long prompts
+    /// are split into chunks interleaved with decode steps, bounding
+    /// the decode stall any single admission can cause.
+    pub chunk_prefill: usize,
     /// Paged KV pool sizing for the batched decoder: admission meters
     /// pages (with prefix sharing) instead of worst-case slots. The
     /// default is a dense-equivalent page budget; `page_size: 0`
@@ -73,6 +86,7 @@ impl Default for RouterConfig {
             reorder: ReorderMode::Fused,
             batch: 4,
             prefill_budget: 0,
+            chunk_prefill: 0,
             kv: KvPoolConfig::default(),
             tracer: None,
         }
@@ -177,6 +191,37 @@ enum Staged {
     Resume(SlotJob),
 }
 
+impl Staged {
+    fn into_item(self) -> WorkItem {
+        match self {
+            Staged::Fresh(item) => item,
+            Staged::Resume(job) => job.item,
+        }
+    }
+}
+
+/// A request mid-way through a chunked prefill: it holds a slot and
+/// the pages for the tokens fed so far; `tokens` is the full prefill
+/// prefix (prompt, plus generated tokens for a preemption resume).
+struct PrefillState {
+    slot: usize,
+    tokens: Vec<i32>,
+    staged: Staged,
+    started: Instant,
+}
+
+/// All mutable bookkeeping of one batched decoder worker.
+struct WorkerState {
+    /// Per-slot decode jobs (None for free and mid-prefill slots).
+    jobs: Vec<Option<SlotJob>>,
+    /// Chunked prefills in flight, by request id.
+    prefills: HashMap<u64, PrefillState>,
+    /// Queued (not yet admitted) request payloads, by request id.
+    staging: HashMap<u64, Staged>,
+    /// The tick planner (queue + request state machine).
+    sched: Scheduler,
+}
+
 /// Outcome of growing a slot's KV when the pool was out of pages.
 enum Growth {
     /// A victim was evicted and the advance went through.
@@ -186,6 +231,27 @@ enum Growth {
     SelfPreempted,
     /// Nothing left to evict — treat like the sequence cap.
     Capped,
+}
+
+/// The queue entry a parked request would occupy (for requeues).
+fn queue_entry_for(staged: &Staged, prefix_len: usize) -> QueuedRequest {
+    match staged {
+        Staged::Fresh(item) => QueuedRequest {
+            id: item.request.id,
+            prompt_len: prefix_len,
+            max_new_tokens: item.request.max_new_tokens,
+        },
+        Staged::Resume(job) => QueuedRequest {
+            id: job.item.request.id,
+            prompt_len: prefix_len,
+            max_new_tokens: job
+                .item
+                .request
+                .max_new_tokens
+                .saturating_sub(job.tokens.len())
+                .max(1),
+        },
+    }
 }
 
 /// Insert one prefilled KV into the batched cache at `slot`.
@@ -202,35 +268,118 @@ fn pack_slot(engine: &Engine, kv_pack: &StageHandle, ck: &PjRtBuffer,
     Ok((it.next().context("ck")?, it.next().context("cv")?))
 }
 
+/// The compiled static-batch graph as a [`StepExecutor`]: first chunks
+/// go through the bucketed prefill + `kv_pack`, decode steps (and
+/// chunk-continuation feeds) through the batched decode stage, with
+/// the device-resident batched KV chained through.
+pub struct BatchedExecutor<'s, 'e> {
+    session: &'s DecoderSession<'e>,
+    decode: StageHandle,
+    kv_pack: StageHandle,
+    ck: PjRtBuffer,
+    cv: PjRtBuffer,
+    batch: usize,
+}
+
+impl<'s, 'e> BatchedExecutor<'s, 'e> {
+    pub fn new(engine: &'e Engine, session: &'s DecoderSession<'e>,
+               batch: usize, opt: &OptConfig) -> Result<Self> {
+        let decode_name =
+            DecoderSession::decode_stage_name(engine, batch, opt)?;
+        let decode = engine.stage(&decode_name)?;
+        let kv_pack = engine.stage(&format!("kv_pack_b{batch}"))?;
+        let kv_shape = session.dims.kv_shape(batch);
+        let zero = Tensor::zeros(DType::F32, &kv_shape);
+        let ck = engine.upload(&zero)?;
+        let cv = engine.upload(&zero)?;
+        Ok(BatchedExecutor { session, decode, kv_pack, ck, cv, batch })
+    }
+}
+
+impl StepExecutor for BatchedExecutor<'_, '_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: self.batch,
+            max_seq: self.session.dims.max_seq,
+            vocab: self.session.dims.vocab,
+        }
+    }
+
+    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize,
+                     is_last: bool) -> Result<Option<Vec<f32>>> {
+        if start != 0 {
+            bail!("batched chunk continuations feed through decode_step");
+        }
+        let (logits, kv1) = self.session.prefill(tokens)?;
+        let engine = self.session.engine;
+        let (nck, ncv) =
+            pack_slot(engine, &self.kv_pack, &self.ck, &self.cv, &kv1,
+                      slot)?;
+        self.ck = nck;
+        self.cv = ncv;
+        Ok(is_last.then_some(logits))
+    }
+
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        let mut toks = vec![0i32; self.batch];
+        let mut poss = vec![0i32; self.batch];
+        for f in feeds {
+            toks[f.slot] = f.token;
+            poss[f.slot] = f.pos as i32;
+        }
+        let t_toks = Tensor::from_i32(&[self.batch], &toks);
+        let t_poss = Tensor::from_i32(&[self.batch], &poss);
+        let engine = self.session.engine;
+        let outs = engine.run(
+            &self.decode,
+            &[Arg::Host(&t_toks), Arg::Host(&t_poss), Arg::Dev(&self.ck),
+              Arg::Dev(&self.cv)],
+        )?;
+        let mut it = outs.into_iter();
+        let logits_buf = it.next().context("logits")?;
+        self.ck = it.next().context("ck")?;
+        self.cv = it.next().context("cv")?;
+        engine.download(&logits_buf)?.as_f32()
+    }
+}
+
 /// The pool ran dry while `slot` needed a page for `fed`: preempt
 /// latest-admitted sequences (requeueing them for recompute) until the
 /// advance fits, we evict ourselves, or nothing is left to evict.
-fn preempt_for_growth(slots: &mut PagedKvSlots, batcher: &mut Batcher,
-                      staging: &mut HashMap<u64, Staged>,
-                      jobs: &mut [Option<SlotJob>], slot: usize, fed: i32)
-                      -> Result<Growth> {
+/// Victims can be decoding jobs (requeued as `Resume`) or mid-prefill
+/// requests (requeued to restart their chunked prefill).
+fn preempt_for_growth(slots: &mut PagedKvSlots, st: &mut WorkerState,
+                      slot: usize, fed: i32) -> Result<Growth> {
     let this_req = slots.request_at(slot)?;
     loop {
         let Some((vslot, pre)) = slots.preempt(PreemptMode::Recompute)
         else {
             return Ok(Growth::Capped);
         };
-        let job = jobs[vslot].take().context("preempted slot job")?;
-        // Readmission prefills prompt + all-but-pending tokens; the
-        // queue entry carries that length for capacity accounting.
-        let prefix_len = job.prompt_len + job.tokens.len() - 1;
-        let remaining = job
-            .item
-            .request
-            .max_new_tokens
-            .saturating_sub(job.tokens.len())
-            .max(1);
-        batcher.push_front(QueuedRequest {
-            id: pre.request,
-            prompt_len: prefix_len,
-            max_new_tokens: remaining,
-        });
-        staging.insert(pre.request, Staged::Resume(job));
+        if let Some(pf) = st.prefills.remove(&pre.request) {
+            // Mid-prefill victim: restart its chunked prefill, FCFS
+            // position restored at the queue front.
+            let q = queue_entry_for(&pf.staged, pf.tokens.len());
+            st.sched.requeue_front(q);
+            st.staging.insert(pre.request, pf.staged);
+        } else if let Some(job) = st.jobs[vslot].take() {
+            // Readmission prefills prompt + all-but-pending tokens; the
+            // queue entry carries that length for capacity accounting
+            // (the `queue_entry_for` Resume arm sizes the decode rest).
+            let prefix_len = job.prompt_len + job.tokens.len() - 1;
+            let staged = Staged::Resume(job);
+            st.sched.requeue_front(queue_entry_for(&staged, prefix_len));
+            st.staging.insert(pre.request, staged);
+        } else {
+            // Inconsistent victim bookkeeping: structured drop, never a
+            // worker panic.
+            eprintln!(
+                "[mmserve] {}",
+                SlotStateError::MissingJob { slot: vslot,
+                                             request: pre.request }
+            );
+            st.sched.drop_request(pre.request);
+        }
         if pre.request == this_req {
             return Ok(Growth::SelfPreempted);
         }
@@ -240,6 +389,410 @@ fn preempt_for_growth(slots: &mut PagedKvSlots, batcher: &mut Batcher,
             Err(_) => return Ok(Growth::Capped),
         }
     }
+}
+
+/// A live slot whose decode bookkeeping went missing: release it and
+/// surface the structured error through any staged response channel
+/// (satellite fix — the worker thread must survive, not panic).
+fn surface_slot_error(slots: &mut PagedKvSlots, st: &mut WorkerState,
+                      slot: usize, request: u64) {
+    let err = SlotStateError::MissingJob { slot, request };
+    eprintln!("[mmserve] {err}; releasing the slot");
+    let _ = slots.release(slot);
+    st.sched.drop_request(request);
+    if let Some(staged) = st.staging.remove(&request) {
+        let _ = staged.into_item().respond.send(Err(err.into()));
+    }
+}
+
+/// Completed prefill: sample the first token from the final logits
+/// (fresh requests) or restore the parked decode job (preemption
+/// resumes), making the slot a decoding slot.
+fn finish_prefill(st: &mut WorkerState, tele: Option<&WorkerTracer>,
+                  pf: PrefillState, logits: &[f32]) {
+    match pf.staged {
+        Staged::Fresh(item) => {
+            let mut rng =
+                Rng::new(item.request.sampling.seed ^ item.request.id);
+            let first = {
+                let _s = tele.map(|t| {
+                    t.span_req(Cat::Sample, "sample_first", item.request.id)
+                });
+                sampling::sample(logits, &item.request.sampling, &mut rng)
+            };
+            let ttft = pf.started.elapsed().as_secs_f64();
+            st.jobs[pf.slot] = Some(SlotJob {
+                prompt_len: pf.tokens.len(),
+                tokens: vec![first],
+                rng,
+                started: pf.started,
+                ttft,
+                item,
+            });
+        }
+        Staged::Resume(job) => {
+            // Recompute half of preemption: the prefix (prompt +
+            // all-but-pending tokens) is back in the cache; continue
+            // decoding from the job's saved state.
+            st.jobs[pf.slot] = Some(job);
+        }
+    }
+}
+
+/// One resolved chunk-continuation feed (chunked prefill, start > 0).
+struct ChunkRun {
+    request: u64,
+    slot: usize,
+    start: usize,
+    len: usize,
+    is_last: bool,
+}
+
+/// Per-slot feeds for one batched dispatch: free slots write junk at
+/// (0, 0) (their rows are rewritten on admission), decoding slots feed
+/// their pending token at their position (exactly the write the decode
+/// step performs), mid-prefill slots re-feed their last fed token (an
+/// idempotent rewrite of the same cache position).
+fn build_feeds(batch: usize, slots: &PagedKvSlots, st: &WorkerState)
+               -> Vec<SlotFeed> {
+    let mut feeds: Vec<SlotFeed> = (0..batch)
+        .map(|slot| SlotFeed { slot, token: 0, pos: 0 })
+        .collect();
+    for (slot, req, pos) in slots.live_slots() {
+        if let Some(job) = st.jobs[slot].as_ref() {
+            feeds[slot] = SlotFeed {
+                slot,
+                token: *job.tokens.last().unwrap(),
+                pos,
+            };
+        } else if let Some(pf) = st.prefills.get(&req) {
+            if pos > 0 {
+                feeds[slot] = SlotFeed {
+                    slot,
+                    token: pf.tokens[pos - 1],
+                    pos: pos - 1,
+                };
+            }
+        }
+    }
+    feeds
+}
+
+/// Execute one scheduler tick against an executor: first chunks
+/// (slot + page claim, bucketed prefill, pack), continuation chunks
+/// (incremental append through the decode graph + block tables), then
+/// one batched decode step for all decoding slots. Written once,
+/// generic over the [`StepExecutor`] — this is the loop the five
+/// hand-rolled serving loops collapsed into.
+fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
+                             slots: &mut PagedKvSlots,
+                             st: &mut WorkerState,
+                             tele: Option<&WorkerTracer>) -> Result<()> {
+    let dims = exec.plan_dims();
+    // Admission blocked on pages: count the tick and mark the host
+    // window so idle-gap attribution buckets it as KvCapacity. The
+    // span is held only when the tick planned *no prefill work at
+    // all* — on a partially blocked tick the planned chunks' tokenize
+    // / prefill / sample time must keep its own buckets.
+    let kv_wait_span = if plan.blocked_on_capacity {
+        slots.note_capacity_wait();
+        if plan.chunks.is_empty() {
+            tele.map(|t| t.span(Cat::KvWait, "kv_capacity_wait"))
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    // Decode-ready slots stalled behind this tick's prefill work: the
+    // interference window chunked prefill bounds (PrefillStall bucket).
+    let stall_span = if !plan.chunks.is_empty()
+        && st.jobs.iter().any(|j| j.is_some())
+    {
+        tele.map(|t| t.span(Cat::PrefillStall, "prefill_stall"))
+    } else {
+        None
+    };
+
+    let mut admitted: HashMap<u64, QueuedRequest> =
+        plan.admitted.into_iter().map(|q| (q.id, q)).collect();
+    // Requeues collected per phase; continuations are FCFS-older than
+    // this tick's admissions, so they requeue ahead.
+    let mut requeue_cont: Vec<QueuedRequest> = Vec::new();
+    let mut requeue_new: Vec<QueuedRequest> = Vec::new();
+    let mut continuations: Vec<PlannedChunk> = Vec::new();
+
+    // ---- first chunks: slot + page claim, bucketed prefill, pack ----
+    for c in plan.chunks {
+        if c.start > 0 {
+            continuations.push(c);
+            continue;
+        }
+        let Some(staged) = st.staging.remove(&c.request) else {
+            st.sched.drop_request(c.request);
+            admitted.remove(&c.request);
+            continue;
+        };
+        let _req_scope = tele.map(|t| t.req_scope(c.request));
+        let started = Instant::now();
+        let _prefill_span = tele.map(|t| {
+            t.span(Cat::Prefill, match &staged {
+                Staged::Fresh(_) => "admit",
+                Staged::Resume(_) => "resume",
+            })
+        });
+        // Tokenize the full prefill prefix (prompt, plus generated
+        // tokens for a preemption resume).
+        let tokens = {
+            let _t = tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
+            match &staged {
+                Staged::Fresh(item) => {
+                    tokenize_decoder_input(&item.request)?
+                }
+                Staged::Resume(job) => {
+                    let mut prefix =
+                        tokenize_decoder_input(&job.item.request)?;
+                    prefix.extend_from_slice(
+                        &job.tokens[..job.tokens.len() - 1],
+                    );
+                    prefix
+                }
+            }
+        };
+        let q = admitted
+            .remove(&c.request)
+            .unwrap_or_else(|| queue_entry_for(&staged, tokens.len()));
+        let len = c.len.min(tokens.len());
+        let is_last = len >= tokens.len();
+        // Claim the slot and the chunk's pages before any device work.
+        let slot = {
+            let _s = tele.map(|t| t.span(Cat::Schedule, "admit_slot"));
+            match slots.alloc(q.id, &tokens[..len]) {
+                Ok((slot, _share)) => slot,
+                Err(KvError::CapacityExhausted { .. }) => {
+                    // Decode growth raced the admission view; retry
+                    // next tick, FCFS position intact.
+                    st.staging.insert(q.id, staged);
+                    requeue_new.push(q);
+                    continue;
+                }
+                Err(e) => {
+                    // Structural refusal (prompt ≥ max_seq, …): fail
+                    // the request, keep the worker alive.
+                    st.sched.drop_request(q.id);
+                    let _ = staged.into_item().respond.send(Err(e.into()));
+                    continue;
+                }
+            }
+        };
+        match exec.prefill_chunk(slot, &tokens[..len], 0, is_last)? {
+            Some(logits) => {
+                st.sched.chunk_committed(q.id, len);
+                finish_prefill(
+                    st,
+                    tele,
+                    PrefillState { slot, tokens, staged, started },
+                    &logits,
+                );
+            }
+            None => {
+                st.sched.chunk_committed(q.id, len);
+                st.prefills.insert(
+                    q.id,
+                    PrefillState { slot, tokens, staged, started },
+                );
+            }
+        }
+    }
+
+    // ---- continuation chunks: append through the decode graph -------
+    // Each dispatch feeds one chunk token per mid-prefill slot at its
+    // position; decoding slots re-feed their pending token (an
+    // idempotent pre-write of the position the real decode step will
+    // write) and other mid-prefill slots re-feed their last token.
+    let mut runs: Vec<ChunkRun> = Vec::new();
+    for c in &continuations {
+        let Some(pf) = st.prefills.get(&c.request) else {
+            eprintln!(
+                "[mmserve] {}",
+                SlotStateError::MissingPrefill { request: c.request }
+            );
+            st.sched.drop_request(c.request);
+            continue;
+        };
+        let start = slots.pos(pf.slot).unwrap_or(c.start);
+        let len = c.len.min(pf.tokens.len().saturating_sub(start));
+        if len == 0 {
+            continue;
+        }
+        runs.push(ChunkRun {
+            request: c.request,
+            slot: pf.slot,
+            start,
+            len,
+            is_last: start + len >= pf.tokens.len(),
+        });
+    }
+    let n_dispatches = runs.iter().map(|r| r.len).max().unwrap_or(0);
+    let mut final_logits: Vec<(usize, Vec<f32>)> = Vec::new();
+    for j in 0..n_dispatches {
+        let mut feeds = build_feeds(dims.batch, slots, st);
+        for r in &runs {
+            let pf = &st.prefills[&r.request];
+            let i = j.min(r.len - 1);
+            feeds[r.slot] = SlotFeed {
+                slot: r.slot,
+                token: pf.tokens[r.start + i],
+                pos: r.start + i,
+            };
+        }
+        let logits = exec.decode_step(&feeds)?;
+        for (ri, r) in runs.iter().enumerate() {
+            if r.is_last && j + 1 == r.len {
+                let row = logits
+                    [r.slot * dims.vocab..(r.slot + 1) * dims.vocab]
+                    .to_vec();
+                final_logits.push((ri, row));
+            }
+        }
+    }
+    // Commit the fed chunks into the block tables (page claims happen
+    // here, chunk by chunk) and finish completed prefills.
+    for (ri, r) in runs.iter().enumerate() {
+        let Some(chunk) = st.prefills.get(&r.request).map(|pf| {
+            pf.tokens[r.start..r.start + r.len].to_vec()
+        }) else {
+            continue;
+        };
+        match slots.extend_chunk(r.slot, &chunk) {
+            Ok(_) => {
+                st.sched.chunk_committed(r.request, r.len);
+                if r.is_last {
+                    let row = final_logits
+                        .iter()
+                        .find(|(i, _)| *i == ri)
+                        .map(|(_, l)| l.clone());
+                    let pf = st.prefills.remove(&r.request);
+                    match (pf, row) {
+                        (Some(pf), Some(row)) => {
+                            let _scope =
+                                tele.map(|t| t.req_scope(r.request));
+                            finish_prefill(st, tele, pf, &row);
+                        }
+                        (Some(pf), None) => {
+                            // No final logits captured: structural
+                            // failure, surfaced through Response.
+                            let _ = slots.release(r.slot);
+                            st.sched.drop_request(r.request);
+                            let err = SlotStateError::MissingPrefill {
+                                request: r.request,
+                            };
+                            let _ = pf
+                                .staged
+                                .into_item()
+                                .respond
+                                .send(Err(err.into()));
+                        }
+                        (None, _) => {}
+                    }
+                }
+            }
+            Err(KvError::CapacityExhausted { .. }) => {
+                // The chunk's pages raced decode growth: restart this
+                // prefill from the queue front (recompute).
+                if let Some(pf) = st.prefills.remove(&r.request) {
+                    let _ = slots.release(r.slot);
+                    let q = queue_entry_for(&pf.staged, pf.tokens.len());
+                    st.staging.insert(r.request, pf.staged);
+                    requeue_cont.push(q);
+                }
+            }
+            Err(e) => {
+                if let Some(pf) = st.prefills.remove(&r.request) {
+                    let _ = slots.release(r.slot);
+                    st.sched.drop_request(r.request);
+                    let _ =
+                        pf.staged.into_item().respond.send(Err(e.into()));
+                }
+            }
+        }
+    }
+
+    // FCFS-preserving group requeue (per-item push_front would reverse
+    // the group — the satellite regression fix).
+    requeue_cont.extend(requeue_new);
+    st.sched.requeue_all(requeue_cont);
+    drop(stall_span);
+    drop(kv_wait_span);
+
+    // ---- one batched decode step for all decoding slots -------------
+    if st.jobs.iter().all(|j| j.is_none()) {
+        return Ok(());
+    }
+    let step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
+    let feeds = build_feeds(dims.batch, slots, st);
+    let logits = exec.decode_step(&feeds)?;
+
+    for (slot, req, _) in slots.live_slots() {
+        // A preemption earlier in this pass may have freed the slot.
+        if slots.slot_of(req) != Some(slot) {
+            continue;
+        }
+        // Mid-prefill slots don't decode yet.
+        if st.prefills.contains_key(&req) {
+            continue;
+        }
+        if st.jobs[slot].is_none() {
+            // A live, decoding slot must hold a job: structured error
+            // surfaced through the response channel, not a panic.
+            surface_slot_error(slots, st, slot, req);
+            continue;
+        }
+        let sampled_done = {
+            let Some(job) = st.jobs[slot].as_mut() else { continue };
+            // Per-slot Sample span carries the request id so the
+            // time-between-tokens histogram works in batched mode.
+            let _s = tele.map(|t| {
+                t.span_req(Cat::Sample, "sample", job.item.request.id)
+            });
+            let row = &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
+            let tok = sampling::sample(row, &job.item.request.sampling,
+                                       &mut job.rng);
+            job.tokens.push(tok);
+            tok == tokenizer::EOS
+                || job.tokens.len() >= job.item.request.max_new_tokens
+        };
+        let mut done = sampled_done;
+        if !done {
+            // The cache now holds the token we just fed; record it in
+            // the block table (this is where pages grow).
+            let fed = feeds[slot].token;
+            match slots.advance(slot, fed) {
+                Ok(_) => {}
+                Err(KvError::CapacityExhausted { .. }) => {
+                    match preempt_for_growth(slots, st, slot, fed)? {
+                        Growth::Advanced => {}
+                        Growth::SelfPreempted => continue,
+                        Growth::Capped => done = true,
+                    }
+                }
+                // Sequence cap (max_seq): finish the request.
+                Err(_) => done = true,
+            }
+        }
+        if done {
+            let Some(job) = st.jobs[slot].take() else {
+                surface_slot_error(slots, st, slot, req);
+                continue;
+            };
+            slots.release(slot)?;
+            st.sched.finished(req);
+            let resp = finish_decoder_response(&job);
+            let _ = job.item.respond.send(Ok(resp));
+        }
+    }
+    drop(step_span);
+    Ok(())
 }
 
 fn decoder_worker(engine: &Engine, cfg: RouterConfig,
@@ -256,7 +809,8 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         && DecoderSession::decode_stage_name(engine, batch, &cfg.opt).is_ok();
 
     if !use_batched {
-        // Sequential (bs=1) serving loop.
+        // Sequential (bs=1) serving loop: every request runs through
+        // the sched drivers via `DecoderSession::generate`.
         while let Ok(item) = rx.recv() {
             let resp = serve_one_decoder(&session, &item.request);
             let _ = item.respond.send(resp);
@@ -265,20 +819,19 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     }
 
     // ---- continuous batching loop ------------------------------------
-    let decode_name =
-        DecoderSession::decode_stage_name(engine, batch, &cfg.opt)?;
-    let decode = engine.stage(&decode_name)?;
-    let kv_pack = engine.stage(&format!("kv_pack_b{batch}"))?;
-    let kv_shape = dims.kv_shape(batch);
-    let zero = Tensor::zeros(DType::F32, &kv_shape);
-    let mut ck: PjRtBuffer = engine.upload(&zero)?;
-    let mut cv: PjRtBuffer = engine.upload(&zero)?;
     // The compiled graph keeps its dense per-slot cache; the paged pool
     // meters capacity (prefix sharing, growth, preemption) under it.
+    let mut exec = BatchedExecutor::new(engine, &session, batch, &cfg.opt)?;
     let mut slots = PagedKvSlots::paged(batch, dims.max_seq, cfg.kv);
-    let mut jobs: Vec<Option<SlotJob>> = (0..batch).map(|_| None).collect();
-    let mut batcher = Batcher::new(cfg.prefill_budget);
-    let mut staging: HashMap<u64, Staged> = HashMap::new();
+    let mut st = WorkerState {
+        jobs: (0..batch).map(|_| None).collect(),
+        prefills: HashMap::new(),
+        staging: HashMap::new(),
+        sched: Scheduler::new(SchedConfig {
+            prefill_budget: cfg.prefill_budget,
+            chunk: cfg.chunk_prefill,
+        }),
+    };
     let mut closed = false;
     // Consecutive empty ticks with queued work: a request larger than
     // the whole page budget can never be admitted; shed it instead of
@@ -290,8 +843,9 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         // Drain the queue without blocking while work is live.
         loop {
             match rx.try_recv() {
-                Ok(item) => intake_decoder_item(item, &session, &mut batcher,
-                                                &mut staging, tele)?,
+                Ok(item) => {
+                    intake_decoder_item(item, &session, &mut st, tele)?
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     closed = true;
@@ -299,58 +853,55 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
                 }
             }
         }
-        if closed && slots.live_count() == 0 && batcher.pending() == 0 {
+        if closed && slots.live_count() == 0 && st.sched.pending() == 0 {
             return Ok(());
         }
-        if slots.live_count() == 0 && batcher.pending() == 0 {
+        if slots.live_count() == 0 && st.sched.pending() == 0 {
             // Idle: block for the next request.
             match rx.recv() {
-                Ok(item) => intake_decoder_item(item, &session, &mut batcher,
-                                                &mut staging, tele)?,
+                Ok(item) => {
+                    intake_decoder_item(item, &session, &mut st, tele)?
+                }
                 Err(_) => return Ok(()),
             }
             continue;
         }
 
-        // One scheduler tick: admission, then one batched decode step.
+        // One scheduler tick: plan against the capacity view (free
+        // slots + free pages − growth watermark), then execute it.
         if let Some(t) = tele {
             t.next_tick();
         }
-
-        // Admission: prefill into free slots, against the capacity
-        // view (free slots + free pages − growth watermark).
-        let adm = {
-            let _s = tele.map(|t| t.span(Cat::Schedule, "admission"));
-            batcher.tick(&slots.capacity_view())
+        let plan = {
+            let _s = tele.map(|t| t.span(Cat::Plan, "plan"));
+            st.sched.plan(&slots.capacity_view())
         };
-        // A free slot existed but pages didn't cover the next prompt:
-        // count the tick and mark the host window so the idle-gap
-        // attribution can bucket it as KvCapacity, not Scheduling. The
-        // span is held only when the tick admitted *nothing* — on a
-        // partially blocked tick the admitted requests' tokenize /
-        // prefill / sample time must keep its own buckets.
-        let kv_wait_span = if adm.blocked_on_capacity {
-            slots.note_capacity_wait();
-            if adm.admit.is_empty() {
-                tele.map(|t| t.span(Cat::KvWait, "kv_capacity_wait"))
-            } else {
-                None
-            }
-        } else {
-            None
-        };
-        if adm.admit.is_empty() && slots.live_count() == 0
-            && batcher.pending() > 0
-        {
+        // No chunk planned and no decode job to free pages: queued or
+        // mid-prefill work larger than the pool can ever grant would
+        // spin forever — shed it instead (keeping the worker alive).
+        let no_progress = plan.chunks.is_empty()
+            && st.jobs.iter().all(|j| j.is_none())
+            && (st.sched.pending() > 0 || !st.prefills.is_empty());
+        if no_progress {
             stalled += 1;
             if stalled > 2 {
-                if let Some(q) = batcher.pop_front() {
-                    if let Some(staged) = staging.remove(&q.id) {
-                        let item = match staged {
-                            Staged::Fresh(item) => item,
-                            Staged::Resume(job) => job.item,
-                        };
-                        let _ = item.respond.send(Err(anyhow!(
+                if let Some(req) = st.sched.head_prefilling() {
+                    // A wedged chunked prefill holds its slot and
+                    // pages; fail it through its response channel.
+                    st.sched.drop_request(req);
+                    if let Some(pf) = st.prefills.remove(&req) {
+                        let _ = slots.release(pf.slot);
+                        let _ = pf.staged.into_item().respond.send(Err(
+                            anyhow!(
+                                "request {req} exceeds the KV page budget \
+                                 (chunked prefill cannot be granted pages)"
+                            ),
+                        ));
+                    }
+                } else if let Some(q) = st.sched.shed_front() {
+                    st.sched.drop_request(q.id);
+                    if let Some(staged) = st.staging.remove(&q.id) {
+                        let _ = staged.into_item().respond.send(Err(anyhow!(
                             "request {} exceeds the KV page budget",
                             q.id
                         )));
@@ -361,179 +912,14 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         } else {
             stalled = 0;
         }
-        for q in adm.admit {
-            let staged = staging.remove(&q.id).context("staged item")?;
-            let _req_scope = tele.map(|t| t.req_scope(q.id));
-            match staged {
-                Staged::Fresh(item) => {
-                    let prefill_span =
-                        tele.map(|t| t.span(Cat::Prefill, "admit"));
-                    let started = Instant::now();
-                    let prompt = {
-                        let _t =
-                            tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
-                        tokenize_decoder_input(&item.request)?
-                    };
-                    let (logits, kv1) = session.prefill(&prompt)?;
-                    let slot = match slots.alloc(q.id, &prompt) {
-                        Ok((slot, _share)) => slot,
-                        Err(KvError::CapacityExhausted { .. }) => {
-                            // Decode growth raced the admission view;
-                            // retry next tick, FCFS position intact.
-                            let id = q.id;
-                            batcher.push_front(q);
-                            staging.insert(id, Staged::Fresh(item));
-                            continue;
-                        }
-                        Err(e) => {
-                            // Structural refusal (prompt ≥ max_seq, …):
-                            // fail the request, keep the worker alive.
-                            let _ = item.respond.send(Err(e.into()));
-                            continue;
-                        }
-                    };
-                    let (nck, ncv) =
-                        pack_slot(engine, &kv_pack, &ck, &cv, &kv1, slot)?;
-                    ck = nck;
-                    cv = ncv;
-                    // sample the first token from the prefill logits
-                    let mut rng =
-                        Rng::new(item.request.sampling.seed ^ q.id);
-                    let first = {
-                        let _s =
-                            tele.map(|t| t.span(Cat::Sample, "sample_first"));
-                        sampling::sample(&logits, &item.request.sampling,
-                                         &mut rng)
-                    };
-                    let ttft = started.elapsed().as_secs_f64();
-                    drop(prefill_span);
-                    jobs[slot] = Some(SlotJob {
-                        prompt_len: prompt.len(),
-                        tokens: vec![first],
-                        rng,
-                        started,
-                        ttft,
-                        item,
-                    });
-                }
-                Staged::Resume(job) => {
-                    // Recompute half of preemption: re-prefill prompt +
-                    // all-but-pending generated tokens, then continue
-                    // decoding from the job's saved state.
-                    let prefill_span =
-                        tele.map(|t| t.span(Cat::Prefill, "resume"));
-                    let mut prefix = {
-                        let _t =
-                            tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
-                        tokenize_decoder_input(&job.item.request)?
-                    };
-                    prefix.extend_from_slice(
-                        &job.tokens[..job.tokens.len() - 1],
-                    );
-                    let (_logits, kv1) = session.prefill(&prefix)?;
-                    let slot = match slots.alloc(q.id, &prefix) {
-                        Ok((slot, _share)) => slot,
-                        Err(KvError::CapacityExhausted { .. }) => {
-                            let id = q.id;
-                            batcher.push_front(q);
-                            staging.insert(id, Staged::Resume(job));
-                            continue;
-                        }
-                        Err(e) => {
-                            let _ = job.item.respond.send(Err(e.into()));
-                            continue;
-                        }
-                    };
-                    let (nck, ncv) =
-                        pack_slot(engine, &kv_pack, &ck, &cv, &kv1, slot)?;
-                    ck = nck;
-                    cv = ncv;
-                    drop(prefill_span);
-                    jobs[slot] = Some(job);
-                }
-            }
-        }
-        drop(kv_wait_span);
-
-        if slots.live_count() == 0 {
-            continue;
-        }
-
-        // One batched decode step for all live slots.
-        let step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
-        let mut toks = vec![0i32; batch];
-        let mut poss = vec![0i32; batch];
-        for (slot, _, pos) in slots.live_slots() {
-            let job = jobs[slot].as_ref().unwrap();
-            toks[slot] = *job.tokens.last().unwrap();
-            poss[slot] = pos as i32;
-        }
-        let t_toks = Tensor::from_i32(&[batch], &toks);
-        let t_poss = Tensor::from_i32(&[batch], &poss);
-        let outs = engine.run(
-            &decode,
-            &[Arg::Host(&t_toks), Arg::Host(&t_poss), Arg::Dev(&ck),
-              Arg::Dev(&cv)],
-        )?;
-        let mut it = outs.into_iter();
-        let logits_buf = it.next().context("logits")?;
-        ck = it.next().context("ck")?;
-        cv = it.next().context("cv")?;
-        let logits = engine.download(&logits_buf)?.as_f32()?;
-
-        for (slot, _, _) in slots.live_slots() {
-            // A preemption earlier in this pass may have emptied the
-            // slot; skip it rather than unwrap.
-            let (tok, sampled_done) = {
-                let Some(job) = jobs[slot].as_mut() else { continue };
-                // Per-slot Sample span carries the request id so the
-                // time-between-tokens histogram works in batched mode.
-                let _s = tele.map(|t| t.span_req(Cat::Sample, "sample",
-                                                 job.item.request.id));
-                let row =
-                    &logits[slot * dims.vocab..(slot + 1) * dims.vocab];
-                let tok = sampling::sample(row, &job.item.request.sampling,
-                                           &mut job.rng);
-                job.tokens.push(tok);
-                (tok, tok == tokenizer::EOS
-                    || job.tokens.len() >= job.item.request.max_new_tokens)
-            };
-            let mut done = sampled_done;
-            if !done {
-                // The cache now holds the token we just fed; record it
-                // in the block table (this is where pages grow).
-                let fed = toks[slot];
-                match slots.advance(slot, fed) {
-                    Ok(_) => {}
-                    Err(KvError::CapacityExhausted { .. }) => {
-                        match preempt_for_growth(&mut slots, &mut batcher,
-                                                 &mut staging, &mut jobs,
-                                                 slot, fed)? {
-                            Growth::Advanced => {}
-                            Growth::SelfPreempted => continue,
-                            Growth::Capped => done = true,
-                        }
-                    }
-                    // Sequence cap (max_seq): finish the request.
-                    Err(_) => done = true,
-                }
-            }
-            if done {
-                let job = jobs[slot].take().unwrap();
-                slots.release(slot)?;
-                let resp = finish_decoder_response(&job);
-                let _ = job.item.respond.send(Ok(resp));
-            }
-        }
-        drop(step_span);
+        run_tick(&mut exec, plan, &mut slots, &mut st, tele)?;
     }
 }
 
 /// Take one arriving request into the batched decoder: serve
 /// non-batchable tasks inline, otherwise tokenize (traced) and queue.
 fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
-                       batcher: &mut Batcher,
-                       staging: &mut HashMap<u64, Staged>,
+                       st: &mut WorkerState,
                        tele: Option<&WorkerTracer>) -> Result<()> {
     // Non-batchable tasks (T-I contrastive) run inline.
     if item.request.task == TaskKind::TextToImage {
@@ -546,12 +932,12 @@ fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
                                          item.request.id));
         tokenize_decoder_input(&item.request)?
     };
-    batcher.push(QueuedRequest {
+    st.sched.enqueue(QueuedRequest {
         id: item.request.id,
         prompt_len: prompt.len(),
         max_new_tokens: item.request.max_new_tokens,
     });
-    staging.insert(item.request.id, Staged::Fresh(item));
+    st.staging.insert(item.request.id, Staged::Fresh(item));
     Ok(())
 }
 

@@ -402,6 +402,24 @@ impl KvPool {
         Ok(t.pos())
     }
 
+    /// Chunked-prefill append: extend a live sequence by a whole chunk
+    /// of tokens, claiming pages block by block. All-or-nothing at the
+    /// position level: on failure the fill position rewinds to where
+    /// it was (pages the partial extension claimed stay mapped —
+    /// overwrite semantics, exactly like a LayerSkip rewind — and are
+    /// reclaimed at release/preemption). Returns the new position.
+    pub fn extend(&mut self, request: u64, tokens: &[i32])
+                  -> Result<usize, KvError> {
+        let start = self.pos(request)?;
+        for &t in tokens {
+            if let Err(e) = self.advance(request, t) {
+                let _ = self.rewind_to(request, start);
+                return Err(e);
+            }
+        }
+        Ok(start + tokens.len())
+    }
+
     /// LayerSkip rollback: lower the fill position, keep the pages.
     pub fn rewind_to(&mut self, request: u64, new_pos: usize)
                      -> Result<(), KvError> {
@@ -711,6 +729,32 @@ mod tests {
         assert_eq!(p.pos(11).unwrap(), 4);
         p.check_invariants().unwrap();
         assert!(p.resume_swapped(99).is_err());
+    }
+
+    /// Chunked prefill appends whole chunks through the block table,
+    /// claiming pages at block boundaries; a chunk the budget cannot
+    /// cover rewinds the position (no token half-applied).
+    #[test]
+    fn extend_appends_chunks_and_rewinds_on_capacity() {
+        let mut p = KvPool::new(3, 4, 64);
+        p.alloc(1, &[1, 2, 3]).unwrap(); // 1 page
+        assert_eq!(p.extend(1, &[4, 5, 6, 7, 8]).unwrap(), 8);
+        assert_eq!(p.pos(1).unwrap(), 8);
+        assert_eq!(p.table(1).unwrap().num_pages(), 2);
+        p.check_invariants().unwrap();
+        // Extending by 9 needs pages beyond the 3-page budget: the
+        // position must rewind to 8 (claimed pages stay mapped,
+        // overwrite semantics — reclaimed at release).
+        let err = p.extend(1, &[9; 9]).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        assert_eq!(p.pos(1).unwrap(), 8, "position rewound");
+        p.check_invariants().unwrap();
+        // A fitting chunk still goes through afterwards.
+        assert_eq!(p.extend(1, &[9, 9]).unwrap(), 10);
+        assert_eq!(p.extend(99, &[1]).unwrap_err(),
+                   KvError::UnknownRequest(99));
+        p.release(1).unwrap();
+        p.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,24 +1,39 @@
 //! Deterministic workload replay: paged pool vs. dense slots under the
-//! same page budget.
+//! same page budget, with whole-prompt or chunked prefill admission.
 //!
 //! Drives a mixed request stream (short-chat-heavy, shared system
-//! prompt, a long-document tail) through the real admission path — the
-//! continuous [`Batcher`] over a [`PagedKvSlots`] view — one scheduler
-//! tick per batched decode step, exactly like the serving loop but
-//! without a device. The dense baseline gets the *same byte budget*
-//! expressed as worst-case slots (`pages · page_size / max_seq`); the
-//! paged run gets it as pages. The difference in sustained batch
-//! occupancy is the paper's Table-3 capacity lever, measured end to
-//! end with the pool's own telemetry counters.
+//! prompt, a long-document tail) through the real scheduling path —
+//! the unified [`Scheduler`] over a [`PagedKvSlots`] view — one
+//! scheduler tick per batched decode step, exactly like the serving
+//! loop but without a device. The dense baseline gets the *same byte
+//! budget* expressed as worst-case slots (`pages · page_size /
+//! max_seq`); the paged run gets it as pages. The difference in
+//! sustained batch occupancy is the paper's Table-3 capacity lever.
+//!
+//! A simulated clock prices each tick at one decode dispatch plus the
+//! prefill tokens the tick actually fed ([`SIM_DECODE_COST`] +
+//! tokens × [`SIM_PREFILL_TOKEN_COST`]), which makes the
+//! prefill/decode-interference effect measurable without hardware:
+//! whole-prompt admission stacks entire prompts into single ticks
+//! (huge TBT outliers for the requests already decoding), while
+//! `chunk_prefill` bounds any tick's prefill work by the chunk budget
+//! — the replay reports mean/p99 TBT and p99 TTFT for both.
 
 use std::collections::HashMap;
 
-use crate::coordinator::batcher::{Batcher, QueuedRequest};
+use crate::coordinator::batcher::QueuedRequest;
 use crate::coordinator::kv::PagedKvSlots;
+use crate::sched::{SchedConfig, Scheduler};
+use crate::substrate::metrics::Histogram;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
 
 use super::{KvError, KvPoolConfig, PoolStats, PreemptMode};
+
+/// Simulated cost of one batched decode dispatch (arbitrary units).
+pub const SIM_DECODE_COST: f64 = 1.0;
+/// Simulated cost of prefilling one prompt token.
+pub const SIM_PREFILL_TOKEN_COST: f64 = 0.05;
 
 /// The replayed request mix (defaults: short-chat-heavy with a shared
 /// system prompt — the regime where paging pays most).
@@ -43,6 +58,8 @@ pub struct ReplayConfig {
     pub batch_slots: usize,
     pub max_seq: usize,
     pub prefill_budget: usize,
+    /// Chunked prefill: max new prompt tokens per tick (0 = whole).
+    pub chunk_prefill: usize,
     pub seed: u64,
 }
 
@@ -61,6 +78,7 @@ impl Default for ReplayConfig {
             batch_slots: 16,
             max_seq: 512,
             prefill_budget: 0,
+            chunk_prefill: 0,
             seed: 7,
         }
     }
@@ -87,6 +105,16 @@ pub struct ReplayResult {
     pub peak_occupancy: usize,
     /// Mean live-page fraction of the budget (paged runs only).
     pub mean_pool_utilization: f64,
+    /// Simulated wall clock at drain.
+    pub sim_time: f64,
+    /// Simulated time-to-first-token per request (enqueue at t = 0).
+    pub ttft: Histogram,
+    /// Simulated per-tick latency experienced by decoding requests —
+    /// the time-between-tokens distribution.
+    pub tbt: Histogram,
+    /// Largest prompt-token load any single tick carried (the decode
+    /// stall bound chunked prefill is for).
+    pub max_tick_prefill_tokens: usize,
     /// Pool counters (zeros for the dense baseline).
     pub stats: PoolStats,
 }
@@ -99,17 +127,22 @@ struct Pending {
 /// Replay the mix through a paged pool (`paged`) or the dense slot
 /// baseline under the same byte budget.
 pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
-    let slots = if paged { cfg.batch_slots } else { cfg.dense_slots() };
+    let slots_n = if paged { cfg.batch_slots } else { cfg.dense_slots() };
     let mut kv = if paged {
-        PagedKvSlots::paged(slots, cfg.max_seq, KvPoolConfig {
+        PagedKvSlots::paged(slots_n, cfg.max_seq, KvPoolConfig {
             page_size: cfg.page_size,
             total_pages: cfg.total_pages,
         })
     } else {
-        PagedKvSlots::dense(slots, cfg.max_seq)
+        PagedKvSlots::dense(slots_n, cfg.max_seq)
     };
-    let mut batcher = Batcher::new(cfg.prefill_budget);
+    let mut sched = Scheduler::new(SchedConfig {
+        prefill_budget: cfg.prefill_budget,
+        chunk: cfg.chunk_prefill,
+    });
+    // Queued payloads, mid-prefill payloads, and decode budgets.
     let mut staging: HashMap<u64, Pending> = HashMap::new();
+    let mut inflight: HashMap<u64, Pending> = HashMap::new();
     let mut remaining: HashMap<u64, usize> = HashMap::new();
 
     // Closed-loop arrival: the full mix queues up front (the regime
@@ -130,7 +163,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
         let decode = rng.usize(dr.0, dr.1 + 1).max(1);
         let mut tokens = sys.clone();
         tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
-        batcher.push(QueuedRequest {
+        sched.enqueue(QueuedRequest {
             id,
             prompt_len: tokens.len(),
             max_new_tokens: decode,
@@ -138,6 +171,9 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
         staging.insert(id, Pending { tokens, remaining: decode });
     }
 
+    let mut now = 0.0f64;
+    let mut ttft = Histogram::new();
+    let mut tbt = Histogram::new();
     let mut decode_ticks = 0u64;
     let mut occupancy_sum = 0u64;
     let mut peak = 0usize;
@@ -146,22 +182,36 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
     let mut tokens_decoded = 0u64;
     let mut util_sum = 0.0f64;
     let mut stalled = 0usize;
+    let mut max_tick_prefill = 0usize;
+    let mut guard = 0u64;
 
-    while (batcher.pending() > 0 || kv.live_count() > 0)
-        && decode_ticks < 1_000_000
+    while (sched.pending() > 0 || kv.live_count() > 0) && guard < 1_000_000
     {
-        // ---- admission -------------------------------------------------
+        guard += 1;
+        // ---- plan ------------------------------------------------------
         let view = kv.capacity_view();
-        let adm = batcher.tick(&view);
-        if adm.blocked_on_capacity {
+        let plan = sched.plan(&view);
+        if plan.blocked_on_capacity {
             kv.note_capacity_wait();
         }
-        if adm.admit.is_empty() && kv.live_count() == 0 {
-            // Nothing live and nothing admissible: a request larger
-            // than the whole budget would stall forever — drop it.
+        // Nothing planned and nothing decoding to free pages: queued
+        // or mid-prefill work larger than the pool can ever grant
+        // would stall forever — shed it (mirrors the server worker).
+        if plan.chunks.is_empty() && remaining.is_empty()
+            && (sched.pending() > 0 || !inflight.is_empty())
+        {
             stalled += 1;
             if stalled > 2 {
-                if let Some(q) = batcher.pop_front() {
+                if let Some(req) = sched.head_prefilling() {
+                    // Wedged chunked prefill: free its slot and pages.
+                    sched.drop_request(req);
+                    if let Some(slot) = kv.slot_of(req) {
+                        let _ = kv.release(slot);
+                    }
+                    inflight.remove(&req);
+                    dropped += 1;
+                } else if let Some(q) = sched.shed_front() {
+                    sched.drop_request(q.id);
                     staging.remove(&q.id);
                     dropped += 1;
                 }
@@ -170,44 +220,132 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
             continue;
         }
         stalled = 0;
-        for q in adm.admit {
-            let Some(p) = staging.remove(&q.id) else { continue };
-            match kv.alloc(q.id, &p.tokens) {
-                Ok(_) => {
-                    remaining.insert(q.id, p.remaining);
+
+        // ---- execute prefill chunks ------------------------------------
+        let mut tick_prefill = 0usize;
+        let mut finished_prefill: Vec<u64> = Vec::new();
+        let mut requeue: Vec<QueuedRequest> = Vec::new();
+        for c in &plan.chunks {
+            if c.start == 0 {
+                let Some(p) = staging.remove(&c.request) else {
+                    sched.drop_request(c.request);
+                    continue;
+                };
+                let len = c.len.min(p.tokens.len());
+                match kv.alloc(c.request, &p.tokens[..len]) {
+                    Ok(_) => {
+                        tick_prefill += len;
+                        sched.chunk_committed(c.request, len);
+                        if len >= p.tokens.len() {
+                            remaining.insert(c.request, p.remaining);
+                            finished_prefill.push(c.request);
+                        } else {
+                            inflight.insert(c.request, p);
+                        }
+                    }
+                    Err(KvError::CapacityExhausted { .. }) => {
+                        // Growth raced the view; retry next tick.
+                        requeue.push(QueuedRequest {
+                            id: c.request,
+                            prompt_len: p.tokens.len(),
+                            max_new_tokens: p.remaining,
+                        });
+                        staging.insert(c.request, p);
+                    }
+                    Err(_) => {
+                        sched.drop_request(c.request);
+                        dropped += 1;
+                    }
                 }
-                Err(KvError::CapacityExhausted { .. }) => {
-                    // Growth raced the view; retry next tick.
-                    batcher.push_front(QueuedRequest {
-                        id: q.id,
-                        prompt_len: p.tokens.len(),
-                        max_new_tokens: p.remaining,
-                    });
-                    staging.insert(q.id, p);
+            } else {
+                let Some(slot) = kv.slot_of(c.request) else {
+                    sched.drop_request(c.request);
+                    inflight.remove(&c.request);
+                    continue;
+                };
+                let total = inflight
+                    .get(&c.request)
+                    .map(|p| p.tokens.len())
+                    .unwrap_or(0);
+                let start = kv.pos(slot).unwrap_or(c.start);
+                let len = c.len.min(total.saturating_sub(start));
+                if len == 0 {
+                    continue;
                 }
-                Err(_) => {
-                    dropped += 1;
+                let chunk: Vec<i32> = inflight[&c.request].tokens
+                    [start..start + len]
+                    .to_vec();
+                match kv.extend_chunk(slot, &chunk) {
+                    Ok(_) => {
+                        tick_prefill += len;
+                        sched.chunk_committed(c.request, len);
+                        if start + len >= total {
+                            let p = inflight
+                                .remove(&c.request)
+                                .expect("inflight entry");
+                            remaining.insert(c.request, p.remaining);
+                            finished_prefill.push(c.request);
+                        }
+                    }
+                    Err(KvError::CapacityExhausted { .. }) => {
+                        // Chunk growth raced decode growth: restart
+                        // from the queue front (recompute).
+                        let p = inflight
+                            .remove(&c.request)
+                            .expect("inflight entry");
+                        let _ = kv.release(slot);
+                        requeue.push(QueuedRequest {
+                            id: c.request,
+                            prompt_len: p.tokens.len(),
+                            max_new_tokens: p.remaining,
+                        });
+                        staging.insert(c.request, p);
+                    }
+                    Err(_) => {
+                        // Structural failure (e.g. the prefix reaches
+                        // max_seq): requeueing would fail identically
+                        // forever — drop, like the server worker.
+                        inflight.remove(&c.request);
+                        let _ = kv.release(slot);
+                        sched.drop_request(c.request);
+                        dropped += 1;
+                    }
                 }
             }
         }
+        sched.requeue_all(requeue);
+        max_tick_prefill = max_tick_prefill.max(tick_prefill);
 
-        // ---- one batched decode step ----------------------------------
-        if kv.live_count() == 0 {
+        // ---- one batched decode step + the simulated clock -------------
+        let decoding: Vec<(usize, u64, usize)> = kv
+            .live_slots()
+            .into_iter()
+            .filter(|(_, req, _)| remaining.contains_key(req))
+            .collect();
+        let tick_cost = tick_prefill as f64 * SIM_PREFILL_TOKEN_COST
+            + if decoding.is_empty() { 0.0 } else { SIM_DECODE_COST };
+        now += tick_cost;
+        // First token is sampled from the completing prefill's logits
+        // at the end of this tick.
+        for _ in &finished_prefill {
+            ttft.record(now);
+        }
+        if decoding.is_empty() {
             continue;
         }
         decode_ticks += 1;
-        let live = kv.live_slots();
-        occupancy_sum += live.len() as u64;
-        peak = peak.max(live.len());
+        occupancy_sum += decoding.len() as u64;
+        peak = peak.max(decoding.len());
         if let Some(pool) = kv.pool() {
             util_sum +=
                 pool.live_pages() as f64 / pool.total_pages() as f64;
         }
-        for (slot, req, pos) in live {
+        for (slot, req, pos) in decoding {
             // A preemption earlier in this step may have freed the slot.
             if kv.slot_of(req) != Some(slot) {
                 continue;
             }
+            tbt.record(tick_cost);
             let rem = {
                 let r = remaining.get_mut(&req).expect("live job");
                 *r -= 1;
@@ -217,6 +355,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
             if rem == 0 {
                 kv.release(slot).expect("live slot");
                 remaining.remove(&req);
+                sched.finished(req);
                 completed += 1;
                 continue;
             }
@@ -227,6 +366,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
                     // Sequence cap: finish early, like the server loop.
                     kv.release(slot).expect("live slot");
                     remaining.remove(&req);
+                    sched.finished(req);
                     completed += 1;
                 }
                 Err(KvError::CapacityExhausted { .. }) => {
@@ -239,19 +379,30 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
                         else {
                             break;
                         };
-                        let rem_v =
-                            remaining.remove(&pre.request).unwrap_or(0);
-                        batcher.push_front(QueuedRequest {
-                            id: pre.request,
-                            prompt_len: pre.tokens.len(),
-                            max_new_tokens: rem_v,
-                        });
-                        staging.insert(pre.request, Pending {
-                            tokens: pre.tokens,
-                            remaining: rem_v,
-                        });
+                        if let Some(p) = inflight.remove(&pre.request) {
+                            // Mid-prefill victim restarts its chunks.
+                            sched.requeue_front(QueuedRequest {
+                                id: pre.request,
+                                prompt_len: p.tokens.len(),
+                                max_new_tokens: p.remaining,
+                            });
+                            staging.insert(pre.request, p);
+                        } else {
+                            let rem_v = remaining
+                                .remove(&pre.request)
+                                .unwrap_or(0);
+                            sched.requeue_front(QueuedRequest {
+                                id: pre.request,
+                                prompt_len: pre.tokens.len(),
+                                max_new_tokens: rem_v,
+                            });
+                            staging.insert(pre.request, Pending {
+                                tokens: pre.tokens,
+                                remaining: rem_v,
+                            });
+                        }
                         if pre.request == req {
-                            break; // we evicted ourselves; resume later
+                            break; // evicted ourselves; resume later
                         }
                         match kv.advance(slot, tok) {
                             Ok(_) => break,
@@ -259,6 +410,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
                             Err(_) => {
                                 kv.release(slot).expect("live slot");
                                 remaining.remove(&req);
+                                sched.finished(req);
                                 completed += 1;
                                 break;
                             }
@@ -268,6 +420,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
                 Err(_) => {
                     kv.release(slot).expect("live slot");
                     remaining.remove(&req);
+                    sched.finished(req);
                     completed += 1;
                 }
             }
@@ -280,7 +433,7 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
     let stats = kv.stats().cloned().unwrap_or_default();
     ReplayResult {
         label: if paged { "paged" } else { "dense" },
-        slots,
+        slots: slots_n,
         decode_ticks,
         completed,
         dropped,
@@ -296,6 +449,10 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
         } else {
             util_sum / decode_ticks as f64
         },
+        sim_time: now,
+        ttft,
+        tbt,
+        max_tick_prefill_tokens: max_tick_prefill,
         stats,
     }
 }
@@ -331,6 +488,35 @@ pub fn render_comparison(paged: &ReplayResult, dense: &ReplayResult)
     t.row(&["capacity-wait ticks".into(),
             paged.stats.capacity_wait_ticks.to_string(),
             "0".into()]);
+    t.render()
+}
+
+/// Whole-prompt vs. chunked prefill on the same mix — the simulated
+/// TBT/TTFT interference comparison for `mmserve kv --chunk-prefill`.
+pub fn render_chunk_comparison(whole: &ReplayResult,
+                               chunked: &ReplayResult, chunk: usize)
+                               -> String {
+    let mut t = Table::new(&[
+        "metric",
+        "whole-prompt",
+        &format!("chunked ({chunk} tok/tick)"),
+    ]);
+    let f2 = |x: f64| format!("{x:.2}");
+    t.row(&["mean TBT (sim)".into(), f2(whole.tbt.mean()),
+            f2(chunked.tbt.mean())]);
+    t.row(&["p99 TBT (sim)".into(), f2(whole.tbt.percentile(99.0)),
+            f2(chunked.tbt.percentile(99.0))]);
+    t.row(&["max TBT (sim)".into(), f2(whole.tbt.max()),
+            f2(chunked.tbt.max())]);
+    t.row(&["p99 TTFT (sim)".into(), f2(whole.ttft.percentile(99.0)),
+            f2(chunked.ttft.percentile(99.0))]);
+    t.row(&["max prefill tokens / tick".into(),
+            whole.max_tick_prefill_tokens.to_string(),
+            chunked.max_tick_prefill_tokens.to_string()]);
+    t.row(&["requests completed".into(), whole.completed.to_string(),
+            chunked.completed.to_string()]);
+    t.row(&["sim wall".into(), f2(whole.sim_time),
+            f2(chunked.sim_time)]);
     t.render()
 }
 
@@ -399,5 +585,94 @@ mod tests {
         assert!(s.contains("mean batch occupancy"));
         assert!(s.contains("prefix hit rate"));
         assert!(s.contains("preemptions"));
+    }
+
+    fn long_mix() -> ReplayConfig {
+        ReplayConfig {
+            requests: 48,
+            long_percent: 50,
+            long_prompt: (96, 200),
+            total_pages: 192,
+            batch_slots: 12,
+            ..ReplayConfig::default()
+        }
+    }
+
+    /// Acceptance criterion (tentpole): on a long-prompt mix, chunked
+    /// prefill bounds any tick's prefill load by the chunk budget, so
+    /// the decode-tick latency tail (TBT) shrinks vs. whole-prompt
+    /// admission, and every request still completes.
+    #[test]
+    fn chunked_prefill_bounds_tbt_tail_on_long_prompt_mix() {
+        let chunk = 32usize;
+        let whole = replay(&long_mix(), true);
+        let chunked = replay(
+            &ReplayConfig { chunk_prefill: chunk, ..long_mix() },
+            true,
+        );
+        assert_eq!(whole.completed, 48);
+        assert_eq!(chunked.completed, 48, "{chunked:?}");
+        assert_eq!(whole.dropped + chunked.dropped, 0);
+        // The scheduler property, observed end to end: no tick fed
+        // more than the chunk budget.
+        assert!(chunked.max_tick_prefill_tokens <= chunk,
+                "tick fed {} > chunk {chunk}",
+                chunked.max_tick_prefill_tokens);
+        // The whole-prompt run stacks ≥ one full long prompt (> 96+48
+        // tokens) into a single tick.
+        assert!(whole.max_tick_prefill_tokens > chunk * 2,
+                "whole mode should stack prompts: {}",
+                whole.max_tick_prefill_tokens);
+        // Per-tick cost is bounded ⇒ the TBT a decoding request can
+        // experience is bounded by decode + chunk·token-cost.
+        let bound =
+            SIM_DECODE_COST + chunk as f64 * SIM_PREFILL_TOKEN_COST + 1e-9;
+        assert!(chunked.tbt.max() <= bound,
+                "chunked TBT {} > bound {bound}", chunked.tbt.max());
+        assert!(whole.tbt.max() > bound,
+                "whole-prompt TBT tail should exceed the chunk bound");
+        assert!(chunked.tbt.percentile(99.0) < whole.tbt.percentile(99.0),
+                "chunked p99 TBT {} !< whole {}",
+                chunked.tbt.percentile(99.0),
+                whole.tbt.percentile(99.0));
+        let s = render_chunk_comparison(&whole, &chunked, chunk);
+        assert!(s.contains("max prefill tokens / tick"));
+    }
+
+    /// Regression (review): a chunked prefill whose remaining chunks
+    /// can never be granted pages must be shed, not livelock the
+    /// scheduler — its first chunk fits, every later plan is blocked,
+    /// and no decode work exists to free pages.
+    #[test]
+    fn wedged_chunked_prefill_is_shed_not_livelocked() {
+        let cfg = ReplayConfig {
+            requests: 1,
+            system_prompt_len: 20,
+            short_prompt: (80, 80),
+            short_decode: (4, 8),
+            long_percent: 0,
+            page_size: 4,
+            total_pages: 8, // 32 positions: a 100-token prompt never fits
+            batch_slots: 2,
+            chunk_prefill: 16,
+            ..ReplayConfig::default()
+        };
+        let r = replay(&cfg, true);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.dropped, 1, "wedged prefill must be shed: {r:?}");
+    }
+
+    #[test]
+    fn chunked_replay_is_deterministic_and_checks_invariants() {
+        let cfg = ReplayConfig {
+            chunk_prefill: 24,
+            ..ReplayConfig::default()
+        };
+        let a = replay(&cfg, true);
+        let b = replay(&cfg, true);
+        assert_eq!(a.completed, cfg.requests);
+        assert_eq!(a.decode_ticks, b.decode_ticks);
+        assert_eq!(a.sim_time, b.sim_time);
+        assert_eq!(a.stats.preemptions, b.stats.preemptions);
     }
 }

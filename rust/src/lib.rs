@@ -30,6 +30,14 @@
 //! slots. `mmserve kv` replays a workload through it and prints the
 //! paged-vs-dense occupancy comparison.
 //!
+//! [`sched`] sits between the batcher/kvpool and the execution
+//! engines: a tick `Scheduler` that turns queue + capacity state into
+//! an explicit `TickPlan` (decode batch ∪ prefill *chunks* under a
+//! token budget), and the `StepExecutor` trait that all four
+//! text-generation paths (batched graph, bs=1 graph, eager, LayerSkip)
+//! implement — so per-tick policy like chunked prefill
+//! (`--chunk-prefill`) is written once.
+//!
 //! Python never runs on the request path: `artifacts/` are compiled once
 //! by `make artifacts`; this crate loads them via PJRT (`runtime`).
 
@@ -38,6 +46,7 @@ pub mod kvpool;
 pub mod models;
 pub mod perfmodel;
 pub mod runtime;
+pub mod sched;
 pub mod substrate;
 pub mod telemetry;
 pub mod workload;

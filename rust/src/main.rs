@@ -28,7 +28,8 @@ use mmserve::coordinator::opts::{AttnImpl, ExecMode, OptConfig, QuantMode};
 use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
-use mmserve::kvpool::replay::{render_comparison, replay, ReplayConfig};
+use mmserve::kvpool::replay::{render_chunk_comparison, render_comparison,
+                              replay, ReplayConfig};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
@@ -210,6 +211,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("max-new", "max new tokens per request", Some("16"))
         .opt("batch", "decode batch size", Some("4"))
         .opt("quant", "f32|int8wo|int8dyn", Some("f32"))
+        .opt("prefill-budget", "prefill token budget per tick (0 = off)",
+             Some("0"))
+        .opt("chunk-prefill",
+             "chunked prefill: max new prompt tokens per tick (0 = whole)",
+             Some("0"))
         .flag("sdpa", "enable the flash-attention stages")
         .flag("eager", "per-op dispatch (launch-overhead baseline)")
         .flag("layerskip", "self-speculative decoding")
@@ -223,6 +229,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let opt = opt_from_args(&a);
     let n = a.get_usize("requests", 8);
     let max_new = a.get_usize("max-new", 16);
+    if a.get_usize("chunk-prefill", 0) > 0
+        && a.get_usize("prefill-budget", 0) > 0
+    {
+        eprintln!(
+            "mmserve: note: --chunk-prefill is the per-tick budget in \
+             chunked mode; --prefill-budget is ignored"
+        );
+    }
 
     println!("starting router: models={models:?} opt=[{opt}]");
     let router = Router::start(
@@ -232,7 +246,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             opt,
             reorder: ReorderMode::Fused,
             batch: a.get_usize("batch", 4),
-            prefill_budget: 0,
+            prefill_budget: a.get_usize("prefill-budget", 0),
+            chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig::default(),
             tracer: None,
         },
@@ -335,6 +350,9 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
         .opt("out", "Chrome-trace output path", Some("trace.json"))
         .opt("device", "A100|H100 for the perfmodel projection",
              Some("A100"))
+        .opt("chunk-prefill",
+             "chunked prefill: max new prompt tokens per tick (0 = whole)",
+             Some("0"))
         .flag("sdpa", "enable the flash-attention stages")
         .flag("eager", "per-op dispatch (launch-overhead baseline)")
         .flag("layerskip", "self-speculative decoding")
@@ -367,6 +385,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             reorder: ReorderMode::Fused,
             batch: a.get_usize("batch", 4),
             prefill_budget: 0,
+            chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig::default(),
             tracer: Some(tracer.clone()),
         },
@@ -429,6 +448,9 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     .opt("long-percent", "percent of long-document requests", Some("20"))
     .opt("prefill-budget", "prefill token budget per tick (0 = off)",
          Some("0"))
+    .opt("chunk-prefill",
+         "chunked prefill: max new prompt tokens per tick (0 = whole)",
+         Some("0"))
     .opt("seed", "workload seed", Some("7"))
     .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
     .flag("help", "show usage");
@@ -437,6 +459,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         println!("{}", cmd.usage());
         return Ok(());
     }
+    let chunk = a.get_usize("chunk-prefill", 0);
     let cfg = ReplayConfig {
         requests: a.get_usize("requests", 64),
         system_prompt_len: a.get_usize("system-prompt", 48),
@@ -467,6 +490,19 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     println!("{}", render_comparison(&paged, &dense));
     println!("\n== paged pool counters (telemetry) ==");
     println!("{}", paged.stats.render());
+
+    if chunk > 0 {
+        // Same mix, chunked admission: the prefill/decode-interference
+        // comparison on the simulated clock.
+        let chunked =
+            replay(&ReplayConfig { chunk_prefill: chunk, ..cfg.clone() },
+                   true);
+        println!(
+            "\n== chunked prefill ({chunk} tokens/tick) vs whole-prompt \
+             admission (simulated clock) =="
+        );
+        println!("{}", render_chunk_comparison(&paged, &chunked, chunk));
+    }
 
     let dev: &DeviceSpec = DeviceSpec::by_name(&a.get_or("device", "A100"))
         .ok_or_else(|| anyhow::anyhow!("unknown device"))?;

@@ -1,0 +1,487 @@
+//! The step-executor abstraction and the generic decode drivers.
+//!
+//! A [`StepExecutor`] is what one serving engine looks like to the
+//! scheduler: it can feed prompt chunks (`prefill_chunk`), take one
+//! decode step for a set of slots (`decode_step`), and — for
+//! self-speculative engines — verify a drafted window in one pass
+//! (`verify`). Four implementations exist:
+//!
+//! | executor                         | lives in                  |
+//! |----------------------------------|---------------------------|
+//! | `BatchedExecutor` (compiled graph, B slots) | `coordinator::server` |
+//! | `GraphExecutor` (compiled graph, bs=1)      | `coordinator::decoder_loop` |
+//! | `EagerExecutor` (per-op dispatch, bs=1)     | `coordinator::eager` |
+//! | `LayerSkipExecutor` (draft/verify, bs=1)    | `coordinator::layerskip` |
+//!
+//! The drivers here replace the four hand-rolled generate loops:
+//! [`generate`] runs the shared bs=1 prefill→sample→decode loop (the
+//! compiled-graph and eager paths differ only in how their executor
+//! consumes the prompt), and [`generate_speculative`] runs the
+//! LayerSkip draft/verify round against the `decode_step` (draft) and
+//! `verify` hooks. The batched worker's tick driver consumes a
+//! [`TickPlan`](super::plan::TickPlan) against the same trait in
+//! `coordinator::server::run_tick`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::decoder_loop::GenResult;
+use crate::coordinator::request::SamplingParams;
+use crate::coordinator::sampling;
+use crate::kvpool::KvPool;
+use crate::models::tokenizer;
+use crate::substrate::rng::Rng;
+use crate::telemetry::tracer::{Cat, WorkerTracer};
+
+/// Static dimensions the planner and drivers size their loops by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecDims {
+    /// Decode slots the executor steps at once (1 for bs=1 engines).
+    pub batch: usize,
+    /// Sequence capacity per slot.
+    pub max_seq: usize,
+    /// Logits row width.
+    pub vocab: usize,
+}
+
+/// One slot's input to a decode step: feed `token` at `pos`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotFeed {
+    pub slot: usize,
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// Structured slot-state errors for the batched worker: a live slot
+/// whose bookkeeping went missing is surfaced through the request's
+/// `Response` channel (or logged) instead of panicking the worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotStateError {
+    /// A slot the plan expected to decode has no `SlotJob`.
+    MissingJob { slot: usize, request: u64 },
+    /// A planned chunk's request has no prefill state.
+    MissingPrefill { request: u64 },
+}
+
+impl std::fmt::Display for SlotStateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlotStateError::MissingJob { slot, request } => write!(
+                f,
+                "slot {slot} is live for request {request} but holds no \
+                 decode job"
+            ),
+            SlotStateError::MissingPrefill { request } => write!(
+                f,
+                "request {request} was planned a prefill chunk but has \
+                 no prefill state"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SlotStateError {}
+
+/// One serving engine, as seen by the scheduler.
+pub trait StepExecutor {
+    /// Batch width, sequence capacity, and vocab size.
+    fn plan_dims(&self) -> ExecDims;
+
+    /// Span name for one decode step (telemetry).
+    fn step_span_name(&self) -> &'static str {
+        "decode_step"
+    }
+
+    /// Feed prompt tokens `[start, start+len)` for `slot`. Returns the
+    /// final position's logits when `is_last` completed the prompt;
+    /// `Ok(None)` when the prompt is not finished — either because
+    /// more chunks follow, or because the executor capped early (e.g.
+    /// the prompt reaches the sequence capacity), in which case the
+    /// driver generates nothing.
+    fn prefill_chunk(&mut self, slot: usize, tokens: &[i32], start: usize,
+                     is_last: bool) -> Result<Option<Vec<f32>>>;
+
+    /// One decode step: feed each slot its token at its position,
+    /// return logits `[batch × vocab]`. For a self-speculative
+    /// executor this is the *draft* step.
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>>;
+
+    /// Verify a drafted window of `verify_window()` tokens starting at
+    /// `start` in one full-model pass; returns logits
+    /// `[window × vocab]`. Only self-speculative executors implement
+    /// this.
+    fn verify(&mut self, _slot: usize, _window: &[i32], _start: usize)
+              -> Result<Vec<f32>> {
+        bail!("this executor has no verify stage")
+    }
+
+    /// Draft window size for [`generate_speculative`] (0 = not a
+    /// speculative executor).
+    fn verify_window(&self) -> usize {
+        0
+    }
+}
+
+/// The shared bs=1 generation loop: chunked prompt feed (the executor
+/// decides how it consumes the chunk — one bucketed prefill for the
+/// compiled graph, token-by-token for eager), then sample→decode with
+/// the position bookkeeping running through a solo kvpool block table.
+pub fn generate(exec: &mut impl StepExecutor, tele: Option<&WorkerTracer>,
+                prompt: &[i32], max_new: usize, sp: &SamplingParams)
+                -> Result<GenResult> {
+    let t0 = Instant::now();
+    let dims = exec.plan_dims();
+    let _tick_scope = tele.map(|t| t.tick_scope());
+    let mut rng = Rng::new(sp.seed);
+    let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
+    let first_logits = exec.prefill_chunk(0, prompt, 0, true)?;
+    drop(prefill_span);
+    let ttft = t0.elapsed().as_secs_f64();
+    let mut pool = KvPool::solo(dims.max_seq);
+    let table_len = prompt.len().min(dims.max_seq - 1);
+    pool.alloc(0, &prompt[..table_len])?;
+    let mut pos = prompt.len();
+    let mut out = Vec::with_capacity(max_new);
+    // `None` means the executor capped before finishing the prompt
+    // (eager stops feeding at the sequence capacity): emit nothing.
+    if let Some(mut logits) = first_logits {
+        for _ in 0..max_new {
+            if let Some(t) = tele {
+                t.next_tick();
+            }
+            let _step_span =
+                tele.map(|t| t.span(Cat::Decode, exec.step_span_name()));
+            let tok = {
+                let _s = tele.map(|t| t.span(Cat::Sample, "sample"));
+                sampling::sample(&logits, sp, &mut rng)
+            };
+            out.push(tok);
+            if tok == tokenizer::EOS || pos + 1 >= dims.max_seq {
+                break;
+            }
+            if out.len() >= max_new {
+                break;
+            }
+            logits =
+                exec.decode_step(&[SlotFeed { slot: 0, token: tok, pos }])?;
+            pos = pool.advance(0, tok)?;
+        }
+    }
+    pool.release(0)?;
+    debug_assert!(pool.check_invariants().is_ok());
+    Ok(GenResult {
+        prompt_tokens: prompt.len(),
+        decode_steps: out.len(),
+        tokens: out,
+        ttft,
+        e2e: t0.elapsed().as_secs_f64(),
+        accepted_drafts: 0,
+        draft_rounds: 0,
+    })
+}
+
+/// The self-speculative round (LayerSkip, §4.3): draft
+/// `verify_window() − 1` cheap tokens through `decode_step`, verify the
+/// whole window in one `verify` pass, accept the longest matching
+/// prefix greedily, emit a bonus token from the verify logits, and
+/// rewind the block table to the accepted position.
+pub fn generate_speculative(exec: &mut impl StepExecutor,
+                            tele: Option<&WorkerTracer>, prompt: &[i32],
+                            max_new: usize, sp: &SamplingParams)
+                            -> Result<GenResult> {
+    let t0 = Instant::now();
+    let dims = exec.plan_dims();
+    let k_window = exec.verify_window();
+    if k_window < 2 {
+        bail!("speculative decoding needs a verify window ≥ 2");
+    }
+    let mut rng = Rng::new(sp.seed);
+    let _tick_scope = tele.map(|t| t.tick_scope());
+    let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
+    let logits = exec
+        .prefill_chunk(0, prompt, 0, true)?
+        .context("speculative prefill must produce logits")?;
+    drop(prefill_span);
+    let ttft = t0.elapsed().as_secs_f64();
+
+    // Block-table view of the speculative cache: drafts advance it,
+    // verification rewinds and overwrites.
+    let mut pool = KvPool::solo(dims.max_seq);
+    let table_len = prompt.len().min(dims.max_seq - 1);
+    pool.alloc(0, &prompt[..table_len])?;
+
+    let mut out: Vec<i32> = Vec::with_capacity(max_new);
+    let mut pos = prompt.len();
+    // `pending` = last sampled token not yet written into the cache.
+    let mut pending = {
+        let _s = tele.map(|t| t.span(Cat::Sample, "sample_first"));
+        sampling::sample(&logits, sp, &mut rng)
+    };
+    out.push(pending);
+
+    let mut accepted_total = 0usize;
+    let mut rounds = 0usize;
+
+    'outer: while out.len() < max_new && pending != tokenizer::EOS {
+        if pos + k_window + 1 >= dims.max_seq {
+            break;
+        }
+        rounds += 1;
+        if let Some(t) = tele {
+            t.next_tick();
+        }
+        let _round_span = tele.map(|t| t.span(Cat::Decode, "spec_round"));
+        // ---- draft phase: K-1 cheap tokens after `pending` ----------
+        let mut window = Vec::with_capacity(k_window);
+        window.push(pending);
+        let mut dkv_pos = pos;
+        for _ in 0..k_window - 1 {
+            let fed = *window.last().unwrap();
+            let dl = exec.decode_step(&[SlotFeed {
+                slot: 0,
+                token: fed,
+                pos: dkv_pos,
+            }])?;
+            // Drafts are greedy (standard for self-spec draft phase).
+            window.push(sampling::greedy(&dl));
+            pool.advance(0, fed)?;
+            dkv_pos += 1;
+        }
+        // ---- verify phase: all K tokens in one full-model pass ------
+        // The verify pass overwrites positions pos..pos+K: rewind the
+        // block table and replay the window through it.
+        pool.rewind_to(0, pos)?;
+        for &w in &window {
+            pool.advance(0, w)?;
+        }
+        let vl = exec.verify(0, &window, pos)?;
+        let vocab = dims.vocab;
+
+        // Longest prefix of drafts matching the full model (greedy).
+        // vl[j] is the full model's next-token dist after window[j].
+        let _accept_span = tele.map(|t| t.span(Cat::Sample, "accept"));
+        let mut accepted = 0usize;
+        for j in 1..k_window {
+            let full_tok =
+                sampling::greedy(&vl[(j - 1) * vocab..j * vocab]);
+            if full_tok == window[j] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        accepted_total += accepted;
+        // Emit accepted drafts (window[1..=accepted]).
+        for &d in window.iter().skip(1).take(accepted) {
+            out.push(d);
+            if out.len() >= max_new || d == tokenizer::EOS {
+                pos += accepted + 1;
+                break 'outer;
+            }
+        }
+        // Bonus token from the verify logits at the last accepted slot.
+        let bonus =
+            sampling::greedy(&vl[accepted * vocab..(accepted + 1) * vocab]);
+        out.push(bonus);
+        // Cache now holds correct entries for window[0..=accepted] at
+        // pos..pos+accepted; rewind the logical position there.
+        pos += accepted + 1;
+        pool.rewind_to(0, pos)?;
+        pending = bonus;
+    }
+
+    pool.release(0)?;
+    debug_assert!(pool.check_invariants().is_ok());
+    Ok(GenResult {
+        prompt_tokens: prompt.len(),
+        decode_steps: out.len(),
+        tokens: out,
+        ttft,
+        e2e: t0.elapsed().as_secs_f64(),
+        accepted_drafts: accepted_total,
+        draft_rounds: rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VOCAB: usize = 16;
+    const MAX_SEQ: usize = 64;
+
+    fn one_hot(tok: i32) -> Vec<f32> {
+        let mut l = vec![0.0f32; VOCAB];
+        l[tok as usize] = 1.0;
+        l
+    }
+
+    /// Deterministic mock: after a token at position p, the model
+    /// "predicts" `next[p]` (a scripted sequence), one-hot.
+    struct Scripted {
+        next: Vec<i32>,
+        /// Positions fed so far (mirrors a KV fill position).
+        fed: usize,
+        cap_prompt: bool,
+        draft_next: Vec<i32>,
+        verify_calls: usize,
+    }
+
+    impl Scripted {
+        fn new(next: Vec<i32>) -> Self {
+            Scripted {
+                draft_next: next.clone(),
+                next,
+                fed: 0,
+                cap_prompt: false,
+                verify_calls: 0,
+            }
+        }
+
+        fn at(seq: &[i32], pos: usize) -> i32 {
+            seq.get(pos).copied().unwrap_or(3)
+        }
+    }
+
+    impl StepExecutor for Scripted {
+        fn plan_dims(&self) -> ExecDims {
+            ExecDims { batch: 1, max_seq: MAX_SEQ, vocab: VOCAB }
+        }
+
+        fn prefill_chunk(&mut self, _slot: usize, tokens: &[i32],
+                         start: usize, is_last: bool)
+                         -> Result<Option<Vec<f32>>> {
+            assert_eq!(start, self.fed);
+            self.fed += tokens.len();
+            if self.cap_prompt {
+                return Ok(None);
+            }
+            Ok(if is_last {
+                Some(one_hot(Self::at(&self.next, self.fed - 1)))
+            } else {
+                None
+            })
+        }
+
+        fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+            assert_eq!(feeds.len(), 1);
+            // Draft path answers from `draft_next`; the plain decode
+            // path has draft_next == next, so both loops share this.
+            Ok(one_hot(Self::at(&self.draft_next, feeds[0].pos)))
+        }
+
+        fn verify(&mut self, _slot: usize, window: &[i32], start: usize)
+                  -> Result<Vec<f32>> {
+            self.verify_calls += 1;
+            let mut out = Vec::with_capacity(window.len() * VOCAB);
+            for j in 0..window.len() {
+                out.extend(one_hot(Self::at(&self.next, start + j)));
+            }
+            Ok(out)
+        }
+
+        fn verify_window(&self) -> usize {
+            4
+        }
+    }
+
+    #[test]
+    fn generate_follows_scripted_logits_greedily() {
+        // Prompt fills positions 0..3; model then scripts 5,6,7,…
+        let mut next = vec![0i32; MAX_SEQ];
+        for (p, slot) in next.iter_mut().enumerate() {
+            *slot = (5 + p as i32) % 15; // never EOS (=1): 5..=14,0,2..
+        }
+        next[3] = 9; // after the last prompt token, predict 9
+        let mut exec = Scripted::new(next.clone());
+        let r = generate(&mut exec, None, &[2, 3, 4, 2], 4,
+                         &SamplingParams::greedy())
+            .unwrap();
+        // First token = prefill logits at pos 3 → 9; then the decode
+        // chain follows next[4], next[5], …
+        assert_eq!(r.tokens[0], 9);
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.tokens[1], next[4]);
+        assert_eq!(r.tokens[2], next[5]);
+        assert_eq!(r.decode_steps, 4);
+        assert_eq!(r.prompt_tokens, 4);
+    }
+
+    #[test]
+    fn generate_stops_at_eos() {
+        let mut next = vec![7i32; MAX_SEQ];
+        next[3] = 9;
+        next[4] = tokenizer::EOS;
+        let mut exec = Scripted::new(next);
+        let r = generate(&mut exec, None, &[2, 3, 4, 2], 10,
+                         &SamplingParams::greedy())
+            .unwrap();
+        assert_eq!(r.tokens, vec![9, tokenizer::EOS]);
+    }
+
+    #[test]
+    fn generate_with_capped_prompt_emits_nothing() {
+        // The eager contract: a prompt the executor cannot finish
+        // feeding (sequence cap) yields Ok(None) and zero tokens.
+        let mut exec = Scripted::new(vec![5; MAX_SEQ]);
+        exec.cap_prompt = true;
+        let r = generate(&mut exec, None, &[2, 3, 4], 8,
+                         &SamplingParams::greedy())
+            .unwrap();
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.decode_steps, 0);
+    }
+
+    #[test]
+    fn speculative_full_acceptance_advances_k_tokens_per_round() {
+        // Draft and full model agree everywhere → every round accepts
+        // all K−1 drafts and emits a bonus: K tokens per verify call.
+        let mut next = vec![0i32; MAX_SEQ];
+        for (p, slot) in next.iter_mut().enumerate() {
+            *slot = 5 + (p as i32 % 9); // 5..=13, never EOS
+        }
+        let mut exec = Scripted::new(next);
+        let r = generate_speculative(&mut exec, None, &[2, 3, 4], 12,
+                                     &SamplingParams::greedy())
+            .unwrap();
+        assert_eq!(r.tokens.len(), 12);
+        assert!(r.draft_rounds >= 1);
+        // Full acceptance: accepted == (K−1) × rounds (modulo the
+        // final truncated round).
+        assert!(r.accepted_drafts >= (r.draft_rounds - 1) * 3);
+        assert_eq!(exec.verify_calls, r.draft_rounds);
+    }
+
+    #[test]
+    fn speculative_rejection_falls_back_to_bonus_token() {
+        // Draft disagrees with the full model everywhere → zero
+        // accepted drafts; each round emits exactly the bonus token.
+        let mut next = vec![0i32; MAX_SEQ];
+        for (p, slot) in next.iter_mut().enumerate() {
+            *slot = 5 + (p as i32 % 7);
+        }
+        let mut exec = Scripted::new(next.clone());
+        exec.draft_next = vec![14i32; MAX_SEQ]; // always wrong
+        let r = generate_speculative(&mut exec, None, &[2, 3, 4], 6,
+                                     &SamplingParams::greedy())
+            .unwrap();
+        assert_eq!(r.accepted_drafts, 0);
+        // first token + one bonus per round
+        assert_eq!(r.tokens.len(), 1 + r.draft_rounds);
+        // The emitted chain still follows the *full* model: bonus after
+        // window[0] at pos p is next[p].
+        assert_eq!(r.tokens[1], Scripted::at(&next, 3));
+    }
+
+    #[test]
+    fn slot_state_errors_render() {
+        let e = SlotStateError::MissingJob { slot: 2, request: 9 };
+        assert!(e.to_string().contains("slot 2"));
+        assert!(e.to_string().contains("request 9"));
+        let any: anyhow::Error =
+            SlotStateError::MissingPrefill { request: 4 }.into();
+        assert!(any.downcast_ref::<SlotStateError>().is_some());
+        assert_ne!(e, SlotStateError::MissingPrefill { request: 9 });
+    }
+}

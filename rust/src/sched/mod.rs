@@ -1,0 +1,44 @@
+//! Unified tick scheduler + step-executor layer.
+//!
+//! Before this layer existed, every serving path hand-rolled its own
+//! schedule→dispatch→sample→bookkeep loop: the batched worker in
+//! `coordinator::server`, the bs=1 `decoder_loop`, `eager`, and
+//! `layerskip`. That made per-tick policy (prefill/decode interference,
+//! chunked prefill, capacity-aware admission) impossible to implement
+//! once. This module centralizes it:
+//!
+//! * [`plan`] — the [`Scheduler`]: turns queue state + the kvpool
+//!   [`CapacityView`](crate::kvpool::CapacityView) into an explicit
+//!   per-tick [`TickPlan`] — the decode set plus prefill *chunks* under
+//!   a token budget, with page-aware chunk admission. Whole-prompt mode
+//!   (`chunk = 0`) reproduces the continuous batcher's admission
+//!   exactly; chunked mode splits long prompts into budget-sized
+//!   chunks interleaved with decode ticks, which is the paper's
+//!   prefill/decode-interference lever.
+//! * [`exec`] — the [`StepExecutor`] trait (`plan_dims` /
+//!   `prefill_chunk` / `decode_step` / `verify` hooks) and the generic
+//!   drivers: [`exec::generate`] (one-request decode loop shared by the
+//!   compiled-graph and eager executors) and
+//!   [`exec::generate_speculative`] (the LayerSkip draft/verify round).
+//!   The batched worker's `run_tick` in `coordinator::server` consumes
+//!   a [`TickPlan`] against the same trait.
+//!
+//! ```text
+//!            requests ──► Batcher queue
+//!                              │
+//!                              ▼
+//!   CapacityView ───► Scheduler::plan ───► TickPlan
+//!   (kvpool pages                            │
+//!    + batch slots)                          ▼
+//!                              run_tick(plan, executor)
+//!                              │  prefill_chunk / decode_step
+//!                              ▼
+//!              StepExecutor: batched graph │ bs=1 graph │ eager │ layerskip
+//! ```
+
+pub mod exec;
+pub mod plan;
+
+pub use exec::{generate, generate_speculative, ExecDims, SlotFeed,
+               SlotStateError, StepExecutor};
+pub use plan::{PlannedChunk, SchedConfig, Scheduler, TickPlan};

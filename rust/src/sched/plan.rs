@@ -1,0 +1,636 @@
+//! The tick planner: queue + capacity view → explicit [`TickPlan`].
+//!
+//! The `Scheduler` owns the FCFS [`Batcher`] queue and the in-flight
+//! request state machine (Queued → Prefilling → Decoding). Every
+//! scheduler tick it emits a `TickPlan` that the worker executes
+//! against a [`StepExecutor`](super::exec::StepExecutor):
+//!
+//! * **Whole-prompt mode** (`chunk == 0`): admission delegates to
+//!   [`Batcher::tick`] — byte-for-byte the continuous batcher's policy
+//!   (FCFS, per-tick prefill token budget, oversize-alone exception,
+//!   page-aware admission) — and each admitted request becomes a single
+//!   full-prompt chunk.
+//! * **Chunked mode** (`chunk > 0`): at most `chunk` *new* prompt
+//!   tokens are planned per tick, FCFS across in-flight prefills first
+//!   and then fresh admissions, each chunk gated on the pages it needs
+//!   (block-rounded, plus one position of decode headroom on the final
+//!   chunk). Long prompts therefore prefill across several ticks with
+//!   decode steps interleaved — the chunked-prefill lever that bounds
+//!   decode-tick stalls behind big admissions.
+//!
+//! Planner invariants (property-tested below): planned chunk tokens
+//! never exceed the budget, a chunk is only planned when the capacity
+//! view covers its pages, and the decode set and the chunked request
+//! set are disjoint.
+
+use crate::coordinator::batcher::{Batcher, QueuedRequest};
+use crate::kvpool::{pages_for, CapacityView};
+
+/// Scheduler knobs (both come from `RouterConfig` / the CLI).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedConfig {
+    /// Whole-prompt mode: max prompt tokens admitted per tick
+    /// (0 = unlimited). Ignored when `chunk > 0`.
+    pub prefill_budget: usize,
+    /// Chunked prefill: max new prompt tokens fed per tick
+    /// (0 = whole-prompt admission).
+    pub chunk: usize,
+}
+
+/// One prompt chunk to feed this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedChunk {
+    pub request: u64,
+    /// Token offset into the request's prefill prefix.
+    pub start: usize,
+    /// Tokens to feed this tick (> 0).
+    pub len: usize,
+    /// First chunk: the worker claims a slot + the chunk's pages.
+    pub is_first: bool,
+    /// Final chunk: completing it yields the first-token logits.
+    pub is_last: bool,
+}
+
+/// The explicit per-tick schedule.
+#[derive(Debug, Clone, Default)]
+pub struct TickPlan {
+    /// Prompt chunks to feed, FCFS (in-flight prefills before fresh
+    /// admissions; a fresh admission's first chunk appears here too).
+    pub chunks: Vec<PlannedChunk>,
+    /// Requests popped from the queue this tick (their `is_first`
+    /// chunk is in `chunks`); the worker requeues these on a failed
+    /// slot/page claim.
+    pub admitted: Vec<QueuedRequest>,
+    /// Requests expected to take a decode step this tick. Advisory:
+    /// the tick driver derives the live decode set from slot state
+    /// (which can shrink mid-tick via preemption); this field exists
+    /// for planning-level invariants (decode ∩ chunks = ∅) and
+    /// deviceless consumers.
+    pub decode: Vec<u64>,
+    /// Whether a decode step should run (advisory, see `decode`).
+    pub run_decode: bool,
+    /// Admission was (partially) blocked on the KV page budget — feeds
+    /// the `KvCapacity` idle-attribution bucket.
+    pub blocked_on_capacity: bool,
+    /// Total planned chunk tokens (≤ the tick budget in chunked mode).
+    pub prefill_tokens: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PrefillProgress {
+    request: u64,
+    done: usize,
+    total: usize,
+}
+
+/// The unified tick scheduler.
+#[derive(Debug)]
+pub struct Scheduler {
+    batcher: Batcher,
+    cfg: SchedConfig,
+    /// Mid-prefill requests in admission (FCFS) order.
+    prefilling: Vec<PrefillProgress>,
+    /// Requests decoding (prompt fully prefilled), admission order.
+    decoding: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig) -> Self {
+        Scheduler {
+            batcher: Batcher::new(cfg.prefill_budget),
+            cfg,
+            prefilling: Vec::new(),
+            decoding: Vec::new(),
+        }
+    }
+
+    /// Queue a new request (FCFS tail).
+    pub fn enqueue(&mut self, q: QueuedRequest) {
+        self.batcher.push(q);
+    }
+
+    /// Requests waiting in the queue (not in flight).
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Requests mid-prefill or decoding.
+    pub fn in_flight(&self) -> usize {
+        self.prefilling.len() + self.decoding.len()
+    }
+
+    /// Compute this tick's plan against the capacity view.
+    pub fn plan(&mut self, cap: &CapacityView) -> TickPlan {
+        if self.cfg.chunk == 0 {
+            self.plan_whole(cap)
+        } else {
+            self.plan_chunked(cap)
+        }
+    }
+
+    /// Whole-prompt admission: exactly the continuous batcher's policy.
+    fn plan_whole(&mut self, cap: &CapacityView) -> TickPlan {
+        let adm = self.batcher.tick(cap);
+        let mut plan = TickPlan {
+            decode: self.decoding.clone(),
+            run_decode: adm.run_decode,
+            blocked_on_capacity: adm.blocked_on_capacity,
+            ..TickPlan::default()
+        };
+        for q in adm.admit {
+            let total = q.prompt_len.max(1);
+            self.prefilling.push(PrefillProgress {
+                request: q.id,
+                done: 0,
+                total,
+            });
+            plan.chunks.push(PlannedChunk {
+                request: q.id,
+                start: 0,
+                len: total,
+                is_first: true,
+                is_last: true,
+            });
+            plan.prefill_tokens += total;
+            plan.admitted.push(q);
+        }
+        plan
+    }
+
+    /// Chunked admission: at most `chunk` new prompt tokens per tick,
+    /// in-flight prefills first (FCFS), then fresh admissions, every
+    /// chunk gated on the pages it will claim.
+    fn plan_chunked(&mut self, cap: &CapacityView) -> TickPlan {
+        let mut plan = TickPlan {
+            decode: self.decoding.clone(),
+            ..TickPlan::default()
+        };
+        let mut remaining = self.cfg.chunk;
+        let mut pages_left = cap
+            .pages
+            .as_ref()
+            .map(|p| p.available_pages.saturating_sub(p.reserved_growth));
+
+        // In-flight prefills continue first (no head-of-line bypass:
+        // the first blocked chunk stops all further prefill planning).
+        for p in &self.prefilling {
+            if remaining == 0 {
+                break;
+            }
+            let rest = p.total.saturating_sub(p.done);
+            if rest == 0 {
+                continue;
+            }
+            let len = rest.min(remaining);
+            let is_last = p.done + len == p.total;
+            let need = chunk_pages(cap, p.done, len, is_last);
+            if let Some(left) = pages_left.as_mut() {
+                if need > *left {
+                    plan.blocked_on_capacity = true;
+                    break;
+                }
+                *left -= need;
+            }
+            plan.chunks.push(PlannedChunk {
+                request: p.request,
+                start: p.done,
+                len,
+                is_first: p.done == 0,
+                is_last,
+            });
+            plan.prefill_tokens += len;
+            remaining -= len;
+        }
+
+        // Fresh admissions with whatever budget and slots remain.
+        let mut free = cap.free_slots;
+        while free > 0 && remaining > 0 && !plan.blocked_on_capacity {
+            let Some(front) = self.batcher.front() else { break };
+            let total = front.prompt_len.max(1);
+            let len = total.min(remaining);
+            let is_last = len == total;
+            let need = chunk_pages(cap, 0, len, is_last);
+            if let Some(left) = pages_left.as_mut() {
+                if need > *left {
+                    plan.blocked_on_capacity = true;
+                    break;
+                }
+                *left -= need;
+            }
+            let q = self.batcher.pop_front().expect("front exists");
+            self.prefilling.push(PrefillProgress {
+                request: q.id,
+                done: 0,
+                total,
+            });
+            plan.chunks.push(PlannedChunk {
+                request: q.id,
+                start: 0,
+                len,
+                is_first: true,
+                is_last,
+            });
+            plan.prefill_tokens += len;
+            plan.admitted.push(q);
+            remaining -= len;
+            free -= 1;
+        }
+
+        plan.run_decode = !plan.decode.is_empty();
+        plan
+    }
+
+    /// The worker fed `fed` chunk tokens for `request`; a completed
+    /// prompt moves the request to the decode set.
+    pub fn chunk_committed(&mut self, request: u64, fed: usize) {
+        if let Some(i) =
+            self.prefilling.iter().position(|p| p.request == request)
+        {
+            self.prefilling[i].done += fed;
+            if self.prefilling[i].done >= self.prefilling[i].total {
+                self.prefilling.remove(i);
+                self.decoding.push(request);
+            }
+        }
+    }
+
+    /// Requeue one request at the queue head (preemption victim or a
+    /// capacity-raced admission), dropping its in-flight state.
+    pub fn requeue_front(&mut self, q: QueuedRequest) {
+        self.forget(q.id);
+        self.batcher.push_front(q);
+    }
+
+    /// Requeue a group at the head preserving `qs` order (see
+    /// [`Batcher::requeue_all`] — per-item `push_front` would reverse
+    /// the group and break FCFS).
+    pub fn requeue_all(&mut self, qs: Vec<QueuedRequest>) {
+        for q in &qs {
+            self.forget(q.id);
+        }
+        self.batcher.requeue_all(qs);
+    }
+
+    /// A request completed (response sent).
+    pub fn finished(&mut self, request: u64) {
+        self.forget(request);
+    }
+
+    /// A request failed or was shed; drop all scheduler state for it.
+    pub fn drop_request(&mut self, request: u64) {
+        self.forget(request);
+    }
+
+    /// Shed the queue head (a request that can never be admitted).
+    pub fn shed_front(&mut self) -> Option<QueuedRequest> {
+        self.batcher.pop_front()
+    }
+
+    /// Head-of-line mid-prefill request — the one whose blocked chunk
+    /// stalls all chunked planning (FCFS, no bypass). The worker sheds
+    /// it when its remaining chunks can never be granted pages and no
+    /// decode work exists to free any.
+    pub fn head_prefilling(&self) -> Option<u64> {
+        self.prefilling.first().map(|p| p.request)
+    }
+
+    fn forget(&mut self, request: u64) {
+        self.prefilling.retain(|p| p.request != request);
+        self.decoding.retain(|&r| r != request);
+    }
+}
+
+/// New pages a chunk `[start, start+len)` claims, block-rounded, with
+/// one extra position of decode headroom on the final chunk (mirrors
+/// the whole-prompt `pages_needed(prompt_len) = pages(prompt_len + 1)`
+/// admission rule). Worst case: prefix sharing can only reduce it.
+pub fn chunk_pages(cap: &CapacityView, start: usize, len: usize,
+                   is_last: bool) -> usize {
+    match &cap.pages {
+        Some(p) => {
+            let end = start + len + usize::from(is_last);
+            pages_for(end, p.page_size)
+                .saturating_sub(pages_for(start, p.page_size))
+        }
+        None => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::PageBudget;
+    use crate::substrate::prop::prop_check;
+    use crate::substrate::rng::Rng;
+
+    fn rq(id: u64, plen: usize) -> QueuedRequest {
+        QueuedRequest { id, prompt_len: plen, max_new_tokens: 8 }
+    }
+
+    fn dense(free: usize, live: usize) -> CapacityView {
+        CapacityView::dense(free, live)
+    }
+
+    #[test]
+    fn whole_mode_matches_batcher_admission() {
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 100,
+            chunk: 0,
+        });
+        s.enqueue(rq(0, 60));
+        s.enqueue(rq(1, 60));
+        s.enqueue(rq(2, 30));
+        let plan = s.plan(&dense(3, 0));
+        // Same as Batcher::tick: 60 fits, the next 60 exceeds, FCFS
+        // stops (no head-of-line bypass).
+        assert_eq!(plan.admitted.len(), 1);
+        assert_eq!(plan.admitted[0].id, 0);
+        assert_eq!(plan.chunks.len(), 1);
+        let c = plan.chunks[0];
+        assert!(c.is_first && c.is_last);
+        assert_eq!((c.start, c.len), (0, 60));
+        assert_eq!(plan.prefill_tokens, 60);
+        assert_eq!(s.pending(), 2);
+        assert_eq!(s.in_flight(), 1);
+    }
+
+    #[test]
+    fn whole_mode_chunk_commit_moves_to_decode_set() {
+        let mut s = Scheduler::new(SchedConfig::default());
+        s.enqueue(rq(7, 20));
+        let plan = s.plan(&dense(2, 0));
+        assert_eq!(plan.chunks.len(), 1);
+        assert!(plan.decode.is_empty());
+        s.chunk_committed(7, 20);
+        let plan2 = s.plan(&dense(1, 1));
+        assert_eq!(plan2.decode, vec![7]);
+        assert!(plan2.run_decode);
+        s.finished(7);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn chunked_mode_splits_long_prompt_across_ticks() {
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 0,
+            chunk: 32,
+        });
+        s.enqueue(rq(1, 100));
+        // Tick 1: first chunk of 32.
+        let p1 = s.plan(&dense(4, 0));
+        assert_eq!(p1.chunks.len(), 1);
+        assert_eq!((p1.chunks[0].start, p1.chunks[0].len), (0, 32));
+        assert!(p1.chunks[0].is_first && !p1.chunks[0].is_last);
+        assert_eq!(p1.admitted.len(), 1);
+        s.chunk_committed(1, 32);
+        // Ticks 2–3: continuations; tick 4: the 4-token tail is last.
+        for (tick, (start, len)) in
+            [(2usize, (32usize, 32usize)), (3, (64, 32))]
+        {
+            let p = s.plan(&dense(3, 1));
+            assert_eq!(p.chunks.len(), 1, "tick {tick}");
+            assert_eq!((p.chunks[0].start, p.chunks[0].len), (start, len));
+            assert!(!p.chunks[0].is_last);
+            assert!(p.admitted.is_empty(), "no re-admission mid-prefill");
+            s.chunk_committed(1, len);
+        }
+        let p4 = s.plan(&dense(3, 1));
+        assert_eq!((p4.chunks[0].start, p4.chunks[0].len), (96, 4));
+        assert!(p4.chunks[0].is_last);
+        s.chunk_committed(1, 4);
+        assert_eq!(s.in_flight(), 1, "now decoding");
+        let p5 = s.plan(&dense(3, 1));
+        assert!(p5.chunks.is_empty());
+        assert_eq!(p5.decode, vec![1]);
+    }
+
+    #[test]
+    fn chunked_mode_budget_is_shared_fcfs() {
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 0,
+            chunk: 40,
+        });
+        s.enqueue(rq(1, 30));
+        s.enqueue(rq(2, 30));
+        s.enqueue(rq(3, 5));
+        let p = s.plan(&dense(4, 0));
+        // 30 to request 1, the remaining 10 start request 2; request 3
+        // must not jump the queue.
+        assert_eq!(p.chunks.len(), 2);
+        assert_eq!(p.chunks[0].request, 1);
+        assert!(p.chunks[0].is_last);
+        assert_eq!(p.chunks[1].request, 2);
+        assert_eq!((p.chunks[1].start, p.chunks[1].len), (0, 10));
+        assert!(!p.chunks[1].is_last);
+        assert_eq!(p.prefill_tokens, 40);
+        assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn chunked_mode_gates_chunks_on_pages() {
+        let cap = CapacityView {
+            free_slots: 2,
+            live_slots: 1,
+            pages: Some(PageBudget {
+                page_size: 4,
+                available_pages: 3,
+                reserved_growth: 1,
+            }),
+        };
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 0,
+            chunk: 64,
+        });
+        // 2 grantable pages = 8 positions; a 30-token first chunk (+1
+        // headroom) needs 8 pages → blocked, stays queued.
+        s.enqueue(rq(1, 30));
+        let p = s.plan(&cap);
+        assert!(p.chunks.is_empty());
+        assert!(p.blocked_on_capacity);
+        assert_eq!(s.pending(), 1);
+        // A 6-token prompt (2 pages with headroom) fits.
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 0,
+            chunk: 64,
+        });
+        s.enqueue(rq(2, 6));
+        let p = s.plan(&cap);
+        assert_eq!(p.chunks.len(), 1);
+        assert!(!p.blocked_on_capacity);
+    }
+
+    #[test]
+    fn requeue_front_restores_queue_position_and_state() {
+        let mut s = Scheduler::new(SchedConfig {
+            prefill_budget: 0,
+            chunk: 16,
+        });
+        s.enqueue(rq(1, 40));
+        s.enqueue(rq(2, 8));
+        let p = s.plan(&dense(4, 0));
+        assert_eq!(p.chunks[0].request, 1);
+        s.chunk_committed(1, 16);
+        // Request 1 is preempted mid-prefill: requeued at the front,
+        // in-flight state dropped, and it restarts from chunk 0.
+        // (Request 2 never got budget, so it is still queued.)
+        s.requeue_front(rq(1, 40));
+        assert_eq!(s.in_flight(), 0, "in-flight state dropped");
+        assert_eq!(s.pending(), 2);
+        let p2 = s.plan(&dense(4, 1));
+        let first = p2.chunks.iter().find(|c| c.request == 1).unwrap();
+        assert_eq!(first.start, 0, "restart from the beginning");
+        assert!(first.is_first);
+    }
+
+    #[test]
+    fn chunk_pages_rounds_blocks_and_adds_decode_headroom() {
+        let cap = CapacityView {
+            free_slots: 1,
+            live_slots: 0,
+            pages: Some(PageBudget {
+                page_size: 4,
+                available_pages: 100,
+                reserved_growth: 0,
+            }),
+        };
+        // [0, 5) not last: 2 pages. Continuing [5, 8): still page 2 —
+        // 0 new pages. Final chunk [8, 9): 1 token + headroom → 1 page.
+        assert_eq!(chunk_pages(&cap, 0, 5, false), 2);
+        assert_eq!(chunk_pages(&cap, 5, 3, false), 0);
+        assert_eq!(chunk_pages(&cap, 8, 1, true), 1);
+        // Dense view: pages are unmetered.
+        assert_eq!(chunk_pages(&dense(1, 0), 0, 100, true), 0);
+    }
+
+    /// Satellite property test: every `TickPlan` (1) respects the
+    /// chunk token budget, (2) never plans a chunk whose pages the
+    /// capacity view cannot cover, and (3) keeps the decode and
+    /// prefill-chunk request sets disjoint — across random workloads,
+    /// budgets, and pool pressure, with random commit/finish churn.
+    #[test]
+    fn prop_tick_plans_respect_budget_pages_and_disjointness() {
+        prop_check(
+            120,
+            2024,
+            |r: &mut Rng| {
+                let n = r.usize(1, 12);
+                let lens: Vec<usize> =
+                    (0..n).map(|_| r.usize(1, 120)).collect();
+                let chunk = r.usize(1, 48);
+                let slots = r.usize(1, 6);
+                let pages = r.usize(4, 64);
+                let page_size = r.usize(1, 8);
+                (lens, ((chunk, slots), (pages, page_size)))
+            },
+            |(lens, ((chunk, slots), (pages, page_size)))| {
+                // Shrinking may propose degenerate knobs; the property
+                // is only about chunked-mode plans.
+                if *chunk == 0 || *slots == 0 || *pages == 0
+                    || *page_size == 0
+                {
+                    return Ok(());
+                }
+                let mut s = Scheduler::new(SchedConfig {
+                    prefill_budget: 0,
+                    chunk: *chunk,
+                });
+                for (i, &l) in lens.iter().enumerate() {
+                    s.enqueue(rq(i as u64 + 1, l));
+                }
+                // Simulated pool: per-request fed token counts drive
+                // the page accounting the view reports.
+                let mut fed: std::collections::HashMap<u64, usize> =
+                    std::collections::HashMap::new();
+                let mut decoding: Vec<u64> = Vec::new();
+                let mut churn = Rng::new(*chunk as u64 ^ 0xfeed);
+                for _tick in 0..200 {
+                    if s.pending() == 0 && s.in_flight() == 0 {
+                        break;
+                    }
+                    let used: usize = fed
+                        .values()
+                        .map(|&f| pages_for(f, *page_size))
+                        .sum();
+                    let cap = CapacityView {
+                        free_slots: slots.saturating_sub(fed.len()),
+                        live_slots: fed.len(),
+                        pages: Some(PageBudget {
+                            page_size: *page_size,
+                            available_pages: pages.saturating_sub(used),
+                            reserved_growth: fed.len(),
+                        }),
+                    };
+                    let plan = s.plan(&cap);
+
+                    // (1) budget respected.
+                    let total: usize =
+                        plan.chunks.iter().map(|c| c.len).sum();
+                    if total != plan.prefill_tokens {
+                        return Err("prefill_tokens mismatch".into());
+                    }
+                    if total > *chunk {
+                        return Err(format!(
+                            "chunk tokens {total} > budget {chunk}"
+                        ));
+                    }
+                    // (2) pages covered (sum over planned chunks).
+                    let need: usize = plan
+                        .chunks
+                        .iter()
+                        .map(|c| chunk_pages(&cap, c.start, c.len,
+                                             c.is_last))
+                        .sum();
+                    let grantable = pages
+                        .saturating_sub(used)
+                        .saturating_sub(fed.len());
+                    if need > grantable {
+                        return Err(format!(
+                            "planned {need} pages > grantable {grantable}"
+                        ));
+                    }
+                    // (3) decode/prefill disjoint; no duplicate chunks.
+                    for c in &plan.chunks {
+                        if plan.decode.contains(&c.request) {
+                            return Err(format!(
+                                "request {} both decodes and prefills",
+                                c.request
+                            ));
+                        }
+                        if c.len == 0 {
+                            return Err("empty chunk planned".into());
+                        }
+                    }
+                    let mut ids: Vec<u64> =
+                        plan.chunks.iter().map(|c| c.request).collect();
+                    ids.sort_unstable();
+                    ids.dedup();
+                    if ids.len() != plan.chunks.len() {
+                        return Err("two chunks for one request".into());
+                    }
+                    // New admissions may not exceed free slots.
+                    if plan.admitted.len() > cap.free_slots {
+                        return Err("admitted beyond free slots".into());
+                    }
+
+                    // Commit the plan into the simulated pool.
+                    for c in &plan.chunks {
+                        *fed.entry(c.request).or_insert(0) += c.len;
+                        s.chunk_committed(c.request, c.len);
+                        if c.is_last {
+                            decoding.push(c.request);
+                        }
+                    }
+                    // Random churn: finish some decoding request.
+                    if !decoding.is_empty() && churn.usize(0, 3) == 0 {
+                        let id =
+                            decoding.remove(churn.usize(0, decoding.len()));
+                        fed.remove(&id);
+                        s.finished(id);
+                    }
+                }
+                // Drain: everything either finished or still tracked.
+                Ok(())
+            },
+        );
+    }
+}

@@ -33,7 +33,8 @@ impl Aggregate {
         let mut per_req: HashMap<u64, (f64, Vec<f64>)> = HashMap::new();
         for s in &tr.spans {
             // Phase wrappers would double-count the nested work.
-            if !matches!(s.cat, Cat::Prefill | Cat::Decode | Cat::Other) {
+            if !matches!(s.cat, Cat::Prefill | Cat::Decode
+                                | Cat::PrefillStall | Cat::Other) {
                 agg.per_category.add(s.cat.as_str(), s.dur());
             }
             if s.cat == Cat::Execute {

@@ -17,16 +17,21 @@ use super::tracer::{union_len, Cat, Trace};
 /// Gap-classification buckets. `Sync` covers both transfer directions;
 /// `KvCapacity` is admission time blocked on the paged KV pool (free
 /// slots existed but no pages — the capacity wait the kvpool subsystem
-/// turns into batch occupancy).
-pub const GAP_CATEGORIES: [&str; 7] = [
-    "Scheduling", "KvCapacity", "Sampling", "Tokenization", "Sync",
-    "Compile", "Other",
+/// turns into batch occupancy); `PrefillStall` is decode-ready slots
+/// waiting behind admission prefill work inside a tick — the
+/// interference window that chunked prefill (`--chunk-prefill`)
+/// bounds.
+pub const GAP_CATEGORIES: [&str; 8] = [
+    "Scheduling", "KvCapacity", "PrefillStall", "Sampling",
+    "Tokenization", "Sync", "Compile", "Other",
 ];
 
 fn gap_label(cat: Cat) -> Option<&'static str> {
     match cat {
-        Cat::Schedule => Some("Scheduling"),
+        // Tick planning is scheduler work; it shares the bucket.
+        Cat::Schedule | Cat::Plan => Some("Scheduling"),
         Cat::KvWait => Some("KvCapacity"),
+        Cat::PrefillStall => Some("PrefillStall"),
         Cat::Sample => Some("Sampling"),
         Cat::Tokenize => Some("Tokenization"),
         Cat::Upload | Cat::Download => Some("Sync"),
@@ -256,6 +261,41 @@ mod tests {
         assert!((a.gaps.get("Other") - 0.2).abs() < 1e-9);
         let s = a.render();
         assert!(s.contains("KvCapacity"));
+    }
+
+    /// The chunked-prefill story: decode-ready slots stalled behind
+    /// admission prefill get their own bucket, and the stall wrapper
+    /// subsumes the host work nested inside it.
+    #[test]
+    fn prefill_stall_gets_its_own_bucket_and_subsumes_nested_work() {
+        // decode execute [0,1] … stall window [1,3] wrapping a nested
+        // tokenize + the admission prefill dispatch … decode [3,4].
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::PrefillStall, 1.0, 3.0),
+            sp(Cat::Tokenize, 1.0, 1.2),
+            sp(Cat::Execute, 1.5, 2.5),
+            sp(Cat::Execute, 3.0, 4.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        // Idle gaps [1,1.5] and [2.5,3] both fall inside the stall.
+        assert!((a.gaps.get("PrefillStall") - 1.0).abs() < 1e-9);
+        assert!((a.gaps.get("Tokenization")).abs() < 1e-9,
+                "stall wrapper owns the nested host time");
+        assert!(a.render().contains("PrefillStall"));
+    }
+
+    /// `Scheduler::plan` spans share the Scheduling bucket.
+    #[test]
+    fn plan_spans_attribute_to_scheduling() {
+        let t = trace(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Plan, 1.0, 1.4),
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        let a = Attribution::from_trace(&t);
+        assert!((a.gaps.get("Scheduling") - 0.4).abs() < 1e-9);
+        assert!((a.gaps.get("Other") - 0.6).abs() < 1e-9);
     }
 
     #[test]

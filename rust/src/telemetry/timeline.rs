@@ -63,7 +63,8 @@ impl Timeline {
                 }, Vec::new()));
             rec.t0 = rec.t0.min(s.t0);
             rec.t1 = rec.t1.max(s.t1);
-            if !matches!(s.cat, Cat::Prefill | Cat::Decode | Cat::Other) {
+            if !matches!(s.cat, Cat::Prefill | Cat::Decode
+                                | Cat::PrefillStall | Cat::Other) {
                 rec.phases.add(s.cat.as_str(), s.dur());
             }
             if let Some(req) = s.req {

@@ -31,6 +31,13 @@ pub enum Cat {
     Download,
     /// Batcher admission / slot bookkeeping.
     Schedule,
+    /// Scheduler tick planning (`Scheduler::plan` → `TickPlan`).
+    Plan,
+    /// Decode-ready slots stalled behind admission prefill work inside
+    /// a tick — the prefill/decode-interference window that chunked
+    /// prefill bounds. Recorded as a wrapper over the tick's chunk
+    /// execution when decode jobs are live.
+    PrefillStall,
     /// Admission blocked on KV-cache capacity (free slots exist but the
     /// page budget cannot cover the next prompt) — the paged-pool
     /// analogue of queueing delay, split out so the idle attribution
@@ -56,6 +63,8 @@ impl Cat {
             Cat::Upload => "Upload",
             Cat::Download => "Download",
             Cat::Schedule => "Schedule",
+            Cat::Plan => "Plan",
+            Cat::PrefillStall => "PrefillStall",
             Cat::KvWait => "KvWait",
             Cat::Tokenize => "Tokenize",
             Cat::Sample => "Sample",

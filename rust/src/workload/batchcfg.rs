@@ -9,6 +9,8 @@ use crate::perfmodel::configs::{PaperDecoder, PaperHstu, PaperSeamless,
                                 CHAMELEON_34B, HSTU_14L, LLAMA_34B,
                                 SEAMLESS_M4T};
 use crate::perfmodel::device::DeviceSpec;
+use crate::perfmodel::latency::{task_cost, TaskSpec};
+use crate::perfmodel::levers::Levers;
 
 use super::spec_for;
 
@@ -150,6 +152,121 @@ pub fn paged_vs_dense_rows(dev: &DeviceSpec, page_size: usize)
     .collect()
 }
 
+// ==========================================================================
+// Chunked-prefill interference projection (paper scale)
+// ==========================================================================
+
+/// One task's projected prefill/decode-interference numbers, whole vs.
+/// chunked prefill (ideal chunk-append kernel: each chunk costs the
+/// *marginal* prefill work for its token range).
+#[derive(Debug, Clone)]
+pub struct ChunkedPrefillRow {
+    pub task: TaskKind,
+    /// Table-2 average input length used as the prompt.
+    pub prompt_len: usize,
+    pub chunks: usize,
+    /// TTFT = one whole-prompt prefill monopolizing a tick.
+    pub ttft_whole_ms: f64,
+    /// TTFT with one interleaved decode tick per extra chunk — the
+    /// "one decode tick per chunk" regression bound.
+    pub ttft_chunked_ms: f64,
+    /// Worst decode-tick stall behind one admission (whole prompt).
+    pub stall_whole_ms: f64,
+    /// Worst decode-tick stall with the chunk budget (max marginal
+    /// chunk cost).
+    pub stall_chunked_ms: f64,
+    /// One batched decode step at full context (the tick floor).
+    pub decode_tick_ms: f64,
+}
+
+fn decoder_cfg(task: TaskKind) -> Option<&'static PaperDecoder> {
+    match task {
+        TaskKind::TextToText => Some(&LLAMA_34B),
+        TaskKind::ImageToText
+        | TaskKind::ImageTextToText
+        | TaskKind::TextToImage => Some(&CHAMELEON_34B),
+        _ => None,
+    }
+}
+
+fn prefill_ms(cfg: &'static PaperDecoder, n: usize, dev: &DeviceSpec)
+              -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let spec = TaskSpec::Decoder {
+        cfg,
+        batch: 1,
+        prompt_len: n,
+        decode_steps: 1,
+        decodes_per_step: 1,
+    };
+    task_cost(&spec, dev, &Levers::baseline()).prefill_wall * 1e3
+}
+
+/// Project the prefill/decode interference of one decoder task under
+/// whole-prompt vs. chunked admission (`None` for non-decoder tasks).
+///
+/// The model: a decoding request's tick is stalled by however much
+/// prefill work the scheduler admits into that tick. Whole-prompt
+/// admission stalls one tick by the full prompt's prefill; a chunk
+/// budget bounds the stall by the most expensive single chunk (the
+/// marginal cost `P(i·C) − P((i−1)·C)`, superlinear in context via
+/// attention), at the price of one extra decode tick of TTFT per
+/// chunk.
+pub fn chunked_prefill_projection(task: TaskKind, dev: &DeviceSpec,
+                                  chunk: usize)
+                                  -> Option<ChunkedPrefillRow> {
+    let cfg = decoder_cfg(task)?;
+    let w = spec_for(task);
+    let prompt = (w.input.avg.round() as usize).max(1);
+    let chunk = chunk.max(1);
+    let chunks = (prompt + chunk - 1) / chunk;
+    let whole = prefill_ms(cfg, prompt, dev);
+    let decode_tick_ms = {
+        let spec = TaskSpec::Decoder {
+            cfg,
+            batch: 1,
+            prompt_len: prompt,
+            decode_steps: 1,
+            decodes_per_step: 1,
+        };
+        task_cost(&spec, dev, &Levers::baseline()).decode_wall * 1e3
+    };
+    let mut stall_chunked = 0.0f64;
+    let mut prev = 0.0f64;
+    for i in 1..=chunks {
+        let end = (i * chunk).min(prompt);
+        let p = prefill_ms(cfg, end, dev);
+        stall_chunked = stall_chunked.max(p - prev);
+        prev = p;
+    }
+    Some(ChunkedPrefillRow {
+        task,
+        prompt_len: prompt,
+        chunks,
+        ttft_whole_ms: whole,
+        ttft_chunked_ms: whole + (chunks as f64 - 1.0) * decode_tick_ms,
+        stall_whole_ms: whole,
+        stall_chunked_ms: stall_chunked,
+        decode_tick_ms,
+    })
+}
+
+/// The chunked-prefill projection for the KV-bound decoder tasks.
+pub fn chunked_prefill_rows(dev: &DeviceSpec, chunk: usize)
+                            -> Vec<ChunkedPrefillRow> {
+    [
+        TaskKind::TextToText,
+        TaskKind::ImageToText,
+        TaskKind::ImageTextToText,
+        TaskKind::TextToImage,
+    ]
+    .into_iter()
+    .filter_map(|task| chunked_prefill_projection(task, dev, chunk))
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +312,53 @@ mod tests {
             tt_paged >= 4 * tt.max(1),
             "T-T paged {tt_paged} should be ≫ dense {tt}"
         );
+    }
+
+    /// Tentpole projection: a chunk budget bounds the worst decode-tick
+    /// stall strictly below the whole-prompt prefill, and TTFT regresses
+    /// by exactly one decode tick per extra chunk (the acceptance
+    /// criterion's "one-tick bound").
+    #[test]
+    fn chunked_prefill_bounds_stall_and_ttft() {
+        // I-T's 1030-token prompt at a 256-token chunk: 5 chunks.
+        let r = chunked_prefill_projection(TaskKind::ImageToText, &A100,
+                                           256)
+            .unwrap();
+        assert_eq!(r.chunks, 5);
+        assert!(r.stall_chunked_ms > 0.0);
+        assert!(
+            r.stall_chunked_ms < r.stall_whole_ms,
+            "chunked stall {} !< whole {}",
+            r.stall_chunked_ms, r.stall_whole_ms
+        );
+        let extra = r.ttft_chunked_ms - r.ttft_whole_ms;
+        let want = 4.0 * r.decode_tick_ms;
+        assert!(
+            (extra - want).abs() < 1e-6 * (1.0 + r.ttft_whole_ms),
+            "TTFT regression {extra} vs one-tick bound {want}"
+        );
+        // Non-decoder tasks have no projection.
+        assert!(chunked_prefill_projection(TaskKind::SpeechToText, &A100,
+                                           256)
+            .is_none());
+        // A chunk larger than the prompt degenerates to whole-prompt.
+        let one = chunked_prefill_projection(TaskKind::TextToText, &A100,
+                                             4096)
+            .unwrap();
+        assert_eq!(one.chunks, 1);
+        assert_eq!(one.stall_chunked_ms, one.stall_whole_ms);
+        assert_eq!(one.ttft_chunked_ms, one.ttft_whole_ms);
+    }
+
+    #[test]
+    fn chunked_prefill_rows_cover_decoder_tasks() {
+        let rows = chunked_prefill_rows(&A100, 256);
+        assert_eq!(rows.len(), 4);
+        for r in rows {
+            assert!(r.stall_chunked_ms <= r.stall_whole_ms + 1e-12);
+            assert!(r.ttft_chunked_ms >= r.ttft_whole_ms);
+            assert!(r.decode_tick_ms > 0.0);
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ fn batched_router_serves_text_requests() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
     });
@@ -76,6 +77,7 @@ fn batched_results_match_single_stream() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
     });
@@ -91,6 +93,55 @@ fn batched_results_match_single_stream() {
     for (i, rx) in rxs.into_iter().enumerate() {
         let r = rx.recv().unwrap().unwrap();
         assert_eq!(r.tokens, singles[i], "prompt {i} diverged in batch");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn chunked_prefill_router_matches_single_stream() {
+    // Chunked prefill (tentpole): long prompts are admitted in
+    // budget-sized chunks — first chunk via the bucketed prefill +
+    // pack, continuation tokens appended incrementally through the
+    // batched decode graph. Greedy outputs must match the bs=1 path.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir.join("llama")).unwrap();
+    let session = DecoderSession::new(&engine, OptConfig::baseline())
+        .unwrap();
+    let long = "the quick brown fox jumps over the lazy dog again and \
+                again while the scheduler feeds the prompt in chunks";
+    let prompts = [long, "short one", "alpha beta gamma delta"];
+    let mut singles = vec![];
+    for p in prompts {
+        let ids = encode_prompt(p);
+        singles.push(
+            session.generate(&ids, 8, &SamplingParams::greedy()).unwrap()
+                .tokens,
+        );
+    }
+    let router = Router::start(&dir, RouterConfig {
+        models: vec![ModelKind::Llama],
+        opt: OptConfig::baseline(),
+        reorder: ReorderMode::Fused,
+        batch: 4,
+        prefill_budget: 0,
+        chunk_prefill: 8, // forces multi-chunk admission for all three
+        kv: KvPoolConfig::default(),
+        tracer: None,
+    });
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let mut req = Request::text(router.fresh_id(),
+                                        TaskKind::TextToText, p, 8);
+            req.sampling = SamplingParams::greedy();
+            router.submit(req).unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.tokens, singles[i],
+                   "prompt {i} diverged under chunked prefill");
+        assert!(r.decode_steps > 0);
     }
     router.shutdown();
 }
@@ -189,6 +240,7 @@ fn hstu_router_returns_actions() {
         reorder: ReorderMode::Fused,
         batch: 1,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
     });

@@ -93,6 +93,7 @@ fn traced_router_run_exports_chrome_json() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
     });
@@ -157,6 +158,7 @@ fn disabled_tracer_records_zero_spans_end_to_end() {
         reorder: ReorderMode::Fused,
         batch: 4,
         prefill_budget: 0,
+        chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
     });
@@ -170,7 +172,9 @@ fn disabled_tracer_records_zero_spans_end_to_end() {
                "disabled tracing must record zero spans");
 }
 
-/// The attribution buckets are stable API: all six always present.
+/// The attribution buckets are stable API: every bucket (including
+/// the kvpool `KvCapacity` and chunked-prefill `PrefillStall` ones)
+/// is always present.
 #[test]
 fn attribution_buckets_cover_paper_categories() {
     let attr = Attribution::from_trace(&mmserve::telemetry::Trace::default());
