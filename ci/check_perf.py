@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""CI perf gate for the deterministic replay benchmarks.
+
+Reads BENCH_kvpool.json and BENCH_routing.json (written by
+`mmserve kv --bench-json`) and checks them two ways:
+
+1. Hard invariants that must hold on any commit:
+   - no replayed request is dropped,
+   - the paged pool actually shares prefixes (hit rate > 0),
+   - prefix-affinity routing achieves a strictly higher aggregate
+     prefix hit rate than round-robin.
+
+2. Baseline regression gates from ci/perf-baseline.json: each gate
+   names a metric path, a direction, and the committed baseline value;
+   the job fails when the current value regresses past the tolerance
+   (default 10%). The replays are seeded and run on a simulated clock,
+   so values are bit-identical across machines — a tripped gate means
+   the *code* changed behavior, not the runner.
+
+Refreshing the baseline after an intentional change: download the
+bench-replay-metrics artifact from the Actions run and copy the new
+values into ci/perf-baseline.json in the same PR.
+"""
+
+import json
+import sys
+
+BASELINE = "ci/perf-baseline.json"
+
+
+def dig(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main():
+    failures = []
+    notices = []
+
+    kv = json.load(open("BENCH_kvpool.json"))
+    rt = json.load(open("BENCH_routing.json"))
+    docs = {"BENCH_kvpool.json": kv, "BENCH_routing.json": rt}
+
+    # ---- hard invariants -------------------------------------------
+    if dig(kv, "kvpool.paged.dropped") != 0:
+        failures.append("kvpool replay dropped requests")
+    if (dig(kv, "kvpool.paged.hit_rate") or 0) <= 0:
+        failures.append("kvpool replay has a zero prefix hit rate")
+    rr = dig(rt, "routing.policies.round-robin.agg_hit_rate")
+    pa = dig(rt, "routing.policies.prefix-affinity.agg_hit_rate")
+    if rr is None or pa is None:
+        failures.append("routing policies missing from BENCH_routing.json")
+    elif pa <= rr:
+        failures.append(
+            f"prefix-affinity hit rate {pa:.4f} does not beat "
+            f"round-robin {rr:.4f}"
+        )
+    for policy in ("round-robin", "least-loaded", "prefix-affinity"):
+        if dig(rt, f"routing.policies.{policy}.dropped") != 0:
+            failures.append(f"routing replay ({policy}) dropped requests")
+
+    # ---- baseline regression gates ---------------------------------
+    base = json.load(open(BASELINE))
+    tol = base.get("tolerance", 0.10)
+    for gate in base.get("gates", []):
+        doc = docs.get(gate["file"])
+        cur = dig(doc, gate["path"]) if doc is not None else None
+        label = f"{gate['file']}:{gate['path']}"
+        if cur is None:
+            failures.append(f"{label} missing from bench output")
+            continue
+        ref = gate.get("value")
+        if ref is None:
+            notices.append(
+                f"{label} = {cur:.4f} (no baseline committed yet — "
+                f"copy this value into {BASELINE})"
+            )
+            continue
+        # A gate may carry a wider initial tolerance until its value
+        # is pinned from a real artifact; drop the override (falling
+        # back to the global 10%) when pinning.
+        gtol = gate.get("tolerance", tol)
+        if gate["direction"] == "min" and cur < ref * (1.0 - gtol):
+            failures.append(
+                f"{label} regressed: {cur:.4f} < baseline {ref:.4f} "
+                f"- {gtol:.0%}"
+            )
+        elif gate["direction"] == "max" and cur > ref * (1.0 + gtol):
+            failures.append(
+                f"{label} regressed: {cur:.4f} > baseline {ref:.4f} "
+                f"+ {gtol:.0%}"
+            )
+        else:
+            print(f"ok: {label} = {cur:.4f} (baseline {ref:.4f}, "
+                  f"{gate['direction']} ±{gtol:.0%})")
+
+    for n in notices:
+        print(f"::notice::{n}")
+    if failures:
+        for f in failures:
+            print(f"::error::{f}")
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
+        ..RouterConfig::default()
     });
 
     let mut rng = Rng::new(11);

@@ -254,6 +254,49 @@ impl PagedKvSlots {
         }
     }
 
+    /// Routing probe: leading full blocks of `tokens` resident in the
+    /// pool (0 in dense mode — a dense cache has nothing to share).
+    pub fn probe_prefix(&self, tokens: &[i32]) -> usize {
+        self.pool
+            .as_ref()
+            .map_or(0, |p| p.probe_prefix(tokens))
+    }
+
+    /// A cheap fingerprint of pool activity since start: any page
+    /// alloc/free/eviction/admission/preemption moves it. Used to skip
+    /// republishing an unchanged routing snapshot on decode-only
+    /// ticks. (A sole owner diverging from a cached block mutates the
+    /// resident set without moving these counters — the snapshot is
+    /// advisory and self-heals on the next counted mutation, which the
+    /// divergence's own page growth or release delivers within ticks.)
+    pub fn churn_stamp(&self) -> Option<u64> {
+        self.pool.as_ref().map(|p| {
+            p.stats.blocks_allocated
+                + p.stats.blocks_freed
+                + p.stats.evictions
+                + p.stats.cow_forks
+                + p.stats.seqs_admitted
+                + p.stats.preemptions
+        })
+    }
+
+    /// Publish this worker's cache warmth into its routing cell: the
+    /// resident hash set plus the prefix counters, versioned so the
+    /// router can spot a never-published (stale) snapshot.
+    pub fn publish_routing_snapshot(
+        &self, cell: &crate::routing::ReplicaCell,
+    ) {
+        if let Some(p) = &self.pool {
+            cell.publish(
+                p.page_size(),
+                p.resident_hashes(),
+                p.stats.prefix_lookups,
+                p.stats.prefix_hits,
+                p.stats.prefix_hit_tokens,
+            );
+        }
+    }
+
     /// Admit `request` with its prompt tokens: claim pages (sharing
     /// cached prefixes), then a graph slot. No partial state survives
     /// a failure.
@@ -616,6 +659,32 @@ mod tests {
         let err = kv.extend_chunk(s, &[6, 7, 8, 9]).unwrap_err();
         assert_eq!(err, KvError::MaxSeq { pos: 7, max_seq: 8 });
         assert_eq!(kv.pos(s).unwrap(), 5, "dense rollback");
+    }
+
+    #[test]
+    fn probe_and_snapshot_reflect_pool_warmth() {
+        let mut kv = PagedKvSlots::paged(2, 64, small_cfg());
+        let sys: Vec<i32> = (0..8).collect();
+        let mut prompt = sys.clone();
+        prompt.extend([42, 43]);
+        kv.alloc(1, &prompt).unwrap();
+        assert_eq!(kv.probe_prefix(&sys), 2);
+        // The churn stamp moves with pool activity (publish skip key).
+        let stamp = kv.churn_stamp().unwrap();
+        assert!(stamp > 0);
+        kv.advance(0, 99).unwrap(); // within the partial page: no churn
+        assert_eq!(kv.churn_stamp().unwrap(), stamp);
+        let cell = crate::routing::ReplicaCell::new();
+        kv.publish_routing_snapshot(&cell);
+        assert_eq!(cell.probe(&sys), 2, "snapshot mirrors the pool");
+        let (version, ..) = cell.counters();
+        assert_eq!(version, 1);
+        // Dense mode: no pool, probe 0, nothing published.
+        let dense = PagedKvSlots::dense(2, 64);
+        assert_eq!(dense.probe_prefix(&sys), 0);
+        let cell2 = crate::routing::ReplicaCell::new();
+        dense.publish_routing_snapshot(&cell2);
+        assert_eq!(cell2.counters().0, 0, "dense never publishes");
     }
 
     #[test]

@@ -5,7 +5,13 @@
 //! queue/capacity layers here and the execution engines:
 //!
 //! ```text
-//!   requests ─► batcher (FCFS queue, token budget)
+//!   requests ─► Router ─ routing policy (crate::routing):
+//!                 │       round-robin | least-loaded | prefix-affinity,
+//!                 │       ranking replicas by probed PrefixSnapshots
+//!                 │       (resident block hashes) + queue depth
+//!                 ▼
+//!        replica worker 0..N per model family, each running:
+//!           batcher (FCFS queue, token budget)
 //!                   │
 //!                   ▼           CapacityView (slots + pages)
 //!            sched::Scheduler ◄────────── kv::PagedKvSlots ◄── kvpool
@@ -18,6 +24,12 @@
 //!   BatchedExecutor      GraphExecutor    EagerExecutor  LayerSkipExecutor
 //!   (server, b=N graph)  (decoder_loop)   (eager)        (layerskip)
 //! ```
+//!
+//! Each replica owns its engine and KV pool and republishes its cache
+//! warmth (resident prefix-block hashes + counters) into a shared
+//! `routing::ReplicaCell` every scheduler tick; the router reads those
+//! snapshots lock-free-ish on submit and walks the policy's preference
+//! order, failing over past dead replicas.
 //!
 //! All four text-generation paths implement `sched::StepExecutor`;
 //! their generate loops live once in the sched drivers. Chunked
@@ -47,8 +59,10 @@
 //!   search and KV reorder (Obs #4).
 //! * [`hstu_loop`] — non-autoregressive HSTU ranking/retrieval.
 //! * [`autoquant`] — per-layer-shape quantization calibration (§4.2).
-//! * [`server`] — multi-model router with per-model engine threads and
-//!   the generic `run_tick` tick driver.
+//! * [`server`] — multi-model router with N replicated engine threads
+//!   per model family, prefix-cache-aware replica routing
+//!   (`--replicas` / `--policy`), and the generic `run_tick` tick
+//!   driver.
 
 pub mod autoquant;
 pub mod batcher;

@@ -1,8 +1,15 @@
-//! Multi-model router + per-model engine workers.
+//! Multi-model router + replicated per-model engine workers.
 //!
-//! `Router` owns one worker thread per model family. Each worker builds
-//! its own PJRT `Engine` (engines hold raw PJRT handles and are
-//! deliberately thread-local) and serves requests from an mpsc queue:
+//! `Router` owns `RouterConfig::replicas` worker threads per model
+//! family. Each worker builds its own PJRT `Engine` (engines hold raw
+//! PJRT handles and are deliberately thread-local) and serves requests
+//! from an mpsc queue. A routing policy (`crate::routing`) picks the
+//! replica per request: `prefix-affinity` (the default) probes each
+//! replica's published cache snapshot for the longest resident prompt
+//! prefix — same-system-prompt traffic lands on the worker whose
+//! `PrefixCache` is already warm — with queue-depth tie-breaks and a
+//! least-loaded fallback; a replica whose channel is gone degrades to
+//! the next choice, never dropping the request. Worker loops:
 //!
 //! * **Llama / Chameleon text tasks** — continuous batching through the
 //!   unified tick scheduler: every tick, `sched::Scheduler::plan` turns
@@ -21,6 +28,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -30,12 +38,14 @@ use xla::PjRtBuffer;
 use crate::kvpool::{KvError, KvPoolConfig, PreemptMode};
 use crate::models::tokenizer::{self, ImageTokenizer, TextTokenizer};
 use crate::models::{ModelKind, TaskKind};
+use crate::routing::{rank, ReplicaCell, ReplicaView, RoutingPolicy};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::{DType, Tensor};
 use crate::sched::{ExecDims, PlannedChunk, SchedConfig, Scheduler,
                    SlotFeed, SlotStateError, StepExecutor, TickPlan};
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
+use crate::substrate::table::Table;
 use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
 use super::batcher::QueuedRequest;
@@ -76,6 +86,11 @@ pub struct RouterConfig {
     /// spans for scheduling, tokenization, dispatch, and sampling.
     /// `None` (the default) keeps the serving path instrumentation-free.
     pub tracer: Option<Tracer>,
+    /// Worker threads per model family (each with its own engine and
+    /// KV pool). 1 (the default) is the seed topology.
+    pub replicas: usize,
+    /// How the router picks among replicas (ignored with 1 replica).
+    pub policy: RoutingPolicy,
 }
 
 impl Default for RouterConfig {
@@ -89,50 +104,174 @@ impl Default for RouterConfig {
             chunk_prefill: 0,
             kv: KvPoolConfig::default(),
             tracer: None,
+            replicas: 1,
+            policy: RoutingPolicy::PrefixAffinity,
         }
     }
 }
 
+/// One replica's routing endpoint: its request channel plus the shared
+/// state cell the routing decision reads.
+struct ReplicaHandle {
+    tx: Sender<WorkItem>,
+    cell: Arc<ReplicaCell>,
+}
+
+/// All replicas of one model family + the round-robin cursor.
+struct ModelReplicas {
+    replicas: Vec<ReplicaHandle>,
+    rr: AtomicU64,
+}
+
+/// Per-replica routing counters for reports (`mmserve trace`).
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub model: ModelKind,
+    pub replica: usize,
+    /// Requests the router handed to this replica.
+    pub routed: u64,
+    /// Prefix counters from the replica's last published snapshot.
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+}
+
+impl ReplicaReport {
+    pub fn hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
+    }
+}
+
+/// Per-worker routing rows + a fleet row with rates from summed
+/// counters (never averaged per-worker rates).
+pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
+    let mut t = Table::new(&[
+        "worker", "routed", "prefix lookups", "prefix hits",
+        "hit rate", "hit tokens",
+    ]);
+    let (mut lookups, mut hits, mut tokens, mut routed) = (0u64, 0u64, 0u64, 0u64);
+    for r in reports {
+        t.row(&[
+            format!("{:?}[{}]", r.model, r.replica),
+            r.routed.to_string(),
+            r.prefix_lookups.to_string(),
+            r.prefix_hits.to_string(),
+            format!("{:.1}%", r.hit_rate() * 100.0),
+            r.prefix_hit_tokens.to_string(),
+        ]);
+        lookups += r.prefix_lookups;
+        hits += r.prefix_hits;
+        tokens += r.prefix_hit_tokens;
+        routed += r.routed;
+    }
+    let fleet_rate = if lookups == 0 {
+        0.0
+    } else {
+        hits as f64 / lookups as f64
+    };
+    t.row(&[
+        "fleet (summed)".into(),
+        routed.to_string(),
+        lookups.to_string(),
+        hits.to_string(),
+        format!("{:.1}%", fleet_rate * 100.0),
+        tokens.to_string(),
+    ]);
+    t.render()
+}
+
 /// The multi-model front door.
 pub struct Router {
-    senders: HashMap<ModelKind, Sender<WorkItem>>,
+    models: HashMap<ModelKind, ModelReplicas>,
     handles: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    policy: RoutingPolicy,
+    route_tracer: Option<WorkerTracer>,
 }
 
 impl Router {
     pub fn start(artifacts: &std::path::Path, cfg: RouterConfig) -> Self {
-        let mut senders = HashMap::new();
+        let n = cfg.replicas.max(1);
+        let policy = cfg.policy;
+        let route_tracer = cfg.tracer.as_ref().map(|t| t.worker("router"));
+        let mut models = HashMap::new();
         let mut handles = Vec::new();
         for model in cfg.models.clone() {
-            let (tx, rx) = channel::<WorkItem>();
-            senders.insert(model, tx);
-            let dir = artifacts.join(model.dir_name());
-            let cfg = cfg.clone();
-            handles.push(std::thread::spawn(move || {
-                if let Err(e) = worker_main(model, &dir, cfg, rx) {
-                    eprintln!("[mmserve] {model:?} worker exited: {e:#}");
-                }
-            }));
+            let mut replicas = Vec::new();
+            for r in 0..n {
+                let (tx, rx) = channel::<WorkItem>();
+                let cell = Arc::new(ReplicaCell::new());
+                let dir = artifacts.join(model.dir_name());
+                let cfg = cfg.clone();
+                let worker_cell = cell.clone();
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) =
+                        worker_main(model, r, &dir, cfg, rx, worker_cell)
+                    {
+                        eprintln!(
+                            "[mmserve] {model:?}[{r}] worker exited: {e:#}"
+                        );
+                    }
+                }));
+                replicas.push(ReplicaHandle { tx, cell });
+            }
+            models.insert(model, ModelReplicas {
+                replicas,
+                rr: AtomicU64::new(0),
+            });
         }
-        Router { senders, handles, next_id: AtomicU64::new(1) }
+        Router {
+            models,
+            handles,
+            next_id: AtomicU64::new(1),
+            policy,
+            route_tracer,
+        }
     }
 
     pub fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit a request; returns the response channel.
+    /// Submit a request; returns the response channel. The routing
+    /// policy ranks the model's replicas (prefix warmth / queue depth
+    /// / rotation) and the request is offered down that order, so a
+    /// dead replica falls through to the next instead of failing the
+    /// request while any replica lives.
     pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
         let model = request.task.model();
-        let tx = self
-            .senders
+        let set = self
+            .models
             .get(&model)
             .with_context(|| format!("model {model:?} not serving"))?;
+        let order = {
+            let _route_span = self.route_tracer.as_ref().map(|t| {
+                t.span_req(Cat::Route, "route", request.id)
+            });
+            route_order(self.policy, set, &request)
+        };
         let (rtx, rrx) = channel();
-        tx.send(WorkItem { request, respond: rtx })
-            .map_err(|_| anyhow!("worker for {model:?} is gone"))?;
-        Ok(rrx)
+        let mut item = WorkItem { request, respond: rtx };
+        for idx in order {
+            let replica = &set.replicas[idx];
+            // Count before sending: a fast worker's dequeue must never
+            // race ahead of the enqueue accounting (the gauge would
+            // saturate at 0 and then drift up one forever).
+            replica.cell.note_routed();
+            match replica.tx.send(item) {
+                Ok(()) => return Ok(rrx),
+                // The replica's worker is gone; undo the accounting,
+                // recover the item, and offer it to the next choice.
+                Err(send_err) => {
+                    replica.cell.note_route_failed();
+                    item = send_err.0;
+                }
+            }
+        }
+        Err(anyhow!("all workers for {model:?} are gone"))
     }
 
     /// Submit and block for the response.
@@ -141,32 +280,101 @@ impl Router {
         rx.recv().context("worker dropped response")?
     }
 
+    /// Routing counters per replica, in stable (model, replica) order.
+    pub fn replica_reports(&self) -> Vec<ReplicaReport> {
+        let mut out = Vec::new();
+        for (model, set) in &self.models {
+            for (i, h) in set.replicas.iter().enumerate() {
+                let (_, lookups, hits, tokens) = h.cell.counters();
+                out.push(ReplicaReport {
+                    model: *model,
+                    replica: i,
+                    routed: h.cell.routed(),
+                    prefix_lookups: lookups,
+                    prefix_hits: hits,
+                    prefix_hit_tokens: tokens,
+                });
+            }
+        }
+        out.sort_by_key(|r| (format!("{:?}", r.model), r.replica));
+        out
+    }
+
     /// Drop queues and join workers.
     pub fn shutdown(mut self) {
-        self.senders.clear();
+        self.models.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// Tokens for the routing prefix probe. Must produce the same stream
+/// as the worker's `encode_prompt` (BOS + BPE) or probes would never
+/// match worker-resident blocks — but through a thread-local
+/// tokenizer, so the submit path doesn't rebuild the merge table per
+/// request. Only text/token inputs are probed (image/speech
+/// featurization is too costly to run on the submit path).
+fn probe_tokens_for(input: &RequestInput) -> Option<Vec<i32>> {
+    thread_local! {
+        static TOKENIZER: TextTokenizer = TextTokenizer::new();
+    }
+    match input {
+        RequestInput::Text(t) => Some(TOKENIZER.with(|tk| {
+            let mut ids = vec![tokenizer::BOS];
+            ids.extend(tk.encode(t));
+            ids
+        })),
+        RequestInput::Tokens(ts) => Some(ts.clone()),
+        _ => None,
+    }
+}
+
+/// Rank a model's replicas for one request; non-probeable inputs rank
+/// on depth alone.
+fn route_order(policy: RoutingPolicy, set: &ModelReplicas,
+               request: &Request) -> Vec<usize> {
+    if set.replicas.len() <= 1 {
+        return (0..set.replicas.len()).collect();
+    }
+    let probe_tokens: Option<Vec<i32>> =
+        if policy == RoutingPolicy::PrefixAffinity {
+            probe_tokens_for(&request.input)
+        } else {
+            None
+        };
+    let views: Vec<ReplicaView> = set
+        .replicas
+        .iter()
+        .map(|h| ReplicaView {
+            cached_blocks: probe_tokens
+                .as_deref()
+                .map_or(0, |toks| h.cell.probe(toks)),
+            depth: h.cell.depth(),
+        })
+        .collect();
+    let cursor = set.rr.fetch_add(1, Ordering::Relaxed);
+    rank(policy, &views, cursor)
+}
+
 // ==========================================================================
 // Workers
 // ==========================================================================
 
-fn worker_main(model: ModelKind, dir: &std::path::Path, cfg: RouterConfig,
-               rx: Receiver<WorkItem>) -> Result<()> {
+fn worker_main(model: ModelKind, replica: usize, dir: &std::path::Path,
+               cfg: RouterConfig, rx: Receiver<WorkItem>,
+               cell: Arc<ReplicaCell>) -> Result<()> {
     let mut engine = Engine::load(dir)
         .with_context(|| format!("load engine {}", dir.display()))?;
     if let Some(tracer) = &cfg.tracer {
-        engine.set_tracer(tracer.worker(&format!("{model:?}")));
+        engine.set_tracer(tracer.worker(&format!("{model:?}[{replica}]")));
     }
     match model {
         ModelKind::Llama | ModelKind::Chameleon => {
-            decoder_worker(&engine, cfg, rx)
+            decoder_worker(&engine, cfg, rx, &cell)
         }
-        ModelKind::Seamless => seamless_worker(&engine, cfg, rx),
-        ModelKind::Hstu => hstu_worker(&engine, rx),
+        ModelKind::Seamless => seamless_worker(&engine, cfg, rx, &cell),
+        ModelKind::Hstu => hstu_worker(&engine, rx, &cell),
     }
 }
 
@@ -796,7 +1004,8 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
 }
 
 fn decoder_worker(engine: &Engine, cfg: RouterConfig,
-                  rx: Receiver<WorkItem>) -> Result<()> {
+                  rx: Receiver<WorkItem>, cell: &ReplicaCell)
+                  -> Result<()> {
     let session = DecoderSession::new(engine, cfg.opt)?;
     let dims = session.dims;
     let batch = if cfg.opt.exec == ExecMode::Eager || cfg.opt.layerskip {
@@ -812,8 +1021,11 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         // Sequential (bs=1) serving loop: every request runs through
         // the sched drivers via `DecoderSession::generate`.
         while let Ok(item) = rx.recv() {
+            cell.note_dequeued();
+            cell.set_backlog(1);
             let resp = serve_one_decoder(&session, &item.request);
             let _ = item.respond.send(resp);
+            cell.set_backlog(0);
         }
         return Ok(());
     }
@@ -837,6 +1049,9 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     // the whole page budget can never be admitted; shed it instead of
     // spinning forever.
     let mut stalled = 0usize;
+    // Last published pool-churn fingerprint: steady-state decode-only
+    // ticks skip rebuilding an identical snapshot.
+    let mut published_stamp: Option<u64> = None;
     let tele = engine.tracer();
 
     loop {
@@ -844,6 +1059,7 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         loop {
             match rx.try_recv() {
                 Ok(item) => {
+                    cell.note_dequeued();
                     intake_decoder_item(item, &session, &mut st, tele)?
                 }
                 Err(TryRecvError::Empty) => break,
@@ -853,6 +1069,16 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
                 }
             }
         }
+        // Publish this replica's routing view: backlog for the depth
+        // tie-break, the pool's resident hashes for the prefix probe
+        // (rebuilt only when the pool actually churned — the hash-set
+        // clone is pointless on decode-only ticks).
+        cell.set_backlog(st.sched.pending() + st.sched.in_flight());
+        let stamp = slots.churn_stamp();
+        if stamp.is_some() && stamp != published_stamp {
+            slots.publish_routing_snapshot(cell);
+            published_stamp = stamp;
+        }
         if closed && slots.live_count() == 0 && st.sched.pending() == 0 {
             return Ok(());
         }
@@ -860,6 +1086,7 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             // Idle: block for the next request.
             match rx.recv() {
                 Ok(item) => {
+                    cell.note_dequeued();
                     intake_decoder_item(item, &session, &mut st, tele)?
                 }
                 Err(_) => return Ok(()),
@@ -1016,11 +1243,15 @@ fn finish_decoder_response(job: &SlotJob) -> Response {
 // ---- Seamless ---------------------------------------------------------------
 
 fn seamless_worker(engine: &Engine, cfg: RouterConfig,
-                   rx: Receiver<WorkItem>) -> Result<()> {
+                   rx: Receiver<WorkItem>, cell: &ReplicaCell)
+                   -> Result<()> {
     let pipe = SeamlessPipeline::new(engine, cfg.reorder)?;
     while let Ok(item) = rx.recv() {
+        cell.note_dequeued();
+        cell.set_backlog(1);
         let resp = serve_one_seamless(&pipe, &item.request);
         let _ = item.respond.send(resp);
+        cell.set_backlog(0);
     }
     Ok(())
 }
@@ -1061,11 +1292,15 @@ fn serve_one_seamless(pipe: &SeamlessPipeline, req: &Request)
 
 // ---- HSTU --------------------------------------------------------------------
 
-fn hstu_worker(engine: &Engine, rx: Receiver<WorkItem>) -> Result<()> {
+fn hstu_worker(engine: &Engine, rx: Receiver<WorkItem>,
+               cell: &ReplicaCell) -> Result<()> {
     let runner = HstuRunner::new(engine, HstuAttn::Fused)?;
     while let Ok(item) = rx.recv() {
+        cell.note_dequeued();
+        cell.set_backlog(1);
         let resp = serve_one_hstu(&runner, &item.request);
         let _ = item.respond.send(resp);
+        cell.set_backlog(0);
     }
     Ok(())
 }
@@ -1091,6 +1326,183 @@ fn serve_one_hstu(runner: &HstuRunner, req: &Request) -> Result<Response> {
         ttft: r.e2e,
         e2e: started.elapsed().as_secs_f64(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::prefix::block_hashes;
+
+    fn handle() -> (ReplicaHandle, Receiver<WorkItem>) {
+        let (tx, rx) = channel::<WorkItem>();
+        (ReplicaHandle { tx, cell: Arc::new(ReplicaCell::new()) }, rx)
+    }
+
+    fn token_request(id: u64, tokens: Vec<i32>) -> Request {
+        Request {
+            id,
+            task: TaskKind::TextToText,
+            input: RequestInput::Tokens(tokens),
+            max_new_tokens: 4,
+            sampling: crate::coordinator::request::SamplingParams::greedy(),
+        }
+    }
+
+    fn router_with(set: ModelReplicas, policy: RoutingPolicy) -> Router {
+        let mut models = HashMap::new();
+        models.insert(ModelKind::Llama, set);
+        Router {
+            models,
+            handles: Vec::new(),
+            next_id: AtomicU64::new(1),
+            policy,
+            route_tracer: None,
+        }
+    }
+
+    /// The probe must tokenize exactly like the worker, or prefix
+    /// probes could never match worker-resident blocks.
+    #[test]
+    fn probe_tokens_match_worker_tokenization() {
+        let text = "a shared system prompt for routing";
+        assert_eq!(
+            probe_tokens_for(&RequestInput::Text(text.into())).unwrap(),
+            encode_prompt(text)
+        );
+        let toks = vec![5, 6, 7];
+        assert_eq!(
+            probe_tokens_for(&RequestInput::Tokens(toks.clone())),
+            Some(toks)
+        );
+        assert!(
+            probe_tokens_for(&RequestInput::Speech(vec![0.0; 4])).is_none()
+        );
+    }
+
+    #[test]
+    fn route_order_prefers_warm_replica_for_token_prompts() {
+        let (h0, _rx0) = handle();
+        let (h1, _rx1) = handle();
+        let prompt: Vec<i32> = (0..32).collect();
+        // Replica 1 publishes the prompt's two full blocks as resident.
+        h1.cell.publish(
+            16,
+            block_hashes(&prompt, 16).into_iter().collect(),
+            4, 2, 32,
+        );
+        let set = ModelReplicas {
+            replicas: vec![h0, h1],
+            rr: AtomicU64::new(0),
+        };
+        let req = token_request(1, prompt);
+        let order = route_order(RoutingPolicy::PrefixAffinity, &set, &req);
+        assert_eq!(order, vec![1, 0], "warm cache wins");
+        // Non-probeable input: falls back to depth (tie → index 0).
+        let img = Request {
+            id: 2,
+            task: TaskKind::TextToText,
+            input: RequestInput::Image {
+                pixels: vec![0.0; 16],
+                h: 4,
+                w: 4,
+            },
+            max_new_tokens: 1,
+            sampling: crate::coordinator::request::SamplingParams::greedy(),
+        };
+        let order = route_order(RoutingPolicy::PrefixAffinity, &set, &img);
+        assert_eq!(order, vec![0, 1]);
+    }
+
+    /// Satellite: a replica whose channel is closed must degrade to
+    /// the next choice — the request still routes, it is never lost.
+    #[test]
+    fn submit_fails_over_dead_replica_and_errors_only_when_all_gone() {
+        let (h0, rx0) = handle();
+        let (h1, rx1) = handle();
+        let cell1 = h1.cell.clone();
+        let set = ModelReplicas {
+            replicas: vec![h0, h1],
+            rr: AtomicU64::new(0),
+        };
+        let router = router_with(set, RoutingPolicy::PrefixAffinity);
+        // Cold caches + equal depth rank replica 0 first; kill it.
+        drop(rx0);
+        let _rrx = router
+            .submit(token_request(7, (0..8).collect()))
+            .expect("must fail over to the live replica");
+        let got = rx1.try_recv().expect("item landed on replica 1");
+        assert_eq!(got.request.id, 7);
+        assert_eq!(cell1.routed(), 1);
+        // All replicas gone: loud error, not a hang or a silent drop.
+        drop(rx1);
+        let err = router
+            .submit(token_request(8, (0..8).collect()))
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("all workers"), "{err}");
+        // A model that was never started still reports cleanly.
+        let err = router
+            .submit(Request {
+                id: 9,
+                task: TaskKind::SpeechToText,
+                input: RequestInput::Speech(vec![0.0; 8]),
+                max_new_tokens: 1,
+                sampling:
+                    crate::coordinator::request::SamplingParams::greedy(),
+            })
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("not serving"), "{err}");
+    }
+
+    #[test]
+    fn round_robin_rotates_across_submits() {
+        let (h0, rx0) = handle();
+        let (h1, rx1) = handle();
+        let set = ModelReplicas {
+            replicas: vec![h0, h1],
+            rr: AtomicU64::new(0),
+        };
+        let router = router_with(set, RoutingPolicy::RoundRobin);
+        for id in 0..4u64 {
+            router.submit(token_request(id, vec![1, 2, 3])).unwrap();
+        }
+        let on0: Vec<u64> =
+            rx0.try_iter().map(|w| w.request.id).collect();
+        let on1: Vec<u64> =
+            rx1.try_iter().map(|w| w.request.id).collect();
+        assert_eq!(on0, vec![0, 2]);
+        assert_eq!(on1, vec![1, 3]);
+    }
+
+    #[test]
+    fn replica_reports_render_fleet_rate_from_summed_counters() {
+        let reports = vec![
+            ReplicaReport {
+                model: ModelKind::Llama,
+                replica: 0,
+                routed: 10,
+                prefix_lookups: 100,
+                prefix_hits: 90,
+                prefix_hit_tokens: 1440,
+            },
+            ReplicaReport {
+                model: ModelKind::Llama,
+                replica: 1,
+                routed: 2,
+                prefix_lookups: 10,
+                prefix_hits: 0,
+                prefix_hit_tokens: 0,
+            },
+        ];
+        assert!((reports[0].hit_rate() - 0.9).abs() < 1e-12);
+        let s = render_replica_reports(&reports);
+        assert!(s.contains("Llama[0]"));
+        assert!(s.contains("Llama[1]"));
+        // 90/110 = 81.8%, not the 45.0% a mean-of-rates would print.
+        assert!(s.contains("81.8%"), "{s}");
+        assert!(s.contains("fleet (summed)"));
+    }
 }
 
 /// Aggregate responses into serving statistics.

@@ -22,7 +22,15 @@
 //!   rate, block churn, evictions, preemptions, capacity waits).
 //! * [`replay`] — a deterministic workload replay that drives the pool
 //!   (or the dense slot baseline) through a request mix and reports
-//!   mean batch occupancy — the `mmserve kv` engine.
+//!   mean batch occupancy — the `mmserve kv` engine. Its `SimWorker`
+//!   is also the unit the replica-routing replay
+//!   (`crate::routing::replay`) runs in fleets.
+//!
+//! The pool additionally answers cheap read-only *prefix probes*
+//! (`KvPool::probe_prefix`, resident hashes via
+//! `KvPool::resident_hashes`) — the signal the router's
+//! prefix-affinity policy uses to steer same-prefix requests to the
+//! replica whose cache is already warm.
 //!
 //! Scope: the pool is the *logical* capacity layer. The compiled decode
 //! graphs keep their dense per-slot caches (`KvSlots` stays the

@@ -97,6 +97,36 @@ impl PoolStats {
         self.blocks_allocated + self.blocks_freed
     }
 
+    /// Fold another worker's counters into this one. Fleet-wide rates
+    /// must be computed from *summed* numerators and denominators —
+    /// averaging per-worker `hit_rate()` values weights an idle worker
+    /// the same as a busy one (the `mmserve kv` labeling bug).
+    pub fn merge(&mut self, other: &PoolStats) {
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.blocks_allocated += other.blocks_allocated;
+        self.blocks_freed += other.blocks_freed;
+        self.evictions += other.evictions;
+        self.cow_forks += other.cow_forks;
+        self.preemptions += other.preemptions;
+        self.swapped_out_tokens += other.swapped_out_tokens;
+        self.capacity_wait_ticks += other.capacity_wait_ticks;
+        self.seqs_admitted += other.seqs_admitted;
+    }
+
+    /// Aggregate per-worker counters into one fleet-wide view.
+    pub fn aggregate<'a, I>(stats: I) -> PoolStats
+    where
+        I: IntoIterator<Item = &'a PoolStats>,
+    {
+        let mut out = PoolStats::default();
+        for s in stats {
+            out.merge(s);
+        }
+        out
+    }
+
     pub fn render(&self) -> String {
         let mut t = Table::new(&["counter", "value"]);
         t.row(&["prefix lookups".into(), self.prefix_lookups.to_string()]);
@@ -504,6 +534,28 @@ impl KvPool {
         self.stats.capacity_wait_ticks += 1;
     }
 
+    /// Cheap read-only routing probe: how many leading full blocks of
+    /// `tokens` are resident (live or cached) right now. Does not
+    /// touch the LRU, the refcounts, or the prefix-hit counters — an
+    /// admission may still miss if eviction races the probe.
+    pub fn probe_prefix(&self, tokens: &[i32]) -> usize {
+        let ps = self.blocks.page_size();
+        let mut n = 0;
+        for h in block_hashes(tokens, ps) {
+            if self.cache.lookup(h).is_none() {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// The resident block-hash set — the payload a worker publishes
+    /// into its routing [`crate::routing::PrefixSnapshot`] each tick.
+    pub fn resident_hashes(&self) -> std::collections::HashSet<u64> {
+        self.cache.hashes().collect()
+    }
+
     // ---- internals -------------------------------------------------
 
     /// Free page, else evict the LRU cached prefix, else None.
@@ -771,6 +823,52 @@ mod tests {
         let err = p.advance(1, 5).unwrap_err();
         assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
         p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn probe_prefix_sees_live_and_cached_blocks_without_mutating() {
+        let mut p = KvPool::new(8, 4, 64);
+        let sys: Vec<i32> = (0..8).collect(); // two full blocks
+        let mut a = sys.clone();
+        a.extend([100, 101]);
+        p.alloc(1, &a).unwrap();
+        let lookups_before = p.stats.prefix_lookups;
+        // Live pages probe positively; the unique tail block misses.
+        assert_eq!(p.probe_prefix(&sys), 2);
+        let mut other = sys.clone();
+        other.extend([7, 7, 7, 7]);
+        assert_eq!(p.probe_prefix(&other), 2, "chain stops at the miss");
+        assert_eq!(p.probe_prefix(&[9, 9, 9, 9]), 0);
+        assert_eq!(p.stats.prefix_lookups, lookups_before,
+                   "probe is not a lookup");
+        // Released full blocks stay probeable from the cache LRU.
+        p.release(1).unwrap();
+        assert_eq!(p.probe_prefix(&sys), 2);
+        assert_eq!(p.resident_hashes().len(), 2);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn aggregate_sums_counters_not_rates() {
+        let a = PoolStats {
+            prefix_lookups: 100,
+            prefix_hits: 90,
+            preemptions: 1,
+            ..PoolStats::default()
+        };
+        let b = PoolStats {
+            prefix_lookups: 10,
+            prefix_hits: 0,
+            evictions: 3,
+            ..PoolStats::default()
+        };
+        let fleet = PoolStats::aggregate([&a, &b]);
+        assert_eq!(fleet.prefix_lookups, 110);
+        assert_eq!(fleet.prefix_hits, 90);
+        assert_eq!(fleet.preemptions, 1);
+        assert_eq!(fleet.evictions, 3);
+        // 90/110, NOT the mean of 0.9 and 0.0.
+        assert!((fleet.hit_rate() - 90.0 / 110.0).abs() < 1e-12);
     }
 
     #[test]

@@ -128,6 +128,12 @@ impl PrefixCache {
     pub fn lru_pages(&self) -> &[PageId] {
         &self.lru
     }
+
+    /// All resident block hashes (live shared pages and parked cached
+    /// ones alike) — the payload of the routing prefix snapshot.
+    pub fn hashes(&self) -> impl Iterator<Item = u64> + '_ {
+        self.by_hash.keys().copied()
+    }
 }
 
 #[cfg(test)]

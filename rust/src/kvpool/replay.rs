@@ -18,8 +18,13 @@
 //! (huge TBT outliers for the requests already decoding), while
 //! `chunk_prefill` bounds any tick's prefill work by the chunk budget
 //! — the replay reports mean/p99 TBT and p99 TTFT for both.
+//!
+//! The whole simulation of one worker lives in [`SimWorker`] so the
+//! replica-routing replay (`crate::routing::replay`) can run N of
+//! them in lockstep under a routing policy; [`replay`] is the
+//! single-worker driver those semantics are defined by.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::coordinator::batcher::QueuedRequest;
 use crate::coordinator::kv::PagedKvSlots;
@@ -42,6 +47,12 @@ pub struct ReplayConfig {
     pub requests: usize,
     /// Shared system-prompt length (tokens) prefixed to every prompt.
     pub system_prompt_len: usize,
+    /// Distinct shared system prompts ("tenants"): each request draws
+    /// one uniformly. 1 (the default) keeps the single shared prompt —
+    /// and, deliberately, the exact RNG stream of earlier replays.
+    /// More tenants is the regime where prefix-affinity routing pays:
+    /// round-robin makes every replica cache every tenant's prefix.
+    pub tenants: usize,
     /// Unique prompt-suffix length range for short chats (inclusive).
     pub short_prompt: (usize, usize),
     pub short_decode: (usize, usize),
@@ -68,6 +79,7 @@ impl Default for ReplayConfig {
         ReplayConfig {
             requests: 64,
             system_prompt_len: 48,
+            tenants: 1,
             short_prompt: (4, 24),
             short_decode: (8, 32),
             long_prompt: (64, 160),
@@ -91,6 +103,54 @@ impl ReplayConfig {
     }
 }
 
+/// One request of the generated workload.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub id: u64,
+    /// Full prompt: the tenant's shared system prefix + unique tail.
+    pub tokens: Vec<i32>,
+    /// Decode steps to run.
+    pub decode: usize,
+    /// Tenant index (which shared system prompt it carries).
+    pub tenant: usize,
+}
+
+/// The deterministic request mix for `cfg` (same seed → same
+/// workload, byte for byte — the routing comparison and the CI perf
+/// gate both depend on that).
+pub fn generate_workload(cfg: &ReplayConfig) -> Vec<SimRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let tenants = cfg.tenants.max(1);
+    // Tenant t's shared prefix; t = 0 reproduces the historical
+    // single-prompt stream exactly.
+    let sys: Vec<Vec<i32>> = (0..tenants)
+        .map(|t| {
+            (0..cfg.system_prompt_len)
+                .map(|i| ((i + t * 101) % 200) as i32)
+                .collect()
+        })
+        .collect();
+    let mut out = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        let id = i as u64 + 1;
+        let long = rng.usize(0, 100) < cfg.long_percent;
+        let (pr, dr) = if long {
+            (cfg.long_prompt, cfg.long_decode)
+        } else {
+            (cfg.short_prompt, cfg.short_decode)
+        };
+        let extra = rng.usize(pr.0, pr.1 + 1);
+        let decode = rng.usize(dr.0, dr.1 + 1).max(1);
+        // Only drawn in multi-tenant mode so the single-tenant RNG
+        // stream (and every replay built on it) stays bit-identical.
+        let tenant = if tenants > 1 { rng.usize(0, tenants) } else { 0 };
+        let mut tokens = sys[tenant].clone();
+        tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
+        out.push(SimRequest { id, tokens, decode, tenant });
+    }
+    out
+}
+
 /// One replay's outcome.
 #[derive(Debug, Clone)]
 pub struct ReplayResult {
@@ -107,7 +167,8 @@ pub struct ReplayResult {
     pub mean_pool_utilization: f64,
     /// Simulated wall clock at drain.
     pub sim_time: f64,
-    /// Simulated time-to-first-token per request (enqueue at t = 0).
+    /// Simulated time-to-first-token per request, measured from its
+    /// delivery to the worker (delivery is t = 0 for `replay`).
     pub ttft: Histogram,
     /// Simulated per-tick latency experienced by decoding requests —
     /// the time-between-tokens distribution.
@@ -117,6 +178,9 @@ pub struct ReplayResult {
     pub max_tick_prefill_tokens: usize,
     /// Pool counters (zeros for the dense baseline).
     pub stats: PoolStats,
+    /// Decoded token stream per request — the determinism witness the
+    /// routing replay compares across policies.
+    pub outputs: HashMap<u64, Vec<i32>>,
 }
 
 struct Pending {
@@ -124,102 +188,148 @@ struct Pending {
     remaining: usize,
 }
 
-/// Replay the mix through a paged pool (`paged`) or the dense slot
-/// baseline under the same byte budget.
-pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
-    let slots_n = if paged { cfg.batch_slots } else { cfg.dense_slots() };
-    let mut kv = if paged {
-        PagedKvSlots::paged(slots_n, cfg.max_seq, KvPoolConfig {
-            page_size: cfg.page_size,
-            total_pages: cfg.total_pages,
-        })
-    } else {
-        PagedKvSlots::dense(slots_n, cfg.max_seq)
-    };
-    let mut sched = Scheduler::new(SchedConfig {
-        prefill_budget: cfg.prefill_budget,
-        chunk: cfg.chunk_prefill,
-    });
-    // Queued payloads, mid-prefill payloads, and decode budgets.
-    let mut staging: HashMap<u64, Pending> = HashMap::new();
-    let mut inflight: HashMap<u64, Pending> = HashMap::new();
-    let mut remaining: HashMap<u64, usize> = HashMap::new();
+/// One simulated worker: the real scheduling path (unified
+/// [`Scheduler`] over [`PagedKvSlots`]) plus its own simulated clock
+/// and latency accounting. [`replay`] drives one; the routing replay
+/// drives a fleet in lockstep.
+pub struct SimWorker {
+    kv: PagedKvSlots,
+    sched: Scheduler,
+    /// Queued (not yet admitted) request payloads, by request id.
+    staging: HashMap<u64, Pending>,
+    /// Mid-prefill payloads, by request id.
+    inflight: HashMap<u64, Pending>,
+    /// Decode budgets of fully prefilled requests.
+    remaining: HashMap<u64, usize>,
+    /// Delivery time on this worker's clock (TTFT origin).
+    arrived: HashMap<u64, f64>,
+    /// Requests whose TTFT has been recorded: a preemption victim's
+    /// re-prefill must not record a second (inflated) sample — the
+    /// server keeps the original ttft in the parked `SlotJob` on
+    /// resume, and so does the sim.
+    ttft_done: HashSet<u64>,
+    slots_n: usize,
+    now: f64,
+    ttft: Histogram,
+    tbt: Histogram,
+    decode_ticks: u64,
+    occupancy_sum: u64,
+    peak: usize,
+    completed: usize,
+    dropped: usize,
+    tokens_decoded: u64,
+    util_sum: f64,
+    stalled: usize,
+    max_tick_prefill: usize,
+    outputs: HashMap<u64, Vec<i32>>,
+}
 
-    // Closed-loop arrival: the full mix queues up front (the regime
-    // where admission policy, not arrival spacing, bounds occupancy).
-    let mut rng = Rng::new(cfg.seed);
-    let sys: Vec<i32> = (0..cfg.system_prompt_len)
-        .map(|i| (i % 200) as i32)
-        .collect();
-    for i in 0..cfg.requests {
-        let id = i as u64 + 1;
-        let long = rng.usize(0, 100) < cfg.long_percent;
-        let (pr, dr) = if long {
-            (cfg.long_prompt, cfg.long_decode)
+impl SimWorker {
+    pub fn new(cfg: &ReplayConfig, paged: bool) -> SimWorker {
+        let slots_n =
+            if paged { cfg.batch_slots } else { cfg.dense_slots() };
+        let kv = if paged {
+            PagedKvSlots::paged(slots_n, cfg.max_seq, KvPoolConfig {
+                page_size: cfg.page_size,
+                total_pages: cfg.total_pages,
+            })
         } else {
-            (cfg.short_prompt, cfg.short_decode)
+            PagedKvSlots::dense(slots_n, cfg.max_seq)
         };
-        let extra = rng.usize(pr.0, pr.1 + 1);
-        let decode = rng.usize(dr.0, dr.1 + 1).max(1);
-        let mut tokens = sys.clone();
-        tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
-        sched.enqueue(QueuedRequest {
-            id,
-            prompt_len: tokens.len(),
-            max_new_tokens: decode,
-        });
-        staging.insert(id, Pending { tokens, remaining: decode });
+        SimWorker {
+            kv,
+            sched: Scheduler::new(SchedConfig {
+                prefill_budget: cfg.prefill_budget,
+                chunk: cfg.chunk_prefill,
+            }),
+            staging: HashMap::new(),
+            inflight: HashMap::new(),
+            remaining: HashMap::new(),
+            arrived: HashMap::new(),
+            ttft_done: HashSet::new(),
+            slots_n,
+            now: 0.0,
+            ttft: Histogram::new(),
+            tbt: Histogram::new(),
+            decode_ticks: 0,
+            occupancy_sum: 0,
+            peak: 0,
+            completed: 0,
+            dropped: 0,
+            tokens_decoded: 0,
+            util_sum: 0.0,
+            stalled: 0,
+            max_tick_prefill: 0,
+            outputs: HashMap::new(),
+        }
     }
 
-    let mut now = 0.0f64;
-    let mut ttft = Histogram::new();
-    let mut tbt = Histogram::new();
-    let mut decode_ticks = 0u64;
-    let mut occupancy_sum = 0u64;
-    let mut peak = 0usize;
-    let mut completed = 0usize;
-    let mut dropped = 0usize;
-    let mut tokens_decoded = 0u64;
-    let mut util_sum = 0.0f64;
-    let mut stalled = 0usize;
-    let mut max_tick_prefill = 0usize;
-    let mut guard = 0u64;
+    /// Hand one request to this worker (enqueue + stage), arriving at
+    /// the worker's current simulated time.
+    pub fn deliver(&mut self, req: &SimRequest) {
+        self.sched.enqueue(QueuedRequest {
+            id: req.id,
+            prompt_len: req.tokens.len(),
+            max_new_tokens: req.decode,
+        });
+        self.staging.insert(req.id, Pending {
+            tokens: req.tokens.clone(),
+            remaining: req.decode,
+        });
+        self.arrived.insert(req.id, self.now);
+    }
 
-    while (sched.pending() > 0 || kv.live_count() > 0) && guard < 1_000_000
-    {
-        guard += 1;
+    /// Anything queued, mid-prefill, or decoding?
+    pub fn has_work(&self) -> bool {
+        self.sched.pending() > 0 || self.kv.live_count() > 0
+    }
+
+    /// Routing view: outstanding requests on this worker.
+    pub fn depth(&self) -> usize {
+        self.sched.pending() + self.sched.in_flight()
+    }
+
+    /// Routing view: leading prompt blocks resident in this worker's
+    /// pool (the simulated analogue of the live snapshot probe).
+    pub fn probe(&self, tokens: &[i32]) -> usize {
+        self.kv.probe_prefix(tokens)
+    }
+
+    /// One scheduler tick: plan, shed wedged work, execute prefill
+    /// chunks, take one batched decode step, advance the clock.
+    pub fn tick(&mut self) {
         // ---- plan ------------------------------------------------------
-        let view = kv.capacity_view();
-        let plan = sched.plan(&view);
+        let view = self.kv.capacity_view();
+        let plan = self.sched.plan(&view);
         if plan.blocked_on_capacity {
-            kv.note_capacity_wait();
+            self.kv.note_capacity_wait();
         }
         // Nothing planned and nothing decoding to free pages: queued
         // or mid-prefill work larger than the pool can ever grant
         // would stall forever — shed it (mirrors the server worker).
-        if plan.chunks.is_empty() && remaining.is_empty()
-            && (sched.pending() > 0 || !inflight.is_empty())
+        if plan.chunks.is_empty() && self.remaining.is_empty()
+            && (self.sched.pending() > 0 || !self.inflight.is_empty())
         {
-            stalled += 1;
-            if stalled > 2 {
-                if let Some(req) = sched.head_prefilling() {
+            self.stalled += 1;
+            if self.stalled > 2 {
+                if let Some(req) = self.sched.head_prefilling() {
                     // Wedged chunked prefill: free its slot and pages.
-                    sched.drop_request(req);
-                    if let Some(slot) = kv.slot_of(req) {
-                        let _ = kv.release(slot);
+                    self.sched.drop_request(req);
+                    if let Some(slot) = self.kv.slot_of(req) {
+                        let _ = self.kv.release(slot);
                     }
-                    inflight.remove(&req);
-                    dropped += 1;
-                } else if let Some(q) = sched.shed_front() {
-                    sched.drop_request(q.id);
-                    staging.remove(&q.id);
-                    dropped += 1;
+                    self.inflight.remove(&req);
+                    self.dropped += 1;
+                } else if let Some(q) = self.sched.shed_front() {
+                    self.sched.drop_request(q.id);
+                    self.staging.remove(&q.id);
+                    self.dropped += 1;
                 }
-                stalled = 0;
+                self.stalled = 0;
             }
-            continue;
+            return;
         }
-        stalled = 0;
+        self.stalled = 0;
 
         // ---- execute prefill chunks ------------------------------------
         let mut tick_prefill = 0usize;
@@ -227,20 +337,20 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
         let mut requeue: Vec<QueuedRequest> = Vec::new();
         for c in &plan.chunks {
             if c.start == 0 {
-                let Some(p) = staging.remove(&c.request) else {
-                    sched.drop_request(c.request);
+                let Some(p) = self.staging.remove(&c.request) else {
+                    self.sched.drop_request(c.request);
                     continue;
                 };
                 let len = c.len.min(p.tokens.len());
-                match kv.alloc(c.request, &p.tokens[..len]) {
+                match self.kv.alloc(c.request, &p.tokens[..len]) {
                     Ok(_) => {
                         tick_prefill += len;
-                        sched.chunk_committed(c.request, len);
+                        self.sched.chunk_committed(c.request, len);
                         if len >= p.tokens.len() {
-                            remaining.insert(c.request, p.remaining);
+                            self.remaining.insert(c.request, p.remaining);
                             finished_prefill.push(c.request);
                         } else {
-                            inflight.insert(c.request, p);
+                            self.inflight.insert(c.request, p);
                         }
                     }
                     Err(KvError::CapacityExhausted { .. }) => {
@@ -250,211 +360,257 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
                             prompt_len: p.tokens.len(),
                             max_new_tokens: p.remaining,
                         });
-                        staging.insert(c.request, p);
+                        self.staging.insert(c.request, p);
                     }
                     Err(_) => {
-                        sched.drop_request(c.request);
-                        dropped += 1;
+                        self.sched.drop_request(c.request);
+                        self.dropped += 1;
                     }
                 }
             } else {
-                let Some(slot) = kv.slot_of(c.request) else {
-                    sched.drop_request(c.request);
-                    inflight.remove(&c.request);
+                let Some(slot) = self.kv.slot_of(c.request) else {
+                    self.sched.drop_request(c.request);
+                    self.inflight.remove(&c.request);
                     continue;
                 };
-                let total = inflight
+                let total = self
+                    .inflight
                     .get(&c.request)
                     .map(|p| p.tokens.len())
                     .unwrap_or(0);
-                let start = kv.pos(slot).unwrap_or(c.start);
+                let start = self.kv.pos(slot).unwrap_or(c.start);
                 let len = c.len.min(total.saturating_sub(start));
                 if len == 0 {
                     continue;
                 }
-                let chunk: Vec<i32> = inflight[&c.request].tokens
+                let chunk: Vec<i32> = self.inflight[&c.request].tokens
                     [start..start + len]
                     .to_vec();
-                match kv.extend_chunk(slot, &chunk) {
+                match self.kv.extend_chunk(slot, &chunk) {
                     Ok(_) => {
                         tick_prefill += len;
-                        sched.chunk_committed(c.request, len);
+                        self.sched.chunk_committed(c.request, len);
                         if start + len >= total {
-                            let p = inflight
+                            let p = self
+                                .inflight
                                 .remove(&c.request)
                                 .expect("inflight entry");
-                            remaining.insert(c.request, p.remaining);
+                            self.remaining.insert(c.request, p.remaining);
                             finished_prefill.push(c.request);
                         }
                     }
                     Err(KvError::CapacityExhausted { .. }) => {
                         // Chunk growth raced decode growth: restart
                         // from the queue front (recompute).
-                        let p = inflight
+                        let p = self
+                            .inflight
                             .remove(&c.request)
                             .expect("inflight entry");
-                        let _ = kv.release(slot);
+                        let _ = self.kv.release(slot);
                         requeue.push(QueuedRequest {
                             id: c.request,
                             prompt_len: p.tokens.len(),
                             max_new_tokens: p.remaining,
                         });
-                        staging.insert(c.request, p);
+                        self.staging.insert(c.request, p);
                     }
                     Err(_) => {
                         // Structural failure (e.g. the prefix reaches
                         // max_seq): requeueing would fail identically
                         // forever — drop, like the server worker.
-                        inflight.remove(&c.request);
-                        let _ = kv.release(slot);
-                        sched.drop_request(c.request);
-                        dropped += 1;
+                        self.inflight.remove(&c.request);
+                        let _ = self.kv.release(slot);
+                        self.sched.drop_request(c.request);
+                        self.dropped += 1;
                     }
                 }
             }
         }
-        sched.requeue_all(requeue);
-        max_tick_prefill = max_tick_prefill.max(tick_prefill);
+        self.sched.requeue_all(requeue);
+        self.max_tick_prefill = self.max_tick_prefill.max(tick_prefill);
 
         // ---- one batched decode step + the simulated clock -------------
-        let decoding: Vec<(usize, u64, usize)> = kv
+        let decoding: Vec<(usize, u64, usize)> = self
+            .kv
             .live_slots()
             .into_iter()
-            .filter(|(_, req, _)| remaining.contains_key(req))
+            .filter(|(_, req, _)| self.remaining.contains_key(req))
             .collect();
         let tick_cost = tick_prefill as f64 * SIM_PREFILL_TOKEN_COST
             + if decoding.is_empty() { 0.0 } else { SIM_DECODE_COST };
-        now += tick_cost;
+        self.now += tick_cost;
         // First token is sampled from the completing prefill's logits
         // at the end of this tick.
-        for _ in &finished_prefill {
-            ttft.record(now);
+        for req in &finished_prefill {
+            if self.ttft_done.insert(*req) {
+                let t0 = self.arrived.get(req).copied().unwrap_or(0.0);
+                self.ttft.record(self.now - t0);
+            }
         }
         if decoding.is_empty() {
-            continue;
+            return;
         }
-        decode_ticks += 1;
-        occupancy_sum += decoding.len() as u64;
-        peak = peak.max(decoding.len());
-        if let Some(pool) = kv.pool() {
-            util_sum +=
+        self.decode_ticks += 1;
+        self.occupancy_sum += decoding.len() as u64;
+        self.peak = self.peak.max(decoding.len());
+        if let Some(pool) = self.kv.pool() {
+            self.util_sum +=
                 pool.live_pages() as f64 / pool.total_pages() as f64;
         }
         for (slot, req, pos) in decoding {
             // A preemption earlier in this step may have freed the slot.
-            if kv.slot_of(req) != Some(slot) {
+            if self.kv.slot_of(req) != Some(slot) {
                 continue;
             }
-            tbt.record(tick_cost);
+            self.tbt.record(tick_cost);
             let rem = {
-                let r = remaining.get_mut(&req).expect("live job");
+                let r = self.remaining.get_mut(&req).expect("live job");
                 *r -= 1;
                 *r
             };
-            tokens_decoded += 1;
+            self.tokens_decoded += 1;
+            // The emitted token is a pure function of the position, so
+            // per-request streams are identical no matter which worker
+            // serves the request or how often it is preempted.
+            let tok = 900 + (pos as i32 % 50);
+            self.outputs.entry(req).or_default().push(tok);
             if rem == 0 {
-                kv.release(slot).expect("live slot");
-                remaining.remove(&req);
-                sched.finished(req);
-                completed += 1;
+                self.kv.release(slot).expect("live slot");
+                self.remaining.remove(&req);
+                self.sched.finished(req);
+                self.completed += 1;
                 continue;
             }
-            let tok = 900 + (pos as i32 % 50);
-            match kv.advance(slot, tok) {
+            match self.kv.advance(slot, tok) {
                 Ok(_) => {}
                 Err(KvError::MaxSeq { .. }) => {
                     // Sequence cap: finish early, like the server loop.
-                    kv.release(slot).expect("live slot");
-                    remaining.remove(&req);
-                    sched.finished(req);
-                    completed += 1;
+                    self.kv.release(slot).expect("live slot");
+                    self.remaining.remove(&req);
+                    self.sched.finished(req);
+                    self.completed += 1;
                 }
                 Err(KvError::CapacityExhausted { .. }) => {
-                    // Decode outgrew the pool: preempt (latest-admitted
-                    // first) until the advance fits or we evicted
-                    // ourselves.
-                    loop {
-                        let Some((_vslot, pre)) =
-                            kv.preempt(PreemptMode::Recompute)
-                        else {
-                            break;
-                        };
-                        if let Some(p) = inflight.remove(&pre.request) {
-                            // Mid-prefill victim restarts its chunks.
-                            sched.requeue_front(QueuedRequest {
-                                id: pre.request,
-                                prompt_len: p.tokens.len(),
-                                max_new_tokens: p.remaining,
-                            });
-                            staging.insert(pre.request, p);
-                        } else {
-                            let rem_v = remaining
-                                .remove(&pre.request)
-                                .unwrap_or(0);
-                            sched.requeue_front(QueuedRequest {
-                                id: pre.request,
-                                prompt_len: pre.tokens.len(),
-                                max_new_tokens: rem_v,
-                            });
-                            staging.insert(pre.request, Pending {
-                                tokens: pre.tokens,
-                                remaining: rem_v,
-                            });
-                        }
-                        if pre.request == req {
-                            break; // evicted ourselves; resume later
-                        }
-                        match kv.advance(slot, tok) {
-                            Ok(_) => break,
-                            Err(KvError::CapacityExhausted { .. }) => {}
-                            Err(_) => {
-                                kv.release(slot).expect("live slot");
-                                remaining.remove(&req);
-                                sched.finished(req);
-                                completed += 1;
-                                break;
-                            }
-                        }
-                    }
+                    self.preempt_until_fits(slot, req, tok);
                 }
                 Err(_) => {
-                    kv.release(slot).expect("live slot");
-                    remaining.remove(&req);
-                    sched.finished(req);
-                    completed += 1;
+                    self.kv.release(slot).expect("live slot");
+                    self.remaining.remove(&req);
+                    self.sched.finished(req);
+                    self.completed += 1;
                 }
             }
         }
     }
 
-    if let Some(pool) = kv.pool() {
-        pool.check_invariants().expect("pool invariants after replay");
+    /// Decode outgrew the pool: preempt (latest-admitted first) until
+    /// the advance fits or we evicted ourselves.
+    fn preempt_until_fits(&mut self, slot: usize, req: u64, tok: i32) {
+        loop {
+            let Some((_vslot, pre)) =
+                self.kv.preempt(PreemptMode::Recompute)
+            else {
+                break;
+            };
+            let victim = pre.request;
+            if let Some(p) = self.inflight.remove(&victim) {
+                // Mid-prefill victim restarts its chunks.
+                self.sched.requeue_front(QueuedRequest {
+                    id: victim,
+                    prompt_len: p.tokens.len(),
+                    max_new_tokens: p.remaining,
+                });
+                self.staging.insert(victim, p);
+            } else {
+                let rem_v = self.remaining.remove(&victim).unwrap_or(0);
+                let mut tokens = pre.tokens;
+                if victim == req {
+                    // The server keeps the just-sampled token in the
+                    // job and re-prefills prompt + all generated
+                    // tokens on resume; mirror that here so each
+                    // request's output stream is independent of how
+                    // often it gets preempted (and therefore of the
+                    // routing policy).
+                    tokens.push(tok);
+                }
+                self.sched.requeue_front(QueuedRequest {
+                    id: victim,
+                    prompt_len: tokens.len(),
+                    max_new_tokens: rem_v,
+                });
+                self.staging.insert(victim, Pending {
+                    tokens,
+                    remaining: rem_v,
+                });
+            }
+            if victim == req {
+                break; // evicted ourselves; resume later
+            }
+            match self.kv.advance(slot, tok) {
+                Ok(_) => break,
+                Err(KvError::CapacityExhausted { .. }) => {}
+                Err(_) => {
+                    self.kv.release(slot).expect("live slot");
+                    self.remaining.remove(&req);
+                    self.sched.finished(req);
+                    self.completed += 1;
+                    break;
+                }
+            }
+        }
     }
-    let stats = kv.stats().cloned().unwrap_or_default();
-    ReplayResult {
-        label: if paged { "paged" } else { "dense" },
-        slots: slots_n,
-        decode_ticks,
-        completed,
-        dropped,
-        tokens_decoded,
-        mean_occupancy: if decode_ticks == 0 {
-            0.0
-        } else {
-            occupancy_sum as f64 / decode_ticks as f64
-        },
-        peak_occupancy: peak,
-        mean_pool_utilization: if decode_ticks == 0 {
-            0.0
-        } else {
-            util_sum / decode_ticks as f64
-        },
-        sim_time: now,
-        ttft,
-        tbt,
-        max_tick_prefill_tokens: max_tick_prefill,
-        stats,
+
+    /// Finish the run: check pool invariants and fold the counters
+    /// into a [`ReplayResult`].
+    pub fn into_result(self, label: &'static str) -> ReplayResult {
+        if let Some(pool) = self.kv.pool() {
+            pool.check_invariants()
+                .expect("pool invariants after replay");
+        }
+        let stats = self.kv.stats().cloned().unwrap_or_default();
+        ReplayResult {
+            label,
+            slots: self.slots_n,
+            decode_ticks: self.decode_ticks,
+            completed: self.completed,
+            dropped: self.dropped,
+            tokens_decoded: self.tokens_decoded,
+            mean_occupancy: if self.decode_ticks == 0 {
+                0.0
+            } else {
+                self.occupancy_sum as f64 / self.decode_ticks as f64
+            },
+            peak_occupancy: self.peak,
+            mean_pool_utilization: if self.decode_ticks == 0 {
+                0.0
+            } else {
+                self.util_sum / self.decode_ticks as f64
+            },
+            sim_time: self.now,
+            ttft: self.ttft,
+            tbt: self.tbt,
+            max_tick_prefill_tokens: self.max_tick_prefill,
+            stats,
+            outputs: self.outputs,
+        }
     }
+}
+
+/// Replay the mix through a paged pool (`paged`) or the dense slot
+/// baseline under the same byte budget.
+pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
+    let mut w = SimWorker::new(cfg, paged);
+    // Closed-loop arrival: the full mix queues up front (the regime
+    // where admission policy, not arrival spacing, bounds occupancy).
+    for req in generate_workload(cfg) {
+        w.deliver(&req);
+    }
+    let mut guard = 0u64;
+    while w.has_work() && guard < 1_000_000 {
+        guard += 1;
+        w.tick();
+    }
+    w.into_result(if paged { "paged" } else { "dense" })
 }
 
 /// Side-by-side table for `mmserve kv`.
@@ -563,6 +719,10 @@ mod tests {
             "a 40-page budget must create pressure: {:?}",
             r.stats
         );
+        // Regression (review): a preemption victim's re-prefill must
+        // not record a second TTFT sample — exactly one per request.
+        assert_eq!(r.ttft.len(), r.completed,
+                   "one TTFT sample per completed request");
     }
 
     #[test]
@@ -574,6 +734,51 @@ mod tests {
         assert_eq!(a.decode_ticks, b.decode_ticks);
         assert_eq!(a.stats.prefix_hits, b.stats.prefix_hits);
         assert_eq!(a.stats.preemptions, b.stats.preemptions);
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn workload_generation_is_seeded_and_tenant_aware() {
+        let cfg = ReplayConfig::default();
+        let a = generate_workload(&cfg);
+        let b = generate_workload(&cfg);
+        assert_eq!(a.len(), cfg.requests);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.tokens == y.tokens
+            && x.decode == y.decode));
+        // Single tenant: every prompt shares the system prefix.
+        let sys = &a[0].tokens[..cfg.system_prompt_len];
+        assert!(a.iter().all(|r| &r.tokens[..cfg.system_prompt_len]
+            == sys));
+        // Multi-tenant: distinct prefixes per tenant, all present.
+        let cfg4 = ReplayConfig { tenants: 4, ..cfg };
+        let w = generate_workload(&cfg4);
+        let mut seen = std::collections::HashSet::new();
+        for r in &w {
+            assert!(r.tenant < 4);
+            seen.insert(r.tenant);
+        }
+        assert_eq!(seen.len(), 4, "64 draws cover all 4 tenants");
+        let p0 = w.iter().find(|r| r.tenant == 0).unwrap();
+        let p1 = w.iter().find(|r| r.tenant == 1).unwrap();
+        assert_ne!(&p0.tokens[..16], &p1.tokens[..16],
+                   "tenants must not share blocks");
+    }
+
+    #[test]
+    fn outputs_are_a_pure_function_of_the_request() {
+        // prompt_len and decode count fully determine the stream.
+        let cfg = ReplayConfig::default();
+        let r = replay(&cfg, true);
+        let w = generate_workload(&cfg);
+        assert_eq!(r.outputs.len(), cfg.requests);
+        for req in &w {
+            let out = &r.outputs[&req.id];
+            assert_eq!(out.len(), req.decode);
+            let expect: Vec<i32> = (0..req.decode)
+                .map(|k| 900 + ((req.tokens.len() + k) as i32 % 50))
+                .collect();
+            assert_eq!(out, &expect, "request {}", req.id);
+        }
     }
 
     #[test]

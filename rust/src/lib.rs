@@ -30,6 +30,14 @@
 //! slots. `mmserve kv` replays a workload through it and prints the
 //! paged-vs-dense occupancy comparison.
 //!
+//! [`routing`] sits in front of the coordinator: the `Router` runs N
+//! replicated workers per model family (`--replicas`) and a routing
+//! policy (`--policy round-robin|least-loaded|prefix-affinity`)
+//! steers each request to the replica with the warmest cache, probing
+//! per-replica prefix snapshots published from the kvpool every
+//! scheduler tick. `mmserve kv --replicas N` replays the policies
+//! side by side on the simulated clock.
+//!
 //! [`sched`] sits between the batcher/kvpool and the execution
 //! engines: a tick `Scheduler` that turns queue + capacity state into
 //! an explicit `TickPlan` (decode batch ∪ prefill *chunks* under a
@@ -45,6 +53,7 @@ pub mod coordinator;
 pub mod kvpool;
 pub mod models;
 pub mod perfmodel;
+pub mod routing;
 pub mod runtime;
 pub mod sched;
 pub mod substrate;

@@ -19,7 +19,13 @@
 //!                    pool vs. the dense slot baseline (same page
 //!                    budget) and print occupancy, prefix hit rate,
 //!                    eviction/preemption counters, and the Table-3
-//!                    paged-vs-dense achievable-batch projection.
+//!                    paged-vs-dense achievable-batch projection;
+//!                    `--replicas N` additionally replays the workload
+//!                    over N simulated workers under each routing
+//!                    policy (round-robin / least-loaded /
+//!                    prefix-affinity) and prints aggregate hit rate +
+//!                    simulated TTFT/TBT per policy; `--bench-json`
+//!                    writes the metrics for the CI perf gate.
 
 use anyhow::{bail, Result};
 
@@ -27,17 +33,23 @@ use mmserve::coordinator::autoquant;
 use mmserve::coordinator::opts::{AttnImpl, ExecMode, OptConfig, QuantMode};
 use mmserve::coordinator::request::{Request, RequestInput, SamplingParams};
 use mmserve::coordinator::seamless_pipe::ReorderMode;
-use mmserve::coordinator::server::{collect_stats, Router, RouterConfig};
+use mmserve::coordinator::server::{collect_stats, render_replica_reports,
+                                   Router, RouterConfig};
 use mmserve::kvpool::replay::{render_chunk_comparison, render_comparison,
-                              replay, ReplayConfig};
+                              replay, ReplayConfig, ReplayResult};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
 use mmserve::perfmodel::device::DeviceSpec;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
+use mmserve::routing::replay::{compare_policies, render_policy_comparison,
+                               render_worker_counters,
+                               RoutingReplayConfig, RoutingReplayResult};
+use mmserve::routing::RoutingPolicy;
 use mmserve::runtime::engine::Engine;
 use mmserve::substrate::cli::Command;
+use mmserve::substrate::json::Json;
 use mmserve::telemetry::chrome_trace;
 use mmserve::telemetry::tracer::Tracer;
 use mmserve::telemetry::TraceReport;
@@ -143,6 +155,15 @@ fn opt_from_args(a: &mmserve::substrate::cli::Args) -> OptConfig {
     opt
 }
 
+fn parse_policy(a: &mmserve::substrate::cli::Args) -> Result<RoutingPolicy> {
+    let s = a.get_or("policy", "prefix-affinity");
+    RoutingPolicy::parse(&s).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy {s:?} (round-robin|least-loaded|prefix-affinity)"
+        )
+    })
+}
+
 fn parse_models(a: &mmserve::substrate::cli::Args) -> Result<Vec<ModelKind>> {
     let models: Vec<ModelKind> = a
         .get_or("models", "llama")
@@ -216,6 +237,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("chunk-prefill",
              "chunked prefill: max new prompt tokens per tick (0 = whole)",
              Some("0"))
+        .opt("replicas", "worker threads per model family", Some("1"))
+        .opt("policy",
+             "replica routing: round-robin|least-loaded|prefix-affinity",
+             Some("prefix-affinity"))
         .flag("sdpa", "enable the flash-attention stages")
         .flag("eager", "per-op dispatch (launch-overhead baseline)")
         .flag("layerskip", "self-speculative decoding")
@@ -237,8 +262,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              chunked mode; --prefill-budget is ignored"
         );
     }
+    let replicas = a.get_usize("replicas", 1).max(1);
+    let policy = parse_policy(&a)?;
 
-    println!("starting router: models={models:?} opt=[{opt}]");
+    println!(
+        "starting router: models={models:?} opt=[{opt}] \
+         replicas={replicas} policy={policy}"
+    );
     let router = Router::start(
         &mmserve::artifacts_dir(),
         RouterConfig {
@@ -250,6 +280,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig::default(),
             tracer: None,
+            replicas,
+            policy,
         },
     );
 
@@ -271,6 +303,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         {
             println!("  [{}] {} tokens: {:?}", r.id, r.decode_steps, t);
         }
+    }
+    if replicas > 1 {
+        println!("\n== replica routing ({policy}) ==");
+        println!("{}", render_replica_reports(&router.replica_reports()));
     }
     router.shutdown();
     Ok(())
@@ -353,6 +389,10 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
         .opt("chunk-prefill",
              "chunked prefill: max new prompt tokens per tick (0 = whole)",
              Some("0"))
+        .opt("replicas", "worker threads per model family", Some("1"))
+        .opt("policy",
+             "replica routing: round-robin|least-loaded|prefix-affinity",
+             Some("prefix-affinity"))
         .flag("sdpa", "enable the flash-attention stages")
         .flag("eager", "per-op dispatch (launch-overhead baseline)")
         .flag("layerskip", "self-speculative decoding")
@@ -368,6 +408,8 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     let n = a.get_usize("requests", 8);
     let max_new = a.get_usize("max-new", 16);
     let out = a.get_or("out", "trace.json");
+    let replicas = a.get_usize("replicas", 1).max(1);
+    let policy = parse_policy(&a)?;
 
     // Tracing starts disabled so the compile-heavy warmup pass doesn't
     // drown the steady-state timeline (--trace-warmup keeps it).
@@ -376,7 +418,10 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     } else {
         Tracer::off()
     };
-    println!("starting traced router: models={models:?} opt=[{opt}]");
+    println!(
+        "starting traced router: models={models:?} opt=[{opt}] \
+         replicas={replicas} policy={policy}"
+    );
     let router = Router::start(
         &mmserve::artifacts_dir(),
         RouterConfig {
@@ -388,13 +433,25 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig::default(),
             tracer: Some(tracer.clone()),
+            replicas,
+            policy,
         },
     );
 
-    // Warmup: one request per model compiles the stages.
+    // Warmup: one request per replica per model compiles the stages.
+    // Submitted together: the queued gauge is bumped synchronously
+    // before each send and the replicas are still loading engines
+    // (they cannot dequeue yet), so depth-aware routing spreads the
+    // batch one per replica deterministically.
     for (i, &m) in models.iter().enumerate() {
-        let rx = router.submit(demo_request(&router, m, i, max_new))?;
-        rx.recv()??;
+        let warm_rxs: Vec<_> = (0..replicas)
+            .map(|r| {
+                router.submit(demo_request(&router, m, i + r, max_new))
+            })
+            .collect::<Result<_>>()?;
+        for rx in warm_rxs {
+            rx.recv()??;
+        }
     }
     tracer.set_enabled(true);
 
@@ -411,6 +468,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     tracer.set_enabled(false);
+    let replica_rows = router.replica_reports();
     router.shutdown();
 
     let trace = tracer.drain();
@@ -420,6 +478,10 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
 
     let stats = collect_stats(&responses, wall);
     println!("{}\n", stats.report());
+    if replicas > 1 {
+        println!("== replica routing ({policy}) ==");
+        println!("{}\n", render_replica_reports(&replica_rows));
+    }
     println!("== measured (traced run) ==");
     let report = TraceReport::from_trace(&trace);
     println!("{}", report.render());
@@ -430,6 +492,77 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     println!("{}", render(&standard_breakdown_rows(dev,
                                                    &Levers::baseline())));
     Ok(())
+}
+
+/// Replay metrics of one run as a JSON object (the CI perf artifact).
+fn replay_json(r: &ReplayResult) -> Json {
+    Json::from_obj(vec![
+        ("hit_rate".into(), Json::Num(r.stats.hit_rate())),
+        ("prefix_hits".into(), Json::Num(r.stats.prefix_hits as f64)),
+        ("prefix_hit_tokens".into(),
+         Json::Num(r.stats.prefix_hit_tokens as f64)),
+        ("mean_occupancy".into(), Json::Num(r.mean_occupancy)),
+        ("mean_tbt".into(), Json::Num(r.tbt.mean())),
+        ("p99_tbt".into(), Json::Num(r.tbt.percentile(99.0))),
+        ("mean_ttft".into(), Json::Num(r.ttft.mean())),
+        ("p99_ttft".into(), Json::Num(r.ttft.percentile(99.0))),
+        ("completed".into(), Json::Num(r.completed as f64)),
+        ("dropped".into(), Json::Num(r.dropped as f64)),
+        ("sim_time".into(), Json::Num(r.sim_time)),
+    ])
+}
+
+fn routing_json(r: &RoutingReplayResult) -> Json {
+    Json::from_obj(vec![
+        ("agg_hit_rate".into(), Json::Num(r.agg_hit_rate())),
+        ("prefix_hit_tokens".into(),
+         Json::Num(r.fleet.prefix_hit_tokens as f64)),
+        ("mean_tbt".into(), Json::Num(r.tbt.mean())),
+        ("p99_tbt".into(), Json::Num(r.tbt.percentile(99.0))),
+        ("mean_ttft".into(), Json::Num(r.ttft.mean())),
+        ("p99_ttft".into(), Json::Num(r.ttft.percentile(99.0))),
+        ("completed".into(), Json::Num(r.completed as f64)),
+        ("dropped".into(), Json::Num(r.dropped as f64)),
+        ("preemptions".into(), Json::Num(r.fleet.preemptions as f64)),
+        ("sim_time".into(), Json::Num(r.sim_time)),
+        ("routed".into(), Json::Arr(
+            r.routed.iter().map(|&c| Json::Num(c as f64)).collect(),
+        )),
+    ])
+}
+
+/// The `--bench-json` document: config echo, single-worker paged vs
+/// dense metrics, and (with `--replicas > 1`) per-policy fleet metrics.
+fn bench_json(cfg: &ReplayConfig, paged: &ReplayResult,
+              dense: &ReplayResult,
+              routing: &[RoutingReplayResult]) -> Json {
+    let mut root = vec![
+        ("config".into(), Json::from_obj(vec![
+            ("requests".into(), Json::Num(cfg.requests as f64)),
+            ("pages".into(), Json::Num(cfg.total_pages as f64)),
+            ("page_size".into(), Json::Num(cfg.page_size as f64)),
+            ("slots".into(), Json::Num(cfg.batch_slots as f64)),
+            ("system_prompt_len".into(),
+             Json::Num(cfg.system_prompt_len as f64)),
+            ("seed".into(), Json::Num(cfg.seed as f64)),
+        ])),
+        ("kvpool".into(), Json::from_obj(vec![
+            ("paged".into(), replay_json(paged)),
+            ("dense".into(), replay_json(dense)),
+        ])),
+    ];
+    if !routing.is_empty() {
+        let policies: Vec<(String, Json)> = routing
+            .iter()
+            .map(|r| (r.policy.as_str().to_string(), routing_json(r)))
+            .collect();
+        root.push(("routing".into(), Json::from_obj(vec![
+            ("replicas".into(),
+             Json::Num(routing[0].replicas as f64)),
+            ("policies".into(), Json::from_obj(policies)),
+        ])));
+    }
+    Json::from_obj(root)
 }
 
 fn cmd_kv(argv: &[String]) -> Result<()> {
@@ -451,6 +584,15 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     .opt("chunk-prefill",
          "chunked prefill: max new prompt tokens per tick (0 = whole)",
          Some("0"))
+    .opt("replicas",
+         "simulated workers for the routing-policy comparison (1 = off)",
+         Some("1"))
+    .opt("tenants",
+         "distinct shared system prompts for the routing comparison",
+         Some("4"))
+    .opt("bench-json",
+         "write replay metrics as JSON to this path (CI perf gate)",
+         Some(""))
     .opt("seed", "workload seed", Some("7"))
     .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
     .flag("help", "show usage");
@@ -472,6 +614,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         seed: a.get_usize("seed", 7) as u64,
         ..ReplayConfig::default()
     };
+    let replicas = a.get_usize("replicas", 1).max(1);
     println!(
         "== kvpool replay: {} requests, {}% long, {} shared system-prompt \
          tokens ==",
@@ -488,7 +631,10 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     let paged = replay(&cfg, true);
     let dense = replay(&cfg, false);
     println!("{}", render_comparison(&paged, &dense));
-    println!("\n== paged pool counters (telemetry) ==");
+    // Per-pool counters are exactly that — one worker's. The header
+    // says so (fleet-wide numbers come from the routing section's
+    // summed aggregate below).
+    println!("\n== pool counters (single worker, this replay only) ==");
     println!("{}", paged.stats.render());
 
     if chunk > 0 {
@@ -502,6 +648,44 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
              admission (simulated clock) =="
         );
         println!("{}", render_chunk_comparison(&paged, &chunked, chunk));
+    }
+
+    // Replicated workers: the routing-policy comparison. Each policy
+    // replays the identical multi-tenant workload over N simulated
+    // workers (each with its own page budget).
+    let mut routing_results: Vec<RoutingReplayResult> = Vec::new();
+    if replicas > 1 {
+        let rcfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                tenants: a.get_usize("tenants", 4).max(1),
+                ..cfg.clone()
+            },
+            replicas,
+            ..RoutingReplayConfig::default()
+        };
+        routing_results = compare_policies(&rcfg);
+        println!(
+            "\n== replica routing: {} workers, {} tenants, per-policy \
+             (simulated clock) ==",
+            replicas, rcfg.base.tenants
+        );
+        println!("{}", render_policy_comparison(&routing_results));
+        let affinity = routing_results
+            .iter()
+            .find(|r| r.policy == RoutingPolicy::PrefixAffinity)
+            .expect("prefix-affinity result");
+        println!(
+            "\n== per-worker pool counters under prefix-affinity \
+             (fleet rates from summed counters) =="
+        );
+        println!("{}", render_worker_counters(affinity));
+    }
+
+    let json_path = a.get_or("bench-json", "");
+    if !json_path.is_empty() {
+        let json = bench_json(&cfg, &paged, &dense, &routing_results);
+        std::fs::write(&json_path, json.to_string())?;
+        println!("\nwrote replay metrics to {json_path}");
     }
 
     let dev: &DeviceSpec = DeviceSpec::by_name(&a.get_or("device", "A100"))

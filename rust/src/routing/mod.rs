@@ -1,0 +1,416 @@
+//! Prefix-cache-aware replica routing.
+//!
+//! PR 2 gave each worker a paged KV pool with hash-based prefix
+//! sharing; PR 3 centralized per-tick planning. Both left the biggest
+//! cross-worker lever on the table: with one worker per model family,
+//! the `PrefixCache` hit rate is per-worker luck. This subsystem makes
+//! the `Router` replica-aware — N workers per model family
+//! (`RouterConfig::replicas`) — and steers each request to the replica
+//! whose cache is already warm for its prompt:
+//!
+//! * [`RoutingPolicy`] — the selection policies: `RoundRobin` (spray),
+//!   `LeastLoaded` (shortest queue), and `PrefixAffinity` (longest
+//!   cached prefix wins; ties broken by queue depth; when no replica
+//!   holds any of the prompt's blocks it degrades to least-loaded).
+//! * [`rank`] — the pure decision function: per-replica
+//!   [`ReplicaView`]s in, a full preference *order* out. The router
+//!   walks the order so a dead replica (closed channel) degrades to
+//!   the next choice instead of dropping the request.
+//! * [`ReplicaCell`] — the shared per-replica state the router reads
+//!   without touching worker-owned engines: lock-free depth counters
+//!   plus a mutex-protected [`PrefixSnapshot`] (the resident
+//!   block-hash set from `KvPool::resident_hashes`, republished every
+//!   scheduler tick). A stale or never-published snapshot probes as
+//!   zero blocks — routing falls back to least-loaded, it never
+//!   blocks and never errors.
+//! * [`replay`] — the deviceless multi-worker replay that compares
+//!   policies on the simulated clock (`mmserve kv --replicas N`).
+//!
+//! The probe itself is `PrefixCache` chain hashes
+//! ([`crate::kvpool::prefix::block_hashes`]): equal hashes imply an
+//! identical token prefix, so "how many leading full blocks of this
+//! prompt are resident on replica R" is a set lookup per block — no
+//! tokens are shipped to workers and no worker locks are taken on the
+//! submit path.
+
+pub mod replay;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::kvpool::prefix::block_hashes;
+
+/// How the router picks a replica for each request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Rotate through replicas regardless of state.
+    RoundRobin,
+    /// Fewest outstanding requests (queued + in flight) wins.
+    LeastLoaded,
+    /// Longest cached prompt prefix wins; ties broken by queue depth,
+    /// then by replica index. With zero cached blocks everywhere this
+    /// is exactly least-loaded.
+    #[default]
+    PrefixAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        match s {
+            "round-robin" => Some(RoutingPolicy::RoundRobin),
+            "least-loaded" => Some(RoutingPolicy::LeastLoaded),
+            "prefix-affinity" => Some(RoutingPolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    /// All policies, in comparison-table order.
+    pub const ALL: [RoutingPolicy; 3] = [
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::PrefixAffinity,
+    ];
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What the router knows about one replica at decision time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplicaView {
+    /// Leading full blocks of the prompt resident in the replica's
+    /// prefix cache (0 when unknown: dense pool, stale snapshot, or a
+    /// non-probeable input).
+    pub cached_blocks: usize,
+    /// Outstanding requests: channel-queued + worker backlog.
+    pub depth: usize,
+}
+
+/// Full preference order over replicas for one request.
+///
+/// Always a permutation of `0..views.len()`, so a caller that walks it
+/// trying each replica in turn is guaranteed to offer the request to
+/// every live replica before giving up — requests route or fail
+/// loudly, they are never silently dropped. Deterministic: ties break
+/// by replica index.
+pub fn rank(policy: RoutingPolicy, views: &[ReplicaView], cursor: u64)
+            -> Vec<usize> {
+    let n = views.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            if n > 0 {
+                order.rotate_left((cursor % n as u64) as usize);
+            }
+        }
+        RoutingPolicy::LeastLoaded => {
+            order.sort_by_key(|&i| (views[i].depth, i));
+        }
+        RoutingPolicy::PrefixAffinity => {
+            // Reverse(cached_blocks) ranks the warmest cache first;
+            // with all-zero probes the key degenerates to
+            // (depth, index) — the least-loaded fallback.
+            order.sort_by_key(|&i| {
+                (std::cmp::Reverse(views[i].cached_blocks),
+                 views[i].depth, i)
+            });
+        }
+    }
+    order
+}
+
+/// One replica's published cache-warmth view: which full-block hashes
+/// its pool currently holds (live or parked), refreshed by the worker
+/// each scheduler tick. Counters ride along so `mmserve trace` /
+/// `mmserve kv` can label per-worker prefix-hit rows.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixSnapshot {
+    /// Tokens per KV page (0 = never published / dense pool).
+    pub page_size: usize,
+    /// Chain hashes of resident full blocks.
+    pub resident: HashSet<u64>,
+    /// Publish generation (monotonic; 0 = never published).
+    pub version: u64,
+    /// The worker pool's prefix counters at publish time.
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+}
+
+impl PrefixSnapshot {
+    /// Leading full blocks of `tokens` resident in this snapshot.
+    /// Chain hashing means the first miss ends the shared prefix, so
+    /// the walk stops there. An unpublished snapshot probes as 0.
+    pub fn probe(&self, tokens: &[i32]) -> usize {
+        if self.page_size == 0 || self.resident.is_empty() {
+            return 0;
+        }
+        let mut n = 0;
+        for h in block_hashes(tokens, self.page_size) {
+            if !self.resident.contains(&h) {
+                break;
+            }
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Shared per-replica state cell: written by the router (dispatch
+/// counters) and the worker (drain counter, backlog, snapshot), read
+/// on every routing decision. Plain atomics for the depth so the
+/// submit path takes no lock unless it needs a prefix probe.
+#[derive(Debug, Default)]
+pub struct ReplicaCell {
+    /// Submitted but not yet pulled off the channel by the worker.
+    queued: AtomicUsize,
+    /// Worker-reported backlog (its queue + in-flight requests).
+    backlog: AtomicUsize,
+    /// Requests ever routed here (report counter).
+    routed: AtomicU64,
+    snapshot: Mutex<PrefixSnapshot>,
+}
+
+impl ReplicaCell {
+    pub fn new() -> Self {
+        ReplicaCell::default()
+    }
+
+    /// Router-side: a request is about to be handed to this replica's
+    /// channel. Called *before* the send so the worker's matching
+    /// [`note_dequeued`](Self::note_dequeued) can never land first and
+    /// leave the gauge permanently inflated; a failed send must be
+    /// undone with [`note_route_failed`](Self::note_route_failed).
+    pub fn note_routed(&self) {
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Router-side: the send to this replica failed (worker gone);
+    /// roll back the counters [`note_routed`](Self::note_routed) took.
+    pub fn note_route_failed(&self) {
+        let _ = self.routed.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |r| r.checked_sub(1),
+        );
+        let _ = self.queued.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |q| q.checked_sub(1),
+        );
+    }
+
+    /// Worker-side: a request was pulled off the channel.
+    pub fn note_dequeued(&self) {
+        // Saturating: a racing shutdown must never wrap the gauge.
+        let _ = self.queued.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |q| q.checked_sub(1),
+        );
+    }
+
+    /// Worker-side: current internal backlog (queue + in flight).
+    pub fn set_backlog(&self, n: usize) {
+        self.backlog.store(n, Ordering::Relaxed);
+    }
+
+    /// Outstanding requests from the router's point of view.
+    pub fn depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+            + self.backlog.load(Ordering::Relaxed)
+    }
+
+    pub fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// Worker-side: republish the pool's resident-hash set + counters.
+    pub fn publish(&self, page_size: usize, resident: HashSet<u64>,
+                   lookups: u64, hits: u64, hit_tokens: u64) {
+        let mut s = self.lock();
+        s.page_size = page_size;
+        s.resident = resident;
+        s.version += 1;
+        s.prefix_lookups = lookups;
+        s.prefix_hits = hits;
+        s.prefix_hit_tokens = hit_tokens;
+    }
+
+    /// Router-side probe: cached leading blocks for `tokens`.
+    pub fn probe(&self, tokens: &[i32]) -> usize {
+        self.lock().probe(tokens)
+    }
+
+    /// Snapshot copy for reports (version, lookups, hits, hit tokens).
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
+        let s = self.lock();
+        (s.version, s.prefix_lookups, s.prefix_hits, s.prefix_hit_tokens)
+    }
+
+    /// A poisoned mutex (worker panicked mid-publish) yields the last
+    /// snapshot instead of propagating the panic: routing degrades to
+    /// stale data, it never takes the router down.
+    fn lock(&self) -> MutexGuard<'_, PrefixSnapshot> {
+        self.snapshot
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(cached_blocks: usize, depth: usize) -> ReplicaView {
+        ReplicaView { cached_blocks, depth }
+    }
+
+    #[test]
+    fn round_robin_rotates_with_cursor() {
+        let views = [v(0, 0), v(0, 0), v(0, 0)];
+        assert_eq!(rank(RoutingPolicy::RoundRobin, &views, 0),
+                   vec![0, 1, 2]);
+        assert_eq!(rank(RoutingPolicy::RoundRobin, &views, 1),
+                   vec![1, 2, 0]);
+        assert_eq!(rank(RoutingPolicy::RoundRobin, &views, 5),
+                   vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_orders_by_depth_then_index() {
+        let views = [v(9, 3), v(0, 1), v(0, 3)];
+        // cached_blocks is ignored; equal depths tie-break by index.
+        assert_eq!(rank(RoutingPolicy::LeastLoaded, &views, 7),
+                   vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn prefix_affinity_longest_prefix_wins() {
+        let views = [v(1, 0), v(3, 9), v(2, 0)];
+        // The warmest cache wins even with the deepest queue.
+        assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
+                   vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn prefix_affinity_ties_break_by_queue_depth_then_index() {
+        let views = [v(2, 5), v(2, 1), v(2, 5), v(0, 0)];
+        // Equal warmth → shallower queue first; equal depth → index.
+        assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
+                   vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn prefix_affinity_zero_blocks_falls_back_to_least_loaded() {
+        let views = [v(0, 4), v(0, 2), v(0, 2)];
+        let affinity = rank(RoutingPolicy::PrefixAffinity, &views, 3);
+        let least = rank(RoutingPolicy::LeastLoaded, &views, 3);
+        assert_eq!(affinity, least, "cold caches degrade to least-loaded");
+        assert_eq!(affinity, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn rank_is_always_a_full_permutation() {
+        // The failover walk relies on every replica appearing once.
+        for policy in RoutingPolicy::ALL {
+            for cursor in 0..5u64 {
+                let views = [v(3, 1), v(0, 0), v(3, 1), v(1, 7)];
+                let mut order = rank(policy, &views, cursor);
+                order.sort_unstable();
+                assert_eq!(order, vec![0, 1, 2, 3], "{policy} c{cursor}");
+            }
+        }
+        assert!(rank(RoutingPolicy::RoundRobin, &[], 0).is_empty());
+    }
+
+    #[test]
+    fn snapshot_probe_walks_chain_until_first_miss() {
+        let tokens: Vec<i32> = (0..20).collect();
+        let hashes = block_hashes(&tokens, 4); // 5 full blocks
+        let mut snap = PrefixSnapshot {
+            page_size: 4,
+            resident: hashes[..3].iter().copied().collect(),
+            version: 1,
+            ..PrefixSnapshot::default()
+        };
+        assert_eq!(snap.probe(&tokens), 3);
+        // A hole in the chain ends the match even if later blocks are
+        // resident (chain hashes make later matches impossible anyway).
+        snap.resident = [hashes[0], hashes[2]].into_iter().collect();
+        assert_eq!(snap.probe(&tokens), 1);
+        // Prompts shorter than a block never match.
+        assert_eq!(snap.probe(&tokens[..3]), 0);
+    }
+
+    #[test]
+    fn stale_or_unpublished_snapshot_probes_zero_and_routes() {
+        // Never-published cell: probe is 0, rank still yields an
+        // order covering every replica (graceful degradation).
+        let cell = ReplicaCell::new();
+        assert_eq!(cell.probe(&[1, 2, 3, 4, 5, 6, 7, 8]), 0);
+        let views = [v(cell.probe(&[1; 16]), cell.depth()), v(0, 3)];
+        let order = rank(RoutingPolicy::PrefixAffinity, &views, 0);
+        assert_eq!(order, vec![0, 1]);
+    }
+
+    #[test]
+    fn cell_depth_tracks_routed_dequeued_backlog() {
+        let cell = ReplicaCell::new();
+        assert_eq!(cell.depth(), 0);
+        cell.note_routed();
+        cell.note_routed();
+        assert_eq!(cell.depth(), 2);
+        cell.note_dequeued();
+        cell.set_backlog(3);
+        assert_eq!(cell.depth(), 4, "1 queued + 3 backlog");
+        assert_eq!(cell.routed(), 2);
+        // Underflow (shutdown race) saturates at zero.
+        cell.note_dequeued();
+        cell.note_dequeued();
+        cell.set_backlog(0);
+        assert_eq!(cell.depth(), 0);
+        // A failed send rolls back both counters.
+        cell.note_routed();
+        cell.note_route_failed();
+        assert_eq!(cell.depth(), 0);
+        assert_eq!(cell.routed(), 2, "failed route not counted");
+    }
+
+    #[test]
+    fn cell_publish_updates_probe_and_counters() {
+        let cell = ReplicaCell::new();
+        let tokens: Vec<i32> = (100..116).collect();
+        let hashes: HashSet<u64> =
+            block_hashes(&tokens, 4).into_iter().collect();
+        cell.publish(4, hashes, 10, 7, 28);
+        assert_eq!(cell.probe(&tokens), 4);
+        assert_eq!(cell.counters(), (1, 10, 7, 28));
+        cell.publish(4, HashSet::new(), 12, 8, 32);
+        assert_eq!(cell.probe(&tokens), 0, "republish replaces the set");
+        assert_eq!(cell.counters(), (2, 12, 8, 32));
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RoutingPolicy::ALL {
+            assert_eq!(RoutingPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::parse("warmest"), None);
+        assert_eq!(RoutingPolicy::default(),
+                   RoutingPolicy::PrefixAffinity);
+    }
+}

@@ -28,8 +28,9 @@ pub const GAP_CATEGORIES: [&str; 8] = [
 
 fn gap_label(cat: Cat) -> Option<&'static str> {
     match cat {
-        // Tick planning is scheduler work; it shares the bucket.
-        Cat::Schedule | Cat::Plan => Some("Scheduling"),
+        // Tick planning and replica routing are scheduler work; they
+        // share the bucket.
+        Cat::Schedule | Cat::Plan | Cat::Route => Some("Scheduling"),
         Cat::KvWait => Some("KvCapacity"),
         Cat::PrefillStall => Some("PrefillStall"),
         Cat::Sample => Some("Sampling"),

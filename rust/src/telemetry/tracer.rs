@@ -31,6 +31,10 @@ pub enum Cat {
     Download,
     /// Batcher admission / slot bookkeeping.
     Schedule,
+    /// Replica selection on the router thread: ranking a model's
+    /// replicas by cached-prefix warmth / queue depth before the
+    /// request is handed to a worker channel.
+    Route,
     /// Scheduler tick planning (`Scheduler::plan` → `TickPlan`).
     Plan,
     /// Decode-ready slots stalled behind admission prefill work inside
@@ -63,6 +67,7 @@ impl Cat {
             Cat::Upload => "Upload",
             Cat::Download => "Download",
             Cat::Schedule => "Schedule",
+            Cat::Route => "Route",
             Cat::Plan => "Plan",
             Cat::PrefillStall => "PrefillStall",
             Cat::KvWait => "KvWait",

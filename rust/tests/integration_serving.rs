@@ -13,6 +13,7 @@ use mmserve::coordinator::server::{Router, RouterConfig};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::tokenizer::{IMG_BASE, IMG_TOKENS};
 use mmserve::models::{ModelKind, TaskKind};
+use mmserve::routing::RoutingPolicy;
 use mmserve::runtime::engine::Engine;
 
 fn artifacts() -> Option<std::path::PathBuf> {
@@ -37,6 +38,7 @@ fn batched_router_serves_text_requests() {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
+        ..RouterConfig::default()
     });
     let mut rxs = vec![];
     for i in 0..7 {
@@ -53,6 +55,45 @@ fn batched_router_serves_text_requests() {
         assert!(matches!(r.output, ResponseOutput::Text(_)));
     }
     router.shutdown();
+}
+
+/// Replicated workers must move *where* a request runs, never change
+/// *what* it decodes: greedy outputs across 2 replicas match the
+/// single-worker stream under every routing policy.
+#[test]
+fn replicated_router_preserves_greedy_outputs() {
+    let Some(dir) = artifacts() else { return };
+    let prompts =
+        ["hello world", "hello world", "sort an array", "hello world"];
+    let run = |replicas: usize, policy: RoutingPolicy| -> Vec<Vec<i32>> {
+        let router = Router::start(&dir, RouterConfig {
+            models: vec![ModelKind::Llama],
+            batch: 4,
+            replicas,
+            policy,
+            ..RouterConfig::default()
+        });
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let mut req = Request::text(router.fresh_id(),
+                                            TaskKind::TextToText, p, 6);
+                req.sampling = SamplingParams::greedy();
+                router.submit(req).unwrap()
+            })
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().expect("response").tokens)
+            .collect();
+        router.shutdown();
+        out
+    };
+    let single = run(1, RoutingPolicy::PrefixAffinity);
+    for policy in RoutingPolicy::ALL {
+        assert_eq!(run(2, policy), single,
+                   "{policy} changed greedy outputs");
+    }
 }
 
 #[test]
@@ -80,6 +121,7 @@ fn batched_results_match_single_stream() {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
+        ..RouterConfig::default()
     });
     let rxs: Vec<_> = prompts
         .iter()
@@ -127,6 +169,7 @@ fn chunked_prefill_router_matches_single_stream() {
         chunk_prefill: 8, // forces multi-chunk admission for all three
         kv: KvPoolConfig::default(),
         tracer: None,
+        ..RouterConfig::default()
     });
     let rxs: Vec<_> = prompts
         .iter()
@@ -243,6 +286,7 @@ fn hstu_router_returns_actions() {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: None,
+        ..RouterConfig::default()
     });
     let history: Vec<i32> = (0..150).map(|i| (i * 13) % 6000).collect();
     let req = Request {

@@ -96,6 +96,7 @@ fn traced_router_run_exports_chrome_json() {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
+        ..RouterConfig::default()
     });
     let mut rxs = vec![];
     for i in 0..5 {
@@ -161,6 +162,7 @@ fn disabled_tracer_records_zero_spans_end_to_end() {
         chunk_prefill: 0,
         kv: KvPoolConfig::default(),
         tracer: Some(tracer.clone()),
+        ..RouterConfig::default()
     });
     let rx = router
         .submit(Request::text(router.fresh_id(), TaskKind::TextToText,
