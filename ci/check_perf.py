@@ -2,15 +2,24 @@
 """CI perf gate for the deterministic replay benchmarks.
 
 Reads BENCH_kvpool.json and BENCH_routing.json (written by
-`mmserve kv --bench-json`) and checks them two ways:
+`mmserve kv --bench-json`) and checks them three ways:
 
 1. Hard invariants that must hold on any commit:
-   - no replayed request is dropped,
+   - no replayed request is dropped (monolithic, sharded, or routed),
    - the paged pool actually shares prefixes (hit rate > 0),
    - prefix-affinity routing achieves a strictly higher aggregate
-     prefix hit rate than round-robin.
+     prefix hit rate than round-robin,
+   - the sharded replay completes exactly what the monolithic one does
+     (page placement must never change workload outcomes).
 
-2. Baseline regression gates from ci/perf-baseline.json: each gate
+2. Required schema: every metric path listed under "schema" in
+   ci/perf-baseline.json must exist in the fresh bench output. A
+   metric the CLI stops emitting — or a bench section that silently
+   disappears (e.g. the sharded replay) — is a HARD FAILURE, not a
+   skipped gate. Gates referencing files or paths the run did not
+   produce fail the same way; nothing is silently ignored.
+
+3. Baseline regression gates from ci/perf-baseline.json: each gate
    names a metric path, a direction, and the committed baseline value;
    the job fails when the current value regresses past the tolerance
    (default 10%). The replays are seeded and run on a simulated clock,
@@ -50,6 +59,16 @@ def main():
         failures.append("kvpool replay dropped requests")
     if (dig(kv, "kvpool.paged.hit_rate") or 0) <= 0:
         failures.append("kvpool replay has a zero prefix hit rate")
+    if dig(kv, "kvpool.sharded") is not None:
+        if dig(kv, "kvpool.sharded.dropped") != 0:
+            failures.append("sharded kvpool replay dropped requests")
+        if dig(kv, "kvpool.sharded.completed") != dig(
+            kv, "kvpool.paged.completed"
+        ):
+            failures.append(
+                "sharded replay completed a different request count "
+                "than the monolithic replay on the same workload"
+            )
     rr = dig(rt, "routing.policies.round-robin.agg_hit_rate")
     pa = dig(rt, "routing.policies.prefix-affinity.agg_hit_rate")
     if rr is None or pa is None:
@@ -63,13 +82,35 @@ def main():
         if dig(rt, f"routing.policies.{policy}.dropped") != 0:
             failures.append(f"routing replay ({policy}) dropped requests")
 
-    # ---- baseline regression gates ---------------------------------
     base = json.load(open(BASELINE))
+
+    # ---- required schema: missing keys are hard failures -----------
+    for fname, paths in base.get("schema", {}).items():
+        doc = docs.get(fname)
+        if doc is None:
+            failures.append(
+                f"schema names {fname}, which this run did not produce"
+            )
+            continue
+        for path in paths:
+            if dig(doc, path) is None:
+                failures.append(
+                    f"{fname}:{path} missing from bench output "
+                    f"(required by {BASELINE} schema)"
+                )
+
+    # ---- baseline regression gates ---------------------------------
     tol = base.get("tolerance", 0.10)
     for gate in base.get("gates", []):
-        doc = docs.get(gate["file"])
-        cur = dig(doc, gate["path"]) if doc is not None else None
         label = f"{gate['file']}:{gate['path']}"
+        doc = docs.get(gate["file"])
+        if doc is None:
+            failures.append(
+                f"{label}: gate references unknown bench file "
+                f"{gate['file']!r}"
+            )
+            continue
+        cur = dig(doc, gate["path"])
         if cur is None:
             failures.append(f"{label} missing from bench output")
             continue

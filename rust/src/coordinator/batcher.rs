@@ -251,6 +251,7 @@ mod tests {
                 page_size: 4,
                 available_pages: 12,
                 reserved_growth: 2,
+                shards: 1,
             }),
         };
         let mut b = Batcher::new(0);
@@ -270,6 +271,7 @@ mod tests {
                 page_size: 4,
                 available_pages: 4,
                 reserved_growth: 4,
+                shards: 1,
             }),
         };
         b.push(rq(3, 9)); // 9+1 → 3 pages, 0 grantable
@@ -382,6 +384,7 @@ mod tests {
                         page_size: 8,
                         available_pages: 12,
                         reserved_growth: 1,
+                        shards: 1,
                     }),
                 };
                 let adm = b.tick(&cap);

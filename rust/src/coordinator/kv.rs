@@ -262,6 +262,20 @@ impl PagedKvSlots {
             .map_or(0, |p| p.probe_prefix(tokens))
     }
 
+    /// Shard-set routing probe: `(resident leading blocks, distinct
+    /// device shards holding them)` — `(0, 0)` in dense mode.
+    pub fn probe_prefix_shards(&self, tokens: &[i32]) -> (usize, usize) {
+        self.pool
+            .as_ref()
+            .map_or((0, 0), |p| p.probe_prefix_shards(tokens))
+    }
+
+    /// Per-shard capacity counters (empty in dense mode) — the
+    /// occupancy view the worker republishes and `mmserve kv` prints.
+    pub fn shard_views(&self) -> Vec<crate::kvpool::ShardView> {
+        self.pool.as_ref().map_or_else(Vec::new, |p| p.shard_views())
+    }
+
     /// A cheap fingerprint of pool activity since start: any page
     /// alloc/free/eviction/admission/preemption moves it. Used to skip
     /// republishing an unchanged routing snapshot on decode-only
@@ -281,15 +295,20 @@ impl PagedKvSlots {
     }
 
     /// Publish this worker's cache warmth into its routing cell: the
-    /// resident hash set plus the prefix counters, versioned so the
+    /// resident hash set *per device shard*, the per-shard live-page
+    /// occupancy gauge, and the prefix counters — versioned so the
     /// router can spot a never-published (stale) snapshot.
     pub fn publish_routing_snapshot(
         &self, cell: &crate::routing::ReplicaCell,
     ) {
         if let Some(p) = &self.pool {
-            cell.publish(
+            cell.publish_shards(
                 p.page_size(),
-                p.resident_hashes(),
+                p.resident_hashes_by_shard(),
+                p.shard_views()
+                    .iter()
+                    .map(|v| v.live_pages as u64)
+                    .collect(),
                 p.stats.prefix_lookups,
                 p.stats.prefix_hits,
                 p.stats.prefix_hit_tokens,
@@ -387,8 +406,22 @@ impl PagedKvSlots {
     /// the scheduler can requeue it for recompute / swap-in.
     pub fn preempt(&mut self, mode: PreemptMode)
                    -> Option<(usize, Preempted)> {
+        self.preempt_targeted(mode, None)
+    }
+
+    /// Preempt with an optional shard preference: on a sharded pool
+    /// the victim is the latest admission holding pages on `prefer`
+    /// (so the freed capacity lands on the grower's arena); on a
+    /// monolithic pool — or with no preference — this is exactly
+    /// [`PagedKvSlots::preempt`].
+    pub fn preempt_targeted(&mut self, mode: PreemptMode,
+                            prefer: Option<crate::kvpool::ShardId>)
+                            -> Option<(usize, Preempted)> {
         let p = self.pool.as_mut()?;
-        let pre = p.preempt(mode)?;
+        let pre = match prefer {
+            Some(s) if p.shards() > 1 => p.preempt_on_shard(mode, s)?,
+            _ => p.preempt(mode)?,
+        };
         let slot = self
             .slots
             .slot_of(pre.request)
@@ -397,6 +430,13 @@ impl PagedKvSlots {
             .release(slot)
             .expect("victim slot is live");
         Some((slot, pre))
+    }
+
+    /// The shard a live request's decode growth prefers (`None` in
+    /// dense mode or for an unknown request).
+    pub fn growth_shard(&self, request: u64)
+                        -> Option<crate::kvpool::ShardId> {
+        self.pool.as_ref().and_then(|p| p.growth_shard(request))
     }
 }
 
@@ -578,7 +618,7 @@ mod tests {
     // ---- PagedKvSlots ------------------------------------------------
 
     fn small_cfg() -> KvPoolConfig {
-        KvPoolConfig { page_size: 4, total_pages: 8 }
+        KvPoolConfig { page_size: 4, total_pages: 8, shards: 1 }
     }
 
     #[test]
@@ -614,7 +654,7 @@ mod tests {
     #[test]
     fn paged_preempt_frees_slot_and_pages() {
         // 4 pages of 4 tokens: two 2-page sequences fill the pool.
-        let cfg = KvPoolConfig { page_size: 4, total_pages: 4 };
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 4, shards: 1 };
         let mut kv = PagedKvSlots::paged(2, 64, cfg);
         let (s1, _) = kv.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
         let (s2, _) = kv.alloc(2, &[9, 8, 7, 6, 5]).unwrap();
@@ -639,7 +679,7 @@ mod tests {
     /// chunk cannot be covered.
     #[test]
     fn extend_chunk_mirrors_both_views_and_rolls_back() {
-        let cfg = KvPoolConfig { page_size: 4, total_pages: 3 };
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 3, shards: 1 };
         let mut kv = PagedKvSlots::paged(1, 64, cfg);
         let (slot, _) = kv.alloc(1, &[1, 2, 3]).unwrap();
         assert_eq!(kv.extend_chunk(slot, &[4, 5, 6, 7, 8]).unwrap(), 8);
@@ -687,6 +727,59 @@ mod tests {
         assert_eq!(cell2.counters().0, 0, "dense never publishes");
     }
 
+    /// Tentpole: the slot view over a *sharded* pool — pages span
+    /// arenas, the published snapshot carries per-shard buckets and
+    /// the occupancy gauge, and targeted preemption frees the grower's
+    /// arena. Chunked appends roll back across shards too.
+    #[test]
+    fn sharded_paged_slots_publish_and_preempt_per_shard() {
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 8, shards: 2 };
+        let mut kv = PagedKvSlots::paged(2, 64, cfg);
+        assert_eq!(kv.pool().unwrap().shards(), 2);
+        // Request 1 fills shard 0, request 2 fills shard 1 (4-page
+        // arenas each): the pool is completely full.
+        let (s1, _) = kv.alloc(1, &[1; 13]).unwrap();
+        let (s2, _) = kv.alloc(2, &[2; 13]).unwrap();
+        let views = kv.shard_views();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].live_pages, 4);
+        assert_eq!(views[1].live_pages, 4);
+        assert_eq!(kv.growth_shard(1), Some(0));
+        assert_eq!(kv.growth_shard(2), Some(1));
+        // The published snapshot buckets hashes per shard and carries
+        // the occupancy gauge.
+        let cell = crate::routing::ReplicaCell::new();
+        kv.publish_routing_snapshot(&cell);
+        assert_eq!(cell.shard_occupancy(), vec![4, 4]);
+        let (blocks, spread) = kv.probe_prefix_shards(&[1; 12]);
+        assert_eq!((blocks, spread), (3, 1), "request 1's blocks, shard 0");
+        // Request 1 outgrew the (full) pool: a preempt targeted at its
+        // growth shard must evict *it* — the only shard-0 holder —
+        // where the global latest-first rule would pick request 2.
+        for t in 0..3 {
+            kv.advance(s1, t).unwrap(); // fills the partial page
+        }
+        let err = kv.advance(s1, 99).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        let prefer = kv.growth_shard(1);
+        assert_eq!(prefer, Some(0));
+        let (slot, pre) =
+            kv.preempt_targeted(PreemptMode::Recompute, prefer).unwrap();
+        assert_eq!(slot, s1);
+        assert_eq!(pre.request, 1);
+        assert_eq!(kv.live_count(), 1);
+        assert_eq!(kv.slot_of(2), Some(s2));
+        kv.pool().unwrap().check_invariants().unwrap();
+        // Chunked append on the survivor: shard 1 is dry, so growth
+        // spills into the shard-0 capacity the eviction freed (cached
+        // victim blocks are LRU-evicted page by page).
+        let pos = kv.extend_chunk(s2, &[3; 14]).unwrap();
+        assert_eq!(pos, 27);
+        assert!(kv.pool().unwrap().stats.shard_spills > 0,
+                "growth crossed an arena boundary");
+        kv.pool().unwrap().check_invariants().unwrap();
+    }
+
     #[test]
     fn dense_mode_matches_seed_semantics() {
         let mut kv = PagedKvSlots::dense(2, 8);
@@ -708,7 +801,7 @@ mod tests {
     #[test]
     fn paged_default_budget_is_dense_equivalent() {
         let cfg = KvPoolConfig { page_size: DEFAULT_PAGE_SIZE,
-                                 total_pages: 0 };
+                                 total_pages: 0, shards: 1 };
         let kv = PagedKvSlots::paged(4, 512, cfg);
         let pool = kv.pool().unwrap();
         assert_eq!(pool.total_pages(), 4 * 512 / DEFAULT_PAGE_SIZE);

@@ -134,6 +134,9 @@ pub struct ReplicaReport {
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
     pub prefix_hit_tokens: u64,
+    /// Live pages per device shard at the last publish (empty until a
+    /// sharded worker publishes) — the per-shard occupancy gauge.
+    pub shard_live_pages: Vec<u64>,
 }
 
 impl ReplicaReport {
@@ -150,10 +153,19 @@ impl ReplicaReport {
 pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
     let mut t = Table::new(&[
         "worker", "routed", "prefix lookups", "prefix hits",
-        "hit rate", "hit tokens",
+        "hit rate", "hit tokens", "shard pages",
     ]);
     let (mut lookups, mut hits, mut tokens, mut routed) = (0u64, 0u64, 0u64, 0u64);
     for r in reports {
+        let shard_pages = if r.shard_live_pages.is_empty() {
+            "-".to_string()
+        } else {
+            r.shard_live_pages
+                .iter()
+                .map(|p| p.to_string())
+                .collect::<Vec<_>>()
+                .join("/")
+        };
         t.row(&[
             format!("{:?}[{}]", r.model, r.replica),
             r.routed.to_string(),
@@ -161,6 +173,7 @@ pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
             r.prefix_hits.to_string(),
             format!("{:.1}%", r.hit_rate() * 100.0),
             r.prefix_hit_tokens.to_string(),
+            shard_pages,
         ]);
         lookups += r.prefix_lookups;
         hits += r.prefix_hits;
@@ -179,6 +192,7 @@ pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
         hits.to_string(),
         format!("{:.1}%", fleet_rate * 100.0),
         tokens.to_string(),
+        "-".into(),
     ]);
     t.render()
 }
@@ -293,6 +307,7 @@ impl Router {
                     prefix_lookups: lookups,
                     prefix_hits: hits,
                     prefix_hit_tokens: tokens,
+                    shard_live_pages: h.cell.shard_occupancy(),
                 });
             }
         }
@@ -346,11 +361,17 @@ fn route_order(policy: RoutingPolicy, set: &ModelReplicas,
     let views: Vec<ReplicaView> = set
         .replicas
         .iter()
-        .map(|h| ReplicaView {
-            cached_blocks: probe_tokens
+        .map(|h| {
+            // Shard-set probe: warmth is the union over the replica's
+            // device arenas; the spread feeds the depth tie-break.
+            let (cached_blocks, shard_spread) = probe_tokens
                 .as_deref()
-                .map_or(0, |toks| h.cell.probe(toks)),
-            depth: h.cell.depth(),
+                .map_or((0, 0), |toks| h.cell.probe_shards(toks));
+            ReplicaView {
+                cached_blocks,
+                depth: h.cell.depth(),
+                shard_spread,
+            }
         })
         .collect();
     let cursor = set.rr.fetch_add(1, Ordering::Relaxed);
@@ -559,8 +580,13 @@ impl StepExecutor for BatchedExecutor<'_, '_> {
 fn preempt_for_growth(slots: &mut PagedKvSlots, st: &mut WorkerState,
                       slot: usize, fed: i32) -> Result<Growth> {
     let this_req = slots.request_at(slot)?;
+    // On a sharded pool, target the grower's arena first so the freed
+    // pages land where the stalled advance wants them (monolithic
+    // pools fall through to the global latest-first rule).
+    let prefer = slots.growth_shard(this_req);
     loop {
-        let Some((vslot, pre)) = slots.preempt(PreemptMode::Recompute)
+        let Some((vslot, pre)) =
+            slots.preempt_targeted(PreemptMode::Recompute, prefer)
         else {
             return Ok(Growth::Capped);
         };
@@ -1485,6 +1511,7 @@ mod tests {
                 prefix_lookups: 100,
                 prefix_hits: 90,
                 prefix_hit_tokens: 1440,
+                shard_live_pages: vec![5, 3],
             },
             ReplicaReport {
                 model: ModelKind::Llama,
@@ -1493,6 +1520,7 @@ mod tests {
                 prefix_lookups: 10,
                 prefix_hits: 0,
                 prefix_hit_tokens: 0,
+                shard_live_pages: Vec::new(),
             },
         ];
         assert!((reports[0].hit_rate() - 0.9).abs() < 1e-12);
@@ -1502,6 +1530,10 @@ mod tests {
         // 90/110 = 81.8%, not the 45.0% a mean-of-rates would print.
         assert!(s.contains("81.8%"), "{s}");
         assert!(s.contains("fleet (summed)"));
+        // Per-shard occupancy gauge: published workers show the split,
+        // unpublished ones a dash.
+        assert!(s.contains("5/3"), "{s}");
+        assert!(s.contains("shard pages"), "{s}");
     }
 }
 

@@ -11,6 +11,12 @@
 //!
 //! * [`block`] — [`BlockPool`]: a fixed budget of ref-counted pages
 //!   with free-list reuse; every page is Free, Live, or Cached.
+//! * [`shard`] — [`ShardedBlockPool`]: the budget split across `D`
+//!   simulated device arenas (global page id = `(device, page)` via
+//!   [`shard::ShardedBlockPool::locate`]); block tables span shards,
+//!   growth prefers a sequence's home arena and spills when it runs
+//!   dry — the capacity half of tensor-parallel serving. One shard is
+//!   the monolithic pool, bit for bit.
 //! * [`table`] — [`BlockTable`]: one request's token-position → page
 //!   mapping, plus the token history that makes blocks hashable.
 //! * [`prefix`] — [`PrefixCache`]: chain-hash → page map with an LRU
@@ -44,12 +50,14 @@ pub mod block;
 pub mod pool;
 pub mod prefix;
 pub mod replay;
+pub mod shard;
 pub mod table;
 
 pub use block::{BlockPool, PageId, PageState};
 pub use pool::{AllocOutcome, CapacityView, KvPool, KvPoolConfig,
                PageBudget, PoolStats, Preempted, PreemptMode};
 pub use prefix::PrefixCache;
+pub use shard::{ShardId, ShardView, ShardedBlockPool};
 pub use table::BlockTable;
 
 /// Default tokens per KV page (vLLM's default block size).

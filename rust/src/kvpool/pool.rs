@@ -30,8 +30,9 @@ use std::collections::HashMap;
 
 use crate::substrate::table::Table;
 
-use super::block::{BlockPool, PageId, PageState};
+use super::block::{PageId, PageState};
 use super::prefix::{block_hashes, PrefixCache};
+use super::shard::{ShardId, ShardView, ShardedBlockPool};
 use super::table::BlockTable;
 use super::{pages_for, KvError, DEFAULT_PAGE_SIZE};
 
@@ -42,11 +43,19 @@ pub struct KvPoolConfig {
     pub page_size: usize,
     /// Total page budget. 0 = dense-equivalent: `batch` full sequences.
     pub total_pages: usize,
+    /// Simulated device arenas the budget is split across (`--shards`;
+    /// 1 = the monolithic single-arena pool, bit-identical to the
+    /// pre-shard behavior).
+    pub shards: usize,
 }
 
 impl Default for KvPoolConfig {
     fn default() -> Self {
-        KvPoolConfig { page_size: DEFAULT_PAGE_SIZE, total_pages: 0 }
+        KvPoolConfig {
+            page_size: DEFAULT_PAGE_SIZE,
+            total_pages: 0,
+            shards: 1,
+        }
     }
 }
 
@@ -81,6 +90,16 @@ pub struct PoolStats {
     /// the counter behind the `KvCapacity` idle-attribution bucket.
     pub capacity_wait_ticks: u64,
     pub seqs_admitted: u64,
+    /// Fresh-page claims per device shard (index = shard id) — the
+    /// per-shard occupancy counters the telemetry/report path and the
+    /// routing snapshot surface. Sized to the pool's shard count at
+    /// construction (length 1 for a monolithic pool; empty only for a
+    /// default-constructed stats block, e.g. the dense baseline).
+    pub shard_allocated: Vec<u64>,
+    /// Fresh pages that could not be placed on the preferred (home)
+    /// shard and spilled to another arena — the cross-device traffic a
+    /// real TP allocator would pay a gather for.
+    pub shard_spills: u64,
 }
 
 impl PoolStats {
@@ -113,6 +132,13 @@ impl PoolStats {
         self.swapped_out_tokens += other.swapped_out_tokens;
         self.capacity_wait_ticks += other.capacity_wait_ticks;
         self.seqs_admitted += other.seqs_admitted;
+        if self.shard_allocated.len() < other.shard_allocated.len() {
+            self.shard_allocated.resize(other.shard_allocated.len(), 0);
+        }
+        for (i, v) in other.shard_allocated.iter().enumerate() {
+            self.shard_allocated[i] += v;
+        }
+        self.shard_spills += other.shard_spills;
     }
 
     /// Aggregate per-worker counters into one fleet-wide view.
@@ -154,6 +180,20 @@ impl PoolStats {
             self.capacity_wait_ticks.to_string(),
         ]);
         t.row(&["sequences admitted".into(), self.seqs_admitted.to_string()]);
+        if self.shard_allocated.len() > 1 {
+            t.row(&[
+                "page allocs per shard".into(),
+                self.shard_allocated
+                    .iter()
+                    .map(|c| c.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]);
+            t.row(&[
+                "shard spills".into(),
+                self.shard_spills.to_string(),
+            ]);
+        }
         t.render()
     }
 }
@@ -183,11 +223,16 @@ pub struct Preempted {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PageBudget {
     pub page_size: usize,
-    /// Free pages plus evictable cached pages.
+    /// Free pages plus evictable cached pages. For a sharded pool this
+    /// is the *sum of per-shard headroom* ([`KvPool::shard_views`]):
+    /// pages spill across arenas, so the aggregate is exactly what the
+    /// tick planner can gate chunks against.
     pub available_pages: usize,
     /// Growth watermark: one lookahead page per live sequence, so
     /// admission stays optimistic and preemption handles the tail.
     pub reserved_growth: usize,
+    /// Device arenas behind the budget (1 = monolithic).
+    pub shards: usize,
 }
 
 /// What the batcher admits against each tick: slots (the compiled
@@ -218,7 +263,7 @@ impl CapacityView {
 /// The paged KV-cache pool.
 #[derive(Debug, Clone)]
 pub struct KvPool {
-    blocks: BlockPool,
+    blocks: ShardedBlockPool,
     cache: PrefixCache,
     tables: HashMap<u64, BlockTable>,
     /// Swapped-out sequences awaiting `resume_swapped`.
@@ -238,22 +283,32 @@ pub struct AllocOutcome {
 
 impl KvPool {
     pub fn new(total_pages: usize, page_size: usize, max_seq: usize) -> Self {
+        KvPool::with_shards(total_pages, page_size, max_seq, 1)
+    }
+
+    /// Pool with its page budget split across `shards` device arenas
+    /// (`shards == 1` is the monolithic pool, bit for bit).
+    pub fn with_shards(total_pages: usize, page_size: usize,
+                       max_seq: usize, shards: usize) -> Self {
         KvPool {
-            blocks: BlockPool::new(total_pages, page_size),
+            blocks: ShardedBlockPool::new(total_pages, page_size, shards),
             cache: PrefixCache::new(),
             tables: HashMap::new(),
             swapped: HashMap::new(),
             max_seq,
             next_seq: 0,
-            stats: PoolStats::default(),
+            stats: PoolStats {
+                shard_allocated: vec![0; shards.max(1)],
+                ..PoolStats::default()
+            },
         }
     }
 
     /// Pool for a `batch`-slot decode graph under `cfg`.
     pub fn for_batch(batch: usize, max_seq: usize, cfg: KvPoolConfig)
                      -> Self {
-        KvPool::new(cfg.resolve_pages(batch, max_seq), cfg.page_size,
-                    max_seq)
+        KvPool::with_shards(cfg.resolve_pages(batch, max_seq),
+                            cfg.page_size, max_seq, cfg.shards.max(1))
     }
 
     /// Pool sized for a single dense sequence (the bs=1 decode loops).
@@ -282,6 +337,36 @@ impl KvPool {
     }
     pub fn live_seqs(&self) -> usize {
         self.tables.len()
+    }
+    /// Device arenas the page budget is split across (1 = monolithic).
+    pub fn shards(&self) -> usize {
+        self.blocks.shards()
+    }
+    /// Shard owning a global page id.
+    pub fn shard_of(&self, pid: PageId) -> ShardId {
+        self.blocks.shard_of(pid)
+    }
+    /// Lifecycle state of a page (test/report hook — block tables must
+    /// only ever reference `Live` pages).
+    pub fn page_state(&self, pid: PageId) -> PageState {
+        self.blocks.state(pid)
+    }
+
+    /// Per-shard capacity counters — the per-shard `CapacityView`s the
+    /// worker republishes (occupancy telemetry, routing snapshot, the
+    /// `mmserve kv` shard table). Their summed headroom is exactly the
+    /// aggregate `available_pages` admission gates on.
+    pub fn shard_views(&self) -> Vec<ShardView> {
+        self.blocks.views()
+    }
+
+    /// The shard a sequence's decode growth prefers: the arena of its
+    /// final mapped page (`None` for an unknown or pageless request).
+    pub fn growth_shard(&self, request: u64) -> Option<ShardId> {
+        self.tables
+            .get(&request)
+            .and_then(|t| t.last_page())
+            .map(|p| self.blocks.shard_of(p))
     }
 
     pub fn has_table(&self, request: u64) -> bool {
@@ -339,10 +424,16 @@ impl KvPool {
         }
         self.stats.prefix_hit_tokens += (shared * ps) as u64;
 
-        // Phase 2: fresh pages for the remainder.
+        // Phase 2: fresh pages for the remainder. The home shard is
+        // wherever the shared prefix already sits (or the emptiest
+        // arena for a cold prompt); each claimed page becomes the next
+        // one's preference so a sequence stays co-located until its
+        // arena runs dry and the claim spills.
+        let mut prefer = pages.last().map(|&p| self.blocks.shard_of(p));
         for i in shared..total_blocks {
-            match self.grab_page() {
+            match self.grab_page(prefer) {
                 Some(pid) => {
+                    prefer = Some(self.blocks.shard_of(pid));
                     if i < hashes.len() {
                         // Full prompt block: publish for future sharing.
                         self.cache.insert(hashes[i], pid);
@@ -399,7 +490,14 @@ impl KvPool {
         let block_idx = pos / ps;
         match cur_page {
             None => {
-                let pid = self.grab_page().ok_or(
+                // Grow onto the sequence's home shard (its last page's
+                // arena), spilling when that arena is dry.
+                let prefer = self
+                    .tables
+                    .get(&request)
+                    .and_then(|t| t.last_page())
+                    .map(|p| self.blocks.shard_of(p));
+                let pid = self.grab_page(prefer).ok_or(
                     KvError::CapacityExhausted { needed: 1, available: 0 },
                 )?;
                 self.tables.get_mut(&request).unwrap().push_page(pid);
@@ -408,8 +506,11 @@ impl KvPool {
                 if self.blocks.refs(pid) > 1 {
                     // Shared page about to be overwritten: fork. The
                     // device-side analogue is a page copy; here the
-                    // table's own token history is the content.
-                    let fresh = self.grab_page().ok_or(
+                    // table's own token history is the content. The
+                    // fork prefers the original's shard (the copy a
+                    // real allocator would keep device-local).
+                    let prefer = Some(self.blocks.shard_of(pid));
+                    let fresh = self.grab_page(prefer).ok_or(
                         KvError::CapacityExhausted {
                             needed: 1,
                             available: 0,
@@ -480,7 +581,35 @@ impl KvPool {
     /// the prefix cache when pressure has eased.
     pub fn preempt(&mut self, mode: PreemptMode) -> Option<Preempted> {
         let victim = self.tables.values().max_by_key(|t| t.seq)?.request;
-        let t = self.tables.remove(&victim).unwrap();
+        self.evict_seq(victim, mode)
+    }
+
+    /// Shard-aware victim selection: evict the latest-admitted
+    /// sequence holding at least one page on `shard`, so the freed
+    /// capacity lands on the arena the grower prefers (its next claim
+    /// stays device-local instead of spilling). Falls back to the
+    /// global latest-first rule when no sequence touches the shard.
+    /// With one shard this is exactly [`KvPool::preempt`].
+    pub fn preempt_on_shard(&mut self, mode: PreemptMode, shard: ShardId)
+                            -> Option<Preempted> {
+        let blocks = &self.blocks;
+        let victim = self
+            .tables
+            .values()
+            .filter(|t| {
+                t.pages().iter().any(|&p| blocks.shard_of(p) == shard)
+            })
+            .max_by_key(|t| t.seq)
+            .or_else(|| self.tables.values().max_by_key(|t| t.seq))
+            .map(|t| t.request)?;
+        self.evict_seq(victim, mode)
+    }
+
+    /// Shared preemption teardown: remove the victim's table, park its
+    /// full blocks, ledger it when swapping out.
+    fn evict_seq(&mut self, victim: u64, mode: PreemptMode)
+                 -> Option<Preempted> {
+        let t = self.tables.remove(&victim)?;
         let tokens = t.tokens().to_vec();
         let prompt_len = t.prompt_len;
         self.finish_table(t);
@@ -513,7 +642,10 @@ impl KvPool {
         }
     }
 
-    /// The admission view for this tick: slots plus page budget.
+    /// The admission view for this tick: slots plus page budget. The
+    /// page headroom is the per-shard headroom summed — pages spill
+    /// across arenas, so the sum is exactly what a tick plan can be
+    /// granted (`available_pages == Σ shard_views().headroom()`).
     pub fn capacity_view(&self, free_slots: usize, live_slots: usize)
                          -> CapacityView {
         CapacityView {
@@ -525,6 +657,7 @@ impl KvPool {
                     .blocks
                     .available(self.cache.evictable()),
                 reserved_growth: self.tables.len(),
+                shards: self.blocks.shards(),
             }),
         }
     }
@@ -537,17 +670,11 @@ impl KvPool {
     /// Cheap read-only routing probe: how many leading full blocks of
     /// `tokens` are resident (live or cached) right now. Does not
     /// touch the LRU, the refcounts, or the prefix-hit counters — an
-    /// admission may still miss if eviction races the probe.
+    /// admission may still miss if eviction races the probe. Defined
+    /// as the block count of [`KvPool::probe_prefix_shards`] so the
+    /// scalar and shard-set probes can never disagree.
     pub fn probe_prefix(&self, tokens: &[i32]) -> usize {
-        let ps = self.blocks.page_size();
-        let mut n = 0;
-        for h in block_hashes(tokens, ps) {
-            if self.cache.lookup(h).is_none() {
-                break;
-            }
-            n += 1;
-        }
-        n
+        self.probe_prefix_shards(tokens).0
     }
 
     /// The resident block-hash set — the payload a worker publishes
@@ -556,20 +683,70 @@ impl KvPool {
         self.cache.hashes().collect()
     }
 
+    /// Resident block hashes bucketed by the owning device — the
+    /// per-shard halves of the routing snapshot. The union over shards
+    /// equals [`KvPool::resident_hashes`].
+    pub fn resident_hashes_by_shard(
+        &self,
+    ) -> Vec<std::collections::HashSet<u64>> {
+        let mut out =
+            vec![std::collections::HashSet::new(); self.blocks.shards()];
+        for (h, pid) in self.cache.entries() {
+            out[self.blocks.shard_of(pid)].insert(h);
+        }
+        out
+    }
+
+    /// Shard-set probe: like [`KvPool::probe_prefix`], but also counts
+    /// the distinct device arenas holding the matched blocks — the
+    /// spread a router uses to prefer a replica whose warm prefix is
+    /// concentrated on fewer devices. Read-only, like `probe_prefix`.
+    pub fn probe_prefix_shards(&self, tokens: &[i32]) -> (usize, usize) {
+        let ps = self.blocks.page_size();
+        let mut n = 0;
+        let mut shards = std::collections::HashSet::new();
+        for h in block_hashes(tokens, ps) {
+            let Some(pid) = self.cache.lookup(h) else { break };
+            shards.insert(self.blocks.shard_of(pid));
+            n += 1;
+        }
+        (n, shards.len())
+    }
+
     // ---- internals -------------------------------------------------
 
-    /// Free page, else evict the LRU cached prefix, else None.
-    fn grab_page(&mut self) -> Option<PageId> {
-        if let Some(pid) = self.blocks.alloc() {
+    /// Free page (preferring `prefer`'s arena, spilling when dry),
+    /// else evict the LRU cached prefix, else None.
+    fn grab_page(&mut self, prefer: Option<ShardId>) -> Option<PageId> {
+        if let Some(pid) = self.blocks.alloc_prefer(prefer) {
             self.stats.blocks_allocated += 1;
+            self.note_shard_alloc(pid, prefer);
             return Some(pid);
         }
         let victim = self.cache.evict_lru()?;
         self.blocks.evict_cached(victim);
         self.stats.evictions += 1;
-        let pid = self.blocks.alloc().expect("page just evicted");
+        let pid = self
+            .blocks
+            .alloc_prefer(prefer)
+            .expect("page just evicted");
         self.stats.blocks_allocated += 1;
+        self.note_shard_alloc(pid, prefer);
         Some(pid)
+    }
+
+    /// Per-shard occupancy counters: where the fresh page landed, and
+    /// whether the claim spilled off its preferred arena.
+    /// (`shard_allocated` is sized at construction, so this is two
+    /// plain increments on the allocation hot path.)
+    fn note_shard_alloc(&mut self, pid: PageId, prefer: Option<ShardId>) {
+        let s = self.blocks.shard_of(pid);
+        self.stats.shard_allocated[s] += 1;
+        if let Some(p) = prefer {
+            if p != s {
+                self.stats.shard_spills += 1;
+            }
+        }
     }
 
     /// Drop one table reference; a zero-ref page parks on the cache
@@ -643,6 +820,17 @@ impl KvPool {
                 "cached mismatch: LRU {} vs pool {}",
                 self.cache.evictable(),
                 self.blocks.cached_count()
+            ));
+        }
+        // Shard views must tile the aggregate the planner gates on:
+        // summed per-shard headroom == the capacity view's pages.
+        let shard_headroom: usize =
+            self.shard_views().iter().map(|v| v.headroom()).sum();
+        if shard_headroom != self.blocks.available(self.cache.evictable()) {
+            return Err(format!(
+                "per-shard headroom {} != aggregate available {}",
+                shard_headroom,
+                self.blocks.available(self.cache.evictable())
             ));
         }
         Ok(())
@@ -879,9 +1067,101 @@ mod tests {
         let b = v.pages.unwrap();
         assert_eq!(b.available_pages, 6);
         assert_eq!(b.reserved_growth, 1);
+        assert_eq!(b.shards, 1, "monolithic pool is one arena");
         assert_eq!(v.pages_needed(8), 3, "8+1 tokens → 3 pages");
         let d = CapacityView::dense(3, 1);
         assert_eq!(d.pages_needed(1000), 0);
+    }
+
+    /// Tentpole: a sharded pool's fresh pages land on the sequence's
+    /// home arena and spill to the emptiest other shard when it runs
+    /// dry — the block table spans shards, the aggregate budget stays
+    /// fully admissible, and the spill is counted.
+    #[test]
+    fn sharded_alloc_prefers_home_and_spills() {
+        let mut p = KvPool::with_shards(4, 4, 64, 2); // arenas {0,1},{2,3}
+        assert_eq!(p.shards(), 2);
+        let out = p.alloc(1, &[7; 12]).unwrap(); // 3 pages
+        assert_eq!(out.pages, 3);
+        let pages = p.table(1).unwrap().pages().to_vec();
+        assert_eq!(pages, vec![0, 1, 2], "two home pages + one spill");
+        assert_eq!(p.shard_of(pages[0]), 0);
+        assert_eq!(p.shard_of(pages[2]), 1, "table spans shards");
+        assert_eq!(p.stats.shard_spills, 1);
+        assert_eq!(p.stats.shard_allocated, vec![2, 1]);
+        let views = p.shard_views();
+        assert_eq!(views[0].live_pages, 2);
+        assert_eq!(views[0].free_pages, 0);
+        assert_eq!(views[1].live_pages, 1);
+        assert_eq!(views[1].free_pages, 1);
+        assert_eq!(p.growth_shard(1), Some(1), "tail page's arena");
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        p.check_invariants().unwrap();
+    }
+
+    /// Shard-aware preemption: the victim is the latest admission
+    /// *holding pages on the pressured shard*, so the freed capacity
+    /// lands where the grower wants it; a shard nobody touches falls
+    /// back to the global latest-first rule.
+    #[test]
+    fn sharded_preempt_targets_the_holding_sequence() {
+        let mut p = KvPool::with_shards(8, 4, 64, 2); // {0..4}, {4..8}
+        p.alloc(1, &[1; 13]).unwrap(); // 4 pages, fills shard 0
+        p.alloc(2, &[2; 5]).unwrap(); // 2 pages on shard 1
+        assert!(p.table(1).unwrap().pages().iter()
+            .all(|&pg| p.shard_of(pg) == 0));
+        assert!(p.table(2).unwrap().pages().iter()
+            .all(|&pg| p.shard_of(pg) == 1));
+        // Pressure on shard 0: request 1 is its only holder, so it is
+        // the victim even though request 2 was admitted later.
+        let pre = p
+            .preempt_on_shard(PreemptMode::Recompute, 0)
+            .unwrap();
+        assert_eq!(pre.request, 1);
+        p.check_invariants().unwrap();
+        // Nobody holds shard-0 pages now: falls back to global latest.
+        let pre = p
+            .preempt_on_shard(PreemptMode::Recompute, 0)
+            .unwrap();
+        assert_eq!(pre.request, 2, "fallback is the global rule");
+        assert_eq!(p.live_seqs(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    /// Prefix sharing crosses shard boundaries: a resumed prompt
+    /// shares cached blocks wherever they sit, the per-shard resident
+    /// sets bucket the hashes by device, and the shard-set probe
+    /// reports both the match length and its device spread.
+    #[test]
+    fn sharded_prefix_sharing_and_probe_span_shards() {
+        let mut p = KvPool::with_shards(8, 4, 64, 2);
+        let sys: Vec<i32> = (0..16).collect(); // 4 full blocks
+        p.alloc(1, &sys).unwrap(); // 4 pages, all shard 0
+        assert_eq!(p.probe_prefix_shards(&sys), (4, 1));
+        p.release(1).unwrap(); // blocks parked cached on shard 0
+        let mut long = sys.clone();
+        long.extend(100..108); // 6 full blocks total
+        p.alloc(2, &long).unwrap();
+        // 4 shared (shard 0) + 2 fresh spilled onto shard 1.
+        assert_eq!(p.probe_prefix_shards(&long), (6, 2));
+        let by_shard = p.resident_hashes_by_shard();
+        assert_eq!(by_shard.len(), 2);
+        assert_eq!(by_shard[0].len(), 4);
+        assert_eq!(by_shard[1].len(), 2);
+        let union: std::collections::HashSet<u64> = by_shard
+            .iter()
+            .flat_map(|s| s.iter().copied())
+            .collect();
+        assert_eq!(union, p.resident_hashes());
+        // The capacity view's headroom is the per-shard sum.
+        let b = p.capacity_view(1, 1).pages.unwrap();
+        assert_eq!(b.shards, 2);
+        assert_eq!(
+            b.available_pages,
+            p.shard_views().iter().map(|v| v.headroom()).sum::<usize>()
+        );
+        p.check_invariants().unwrap();
     }
 
     /// Satellite: random alloc/fork/advance/evict/preempt walks never

@@ -134,6 +134,12 @@ impl PrefixCache {
     pub fn hashes(&self) -> impl Iterator<Item = u64> + '_ {
         self.by_hash.keys().copied()
     }
+
+    /// Resident `(hash, page)` pairs — the sharded snapshot buckets
+    /// these by the page's owning device.
+    pub fn entries(&self) -> impl Iterator<Item = (u64, PageId)> + '_ {
+        self.by_hash.iter().map(|(&h, &p)| (h, p))
+    }
 }
 
 #[cfg(test)]

@@ -64,6 +64,9 @@ pub struct ReplayConfig {
     pub page_size: usize,
     /// The shared capacity budget, in pages.
     pub total_pages: usize,
+    /// Device arenas the budget is split across (`--shards`; 1 = the
+    /// monolithic pool, bit-identical to the pre-shard replay).
+    pub shards: usize,
     /// Decode-graph batch for the paged run (the dense run's slot count
     /// is derived from the page budget instead).
     pub batch_slots: usize,
@@ -87,6 +90,7 @@ impl Default for ReplayConfig {
             long_percent: 20,
             page_size: 16,
             total_pages: 96,
+            shards: 1,
             batch_slots: 16,
             max_seq: 512,
             prefill_budget: 0,
@@ -176,6 +180,10 @@ pub struct ReplayResult {
     /// Largest prompt-token load any single tick carried (the decode
     /// stall bound chunked prefill is for).
     pub max_tick_prefill_tokens: usize,
+    /// Mean live-page fraction of each device shard's arena, sampled
+    /// per decode tick (length = shard count; len 1 for a monolithic
+    /// paged run, empty for dense) — the per-shard occupancy report.
+    pub shard_utilization: Vec<f64>,
     /// Pool counters (zeros for the dense baseline).
     pub stats: PoolStats,
     /// Decoded token stream per request — the determinism witness the
@@ -219,9 +227,13 @@ pub struct SimWorker {
     dropped: usize,
     tokens_decoded: u64,
     util_sum: f64,
+    /// Per-shard live-fraction sums, sampled with `util_sum`.
+    shard_util_sums: Vec<f64>,
     stalled: usize,
     max_tick_prefill: usize,
     outputs: HashMap<u64, Vec<i32>>,
+    /// Crashed (fail-over sim): accepts no work, ticks are no-ops.
+    dead: bool,
 }
 
 impl SimWorker {
@@ -232,6 +244,7 @@ impl SimWorker {
             PagedKvSlots::paged(slots_n, cfg.max_seq, KvPoolConfig {
                 page_size: cfg.page_size,
                 total_pages: cfg.total_pages,
+                shards: cfg.shards.max(1),
             })
         } else {
             PagedKvSlots::dense(slots_n, cfg.max_seq)
@@ -258,9 +271,15 @@ impl SimWorker {
             dropped: 0,
             tokens_decoded: 0,
             util_sum: 0.0,
+            shard_util_sums: if paged {
+                vec![0.0; cfg.shards.max(1)]
+            } else {
+                Vec::new()
+            },
             stalled: 0,
             max_tick_prefill: 0,
             outputs: HashMap::new(),
+            dead: false,
         }
     }
 
@@ -279,9 +298,11 @@ impl SimWorker {
         self.arrived.insert(req.id, self.now);
     }
 
-    /// Anything queued, mid-prefill, or decoding?
+    /// Anything queued, mid-prefill, or decoding? (A crashed worker
+    /// reports idle: its remaining work was evacuated by `kill`.)
     pub fn has_work(&self) -> bool {
-        self.sched.pending() > 0 || self.kv.live_count() > 0
+        !self.dead
+            && (self.sched.pending() > 0 || self.kv.live_count() > 0)
     }
 
     /// Routing view: outstanding requests on this worker.
@@ -295,9 +316,60 @@ impl SimWorker {
         self.kv.probe_prefix(tokens)
     }
 
+    /// Routing view, shard-set form: `(resident leading blocks,
+    /// distinct device shards holding them)`.
+    pub fn probe_shards(&self, tokens: &[i32]) -> (usize, usize) {
+        self.kv.probe_prefix_shards(tokens)
+    }
+
+    /// Crashed? (set by [`SimWorker::kill`]).
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Simulate a worker crash mid-workload: every unfinished request
+    /// (queued, mid-prefill, or decoding) is withdrawn — its partial
+    /// outputs discarded, its slot and pages released — and the sorted
+    /// request ids are returned so the router can re-deliver them to
+    /// surviving replicas from scratch (the recompute fail-over). The
+    /// worker then accepts no more work; counters for requests it
+    /// *finished* stay valid for the fleet report. TTFT samples the
+    /// dead worker already recorded for unfinished requests remain in
+    /// its histogram (the fleet TTFT merge is latency accounting, not
+    /// the determinism witness — `outputs` is).
+    pub fn kill(&mut self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .staging
+            .keys()
+            .chain(self.inflight.keys())
+            .chain(self.remaining.keys())
+            .copied()
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        for (slot, _req, _pos) in self.kv.live_slots() {
+            let _ = self.kv.release(slot);
+        }
+        for &id in &ids {
+            self.sched.drop_request(id);
+            self.outputs.remove(&id);
+            self.arrived.remove(&id);
+            self.ttft_done.remove(&id);
+        }
+        while self.sched.shed_front().is_some() {}
+        self.staging.clear();
+        self.inflight.clear();
+        self.remaining.clear();
+        self.dead = true;
+        ids
+    }
+
     /// One scheduler tick: plan, shed wedged work, execute prefill
     /// chunks, take one batched decode step, advance the clock.
     pub fn tick(&mut self) {
+        if self.dead {
+            return;
+        }
         // ---- plan ------------------------------------------------------
         let view = self.kv.capacity_view();
         let plan = self.sched.plan(&view);
@@ -456,6 +528,13 @@ impl SimWorker {
         if let Some(pool) = self.kv.pool() {
             self.util_sum +=
                 pool.live_pages() as f64 / pool.total_pages() as f64;
+            // Per-shard occupancy, sampled on the same tick cadence.
+            for v in pool.shard_views() {
+                if v.total_pages > 0 {
+                    self.shard_util_sums[v.shard] +=
+                        v.live_pages as f64 / v.total_pages as f64;
+                }
+            }
         }
         for (slot, req, pos) in decoding {
             // A preemption earlier in this step may have freed the slot.
@@ -503,12 +582,14 @@ impl SimWorker {
         }
     }
 
-    /// Decode outgrew the pool: preempt (latest-admitted first) until
-    /// the advance fits or we evicted ourselves.
+    /// Decode outgrew the pool: preempt (latest-admitted first, on a
+    /// sharded pool targeting the grower's arena first) until the
+    /// advance fits or we evicted ourselves.
     fn preempt_until_fits(&mut self, slot: usize, req: u64, tok: i32) {
+        let prefer = self.kv.growth_shard(req);
         loop {
             let Some((_vslot, pre)) =
-                self.kv.preempt(PreemptMode::Recompute)
+                self.kv.preempt_targeted(PreemptMode::Recompute, prefer)
             else {
                 break;
             };
@@ -590,6 +671,14 @@ impl SimWorker {
             ttft: self.ttft,
             tbt: self.tbt,
             max_tick_prefill_tokens: self.max_tick_prefill,
+            shard_utilization: if self.decode_ticks == 0 {
+                vec![0.0; self.shard_util_sums.len()]
+            } else {
+                self.shard_util_sums
+                    .iter()
+                    .map(|s| s / self.decode_ticks as f64)
+                    .collect()
+            },
             stats,
             outputs: self.outputs,
         }
@@ -673,6 +762,56 @@ pub fn render_chunk_comparison(whole: &ReplayResult,
             chunked.completed.to_string()]);
     t.row(&["sim wall".into(), f2(whole.sim_time),
             f2(chunked.sim_time)]);
+    t.render()
+}
+
+/// Percent rendering for per-shard utilization vectors ("61.2%/58.9%")
+/// — shared with the routing replay's worker-counters table so the two
+/// shard-occupancy reports can never format differently.
+pub(crate) fn render_shard_util(util: &[f64]) -> String {
+    if util.is_empty() {
+        return "-".into();
+    }
+    util.iter()
+        .map(|u| format!("{:.1}%", u * 100.0))
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Sharded vs. monolithic page arena on the same mix — the
+/// `mmserve kv --shards D` capacity table: identical aggregate budget,
+/// split across `D` device arenas, with per-shard occupancy and the
+/// cross-arena spill count.
+pub fn render_shard_comparison(mono: &ReplayResult,
+                               sharded: &ReplayResult, shards: usize)
+                               -> String {
+    let mut t = Table::new(&[
+        "metric",
+        "monolithic (1 arena)",
+        &format!("sharded ({shards} arenas)"),
+    ]);
+    let f2 = |x: f64| format!("{x:.2}");
+    t.row(&["mean batch occupancy".into(), f2(mono.mean_occupancy),
+            f2(sharded.mean_occupancy)]);
+    t.row(&["mean pool utilization".into(),
+            format!("{:.1}%", mono.mean_pool_utilization * 100.0),
+            format!("{:.1}%", sharded.mean_pool_utilization * 100.0)]);
+    t.row(&["per-shard occupancy".into(),
+            render_shard_util(&mono.shard_utilization),
+            render_shard_util(&sharded.shard_utilization)]);
+    t.row(&["shard spills".into(), mono.stats.shard_spills.to_string(),
+            sharded.stats.shard_spills.to_string()]);
+    t.row(&["prefix hit rate".into(),
+            format!("{:.1}%", mono.stats.hit_rate() * 100.0),
+            format!("{:.1}%", sharded.stats.hit_rate() * 100.0)]);
+    t.row(&["preemptions".into(), mono.stats.preemptions.to_string(),
+            sharded.stats.preemptions.to_string()]);
+    t.row(&["LRU evictions".into(), mono.stats.evictions.to_string(),
+            sharded.stats.evictions.to_string()]);
+    t.row(&["requests completed".into(), mono.completed.to_string(),
+            sharded.completed.to_string()]);
+    t.row(&["sim wall".into(), f2(mono.sim_time),
+            f2(sharded.sim_time)]);
     t.render()
 }
 
@@ -865,6 +1004,132 @@ mod tests {
         let r = replay(&cfg, true);
         assert_eq!(r.completed, 0);
         assert_eq!(r.dropped, 1, "wedged prefill must be shed: {r:?}");
+    }
+
+    /// Acceptance criterion (tentpole): `shards: 1` is bit-identical
+    /// to the pre-shard monolithic replay — same outputs, same pool
+    /// counters, same clock — because a one-shard pool delegates every
+    /// operation to a single arena with no policy branch.
+    #[test]
+    fn single_shard_replay_is_bit_identical_to_monolithic() {
+        // The default config *is* the monolithic path (shards: 1);
+        // spelling the flag out must change nothing.
+        let mono = replay(&ReplayConfig::default(), true);
+        let flagged = replay(
+            &ReplayConfig { shards: 1, ..ReplayConfig::default() },
+            true,
+        );
+        assert_eq!(flagged.outputs, mono.outputs, "token streams");
+        assert_eq!(flagged.decode_ticks, mono.decode_ticks);
+        assert_eq!(flagged.sim_time, mono.sim_time);
+        assert_eq!(flagged.completed, mono.completed);
+        assert_eq!(flagged.stats.prefix_lookups, mono.stats.prefix_lookups);
+        assert_eq!(flagged.stats.prefix_hits, mono.stats.prefix_hits);
+        assert_eq!(flagged.stats.blocks_allocated,
+                   mono.stats.blocks_allocated);
+        assert_eq!(flagged.stats.blocks_freed, mono.stats.blocks_freed);
+        assert_eq!(flagged.stats.evictions, mono.stats.evictions);
+        assert_eq!(flagged.stats.cow_forks, mono.stats.cow_forks);
+        assert_eq!(flagged.stats.preemptions, mono.stats.preemptions);
+        assert_eq!(flagged.stats.capacity_wait_ticks,
+                   mono.stats.capacity_wait_ticks);
+        assert_eq!(flagged.stats.shard_spills, 0, "one arena never spills");
+        assert_eq!(flagged.mean_occupancy, mono.mean_occupancy);
+        assert_eq!(flagged.mean_pool_utilization,
+                   mono.mean_pool_utilization);
+    }
+
+    /// Tentpole: splitting the same page budget across device arenas
+    /// keeps the workload fully servable — every request completes
+    /// with the *same token streams* as the monolithic run (placement
+    /// must never change results), per-shard occupancy is reported,
+    /// and the per-shard means reconstruct the pool mean exactly when
+    /// the arenas are equal-sized.
+    #[test]
+    fn sharded_replay_completes_with_identical_outputs() {
+        let shards = 4; // 96 pages % 4 == 0: equal arenas
+        let cfg = ReplayConfig::default();
+        let mono = replay(&cfg, true);
+        let sharded =
+            replay(&ReplayConfig { shards, ..cfg.clone() }, true);
+        assert_eq!(sharded.completed, cfg.requests);
+        assert_eq!(sharded.dropped, 0);
+        assert_eq!(sharded.outputs, mono.outputs,
+                   "sharding moves pages, never tokens");
+        assert_eq!(sharded.shard_utilization.len(), shards);
+        assert!(sharded
+            .shard_utilization
+            .iter()
+            .all(|&u| (0.0..=1.0).contains(&u)));
+        let mean_of_shards: f64 = sharded.shard_utilization.iter().sum::<f64>()
+            / shards as f64;
+        assert!(
+            (mean_of_shards - sharded.mean_pool_utilization).abs() < 1e-9,
+            "equal arenas: shard means reconstruct the pool mean \
+             ({mean_of_shards} vs {})",
+            sharded.mean_pool_utilization
+        );
+        assert_eq!(sharded.stats.shard_allocated.len(), shards);
+        assert_eq!(
+            sharded.stats.shard_allocated.iter().sum::<u64>(),
+            sharded.stats.blocks_allocated,
+            "every fresh page lands on exactly one shard"
+        );
+        let s = render_shard_comparison(&mono, &sharded, shards);
+        assert!(s.contains("per-shard occupancy"));
+        assert!(s.contains("shard spills"));
+        // Determinism of the sharded path.
+        let again =
+            replay(&ReplayConfig { shards, ..cfg.clone() }, true);
+        assert_eq!(again.outputs, sharded.outputs);
+        assert_eq!(again.stats.shard_allocated,
+                   sharded.stats.shard_allocated);
+        assert_eq!(again.stats.shard_spills, sharded.stats.shard_spills);
+    }
+
+    /// Satellite: the chunked-prefill page-claim path under real
+    /// pressure — continuation chunks race decode growth on a tight
+    /// sharded pool, so `extend_chunk` hits `CapacityExhausted`
+    /// mid-prefill. That must surface as a structured requeue
+    /// (recompute from the queue front), never a panic or a drop:
+    /// every request still completes, on the monolithic and the
+    /// sharded pool alike, with identical streams.
+    #[test]
+    fn chunk_exhaustion_mid_prefill_requeues_and_completes() {
+        // The proven-tight budget of
+        // `tight_budget_exercises_preemption_and_still_completes`,
+        // with chunked admission on top: continuation page claims now
+        // race decode growth.
+        let base = ReplayConfig {
+            total_pages: 40,
+            batch_slots: 12,
+            chunk_prefill: 12,
+            ..ReplayConfig::default()
+        };
+        for shards in [1usize, 2, 3] {
+            let r = replay(
+                &ReplayConfig { shards, ..base.clone() },
+                true,
+            );
+            assert_eq!(r.completed, base.requests,
+                       "shards={shards}: every request completes");
+            assert_eq!(r.dropped, 0, "shards={shards}: nothing shed");
+            assert!(
+                r.stats.preemptions + r.stats.evictions
+                    + r.stats.capacity_wait_ticks
+                    > 0,
+                "shards={shards}: the tight budget must create the \
+                 pressure this test is about: {:?}",
+                r.stats
+            );
+            assert!(r.max_tick_prefill_tokens <= 12,
+                    "chunk budget respected under pressure");
+        }
+        // Placement differences across shard counts never leak into
+        // the decoded streams.
+        let a = replay(&ReplayConfig { shards: 1, ..base.clone() }, true);
+        let b = replay(&ReplayConfig { shards: 2, ..base.clone() }, true);
+        assert_eq!(a.outputs, b.outputs);
     }
 
     #[test]

@@ -1,0 +1,369 @@
+//! Multi-GPU page sharding: the [`BlockPool`] budget split across `D`
+//! simulated device arenas.
+//!
+//! Tensor-parallel serving needs its KV capacity spread over every
+//! device's HBM — a single per-worker arena caps the achievable batch
+//! at one device's memory (the capacity half of the paper's
+//! multi-device lever; cf. *Inference Optimization of Foundation
+//! Models on AI Accelerators*). [`ShardedBlockPool`] models that
+//! split: each shard is its own ref-counted [`BlockPool`] arena, and a
+//! page's *global* id encodes `(device, page)` — [`locate`] maps a
+//! global id to its shard and arena-local index, [`global`] maps back.
+//! Block tables keep storing global ids, so one sequence's pages can
+//! **span shards**: growth prefers the sequence's current shard (the
+//! locality a device-side allocator would want) and *spills* to the
+//! emptiest other shard when it runs dry, which keeps the aggregate
+//! budget exactly as admissible as a monolithic arena.
+//!
+//! With `shards == 1` every operation delegates to the single inner
+//! arena untouched — the monolithic [`BlockPool`] behavior, bit for
+//! bit (the property suite in `rust/tests/property_kvpool.rs` checks
+//! this by bisimulation).
+//!
+//! The shard layer owns only page placement. Hashing, prefix sharing,
+//! and eviction policy stay in [`super::prefix`] / [`super::pool`],
+//! which see shards through [`ShardView`]s (per-shard capacity, the
+//! per-shard half of the routing snapshot) and
+//! [`ShardedBlockPool::shard_of`].
+//!
+//! [`locate`]: ShardedBlockPool::locate
+//! [`global`]: ShardedBlockPool::global
+
+use super::block::{BlockPool, PageId, PageState};
+
+/// Index of one simulated device arena.
+pub type ShardId = usize;
+
+/// One shard's capacity counters — the per-shard half of the
+/// [`CapacityView`](super::CapacityView) the pool publishes (routing
+/// snapshots and the `mmserve kv` per-shard occupancy report read
+/// these; admission gates on their sum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardView {
+    pub shard: ShardId,
+    pub total_pages: usize,
+    pub free_pages: usize,
+    pub live_pages: usize,
+    /// Zero-ref prefix-cached pages (evictable under pressure).
+    pub cached_pages: usize,
+}
+
+impl ShardView {
+    /// Pages obtainable from this shard right now (free + evictable).
+    pub fn headroom(&self) -> usize {
+        self.free_pages + self.cached_pages
+    }
+}
+
+/// The page budget split across `D` per-device arenas.
+///
+/// Page distribution: `total_pages / D` per shard, with the remainder
+/// going to the lowest-index shards, so shard sizes differ by at most
+/// one page. Global ids are contiguous per shard
+/// (`[offset(s), offset(s) + size(s))`), which keeps every existing
+/// `0..total()` walk (invariant checks, reports) valid unchanged.
+#[derive(Debug, Clone)]
+pub struct ShardedBlockPool {
+    arenas: Vec<BlockPool>,
+    /// Global id of each arena's first page (ascending; an empty
+    /// arena shares its successor's offset).
+    offsets: Vec<usize>,
+    /// Total pages across all arenas (== the last offset + size).
+    total: usize,
+    page_size: usize,
+}
+
+impl ShardedBlockPool {
+    pub fn new(total_pages: usize, page_size: usize, shards: usize) -> Self {
+        let d = shards.max(1);
+        let base = total_pages / d;
+        let rem = total_pages % d;
+        let mut arenas = Vec::with_capacity(d);
+        let mut offsets = Vec::with_capacity(d);
+        let mut off = 0usize;
+        for s in 0..d {
+            let size = base + usize::from(s < rem);
+            offsets.push(off);
+            arenas.push(BlockPool::new(size, page_size));
+            off += size;
+        }
+        ShardedBlockPool { arenas, offsets, total: off, page_size }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+    pub fn shards(&self) -> usize {
+        self.arenas.len()
+    }
+    pub fn total(&self) -> usize {
+        self.total
+    }
+    pub fn free_count(&self) -> usize {
+        self.arenas.iter().map(|a| a.free_count()).sum()
+    }
+    pub fn live_count(&self) -> usize {
+        self.arenas.iter().map(|a| a.live_count()).sum()
+    }
+    pub fn cached_count(&self) -> usize {
+        self.arenas.iter().map(|a| a.cached_count()).sum()
+    }
+
+    /// Shard owning a global page id. Every page operation routes
+    /// through here, so this is a binary search over the sorted
+    /// offsets, not a scan: the owner is the last arena whose offset
+    /// is ≤ `pid` (empty arenas share their successor's offset and own
+    /// no pages, and `partition_point` lands past them).
+    pub fn shard_of(&self, pid: PageId) -> ShardId {
+        assert!(pid < self.total, "page {pid} outside the sharded budget");
+        self.offsets.partition_point(|&off| off <= pid) - 1
+    }
+
+    /// Global id → `(device, arena-local page)`.
+    pub fn locate(&self, pid: PageId) -> (ShardId, PageId) {
+        let s = self.shard_of(pid);
+        (s, pid - self.offsets[s])
+    }
+
+    /// `(device, arena-local page)` → global id.
+    pub fn global(&self, shard: ShardId, local: PageId) -> PageId {
+        debug_assert!(local < self.arenas[shard].total());
+        self.offsets[shard] + local
+    }
+
+    pub fn shard_total(&self, s: ShardId) -> usize {
+        self.arenas[s].total()
+    }
+    pub fn shard_free(&self, s: ShardId) -> usize {
+        self.arenas[s].free_count()
+    }
+    pub fn shard_live(&self, s: ShardId) -> usize {
+        self.arenas[s].live_count()
+    }
+    pub fn shard_cached(&self, s: ShardId) -> usize {
+        self.arenas[s].cached_count()
+    }
+
+    /// Per-shard capacity counters, shard order.
+    pub fn views(&self) -> Vec<ShardView> {
+        (0..self.arenas.len())
+            .map(|s| ShardView {
+                shard: s,
+                total_pages: self.shard_total(s),
+                free_pages: self.shard_free(s),
+                live_pages: self.shard_live(s),
+                cached_pages: self.shard_cached(s),
+            })
+            .collect()
+    }
+
+    /// Shard with free pages to give, most-free first (ties break to
+    /// the lowest index). `None` when every arena is dry.
+    pub fn most_free_shard(&self) -> Option<ShardId> {
+        (0..self.arenas.len())
+            .filter(|&s| self.arenas[s].free_count() > 0)
+            .max_by_key(|&s| {
+                (self.arenas[s].free_count(), std::cmp::Reverse(s))
+            })
+    }
+
+    /// Claim a free page (refcount 1), preferring `prefer`'s arena and
+    /// spilling to the most-free other shard when it is dry. Returns
+    /// the global id; `None` when every arena's free list is empty —
+    /// the caller decides whether to evict a cached page.
+    ///
+    /// With one shard this is exactly [`BlockPool::alloc`].
+    pub fn alloc_prefer(&mut self, prefer: Option<ShardId>)
+                        -> Option<PageId> {
+        if let Some(s) = prefer {
+            if let Some(local) = self.arenas[s].alloc() {
+                return Some(self.offsets[s] + local);
+            }
+        }
+        let s = self.most_free_shard()?;
+        self.arenas[s].alloc().map(|local| self.offsets[s] + local)
+    }
+
+    /// Balance-first claim (no placement preference).
+    pub fn alloc(&mut self) -> Option<PageId> {
+        self.alloc_prefer(None)
+    }
+
+    pub fn state(&self, pid: PageId) -> PageState {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].state(local)
+    }
+    pub fn refs(&self, pid: PageId) -> usize {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].refs(local)
+    }
+
+    /// Add one reference to a live page (prefix sharing).
+    pub fn retain(&mut self, pid: PageId) {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].retain(local);
+    }
+
+    /// Drop one reference; returns the remaining count.
+    pub fn release(&mut self, pid: PageId) -> usize {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].release(local)
+    }
+
+    /// Return a zero-ref live page to its arena's free list.
+    pub fn free_page(&mut self, pid: PageId) {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].free_page(local);
+    }
+
+    /// Park a zero-ref live page as a cached prefix (evictable).
+    pub fn park_cached(&mut self, pid: PageId) {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].park_cached(local);
+    }
+
+    /// Revive a cached page for a new table (refcount 1).
+    pub fn unpark(&mut self, pid: PageId) {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].unpark(local);
+    }
+
+    /// Evict a cached page back to its arena's free list.
+    pub fn evict_cached(&mut self, pid: PageId) {
+        let (s, local) = self.locate(pid);
+        self.arenas[s].evict_cached(local);
+    }
+
+    /// Pages obtainable right now (free, plus the caller's count of
+    /// evictable cached pages) — same contract as
+    /// [`BlockPool::available`], summed over shards.
+    pub fn available(&self, cached_evictable: usize) -> usize {
+        self.free_count() + cached_evictable
+    }
+
+    /// Conservation per arena *and* across the split: every shard's
+    /// `free + live + cached == shard total`, and the shard sizes
+    /// tile the global budget with contiguous, ascending offsets.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mut expect_off = 0usize;
+        for (s, a) in self.arenas.iter().enumerate() {
+            if self.offsets[s] != expect_off {
+                return Err(format!(
+                    "shard {s}: offset {} != expected {expect_off}",
+                    self.offsets[s]
+                ));
+            }
+            a.check_conservation()
+                .map_err(|e| format!("shard {s}: {e}"))?;
+            expect_off += a.total();
+        }
+        if expect_off != self.total() {
+            return Err(format!(
+                "shard sizes tile {expect_off} pages != total {}",
+                self.total()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_splits_evenly_with_remainder_to_low_shards() {
+        let p = ShardedBlockPool::new(7, 4, 3);
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.total(), 7);
+        assert_eq!(p.shard_total(0), 3, "remainder page to shard 0");
+        assert_eq!(p.shard_total(1), 2);
+        assert_eq!(p.shard_total(2), 2);
+        // Contiguous global id ranges per shard.
+        assert_eq!(p.locate(0), (0, 0));
+        assert_eq!(p.locate(2), (0, 2));
+        assert_eq!(p.locate(3), (1, 0));
+        assert_eq!(p.locate(5), (2, 0));
+        assert_eq!(p.global(2, 1), 6);
+        assert_eq!(p.shard_of(6), 2);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn single_shard_matches_monolithic_alloc_order() {
+        let mut sharded = ShardedBlockPool::new(3, 16, 1);
+        let mut mono = BlockPool::new(3, 16);
+        // Same lowest-first pop order, same dry-pool refusal.
+        for _ in 0..3 {
+            assert_eq!(sharded.alloc(), mono.alloc());
+        }
+        assert_eq!(sharded.alloc(), None);
+        assert_eq!(mono.alloc(), None);
+        assert_eq!(sharded.release(1), mono.release(1));
+        sharded.free_page(1);
+        mono.free_page(1);
+        assert_eq!(sharded.alloc(), mono.alloc());
+        sharded.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn alloc_prefers_home_shard_then_spills_most_free() {
+        let mut p = ShardedBlockPool::new(4, 4, 2); // shards {0,1}, {2,3}
+        // No preference: balance picks shard 0 (tie → lowest index).
+        let a = p.alloc_prefer(None).unwrap();
+        assert_eq!(p.shard_of(a), 0);
+        // Home preference sticks while the arena has pages.
+        let b = p.alloc_prefer(Some(0)).unwrap();
+        assert_eq!(p.shard_of(b), 0);
+        // Home dry: spill to the other shard, not a refusal.
+        let c = p.alloc_prefer(Some(0)).unwrap();
+        assert_eq!(p.shard_of(c), 1);
+        let d = p.alloc_prefer(Some(0)).unwrap();
+        assert_eq!(p.shard_of(d), 1);
+        assert_eq!(p.alloc_prefer(Some(0)), None, "all arenas dry");
+        assert_eq!(p.free_count(), 0);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn per_shard_state_ops_route_to_the_owning_arena() {
+        let mut p = ShardedBlockPool::new(4, 8, 2);
+        let a = p.alloc_prefer(Some(1)).unwrap();
+        assert_eq!(p.shard_of(a), 1);
+        assert_eq!(p.state(a), PageState::Live);
+        p.retain(a);
+        assert_eq!(p.refs(a), 2);
+        assert_eq!(p.release(a), 1);
+        assert_eq!(p.release(a), 0);
+        p.park_cached(a);
+        assert_eq!(p.state(a), PageState::Cached);
+        assert_eq!(p.shard_cached(1), 1);
+        assert_eq!(p.shard_cached(0), 0);
+        p.unpark(a);
+        assert_eq!(p.refs(a), 1);
+        p.release(a);
+        p.park_cached(a);
+        p.evict_cached(a);
+        assert_eq!(p.state(a), PageState::Free);
+        let v = p.views();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[1].free_pages, 2);
+        assert_eq!(v[1].headroom(), 2);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn most_free_shard_tracks_pressure() {
+        let mut p = ShardedBlockPool::new(6, 4, 3);
+        assert_eq!(p.most_free_shard(), Some(0), "tie breaks low");
+        let _ = p.alloc_prefer(Some(0)).unwrap();
+        assert_eq!(p.most_free_shard(), Some(1));
+        let _ = p.alloc_prefer(Some(1)).unwrap();
+        let _ = p.alloc_prefer(Some(2)).unwrap();
+        assert_eq!(p.most_free_shard(), Some(0), "all at 1 free");
+        for s in 0..3 {
+            let _ = p.alloc_prefer(Some(s)).unwrap();
+        }
+        assert_eq!(p.most_free_shard(), None);
+    }
+}

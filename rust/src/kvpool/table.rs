@@ -61,6 +61,13 @@ impl BlockTable {
         self.pages.get(idx).copied()
     }
 
+    /// Page backing the table's final mapped block — the page whose
+    /// shard decode growth prefers (sharded pools keep a sequence's
+    /// tail co-located unless its home arena runs dry).
+    pub fn last_page(&self) -> Option<PageId> {
+        self.pages.last().copied()
+    }
+
     /// Map block `idx` to a new page (copy-on-write fork).
     pub fn remap(&mut self, idx: usize, page: PageId) {
         self.pages[idx] = page;

@@ -24,7 +24,10 @@
 //!                    over N simulated workers under each routing
 //!                    policy (round-robin / least-loaded /
 //!                    prefix-affinity) and prints aggregate hit rate +
-//!                    simulated TTFT/TBT per policy; `--bench-json`
+//!                    simulated TTFT/TBT per policy; `--shards D`
+//!                    splits every page budget across D device arenas
+//!                    and prints the sharded-vs-monolithic capacity
+//!                    table with per-shard occupancy; `--bench-json`
 //!                    writes the metrics for the CI perf gate.
 
 use anyhow::{bail, Result};
@@ -36,7 +39,8 @@ use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, render_replica_reports,
                                    Router, RouterConfig};
 use mmserve::kvpool::replay::{render_chunk_comparison, render_comparison,
-                              replay, ReplayConfig, ReplayResult};
+                              render_shard_comparison, replay,
+                              ReplayConfig, ReplayResult};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
@@ -238,6 +242,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              "chunked prefill: max new prompt tokens per tick (0 = whole)",
              Some("0"))
         .opt("replicas", "worker threads per model family", Some("1"))
+        .opt("shards",
+             "device arenas each worker's KV page budget is split across",
+             Some("1"))
         .opt("policy",
              "replica routing: round-robin|least-loaded|prefix-affinity",
              Some("prefix-affinity"))
@@ -263,11 +270,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
     }
     let replicas = a.get_usize("replicas", 1).max(1);
+    let shards = a.get_usize("shards", 1).max(1);
     let policy = parse_policy(&a)?;
 
     println!(
         "starting router: models={models:?} opt=[{opt}] \
-         replicas={replicas} policy={policy}"
+         replicas={replicas} shards={shards} policy={policy}"
     );
     let router = Router::start(
         &mmserve::artifacts_dir(),
@@ -278,7 +286,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             batch: a.get_usize("batch", 4),
             prefill_budget: a.get_usize("prefill-budget", 0),
             chunk_prefill: a.get_usize("chunk-prefill", 0),
-            kv: KvPoolConfig::default(),
+            kv: KvPoolConfig { shards, ..KvPoolConfig::default() },
             tracer: None,
             replicas,
             policy,
@@ -390,6 +398,9 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
              "chunked prefill: max new prompt tokens per tick (0 = whole)",
              Some("0"))
         .opt("replicas", "worker threads per model family", Some("1"))
+        .opt("shards",
+             "device arenas each worker's KV page budget is split across",
+             Some("1"))
         .opt("policy",
              "replica routing: round-robin|least-loaded|prefix-affinity",
              Some("prefix-affinity"))
@@ -409,6 +420,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     let max_new = a.get_usize("max-new", 16);
     let out = a.get_or("out", "trace.json");
     let replicas = a.get_usize("replicas", 1).max(1);
+    let shards = a.get_usize("shards", 1).max(1);
     let policy = parse_policy(&a)?;
 
     // Tracing starts disabled so the compile-heavy warmup pass doesn't
@@ -431,7 +443,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             batch: a.get_usize("batch", 4),
             prefill_budget: 0,
             chunk_prefill: a.get_usize("chunk-prefill", 0),
-            kv: KvPoolConfig::default(),
+            kv: KvPoolConfig { shards, ..KvPoolConfig::default() },
             tracer: Some(tracer.clone()),
             replicas,
             policy,
@@ -502,6 +514,8 @@ fn replay_json(r: &ReplayResult) -> Json {
         ("prefix_hit_tokens".into(),
          Json::Num(r.stats.prefix_hit_tokens as f64)),
         ("mean_occupancy".into(), Json::Num(r.mean_occupancy)),
+        ("mean_pool_utilization".into(),
+         Json::Num(r.mean_pool_utilization)),
         ("mean_tbt".into(), Json::Num(r.tbt.mean())),
         ("p99_tbt".into(), Json::Num(r.tbt.percentile(99.0))),
         ("mean_ttft".into(), Json::Num(r.ttft.mean())),
@@ -509,6 +523,10 @@ fn replay_json(r: &ReplayResult) -> Json {
         ("completed".into(), Json::Num(r.completed as f64)),
         ("dropped".into(), Json::Num(r.dropped as f64)),
         ("sim_time".into(), Json::Num(r.sim_time)),
+        ("shard_spills".into(), Json::Num(r.stats.shard_spills as f64)),
+        ("shard_utilization".into(), Json::Arr(
+            r.shard_utilization.iter().map(|&u| Json::Num(u)).collect(),
+        )),
     ])
 }
 
@@ -532,10 +550,19 @@ fn routing_json(r: &RoutingReplayResult) -> Json {
 }
 
 /// The `--bench-json` document: config echo, single-worker paged vs
-/// dense metrics, and (with `--replicas > 1`) per-policy fleet metrics.
+/// dense metrics, the sharded run (with `--shards > 1`), and (with
+/// `--replicas > 1`) per-policy fleet metrics.
 fn bench_json(cfg: &ReplayConfig, paged: &ReplayResult,
-              dense: &ReplayResult,
+              dense: &ReplayResult, sharded: Option<&ReplayResult>,
+              shards: usize,
               routing: &[RoutingReplayResult]) -> Json {
+    let mut kvpool = vec![
+        ("paged".into(), replay_json(paged)),
+        ("dense".into(), replay_json(dense)),
+    ];
+    if let Some(s) = sharded {
+        kvpool.push(("sharded".into(), replay_json(s)));
+    }
     let mut root = vec![
         ("config".into(), Json::from_obj(vec![
             ("requests".into(), Json::Num(cfg.requests as f64)),
@@ -544,12 +571,10 @@ fn bench_json(cfg: &ReplayConfig, paged: &ReplayResult,
             ("slots".into(), Json::Num(cfg.batch_slots as f64)),
             ("system_prompt_len".into(),
              Json::Num(cfg.system_prompt_len as f64)),
+            ("shards".into(), Json::Num(shards as f64)),
             ("seed".into(), Json::Num(cfg.seed as f64)),
         ])),
-        ("kvpool".into(), Json::from_obj(vec![
-            ("paged".into(), replay_json(paged)),
-            ("dense".into(), replay_json(dense)),
-        ])),
+        ("kvpool".into(), Json::from_obj(kvpool)),
     ];
     if !routing.is_empty() {
         let policies: Vec<(String, Json)> = routing
@@ -559,6 +584,7 @@ fn bench_json(cfg: &ReplayConfig, paged: &ReplayResult,
         root.push(("routing".into(), Json::from_obj(vec![
             ("replicas".into(),
              Json::Num(routing[0].replicas as f64)),
+            ("shards".into(), Json::Num(shards as f64)),
             ("policies".into(), Json::from_obj(policies)),
         ])));
     }
@@ -586,6 +612,9 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
          Some("0"))
     .opt("replicas",
          "simulated workers for the routing-policy comparison (1 = off)",
+         Some("1"))
+    .opt("shards",
+         "device arenas the page budget is split across (1 = monolithic)",
          Some("1"))
     .opt("tenants",
          "distinct shared system prompts for the routing comparison",
@@ -615,6 +644,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         ..ReplayConfig::default()
     };
     let replicas = a.get_usize("replicas", 1).max(1);
+    let shards = a.get_usize("shards", 1).max(1);
     println!(
         "== kvpool replay: {} requests, {}% long, {} shared system-prompt \
          tokens ==",
@@ -628,6 +658,9 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         cfg.total_pages * cfg.page_size,
         cfg.dense_slots()
     );
+    // `paged` stays the monolithic (1-arena) run so its metrics remain
+    // comparable release over release; `--shards D` adds a sharded run
+    // next to it below.
     let paged = replay(&cfg, true);
     let dense = replay(&cfg, false);
     println!("{}", render_comparison(&paged, &dense));
@@ -636,6 +669,21 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     // summed aggregate below).
     println!("\n== pool counters (single worker, this replay only) ==");
     println!("{}", paged.stats.render());
+
+    // Sharded run: the same budget split across `--shards` device
+    // arenas — per-shard occupancy, spills, and the capacity parity
+    // with the monolithic arena.
+    let mut sharded: Option<ReplayResult> = None;
+    if shards > 1 {
+        let s = replay(&ReplayConfig { shards, ..cfg.clone() }, true);
+        println!(
+            "\n== sharded pool: same {} pages across {shards} device \
+             arenas ==",
+            cfg.total_pages
+        );
+        println!("{}", render_shard_comparison(&paged, &s, shards));
+        sharded = Some(s);
+    }
 
     if chunk > 0 {
         // Same mix, chunked admission: the prefill/decode-interference
@@ -658,6 +706,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         let rcfg = RoutingReplayConfig {
             base: ReplayConfig {
                 tenants: a.get_usize("tenants", 4).max(1),
+                shards,
                 ..cfg.clone()
             },
             replicas,
@@ -665,9 +714,9 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         };
         routing_results = compare_policies(&rcfg);
         println!(
-            "\n== replica routing: {} workers, {} tenants, per-policy \
-             (simulated clock) ==",
-            replicas, rcfg.base.tenants
+            "\n== replica routing: {} workers ({} shards each), {} \
+             tenants, per-policy (simulated clock) ==",
+            replicas, shards, rcfg.base.tenants
         );
         println!("{}", render_policy_comparison(&routing_results));
         let affinity = routing_results
@@ -683,7 +732,8 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
 
     let json_path = a.get_or("bench-json", "");
     if !json_path.is_empty() {
-        let json = bench_json(&cfg, &paged, &dense, &routing_results);
+        let json = bench_json(&cfg, &paged, &dense, sharded.as_ref(),
+                              shards, &routing_results);
         std::fs::write(&json_path, json.to_string())?;
         println!("\nwrote replay metrics to {json_path}");
     }

@@ -20,9 +20,14 @@
 //!   without touching worker-owned engines: lock-free depth counters
 //!   plus a mutex-protected [`PrefixSnapshot`] (the resident
 //!   block-hash set from `KvPool::resident_hashes`, republished every
-//!   scheduler tick). A stale or never-published snapshot probes as
-//!   zero blocks — routing falls back to least-loaded, it never
-//!   blocks and never errors.
+//!   scheduler tick). A sharded worker publishes the set *per device
+//!   shard* plus a per-shard live-page occupancy gauge
+//!   ([`ReplicaCell::publish_shards`]); the probe then scores the
+//!   replica's whole shard set — warmth is the union across its
+//!   arenas, and among warmth/depth ties a prefix concentrated on
+//!   fewer shards wins ([`PrefixSnapshot::probe_shards`]). A stale or
+//!   never-published snapshot probes as zero blocks — routing falls
+//!   back to least-loaded, it never blocks and never errors.
 //! * [`replay`] — the deviceless multi-worker replay that compares
 //!   policies on the simulated clock (`mmserve kv --replicas N`).
 //!
@@ -91,11 +96,16 @@ impl std::fmt::Display for RoutingPolicy {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ReplicaView {
     /// Leading full blocks of the prompt resident in the replica's
-    /// prefix cache (0 when unknown: dense pool, stale snapshot, or a
-    /// non-probeable input).
+    /// prefix cache — the union over its device shards (0 when
+    /// unknown: dense pool, stale snapshot, or a non-probeable input).
     pub cached_blocks: usize,
     /// Outstanding requests: channel-queued + worker backlog.
     pub depth: usize,
+    /// Distinct device shards holding the matched blocks (0 when
+    /// nothing matched, 1 on a monolithic pool). Among replicas tied
+    /// on warmth *and* depth, the one whose warm prefix sits on fewer
+    /// devices wins — its admission reads fewer arenas.
+    pub shard_spread: usize,
 }
 
 /// Full preference order over replicas for one request.
@@ -119,12 +129,17 @@ pub fn rank(policy: RoutingPolicy, views: &[ReplicaView], cursor: u64)
             order.sort_by_key(|&i| (views[i].depth, i));
         }
         RoutingPolicy::PrefixAffinity => {
-            // Reverse(cached_blocks) ranks the warmest cache first;
-            // with all-zero probes the key degenerates to
-            // (depth, index) — the least-loaded fallback.
+            // Reverse(cached_blocks) ranks the warmest cache first —
+            // warmth is the *shard-set* score (blocks resident across
+            // the replica's arenas, union) — then queue depth, then
+            // shard spread (a prefix concentrated on fewer devices
+            // beats one scattered across the set), then index. With
+            // all-zero probes the key degenerates to (depth, index) —
+            // the least-loaded fallback; on monolithic pools spread is
+            // uniform and the pre-shard ordering is unchanged.
             order.sort_by_key(|&i| {
                 (std::cmp::Reverse(views[i].cached_blocks),
-                 views[i].depth, i)
+                 views[i].depth, views[i].shard_spread, i)
             });
         }
     }
@@ -139,8 +154,21 @@ pub fn rank(policy: RoutingPolicy, views: &[ReplicaView], cursor: u64)
 pub struct PrefixSnapshot {
     /// Tokens per KV page (0 = never published / dense pool).
     pub page_size: usize,
-    /// Chain hashes of resident full blocks.
+    /// Chain hashes of resident full blocks — the union over the
+    /// worker's device shards (sharing inside one worker crosses its
+    /// shards, so the union is the warmth admission actually gets).
     pub resident: HashSet<u64>,
+    /// Resident hashes bucketed per device shard (length = the
+    /// worker's shard count; a monolithic pool publishes one bucket).
+    /// Deliberately stored alongside the aggregate `resident` set:
+    /// the union answers the hot membership probe in one lookup, the
+    /// buckets answer spread; a merged hash→shard map would halve the
+    /// memory but is not worth it at snapshot scale (a few hundred
+    /// hashes, single-digit shards).
+    pub per_shard: Vec<HashSet<u64>>,
+    /// Live pages per device shard at publish time — the per-shard
+    /// occupancy gauge `mmserve trace` prints per worker.
+    pub shard_live_pages: Vec<u64>,
     /// Publish generation (monotonic; 0 = never published).
     pub version: u64,
     /// The worker pool's prefix counters at publish time.
@@ -153,18 +181,35 @@ impl PrefixSnapshot {
     /// Leading full blocks of `tokens` resident in this snapshot.
     /// Chain hashing means the first miss ends the shared prefix, so
     /// the walk stops there. An unpublished snapshot probes as 0.
+    /// Defined as the block count of [`probe_shards`](Self::probe_shards)
+    /// so the scalar and shard-set probes can never disagree.
     pub fn probe(&self, tokens: &[i32]) -> usize {
+        self.probe_shards(tokens).0
+    }
+
+    /// Shard-set probe: `(leading resident blocks, distinct shards
+    /// holding them)`. The block count matches [`probe`](Self::probe);
+    /// the spread feeds the prefix-affinity depth tie-break (fewer
+    /// devices = cheaper reuse). A legacy single-set publish reports
+    /// spread 1 for any match.
+    pub fn probe_shards(&self, tokens: &[i32]) -> (usize, usize) {
         if self.page_size == 0 || self.resident.is_empty() {
-            return 0;
+            return (0, 0);
         }
         let mut n = 0;
+        let mut shards = HashSet::new();
         for h in block_hashes(tokens, self.page_size) {
             if !self.resident.contains(&h) {
                 break;
             }
+            if let Some(s) =
+                self.per_shard.iter().position(|set| set.contains(&h))
+            {
+                shards.insert(s);
+            }
             n += 1;
         }
-        n
+        (n, shards.len().max(usize::from(n > 0)))
     }
 }
 
@@ -238,12 +283,30 @@ impl ReplicaCell {
         self.routed.load(Ordering::Relaxed)
     }
 
-    /// Worker-side: republish the pool's resident-hash set + counters.
+    /// Worker-side: republish the pool's resident-hash set + counters
+    /// (monolithic form — one shard bucket, no occupancy gauge).
     pub fn publish(&self, page_size: usize, resident: HashSet<u64>,
                    lookups: u64, hits: u64, hit_tokens: u64) {
+        self.publish_shards(page_size, vec![resident], Vec::new(),
+                            lookups, hits, hit_tokens);
+    }
+
+    /// Worker-side: republish per-shard resident hashes + per-shard
+    /// live-page occupancy + counters. The union of the shard buckets
+    /// becomes the snapshot's aggregate resident set.
+    pub fn publish_shards(&self, page_size: usize,
+                          per_shard: Vec<HashSet<u64>>,
+                          shard_live_pages: Vec<u64>, lookups: u64,
+                          hits: u64, hit_tokens: u64) {
+        let resident: HashSet<u64> = per_shard
+            .iter()
+            .flat_map(|set| set.iter().copied())
+            .collect();
         let mut s = self.lock();
         s.page_size = page_size;
         s.resident = resident;
+        s.per_shard = per_shard;
+        s.shard_live_pages = shard_live_pages;
         s.version += 1;
         s.prefix_lookups = lookups;
         s.prefix_hits = hits;
@@ -253,6 +316,18 @@ impl ReplicaCell {
     /// Router-side probe: cached leading blocks for `tokens`.
     pub fn probe(&self, tokens: &[i32]) -> usize {
         self.lock().probe(tokens)
+    }
+
+    /// Router-side shard-set probe: `(cached leading blocks, distinct
+    /// shards holding them)`.
+    pub fn probe_shards(&self, tokens: &[i32]) -> (usize, usize) {
+        self.lock().probe_shards(tokens)
+    }
+
+    /// Last published per-shard live-page occupancy (empty until a
+    /// sharded worker publishes).
+    pub fn shard_occupancy(&self) -> Vec<u64> {
+        self.lock().shard_live_pages.clone()
     }
 
     /// Snapshot copy for reports (version, lookups, hits, hit tokens).
@@ -276,7 +351,7 @@ mod tests {
     use super::*;
 
     fn v(cached_blocks: usize, depth: usize) -> ReplicaView {
-        ReplicaView { cached_blocks, depth }
+        ReplicaView { cached_blocks, depth, shard_spread: 0 }
     }
 
     #[test]
@@ -312,6 +387,85 @@ mod tests {
         // Equal warmth → shallower queue first; equal depth → index.
         assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
                    vec![1, 0, 2, 3]);
+    }
+
+    /// Tentpole: among replicas tied on warmth and depth, the one
+    /// whose warm prefix is concentrated on fewer device shards wins;
+    /// warmth and depth still dominate spread.
+    #[test]
+    fn prefix_affinity_scores_shard_sets_behind_warmth_and_depth() {
+        let spread = |cached, depth, shard_spread| ReplicaView {
+            cached_blocks: cached,
+            depth,
+            shard_spread,
+        };
+        // Equal warmth + depth: spread 1 beats spread 3.
+        let views = [spread(4, 2, 3), spread(4, 2, 1), spread(4, 2, 2)];
+        assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
+                   vec![1, 2, 0]);
+        // Depth dominates spread; warmth dominates both.
+        let views = [spread(4, 5, 1), spread(4, 2, 3), spread(5, 9, 4)];
+        assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
+                   vec![2, 1, 0]);
+        // Monolithic pools (uniform spread) keep the pre-shard order.
+        let views = [spread(2, 5, 1), spread(2, 1, 1), spread(0, 0, 0)];
+        assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0),
+                   vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn snapshot_probe_shards_counts_device_spread() {
+        let tokens: Vec<i32> = (0..20).collect();
+        let hashes = block_hashes(&tokens, 4); // 5 full blocks
+        let snap = PrefixSnapshot {
+            page_size: 4,
+            resident: hashes[..4].iter().copied().collect(),
+            per_shard: vec![
+                hashes[..2].iter().copied().collect(),
+                hashes[2..4].iter().copied().collect(),
+            ],
+            version: 1,
+            ..PrefixSnapshot::default()
+        };
+        assert_eq!(snap.probe(&tokens), 4);
+        assert_eq!(snap.probe_shards(&tokens), (4, 2),
+                   "four blocks across two shards");
+        assert_eq!(snap.probe_shards(&tokens[..8]), (2, 1),
+                   "short prompt stays on shard 0");
+        assert_eq!(snap.probe_shards(&[9; 8]), (0, 0));
+        // A legacy publish (no shard buckets) still reports spread 1.
+        let legacy = PrefixSnapshot {
+            page_size: 4,
+            resident: hashes[..2].iter().copied().collect(),
+            version: 1,
+            ..PrefixSnapshot::default()
+        };
+        assert_eq!(legacy.probe_shards(&tokens), (2, 1));
+    }
+
+    #[test]
+    fn cell_publish_shards_unions_buckets_and_reports_occupancy() {
+        let cell = ReplicaCell::new();
+        let tokens: Vec<i32> = (0..16).collect();
+        let hashes = block_hashes(&tokens, 4); // 4 full blocks
+        cell.publish_shards(
+            4,
+            vec![
+                hashes[..3].iter().copied().collect(),
+                hashes[3..].iter().copied().collect(),
+            ],
+            vec![7, 2],
+            10, 6, 24,
+        );
+        assert_eq!(cell.probe(&tokens), 4, "probe sees the union");
+        assert_eq!(cell.probe_shards(&tokens), (4, 2));
+        assert_eq!(cell.shard_occupancy(), vec![7, 2]);
+        assert_eq!(cell.counters(), (1, 10, 6, 24));
+        // The monolithic publish keeps working (one bucket, no gauge).
+        cell.publish(4, hashes.iter().copied().collect(), 11, 7, 28);
+        assert_eq!(cell.probe_shards(&tokens), (4, 1));
+        assert!(cell.shard_occupancy().is_empty());
+        assert_eq!(cell.counters(), (2, 11, 7, 28));
     }
 
     #[test]

@@ -28,11 +28,24 @@ use crate::substrate::table::Table;
 
 use super::{rank, ReplicaView, RoutingPolicy};
 
+/// Kill one replica mid-run — the fail-over simulation hook. After
+/// `after_delivered` requests have been routed fleet-wide, `replica`
+/// crashes ([`SimWorker::kill`]): its unfinished requests are
+/// withdrawn (partial outputs discarded) and re-routed through the
+/// policy over the survivors, restarting from scratch — the recompute
+/// fail-over. Deterministic for a fixed seed and spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    pub replica: usize,
+    pub after_delivered: usize,
+}
+
 /// The multi-worker replay knobs.
 #[derive(Debug, Clone)]
 pub struct RoutingReplayConfig {
     /// Per-worker workload/pool sizing (each replica gets its own page
-    /// budget — the N-GPU model).
+    /// budget — the N-GPU model; `base.shards` splits each budget
+    /// across device arenas, making the workers sharded).
     pub base: ReplayConfig,
     pub replicas: usize,
     /// Arrivals routed per lockstep round. Spacing arrivals out is
@@ -44,6 +57,8 @@ pub struct RoutingReplayConfig {
     /// most one cold prefill per tenant instead of one per
     /// (tenant, replica) pair.
     pub arrivals_per_round: usize,
+    /// Optional mid-run replica crash (fail-over testing).
+    pub kill: Option<KillSpec>,
 }
 
 impl Default for RoutingReplayConfig {
@@ -58,6 +73,7 @@ impl Default for RoutingReplayConfig {
             },
             replicas: 2,
             arrivals_per_round: 1,
+            kill: None,
         }
     }
 }
@@ -91,6 +107,31 @@ impl RoutingReplayResult {
     }
 }
 
+/// Rank the fleet for one request and pick the first *live* replica —
+/// the simulated analogue of the router's dead-channel fail-over walk
+/// (`rank` is a full permutation, so any live replica is reachable).
+fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
+             tokens: &[i32], cursor: u64) -> Option<usize> {
+    let views: Vec<ReplicaView> = workers
+        .iter()
+        .map(|w| {
+            let (cached_blocks, shard_spread) = if w.is_dead() {
+                (0, 0)
+            } else {
+                w.probe_shards(tokens)
+            };
+            ReplicaView {
+                cached_blocks,
+                depth: w.depth(),
+                shard_spread,
+            }
+        })
+        .collect();
+    rank(policy, &views, cursor)
+        .into_iter()
+        .find(|&i| !workers[i].is_dead())
+}
+
 /// Run the workload through `cfg.replicas` simulated workers under
 /// `policy`. Deterministic: same config + policy → same result.
 pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
@@ -100,10 +141,12 @@ pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
     let mut workers: Vec<SimWorker> =
         (0..n).map(|_| SimWorker::new(&cfg.base, true)).collect();
     let mut routed = vec![0usize; n];
+    let mut dropped_unroutable = 0usize;
     let requests: Vec<SimRequest> = generate_workload(&cfg.base);
     let mut next = 0usize;
     let mut cursor = 0u64;
     let mut guard = 0u64;
+    let mut killed = false;
 
     while (next < requests.len()
         || workers.iter().any(|w| w.has_work()))
@@ -116,18 +159,63 @@ pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
                 break;
             }
             let req = &requests[next];
-            let views: Vec<ReplicaView> = workers
-                .iter()
-                .map(|w| ReplicaView {
-                    cached_blocks: w.probe(&req.tokens),
-                    depth: w.depth(),
-                })
-                .collect();
-            let pick = rank(policy, &views, cursor)[0];
-            cursor += 1;
-            workers[pick].deliver(req);
-            routed[pick] += 1;
             next += 1;
+            let pick = route_one(&workers, policy, &req.tokens, cursor);
+            cursor += 1;
+            match pick {
+                Some(i) => {
+                    workers[i].deliver(req);
+                    routed[i] += 1;
+                }
+                None => dropped_unroutable += 1,
+            }
+        }
+        // ---- mid-run crash (fail-over sim) -------------------------
+        if let Some(k) = cfg.kill {
+            // A spec naming a replica that does not exist — or a
+            // trigger point the workload never reaches — would make
+            // the "crash" a silent no-op and the fail-over assertions
+            // vacuous — reject both loudly instead.
+            assert!(
+                k.replica < workers.len(),
+                "KillSpec.replica {} out of range for {} replicas",
+                k.replica,
+                workers.len()
+            );
+            assert!(
+                k.after_delivered <= requests.len(),
+                "KillSpec.after_delivered {} can never fire: only {} \
+                 requests in the workload",
+                k.after_delivered,
+                requests.len()
+            );
+            if !killed && next >= k.after_delivered {
+                killed = true;
+                if !workers[k.replica].is_dead() {
+                    let orphans = workers[k.replica].kill();
+                    // Re-route every withdrawn request over the
+                    // survivors; it restarts from scratch there (the
+                    // recompute fail-over — no request is dropped
+                    // while any replica lives).
+                    for id in orphans {
+                        let Some(req) =
+                            requests.iter().find(|r| r.id == id)
+                        else {
+                            continue;
+                        };
+                        let pick = route_one(&workers, policy,
+                                             &req.tokens, cursor);
+                        cursor += 1;
+                        match pick {
+                            Some(i) => {
+                                workers[i].deliver(req);
+                                routed[i] += 1;
+                            }
+                            None => dropped_unroutable += 1,
+                        }
+                    }
+                }
+            }
         }
         // ---- one lockstep tick per busy worker ---------------------
         for w in workers.iter_mut() {
@@ -147,7 +235,9 @@ pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
     let mut tbt = Histogram::new();
     let mut outputs = HashMap::new();
     let mut completed = 0;
-    let mut dropped = 0;
+    // Requests no live replica could take (whole fleet dead) count as
+    // dropped — they must never vanish silently.
+    let mut dropped = dropped_unroutable;
     let mut sim_time = 0.0f64;
     for r in &per_worker {
         for &v in r.ttft.samples() {
@@ -284,6 +374,16 @@ pub fn render_worker_counters(result: &RoutingReplayResult) -> String {
         s.capacity_wait_ticks.to_string()
     }));
     t.row(&row("sequences admitted", &|s| s.seqs_admitted.to_string()));
+    t.row(&row("shard spills", &|s| s.shard_spills.to_string()));
+    // Per-shard occupancy (mean live fraction per arena), per worker.
+    let mut cells = vec!["mean shard occupancy".to_string()];
+    for r in &result.per_worker {
+        cells.push(crate::kvpool::replay::render_shard_util(
+            &r.shard_utilization,
+        ));
+    }
+    cells.push("-".into());
+    t.row(&cells);
     t.render()
 }
 
@@ -378,6 +478,102 @@ mod tests {
         assert_eq!(r.completed, cfg.base.requests);
         // Fleet aggregate of one worker is that worker's counters.
         assert_eq!(r.fleet.prefix_hits, r.per_worker[0].stats.prefix_hits);
+    }
+
+    /// Satellite: kill a replica mid-workload — no request may be
+    /// dropped (orphans re-route to survivors and restart from
+    /// scratch), and the decoded streams stay exactly the no-kill
+    /// streams (seeded, deterministic): fail-over moves work, it must
+    /// never change results.
+    #[test]
+    fn replica_crash_fails_over_without_losing_requests() {
+        let cfg = RoutingReplayConfig {
+            kill: Some(KillSpec { replica: 1, after_delivered: 20 }),
+            ..RoutingReplayConfig::default()
+        };
+        let baseline =
+            routing_replay(&RoutingReplayConfig::default(),
+                           RoutingPolicy::PrefixAffinity);
+        let crashed =
+            routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        let n = cfg.base.requests;
+        assert_eq!(crashed.completed, n, "no request lost to the crash");
+        assert_eq!(crashed.dropped, 0);
+        assert_eq!(crashed.outputs.len(), n);
+        assert_eq!(crashed.outputs, baseline.outputs,
+                   "fail-over must not change decoded tokens");
+        // The survivor carried the evacuated work.
+        assert!(crashed.per_worker[0].completed
+                    > baseline.per_worker[0].completed,
+                "survivor picked up the dead replica's requests");
+        // Deterministic: same spec, same result.
+        let again = routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(again.outputs, crashed.outputs);
+        assert_eq!(again.routed, crashed.routed);
+    }
+
+    /// Fail-over under every policy, over *sharded* workers: the
+    /// lockstep sim keeps all requests and streams intact regardless
+    /// of how the policy spreads them.
+    #[test]
+    fn replica_crash_fails_over_under_every_policy_sharded() {
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                tenants: 2,
+                shards: 2,
+                ..ReplayConfig::default()
+            },
+            replicas: 3,
+            kill: Some(KillSpec { replica: 0, after_delivered: 30 }),
+            ..RoutingReplayConfig::default()
+        };
+        let n = cfg.base.requests;
+        let mut streams: Option<HashMap<u64, Vec<i32>>> = None;
+        for policy in RoutingPolicy::ALL {
+            let r = routing_replay(&cfg, policy);
+            assert_eq!(r.completed, n, "{policy}");
+            assert_eq!(r.dropped, 0, "{policy}");
+            if let Some(s) = &streams {
+                assert_eq!(&r.outputs, s, "{policy} changed streams");
+            } else {
+                streams = Some(r.outputs);
+            }
+        }
+    }
+
+    /// Tentpole: the lockstep comparison over sharded workers — the
+    /// policy ranking runs on shard-set probes, every worker reports
+    /// per-shard occupancy, and prefix-affinity still strictly beats
+    /// round-robin on the aggregate hit rate with identical outputs.
+    #[test]
+    fn sharded_workers_keep_the_affinity_win_and_report_occupancy() {
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                tenants: 2,
+                shards: 2,
+                ..ReplayConfig::default()
+            },
+            ..RoutingReplayConfig::default()
+        };
+        let rr = routing_replay(&cfg, RoutingPolicy::RoundRobin);
+        let pa = routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(rr.dropped + pa.dropped, 0);
+        assert_eq!(rr.completed, cfg.base.requests);
+        assert_eq!(pa.completed, cfg.base.requests);
+        assert!(
+            pa.agg_hit_rate() > rr.agg_hit_rate(),
+            "sharded workers: affinity {:.3} !> round-robin {:.3}",
+            pa.agg_hit_rate(),
+            rr.agg_hit_rate()
+        );
+        assert_eq!(pa.outputs, rr.outputs);
+        for w in &pa.per_worker {
+            assert_eq!(w.shard_utilization.len(), 2,
+                       "per-shard occupancy per worker");
+        }
+        let table = render_worker_counters(&pa);
+        assert!(table.contains("mean shard occupancy"));
+        assert!(table.contains("shard spills"));
     }
 
     #[test]

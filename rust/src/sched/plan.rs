@@ -435,6 +435,7 @@ mod tests {
                 page_size: 4,
                 available_pages: 3,
                 reserved_growth: 1,
+                shards: 1,
             }),
         };
         let mut s = Scheduler::new(SchedConfig {
@@ -457,6 +458,48 @@ mod tests {
         let p = s.plan(&cap);
         assert_eq!(p.chunks.len(), 1);
         assert!(!p.blocked_on_capacity);
+    }
+
+    /// Tentpole: chunked-plan page gating over a *sharded* pool. The
+    /// headroom the planner gates chunks against is the per-shard
+    /// headroom summed (pages spill across arenas, so the sum is
+    /// exactly grantable), and a plan over a sharded view is identical
+    /// to one over a monolithic view with the same aggregate.
+    #[test]
+    fn chunked_gating_over_sharded_view_matches_aggregate_headroom() {
+        use crate::kvpool::KvPool;
+        let sharded = KvPool::with_shards(8, 4, 64, 2);
+        let cap = sharded.capacity_view(2, 0);
+        let b = cap.pages.unwrap();
+        assert_eq!(b.shards, 2);
+        assert_eq!(
+            b.available_pages,
+            sharded
+                .shard_views()
+                .iter()
+                .map(|v| v.headroom())
+                .sum::<usize>(),
+            "gated headroom is the per-shard sum"
+        );
+        let plan_under = |cap: &CapacityView| {
+            let mut s = Scheduler::new(SchedConfig {
+                prefill_budget: 0,
+                chunk: 64,
+            });
+            s.enqueue(rq(1, 20)); // 20+1 tokens → 6 of the 8 pages
+            s.enqueue(rq(2, 20)); // 6 more pages > the 2 left → blocked
+            s.plan(cap)
+        };
+        let p = plan_under(&cap);
+        assert_eq!(p.chunks.len(), 1);
+        assert_eq!(p.chunks[0].request, 1);
+        assert!(p.blocked_on_capacity);
+        // Same aggregate, one arena: byte-identical plan.
+        let mono = KvPool::new(8, 4, 64);
+        let q = plan_under(&mono.capacity_view(2, 0));
+        assert_eq!(p.chunks, q.chunks);
+        assert_eq!(p.blocked_on_capacity, q.blocked_on_capacity);
+        assert_eq!(p.prefill_tokens, q.prefill_tokens);
     }
 
     #[test]
@@ -491,6 +534,7 @@ mod tests {
                 page_size: 4,
                 available_pages: 100,
                 reserved_growth: 0,
+                shards: 1,
             }),
         };
         // [0, 5) not last: 2 pages. Continuing [5, 8): still page 2 —
@@ -558,6 +602,7 @@ mod tests {
                             page_size: *page_size,
                             available_pages: pages.saturating_sub(used),
                             reserved_growth: fed.len(),
+                            shards: 1,
                         }),
                     };
                     let plan = s.plan(&cap);

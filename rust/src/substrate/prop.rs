@@ -74,12 +74,21 @@ impl<A: Shrink, B: Shrink> Shrink for (A, B) {
 
 /// Run a property over `cases` random inputs. `gen` draws an input from
 /// the RNG; `prop` returns Err(reason) on violation.
+///
+/// The `PROPTEST_CASES` environment variable overrides `cases` when it
+/// parses to a positive integer — CI runs the property suites at 512
+/// cases in a dedicated step while local runs keep the fast defaults.
 pub fn prop_check<T, G, P>(cases: usize, seed: u64, mut gen: G, mut prop: P)
 where
     T: Shrink + Debug,
     G: FnMut(&mut Rng) -> T,
     P: FnMut(&T) -> Result<(), String>,
 {
+    let cases = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(cases);
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let input = gen(&mut rng);

