@@ -1,13 +1,19 @@
 //! Telemetry overhead smoke bench: the disabled-tracing path must be
 //! indistinguishable from no tracing at all on the decode hot loop.
 //!
-//! Three regimes over the same synthetic inner loop:
+//! Five regimes over the same synthetic inner loop:
 //! * `no_tracer`      — the loop with no telemetry calls at all,
 //! * `tracer_off`     — spans requested but tracing disabled (the
 //!                      production default; one relaxed atomic load),
-//! * `tracer_on`      — spans recorded (the cost you opt into).
+//! * `tracer_on`      — spans recorded (the cost you opt into),
+//! * `live_off`       — live-registry publishes against a disabled
+//!                      registry (must match the tracer_off contract:
+//!                      one relaxed load, no lock, no allocation),
+//! * `live_on`        — cached-handle publishes into an enabled
+//!                      registry (counter bump + sketch bucket).
 
 use mmserve::substrate::bench::{black_box, BenchSuite};
+use mmserve::telemetry::live::LiveMetrics;
 use mmserve::telemetry::tracer::{Cat, Tracer};
 
 const ITERS: usize = 20_000;
@@ -55,6 +61,55 @@ fn main() {
     let recorded = on_tracer.drain().len();
     assert!(recorded >= ITERS, "enabled tracer must record spans");
 
+    let live_off = LiveMetrics::off();
+    let off_live = suite.bench("live_off", || {
+        let mut acc = 0.0;
+        for i in 0..ITERS {
+            live_off.inc("mmserve_ticks_total", &[("replica", "0")], 1);
+            live_off.observe("mmserve_tbt_ms", &[("replica", "0")],
+                             acc);
+            acc += step_work(i);
+        }
+        black_box(acc);
+    });
+    let snap = live_off.snapshot();
+    assert!(snap.counters.is_empty() && snap.sketches.is_empty(),
+            "disabled live registry must not materialize series");
+    // The disabled-mode gate: each publish is one relaxed atomic load.
+    // 250 ns/op is ~50× that — generous against bench noise, but a
+    // regression to lock-and-allocate-before-checking blows through it.
+    let ns_per_pub =
+        (off_live - base).max(0.0) * 1e9 / (ITERS as f64 * 2.0);
+    assert!(
+        ns_per_pub < 250.0,
+        "disabled live-registry publish costs {ns_per_pub:.1} ns/op; \
+         the one-relaxed-load gate is broken"
+    );
+
+    let live_on = LiveMetrics::new();
+    let ticks = live_on.counter("mmserve_ticks_total",
+                                &[("replica", "0")]);
+    let tbt = live_on.sketch("mmserve_tbt_ms", &[("replica", "0")]);
+    let on_live = suite.bench("live_on", || {
+        let mut acc = 0.0;
+        for i in 0..ITERS {
+            ticks.inc(1);
+            tbt.record(acc.abs() + 1.0);
+            acc += step_work(i);
+        }
+        black_box(acc);
+    });
+    assert!(ticks.get() >= ITERS as u64,
+            "enabled live registry must count");
+    assert!(tbt.count() >= ITERS as u64,
+            "enabled live registry must sketch");
+
+    println!(
+        "\n  live plane per-publish cost: disabled {:.1} ns, \
+         enabled (cached handles) {:.1} ns",
+        ns_per_pub,
+        (on_live - base).max(0.0) * 1e9 / (ITERS as f64 * 2.0)
+    );
     println!(
         "\n  per-step cost: baseline {:.1} ns, disabled {:.1} ns, \
          enabled {:.1} ns ({} spans recorded)",

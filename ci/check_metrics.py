@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""CI gate for the live-metrics Prometheus exposition.
+
+Reads METRICS.prom (written by `mmserve stats --metrics-out`) and
+hard-fails — same contract as check_perf.py, nothing is silently
+skipped — unless:
+
+1. Every required metric is present with the expected `# TYPE`
+   (counter / gauge / summary). A metric the sampler stops publishing
+   vanishes from dashboards and alerts without tripping any test;
+   this gate is what trips.
+
+2. Every sample of a required metric carries exactly the required
+   label keys (e.g. `mmserve_live_pages{replica,shard}`): a renamed
+   or dropped label silently forks the time series under scrape.
+
+3. Every summary ships its `quantile` samples plus the `_sum` /
+   `_count` pair, and every sample value parses as a finite float
+   (counters additionally non-negative).
+
+4. The run actually produced signal: ticks were published, requests
+   completed, and the TTFT sketch is non-empty. A wiring regression
+   that leaves the registry attached-but-unfed renders as all-zero
+   series — presence checks alone would pass it.
+"""
+
+import math
+import sys
+
+EXPOSITION = sys.argv[1] if len(sys.argv) > 1 else "METRICS.prom"
+
+# name -> (type, required label keys). Summary samples may also carry
+# the reserved `quantile` label; it is not part of the series schema.
+REQUIRED = {
+    "mmserve_ticks_total": ("counter", {"replica"}),
+    "mmserve_prefix_lookups_total": ("counter", {"replica"}),
+    "mmserve_prefix_hits_total": ("counter", {"replica"}),
+    "mmserve_capacity_wait_ticks_total": ("counter", {"replica"}),
+    "mmserve_preemptions_total": ("counter", {"replica"}),
+    "mmserve_evictions_total": ("counter", {"replica"}),
+    "mmserve_shard_spills_total": ("counter", {"replica"}),
+    "mmserve_requests_completed_total": ("counter", {"replica"}),
+    "mmserve_tokens_decoded_total": ("counter", {"replica"}),
+    "mmserve_enqueued_total": ("counter", {"replica"}),
+    "mmserve_admitted_total": ("counter", {"replica"}),
+    "mmserve_queue_depth": ("gauge", {"replica"}),
+    "mmserve_prefix_hit_rate": ("gauge", {"replica"}),
+    "mmserve_live_pages": ("gauge", {"replica", "shard"}),
+    "mmserve_free_pages": ("gauge", {"replica", "shard"}),
+    "mmserve_cached_pages": ("gauge", {"replica", "shard"}),
+    "mmserve_ttft_ms": ("summary", {"replica", "tenant"}),
+    "mmserve_tbt_ms": ("summary", {"replica", "tenant"}),
+}
+
+
+def parse_labels(body):
+    """`k1="v1",k2="v2"` -> dict (values may contain escapes)."""
+    labels = {}
+    i = 0
+    while i < len(body):
+        eq = body.index("=", i)
+        key = body[i:eq]
+        assert body[eq + 1] == '"', body
+        j = eq + 2
+        val = []
+        while body[j] != '"':
+            if body[j] == "\\":
+                j += 1
+            val.append(body[j])
+            j += 1
+        labels[key] = "".join(val)
+        i = j + 1
+        if i < len(body) and body[i] == ",":
+            i += 1
+    return labels
+
+
+def parse(text):
+    """-> (types: name->kind, samples: name->[(labels, value)])."""
+    types, samples = {}, {}
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split()
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        metric, _, value = line.rpartition(" ")
+        if "{" in metric:
+            name, _, rest = metric.partition("{")
+            labels = parse_labels(rest.rstrip("}"))
+        else:
+            name, labels = metric, {}
+        samples.setdefault(name, []).append((labels, float(value)))
+    return types, samples
+
+
+def main():
+    failures = []
+    try:
+        with open(EXPOSITION) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"::error::cannot read {EXPOSITION}: {e}")
+        sys.exit(1)
+
+    try:
+        types, samples = parse(text)
+    except (AssertionError, ValueError, IndexError) as e:
+        print(f"::error::{EXPOSITION} is not valid Prometheus "
+              f"text exposition: {e!r}")
+        sys.exit(1)
+
+    for name, (kind, keys) in sorted(REQUIRED.items()):
+        if types.get(name) != kind:
+            failures.append(
+                f"{name}: expected `# TYPE {name} {kind}`, "
+                f"got {types.get(name)!r}")
+            continue
+        rows = samples.get(name, [])
+        if not rows:
+            failures.append(f"{name}: no samples")
+            continue
+        for labels, value in rows:
+            got = set(labels) - {"quantile"}
+            if got != keys:
+                failures.append(
+                    f"{name}: label schema {sorted(got)} != "
+                    f"required {sorted(keys)}")
+                break
+            if not math.isfinite(value):
+                failures.append(f"{name}: non-finite sample {value}")
+                break
+            if kind == "counter" and value < 0:
+                failures.append(f"{name}: negative counter {value}")
+                break
+        if kind == "summary":
+            for suffix in ("_sum", "_count"):
+                if not samples.get(name + suffix):
+                    failures.append(f"{name}: missing {name}{suffix}")
+
+    def total(name):
+        return sum(v for _, v in samples.get(name, []))
+
+    if not failures:
+        if total("mmserve_ticks_total") <= 0:
+            failures.append("mmserve_ticks_total: no ticks published "
+                            "(sampler not wired?)")
+        if total("mmserve_requests_completed_total") <= 0:
+            failures.append("mmserve_requests_completed_total: zero — "
+                            "the replay completed nothing")
+        if total("mmserve_ttft_ms_count") <= 0:
+            failures.append("mmserve_ttft_ms: empty sketch — TTFT "
+                            "observation not wired")
+
+    if failures:
+        for f_ in failures:
+            print(f"::error::{f_}")
+        sys.exit(1)
+
+    n_series = sum(len(v) for v in samples.values())
+    print(f"metrics gate ok: {len(REQUIRED)} required metrics, "
+          f"{n_series} sample lines, "
+          f"{int(total('mmserve_ticks_total'))} ticks, "
+          f"{int(total('mmserve_requests_completed_total'))} requests")
+
+
+if __name__ == "__main__":
+    main()

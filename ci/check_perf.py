@@ -2,7 +2,8 @@
 """CI perf gate for the deterministic replay benchmarks.
 
 Reads BENCH_kvpool.json and BENCH_routing.json (written by
-`mmserve kv --bench-json`) and checks them three ways:
+`mmserve kv --bench-json`) plus BENCH_stats.json (written by
+`mmserve stats --bench-json`) and checks them three ways:
 
 1. Hard invariants that must hold on any commit:
    - no replayed request is dropped (monolithic, sharded, or routed),
@@ -10,7 +11,9 @@ Reads BENCH_kvpool.json and BENCH_routing.json (written by
    - prefix-affinity routing achieves a strictly higher aggregate
      prefix hit rate than round-robin,
    - the sharded replay completes exactly what the monolithic one does
-     (page placement must never change workload outcomes).
+     (page placement must never change workload outcomes),
+   - attaching the live metrics plane leaves the simulated clock
+     bit-identical (observation must never change scheduling).
 
 2. Required schema: every metric path listed under "schema" in
    ci/perf-baseline.json must exist in the fresh bench output. A
@@ -52,7 +55,12 @@ def main():
 
     kv = json.load(open("BENCH_kvpool.json"))
     rt = json.load(open("BENCH_routing.json"))
-    docs = {"BENCH_kvpool.json": kv, "BENCH_routing.json": rt}
+    st = json.load(open("BENCH_stats.json"))
+    docs = {
+        "BENCH_kvpool.json": kv,
+        "BENCH_routing.json": rt,
+        "BENCH_stats.json": st,
+    }
 
     # ---- hard invariants -------------------------------------------
     if dig(kv, "kvpool.paged.dropped") != 0:
@@ -81,6 +89,15 @@ def main():
     for policy in ("round-robin", "least-loaded", "prefix-affinity"):
         if dig(rt, f"routing.policies.{policy}.dropped") != 0:
             failures.append(f"routing replay ({policy}) dropped requests")
+    # The live metrics plane is pure observation: the instrumented
+    # replay's simulated clock must agree with the bare replay's
+    # exactly (seeded, simulated — any delta means sampling changed
+    # scheduling decisions).
+    if dig(st, "live.sim_time_delta") != 0:
+        failures.append(
+            "live metrics plane changed replay outcomes "
+            f"(sim_time_delta = {dig(st, 'live.sim_time_delta')!r})"
+        )
 
     base = json.load(open(BASELINE))
 

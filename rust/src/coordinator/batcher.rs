@@ -20,6 +20,9 @@
 use std::collections::VecDeque;
 
 use crate::kvpool::CapacityView;
+use crate::telemetry::live::sampler::{ADMITTED_TOTAL,
+                                      ENQUEUED_TOTAL};
+use crate::telemetry::live::{Counter, LiveMetrics};
 
 #[derive(Debug, Clone)]
 pub struct QueuedRequest {
@@ -48,6 +51,16 @@ impl PartialEq<QueuedRequest> for QueuedRequest {
 }
 impl Eq for QueuedRequest {}
 
+/// Cached live-metrics handles (queue-side counters). Held only when
+/// a live plane is attached; every hook checks the registry's enabled
+/// flag first (one relaxed load).
+#[derive(Debug)]
+struct LiveHooks {
+    live: LiveMetrics,
+    enqueued: Counter,
+    admitted: Counter,
+}
+
 /// Continuous batcher over a fixed slot count.
 #[derive(Debug)]
 pub struct Batcher {
@@ -56,6 +69,7 @@ pub struct Batcher {
     pub prefill_token_budget: usize,
     /// Total enqueued ever (stats).
     pub enqueued: u64,
+    hooks: Option<LiveHooks>,
 }
 
 impl Batcher {
@@ -64,11 +78,29 @@ impl Batcher {
             queue: VecDeque::new(),
             prefill_token_budget,
             enqueued: 0,
+            hooks: None,
         }
+    }
+
+    /// Attach the live-metrics plane: arrivals and per-tick admissions
+    /// become replica-labeled counters. Pure observation.
+    pub fn attach_live(&mut self, live: &LiveMetrics, replica: usize) {
+        let r = replica.to_string();
+        let labels = &[("replica", r.as_str())][..];
+        self.hooks = Some(LiveHooks {
+            enqueued: live.counter(ENQUEUED_TOTAL, labels),
+            admitted: live.counter(ADMITTED_TOTAL, labels),
+            live: live.clone(),
+        });
     }
 
     pub fn push(&mut self, r: QueuedRequest) {
         self.enqueued += 1;
+        if let Some(h) = &self.hooks {
+            if h.live.is_enabled() {
+                h.enqueued.inc(1);
+            }
+        }
         self.queue.push_back(r);
     }
 
@@ -151,6 +183,11 @@ impl Batcher {
             free -= 1;
         }
         adm.run_decode = cap.live_slots + adm.admit.len() > 0;
+        if let Some(h) = &self.hooks {
+            if h.live.is_enabled() && !adm.admit.is_empty() {
+                h.admitted.inc(adm.admit.len() as u64);
+            }
+        }
         adm
     }
 }
@@ -342,6 +379,34 @@ mod tests {
         assert_eq!(adm2.admit.len(), 1);
         assert_eq!(adm2.admit[0].id, 1);
         assert_eq!(b.pending(), 0);
+    }
+
+    /// The attached live plane counts arrivals and admissions without
+    /// touching admission decisions; a disabled registry stays at zero.
+    #[test]
+    fn live_hooks_count_enqueues_and_admissions() {
+        let live = LiveMetrics::new();
+        let mut b = Batcher::new(0);
+        b.attach_live(&live, 2);
+        for i in 0..4 {
+            b.push(rq(i, 10));
+        }
+        let adm = b.tick(&CapacityView::dense(3, 0));
+        assert_eq!(adm.admit.len(), 3);
+        let snap = live.snapshot();
+        let l = &[("replica", "2")][..];
+        assert_eq!(snap.counter(ENQUEUED_TOTAL, l), Some(4));
+        assert_eq!(snap.counter(ADMITTED_TOTAL, l), Some(3));
+
+        let off = LiveMetrics::off();
+        let mut b2 = Batcher::new(0);
+        b2.attach_live(&off, 0);
+        b2.push(rq(9, 10));
+        let _ = b2.tick(&CapacityView::dense(1, 0));
+        let snap = off.snapshot();
+        assert_eq!(snap.counter(ENQUEUED_TOTAL,
+                                &[("replica", "0")]),
+                   Some(0));
     }
 
     #[test]

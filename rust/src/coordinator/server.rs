@@ -46,6 +46,9 @@ use crate::sched::{ExecDims, PlannedChunk, SchedConfig, Scheduler,
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
+use crate::telemetry::live::sampler::ROUTED_TOTAL;
+use crate::telemetry::live::{FlightRecorder, LiveMetrics,
+                             OnlineAttribution, WorkerSampler};
 use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
 use super::batcher::QueuedRequest;
@@ -86,6 +89,14 @@ pub struct RouterConfig {
     /// spans for scheduling, tokenization, dispatch, and sampling.
     /// `None` (the default) keeps the serving path instrumentation-free.
     pub tracer: Option<Tracer>,
+    /// Live observability plane (`mmserve stats`, `--metrics-out`):
+    /// every worker publishes per-tick fleet samples, TTFT/TBT
+    /// sketches, and online idle-gap attribution into this shared
+    /// registry. `None` (the default) publishes nothing.
+    pub live: Option<LiveMetrics>,
+    /// Shared flight recorder: bounded ring of per-tick events dumped
+    /// on crash, preemption storm, or SIGTERM. `None` disables.
+    pub flight: Option<FlightRecorder>,
     /// Worker threads per model family (each with its own engine and
     /// KV pool). 1 (the default) is the seed topology.
     pub replicas: usize,
@@ -104,6 +115,8 @@ impl Default for RouterConfig {
             chunk_prefill: 0,
             kv: KvPoolConfig::default(),
             tracer: None,
+            live: None,
+            flight: None,
             replicas: 1,
             policy: RoutingPolicy::PrefixAffinity,
         }
@@ -204,6 +217,7 @@ pub struct Router {
     next_id: AtomicU64,
     policy: RoutingPolicy,
     route_tracer: Option<WorkerTracer>,
+    live: Option<LiveMetrics>,
 }
 
 impl Router {
@@ -211,6 +225,7 @@ impl Router {
         let n = cfg.replicas.max(1);
         let policy = cfg.policy;
         let route_tracer = cfg.tracer.as_ref().map(|t| t.worker("router"));
+        let live = cfg.live.clone();
         let mut models = HashMap::new();
         let mut handles = Vec::new();
         for model in cfg.models.clone() {
@@ -243,6 +258,7 @@ impl Router {
             next_id: AtomicU64::new(1),
             policy,
             route_tracer,
+            live,
         }
     }
 
@@ -276,7 +292,19 @@ impl Router {
             // saturate at 0 and then drift up one forever).
             replica.cell.note_routed();
             match replica.tx.send(item) {
-                Ok(()) => return Ok(rrx),
+                Ok(()) => {
+                    if let Some(live) = &self.live {
+                        if live.is_enabled() {
+                            let m = format!("{model:?}");
+                            let r = idx.to_string();
+                            live.inc(ROUTED_TOTAL,
+                                     &[("model", m.as_str()),
+                                       ("replica", r.as_str())],
+                                     1);
+                        }
+                    }
+                    return Ok(rrx);
+                }
                 // The replica's worker is gone; undo the accounting,
                 // recover the item, and offer it to the next choice.
                 Err(send_err) => {
@@ -392,7 +420,7 @@ fn worker_main(model: ModelKind, replica: usize, dir: &std::path::Path,
     }
     match model {
         ModelKind::Llama | ModelKind::Chameleon => {
-            decoder_worker(&engine, cfg, rx, &cell)
+            decoder_worker(&engine, cfg, rx, &cell, replica)
         }
         ModelKind::Seamless => seamless_worker(&engine, cfg, rx, &cell),
         ModelKind::Hstu => hstu_worker(&engine, rx, &cell),
@@ -721,7 +749,9 @@ fn build_feeds(batch: usize, slots: &PagedKvSlots, st: &WorkerState)
 fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
                              slots: &mut PagedKvSlots,
                              st: &mut WorkerState,
-                             tele: Option<&WorkerTracer>) -> Result<()> {
+                             tele: Option<&WorkerTracer>,
+                             sampler: Option<&WorkerSampler>)
+                             -> Result<()> {
     let dims = exec.plan_dims();
     // Admission blocked on pages: count the tick and mark the host
     // window so idle-gap attribution buckets it as KvCapacity. The
@@ -964,6 +994,7 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
         return Ok(());
     }
     let step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
+    let step_started = Instant::now();
     let feeds = build_feeds(dims.batch, slots, st);
     let logits = exec.decode_step(&feeds)?;
 
@@ -1021,8 +1052,25 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
             };
             slots.release(slot)?;
             st.sched.finished(req);
+            if let Some(s) = sampler {
+                s.observe_ttft_ms("-", job.ttft * 1e3);
+                s.note_completion(job.tokens.len() as u64);
+            }
             let resp = finish_decoder_response(&job);
             let _ = job.item.respond.send(Ok(resp));
+        }
+    }
+    // Live TBT: every slot still decoding advanced one token in this
+    // step's wall time (the post-hoc Sample-span histogram stays the
+    // exact source; this is the streaming approximation).
+    if let Some(s) = sampler {
+        if s.live().is_enabled() {
+            let dt_ms = step_started.elapsed().as_secs_f64() * 1e3;
+            let decoding =
+                st.jobs.iter().filter(|j| j.is_some()).count();
+            for _ in 0..decoding {
+                s.observe_tbt_ms("-", dt_ms);
+            }
         }
     }
     drop(step_span);
@@ -1030,7 +1078,8 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
 }
 
 fn decoder_worker(engine: &Engine, cfg: RouterConfig,
-                  rx: Receiver<WorkItem>, cell: &ReplicaCell)
+                  rx: Receiver<WorkItem>, cell: &ReplicaCell,
+                  replica: usize)
                   -> Result<()> {
     let session = DecoderSession::new(engine, cfg.opt)?;
     let dims = session.dims;
@@ -1079,6 +1128,25 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     // ticks skip rebuilding an identical snapshot.
     let mut published_stamp: Option<u64> = None;
     let tele = engine.tracer();
+    // Live observability plane: per-tick fleet samples, tenant-less
+    // TTFT/TBT sketches, and the online idle-gap fold over this
+    // worker's spans. Absent (the default) every hook is skipped; a
+    // disabled registry costs one relaxed load per hook.
+    let mut sampler = cfg.live.as_ref().map(|live| {
+        WorkerSampler::new(
+            live.clone(),
+            cfg.flight
+                .clone()
+                .unwrap_or_else(FlightRecorder::disabled),
+            replica,
+        )
+    });
+    if let Some(s) = &sampler {
+        st.sched.attach_live(s.live(), replica);
+    }
+    let mut online = OnlineAttribution::new();
+    let mut span_cursor = 0usize;
+    let mut tick_no = 0u64;
 
     loop {
         // Drain the queue without blocking while work is live.
@@ -1165,7 +1233,30 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
         } else {
             stalled = 0;
         }
-        run_tick(&mut exec, plan, &mut slots, &mut st, tele)?;
+        run_tick(&mut exec, plan, &mut slots, &mut st, tele,
+                 sampler.as_ref())?;
+        // End-of-tick publication: fleet sample, then fold the spans
+        // this tick produced into the online idle-gap attribution
+        // (span batches between ticks are quiescent, so the fold
+        // matches the post-hoc `Attribution` exactly).
+        if let Some(s) = sampler.as_mut() {
+            tick_no += 1;
+            let depth = st.sched.pending() + st.sched.in_flight();
+            let stats = slots.stats().cloned().unwrap_or_default();
+            let shards = slots
+                .pool()
+                .map(|p| p.shard_views())
+                .unwrap_or_default();
+            s.sample_tick(tick_no, depth, &stats, &shards);
+            if let Some(t) = tele {
+                if s.live().is_enabled() {
+                    let (cur, spans) = t.spans_since(span_cursor);
+                    span_cursor = cur;
+                    online.observe(&spans);
+                    online.publish(s.live(), s.replica());
+                }
+            }
+        }
     }
 }
 
@@ -1383,6 +1474,7 @@ mod tests {
             next_id: AtomicU64::new(1),
             policy,
             route_tracer: None,
+            live: None,
         }
     }
 

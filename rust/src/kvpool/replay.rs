@@ -32,6 +32,8 @@ use crate::sched::{SchedConfig, Scheduler};
 use crate::substrate::metrics::Histogram;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
+use crate::telemetry::live::{FlightRecorder, LiveMetrics,
+                             WorkerSampler};
 
 use super::{KvError, KvPoolConfig, PoolStats, PreemptMode};
 
@@ -234,6 +236,13 @@ pub struct SimWorker {
     outputs: HashMap<u64, Vec<i32>>,
     /// Crashed (fail-over sim): accepts no work, ticks are no-ops.
     dead: bool,
+    /// Tenant of each delivered request (TTFT/TBT sketch labels).
+    tenant_of: HashMap<u64, usize>,
+    /// Live-metrics publication point; pure observation — attaching
+    /// one never changes scheduling, clocks, or outputs.
+    sampler: Option<WorkerSampler>,
+    /// Ticks taken (the sampler's tick axis; counts no-op ticks too).
+    ticks_seen: u64,
 }
 
 impl SimWorker {
@@ -280,7 +289,20 @@ impl SimWorker {
             max_tick_prefill: 0,
             outputs: HashMap::new(),
             dead: false,
+            tenant_of: HashMap::new(),
+            sampler: None,
+            ticks_seen: 0,
         }
+    }
+
+    /// Attach a live-metrics sampler: every tick publishes queue
+    /// depth, pool counters and per-shard pages; TTFT/TBT go into
+    /// tenant-labeled streaming sketches; crashes and preemption
+    /// storms hit the sampler's flight recorder.
+    pub fn attach_sampler(&mut self, sampler: WorkerSampler) {
+        let replica = sampler.replica().parse().unwrap_or(0);
+        self.sched.attach_live(sampler.live(), replica);
+        self.sampler = Some(sampler);
     }
 
     /// Hand one request to this worker (enqueue + stage), arriving at
@@ -296,6 +318,7 @@ impl SimWorker {
             remaining: req.decode,
         });
         self.arrived.insert(req.id, self.now);
+        self.tenant_of.insert(req.id, req.tenant);
     }
 
     /// Anything queued, mid-prefill, or decoding? (A crashed worker
@@ -338,6 +361,9 @@ impl SimWorker {
     /// its histogram (the fleet TTFT merge is latency accounting, not
     /// the determinism witness — `outputs` is).
     pub fn kill(&mut self) -> Vec<u64> {
+        if let Some(s) = &self.sampler {
+            s.recorder().trigger("replica-crash");
+        }
         let mut ids: Vec<u64> = self
             .staging
             .keys()
@@ -370,6 +396,29 @@ impl SimWorker {
         if self.dead {
             return;
         }
+        self.ticks_seen += 1;
+        self.tick_inner();
+        self.sample_tick();
+    }
+
+    /// End-of-tick live-metrics publication (no-op without a sampler
+    /// or with both planes disabled — two relaxed loads).
+    fn sample_tick(&mut self) {
+        let Some(sampler) = self.sampler.as_mut() else { return };
+        let depth = self.sched.pending() + self.sched.in_flight();
+        let default_stats = PoolStats::default();
+        let stats = self.kv.stats().unwrap_or(&default_stats);
+        let shards = self
+            .kv
+            .pool()
+            .map(|p| p.shard_views())
+            .unwrap_or_default();
+        sampler.sample_tick(self.ticks_seen, depth, stats, &shards);
+        sampler.note_progress(self.completed as u64,
+                              self.tokens_decoded);
+    }
+
+    fn tick_inner(&mut self) {
         // ---- plan ------------------------------------------------------
         let view = self.kv.capacity_view();
         let plan = self.sched.plan(&view);
@@ -517,6 +566,17 @@ impl SimWorker {
             if self.ttft_done.insert(*req) {
                 let t0 = self.arrived.get(req).copied().unwrap_or(0.0);
                 self.ttft.record(self.now - t0);
+                if let Some(s) = &self.sampler {
+                    if s.live().is_enabled() {
+                        let tenant = self
+                            .tenant_of
+                            .get(req)
+                            .copied()
+                            .unwrap_or(0);
+                        s.observe_ttft_ms(&tenant.to_string(),
+                                          self.now - t0);
+                    }
+                }
             }
         }
         if decoding.is_empty() {
@@ -542,6 +602,13 @@ impl SimWorker {
                 continue;
             }
             self.tbt.record(tick_cost);
+            if let Some(s) = &self.sampler {
+                if s.live().is_enabled() {
+                    let tenant =
+                        self.tenant_of.get(&req).copied().unwrap_or(0);
+                    s.observe_tbt_ms(&tenant.to_string(), tick_cost);
+                }
+            }
             let rem = {
                 let r = self.remaining.get_mut(&req).expect("live job");
                 *r -= 1;
@@ -691,6 +758,29 @@ pub fn replay(cfg: &ReplayConfig, paged: bool) -> ReplayResult {
     let mut w = SimWorker::new(cfg, paged);
     // Closed-loop arrival: the full mix queues up front (the regime
     // where admission policy, not arrival spacing, bounds occupancy).
+    for req in generate_workload(cfg) {
+        w.deliver(&req);
+    }
+    let mut guard = 0u64;
+    while w.has_work() && guard < 1_000_000 {
+        guard += 1;
+        w.tick();
+    }
+    w.into_result(if paged { "paged" } else { "dense" })
+}
+
+/// [`replay`] with the live observability plane attached: the worker
+/// publishes per-tick fleet samples into `live` (replica label `0`)
+/// and flight-recorder events into `recorder`. Latency sketches carry
+/// the simulated clock's unitless values — identical to the raw
+/// values in the returned [`ReplayResult`] histograms, which is what
+/// the streaming-vs-post-hoc acceptance check compares.
+pub fn replay_live(cfg: &ReplayConfig, paged: bool,
+                   live: &LiveMetrics, recorder: &FlightRecorder)
+                   -> ReplayResult {
+    let mut w = SimWorker::new(cfg, paged);
+    w.attach_sampler(WorkerSampler::new(live.clone(),
+                                        recorder.clone(), 0));
     for req in generate_workload(cfg) {
         w.deliver(&req);
     }
@@ -1144,5 +1234,108 @@ mod tests {
         assert_eq!(a.decode_ticks, b.decode_ticks);
         assert_eq!(a.sim_time, b.sim_time);
         assert_eq!(a.stats.preemptions, b.stats.preemptions);
+    }
+
+    /// Tentpole acceptance: the streaming sketches published mid-run
+    /// match the post-hoc histograms of the same run at p50/p99
+    /// within the sketch's relative-error bound, the fleet counters
+    /// equal the replay's final totals — and the live plane is pure
+    /// observation (attaching it changes nothing about the run).
+    #[test]
+    fn live_plane_matches_posthoc_and_changes_nothing() {
+        use crate::telemetry::live::sampler::{
+            PREEMPTIONS_TOTAL, QUEUE_DEPTH, REQUESTS_COMPLETED_TOTAL,
+            TBT_MS, TOKENS_DECODED_TOTAL, TTFT_MS,
+        };
+        use crate::telemetry::live::sketch::DEFAULT_ALPHA;
+        let cfg = ReplayConfig {
+            tenants: 3,
+            shards: 2,
+            chunk_prefill: 24,
+            ..ReplayConfig::default()
+        };
+        let live = LiveMetrics::new();
+        let r = replay_live(&cfg, true, &live,
+                            &FlightRecorder::disabled());
+        let bare = replay(&cfg, true);
+        assert_eq!(r.outputs, bare.outputs, "sampling must not perturb");
+        assert_eq!(r.sim_time, bare.sim_time);
+        assert_eq!(r.completed, cfg.requests);
+
+        let snap = live.snapshot();
+        let l = &[("replica", "0")][..];
+        assert_eq!(snap.counter(REQUESTS_COMPLETED_TOTAL, l),
+                   Some(r.completed as u64));
+        assert_eq!(snap.counter(TOKENS_DECODED_TOTAL, l),
+                   Some(r.tokens_decoded));
+        assert_eq!(snap.counter(PREEMPTIONS_TOTAL, l),
+                   Some(r.stats.preemptions));
+        assert_eq!(snap.gauge(QUEUE_DEPTH, l), Some(0.0),
+                   "drained at end of run");
+        // Every tenant that sent work shows up as a sketch label.
+        let mut expect: Vec<String> = generate_workload(&cfg)
+            .iter()
+            .map(|q| q.tenant.to_string())
+            .collect();
+        expect.sort();
+        expect.dedup();
+        assert_eq!(snap.sketch_label_values(TTFT_MS, "tenant"), expect);
+        // Streaming quantiles vs the exact histograms of the same run.
+        for (name, exact) in [(TTFT_MS, &r.ttft), (TBT_MS, &r.tbt)] {
+            let merged = snap.merged_sketch(name, "replica", "0");
+            assert_eq!(merged.count, exact.len() as u64, "{name} count");
+            for p in [50.0, 99.0] {
+                let s = merged.percentile(p);
+                let e = exact.percentile(p);
+                assert!(
+                    (s - e).abs() <= DEFAULT_ALPHA * e + 1e-9,
+                    "{name} p{p}: sketch {s} vs exact {e}"
+                );
+            }
+        }
+    }
+
+    /// Flight-recorder acceptance: a killed replica dumps its last-N
+    /// tick events as valid JSONL under reason `replica-crash`.
+    #[test]
+    fn killed_worker_dumps_valid_jsonl_flight_record() {
+        use crate::substrate::json::Json;
+        let live = LiveMetrics::new();
+        let rec = FlightRecorder::new(32);
+        let cfg = ReplayConfig::default();
+        let mut w = SimWorker::new(&cfg, true);
+        w.attach_sampler(WorkerSampler::new(live.clone(), rec.clone(),
+                                            1));
+        for req in generate_workload(&cfg) {
+            w.deliver(&req);
+        }
+        for _ in 0..10 {
+            w.tick();
+        }
+        assert!(rec.buffered() > 0, "tick events recorded");
+        let evacuated = w.kill();
+        assert!(!evacuated.is_empty(), "mid-run kill evacuates work");
+        // Other dump reasons (preempt-storm, a parallel test's
+        // sigterm) may coexist; exactly one crash dump.
+        let dumps = rec.dumps();
+        let crash: Vec<_> = dumps
+            .iter()
+            .filter(|d| d.reason == "replica-crash")
+            .collect();
+        assert_eq!(crash.len(), 1);
+        let mut lines = crash[0].jsonl.lines();
+        let header = Json::parse(lines.next().expect("header line"))
+            .expect("header is valid JSON");
+        assert_eq!(header.get("flight_dump").and_then(|j| j.as_str()),
+                   Some("replica-crash"));
+        let mut events = 0usize;
+        for line in lines {
+            let ev = Json::parse(line).expect("event is valid JSON");
+            assert!(ev.get("seq").is_some(), "monotone seq: {line}");
+            assert_eq!(ev.get("kind").and_then(|j| j.as_str()),
+                       Some("tick"));
+            events += 1;
+        }
+        assert!(events > 0 && events <= 32, "bounded ring: {events}");
     }
 }

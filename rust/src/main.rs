@@ -29,6 +29,14 @@
 //!                    and prints the sharded-vs-monolithic capacity
 //!                    table with per-shard occupancy; `--bench-json`
 //!                    writes the metrics for the CI perf gate.
+//! * `stats`        — replay a sharded multi-replica workload with the
+//!                    live metrics plane attached and render the fleet
+//!                    dashboard (per-replica, per-shard, per-tenant
+//!                    rows with streaming p50/p99 TTFT/TBT);
+//!                    `--metrics-out` writes the Prometheus text
+//!                    exposition, `--record-out` the flight-recorder
+//!                    JSONL dumps, `--kill R@K` injects a replica
+//!                    crash.
 
 use anyhow::{bail, Result};
 
@@ -48,13 +56,23 @@ use mmserve::perfmodel::device::DeviceSpec;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
 use mmserve::routing::replay::{compare_policies, render_policy_comparison,
-                               render_worker_counters,
-                               RoutingReplayConfig, RoutingReplayResult};
+                               render_worker_counters, routing_replay_live,
+                               KillSpec, RoutingReplayConfig,
+                               RoutingReplayResult};
 use mmserve::routing::RoutingPolicy;
 use mmserve::runtime::engine::Engine;
 use mmserve::substrate::cli::Command;
 use mmserve::substrate::json::Json;
+use mmserve::substrate::table::Table;
 use mmserve::telemetry::chrome_trace;
+use mmserve::telemetry::live::sampler::{
+    CACHED_PAGES, CAPACITY_WAIT_TICKS_TOTAL, FREE_PAGES, LIVE_PAGES,
+    PREEMPTIONS_TOTAL, PREFIX_HIT_RATE, QUEUE_DEPTH,
+    REQUESTS_COMPLETED_TOTAL, SHARD_SPILLS_TOTAL, TBT_MS, TICKS_TOTAL,
+    TOKENS_DECODED_TOTAL, TTFT_MS,
+};
+use mmserve::telemetry::live::{prometheus, FlightRecorder, LiveMetrics,
+                               SketchSnapshot};
 use mmserve::telemetry::tracer::Tracer;
 use mmserve::telemetry::TraceReport;
 
@@ -97,6 +115,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
         name: "kv",
         summary: "replay a workload through the paged KV pool vs dense",
         run: cmd_kv,
+    },
+    Subcommand {
+        name: "stats",
+        summary: "live-metrics fleet dashboard over a replayed workload",
+        run: cmd_stats,
     },
 ];
 
@@ -288,6 +311,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig { shards, ..KvPoolConfig::default() },
             tracer: None,
+            live: None,
+            flight: None,
             replicas,
             policy,
         },
@@ -445,6 +470,8 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             chunk_prefill: a.get_usize("chunk-prefill", 0),
             kv: KvPoolConfig { shards, ..KvPoolConfig::default() },
             tracer: Some(tracer.clone()),
+            live: None,
+            flight: None,
             replicas,
             policy,
         },
@@ -758,5 +785,267 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// `--kill R@K`: crash replica R after K requests were delivered.
+fn parse_kill(spec: &str) -> Result<Option<KillSpec>> {
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    let (r, k) = spec.split_once('@').ok_or_else(|| {
+        anyhow::anyhow!("--kill wants R@K (replica@delivered), got {spec:?}")
+    })?;
+    Ok(Some(KillSpec {
+        replica: r.trim().parse()?,
+        after_delivered: k.trim().parse()?,
+    }))
+}
+
+/// A percentile cell: "-" for an empty sketch (e.g. a crashed replica
+/// that never finished a prefill).
+fn pct_cell(s: &SketchSnapshot, p: f64) -> String {
+    if s.is_empty() {
+        "-".into()
+    } else {
+        format!("{:.2}", s.percentile(p))
+    }
+}
+
+fn cmd_stats(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "stats",
+        "replay a fleet workload with the live metrics plane attached; \
+         render the per-replica / per-shard / per-tenant dashboard",
+    )
+    .opt("requests", "number of replayed requests", Some("96"))
+    .opt("replicas", "simulated workers (each owns a page budget)",
+         Some("3"))
+    .opt("shards",
+         "device arenas each worker's page budget is split across",
+         Some("2"))
+    .opt("tenants", "distinct shared system prompts", Some("3"))
+    .opt("policy",
+         "replica routing: round-robin|least-loaded|prefix-affinity",
+         Some("prefix-affinity"))
+    .opt("pages", "page budget per worker", Some("96"))
+    .opt("page-size", "tokens per KV page", Some("16"))
+    .opt("slots", "decode-graph batch per worker", Some("16"))
+    .opt("chunk-prefill",
+         "chunked prefill: max new prompt tokens per tick (0 = whole)",
+         Some("0"))
+    .opt("kill",
+         "crash injection R@K: kill replica R after K deliveries",
+         Some(""))
+    .opt("metrics-out",
+         "write the Prometheus text exposition to this path", Some(""))
+    .opt("record-out",
+         "write flight-recorder JSONL dumps to this path", Some(""))
+    .opt("bench-json",
+         "write live-plane cost/parity metrics as JSON (CI perf gate)",
+         Some(""))
+    .opt("seed", "workload seed", Some("7"))
+    .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let replicas = a.get_usize("replicas", 3).max(1);
+    let shards = a.get_usize("shards", 2).max(1);
+    let policy = parse_policy(&a)?;
+    let kill = parse_kill(&a.get_or("kill", ""))?;
+    let rcfg = RoutingReplayConfig {
+        base: ReplayConfig {
+            requests: a.get_usize("requests", 96),
+            page_size: a.get_usize("page-size", 16).max(1),
+            total_pages: a.get_usize("pages", 96).max(1),
+            batch_slots: a.get_usize("slots", 16).max(1),
+            chunk_prefill: a.get_usize("chunk-prefill", 0),
+            tenants: a.get_usize("tenants", 3).max(1),
+            shards,
+            seed: a.get_usize("seed", 7) as u64,
+            ..ReplayConfig::default()
+        },
+        replicas,
+        kill,
+        ..RoutingReplayConfig::default()
+    };
+
+    let live = LiveMetrics::new();
+    let recorder = FlightRecorder::new(256);
+    let t_live = std::time::Instant::now();
+    let r = routing_replay_live(&rcfg, policy, &live, &recorder);
+    let wall_live = t_live.elapsed();
+    let snap = live.snapshot();
+
+    println!(
+        "== live fleet dashboard: {replicas} replicas × {shards} \
+         shards, {} tenants, {policy} (simulated clock units) ==",
+        rcfg.base.tenants
+    );
+    println!(
+        "completed {} / dropped {} in sim_time {:.1}\n",
+        r.completed, r.dropped, r.sim_time
+    );
+
+    let mut tr = Table::new(&[
+        "replica", "routed", "ticks", "done", "tokens", "queue",
+        "hit rate", "waits", "preempt", "spills", "ttft p50",
+        "ttft p99", "tbt p50", "tbt p99",
+    ]);
+    for i in 0..replicas {
+        let rs = i.to_string();
+        let l = [("replica", rs.as_str())];
+        let cnt =
+            |name: &str| snap.counter(name, &l).unwrap_or(0).to_string();
+        let ttft = snap.merged_sketch(TTFT_MS, "replica", &rs);
+        let tbt = snap.merged_sketch(TBT_MS, "replica", &rs);
+        tr.row(&[
+            rs.clone(),
+            r.routed.get(i).copied().unwrap_or(0).to_string(),
+            cnt(TICKS_TOTAL),
+            cnt(REQUESTS_COMPLETED_TOTAL),
+            cnt(TOKENS_DECODED_TOTAL),
+            format!("{:.0}", snap.gauge(QUEUE_DEPTH, &l).unwrap_or(0.0)),
+            format!("{:.3}",
+                    snap.gauge(PREFIX_HIT_RATE, &l).unwrap_or(0.0)),
+            cnt(CAPACITY_WAIT_TICKS_TOTAL),
+            cnt(PREEMPTIONS_TOTAL),
+            cnt(SHARD_SPILLS_TOTAL),
+            pct_cell(&ttft, 50.0),
+            pct_cell(&ttft, 99.0),
+            pct_cell(&tbt, 50.0),
+            pct_cell(&tbt, 99.0),
+        ]);
+    }
+    println!("per-replica:\n{}", tr.render());
+
+    let mut ts = Table::new(&[
+        "replica", "shard", "live pages", "free pages", "cached pages",
+    ]);
+    for i in 0..replicas {
+        for s in 0..shards {
+            let (rs, ss) = (i.to_string(), s.to_string());
+            let l = [("replica", rs.as_str()), ("shard", ss.as_str())];
+            let Some(lp) = snap.gauge(LIVE_PAGES, &l) else {
+                continue;
+            };
+            ts.row(&[
+                rs.clone(),
+                ss,
+                format!("{lp:.0}"),
+                format!("{:.0}", snap.gauge(FREE_PAGES, &l).unwrap_or(0.0)),
+                format!("{:.0}",
+                        snap.gauge(CACHED_PAGES, &l).unwrap_or(0.0)),
+            ]);
+        }
+    }
+    println!("\nper-shard pages (point-in-time, end of run):\n{}",
+             ts.render());
+
+    let mut tt = Table::new(&[
+        "tenant", "requests", "ttft p50", "ttft p99", "tbt p50",
+        "tbt p99",
+    ]);
+    for tenant in snap.sketch_label_values(TTFT_MS, "tenant") {
+        let ttft = snap.merged_sketch(TTFT_MS, "tenant", &tenant);
+        let tbt = snap.merged_sketch(TBT_MS, "tenant", &tenant);
+        tt.row(&[
+            tenant.clone(),
+            ttft.count.to_string(),
+            pct_cell(&ttft, 50.0),
+            pct_cell(&ttft, 99.0),
+            pct_cell(&tbt, 50.0),
+            pct_cell(&tbt, 99.0),
+        ]);
+    }
+    println!("\nper-tenant SLO percentiles:\n{}", tt.render());
+
+    // Streaming sketches vs the post-hoc histograms the replay kept:
+    // they must agree within the sketch's relative error.
+    let mut all_ttft = SketchSnapshot::empty();
+    let mut all_tbt = SketchSnapshot::empty();
+    for rv in snap.sketch_label_values(TTFT_MS, "replica") {
+        all_ttft.merge(&snap.merged_sketch(TTFT_MS, "replica", &rv));
+    }
+    for rv in snap.sketch_label_values(TBT_MS, "replica") {
+        all_tbt.merge(&snap.merged_sketch(TBT_MS, "replica", &rv));
+    }
+    println!(
+        "\nstreaming vs post-hoc: ttft p99 {:.2} / {:.2}, \
+         tbt p99 {:.2} / {:.2}",
+        all_ttft.percentile(99.0),
+        r.ttft.percentile(99.0),
+        all_tbt.percentile(99.0),
+        r.tbt.percentile(99.0)
+    );
+
+    let dumps = recorder.dumps();
+    if !dumps.is_empty() {
+        let reasons: Vec<&str> =
+            dumps.iter().map(|d| d.reason.as_str()).collect();
+        println!("flight recorder: {} dump(s): {}", dumps.len(),
+                 reasons.join(", "));
+    }
+    let rec_path = a.get_or("record-out", "");
+    if !rec_path.is_empty() {
+        let mut out = String::new();
+        for d in &dumps {
+            out.push_str(&d.jsonl);
+            if !d.jsonl.ends_with('\n') {
+                out.push('\n');
+            }
+        }
+        std::fs::write(&rec_path, out)?;
+        println!("wrote flight-recorder dumps to {rec_path}");
+    }
+    let metrics_path = a.get_or("metrics-out", "");
+    if !metrics_path.is_empty() {
+        prometheus::write_file(&snap, std::path::Path::new(&metrics_path))?;
+        println!("wrote Prometheus exposition to {metrics_path}");
+    }
+    let json_path = a.get_or("bench-json", "");
+    if !json_path.is_empty() {
+        // Sampler cost + pure-observation parity: the identical
+        // seeded replay without the live plane. The simulated clocks
+        // must agree exactly (observation never changes scheduling);
+        // the wall-clock delta per published tick is the sampler's
+        // hot-path cost.
+        let t_bare = std::time::Instant::now();
+        let bare = mmserve::routing::replay::routing_replay(&rcfg,
+                                                            policy);
+        let wall_bare = t_bare.elapsed();
+        let ticks: u64 = snap
+            .counters
+            .iter()
+            .filter(|(s, _)| s.name == TICKS_TOTAL)
+            .map(|(_, v)| v)
+            .sum();
+        let ns_per_tick = wall_live.saturating_sub(wall_bare)
+            .as_nanos() as f64
+            / ticks.max(1) as f64;
+        let json = Json::from_obj(vec![
+            ("config".into(), Json::from_obj(vec![
+                ("requests".into(),
+                 Json::Num(rcfg.base.requests as f64)),
+                ("replicas".into(), Json::Num(replicas as f64)),
+                ("shards".into(), Json::Num(shards as f64)),
+                ("tenants".into(),
+                 Json::Num(rcfg.base.tenants as f64)),
+                ("seed".into(), Json::Num(rcfg.base.seed as f64)),
+            ])),
+            ("live".into(), Json::from_obj(vec![
+                ("ticks".into(), Json::Num(ticks as f64)),
+                ("completed".into(), Json::Num(r.completed as f64)),
+                ("sim_time".into(), Json::Num(r.sim_time)),
+                ("sim_time_delta".into(),
+                 Json::Num((r.sim_time - bare.sim_time).abs())),
+                ("sampler_ns_per_tick".into(), Json::Num(ns_per_tick)),
+            ])),
+        ]);
+        std::fs::write(&json_path, json.to_string())?;
+        println!("wrote live-plane metrics to {json_path}");
+    }
     Ok(())
 }

@@ -25,6 +25,8 @@ use crate::kvpool::replay::{generate_workload, ReplayConfig,
 use crate::kvpool::PoolStats;
 use crate::substrate::metrics::Histogram;
 use crate::substrate::table::Table;
+use crate::telemetry::live::{FlightRecorder, LiveMetrics,
+                             WorkerSampler};
 
 use super::{rank, ReplicaView, RoutingPolicy};
 
@@ -136,10 +138,39 @@ fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
 /// `policy`. Deterministic: same config + policy → same result.
 pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
                       -> RoutingReplayResult {
+    routing_replay_inner(cfg, policy, None)
+}
+
+/// [`routing_replay`] with the live observability plane attached:
+/// every replica gets a [`WorkerSampler`] publishing into the shared
+/// `live` registry (replica label = index) and the shared flight
+/// `recorder` — a [`KillSpec`] crash triggers a `replica-crash` dump
+/// of the fleet's last-N tick events. Attaching the plane never
+/// changes routing, scheduling, or outputs.
+pub fn routing_replay_live(cfg: &RoutingReplayConfig,
+                           policy: RoutingPolicy,
+                           live: &LiveMetrics,
+                           recorder: &FlightRecorder)
+                           -> RoutingReplayResult {
+    routing_replay_inner(cfg, policy, Some((live, recorder)))
+}
+
+fn routing_replay_inner(cfg: &RoutingReplayConfig,
+                        policy: RoutingPolicy,
+                        plane: Option<(&LiveMetrics, &FlightRecorder)>)
+                        -> RoutingReplayResult {
     let n = cfg.replicas.max(1);
     let per_round = cfg.arrivals_per_round.max(1);
-    let mut workers: Vec<SimWorker> =
-        (0..n).map(|_| SimWorker::new(&cfg.base, true)).collect();
+    let mut workers: Vec<SimWorker> = (0..n)
+        .map(|i| {
+            let mut w = SimWorker::new(&cfg.base, true);
+            if let Some((live, rec)) = plane {
+                w.attach_sampler(WorkerSampler::new(live.clone(),
+                                                    rec.clone(), i));
+            }
+            w
+        })
+        .collect();
     let mut routed = vec![0usize; n];
     let mut dropped_unroutable = 0usize;
     let requests: Vec<SimRequest> = generate_workload(&cfg.base);
@@ -574,6 +605,74 @@ mod tests {
         let table = render_worker_counters(&pa);
         assert!(table.contains("mean shard occupancy"));
         assert!(table.contains("shard spills"));
+    }
+
+    /// Tentpole acceptance (fleet form): the live plane on a sharded
+    /// multi-replica replay exposes one TTFT/TBT sketch row per
+    /// replica and per tenant whose merged totals equal the post-hoc
+    /// fleet histograms, per-shard page gauges per replica, and — on
+    /// an injected [`KillSpec`] crash — a `replica-crash` flight dump;
+    /// routing and outputs are untouched by observation.
+    #[test]
+    fn fleet_live_plane_matches_posthoc_and_dumps_on_crash() {
+        use crate::telemetry::live::sampler::{LIVE_PAGES, TBT_MS,
+                                              TTFT_MS};
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                tenants: 2,
+                shards: 2,
+                ..ReplayConfig::default()
+            },
+            replicas: 3,
+            kill: Some(KillSpec { replica: 1, after_delivered: 20 }),
+            ..RoutingReplayConfig::default()
+        };
+        let live = LiveMetrics::new();
+        let rec = FlightRecorder::new(64);
+        let r = routing_replay_live(&cfg, RoutingPolicy::PrefixAffinity,
+                                    &live, &rec);
+        let bare =
+            routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(r.outputs, bare.outputs, "observation must not route");
+        assert_eq!(r.routed, bare.routed);
+        assert_eq!(r.completed, cfg.base.requests);
+
+        let snap = live.snapshot();
+        // Per-replica rows: the two survivors sampled TTFT; fleet
+        // merge equals the post-hoc fleet histogram exactly in count.
+        let replicas = snap.sketch_label_values(TTFT_MS, "replica");
+        assert!(replicas.len() >= 2, "live replicas publish: {replicas:?}");
+        let mut fleet_ttft = 0u64;
+        for rep in &replicas {
+            fleet_ttft +=
+                snap.merged_sketch(TTFT_MS, "replica", rep).count;
+        }
+        assert_eq!(fleet_ttft, r.ttft.len() as u64);
+        // Per-tenant rows cover both tenants.
+        assert_eq!(snap.sketch_label_values(TBT_MS, "tenant").len(),
+                   cfg.base.tenants);
+        // Per-shard page gauges exist for each live replica's shards.
+        for rep in &replicas {
+            for shard in ["0", "1"] {
+                assert!(snap
+                            .gauge(LIVE_PAGES,
+                                   &[("replica", rep.as_str()),
+                                     ("shard", shard)])
+                            .is_some(),
+                        "live_pages{{replica={rep},shard={shard}}}");
+            }
+        }
+        // The injected crash dumped the flight ring as valid JSONL.
+        let dumps = rec.dumps();
+        let crash: Vec<_> = dumps
+            .iter()
+            .filter(|d| d.reason == "replica-crash")
+            .collect();
+        assert_eq!(crash.len(), 1, "one crash, one dump");
+        for line in crash[0].jsonl.lines() {
+            crate::substrate::json::Json::parse(line)
+                .expect("flight dump line is valid JSON");
+        }
     }
 
     #[test]

@@ -109,6 +109,15 @@ impl Scheduler {
         self.batcher.push(q);
     }
 
+    /// Attach the live-metrics plane to the admission queue
+    /// ([`Batcher::attach_live`]): replica-labeled enqueue/admission
+    /// counters. Pure observation.
+    pub fn attach_live(&mut self,
+                       live: &crate::telemetry::live::LiveMetrics,
+                       replica: usize) {
+        self.batcher.attach_live(live, replica);
+    }
+
     /// Requests waiting in the queue (not in flight).
     pub fn pending(&self) -> usize {
         self.batcher.pending()

@@ -4,14 +4,22 @@
 //! per-operator wall-time accounting and end-to-end latency
 //! distributions; this module is the measurement substrate for both.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Reservoir of raw samples with percentile queries (exact, sorted on
-/// demand — sample counts here are small enough that this is fine).
+/// Reservoir of raw samples with percentile queries (exact). The
+/// sorted view is computed once and cached until the next `record` —
+/// `summary()` used to clone-and-sort three times — and min/max are
+/// tracked as running values, O(1) per query.
 #[derive(Default, Clone, Debug)]
 pub struct Histogram {
     samples: Vec<f64>,
+    min: f64,
+    max: f64,
+    /// Sorted copy of `samples`; valid iff same length (records only
+    /// append, so a length match means nothing changed).
+    sorted: RefCell<Vec<f64>>,
 }
 
 impl Histogram {
@@ -19,6 +27,13 @@ impl Histogram {
         Self::default()
     }
     pub fn record(&mut self, v: f64) {
+        if self.samples.is_empty() {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
         self.samples.push(v);
     }
     pub fn len(&self) -> usize {
@@ -38,14 +53,14 @@ impl Histogram {
         if self.samples.is_empty() {
             return 0.0;
         }
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.min
     }
     /// Largest sample (0.0 on an empty reservoir, matching `mean()`).
     pub fn max(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.max
     }
     pub fn stddev(&self) -> f64 {
         if self.samples.len() < 2 {
@@ -61,10 +76,15 @@ impl Histogram {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        let mut cache = self.sorted.borrow_mut();
+        if cache.len() != self.samples.len() {
+            cache.clear();
+            cache.extend_from_slice(&self.samples);
+            cache.sort_by(|a, b| a.total_cmp(b));
+        }
+        let idx =
+            ((p / 100.0) * (cache.len() - 1) as f64).round() as usize;
+        cache[idx.min(cache.len() - 1)]
     }
     pub fn summary(&self) -> String {
         format!(
@@ -225,6 +245,38 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.percentile(50.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    /// Regression for the cached sorted view: percentile queries
+    /// interleaved with records must always see the latest samples,
+    /// and min/max (now running values) must match a full fold.
+    #[test]
+    fn percentile_cache_invalidates_on_record() {
+        let mut h = Histogram::new();
+        for i in 1..=10 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(100.0), 10.0);
+        assert_eq!(h.percentile(0.0), 1.0);
+        // Records after a cached query must be visible.
+        h.record(100.0);
+        h.record(-7.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.percentile(0.0), -7.0);
+        assert_eq!(h.min(), -7.0);
+        assert_eq!(h.max(), 100.0);
+        // Repeated queries (cache hits) stay consistent, and the
+        // clone carries valid state.
+        assert_eq!(h.percentile(50.0), h.clone().percentile(50.0));
+        let brute_min =
+            h.samples().iter().cloned().fold(f64::INFINITY, f64::min);
+        let brute_max = h
+            .samples()
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(h.min(), brute_min);
+        assert_eq!(h.max(), brute_max);
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub struct Aggregate {
     /// Time between consecutive sampled tokens per request (ms).
     pub tbt_ms: Histogram,
     pub span_count: usize,
+    /// Requests that emitted spans but never a `Sample` span (killed
+    /// mid-prefill, preempted and never resumed, crashed replica) —
+    /// they contribute no latency samples but must not vanish from
+    /// the report.
+    pub incomplete_requests: usize,
 }
 
 impl Aggregate {
@@ -54,10 +59,14 @@ impl Aggregate {
         let mut reqs: Vec<u64> = per_req.keys().copied().collect();
         reqs.sort_unstable();
         for req in reqs {
-            let (first, mut samples) = per_req.remove(&req).unwrap();
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            if let Some(&t) = samples.first() {
-                agg.ttft_ms.record((t - first) * 1e3);
+            let Some((first, mut samples)) = per_req.remove(&req)
+            else {
+                continue;
+            };
+            samples.sort_by(|a, b| a.total_cmp(b));
+            match samples.first() {
+                Some(&t) => agg.ttft_ms.record((t - first) * 1e3),
+                None => agg.incomplete_requests += 1,
             }
             for w in samples.windows(2) {
                 agg.tbt_ms.record((w[1] - w[0]) * 1e3);
@@ -77,11 +86,18 @@ impl Aggregate {
     }
 
     pub fn latency_summary(&self) -> String {
-        format!(
+        let mut out = format!(
             "ttft(ms) [{}]\ntbt(ms)  [{}]",
             self.ttft_ms.summary(),
             self.tbt_ms.summary()
-        )
+        );
+        if self.incomplete_requests > 0 {
+            out.push_str(&format!(
+                "\nincomplete requests (no sampled token): {}",
+                self.incomplete_requests
+            ));
+        }
+        out
     }
 }
 
@@ -151,6 +167,34 @@ mod tests {
         let small = s.find("small").unwrap();
         assert!(big < small, "largest stage first");
         assert!(agg.render_categories().contains("Execute"));
+    }
+
+    /// Regression: a request killed before its first sampled token
+    /// used to disappear from the aggregate entirely; now it is
+    /// counted, without panicking, and surfaced in the summary.
+    #[test]
+    fn sampleless_requests_are_counted_not_dropped() {
+        let tr = Trace {
+            spans: vec![
+                // Request 1 completes normally.
+                sp(Cat::Tokenize, "tokenize", 0.0, 0.1, Some(1)),
+                sp(Cat::Sample, "sample", 0.1, 0.2, Some(1)),
+                // Request 2 died mid-prefill: spans, but no Sample.
+                sp(Cat::Tokenize, "tokenize", 0.0, 0.1, Some(2)),
+                sp(Cat::Execute, "prefill_b8", 0.1, 0.4, Some(2)),
+            ],
+            workers: vec![(1, "w".into())],
+        };
+        let agg = Aggregate::from_trace(&tr);
+        assert_eq!(agg.incomplete_requests, 1);
+        assert_eq!(agg.ttft_ms.len(), 1, "completed request still folds");
+        assert!(agg
+            .latency_summary()
+            .contains("incomplete requests (no sampled token): 1"));
+        // Fully-sampled traces report zero and keep the old summary.
+        let done = Aggregate::from_trace(&Trace::default());
+        assert_eq!(done.incomplete_requests, 0);
+        assert!(!done.latency_summary().contains("incomplete"));
     }
 
     #[test]

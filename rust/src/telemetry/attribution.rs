@@ -26,7 +26,7 @@ pub const GAP_CATEGORIES: [&str; 8] = [
     "Tokenization", "Sync", "Compile", "Other",
 ];
 
-fn gap_label(cat: Cat) -> Option<&'static str> {
+pub(crate) fn gap_label(cat: Cat) -> Option<&'static str> {
     match cat {
         // Tick planning and replica routing are scheduler work; they
         // share the bucket.

@@ -1,0 +1,33 @@
+//! Live (mid-run) observability plane.
+//!
+//! The tracer/aggregate/attribution stack is post-hoc: it retains
+//! every span and folds them after the run. This module is the
+//! always-on counterpart the ROADMAP autoscaler and SLO-aware tick
+//! planning consume *during* the run:
+//!
+//! * [`registry`] — [`LiveMetrics`]: labeled atomic counters/gauges
+//!   plus streaming quantile sketches, snapshot-consistent, with the
+//!   tracer's one-relaxed-load disabled mode.
+//! * [`sketch`] — [`QuantileSketch`]: mergeable DDSketch-style
+//!   quantiles, so TTFT/TBT p50/p99 are queryable at any tick without
+//!   retaining samples.
+//! * [`sampler`] — [`WorkerSampler`]: the per-tick publication point
+//!   (queue depth, per-shard pages, prefix hit rate, capacity waits,
+//!   spills, preemptions) and [`OnlineAttribution`], the incremental
+//!   idle-gap fold.
+//! * [`recorder`] — [`FlightRecorder`]: bounded ring of structured
+//!   JSONL events, dumped on crash, preemption storm, or SIGTERM.
+//! * [`prometheus`] — text exposition of a registry snapshot
+//!   (`--metrics-out`).
+
+pub mod prometheus;
+pub mod recorder;
+pub mod registry;
+pub mod sampler;
+pub mod sketch;
+
+pub use recorder::{install_sigterm_hook, FlightRecorder};
+pub use registry::{Counter, Gauge, LiveMetrics, MetricsSnapshot,
+                   Series};
+pub use sampler::{OnlineAttribution, WorkerSampler};
+pub use sketch::{QuantileSketch, SketchSnapshot};

@@ -1,0 +1,191 @@
+//! Prometheus text exposition for [`MetricsSnapshot`].
+//!
+//! Renders the classic text format: one `# TYPE` line per metric
+//! name, then one sample line per series. Counters and gauges map
+//! directly; quantile sketches render as a `summary` — p50/p90/p99
+//! `quantile`-labeled lines plus `_sum`/`_count` — so a scrape (or
+//! the `--metrics-out` file) carries the same SLO percentiles the
+//! dashboard tables show. Series order is the snapshot's stable
+//! (name, sorted-labels) order, making output diffable across runs.
+
+use std::path::Path;
+
+use super::registry::{escape_label, MetricsSnapshot, Series};
+
+/// Quantiles exported for every sketch series.
+pub const SUMMARY_QUANTILES: [(f64, &str); 3] =
+    [(50.0, "0.5"), (90.0, "0.9"), (99.0, "0.99")];
+
+fn label_body(series: &Series, extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = series
+        .labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn type_line(out: &mut String, last: &mut String, name: &str,
+             kind: &str) {
+    if last != name {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        last.clear();
+        last.push_str(name);
+    }
+}
+
+/// Render a snapshot as Prometheus text exposition.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut last = String::new();
+    for (series, v) in &snap.counters {
+        type_line(&mut out, &mut last, &series.name, "counter");
+        out.push_str(&format!(
+            "{}{} {v}\n",
+            series.name,
+            label_body(series, None)
+        ));
+    }
+    last.clear();
+    for (series, v) in &snap.gauges {
+        type_line(&mut out, &mut last, &series.name, "gauge");
+        out.push_str(&format!(
+            "{}{} {v}\n",
+            series.name,
+            label_body(series, None)
+        ));
+    }
+    last.clear();
+    for (series, sk) in &snap.sketches {
+        type_line(&mut out, &mut last, &series.name, "summary");
+        for (p, q) in SUMMARY_QUANTILES {
+            out.push_str(&format!(
+                "{}{} {}\n",
+                series.name,
+                label_body(series, Some(("quantile", q))),
+                sk.percentile(p)
+            ));
+        }
+        out.push_str(&format!(
+            "{}_sum{} {}\n",
+            series.name,
+            label_body(series, None),
+            sk.sum
+        ));
+        out.push_str(&format!(
+            "{}_count{} {}\n",
+            series.name,
+            label_body(series, None),
+            sk.count
+        ));
+    }
+    out
+}
+
+/// Render and write a snapshot to `path` (the `--metrics-out` sink;
+/// whole-file replace so each tick's snapshot is self-consistent).
+pub fn write_file(snap: &MetricsSnapshot, path: &Path)
+                  -> std::io::Result<()> {
+    std::fs::write(path, render(snap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::live::registry::LiveMetrics;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let m = LiveMetrics::new();
+        m.inc("mmserve_ticks_total", &[("replica", "0")], 12);
+        m.inc("mmserve_ticks_total", &[("replica", "1")], 9);
+        m.set_gauge("mmserve_queue_depth", &[("replica", "0")], 3.5);
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            m.observe("mmserve_ttft_ms",
+                      &[("replica", "0"), ("tenant", "a")], v);
+        }
+        m.snapshot()
+    }
+
+    #[test]
+    fn renders_counters_gauges_and_summaries() {
+        let text = render(&sample_snapshot());
+        assert!(text.contains("# TYPE mmserve_ticks_total counter\n"));
+        assert!(text.contains("mmserve_ticks_total{replica=\"0\"} 12\n"));
+        assert!(text.contains("mmserve_ticks_total{replica=\"1\"} 9\n"));
+        assert!(text.contains("# TYPE mmserve_queue_depth gauge\n"));
+        assert!(text.contains("mmserve_queue_depth{replica=\"0\"} 3.5\n"));
+        assert!(text.contains("# TYPE mmserve_ttft_ms summary\n"));
+        assert!(text.contains(
+            "mmserve_ttft_ms{replica=\"0\",tenant=\"a\",quantile=\"0.5\"} "
+        ));
+        assert!(text.contains(
+            "mmserve_ttft_ms_sum{replica=\"0\",tenant=\"a\"} 100\n"
+        ));
+        assert!(text.contains(
+            "mmserve_ttft_ms_count{replica=\"0\",tenant=\"a\"} 4\n"
+        ));
+        // One TYPE line per metric name, not per series.
+        assert_eq!(
+            text.matches("# TYPE mmserve_ticks_total counter").count(),
+            1
+        );
+    }
+
+    #[test]
+    fn every_sample_line_is_well_formed() {
+        let text = render(&sample_snapshot());
+        assert!(!text.is_empty());
+        for line in text.lines() {
+            if line.starts_with("# TYPE ") {
+                assert_eq!(line.split_whitespace().count(), 4, "{line}");
+                continue;
+            }
+            // `name{labels} value` — value parses as f64.
+            let (_, value) = line.rsplit_once(' ')
+                .unwrap_or_else(|| panic!("no value in {line:?}"));
+            value.parse::<f64>()
+                .unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let m = LiveMetrics::new();
+        m.set_gauge("g", &[("model", "a\"b\\c\nd")], 1.0);
+        let text = render(&m.snapshot());
+        assert!(text.contains("g{model=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn unlabeled_series_render_bare() {
+        let m = LiveMetrics::new();
+        m.inc("up_total", &[], 1);
+        let text = render(&m.snapshot());
+        assert!(text.contains("# TYPE up_total counter\nup_total 1\n"));
+    }
+
+    #[test]
+    fn write_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "mmserve_prom_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.prom");
+        let snap = sample_snapshot();
+        write_file(&snap, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, render(&snap));
+        // Whole-file replace, not append.
+        write_file(&snap, &path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), body);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,459 @@
+//! Lock-light labeled metrics registry.
+//!
+//! [`LiveMetrics`] is a cloneable process-level handle (the live
+//! analogue of `Tracer`): series are registered once on a cold path
+//! (mutex-protected maps keyed by [`Series`]) and updated through
+//! cheap cached handles — [`Counter`]/[`Gauge`] are one relaxed
+//! atomic op per update, [`QuantileSketch`] a handful. Disabled mode
+//! is the tracer's contract: one relaxed atomic load and nothing
+//! else, so `LiveMetrics::off()` on the serving path costs nothing
+//! measurable (asserted by `benches/telemetry_overhead.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::sketch::{QuantileSketch, SketchSnapshot};
+
+/// A metric identity: name plus sorted label pairs. Ordering is
+/// lexicographic, which gives the registry (and the Prometheus
+/// exposition) a stable, deterministic series order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Series {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl Series {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> Series {
+        let mut ls: Vec<(String, String)> = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        ls.sort();
+        Series { name: name.to_string(), labels: ls }
+    }
+
+    /// `name{k="v",…}` (no braces when unlabeled) — the exposition
+    /// and dashboard key format.
+    pub fn render(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let body: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        format!("{}{{{}}}", self.name, body.join(","))
+    }
+
+    /// The value of one label (the dashboard's group-by accessor).
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Prometheus label-value escaping: backslash, quote, newline.
+pub(crate) fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Cached handle to a monotonically increasing counter.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Cached handle to an f64 gauge (last-write-wins).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct Core {
+    enabled: AtomicBool,
+    counters: Mutex<BTreeMap<Series, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<Series, Arc<AtomicU64>>>,
+    sketches: Mutex<BTreeMap<Series, Arc<QuantileSketch>>>,
+}
+
+/// Process-level live-metrics handle (cheap to clone; `Send + Sync`).
+#[derive(Debug, Clone)]
+pub struct LiveMetrics {
+    core: Arc<Core>,
+}
+
+impl LiveMetrics {
+    /// An enabled registry.
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// A disabled registry: every publish is one relaxed atomic load.
+    pub fn off() -> Self {
+        Self::with_enabled(false)
+    }
+
+    fn with_enabled(on: bool) -> Self {
+        LiveMetrics {
+            core: Arc::new(Core {
+                enabled: AtomicBool::new(on),
+                counters: Mutex::new(BTreeMap::new()),
+                gauges: Mutex::new(BTreeMap::new()),
+                sketches: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.core.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// A worker panicking mid-update must degrade metrics, never take
+    /// down the publisher: recover the poisoned map.
+    fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+        m.lock().unwrap_or_else(|poison| poison.into_inner())
+    }
+
+    /// Register (or fetch) a counter series; cache the handle on hot
+    /// paths. Registration works while disabled so handles obtained
+    /// early keep working after `set_enabled(true)`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let series = Series::new(name, labels);
+        let mut map = Self::lock(&self.core.counters);
+        Counter(
+            map.entry(series)
+                .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+                .clone(),
+        )
+    }
+
+    /// Register (or fetch) a gauge series.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let series = Series::new(name, labels);
+        let mut map = Self::lock(&self.core.gauges);
+        Gauge(
+            map.entry(series)
+                .or_insert_with(|| {
+                    Arc::new(AtomicU64::new(0f64.to_bits()))
+                })
+                .clone(),
+        )
+    }
+
+    /// Register (or fetch) a quantile-sketch series (TTFT/TBT style
+    /// latency distributions).
+    pub fn sketch(&self, name: &str, labels: &[(&str, &str)])
+                  -> Arc<QuantileSketch> {
+        let series = Series::new(name, labels);
+        let mut map = Self::lock(&self.core.sketches);
+        map.entry(series)
+            .or_insert_with(|| Arc::new(QuantileSketch::new()))
+            .clone()
+    }
+
+    /// Cold-path counter bump (registry lookup per call). Disabled:
+    /// one relaxed load.
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], delta: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.counter(name, labels).inc(delta);
+    }
+
+    /// Cold-path gauge write. Disabled: one relaxed load.
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.gauge(name, labels).set(v);
+    }
+
+    /// Cold-path sketch observation. Disabled: one relaxed load.
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.sketch(name, labels).record(v);
+    }
+
+    /// Consistent point-in-time copy of every series, in stable
+    /// (name, labels) order — the input to the Prometheus renderer
+    /// and the dashboard tables.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = Self::lock(&self.core.counters)
+            .iter()
+            .map(|(s, c)| (s.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = Self::lock(&self.core.gauges)
+            .iter()
+            .map(|(s, g)| {
+                (s.clone(), f64::from_bits(g.load(Ordering::Relaxed)))
+            })
+            .collect();
+        let sketches = Self::lock(&self.core.sketches)
+            .iter()
+            .map(|(s, q)| (s.clone(), q.snapshot()))
+            .collect();
+        MetricsSnapshot { counters, gauges, sketches }
+    }
+}
+
+impl Default for LiveMetrics {
+    fn default() -> Self {
+        LiveMetrics::new()
+    }
+}
+
+/// Everything the registry knew at one instant.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(Series, u64)>,
+    pub gauges: Vec<(Series, f64)>,
+    pub sketches: Vec<(Series, SketchSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)])
+                   -> Option<u64> {
+        let key = Series::new(name, labels);
+        self.counters
+            .iter()
+            .find(|(s, _)| *s == key)
+            .map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)])
+                 -> Option<f64> {
+        let key = Series::new(name, labels);
+        self.gauges
+            .iter()
+            .find(|(s, _)| *s == key)
+            .map(|(_, v)| *v)
+    }
+
+    pub fn sketch(&self, name: &str, labels: &[(&str, &str)])
+                  -> Option<&SketchSnapshot> {
+        let key = Series::new(name, labels);
+        self.sketches
+            .iter()
+            .find(|(s, _)| *s == key)
+            .map(|(_, v)| v)
+    }
+
+    /// Merge every sketch series named `name` whose `by` label equals
+    /// `value` — the dashboard's row aggregator (e.g. all tenants of
+    /// one replica, or all replicas of one tenant).
+    pub fn merged_sketch(&self, name: &str, by: &str, value: &str)
+                         -> SketchSnapshot {
+        let mut out = SketchSnapshot::empty();
+        for (s, snap) in &self.sketches {
+            if s.name == name && s.label(by) == Some(value) {
+                out.merge(snap);
+            }
+        }
+        out
+    }
+
+    /// Distinct values of label `by` across sketch series named
+    /// `name`, sorted (the dashboard's row key enumerator).
+    pub fn sketch_label_values(&self, name: &str, by: &str)
+                               -> Vec<String> {
+        let mut vals: Vec<String> = self
+            .sketches
+            .iter()
+            .filter(|(s, _)| s.name == name)
+            .filter_map(|(s, _)| s.label(by).map(|v| v.to_string()))
+            .collect();
+        vals.sort();
+        vals.dedup();
+        vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::prop::prop_check;
+    use crate::substrate::rng::Rng;
+
+    #[test]
+    fn series_sorts_labels_and_renders() {
+        let a = Series::new("m", &[("b", "2"), ("a", "1")]);
+        let b = Series::new("m", &[("a", "1"), ("b", "2")]);
+        assert_eq!(a, b);
+        assert_eq!(a.render(), "m{a=\"1\",b=\"2\"}");
+        assert_eq!(Series::new("bare", &[]).render(), "bare");
+        assert_eq!(a.label("b"), Some("2"));
+        assert_eq!(a.label("c"), None);
+        let esc = Series::new("m", &[("p", "a\"b\\c")]);
+        assert_eq!(esc.render(), "m{p=\"a\\\"b\\\\c\"}");
+    }
+
+    #[test]
+    fn counters_gauges_sketches_roundtrip() {
+        let m = LiveMetrics::new();
+        let c = m.counter("mmserve_ticks_total", &[("replica", "0")]);
+        c.inc(3);
+        c.inc(2);
+        // Second registration returns the same underlying cell.
+        m.counter("mmserve_ticks_total", &[("replica", "0")]).inc(1);
+        let g = m.gauge("mmserve_queue_depth", &[("replica", "0")]);
+        g.set(7.5);
+        m.observe("mmserve_ttft_ms", &[("replica", "0")], 12.0);
+        m.observe("mmserve_ttft_ms", &[("replica", "0")], 14.0);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap.counter("mmserve_ticks_total", &[("replica", "0")]),
+            Some(6)
+        );
+        assert_eq!(
+            snap.gauge("mmserve_queue_depth", &[("replica", "0")]),
+            Some(7.5)
+        );
+        let sk = snap
+            .sketch("mmserve_ttft_ms", &[("replica", "0")])
+            .unwrap();
+        assert_eq!(sk.count, 2);
+        assert!(snap.counter("missing", &[]).is_none());
+    }
+
+    #[test]
+    fn disabled_mode_publishes_nothing() {
+        let m = LiveMetrics::off();
+        assert!(!m.is_enabled());
+        m.inc("c", &[], 5);
+        m.set_gauge("g", &[], 1.0);
+        m.observe("s", &[], 2.0);
+        let snap = m.snapshot();
+        assert!(snap.counters.is_empty());
+        assert!(snap.gauges.is_empty());
+        assert!(snap.sketches.is_empty());
+        // Handles registered while disabled survive an enable flip.
+        let c = m.counter("late", &[]);
+        m.set_enabled(true);
+        c.inc(1);
+        assert_eq!(m.snapshot().counter("late", &[]), Some(1));
+    }
+
+    #[test]
+    fn merged_sketch_groups_by_label() {
+        let m = LiveMetrics::new();
+        for (r, t, v) in [("0", "a", 10.0), ("0", "b", 20.0),
+                          ("1", "a", 30.0)] {
+            m.observe("mmserve_tbt_ms",
+                      &[("replica", r), ("tenant", t)], v);
+        }
+        let snap = m.snapshot();
+        let r0 = snap.merged_sketch("mmserve_tbt_ms", "replica", "0");
+        assert_eq!(r0.count, 2);
+        assert_eq!(r0.min(), 10.0);
+        assert_eq!(r0.max(), 20.0);
+        let ta = snap.merged_sketch("mmserve_tbt_ms", "tenant", "a");
+        assert_eq!(ta.count, 2);
+        assert_eq!(ta.max(), 30.0);
+        assert_eq!(snap.sketch_label_values("mmserve_tbt_ms", "tenant"),
+                   vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(snap.sketch_label_values("mmserve_tbt_ms", "replica"),
+                   vec!["0".to_string(), "1".to_string()]);
+    }
+
+    /// Satellite: concurrent publishers + a snapshotting reader never
+    /// lose an update and never tear — counters sum exactly, sketch
+    /// counts match, and mid-run snapshots are internally consistent
+    /// (monotone counter reads).
+    #[test]
+    fn prop_concurrent_publish_snapshot_is_lossless() {
+        use std::sync::Arc;
+        prop_check(
+            8,
+            4242,
+            |r: &mut Rng| (r.usize(2, 4), r.usize(200, 800)),
+            |&(threads, per_thread)| {
+                let m = Arc::new(LiveMetrics::new());
+                let mut handles = Vec::new();
+                for t in 0..threads {
+                    let m = m.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let label = t.to_string();
+                        let c = m.counter("hits",
+                                          &[("replica", label.as_str())]);
+                        let s = m.sketch("lat",
+                                         &[("replica", label.as_str())]);
+                        for i in 0..per_thread {
+                            c.inc(1);
+                            s.record(1.0 + i as f64);
+                        }
+                    }));
+                }
+                // Reader thread: snapshots must be monotone per series.
+                let reader = {
+                    let m = m.clone();
+                    std::thread::spawn(move || {
+                        let mut last = 0u64;
+                        for _ in 0..50 {
+                            let snap = m.snapshot();
+                            let total: u64 = snap
+                                .counters
+                                .iter()
+                                .map(|(_, v)| v)
+                                .sum();
+                            if total < last {
+                                return Err(format!(
+                                    "counter sum went backwards: \
+                                     {total} < {last}"
+                                ));
+                            }
+                            last = total;
+                        }
+                        Ok(())
+                    })
+                };
+                for h in handles {
+                    h.join().map_err(|_| "publisher panicked")?;
+                }
+                reader.join().map_err(|_| "reader panicked")??;
+                let snap = m.snapshot();
+                let total: u64 =
+                    snap.counters.iter().map(|(_, v)| v).sum();
+                let want = (threads * per_thread) as u64;
+                if total != want {
+                    return Err(format!(
+                        "lost counter updates: {total} != {want}"
+                    ));
+                }
+                let sk_total: u64 =
+                    snap.sketches.iter().map(|(_, s)| s.count).sum();
+                if sk_total != want {
+                    return Err(format!(
+                        "lost sketch updates: {sk_total} != {want}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

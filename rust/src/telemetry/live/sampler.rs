@@ -1,0 +1,627 @@
+//! Per-tick fleet sampling and online idle-gap attribution.
+//!
+//! [`WorkerSampler`] is the publication point a replica worker (or
+//! replay driver) calls once per scheduler tick: it turns the pool's
+//! cumulative [`PoolStats`], the per-shard [`ShardView`]s, and the
+//! queue depth into labeled registry series (cumulative counters
+//! become deltas against the previous tick, point-in-time values
+//! become gauges), feeds the flight recorder one structured event per
+//! tick, and watches for preemption storms and SIGTERM. When both the
+//! registry and the recorder are disabled a sample is two relaxed
+//! atomic loads — the tracer's contract.
+//!
+//! [`OnlineAttribution`] is the incremental counterpart of
+//! [`Attribution::from_trace`]: the same gap classification, folded
+//! span-batch by span-batch (one batch per tick via
+//! `WorkerTracer::spans_since`) instead of over a retained
+//! whole-run trace, so `mmserve_idle_gap_ms` is queryable mid-run.
+
+use std::collections::BTreeMap;
+
+use crate::kvpool::{PoolStats, ShardView};
+use crate::substrate::json::Json;
+use crate::substrate::metrics::OpTimes;
+use crate::telemetry::attribution::{gap_label, Attribution,
+                                    GAP_CATEGORIES};
+use crate::telemetry::tracer::{Cat, Span};
+
+use super::recorder::FlightRecorder;
+use super::registry::{Counter, Gauge, LiveMetrics};
+
+/// The exported metric vocabulary — `ci/check_metrics.py` validates
+/// the Prometheus exposition against these names.
+pub const TICKS_TOTAL: &str = "mmserve_ticks_total";
+pub const QUEUE_DEPTH: &str = "mmserve_queue_depth";
+pub const PREFIX_HIT_RATE: &str = "mmserve_prefix_hit_rate";
+pub const PREFIX_LOOKUPS_TOTAL: &str = "mmserve_prefix_lookups_total";
+pub const PREFIX_HITS_TOTAL: &str = "mmserve_prefix_hits_total";
+pub const CAPACITY_WAIT_TICKS_TOTAL: &str =
+    "mmserve_capacity_wait_ticks_total";
+pub const PREEMPTIONS_TOTAL: &str = "mmserve_preemptions_total";
+pub const EVICTIONS_TOTAL: &str = "mmserve_evictions_total";
+pub const SHARD_SPILLS_TOTAL: &str = "mmserve_shard_spills_total";
+pub const LIVE_PAGES: &str = "mmserve_live_pages";
+pub const FREE_PAGES: &str = "mmserve_free_pages";
+pub const CACHED_PAGES: &str = "mmserve_cached_pages";
+pub const REQUESTS_COMPLETED_TOTAL: &str =
+    "mmserve_requests_completed_total";
+pub const TOKENS_DECODED_TOTAL: &str = "mmserve_tokens_decoded_total";
+pub const TTFT_MS: &str = "mmserve_ttft_ms";
+pub const TBT_MS: &str = "mmserve_tbt_ms";
+/// Router-side: requests handed to each replica (`model`, `replica`).
+pub const ROUTED_TOTAL: &str = "mmserve_routed_total";
+/// Batcher-side: arrivals into a replica's FCFS queue (`replica`).
+pub const ENQUEUED_TOTAL: &str = "mmserve_enqueued_total";
+/// Batcher-side: requests admitted to prefill (`replica`).
+pub const ADMITTED_TOTAL: &str = "mmserve_admitted_total";
+pub const IDLE_GAP_MS: &str = "mmserve_idle_gap_ms";
+pub const EXECUTE_MS: &str = "mmserve_execute_ms";
+
+struct ShardGauges {
+    live_pages: Gauge,
+    free_pages: Gauge,
+    cached_pages: Gauge,
+}
+
+/// One replica's per-tick publication point (cheap cached handles;
+/// own one per worker thread).
+pub struct WorkerSampler {
+    live: LiveMetrics,
+    recorder: FlightRecorder,
+    replica: String,
+    ticks: Counter,
+    queue_depth: Gauge,
+    hit_rate: Gauge,
+    prefix_lookups: Counter,
+    prefix_hits: Counter,
+    capacity_waits: Counter,
+    preemptions: Counter,
+    evictions: Counter,
+    spills: Counter,
+    requests: Counter,
+    tokens: Counter,
+    shard_gauges: Vec<ShardGauges>,
+    prev: PoolStats,
+    prev_completed: u64,
+    prev_tokens: u64,
+}
+
+impl WorkerSampler {
+    pub fn new(live: LiveMetrics, recorder: FlightRecorder,
+               replica: usize) -> Self {
+        let replica = replica.to_string();
+        let l = &[("replica", replica.as_str())];
+        WorkerSampler {
+            ticks: live.counter(TICKS_TOTAL, l),
+            queue_depth: live.gauge(QUEUE_DEPTH, l),
+            hit_rate: live.gauge(PREFIX_HIT_RATE, l),
+            prefix_lookups: live.counter(PREFIX_LOOKUPS_TOTAL, l),
+            prefix_hits: live.counter(PREFIX_HITS_TOTAL, l),
+            capacity_waits: live.counter(CAPACITY_WAIT_TICKS_TOTAL, l),
+            preemptions: live.counter(PREEMPTIONS_TOTAL, l),
+            evictions: live.counter(EVICTIONS_TOTAL, l),
+            spills: live.counter(SHARD_SPILLS_TOTAL, l),
+            requests: live.counter(REQUESTS_COMPLETED_TOTAL, l),
+            tokens: live.counter(TOKENS_DECODED_TOTAL, l),
+            shard_gauges: Vec::new(),
+            prev: PoolStats::default(),
+            prev_completed: 0,
+            prev_tokens: 0,
+            live,
+            recorder,
+            replica,
+        }
+    }
+
+    /// A sampler that publishes nowhere (both planes disabled).
+    pub fn disabled(replica: usize) -> Self {
+        Self::new(LiveMetrics::off(), FlightRecorder::disabled(),
+                  replica)
+    }
+
+    pub fn replica(&self) -> &str {
+        &self.replica
+    }
+
+    pub fn live(&self) -> &LiveMetrics {
+        &self.live
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// Publish one scheduler tick: cumulative `stats` counters become
+    /// per-tick deltas, point-in-time state becomes gauges, and the
+    /// flight recorder gets one structured event. Two relaxed atomic
+    /// loads when both planes are disabled.
+    pub fn sample_tick(&mut self, tick: u64, queue_depth: usize,
+                       stats: &PoolStats, shards: &[ShardView]) {
+        let live_on = self.live.is_enabled();
+        let rec_on = self.recorder.is_enabled();
+        if !live_on && !rec_on {
+            return;
+        }
+        let d_lookups =
+            stats.prefix_lookups.saturating_sub(self.prev.prefix_lookups);
+        let d_hits =
+            stats.prefix_hits.saturating_sub(self.prev.prefix_hits);
+        let d_waits = stats
+            .capacity_wait_ticks
+            .saturating_sub(self.prev.capacity_wait_ticks);
+        let d_preempt =
+            stats.preemptions.saturating_sub(self.prev.preemptions);
+        let d_evict =
+            stats.evictions.saturating_sub(self.prev.evictions);
+        let d_spills =
+            stats.shard_spills.saturating_sub(self.prev.shard_spills);
+        let live_pages: usize =
+            shards.iter().map(|s| s.live_pages).sum();
+        if live_on {
+            self.ticks.inc(1);
+            self.queue_depth.set(queue_depth as f64);
+            self.hit_rate.set(stats.hit_rate());
+            self.prefix_lookups.inc(d_lookups);
+            self.prefix_hits.inc(d_hits);
+            self.capacity_waits.inc(d_waits);
+            self.preemptions.inc(d_preempt);
+            self.evictions.inc(d_evict);
+            self.spills.inc(d_spills);
+            for (i, sv) in shards.iter().enumerate() {
+                if self.shard_gauges.len() <= i {
+                    let shard = i.to_string();
+                    let labels = &[("replica", self.replica.as_str()),
+                                   ("shard", shard.as_str())];
+                    self.shard_gauges.push(ShardGauges {
+                        live_pages: self.live.gauge(LIVE_PAGES, labels),
+                        free_pages: self.live.gauge(FREE_PAGES, labels),
+                        cached_pages: self
+                            .live
+                            .gauge(CACHED_PAGES, labels),
+                    });
+                }
+                let g = &self.shard_gauges[i];
+                g.live_pages.set(sv.live_pages as f64);
+                g.free_pages.set(sv.free_pages as f64);
+                g.cached_pages.set(sv.cached_pages as f64);
+            }
+        }
+        if rec_on {
+            self.recorder.poll_sigterm();
+            self.recorder.record(Json::from_obj(vec![
+                ("kind".into(), Json::Str("tick".into())),
+                ("replica".into(),
+                 Json::Str(self.replica.clone())),
+                ("tick".into(), Json::Num(tick as f64)),
+                ("queue_depth".into(),
+                 Json::Num(queue_depth as f64)),
+                ("live_pages".into(), Json::Num(live_pages as f64)),
+                ("hit_rate".into(), Json::Num(stats.hit_rate())),
+                ("capacity_waits".into(), Json::Num(d_waits as f64)),
+                ("preemptions".into(), Json::Num(d_preempt as f64)),
+                ("evictions".into(), Json::Num(d_evict as f64)),
+                ("spills".into(), Json::Num(d_spills as f64)),
+            ]));
+            self.recorder.note_preemptions(d_preempt);
+        }
+        self.prev = stats.clone();
+    }
+
+    /// Record a completed request's time-to-first-token (SLO sketch,
+    /// per replica × tenant).
+    pub fn observe_ttft_ms(&self, tenant: &str, ms: f64) {
+        self.live.observe(
+            TTFT_MS,
+            &[("replica", self.replica.as_str()), ("tenant", tenant)],
+            ms,
+        );
+    }
+
+    /// Record one inter-token gap (time-between-tokens).
+    pub fn observe_tbt_ms(&self, tenant: &str, ms: f64) {
+        self.live.observe(
+            TBT_MS,
+            &[("replica", self.replica.as_str()), ("tenant", tenant)],
+            ms,
+        );
+    }
+
+    /// Count a finished request and its decoded tokens.
+    pub fn note_completion(&self, decoded_tokens: u64) {
+        if !self.live.is_enabled() {
+            return;
+        }
+        self.requests.inc(1);
+        self.tokens.inc(decoded_tokens);
+    }
+
+    /// Publish run-total progress counters (cumulative inputs; the
+    /// sampler turns them into counter deltas) — the replay drivers'
+    /// batch alternative to per-request [`WorkerSampler::note_completion`].
+    pub fn note_progress(&mut self, completed_total: u64,
+                         tokens_total: u64) {
+        if !self.live.is_enabled() {
+            return;
+        }
+        self.requests
+            .inc(completed_total.saturating_sub(self.prev_completed));
+        self.tokens
+            .inc(tokens_total.saturating_sub(self.prev_tokens));
+        self.prev_completed = completed_total;
+        self.prev_tokens = tokens_total;
+    }
+}
+
+#[derive(Debug, Default)]
+struct TidFold {
+    /// First observed dispatch start (the wall window's left edge).
+    w0: Option<f64>,
+    /// Right edge of the execute union so far.
+    cursor: f64,
+    /// Attributable host spans that may still overlap a future gap,
+    /// t0-ordered.
+    pending: Vec<(f64, f64, &'static str)>,
+}
+
+/// Incremental idle-gap attribution: feed it span batches as they
+/// complete and read [`OnlineAttribution::snapshot`] at any tick.
+///
+/// Matches [`Attribution::from_trace`] exactly when batches are taken
+/// at span-quiescent points (no span open across the batch boundary —
+/// true for `WorkerTracer::spans_since` called between scheduler
+/// ticks), since then every host span overlapping a gap has completed
+/// by the time the gap's closing dispatch is folded.
+#[derive(Debug, Default)]
+pub struct OnlineAttribution {
+    tids: BTreeMap<u64, TidFold>,
+    gaps: OpTimes,
+    execute: f64,
+}
+
+impl OnlineAttribution {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one batch of completed spans (any worker mix; grouped by
+    /// `tid` internally, processed in start-time order).
+    pub fn observe(&mut self, spans: &[Span]) {
+        let mut order: Vec<&Span> = spans.iter().collect();
+        order.sort_by(|a, b| a.t0.total_cmp(&b.t0));
+        for s in order {
+            self.observe_span(s);
+        }
+    }
+
+    /// Fold a single completed span (callers batching per tick should
+    /// prefer [`OnlineAttribution::observe`], which restores
+    /// start-time order within the batch).
+    pub fn observe_span(&mut self, s: &Span) {
+        if s.cat == Cat::Execute {
+            let st = self.tids.entry(s.tid).or_default();
+            if st.w0.is_none() {
+                st.w0 = Some(s.t0);
+                st.cursor = s.t0;
+            }
+            if s.t0 > st.cursor {
+                classify_gap(st.cursor, s.t0, &st.pending,
+                             &mut self.gaps);
+            }
+            self.execute += (s.t1 - s.t0.max(st.cursor)).max(0.0);
+            st.cursor = st.cursor.max(s.t1);
+            let cursor = st.cursor;
+            st.pending.retain(|&(_, h1, _)| h1 > cursor);
+        } else if let Some(label) = gap_label(s.cat) {
+            let st = self.tids.entry(s.tid).or_default();
+            st.pending.push((s.t0, s.t1, label));
+        }
+    }
+
+    /// The attribution accumulated so far, in the same shape the
+    /// post-hoc pass produces (all buckets present; wall = per-worker
+    /// dispatch windows summed).
+    pub fn snapshot(&self) -> Attribution {
+        let mut gaps = self.gaps.clone();
+        for key in GAP_CATEGORIES {
+            gaps.add(key, 0.0);
+        }
+        let wall = self
+            .tids
+            .values()
+            .filter_map(|st| st.w0.map(|w0| st.cursor - w0))
+            .sum();
+        Attribution { execute: self.execute, gaps, wall }
+    }
+
+    /// Publish the current buckets as per-replica gauges
+    /// (`mmserve_idle_gap_ms{replica,bucket}` + execute time).
+    pub fn publish(&self, live: &LiveMetrics, replica: &str) {
+        if !live.is_enabled() {
+            return;
+        }
+        let a = self.snapshot();
+        for key in GAP_CATEGORIES {
+            live.set_gauge(
+                IDLE_GAP_MS,
+                &[("bucket", key), ("replica", replica)],
+                a.gaps.get(key) * 1e3,
+            );
+        }
+        live.set_gauge(EXECUTE_MS, &[("replica", replica)],
+                       a.execute * 1e3);
+    }
+}
+
+/// The per-gap sweep of `Attribution::accumulate_tid`, applied to one
+/// gap: host work claims its overlap in start order, uncovered
+/// remainder goes to `Other`. `pending` must be t0-ordered.
+fn classify_gap(g0: f64, g1: f64, pending: &[(f64, f64, &'static str)],
+                gaps: &mut OpTimes) {
+    let mut p = g0;
+    for &(h0, h1, label) in pending {
+        if h0 >= g1 {
+            break;
+        }
+        if h1 <= p {
+            continue;
+        }
+        let start = h0.max(p);
+        if start > p {
+            gaps.add("Other", start - p);
+            p = start;
+        }
+        let end = h1.min(g1);
+        if end > p {
+            gaps.add(label, end - p);
+            p = end;
+        }
+        if p >= g1 {
+            break;
+        }
+    }
+    if p < g1 {
+        gaps.add("Other", g1 - p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::tracer::Trace;
+
+    fn sp(cat: Cat, t0: f64, t1: f64) -> Span {
+        sp_on(cat, t0, t1, 1)
+    }
+
+    fn sp_on(cat: Cat, t0: f64, t1: f64, tid: u64) -> Span {
+        Span { name: cat.as_str().to_string(), cat, t0, t1, tid,
+               req: None, tick: None }
+    }
+
+    fn assert_matches_posthoc(spans: Vec<Span>) {
+        let trace = Trace {
+            spans: spans.clone(),
+            workers: vec![(1, "w".into())],
+        };
+        let posthoc = Attribution::from_trace(&trace);
+        let mut online = OnlineAttribution::new();
+        online.observe(&spans);
+        let got = online.snapshot();
+        assert!((got.wall - posthoc.wall).abs() < 1e-9,
+                "wall {} vs {}", got.wall, posthoc.wall);
+        assert!((got.execute - posthoc.execute).abs() < 1e-9,
+                "execute {} vs {}", got.execute, posthoc.execute);
+        for key in GAP_CATEGORIES {
+            assert!(
+                (got.gaps.get(key) - posthoc.gaps.get(key)).abs()
+                    < 1e-9,
+                "{key}: online {} vs post-hoc {}",
+                got.gaps.get(key),
+                posthoc.gaps.get(key)
+            );
+        }
+    }
+
+    #[test]
+    fn online_fold_matches_posthoc_attribution() {
+        assert_matches_posthoc(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Schedule, 1.0, 1.3),
+            sp(Cat::Tokenize, 1.3, 1.5),
+            sp(Cat::Sample, 1.5, 1.7),
+            sp(Cat::Upload, 1.7, 1.9),
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        // Wrapper spanning two gaps (the chunked-prefill shape).
+        assert_matches_posthoc(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::PrefillStall, 1.0, 3.0),
+            sp(Cat::Tokenize, 1.0, 1.2),
+            sp(Cat::Execute, 1.5, 2.5),
+            sp(Cat::Execute, 3.0, 4.0),
+        ]);
+        // Host work overlapping execute attributes nothing.
+        assert_matches_posthoc(vec![
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::Sample, 0.2, 0.4),
+            sp(Cat::Execute, 1.0, 2.0),
+        ]);
+        // Multi-worker traces fold per tid.
+        assert_matches_posthoc(vec![
+            sp_on(Cat::Execute, 0.0, 1.0, 1),
+            sp_on(Cat::KvWait, 1.0, 1.6, 1),
+            sp_on(Cat::Execute, 2.0, 3.0, 1),
+            sp_on(Cat::Execute, 0.5, 1.5, 2),
+            sp_on(Cat::Sample, 1.5, 1.8, 2),
+            sp_on(Cat::Execute, 2.0, 2.5, 2),
+        ]);
+    }
+
+    #[test]
+    fn per_tick_batches_equal_single_batch() {
+        // Feeding tick-sized batches (span-quiescent boundaries) must
+        // give the same answer as one big batch — the property the
+        // per-tick `spans_since` wiring depends on.
+        let ticks: Vec<Vec<Span>> = (0..20u64)
+            .map(|i| {
+                let t = i as f64;
+                vec![
+                    sp(Cat::Schedule, t, t + 0.1),
+                    sp(Cat::KvWait, t + 0.1, t + 0.2),
+                    sp(Cat::Execute, t + 0.3, t + 0.9),
+                    sp(Cat::Sample, t + 0.9, t + 0.95),
+                ]
+            })
+            .collect();
+        let mut batched = OnlineAttribution::new();
+        for tick in &ticks {
+            batched.observe(tick);
+        }
+        let all: Vec<Span> =
+            ticks.iter().flat_map(|t| t.iter().cloned()).collect();
+        let mut whole = OnlineAttribution::new();
+        whole.observe(&all);
+        let (a, b) = (batched.snapshot(), whole.snapshot());
+        assert!((a.wall - b.wall).abs() < 1e-9);
+        assert!((a.execute - b.execute).abs() < 1e-9);
+        for key in GAP_CATEGORIES {
+            assert!((a.gaps.get(key) - b.gaps.get(key)).abs() < 1e-9,
+                    "{key}");
+        }
+        assert_matches_posthoc(all);
+    }
+
+    #[test]
+    fn publish_exports_all_buckets() {
+        let live = LiveMetrics::new();
+        let mut online = OnlineAttribution::new();
+        online.observe(&[
+            sp(Cat::Execute, 0.0, 1.0),
+            sp(Cat::KvWait, 1.0, 1.5),
+            sp(Cat::Execute, 2.0, 3.0),
+        ]);
+        online.publish(&live, "0");
+        let snap = live.snapshot();
+        let kv = snap
+            .gauge(IDLE_GAP_MS,
+                   &[("bucket", "KvCapacity"), ("replica", "0")])
+            .unwrap();
+        assert!((kv - 500.0).abs() < 1e-6);
+        for key in GAP_CATEGORIES {
+            assert!(
+                snap.gauge(IDLE_GAP_MS,
+                           &[("bucket", key), ("replica", "0")])
+                    .is_some(),
+                "{key} missing"
+            );
+        }
+        assert!((snap.gauge(EXECUTE_MS, &[("replica", "0")]).unwrap()
+                 - 2000.0)
+                    .abs()
+                    < 1e-6);
+    }
+
+    fn shard_view(shard: usize, live: usize, free: usize,
+                  cached: usize) -> ShardView {
+        ShardView {
+            shard,
+            total_pages: live + free + cached,
+            free_pages: free,
+            live_pages: live,
+            cached_pages: cached,
+        }
+    }
+
+    #[test]
+    fn sampler_publishes_deltas_gauges_and_flight_events() {
+        let live = LiveMetrics::new();
+        let rec = FlightRecorder::new(16);
+        let mut sampler =
+            WorkerSampler::new(live.clone(), rec.clone(), 0);
+        let mut stats = PoolStats {
+            prefix_lookups: 10,
+            prefix_hits: 4,
+            capacity_wait_ticks: 1,
+            ..PoolStats::default()
+        };
+        sampler.sample_tick(0, 3, &stats,
+                            &[shard_view(0, 5, 3, 1),
+                              shard_view(1, 2, 6, 0)]);
+        stats.prefix_lookups = 25;
+        stats.prefix_hits = 9;
+        stats.capacity_wait_ticks = 3;
+        stats.evictions = 2;
+        sampler.sample_tick(1, 1, &stats,
+                            &[shard_view(0, 6, 2, 1),
+                              shard_view(1, 2, 6, 0)]);
+        sampler.observe_ttft_ms("a", 12.5);
+        sampler.observe_tbt_ms("a", 3.0);
+        sampler.note_completion(40);
+        let snap = live.snapshot();
+        let r = &[("replica", "0")];
+        assert_eq!(snap.counter(TICKS_TOTAL, r), Some(2));
+        // Cumulative inputs arrive as cumulative outputs via deltas.
+        assert_eq!(snap.counter(PREFIX_LOOKUPS_TOTAL, r), Some(25));
+        assert_eq!(snap.counter(PREFIX_HITS_TOTAL, r), Some(9));
+        assert_eq!(snap.counter(CAPACITY_WAIT_TICKS_TOTAL, r),
+                   Some(3));
+        assert_eq!(snap.counter(EVICTIONS_TOTAL, r), Some(2));
+        assert_eq!(snap.gauge(QUEUE_DEPTH, r), Some(1.0));
+        assert_eq!(
+            snap.gauge(LIVE_PAGES,
+                       &[("replica", "0"), ("shard", "0")]),
+            Some(6.0)
+        );
+        assert_eq!(
+            snap.gauge(FREE_PAGES,
+                       &[("replica", "0"), ("shard", "1")]),
+            Some(6.0)
+        );
+        let ttft = snap
+            .sketch(TTFT_MS, &[("replica", "0"), ("tenant", "a")])
+            .unwrap();
+        assert_eq!(ttft.count, 1);
+        assert_eq!(snap.counter(REQUESTS_COMPLETED_TOTAL, r), Some(1));
+        assert_eq!(snap.counter(TOKENS_DECODED_TOTAL, r), Some(40));
+        // One flight event per tick, valid JSON, dumpable.
+        assert_eq!(rec.buffered(), 2);
+        let dump = rec.trigger("test").unwrap();
+        for line in dump.lines() {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn sampler_detects_preemption_storms() {
+        let live = LiveMetrics::new();
+        let rec = FlightRecorder::new(8).with_storm_threshold(4);
+        let mut sampler =
+            WorkerSampler::new(live, rec.clone(), 1);
+        let mut stats = PoolStats::default();
+        sampler.sample_tick(0, 0, &stats, &[]);
+        stats.preemptions = 6; // +6 in one tick ≥ threshold
+        sampler.sample_tick(1, 0, &stats, &[]);
+        let dumps = rec.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].reason, "preemption-storm");
+    }
+
+    #[test]
+    fn disabled_sampler_publishes_nothing() {
+        let mut sampler = WorkerSampler::disabled(0);
+        let stats = PoolStats { preemptions: 100,
+                                ..PoolStats::default() };
+        sampler.sample_tick(0, 9, &stats, &[shard_view(0, 1, 1, 1)]);
+        sampler.observe_ttft_ms("a", 1.0);
+        sampler.note_completion(5);
+        sampler.note_progress(3, 30);
+        // Series handles register eagerly (so an enable flip works
+        // mid-run) but every value stays untouched.
+        let snap = sampler.live().snapshot();
+        assert!(snap.counters.iter().all(|(_, v)| *v == 0));
+        assert!(snap.gauges.iter().all(|(_, v)| *v == 0.0));
+        assert!(snap.sketches.iter().all(|(_, s)| s.is_empty()));
+        assert!(sampler.recorder().dumps().is_empty());
+        assert_eq!(sampler.recorder().buffered(), 0);
+    }
+}

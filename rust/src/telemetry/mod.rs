@@ -20,6 +20,10 @@
 //!   time-between-tokens histograms, per-category/per-stage totals).
 //! * [`report`] — the text report printed by `mmserve trace` next to
 //!   the analytical perfmodel projection.
+//! * [`live`] — the mid-run plane: labeled atomic registry with
+//!   streaming quantile sketches, per-tick fleet sampler, online
+//!   idle-gap attribution, flight recorder, and Prometheus text
+//!   exposition (`mmserve stats`, `--metrics-out`).
 //!
 //! Wiring: `Engine` holds an optional [`tracer::WorkerTracer`] and
 //! wraps every PJRT execute / upload / download / compile in a span;
@@ -31,12 +35,15 @@
 pub mod aggregate;
 pub mod attribution;
 pub mod chrome_trace;
+pub mod live;
 pub mod report;
 pub mod timeline;
 pub mod tracer;
 
 pub use aggregate::Aggregate;
 pub use attribution::Attribution;
+pub use live::{FlightRecorder, LiveMetrics, MetricsSnapshot,
+               OnlineAttribution, QuantileSketch, WorkerSampler};
 pub use report::TraceReport;
 pub use timeline::Timeline;
 pub use tracer::{Cat, ReqScope, Span, SpanGuard, TickScope, Trace,

@@ -81,8 +81,7 @@ impl Timeline {
             })
             .collect();
         ticks.sort_by(|a, b| {
-            a.t0.partial_cmp(&b.t0)
-                .unwrap()
+            a.t0.total_cmp(&b.t0)
                 .then_with(|| (a.tid, a.index).cmp(&(b.tid, b.index)))
         });
         Timeline { ticks }

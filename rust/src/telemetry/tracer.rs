@@ -249,6 +249,18 @@ impl WorkerTracer {
         TickScope { wt: self }
     }
 
+    /// Copy spans recorded since `cursor` (a count previously returned
+    /// by this method) without draining them, and return the new
+    /// cursor. The live sampler calls this once per scheduler tick to
+    /// fold idle-gap attribution online while the full buffer stays
+    /// intact for post-hoc reports; a `Tracer::drain` in between
+    /// resets the buffer, and the cursor clamp makes that safe.
+    pub fn spans_since(&self, cursor: usize) -> (usize, Vec<Span>) {
+        let sink = self.sink.lock().unwrap();
+        let start = cursor.min(sink.len());
+        (sink.len(), sink[start..].to_vec())
+    }
+
     /// Begin a span; it records itself on drop. Near-zero cost when
     /// tracing is disabled (one relaxed load, no clock read).
     pub fn span(&self, cat: Cat, name: &str) -> SpanGuard<'_> {
