@@ -1,7 +1,7 @@
 //! Telemetry overhead smoke bench: the disabled-tracing path must be
 //! indistinguishable from no tracing at all on the decode hot loop.
 //!
-//! Five regimes over the same synthetic inner loop:
+//! Six regimes over the same synthetic inner loop:
 //! * `no_tracer`      — the loop with no telemetry calls at all,
 //! * `tracer_off`     — spans requested but tracing disabled (the
 //!                      production default; one relaxed atomic load),
@@ -10,9 +10,12 @@
 //!                      registry (must match the tracer_off contract:
 //!                      one relaxed load, no lock, no allocation),
 //! * `live_on`        — cached-handle publishes into an enabled
-//!                      registry (counter bump + sketch bucket).
+//!                      registry (counter bump + sketch bucket),
+//! * `ledger_off`     — causal-ledger hooks against a disabled ledger
+//!                      (same one-relaxed-load contract).
 
 use mmserve::substrate::bench::{black_box, BenchSuite};
+use mmserve::telemetry::ledger::{RequestLedger, TickCharges};
 use mmserve::telemetry::live::LiveMetrics;
 use mmserve::telemetry::tracer::{Cat, Tracer};
 
@@ -104,6 +107,41 @@ fn main() {
     assert!(tbt.count() >= ITERS as u64,
             "enabled live registry must sketch");
 
+    let ledger = RequestLedger::off();
+    let ledger_off = suite.bench("ledger_off", || {
+        let mut acc = 0.0;
+        for i in 0..ITERS {
+            ledger.decoded(7, i as f64, 1.0, 0.5);
+            if ledger.is_enabled() {
+                // The per-tick charge path behind the same gate the
+                // serving loop uses (never taken here).
+                ledger.charge_tick(&TickCharges {
+                    dt: 1.0,
+                    blocked_on_capacity: false,
+                    waiting: &[],
+                    prefill: &[],
+                    pages: &[],
+                });
+            }
+            acc += step_work(i);
+        }
+        black_box(acc);
+    });
+    assert!(ledger.snapshot().requests.is_empty(),
+            "disabled ledger must record nothing");
+    // Same disabled-mode gate as the live plane: one relaxed load per
+    // would-be hook (decoded + the enabled check = 2 per iteration).
+    let ledger_ns_per_hook =
+        (ledger_off - base).max(0.0) * 1e9 / (ITERS as f64 * 2.0);
+    assert!(
+        ledger_ns_per_hook < 250.0,
+        "disabled ledger hook costs {ledger_ns_per_hook:.1} ns/op; \
+         the one-relaxed-load gate is broken"
+    );
+
+    println!(
+        "\n  ledger per-hook cost: disabled {ledger_ns_per_hook:.1} ns",
+    );
     println!(
         "\n  live plane per-publish cost: disabled {:.1} ns, \
          enabled (cached handles) {:.1} ns",

@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """CI gate for the live-metrics Prometheus exposition.
 
-Reads METRICS.prom (written by `mmserve stats --metrics-out`) and
-hard-fails — same contract as check_perf.py, nothing is silently
-skipped — unless:
+Reads one or two expositions (written by `mmserve stats
+--metrics-out`) and hard-fails — same contract as check_perf.py,
+nothing is silently skipped — unless:
 
 1. Every required metric is present with the expected `# TYPE`
    (counter / gauge / summary). A metric the sampler stops publishing
@@ -22,12 +22,23 @@ skipped — unless:
    completed, and the TTFT sketch is non-empty. A wiring regression
    that leaves the registry attached-but-unfed renders as all-zero
    series — presence checks alone would pass it.
+
+Two-snapshot mode (`check_metrics.py SMALLER.prom BIGGER.prom`):
+both files are fully validated, then the cumulative series are
+checked for per-label-set monotonicity. The snapshots come from two
+seeded replays of the same workload prefix (the second run replays a
+superset of the first run's requests), so every counter and summary
+`_sum`/`_count` series that counts delivered work must be >= its
+smaller-run value under the same label set, and no label set may
+vanish. A counter that resets — or a series that silently changes
+its labels between runs — trips here. Only work-proportional series
+are compared: tick/preemption/spill totals also depend on how the
+smaller run drains after its last arrival, so they are not
+prefix-comparable.
 """
 
 import math
 import sys
-
-EXPOSITION = sys.argv[1] if len(sys.argv) > 1 else "METRICS.prom"
 
 # name -> (type, required label keys). Summary samples may also carry
 # the reserved `quantile` label; it is not part of the series schema.
@@ -51,6 +62,22 @@ REQUIRED = {
     "mmserve_ttft_ms": ("summary", {"replica", "tenant"}),
     "mmserve_tbt_ms": ("summary", {"replica", "tenant"}),
 }
+
+# Cumulative series that grow with delivered work: when the second
+# snapshot replays a superset of the first run's requests, each of
+# these must be monotone per label set. (Ticks, preemptions, spills
+# and capacity waits also accumulate during the smaller run's drain
+# phase, so they are not comparable between different-length runs.)
+MONOTONE = [
+    "mmserve_enqueued_total",
+    "mmserve_admitted_total",
+    "mmserve_requests_completed_total",
+    "mmserve_tokens_decoded_total",
+    "mmserve_ttft_ms_count",
+    "mmserve_ttft_ms_sum",
+    "mmserve_tbt_ms_count",
+    "mmserve_tbt_ms_sum",
+]
 
 
 def parse_labels(body):
@@ -97,74 +124,146 @@ def parse(text):
     return types, samples
 
 
-def main():
-    failures = []
+def load(path):
     try:
-        with open(EXPOSITION) as f:
+        with open(path) as f:
             text = f.read()
     except OSError as e:
-        print(f"::error::cannot read {EXPOSITION}: {e}")
+        print(f"::error::cannot read {path}: {e}")
         sys.exit(1)
-
     try:
-        types, samples = parse(text)
+        return parse(text)
     except (AssertionError, ValueError, IndexError) as e:
-        print(f"::error::{EXPOSITION} is not valid Prometheus "
+        print(f"::error::{path} is not valid Prometheus "
               f"text exposition: {e!r}")
         sys.exit(1)
 
+
+def total(samples, name):
+    return sum(v for _, v in samples.get(name, []))
+
+
+def validate(path, types, samples):
+    """Schema + signal checks for one exposition."""
+    failures = []
     for name, (kind, keys) in sorted(REQUIRED.items()):
         if types.get(name) != kind:
             failures.append(
-                f"{name}: expected `# TYPE {name} {kind}`, "
+                f"{path}: {name}: expected `# TYPE {name} {kind}`, "
                 f"got {types.get(name)!r}")
             continue
         rows = samples.get(name, [])
         if not rows:
-            failures.append(f"{name}: no samples")
+            failures.append(f"{path}: {name}: no samples")
             continue
         for labels, value in rows:
             got = set(labels) - {"quantile"}
             if got != keys:
                 failures.append(
-                    f"{name}: label schema {sorted(got)} != "
+                    f"{path}: {name}: label schema {sorted(got)} != "
                     f"required {sorted(keys)}")
                 break
             if not math.isfinite(value):
-                failures.append(f"{name}: non-finite sample {value}")
+                failures.append(
+                    f"{path}: {name}: non-finite sample {value}")
                 break
             if kind == "counter" and value < 0:
-                failures.append(f"{name}: negative counter {value}")
+                failures.append(
+                    f"{path}: {name}: negative counter {value}")
                 break
         if kind == "summary":
             for suffix in ("_sum", "_count"):
                 if not samples.get(name + suffix):
-                    failures.append(f"{name}: missing {name}{suffix}")
-
-    def total(name):
-        return sum(v for _, v in samples.get(name, []))
+                    failures.append(
+                        f"{path}: {name}: missing {name}{suffix}")
 
     if not failures:
-        if total("mmserve_ticks_total") <= 0:
-            failures.append("mmserve_ticks_total: no ticks published "
-                            "(sampler not wired?)")
-        if total("mmserve_requests_completed_total") <= 0:
-            failures.append("mmserve_requests_completed_total: zero — "
-                            "the replay completed nothing")
-        if total("mmserve_ttft_ms_count") <= 0:
-            failures.append("mmserve_ttft_ms: empty sketch — TTFT "
-                            "observation not wired")
+        if total(samples, "mmserve_ticks_total") <= 0:
+            failures.append(
+                f"{path}: mmserve_ticks_total: no ticks published "
+                "(sampler not wired?)")
+        if total(samples, "mmserve_requests_completed_total") <= 0:
+            failures.append(
+                f"{path}: mmserve_requests_completed_total: zero — "
+                "the replay completed nothing")
+        if total(samples, "mmserve_ttft_ms_count") <= 0:
+            failures.append(
+                f"{path}: mmserve_ttft_ms: empty sketch — TTFT "
+                "observation not wired")
+    return failures
+
+
+def series_map(samples, name):
+    return {frozenset(l.items()): v for l, v in samples.get(name, [])}
+
+
+def fmt_labels(labels):
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels))
+    return "{" + inner + "}"
+
+
+def check_monotone(smaller, bigger):
+    """Per-label-set monotonicity of cumulative series."""
+    pa, sa = smaller
+    pb, sb = bigger
+    failures = []
+    for name in MONOTONE:
+        older = series_map(sa, name)
+        newer = series_map(sb, name)
+        if not older:
+            failures.append(
+                f"{name}: no samples in {pa} to compare against")
+            continue
+        for labels, v1 in sorted(older.items(),
+                                 key=lambda kv: sorted(kv[0])):
+            v2 = newer.get(labels)
+            pretty = f"{name}{fmt_labels(labels)}"
+            if v2 is None:
+                failures.append(
+                    f"{pretty}: series present in {pa} but missing "
+                    f"from {pb} (label set changed between runs?)")
+            elif v2 < v1:
+                failures.append(
+                    f"{pretty}: not monotone over a superset replay: "
+                    f"{pa} has {v1}, {pb} has {v2}")
+    return failures
+
+
+def main():
+    paths = sys.argv[1:] or ["METRICS.prom"]
+    if len(paths) > 2:
+        print("::error::usage: check_metrics.py [EXPOSITION "
+              "[BIGGER_EXPOSITION]]")
+        sys.exit(2)
+
+    snaps = [(p, *load(p)) for p in paths]
+    failures = []
+    for path, types, samples in snaps:
+        failures += validate(path, types, samples)
+
+    checked_monotone = 0
+    if len(snaps) == 2 and not failures:
+        mono = check_monotone(
+            (snaps[0][0], snaps[0][2]), (snaps[1][0], snaps[1][2]))
+        failures += mono
+        checked_monotone = len(MONOTONE)
 
     if failures:
         for f_ in failures:
             print(f"::error::{f_}")
         sys.exit(1)
 
-    n_series = sum(len(v) for v in samples.values())
-    print(f"metrics gate ok: {len(REQUIRED)} required metrics, "
-          f"{n_series} sample lines, "
-          f"{int(total('mmserve_ticks_total'))} ticks, "
-          f"{int(total('mmserve_requests_completed_total'))} requests")
+    for path, _, samples in snaps:
+        n_series = sum(len(v) for v in samples.values())
+        print(
+            f"metrics gate ok: {path}: {len(REQUIRED)} required "
+            f"metrics, {n_series} sample lines, "
+            f"{int(total(samples, 'mmserve_ticks_total'))} ticks, "
+            f"{int(total(samples, 'mmserve_requests_completed_total'))}"
+            " requests")
+    if checked_monotone:
+        print(f"monotonicity ok: {checked_monotone} cumulative series "
+              f"checked across {paths[0]} -> {paths[1]}")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,9 @@
 """CI perf gate for the deterministic replay benchmarks.
 
 Reads BENCH_kvpool.json and BENCH_routing.json (written by
-`mmserve kv --bench-json`) plus BENCH_stats.json (written by
-`mmserve stats --bench-json`) and checks them three ways:
+`mmserve kv --bench-json`), BENCH_stats.json (written by
+`mmserve stats --bench-json`), and BENCH_explain.json (written by
+`mmserve explain --bench-json`) and checks them three ways:
 
 1. Hard invariants that must hold on any commit:
    - no replayed request is dropped (monolithic, sharded, or routed),
@@ -13,7 +14,9 @@ Reads BENCH_kvpool.json and BENCH_routing.json (written by
    - the sharded replay completes exactly what the monolithic one does
      (page placement must never change workload outcomes),
    - attaching the live metrics plane leaves the simulated clock
-     bit-identical (observation must never change scheduling).
+     bit-identical (observation must never change scheduling),
+   - attaching the causal cost ledger leaves the simulated clock
+     bit-identical (same pure-observation contract).
 
 2. Required schema: every metric path listed under "schema" in
    ci/perf-baseline.json must exist in the fresh bench output. A
@@ -56,10 +59,12 @@ def main():
     kv = json.load(open("BENCH_kvpool.json"))
     rt = json.load(open("BENCH_routing.json"))
     st = json.load(open("BENCH_stats.json"))
+    ex = json.load(open("BENCH_explain.json"))
     docs = {
         "BENCH_kvpool.json": kv,
         "BENCH_routing.json": rt,
         "BENCH_stats.json": st,
+        "BENCH_explain.json": ex,
     }
 
     # ---- hard invariants -------------------------------------------
@@ -98,6 +103,14 @@ def main():
             "live metrics plane changed replay outcomes "
             f"(sim_time_delta = {dig(st, 'live.sim_time_delta')!r})"
         )
+    # Same contract for the causal cost ledger: pure observation.
+    if dig(ex, "ledger.sim_time_delta") != 0:
+        failures.append(
+            "causal cost ledger changed replay outcomes "
+            f"(sim_time_delta = {dig(ex, 'ledger.sim_time_delta')!r})"
+        )
+    if (dig(ex, "ledger.completed") or 0) <= 0:
+        failures.append("ledger replay completed no requests")
 
     base = json.load(open(BASELINE))
 

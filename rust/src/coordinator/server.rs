@@ -46,6 +46,7 @@ use crate::sched::{ExecDims, PlannedChunk, SchedConfig, Scheduler,
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
+use crate::telemetry::ledger::{RequestLedger, TickCharges};
 use crate::telemetry::live::sampler::ROUTED_TOTAL;
 use crate::telemetry::live::{FlightRecorder, LiveMetrics,
                              OnlineAttribution, WorkerSampler};
@@ -97,6 +98,12 @@ pub struct RouterConfig {
     /// Shared flight recorder: bounded ring of per-tick events dumped
     /// on crash, preemption storm, or SIGTERM. `None` disables.
     pub flight: Option<FlightRecorder>,
+    /// Per-request causal cost ledger (`mmserve explain`): each
+    /// worker records enqueue, admission, prefill chunks, preemptions,
+    /// decode ticks, waiting buckets and completion per request,
+    /// stamped with wall seconds since the worker started. `None`
+    /// (the default) records nothing.
+    pub ledger: Option<RequestLedger>,
     /// Worker threads per model family (each with its own engine and
     /// KV pool). 1 (the default) is the seed topology.
     pub replicas: usize,
@@ -117,6 +124,7 @@ impl Default for RouterConfig {
             tracer: None,
             live: None,
             flight: None,
+            ledger: None,
             replicas: 1,
             policy: RoutingPolicy::PrefixAffinity,
         }
@@ -600,13 +608,55 @@ impl StepExecutor for BatchedExecutor<'_, '_> {
     }
 }
 
+/// One worker's view of the shared request ledger: the handle plus
+/// the worker's epoch, so every hook is stamped with wall seconds
+/// since this worker started (the ledger API takes `f64` seconds,
+/// matching the replay drivers' simulated clock).
+struct WorkerLedger {
+    ledger: RequestLedger,
+    epoch: Instant,
+    replica: u32,
+}
+
+impl WorkerLedger {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+/// End-of-tick ledger charge: split the tick's wall time across the
+/// requests still waiting in staging (preempted / capacity-blocked /
+/// queued, disambiguated by the ledger's per-request state). The real
+/// path charges waiting buckets only — per-request page counts and
+/// prefill compute shares are replay-driver refinements.
+fn charge_ledger_tick(ledger: Option<&WorkerLedger>,
+                      tick_started: Option<Instant>, blocked: bool,
+                      st: &WorkerState) {
+    let (Some(wl), Some(t0)) = (ledger, tick_started) else {
+        return;
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    if dt <= 0.0 {
+        return;
+    }
+    let waiting: Vec<u64> = st.staging.keys().copied().collect();
+    wl.ledger.charge_tick(&TickCharges {
+        dt,
+        blocked_on_capacity: blocked,
+        waiting: &waiting,
+        prefill: &[],
+        pages: &[],
+    });
+}
+
 /// The pool ran dry while `slot` needed a page for `fed`: preempt
 /// latest-admitted sequences (requeueing them for recompute) until the
 /// advance fits, we evict ourselves, or nothing is left to evict.
 /// Victims can be decoding jobs (requeued as `Resume`) or mid-prefill
 /// requests (requeued to restart their chunked prefill).
 fn preempt_for_growth(slots: &mut PagedKvSlots, st: &mut WorkerState,
-                      slot: usize, fed: i32) -> Result<Growth> {
+                      slot: usize, fed: i32,
+                      ledger: Option<&WorkerLedger>) -> Result<Growth> {
     let this_req = slots.request_at(slot)?;
     // On a sharded pool, target the grower's arena first so the freed
     // pages land where the stalled advance wants them (monolithic
@@ -618,6 +668,9 @@ fn preempt_for_growth(slots: &mut PagedKvSlots, st: &mut WorkerState,
         else {
             return Ok(Growth::Capped);
         };
+        if let Some(wl) = ledger {
+            wl.ledger.preempted(pre.request, wl.now());
+        }
         if let Some(pf) = st.prefills.remove(&pre.request) {
             // Mid-prefill victim: restart its chunked prefill, FCFS
             // position restored at the queue front.
@@ -750,9 +803,16 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
                              slots: &mut PagedKvSlots,
                              st: &mut WorkerState,
                              tele: Option<&WorkerTracer>,
-                             sampler: Option<&WorkerSampler>)
+                             sampler: Option<&WorkerSampler>,
+                             ledger: Option<&WorkerLedger>)
                              -> Result<()> {
     let dims = exec.plan_dims();
+    // Causal ledger: resolve the enabled gate once per tick (the
+    // disabled cost is this one relaxed load) and remember the tick
+    // start so waiting requests can be charged the tick's wall time.
+    let ledger = ledger.filter(|wl| wl.ledger.is_enabled());
+    let tick_started = ledger.map(|_| Instant::now());
+    let blocked = plan.blocked_on_capacity;
     // Admission blocked on pages: count the tick and mark the host
     // window so idle-gap attribution buckets it as KvCapacity. The
     // span is held only when the tick planned *no prefill work at
@@ -849,6 +909,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
                 }
             }
         };
+        if let Some(wl) = ledger {
+            wl.ledger.admitted(q.id, len, wl.now());
+        }
         match exec.prefill_chunk(slot, &tokens[..len], 0, is_last)? {
             Some(logits) => {
                 st.sched.chunk_committed(q.id, len);
@@ -858,6 +921,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
                     PrefillState { slot, tokens, staged, started },
                     &logits,
                 );
+                if let Some(wl) = ledger {
+                    wl.ledger.first_token(q.id, wl.now());
+                }
             }
             None => {
                 st.sched.chunk_committed(q.id, len);
@@ -931,6 +997,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
         match slots.extend_chunk(r.slot, &chunk) {
             Ok(_) => {
                 st.sched.chunk_committed(r.request, r.len);
+                if let Some(wl) = ledger {
+                    wl.ledger.prefill_chunk(r.request, r.len, wl.now());
+                }
                 if r.is_last {
                     let row = final_logits
                         .iter()
@@ -942,6 +1011,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
                             let _scope =
                                 tele.map(|t| t.req_scope(r.request));
                             finish_prefill(st, tele, pf, &row);
+                            if let Some(wl) = ledger {
+                                wl.ledger.first_token(r.request, wl.now());
+                            }
                         }
                         (Some(pf), None) => {
                             // No final logits captured: structural
@@ -991,12 +1063,20 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
 
     // ---- one batched decode step for all decoding slots -------------
     if st.jobs.iter().all(|j| j.is_none()) {
+        charge_ledger_tick(ledger, tick_started, blocked, st);
         return Ok(());
     }
     let step_span = tele.map(|t| t.span(Cat::Decode, "decode_step"));
     let step_started = Instant::now();
     let feeds = build_feeds(dims.batch, slots, st);
     let logits = exec.decode_step(&feeds)?;
+    // Ledger TBT: the batched step's wall time is every decoding
+    // slot's time-between-tokens; its compute share splits it evenly
+    // (matching the live plane's streaming approximation above the
+    // exact post-hoc Sample-span histogram).
+    let step_dt = ledger.map(|_| step_started.elapsed().as_secs_f64());
+    let decoding_n =
+        st.jobs.iter().filter(|j| j.is_some()).count().max(1);
 
     for (slot, req, _) in slots.live_slots() {
         // A preemption earlier in this pass may have freed the slot.
@@ -1027,6 +1107,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
             tok == tokenizer::EOS
                 || job.tokens.len() >= job.item.request.max_new_tokens
         };
+        if let (Some(wl), Some(dt)) = (ledger, step_dt) {
+            wl.ledger.decoded(req, wl.now(), dt, dt / decoding_n as f64);
+        }
         let mut done = sampled_done;
         if !done {
             // The cache now holds the token we just fed; record it in
@@ -1035,7 +1118,8 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
             match slots.advance(slot, fed) {
                 Ok(_) => {}
                 Err(KvError::CapacityExhausted { .. }) => {
-                    match preempt_for_growth(slots, st, slot, fed)? {
+                    match preempt_for_growth(slots, st, slot, fed,
+                                             ledger)? {
                         Growth::Advanced => {}
                         Growth::SelfPreempted => continue,
                         Growth::Capped => done = true,
@@ -1052,6 +1136,9 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
             };
             slots.release(slot)?;
             st.sched.finished(req);
+            if let Some(wl) = ledger {
+                wl.ledger.completed(req, wl.now());
+            }
             if let Some(s) = sampler {
                 s.observe_ttft_ms("-", job.ttft * 1e3);
                 s.note_completion(job.tokens.len() as u64);
@@ -1074,6 +1161,7 @@ fn run_tick<E: StepExecutor>(exec: &mut E, plan: TickPlan,
         }
     }
     drop(step_span);
+    charge_ledger_tick(ledger, tick_started, blocked, st);
     Ok(())
 }
 
@@ -1144,6 +1232,14 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
     if let Some(s) = &sampler {
         st.sched.attach_live(s.live(), replica);
     }
+    // Per-request causal ledger (`mmserve explain`): event stamps are
+    // wall seconds since this worker started. Absent (the default),
+    // or disabled, every hook costs one relaxed load per tick.
+    let wledger = cfg.ledger.as_ref().map(|l| WorkerLedger {
+        ledger: l.clone(),
+        epoch: Instant::now(),
+        replica: replica as u32,
+    });
     let mut online = OnlineAttribution::new();
     let mut span_cursor = 0usize;
     let mut tick_no = 0u64;
@@ -1154,7 +1250,8 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             match rx.try_recv() {
                 Ok(item) => {
                     cell.note_dequeued();
-                    intake_decoder_item(item, &session, &mut st, tele)?
+                    intake_decoder_item(item, &session, &mut st, tele,
+                                        wledger.as_ref())?
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -1181,7 +1278,8 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             match rx.recv() {
                 Ok(item) => {
                     cell.note_dequeued();
-                    intake_decoder_item(item, &session, &mut st, tele)?
+                    intake_decoder_item(item, &session, &mut st, tele,
+                                        wledger.as_ref())?
                 }
                 Err(_) => return Ok(()),
             }
@@ -1234,7 +1332,7 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
             stalled = 0;
         }
         run_tick(&mut exec, plan, &mut slots, &mut st, tele,
-                 sampler.as_ref())?;
+                 sampler.as_ref(), wledger.as_ref())?;
         // End-of-tick publication: fleet sample, then fold the spans
         // this tick produced into the online idle-gap attribution
         // (span batches between ticks are quiescent, so the fold
@@ -1264,7 +1362,8 @@ fn decoder_worker(engine: &Engine, cfg: RouterConfig,
 /// non-batchable tasks inline, otherwise tokenize (traced) and queue.
 fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
                        st: &mut WorkerState,
-                       tele: Option<&WorkerTracer>) -> Result<()> {
+                       tele: Option<&WorkerTracer>,
+                       ledger: Option<&WorkerLedger>) -> Result<()> {
     // Non-batchable tasks (T-I contrastive) run inline.
     if item.request.task == TaskKind::TextToImage {
         let resp = serve_one_decoder(session, &item.request);
@@ -1281,6 +1380,13 @@ fn intake_decoder_item(item: WorkItem, session: &DecoderSession,
         prompt_len: prompt.len(),
         max_new_tokens: item.request.max_new_tokens,
     });
+    // "-" matches the live plane's tenant-less real-path label.
+    if let Some(wl) = ledger {
+        if wl.ledger.is_enabled() {
+            wl.ledger.enqueued(item.request.id, wl.replica, "-",
+                               prompt.len(), wl.now());
+        }
+    }
     st.staging.insert(item.request.id, Staged::Fresh(item));
     Ok(())
 }

@@ -32,6 +32,7 @@ use crate::sched::{SchedConfig, Scheduler};
 use crate::substrate::metrics::Histogram;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
+use crate::telemetry::ledger::{RequestLedger, TickCharges};
 use crate::telemetry::live::{FlightRecorder, LiveMetrics,
                              WorkerSampler};
 
@@ -163,6 +164,9 @@ pub struct ReplayResult {
     pub label: &'static str,
     pub slots: usize,
     pub decode_ticks: u64,
+    /// Scheduler ticks taken in total (prefill-only and shed ticks
+    /// included — the causal ledger's tick-overhead denominator).
+    pub ticks: u64,
     pub completed: usize,
     pub dropped: usize,
     pub tokens_decoded: u64,
@@ -241,6 +245,11 @@ pub struct SimWorker {
     /// Live-metrics publication point; pure observation — attaching
     /// one never changes scheduling, clocks, or outputs.
     sampler: Option<WorkerSampler>,
+    /// Per-request causal ledger plus the replica id it stamps; the
+    /// same pure-observation contract as the sampler.
+    ledger: Option<(RequestLedger, u32)>,
+    /// Page granularity for the ledger's page-seconds charge.
+    page_size: usize,
     /// Ticks taken (the sampler's tick axis; counts no-op ticks too).
     ticks_seen: u64,
 }
@@ -291,6 +300,8 @@ impl SimWorker {
             dead: false,
             tenant_of: HashMap::new(),
             sampler: None,
+            ledger: None,
+            page_size: cfg.page_size.max(1),
             ticks_seen: 0,
         }
     }
@@ -303,6 +314,16 @@ impl SimWorker {
         let replica = sampler.replica().parse().unwrap_or(0);
         self.sched.attach_live(sampler.live(), replica);
         self.sampler = Some(sampler);
+    }
+
+    /// Attach the per-request causal ledger: delivery, admission,
+    /// prefill chunks, decode ticks, preemptions, shard spills and
+    /// completion are recorded per request with the simulated clock,
+    /// and every tick bulk-charges waiting/compute/page-second
+    /// buckets. Pure observation, like the sampler.
+    pub fn attach_ledger(&mut self, ledger: &RequestLedger,
+                         replica: u32) {
+        self.ledger = Some((ledger.clone(), replica));
     }
 
     /// Hand one request to this worker (enqueue + stage), arriving at
@@ -319,6 +340,10 @@ impl SimWorker {
         });
         self.arrived.insert(req.id, self.now);
         self.tenant_of.insert(req.id, req.tenant);
+        if let Some((led, replica)) = &self.ledger {
+            led.enqueued(req.id, *replica, &req.tenant.to_string(),
+                         req.tokens.len(), self.now);
+        }
     }
 
     /// Anything queued, mid-prefill, or decoding? (A crashed worker
@@ -343,6 +368,12 @@ impl SimWorker {
     /// distinct device shards holding them)`.
     pub fn probe_shards(&self, tokens: &[i32]) -> (usize, usize) {
         self.kv.probe_prefix_shards(tokens)
+    }
+
+    /// This worker's simulated clock (the routing replay stamps
+    /// fleet-level ledger events with the receiving worker's time).
+    pub fn now(&self) -> f64 {
+        self.now
     }
 
     /// Crashed? (set by [`SimWorker::kill`]).
@@ -418,10 +449,24 @@ impl SimWorker {
                               self.tokens_decoded);
     }
 
+    /// Cross-shard spill counter (0 on dense pools) — the ledger
+    /// diffs it around page-claiming calls to attribute spills.
+    fn spills_now(&self) -> u64 {
+        self.kv.stats().map(|s| s.shard_spills).unwrap_or(0)
+    }
+
     fn tick_inner(&mut self) {
+        // Causal-ledger handle for this tick (a cheap Arc clone);
+        // None when detached *or disabled*, so the uninstrumented hot
+        // path pays one relaxed load per tick and nothing else.
+        let ledger = match &self.ledger {
+            Some((l, r)) if l.is_enabled() => Some((l.clone(), *r)),
+            _ => None,
+        };
         // ---- plan ------------------------------------------------------
         let view = self.kv.capacity_view();
         let plan = self.sched.plan(&view);
+        let blocked = plan.blocked_on_capacity;
         if plan.blocked_on_capacity {
             self.kv.note_capacity_wait();
         }
@@ -456,6 +501,9 @@ impl SimWorker {
         let mut tick_prefill = 0usize;
         let mut finished_prefill: Vec<u64> = Vec::new();
         let mut requeue: Vec<QueuedRequest> = Vec::new();
+        // `(request, prompt tokens fed this tick)` — the ledger's
+        // per-request prefill-compute charge (empty when detached).
+        let mut fed: Vec<(u64, usize)> = Vec::new();
         for c in &plan.chunks {
             if c.start == 0 {
                 let Some(p) = self.staging.remove(&c.request) else {
@@ -463,10 +511,22 @@ impl SimWorker {
                     continue;
                 };
                 let len = c.len.min(p.tokens.len());
-                match self.kv.alloc(c.request, &p.tokens[..len]) {
+                let spill0 = ledger.as_ref().map(|_| self.spills_now());
+                let allocated = self.kv.alloc(c.request, &p.tokens[..len]);
+                if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
+                    let d = self.spills_now().saturating_sub(s0);
+                    for _ in 0..d {
+                        led.spill(c.request, self.now);
+                    }
+                }
+                match allocated {
                     Ok(_) => {
                         tick_prefill += len;
                         self.sched.chunk_committed(c.request, len);
+                        if let Some((led, _)) = &ledger {
+                            led.admitted(c.request, len, self.now);
+                            fed.push((c.request, len));
+                        }
                         if len >= p.tokens.len() {
                             self.remaining.insert(c.request, p.remaining);
                             finished_prefill.push(c.request);
@@ -507,10 +567,22 @@ impl SimWorker {
                 let chunk: Vec<i32> = self.inflight[&c.request].tokens
                     [start..start + len]
                     .to_vec();
-                match self.kv.extend_chunk(slot, &chunk) {
+                let spill0 = ledger.as_ref().map(|_| self.spills_now());
+                let extended = self.kv.extend_chunk(slot, &chunk);
+                if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
+                    let d = self.spills_now().saturating_sub(s0);
+                    for _ in 0..d {
+                        led.spill(c.request, self.now);
+                    }
+                }
+                match extended {
                     Ok(_) => {
                         tick_prefill += len;
                         self.sched.chunk_committed(c.request, len);
+                        if let Some((led, _)) = &ledger {
+                            led.prefill_chunk(c.request, len, self.now);
+                            fed.push((c.request, len));
+                        }
                         if start + len >= total {
                             let p = self
                                 .inflight
@@ -577,6 +649,41 @@ impl SimWorker {
                                           self.now - t0);
                     }
                 }
+                if let Some((led, _)) = &ledger {
+                    led.first_token(*req, self.now);
+                }
+            }
+        }
+        // ---- per-tick ledger charges -----------------------------------
+        // Who waited (and why), whose prefill compute the tick
+        // carried, and pages held across it. Placed before the decode
+        // loop so prefill-only ticks still charge the waiters;
+        // zero-cost shed ticks never reach this point.
+        if let Some((led, _)) = &ledger {
+            if tick_cost > 0.0 {
+                let waiting: Vec<u64> =
+                    self.staging.keys().copied().collect();
+                let prefill: Vec<(u64, f64)> = fed
+                    .iter()
+                    .map(|&(id, n)| {
+                        (id, n as f64 * SIM_PREFILL_TOKEN_COST)
+                    })
+                    .collect();
+                let pages: Vec<(u64, u64)> = self
+                    .kv
+                    .live_slots()
+                    .into_iter()
+                    .map(|(_, req, pos)| {
+                        (req, pos.div_ceil(self.page_size) as u64)
+                    })
+                    .collect();
+                led.charge_tick(&TickCharges {
+                    dt: tick_cost,
+                    blocked_on_capacity: blocked,
+                    waiting: &waiting,
+                    prefill: &prefill,
+                    pages: &pages,
+                });
             }
         }
         if decoding.is_empty() {
@@ -585,6 +692,9 @@ impl SimWorker {
         self.decode_ticks += 1;
         self.occupancy_sum += decoding.len() as u64;
         self.peak = self.peak.max(decoding.len());
+        // A request's own share of the batched dispatch; the rest of
+        // its tick latency is batch-interference idle in the ledger.
+        let share = SIM_DECODE_COST / decoding.len() as f64;
         if let Some(pool) = self.kv.pool() {
             self.util_sum +=
                 pool.live_pages() as f64 / pool.total_pages() as f64;
@@ -609,6 +719,9 @@ impl SimWorker {
                     s.observe_tbt_ms(&tenant.to_string(), tick_cost);
                 }
             }
+            if let Some((led, _)) = &ledger {
+                led.decoded(req, self.now, tick_cost, share);
+            }
             let rem = {
                 let r = self.remaining.get_mut(&req).expect("live job");
                 *r -= 1;
@@ -625,9 +738,20 @@ impl SimWorker {
                 self.remaining.remove(&req);
                 self.sched.finished(req);
                 self.completed += 1;
+                if let Some((led, _)) = &ledger {
+                    led.completed(req, self.now);
+                }
                 continue;
             }
-            match self.kv.advance(slot, tok) {
+            let spill0 = ledger.as_ref().map(|_| self.spills_now());
+            let advanced = self.kv.advance(slot, tok);
+            if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
+                let d = self.spills_now().saturating_sub(s0);
+                for _ in 0..d {
+                    led.spill(req, self.now);
+                }
+            }
+            match advanced {
                 Ok(_) => {}
                 Err(KvError::MaxSeq { .. }) => {
                     // Sequence cap: finish early, like the server loop.
@@ -635,6 +759,9 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    if let Some((led, _)) = &ledger {
+                        led.completed(req, self.now);
+                    }
                 }
                 Err(KvError::CapacityExhausted { .. }) => {
                     self.preempt_until_fits(slot, req, tok);
@@ -644,6 +771,9 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    if let Some((led, _)) = &ledger {
+                        led.completed(req, self.now);
+                    }
                 }
             }
         }
@@ -653,6 +783,10 @@ impl SimWorker {
     /// sharded pool targeting the grower's arena first) until the
     /// advance fits or we evicted ourselves.
     fn preempt_until_fits(&mut self, slot: usize, req: u64, tok: i32) {
+        let ledger = match &self.ledger {
+            Some((l, r)) if l.is_enabled() => Some((l.clone(), *r)),
+            _ => None,
+        };
         let prefer = self.kv.growth_shard(req);
         loop {
             let Some((_vslot, pre)) =
@@ -661,6 +795,9 @@ impl SimWorker {
                 break;
             };
             let victim = pre.request;
+            if let Some((led, _)) = &ledger {
+                led.preempted(victim, self.now);
+            }
             if let Some(p) = self.inflight.remove(&victim) {
                 // Mid-prefill victim restarts its chunks.
                 self.sched.requeue_front(QueuedRequest {
@@ -702,6 +839,9 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    if let Some((led, _)) = &ledger {
+                        led.completed(req, self.now);
+                    }
                     break;
                 }
             }
@@ -720,6 +860,7 @@ impl SimWorker {
             label,
             slots: self.slots_n,
             decode_ticks: self.decode_ticks,
+            ticks: self.ticks_seen,
             completed: self.completed,
             dropped: self.dropped,
             tokens_decoded: self.tokens_decoded,
@@ -781,6 +922,31 @@ pub fn replay_live(cfg: &ReplayConfig, paged: bool,
     let mut w = SimWorker::new(cfg, paged);
     w.attach_sampler(WorkerSampler::new(live.clone(),
                                         recorder.clone(), 0));
+    for req in generate_workload(cfg) {
+        w.deliver(&req);
+    }
+    let mut guard = 0u64;
+    while w.has_work() && guard < 1_000_000 {
+        guard += 1;
+        w.tick();
+    }
+    w.into_result(if paged { "paged" } else { "dense" })
+}
+
+/// [`replay_live`] with the per-request causal ledger attached as
+/// well: besides the fleet samples, every request's causal event
+/// chain, cost buckets and page-seconds land in `ledger` (replica 0).
+/// Pass `LiveMetrics::off()` / `FlightRecorder::disabled()` to run
+/// ledger-only. Both planes observe the same run, which is what the
+/// ledger-vs-live parity property tests compare.
+pub fn replay_instrumented(cfg: &ReplayConfig, paged: bool,
+                           live: &LiveMetrics,
+                           recorder: &FlightRecorder,
+                           ledger: &RequestLedger) -> ReplayResult {
+    let mut w = SimWorker::new(cfg, paged);
+    w.attach_sampler(WorkerSampler::new(live.clone(),
+                                        recorder.clone(), 0));
+    w.attach_ledger(ledger, 0);
     for req in generate_workload(cfg) {
         w.deliver(&req);
     }
@@ -1337,5 +1503,147 @@ mod tests {
             events += 1;
         }
         assert!(events > 0 && events <= 32, "bounded ring: {events}");
+    }
+
+    /// Tentpole acceptance: on the proven-tight sharded chunked mix,
+    /// the causal ledger tells a complete, internally consistent
+    /// story per request — well-formed event chains, cost buckets
+    /// that reconcile with the replay's own totals — while remaining
+    /// pure observation (identical outputs and clock).
+    #[test]
+    fn ledger_records_causal_chains_and_cost_buckets() {
+        use crate::substrate::json::Json;
+        let cfg = ReplayConfig {
+            total_pages: 40,
+            batch_slots: 12,
+            chunk_prefill: 12,
+            shards: 2,
+            ..ReplayConfig::default()
+        };
+        let bare = replay(&cfg, true);
+        let ledger = RequestLedger::new();
+        let r = replay_instrumented(&cfg, true, &LiveMetrics::off(),
+                                    &FlightRecorder::disabled(),
+                                    &ledger);
+        assert_eq!(r.outputs, bare.outputs, "ledger must not perturb");
+        assert_eq!(r.sim_time, bare.sim_time);
+        assert_eq!(r.completed, cfg.requests);
+        assert!(r.ticks >= r.decode_ticks);
+        let snap = ledger.snapshot();
+        assert_eq!(snap.requests.len(), cfg.requests);
+        assert_eq!(snap.completed().len(), cfg.requests);
+        let mut decoded_total = 0u64;
+        let mut preempt_total = 0u64;
+        let mut spill_total = 0u64;
+        for rec in &snap.requests {
+            let labels: Vec<&str> =
+                rec.events.iter().map(|e| e.ev.label()).collect();
+            assert_eq!(labels.first(), Some(&"enqueued"),
+                       "req {}", rec.id);
+            assert_eq!(labels.last(), Some(&"completed"),
+                       "req {}", rec.id);
+            assert!(labels.contains(&"admitted"));
+            assert!(labels.contains(&"first-token"));
+            assert_eq!(rec.decoded as usize, r.outputs[&rec.id].len());
+            assert!(rec.prefilled_tokens >= rec.prompt_len,
+                    "recompute only ever adds prefill work");
+            let ttft = rec.ttft().expect("first token recorded");
+            let latency = rec.latency().expect("completed");
+            assert!(ttft > 0.0 && latency >= ttft, "req {}", rec.id);
+            assert!(rec.page_seconds > 0.0, "req {} held pages", rec.id);
+            assert!(rec.decode_compute > 0.0);
+            assert_eq!(rec.tbt.len(), rec.decoded as usize);
+            decoded_total += rec.decoded;
+            preempt_total += rec.preemptions;
+            spill_total += rec.spills;
+        }
+        assert_eq!(decoded_total, r.tokens_decoded);
+        assert_eq!(preempt_total, r.stats.preemptions,
+                   "every pool preemption is attributed to a victim");
+        assert!(preempt_total > 0, "the tight budget must preempt");
+        assert!(spill_total <= r.stats.shard_spills);
+        // The pressured mix must exercise the waiting buckets.
+        assert!(snap.requests.iter().any(|rec| rec.queue_time > 0.0
+            || rec.capacity_wait_time > 0.0
+            || rec.preempted_time > 0.0));
+        let jsonl = snap.to_jsonl();
+        assert_eq!(jsonl.lines().count(), cfg.requests);
+        for line in jsonl.lines() {
+            Json::parse(line).expect("valid ledger JSONL");
+        }
+    }
+
+    /// Satellite: ledger/live parity — on random mixes the two planes
+    /// observe the *same* TTFT/TBT samples (equal counts; rank-matched
+    /// quantiles within the sketch's relative-error bound) and the
+    /// instrumented run is bit-identical to the bare one.
+    #[test]
+    fn prop_ledger_live_parity() {
+        use crate::substrate::prop::prop_check;
+        use crate::telemetry::live::sampler::{TBT_MS, TTFT_MS};
+        use crate::telemetry::live::sketch::DEFAULT_ALPHA;
+        fn exact_pct(vals: &[f64], p: f64) -> f64 {
+            let mut v = vals.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            if v.is_empty() {
+                return 0.0;
+            }
+            let rank =
+                ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+            v[rank.min(v.len() - 1)]
+        }
+        prop_check(
+            48,
+            0x1ed6e4,
+            |rng| {
+                ((rng.usize(8, 41), rng.usize(1, 4)),
+                 (rng.usize(0, 3) * 12, rng.usize(1, 4)))
+            },
+            |&((requests, tenants), (chunk, shards))| {
+                let cfg = ReplayConfig {
+                    requests: requests.max(1),
+                    tenants: tenants.max(1),
+                    chunk_prefill: chunk,
+                    shards: shards.max(1),
+                    ..ReplayConfig::default()
+                };
+                let bare = replay(&cfg, true);
+                let live = LiveMetrics::new();
+                let ledger = RequestLedger::new();
+                let r = replay_instrumented(
+                    &cfg, true, &live, &FlightRecorder::disabled(),
+                    &ledger);
+                if r.outputs != bare.outputs {
+                    return Err("instrumented outputs diverged".into());
+                }
+                if r.sim_time != bare.sim_time {
+                    return Err(format!(
+                        "clock perturbed: {} vs {}",
+                        r.sim_time, bare.sim_time));
+                }
+                let snap = live.snapshot();
+                let led = ledger.snapshot();
+                for (name, vals) in [(TTFT_MS, led.ttft_values()),
+                                     (TBT_MS, led.tbt_values())] {
+                    let merged =
+                        snap.merged_sketch(name, "replica", "0");
+                    if merged.count != vals.len() as u64 {
+                        return Err(format!(
+                            "{name}: ledger {} vs live {} samples",
+                            vals.len(), merged.count));
+                    }
+                    for p in [50.0, 99.0] {
+                        let s = merged.percentile(p);
+                        let e = exact_pct(&vals, p);
+                        if (s - e).abs() > DEFAULT_ALPHA * e + 1e-9 {
+                            return Err(format!(
+                                "{name} p{p}: ledger {e} vs \
+                                 sketch {s}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

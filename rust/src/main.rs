@@ -36,7 +36,16 @@
 //!                    `--metrics-out` writes the Prometheus text
 //!                    exposition, `--record-out` the flight-recorder
 //!                    JSONL dumps, `--kill R@K` injects a replica
-//!                    crash.
+//!                    crash; per-tenant rows carry modeled Joules and
+//!                    tokens-per-Joule from the causal ledger.
+//! * `explain`      — replay with the per-request causal cost ledger
+//!                    attached: `--request <id>` prints one request's
+//!                    causal timeline, cost buckets and Joule
+//!                    attribution; `--tail p99` / `--slowest K` the
+//!                    tail-latency explainer table naming each slow
+//!                    request's dominant cause; `--ledger-out` writes
+//!                    the ledger JSONL, `--bench-json` ledger cost +
+//!                    tokens-per-Joule metrics for the CI perf gate.
 
 use anyhow::{bail, Result};
 
@@ -56,15 +65,22 @@ use mmserve::perfmodel::device::DeviceSpec;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
 use mmserve::routing::replay::{compare_policies, render_policy_comparison,
-                               render_worker_counters, routing_replay_live,
-                               KillSpec, RoutingReplayConfig,
-                               RoutingReplayResult};
+                               render_worker_counters, routing_replay,
+                               routing_replay_instrumented,
+                               routing_replay_live, KillSpec,
+                               RoutingReplayConfig, RoutingReplayResult};
 use mmserve::routing::RoutingPolicy;
 use mmserve::runtime::engine::Engine;
 use mmserve::substrate::cli::Command;
 use mmserve::substrate::json::Json;
 use mmserve::substrate::table::Table;
 use mmserve::telemetry::chrome_trace;
+use mmserve::telemetry::ledger::energy::{EnergyBreakdown, EnergyModel,
+                                         ModelFamily};
+use mmserve::telemetry::ledger::explain::{parse_tail, render_request,
+                                          render_rows, slowest_rows,
+                                          tail_rows};
+use mmserve::telemetry::ledger::RequestLedger;
 use mmserve::telemetry::live::sampler::{
     CACHED_PAGES, CAPACITY_WAIT_TICKS_TOTAL, FREE_PAGES, LIVE_PAGES,
     PREEMPTIONS_TOTAL, PREFIX_HIT_RATE, QUEUE_DEPTH,
@@ -120,6 +136,11 @@ const SUBCOMMANDS: &[Subcommand] = &[
         name: "stats",
         summary: "live-metrics fleet dashboard over a replayed workload",
         run: cmd_stats,
+    },
+    Subcommand {
+        name: "explain",
+        summary: "causal cost ledger: tail-latency explainer + Joules",
+        run: cmd_explain,
     },
 ];
 
@@ -313,6 +334,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             tracer: None,
             live: None,
             flight: None,
+            ledger: None,
             replicas,
             policy,
         },
@@ -472,6 +494,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             tracer: Some(tracer.clone()),
             live: None,
             flight: None,
+            ledger: None,
             replicas,
             policy,
         },
@@ -944,13 +967,27 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     println!("\nper-shard pages (point-in-time, end of run):\n{}",
              ts.render());
 
+    // Per-tenant energy attribution: the identical seeded replay with
+    // the causal ledger attached. Run separately from the live replay
+    // so the sampler cost metric below stays a pure live-plane
+    // measure (observation never changes the simulated outcome).
+    let energy = EnergyModel::by_device_name(ModelFamily::Llama7b, "A100")
+        .expect("A100 device spec");
+    let ledger = RequestLedger::new();
+    let _ = routing_replay_instrumented(&rcfg, policy, &LiveMetrics::off(),
+                                        &FlightRecorder::disabled(),
+                                        &ledger);
+    let tenant_energy: std::collections::HashMap<String, EnergyBreakdown> =
+        energy.energy_by_tenant(&ledger.snapshot()).into_iter().collect();
+
     let mut tt = Table::new(&[
         "tenant", "requests", "ttft p50", "ttft p99", "tbt p50",
-        "tbt p99",
+        "tbt p99", "energy J", "tok/J",
     ]);
     for tenant in snap.sketch_label_values(TTFT_MS, "tenant") {
         let ttft = snap.merged_sketch(TTFT_MS, "tenant", &tenant);
         let tbt = snap.merged_sketch(TBT_MS, "tenant", &tenant);
+        let e = tenant_energy.get(&tenant);
         tt.row(&[
             tenant.clone(),
             ttft.count.to_string(),
@@ -958,9 +995,18 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
             pct_cell(&ttft, 99.0),
             pct_cell(&tbt, 50.0),
             pct_cell(&tbt, 99.0),
+            e.map(|e| format!("{:.1}", e.total_j()))
+                .unwrap_or_else(|| "-".into()),
+            e.map(|e| format!("{:.1}", e.tokens_per_joule()))
+                .unwrap_or_else(|| "-".into()),
         ]);
     }
-    println!("\nper-tenant SLO percentiles:\n{}", tt.render());
+    println!(
+        "\nper-tenant SLO percentiles + modeled energy ({} on {}):\n{}",
+        energy.family.as_str(),
+        energy.device.name,
+        tt.render()
+    );
 
     // Streaming sketches vs the post-hoc histograms the replay kept:
     // they must agree within the sketch's relative error.
@@ -1046,6 +1092,205 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
         ]);
         std::fs::write(&json_path, json.to_string())?;
         println!("wrote live-plane metrics to {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_explain(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "explain",
+        "replay a fleet workload with the per-request causal cost \
+         ledger attached; explain tail latency and attribute Joules",
+    )
+    .opt("requests", "number of replayed requests", Some("96"))
+    .opt("replicas", "simulated workers (each owns a page budget)",
+         Some("3"))
+    .opt("shards",
+         "device arenas each worker's page budget is split across",
+         Some("2"))
+    .opt("tenants", "distinct shared system prompts", Some("3"))
+    .opt("policy",
+         "replica routing: round-robin|least-loaded|prefix-affinity",
+         Some("prefix-affinity"))
+    .opt("pages", "page budget per worker", Some("96"))
+    .opt("page-size", "tokens per KV page", Some("16"))
+    .opt("slots", "decode-graph batch per worker", Some("16"))
+    .opt("chunk-prefill",
+         "chunked prefill: max new prompt tokens per tick (0 = whole)",
+         Some("0"))
+    .opt("kill",
+         "crash injection R@K: kill replica R after K deliveries",
+         Some(""))
+    .opt("request",
+         "explain one request id: causal timeline + Joule attribution",
+         Some(""))
+    .opt("slowest", "explain the K slowest requests (0 = use --tail)",
+         Some("0"))
+    .opt("tail",
+         "explain the latency tail at this quantile (p99, p95, ...)",
+         Some("p99"))
+    .opt("model",
+         "energy-model family: llama-7b|llama-34b|chameleon-7b|\
+          chameleon-34b",
+         Some("llama-7b"))
+    .opt("device", "energy-model device: A100|H100", Some("A100"))
+    .opt("ledger-out",
+         "write the per-request ledger JSONL to this path", Some(""))
+    .opt("bench-json",
+         "write ledger cost + tokens-per-Joule JSON (CI perf gate)",
+         Some(""))
+    .opt("seed", "workload seed", Some("7"))
+    .flag("help", "show usage");
+    let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let replicas = a.get_usize("replicas", 3).max(1);
+    let shards = a.get_usize("shards", 2).max(1);
+    let policy = parse_policy(&a)?;
+    let kill = parse_kill(&a.get_or("kill", ""))?;
+    let family = ModelFamily::parse(&a.get_or("model", "llama-7b"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown model family (want llama-7b, \
+                             llama-34b, chameleon-7b or chameleon-34b)")
+        })?;
+    let energy =
+        EnergyModel::by_device_name(family, &a.get_or("device", "A100"))
+            .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let rcfg = RoutingReplayConfig {
+        base: ReplayConfig {
+            requests: a.get_usize("requests", 96),
+            page_size: a.get_usize("page-size", 16).max(1),
+            total_pages: a.get_usize("pages", 96).max(1),
+            batch_slots: a.get_usize("slots", 16).max(1),
+            chunk_prefill: a.get_usize("chunk-prefill", 0),
+            tenants: a.get_usize("tenants", 3).max(1),
+            shards,
+            seed: a.get_usize("seed", 7) as u64,
+            ..ReplayConfig::default()
+        },
+        replicas,
+        kill,
+        ..RoutingReplayConfig::default()
+    };
+
+    // Ledger-attached replay. The live plane and flight recorder stay
+    // disabled: this command measures the ledger's own cost.
+    let live = LiveMetrics::off();
+    let recorder = FlightRecorder::disabled();
+    let ledger = RequestLedger::new();
+    let t_led = std::time::Instant::now();
+    let r = routing_replay_instrumented(&rcfg, policy, &live, &recorder,
+                                        &ledger);
+    let wall_ledger = t_led.elapsed();
+    let snap = ledger.snapshot();
+
+    println!(
+        "== causal cost ledger: {} requests over {replicas} replicas × \
+         {shards} shards, {policy} (simulated clock units) ==",
+        rcfg.base.requests
+    );
+    println!(
+        "completed {} / dropped {} in sim_time {:.1}; ledger tracked \
+         {} requests\n",
+        r.completed, r.dropped, r.sim_time, snap.requests.len()
+    );
+
+    let req_spec = a.get_or("request", "");
+    let slowest = a.get_usize("slowest", 0);
+    if !req_spec.is_empty() {
+        let id: u64 = req_spec.parse()?;
+        let Some(rec) = snap.get(id) else {
+            bail!("request {id} is not in the ledger (this replay \
+                   delivered ids 0..{})", rcfg.base.requests);
+        };
+        println!("{}", render_request(rec, Some(&energy)));
+    } else if slowest > 0 {
+        let rows = slowest_rows(&snap, slowest);
+        println!("{}", render_rows(&format!("slowest {slowest}"), &rows));
+    } else {
+        let spec = a.get_or("tail", "p99");
+        let p = parse_tail(&spec).ok_or_else(|| {
+            anyhow::anyhow!("--tail wants pNN (e.g. p99), got {spec:?}")
+        })?;
+        let rows = tail_rows(&snap, p);
+        println!("{}",
+                 render_rows(&format!("latency tail at {spec}"), &rows));
+    }
+
+    let fleet = energy.fleet_energy(&snap);
+    println!(
+        "\nfleet energy ({} on {}): prefill {:.1} J + decode {:.1} J + \
+         idle {:.1} J = {:.1} J over {} tokens ({:.1} tok/J)",
+        family.as_str(),
+        energy.device.name,
+        fleet.prefill_j,
+        fleet.decode_j,
+        fleet.idle_j,
+        fleet.total_j(),
+        fleet.tokens,
+        fleet.tokens_per_joule()
+    );
+
+    let ledger_path = a.get_or("ledger-out", "");
+    if !ledger_path.is_empty() {
+        std::fs::write(&ledger_path, snap.to_jsonl())?;
+        println!("wrote per-request ledger JSONL to {ledger_path}");
+    }
+
+    let json_path = a.get_or("bench-json", "");
+    if !json_path.is_empty() {
+        // Ledger cost + pure-observation parity: the identical seeded
+        // replay bare (the clocks must agree exactly), and once more
+        // with a disabled ledger attached — the one-relaxed-load
+        // regime the CI perf gate bounds below 250 ns/tick.
+        let t_bare = std::time::Instant::now();
+        let bare = routing_replay(&rcfg, policy);
+        let wall_bare = t_bare.elapsed();
+        let off = RequestLedger::off();
+        let t_off = std::time::Instant::now();
+        let _ = routing_replay_instrumented(&rcfg, policy, &live,
+                                            &recorder, &off);
+        let wall_off = t_off.elapsed();
+        let ticks = r.ticks.max(1) as f64;
+        let ns_per_tick = wall_ledger.saturating_sub(wall_bare)
+            .as_nanos() as f64
+            / ticks;
+        let disabled_ns_per_tick = wall_off.saturating_sub(wall_bare)
+            .as_nanos() as f64
+            / ticks;
+        let tpj: Vec<(String, Json)> = ModelFamily::ALL
+            .iter()
+            .map(|f| {
+                let m = EnergyModel::new(*f, energy.device);
+                (f.as_str().to_string(),
+                 Json::Num(m.fleet_energy(&snap).tokens_per_joule()))
+            })
+            .collect();
+        let json = Json::from_obj(vec![
+            ("config".into(), Json::from_obj(vec![
+                ("requests".into(),
+                 Json::Num(rcfg.base.requests as f64)),
+                ("replicas".into(), Json::Num(replicas as f64)),
+                ("device".into(),
+                 Json::Str(energy.device.name.to_string())),
+                ("seed".into(), Json::Num(rcfg.base.seed as f64)),
+            ])),
+            ("ledger".into(), Json::from_obj(vec![
+                ("ticks".into(), Json::Num(r.ticks as f64)),
+                ("completed".into(), Json::Num(r.completed as f64)),
+                ("sim_time".into(), Json::Num(r.sim_time)),
+                ("sim_time_delta".into(),
+                 Json::Num((r.sim_time - bare.sim_time).abs())),
+                ("ns_per_tick".into(), Json::Num(ns_per_tick)),
+                ("disabled_ns_per_tick".into(),
+                 Json::Num(disabled_ns_per_tick)),
+                ("tokens_per_joule".into(), Json::from_obj(tpj)),
+            ])),
+        ]);
+        std::fs::write(&json_path, json.to_string())?;
+        println!("wrote ledger metrics to {json_path}");
     }
     Ok(())
 }

@@ -25,6 +25,7 @@ use crate::kvpool::replay::{generate_workload, ReplayConfig,
 use crate::kvpool::PoolStats;
 use crate::substrate::metrics::Histogram;
 use crate::substrate::table::Table;
+use crate::telemetry::ledger::RequestLedger;
 use crate::telemetry::live::{FlightRecorder, LiveMetrics,
                              WorkerSampler};
 
@@ -98,6 +99,9 @@ pub struct RoutingReplayResult {
     pub dropped: usize,
     /// Slowest worker's drain time (fleet makespan).
     pub sim_time: f64,
+    /// Scheduler ticks summed across workers (the ledger's
+    /// tick-overhead denominator).
+    pub ticks: u64,
     /// Per-request decoded streams, merged across workers.
     pub outputs: HashMap<u64, Vec<i32>>,
 }
@@ -138,7 +142,7 @@ fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
 /// `policy`. Deterministic: same config + policy → same result.
 pub fn routing_replay(cfg: &RoutingReplayConfig, policy: RoutingPolicy)
                       -> RoutingReplayResult {
-    routing_replay_inner(cfg, policy, None)
+    routing_replay_inner(cfg, policy, None, None)
 }
 
 /// [`routing_replay`] with the live observability plane attached:
@@ -152,12 +156,29 @@ pub fn routing_replay_live(cfg: &RoutingReplayConfig,
                            live: &LiveMetrics,
                            recorder: &FlightRecorder)
                            -> RoutingReplayResult {
-    routing_replay_inner(cfg, policy, Some((live, recorder)))
+    routing_replay_inner(cfg, policy, Some((live, recorder)), None)
+}
+
+/// [`routing_replay_live`] with the per-request causal ledger
+/// attached fleet-wide: the router stamps a `routed` event (with the
+/// chosen replica, on that replica's clock) before every delivery —
+/// including fail-over re-deliveries — and each worker records its
+/// admission/tick/preemption/spill chain into the shared `ledger`.
+/// Pure observation, like the live plane.
+pub fn routing_replay_instrumented(cfg: &RoutingReplayConfig,
+                                   policy: RoutingPolicy,
+                                   live: &LiveMetrics,
+                                   recorder: &FlightRecorder,
+                                   ledger: &RequestLedger)
+                                   -> RoutingReplayResult {
+    routing_replay_inner(cfg, policy, Some((live, recorder)),
+                         Some(ledger))
 }
 
 fn routing_replay_inner(cfg: &RoutingReplayConfig,
                         policy: RoutingPolicy,
-                        plane: Option<(&LiveMetrics, &FlightRecorder)>)
+                        plane: Option<(&LiveMetrics, &FlightRecorder)>,
+                        ledger: Option<&RequestLedger>)
                         -> RoutingReplayResult {
     let n = cfg.replicas.max(1);
     let per_round = cfg.arrivals_per_round.max(1);
@@ -167,6 +188,9 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
             if let Some((live, rec)) = plane {
                 w.attach_sampler(WorkerSampler::new(live.clone(),
                                                     rec.clone(), i));
+            }
+            if let Some(led) = ledger {
+                w.attach_ledger(led, i as u32);
             }
             w
         })
@@ -195,6 +219,10 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
             cursor += 1;
             match pick {
                 Some(i) => {
+                    if let Some(led) = ledger {
+                        led.routed(req.id, i as u32,
+                                   workers[i].now());
+                    }
                     workers[i].deliver(req);
                     routed[i] += 1;
                 }
@@ -239,6 +267,10 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
                         cursor += 1;
                         match pick {
                             Some(i) => {
+                                if let Some(led) = ledger {
+                                    led.routed(req.id, i as u32,
+                                               workers[i].now());
+                                }
                                 workers[i].deliver(req);
                                 routed[i] += 1;
                             }
@@ -270,6 +302,7 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
     // dropped — they must never vanish silently.
     let mut dropped = dropped_unroutable;
     let mut sim_time = 0.0f64;
+    let mut ticks = 0u64;
     for r in &per_worker {
         for &v in r.ttft.samples() {
             ttft.record(v);
@@ -283,6 +316,7 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         completed += r.completed;
         dropped += r.dropped;
         sim_time = sim_time.max(r.sim_time);
+        ticks += r.ticks;
     }
     RoutingReplayResult {
         policy,
@@ -295,6 +329,7 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         completed,
         dropped,
         sim_time,
+        ticks,
         outputs,
     }
 }
@@ -673,6 +708,131 @@ mod tests {
             crate::substrate::json::Json::parse(line)
                 .expect("flight dump line is valid JSON");
         }
+    }
+
+    /// Tentpole (fleet form): with a mid-run crash, the causal ledger
+    /// follows every request across the router — evacuated requests
+    /// carry a second `routed` event to a survivor and restart their
+    /// TTFT clock there — while the instrumented run stays
+    /// bit-identical to the bare one.
+    #[test]
+    fn ledger_follows_requests_across_failover() {
+        let cfg = RoutingReplayConfig {
+            kill: Some(KillSpec { replica: 1, after_delivered: 20 }),
+            ..RoutingReplayConfig::default()
+        };
+        let bare = routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        let ledger = RequestLedger::new();
+        let r = routing_replay_instrumented(
+            &cfg, RoutingPolicy::PrefixAffinity, &LiveMetrics::off(),
+            &FlightRecorder::disabled(), &ledger);
+        assert_eq!(r.outputs, bare.outputs, "ledger must not route");
+        assert_eq!(r.routed, bare.routed);
+        assert_eq!(r.sim_time, bare.sim_time);
+        assert_eq!(r.completed, cfg.base.requests);
+        assert!(r.ticks > 0);
+
+        let snap = ledger.snapshot();
+        assert_eq!(snap.completed().len(), cfg.base.requests);
+        let mut deliveries = 0usize;
+        let mut rerouted = 0usize;
+        for rec in &snap.requests {
+            let labels: Vec<&str> =
+                rec.events.iter().map(|e| e.ev.label()).collect();
+            assert_eq!(labels.first(), Some(&"routed"),
+                       "req {} chain starts at the router", rec.id);
+            assert_eq!(labels.last(), Some(&"completed"));
+            let routes =
+                labels.iter().filter(|&&l| l == "routed").count();
+            deliveries += routes;
+            if routes > 1 {
+                rerouted += 1;
+                // The record's final replica is a survivor.
+                assert_ne!(rec.replica, 1, "req {} must not end on \
+                                            the dead replica", rec.id);
+            }
+            assert_eq!(rec.decoded as usize, r.outputs[&rec.id].len());
+        }
+        assert_eq!(deliveries, r.routed.iter().sum::<usize>(),
+                   "one routed event per delivery, fleet-wide");
+        assert!(rerouted > 0, "the crash must re-route someone");
+    }
+
+    /// Satellite: ledger/live parity on the fleet — identical sample
+    /// counts and rank-matched quantiles between the shared ledger
+    /// and the fleet-merged live sketches, on random replica/tenant
+    /// mixes (no kill: a crash legitimately desyncs the planes'
+    /// sample sets mid-flight).
+    #[test]
+    fn prop_ledger_live_parity_routing() {
+        use crate::substrate::prop::prop_check;
+        use crate::telemetry::live::sampler::{TBT_MS, TTFT_MS};
+        use crate::telemetry::live::sketch::{SketchSnapshot,
+                                             DEFAULT_ALPHA};
+        fn exact_pct(vals: &[f64], p: f64) -> f64 {
+            let mut v = vals.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            if v.is_empty() {
+                return 0.0;
+            }
+            let rank =
+                ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+            v[rank.min(v.len() - 1)]
+        }
+        prop_check(
+            24,
+            0xf1ee7,
+            |rng| (rng.usize(2, 4), rng.usize(1, 4)),
+            |&(replicas, tenants)| {
+                let cfg = RoutingReplayConfig {
+                    base: ReplayConfig {
+                        requests: 32,
+                        tenants: tenants.max(1),
+                        ..ReplayConfig::default()
+                    },
+                    replicas: replicas.max(1),
+                    ..RoutingReplayConfig::default()
+                };
+                let bare =
+                    routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+                let live = LiveMetrics::new();
+                let ledger = RequestLedger::new();
+                let r = routing_replay_instrumented(
+                    &cfg, RoutingPolicy::PrefixAffinity, &live,
+                    &FlightRecorder::disabled(), &ledger);
+                if r.outputs != bare.outputs || r.routed != bare.routed
+                {
+                    return Err("instrumented fleet diverged".into());
+                }
+                let snap = live.snapshot();
+                let led = ledger.snapshot();
+                for (name, vals) in [(TTFT_MS, led.ttft_values()),
+                                     (TBT_MS, led.tbt_values())] {
+                    let mut merged = SketchSnapshot::empty();
+                    for rep in
+                        snap.sketch_label_values(name, "replica")
+                    {
+                        merged.merge(&snap.merged_sketch(
+                            name, "replica", &rep));
+                    }
+                    if merged.count != vals.len() as u64 {
+                        return Err(format!(
+                            "{name}: ledger {} vs fleet {} samples",
+                            vals.len(), merged.count));
+                    }
+                    for p in [50.0, 99.0] {
+                        let s = merged.percentile(p);
+                        let e = exact_pct(&vals, p);
+                        if (s - e).abs() > DEFAULT_ALPHA * e + 1e-9 {
+                            return Err(format!(
+                                "{name} p{p}: ledger {e} vs \
+                                 sketch {s}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -155,11 +155,23 @@ impl Attribution {
     }
 
     /// Render as a percentage table — the measured counterpart of the
-    /// perfmodel's Idle bucket, split by cause.
+    /// perfmodel's Idle bucket, split by cause. Percentages are
+    /// against the dispatch-window total this pass analyzed.
     pub fn render(&self) -> String {
+        self.render_with_wall(self.wall)
+    }
+
+    /// Render with an explicit percentage denominator. A partial
+    /// trace (spans missing at the edges) has a dispatch window
+    /// shorter than the run's real wall time; dividing by the span
+    /// total inflates every idle percentage. Callers that know the
+    /// true wall (e.g. `TraceReport`) pass it here; the dispatch
+    /// window is still printed with its own share so the coverage gap
+    /// is visible rather than silently renormalized away.
+    pub fn render_with_wall(&self, wall: f64) -> String {
         let mut table = Table::new(&["bucket", "time(ms)", "% of wall"]);
         let pct = |t: f64| {
-            if self.wall > 0.0 { t / self.wall * 100.0 } else { 0.0 }
+            if wall > 0.0 { t / wall * 100.0 } else { 0.0 }
         };
         table.row(&[
             "Execute (device busy)".to_string(),
@@ -177,7 +189,7 @@ impl Attribution {
         table.row(&[
             "wall (dispatch window)".to_string(),
             format!("{:.3}", self.wall * 1e3),
-            "100.0%".to_string(),
+            format!("{:.1}%", pct(self.wall)),
         ]);
         table.render()
     }

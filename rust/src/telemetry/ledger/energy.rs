@@ -1,0 +1,353 @@
+//! Modeled per-request energy attribution (Joules, tokens-per-Joule).
+//!
+//! The paper's characterization and the modality-inflation follow-up
+//! both argue that serving cost is phase-dependent: prefill runs near
+//! the compute roof (power ≈ TDP), decode is memory-bound (the device
+//! clocks down — we model it as a fixed fraction of TDP), and idle
+//! time still burns static power. Nothing here is measured: Joules
+//! are derived from `perfmodel`'s roofline FLOPs-and-bytes walks
+//! ([`crate::perfmodel::ops`]) costed on a device spec, multiplied by
+//! datasheet power numbers — deterministic, so CI can gate
+//! tokens-per-Joule like any other replay metric.
+//!
+//! Phase energies per request (from its [`RequestRecord`]):
+//!
+//! * prefill: `cost_walk(decoder_prefill(prefilled_tokens)) × TDP` —
+//!   recomputed prefill after preemption is charged again, because
+//!   that energy was really spent;
+//! * decode: per-step roofline cost sampled over the growing context
+//!   (same 8-point rule as `perfmodel::latency`) `× TDP ×`
+//!   [`DECODE_POWER_FRAC`];
+//! * idle: the ledger's idle buckets (queue + capacity wait +
+//!   preempted + interference) are simulated-clock units, scaled into
+//!   modeled seconds by the request's own modeled-busy / sim-busy
+//!   ratio, `× idle_w`.
+
+use crate::perfmodel::configs::{
+    PaperDecoder, CHAMELEON_34B, CHAMELEON_7B, LLAMA_34B, LLAMA_7B,
+};
+use crate::perfmodel::device::DeviceSpec;
+use crate::perfmodel::levers::cost_walk;
+use crate::perfmodel::ops::{
+    decoder_decode_step, decoder_prefill, AttnKind, LinearKind,
+};
+
+use std::collections::BTreeMap;
+
+use super::{LedgerSnapshot, RequestRecord};
+
+/// Datasheet power numbers for a device (board power, not fitted).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerSpec {
+    pub name: &'static str,
+    /// Board TDP, watts (compute-bound phases run here).
+    pub tdp_w: f64,
+    /// Static/idle draw, watts.
+    pub idle_w: f64,
+}
+
+/// NVIDIA A100-SXM4-80GB.
+pub const A100_POWER: PowerSpec =
+    PowerSpec { name: "A100", tdp_w: 400.0, idle_w: 55.0 };
+
+/// NVIDIA H100-SXM5-80GB.
+pub const H100_POWER: PowerSpec =
+    PowerSpec { name: "H100", tdp_w: 700.0, idle_w: 70.0 };
+
+/// Memory-bound decode draws well under TDP (the device is waiting on
+/// HBM, not the tensor cores); 0.65 matches published LLM-decode
+/// board-power measurements on Ampere/Hopper parts.
+pub const DECODE_POWER_FRAC: f64 = 0.65;
+
+/// The paper's decoder families (`perfmodel::configs` presets) the
+/// energy model can attribute against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelFamily {
+    Llama7b,
+    Llama34b,
+    Chameleon7b,
+    Chameleon34b,
+}
+
+impl ModelFamily {
+    pub const ALL: [ModelFamily; 4] = [
+        ModelFamily::Llama7b,
+        ModelFamily::Llama34b,
+        ModelFamily::Chameleon7b,
+        ModelFamily::Chameleon34b,
+    ];
+
+    pub fn cfg(self) -> &'static PaperDecoder {
+        match self {
+            ModelFamily::Llama7b => &LLAMA_7B,
+            ModelFamily::Llama34b => &LLAMA_34B,
+            ModelFamily::Chameleon7b => &CHAMELEON_7B,
+            ModelFamily::Chameleon34b => &CHAMELEON_34B,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelFamily::Llama7b => "llama-7b",
+            ModelFamily::Llama34b => "llama-34b",
+            ModelFamily::Chameleon7b => "chameleon-7b",
+            ModelFamily::Chameleon34b => "chameleon-34b",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelFamily> {
+        ModelFamily::ALL
+            .into_iter()
+            .find(|f| f.as_str().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Joule attribution for one request (or an aggregate of requests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub prefill_j: f64,
+    pub decode_j: f64,
+    pub idle_j: f64,
+    pub tokens: u64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.prefill_j + self.decode_j + self.idle_j
+    }
+
+    /// The QoS-tier efficiency metric (0 when no energy attributed).
+    pub fn tokens_per_joule(&self) -> f64 {
+        let total = self.total_j();
+        if total <= 0.0 { 0.0 } else { self.tokens as f64 / total }
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.prefill_j += other.prefill_j;
+        self.decode_j += other.decode_j;
+        self.idle_j += other.idle_j;
+        self.tokens += other.tokens;
+    }
+}
+
+/// Roofline energy model: a model family costed on a device spec with
+/// that device's power numbers.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub family: ModelFamily,
+    pub device: &'static DeviceSpec,
+    pub power: PowerSpec,
+}
+
+impl EnergyModel {
+    pub fn new(
+        family: ModelFamily,
+        device: &'static DeviceSpec,
+    ) -> EnergyModel {
+        let power = if device.name.eq_ignore_ascii_case(H100_POWER.name)
+        {
+            H100_POWER
+        } else {
+            A100_POWER
+        };
+        EnergyModel { family, device, power }
+    }
+
+    /// Lookup by device name (`a100`/`h100`, case-insensitive).
+    pub fn by_device_name(
+        family: ModelFamily,
+        device: &str,
+    ) -> Option<EnergyModel> {
+        DeviceSpec::by_name(device).map(|d| EnergyModel::new(family, d))
+    }
+
+    /// Modeled busy seconds to prefill `tokens` at batch 1 (graph
+    /// mode, flash attention — the optimized serving configuration).
+    pub fn prefill_secs(&self, tokens: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let walk = decoder_prefill(
+            self.family.cfg(),
+            1,
+            tokens,
+            AttnKind::Flash,
+            LinearKind::F32,
+        );
+        cost_walk(&walk, self.device, true).0
+    }
+
+    /// Modeled busy seconds to decode `steps` tokens from a
+    /// `prompt_len` prompt: the per-step roofline cost sampled over
+    /// the growing context, same 8-point rule as
+    /// `perfmodel::latency::task_cost`.
+    pub fn decode_secs(&self, prompt_len: usize, steps: u64) -> f64 {
+        if steps == 0 {
+            return 0.0;
+        }
+        let steps = steps as usize;
+        let samples = 8.min(steps);
+        let mut per_step = 0.0;
+        for i in 0..samples {
+            let ctx = prompt_len + (i + 1) * steps / samples;
+            let walk = decoder_decode_step(
+                self.family.cfg(),
+                1,
+                ctx.max(1),
+                AttnKind::Flash,
+                LinearKind::F32,
+            );
+            per_step += cost_walk(&walk, self.device, true).0;
+        }
+        per_step / samples as f64 * steps as f64
+    }
+
+    /// Attribute one request's Joules across power states.
+    pub fn request_energy(&self, rec: &RequestRecord)
+                          -> EnergyBreakdown {
+        let pre = self.prefill_secs(rec.prefilled_tokens);
+        let dec = self.decode_secs(rec.prompt_len, rec.decoded);
+        // The ledger's buckets are simulated-clock units; the
+        // request's own modeled-busy / sim-busy ratio converts its
+        // idle share into modeled seconds on the same scale.
+        let busy_sim = rec.prefill_compute + rec.decode_compute;
+        let scale =
+            if busy_sim > 0.0 { (pre + dec) / busy_sim } else { 0.0 };
+        EnergyBreakdown {
+            prefill_j: pre * self.power.tdp_w,
+            decode_j: dec * self.power.tdp_w * DECODE_POWER_FRAC,
+            idle_j: rec.idle_total() * scale * self.power.idle_w,
+            tokens: rec.decoded,
+        }
+    }
+
+    /// Aggregate Joules over every request in the snapshot.
+    pub fn fleet_energy(&self, snap: &LedgerSnapshot)
+                        -> EnergyBreakdown {
+        let mut out = EnergyBreakdown::default();
+        for rec in &snap.requests {
+            out.add(&self.request_energy(rec));
+        }
+        out
+    }
+
+    /// Per-tenant Joule aggregation, sorted by tenant (the
+    /// `mmserve stats` energy columns).
+    pub fn energy_by_tenant(
+        &self,
+        snap: &LedgerSnapshot,
+    ) -> Vec<(String, EnergyBreakdown)> {
+        let mut by: BTreeMap<String, EnergyBreakdown> = BTreeMap::new();
+        for rec in &snap.requests {
+            by.entry(rec.tenant.clone())
+                .or_default()
+                .add(&self.request_energy(rec));
+        }
+        by.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RequestLedger;
+    use super::*;
+    use crate::perfmodel::device::{A100, H100};
+
+    fn sample_record() -> RequestRecord {
+        let led = RequestLedger::new();
+        led.enqueued(1, 0, "t0", 64, 0.0);
+        led.admitted(1, 64, 1.0);
+        for i in 0..32 {
+            led.decoded(1, 1.0 + i as f64, 1.0, 0.5);
+        }
+        led.completed(1, 33.0);
+        led.snapshot().get(1).cloned().unwrap()
+    }
+
+    #[test]
+    fn family_parse_roundtrips() {
+        for f in ModelFamily::ALL {
+            assert_eq!(ModelFamily::parse(f.as_str()), Some(f));
+        }
+        assert_eq!(ModelFamily::parse("LLAMA-7B"),
+                   Some(ModelFamily::Llama7b));
+        assert!(ModelFamily::parse("gpt-5").is_none());
+    }
+
+    #[test]
+    fn device_name_picks_power_spec() {
+        let a = EnergyModel::by_device_name(ModelFamily::Llama7b,
+                                            "a100")
+            .unwrap();
+        let h = EnergyModel::by_device_name(ModelFamily::Llama7b,
+                                            "H100")
+            .unwrap();
+        assert_eq!(a.power.tdp_w, A100_POWER.tdp_w);
+        assert_eq!(h.power.tdp_w, H100_POWER.tdp_w);
+        assert!(EnergyModel::by_device_name(ModelFamily::Llama7b,
+                                            "tpu")
+            .is_none());
+    }
+
+    #[test]
+    fn bigger_model_burns_more_joules() {
+        let rec = sample_record();
+        let small =
+            EnergyModel::new(ModelFamily::Llama7b, &A100)
+                .request_energy(&rec);
+        let big =
+            EnergyModel::new(ModelFamily::Llama34b, &A100)
+                .request_energy(&rec);
+        assert!(small.total_j() > 0.0);
+        assert!(big.total_j() > small.total_j());
+        assert!(big.tokens_per_joule() < small.tokens_per_joule());
+    }
+
+    #[test]
+    fn phases_scale_with_work_and_idle_follows_buckets() {
+        let m = EnergyModel::new(ModelFamily::Llama7b, &A100);
+        let rec = sample_record();
+        let e = m.request_energy(&rec);
+        assert!(e.prefill_j > 0.0 && e.decode_j > 0.0);
+        assert!(e.idle_j > 0.0, "interference idle draws static power");
+        assert_eq!(e.tokens, 32);
+        assert!(e.tokens_per_joule() > 0.0);
+        // Doubling decode work increases decode energy.
+        let mut longer = rec.clone();
+        longer.decoded = 64;
+        assert!(m.request_energy(&longer).decode_j > e.decode_j);
+        // An empty record attributes nothing.
+        let empty = RequestRecord::default();
+        assert_eq!(m.request_energy(&empty).total_j(), 0.0);
+    }
+
+    #[test]
+    fn h100_finishes_faster_but_draws_more() {
+        let rec = sample_record();
+        let a = EnergyModel::new(ModelFamily::Llama7b, &A100);
+        let h = EnergyModel::new(ModelFamily::Llama7b, &H100);
+        assert!(h.decode_secs(64, 32) < a.decode_secs(64, 32));
+        assert!(h.request_energy(&rec).total_j() > 0.0);
+    }
+
+    #[test]
+    fn tenant_aggregation_partitions_the_fleet() {
+        let led = RequestLedger::new();
+        for (id, tenant) in [(1u64, "a"), (2, "b"), (3, "a")] {
+            led.enqueued(id, 0, tenant, 16, 0.0);
+            led.admitted(id, 16, 1.0);
+            led.decoded(id, 2.0, 1.0, 1.0);
+            led.completed(id, 2.0);
+        }
+        let m = EnergyModel::new(ModelFamily::Llama7b, &A100);
+        let snap = led.snapshot();
+        let fleet = m.fleet_energy(&snap);
+        let tenants = m.energy_by_tenant(&snap);
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].0, "a");
+        let sum: f64 =
+            tenants.iter().map(|(_, e)| e.total_j()).sum();
+        assert!((sum - fleet.total_j()).abs() < 1e-9);
+        assert_eq!(fleet.tokens, 3);
+    }
+}

@@ -1,0 +1,426 @@
+//! Tail-latency explainer: decompose slow requests into causes.
+//!
+//! Aggregate sketches can say *that* p99 TTFT regressed; the ledger
+//! can say *why*, per request. For any quantile band (or the K
+//! slowest requests) this module splits each completed request's
+//! latency into queueing / capacity-wait / preemption / spill / sync
+//! contributions — all taken from the causal buckets the ledger
+//! accumulated — and names the dominant cause. `mmserve explain`
+//! renders the result.
+
+use crate::substrate::table::Table;
+
+use super::energy::EnergyModel;
+use super::{LedgerEvent, LedgerSnapshot, RequestRecord};
+
+/// Modeled cost of one cross-shard page spill, in driving-clock
+/// units. Spills are counted events, not timed spans (the interleaved
+/// copy hides inside the tick), so the explainer weighs them with the
+/// same per-token constant the replay charges for prefill work.
+pub const SPILL_COST: f64 = 0.05;
+
+/// Why a slow request was slow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlowCause {
+    /// Waited in the arrival queue behind other admissions.
+    Queueing,
+    /// Admission blocked on KV pool capacity (no free pages).
+    KvCapacity,
+    /// Evicted and waited for re-admission (plus recompute).
+    Preemption,
+    /// Page allocations spilled off the home shard.
+    ShardSpill,
+    /// Batch-interference idle: scheduled, but waiting behind
+    /// co-batched work inside ticks.
+    Sync,
+}
+
+impl SlowCause {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SlowCause::Queueing => "queueing",
+            SlowCause::KvCapacity => "kv-capacity",
+            SlowCause::Preemption => "preemption",
+            SlowCause::ShardSpill => "shard-spill",
+            SlowCause::Sync => "sync",
+        }
+    }
+}
+
+/// One explained request: its latency decomposition and the named
+/// dominant cause.
+#[derive(Debug, Clone)]
+pub struct ExplainRow {
+    pub id: u64,
+    pub tenant: String,
+    pub replica: u32,
+    pub latency: f64,
+    pub ttft: f64,
+    pub queue: f64,
+    pub capacity: f64,
+    pub preempt: f64,
+    pub spill: f64,
+    pub sync: f64,
+    pub dominant: SlowCause,
+}
+
+/// Decompose one completed request (None until completion: a request
+/// still in flight has no latency to explain).
+pub fn explain_request(rec: &RequestRecord) -> Option<ExplainRow> {
+    let latency = rec.latency()?;
+    let queue = rec.queue_time;
+    let capacity = rec.capacity_wait_time;
+    let preempt = rec.preempted_time;
+    let spill = rec.spills as f64 * SPILL_COST;
+    let sync = rec.interference_idle;
+    let causes = [
+        (SlowCause::Queueing, queue),
+        (SlowCause::KvCapacity, capacity),
+        (SlowCause::Preemption, preempt),
+        (SlowCause::ShardSpill, spill),
+        (SlowCause::Sync, sync),
+    ];
+    // First-wins on ties, so the ordering above is the tiebreak
+    // priority (deterministic across runs).
+    let mut dominant = causes[0];
+    for c in &causes[1..] {
+        if c.1 > dominant.1 {
+            dominant = *c;
+        }
+    }
+    Some(ExplainRow {
+        id: rec.id,
+        tenant: rec.tenant.clone(),
+        replica: rec.replica,
+        latency,
+        ttft: rec.ttft().unwrap_or(latency),
+        queue,
+        capacity,
+        preempt,
+        spill,
+        sync,
+        dominant: dominant.0,
+    })
+}
+
+/// Parse a quantile spec like `p99` / `p50` / `p99.9` into the
+/// percentile value.
+pub fn parse_tail(spec: &str) -> Option<f64> {
+    let body = spec.strip_prefix('p').or_else(|| {
+        spec.strip_prefix('P')
+    })?;
+    let p: f64 = body.parse().ok()?;
+    if (0.0..=100.0).contains(&p) { Some(p) } else { None }
+}
+
+fn completed_by_latency(snap: &LedgerSnapshot)
+                        -> Vec<&RequestRecord> {
+    let mut recs = snap.completed();
+    recs.sort_by(|a, b| {
+        let la = a.latency().unwrap_or(0.0);
+        let lb = b.latency().unwrap_or(0.0);
+        lb.partial_cmp(&la)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    recs
+}
+
+/// Explain every completed request at or above latency percentile
+/// `p` (the quantile band), slowest first. Rank convention matches
+/// `Histogram::percentile`.
+pub fn tail_rows(snap: &LedgerSnapshot, p: f64) -> Vec<ExplainRow> {
+    let recs = completed_by_latency(snap);
+    if recs.is_empty() {
+        return Vec::new();
+    }
+    let n = recs.len();
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64)
+        .round() as usize;
+    // `recs` is slowest-first; percentile rank counts from the
+    // fastest, so the band is the first `n - rank` entries.
+    let keep = n - rank.min(n - 1);
+    recs.into_iter()
+        .take(keep.max(1))
+        .filter_map(explain_request)
+        .collect()
+}
+
+/// Explain the `k` slowest completed requests.
+pub fn slowest_rows(snap: &LedgerSnapshot, k: usize)
+                    -> Vec<ExplainRow> {
+    completed_by_latency(snap)
+        .into_iter()
+        .take(k)
+        .filter_map(explain_request)
+        .collect()
+}
+
+/// Render explainer rows as the `mmserve explain` table.
+pub fn render_rows(title: &str, rows: &[ExplainRow]) -> String {
+    let mut out = format!("-- {title} ({} requests) --\n", rows.len());
+    let mut table = Table::new(&[
+        "req", "tenant", "replica", "latency", "ttft", "queue",
+        "kv-capacity", "preempt", "spill", "sync", "dominant",
+    ]);
+    for r in rows {
+        table.row(&[
+            r.id.to_string(),
+            r.tenant.clone(),
+            r.replica.to_string(),
+            format!("{:.2}", r.latency),
+            format!("{:.2}", r.ttft),
+            format!("{:.2}", r.queue),
+            format!("{:.2}", r.capacity),
+            format!("{:.2}", r.preempt),
+            format!("{:.2}", r.spill),
+            format!("{:.2}", r.sync),
+            r.dominant.as_str().to_string(),
+        ]);
+    }
+    out.push_str(&table.render());
+    out
+}
+
+/// Render one request's causal timeline (consecutive decode ticks
+/// coalesced), cost buckets, and — when an energy model is given —
+/// its Joule attribution.
+pub fn render_request(
+    rec: &RequestRecord,
+    model: Option<&EnergyModel>,
+) -> String {
+    let mut out = format!(
+        "request {} (tenant {}, replica {}): prompt {} tok, decoded \
+         {} tok, ttft {}, latency {}\n",
+        rec.id,
+        if rec.tenant.is_empty() { "-" } else { &rec.tenant },
+        rec.replica,
+        rec.prompt_len,
+        rec.decoded,
+        rec.ttft()
+            .map(|t| format!("{t:.2}"))
+            .unwrap_or_else(|| "-".to_string()),
+        rec.latency()
+            .map(|t| format!("{t:.2}"))
+            .unwrap_or_else(|| "-".to_string()),
+    );
+
+    out.push_str("\n-- causal timeline --\n");
+    let mut i = 0usize;
+    while i < rec.events.len() {
+        let e = &rec.events[i];
+        if e.ev == LedgerEvent::DecodeTick {
+            // Coalesce the run of decode ticks into one line.
+            let mut j = i;
+            while j + 1 < rec.events.len()
+                && rec.events[j + 1].ev == LedgerEvent::DecodeTick
+            {
+                j += 1;
+            }
+            out.push_str(&format!(
+                "  t={:8.2} .. {:8.2}  decode ×{}\n",
+                e.t,
+                rec.events[j].t,
+                j - i + 1
+            ));
+            i = j + 1;
+            continue;
+        }
+        let detail = match e.ev {
+            LedgerEvent::Routed { replica } => {
+                format!(" -> replica {replica}")
+            }
+            LedgerEvent::Admitted { tokens }
+            | LedgerEvent::PrefillChunk { tokens } => {
+                format!(" ({tokens} tok)")
+            }
+            LedgerEvent::Completed { decoded } => {
+                format!(" ({decoded} tok)")
+            }
+            _ => String::new(),
+        };
+        out.push_str(&format!(
+            "  t={:8.2}              {}{detail}\n",
+            e.t,
+            e.ev.label()
+        ));
+        i += 1;
+    }
+
+    out.push_str("\n-- cost buckets --\n");
+    let mut table = Table::new(&["bucket", "time"]);
+    for (label, v) in [
+        ("queueing", rec.queue_time),
+        ("kv-capacity wait", rec.capacity_wait_time),
+        ("preempted", rec.preempted_time),
+        ("sync (interference)", rec.interference_idle),
+        ("prefill compute", rec.prefill_compute),
+        ("decode compute", rec.decode_compute),
+        ("page-seconds", rec.page_seconds),
+    ] {
+        table.row(&[label.to_string(), format!("{v:.3}")]);
+    }
+    out.push_str(&table.render());
+    if let Some(row) = explain_request(rec) {
+        out.push_str(&format!(
+            "dominant slow-cause: {}\n",
+            row.dominant.as_str()
+        ));
+    }
+
+    if let Some(m) = model {
+        let e = m.request_energy(rec);
+        out.push_str(&format!(
+            "\n-- modeled energy ({} on {}) --\n  prefill {:.3} J + \
+             decode {:.3} J + idle {:.3} J = {:.3} J  ({} tok, {:.1} \
+             tok/J)\n",
+            m.family.as_str(),
+            m.device.name,
+            e.prefill_j,
+            e.decode_j,
+            e.idle_j,
+            e.total_j(),
+            e.tokens,
+            e.tokens_per_joule()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::energy::ModelFamily;
+    use super::super::{RequestLedger, TickCharges};
+    use super::*;
+    use crate::perfmodel::device::A100;
+
+    /// Build a small fleet where each request has a different
+    /// engineered dominant cause.
+    fn fleet() -> LedgerSnapshot {
+        let led = RequestLedger::new();
+        // req 1: long queue.
+        led.enqueued(1, 0, "a", 8, 0.0);
+        led.charge_tick(&TickCharges {
+            dt: 10.0,
+            blocked_on_capacity: false,
+            waiting: &[1],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(1, 8, 10.0);
+        led.first_token(1, 10.5);
+        led.decoded(1, 10.5, 0.5, 0.5);
+        led.completed(1, 11.0);
+        // req 2: capacity-blocked admission.
+        led.enqueued(2, 0, "b", 8, 0.0);
+        led.charge_tick(&TickCharges {
+            dt: 6.0,
+            blocked_on_capacity: true,
+            waiting: &[2],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(2, 8, 6.0);
+        led.first_token(2, 6.5);
+        led.decoded(2, 6.5, 0.5, 0.5);
+        led.completed(2, 7.0);
+        // req 3: preempted mid-decode.
+        led.enqueued(3, 0, "a", 8, 0.0);
+        led.admitted(3, 8, 0.5);
+        led.first_token(3, 1.0);
+        led.decoded(3, 1.0, 0.5, 0.5);
+        led.preempted(3, 1.0);
+        led.charge_tick(&TickCharges {
+            dt: 4.0,
+            blocked_on_capacity: false,
+            waiting: &[3],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(3, 8, 5.0);
+        led.decoded(3, 5.5, 0.5, 0.5);
+        led.completed(3, 5.5);
+        // req 4: fast, interference-bound.
+        led.enqueued(4, 0, "b", 8, 0.0);
+        led.admitted(4, 8, 0.1);
+        led.first_token(4, 0.6);
+        led.decoded(4, 0.6, 0.5, 0.1);
+        led.completed(4, 1.1);
+        led.snapshot()
+    }
+
+    #[test]
+    fn dominant_causes_are_named_per_request() {
+        let snap = fleet();
+        let rows = slowest_rows(&snap, 10);
+        assert_eq!(rows.len(), 4);
+        let by_id = |id: u64| {
+            rows.iter().find(|r| r.id == id).unwrap().dominant
+        };
+        assert_eq!(by_id(1), SlowCause::Queueing);
+        assert_eq!(by_id(2), SlowCause::KvCapacity);
+        assert_eq!(by_id(3), SlowCause::Preemption);
+        assert_eq!(by_id(4), SlowCause::Sync);
+        // Slowest first.
+        assert_eq!(rows[0].id, 1);
+    }
+
+    #[test]
+    fn tail_band_keeps_the_slow_end() {
+        let snap = fleet();
+        let p99 = tail_rows(&snap, 99.0);
+        assert!(!p99.is_empty() && p99.len() < 4);
+        assert_eq!(p99[0].id, 1, "p99 band holds the slowest request");
+        let p0 = tail_rows(&snap, 0.0);
+        assert_eq!(p0.len(), 4, "p0 band holds everything");
+        // Every row names a dominant cause (acceptance criterion).
+        for r in &p0 {
+            assert!(!r.dominant.as_str().is_empty());
+        }
+    }
+
+    #[test]
+    fn spill_weight_can_dominate() {
+        let led = RequestLedger::new();
+        led.enqueued(9, 0, "-", 4, 0.0);
+        led.admitted(9, 4, 0.1);
+        for _ in 0..40 {
+            led.spill(9, 0.2);
+        }
+        led.first_token(9, 0.5);
+        led.decoded(9, 0.5, 0.4, 0.4);
+        led.completed(9, 0.6);
+        let snap = led.snapshot();
+        let row = explain_request(snap.get(9).unwrap()).unwrap();
+        assert_eq!(row.dominant, SlowCause::ShardSpill);
+        assert!((row.spill - 40.0 * SPILL_COST).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_tail_accepts_p_specs() {
+        assert_eq!(parse_tail("p99"), Some(99.0));
+        assert_eq!(parse_tail("P50"), Some(50.0));
+        assert_eq!(parse_tail("p99.9"), Some(99.9));
+        assert_eq!(parse_tail("99"), None);
+        assert_eq!(parse_tail("p101"), None);
+    }
+
+    #[test]
+    fn renders_table_timeline_and_energy() {
+        let snap = fleet();
+        let table = render_rows("tail p99", &tail_rows(&snap, 99.0));
+        assert!(table.contains("dominant"));
+        assert!(table.contains("queueing"));
+        let m = EnergyModel::new(ModelFamily::Llama7b, &A100);
+        let one = render_request(snap.get(3).unwrap(), Some(&m));
+        assert!(one.contains("causal timeline"));
+        assert!(one.contains("preempted"));
+        assert!(one.contains("resumed"));
+        assert!(one.contains("tok/J"));
+        assert!(one.contains("dominant slow-cause: preemption"));
+        // Decode ticks coalesce: no bare "decode-tick ×1"-per-line
+        // spam for a two-token run.
+        let incomplete = render_request(snap.get(1).unwrap(), None);
+        assert!(incomplete.contains("decode ×1"));
+    }
+}

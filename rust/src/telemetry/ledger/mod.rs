@@ -1,0 +1,652 @@
+//! Per-request causal cost ledger.
+//!
+//! The live plane (`telemetry::live`) answers fleet questions — "what
+//! is TTFT p99 *right now*" — but only in aggregate. This module is
+//! the per-request counterpart: a [`RequestLedger`] follows each
+//! request across router → batcher admission → scheduler ticks →
+//! kvpool/shard events and records
+//!
+//! * a typed causal event chain ([`LedgerEvent`]: routed, enqueued,
+//!   admitted, prefill chunks, decode ticks, preemptions/resumes,
+//!   shard spills, completion), each stamped with the driving clock,
+//! * per-phase wall time split into compute vs. idle buckets (the
+//!   request-granular analogue of `attribution.rs` gap folding:
+//!   queueing, KV-capacity wait, preempted time, batch-interference
+//!   idle),
+//! * pages held over time (page-seconds — the KV-occupancy cost the
+//!   fairness/QoS tier charges against), and
+//! * via [`energy`], a modeled Joule estimate from `perfmodel`'s
+//!   roofline FLOPs-and-bytes accounting (prefill vs. decode vs. idle
+//!   power states, per model family).
+//!
+//! [`explain`] builds the tail-latency explainer on top: for any
+//! quantile band it decomposes slow requests into queueing /
+//! capacity-wait / preemption / spill / sync contributions and names
+//! the dominant cause (`mmserve explain`).
+//!
+//! The ledger follows the live plane's contracts exactly: it is pure
+//! observation (attaching it never changes scheduling decisions,
+//! clocks, or outputs — CI replays with and without it and fails on
+//! any `sim_time` delta), and [`RequestLedger::off`] costs one
+//! relaxed atomic load per would-be hook (asserted by
+//! `benches/telemetry_overhead.rs`).
+
+pub mod energy;
+pub mod explain;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::substrate::json::Json;
+
+/// One step in a request's causal chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LedgerEvent {
+    /// Router picked a replica for this request.
+    Routed { replica: u32 },
+    /// Delivered into a worker's arrival queue.
+    Enqueued,
+    /// Batcher admitted the first prefill chunk (slot + pages held).
+    Admitted { tokens: usize },
+    /// A continuation prefill chunk was committed.
+    PrefillChunk { tokens: usize },
+    /// First decoded token emitted (the TTFT point).
+    FirstToken,
+    /// The request decoded one token this scheduler tick.
+    DecodeTick,
+    /// Evicted to reclaim pages (recompute on re-admission).
+    Preempted,
+    /// Re-admitted after a preemption.
+    Resumed,
+    /// A page allocation spilled off the request's home shard.
+    Spill,
+    /// All tokens decoded; slot released.
+    Completed { decoded: u64 },
+}
+
+impl LedgerEvent {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LedgerEvent::Routed { .. } => "routed",
+            LedgerEvent::Enqueued => "enqueued",
+            LedgerEvent::Admitted { .. } => "admitted",
+            LedgerEvent::PrefillChunk { .. } => "prefill-chunk",
+            LedgerEvent::FirstToken => "first-token",
+            LedgerEvent::DecodeTick => "decode-tick",
+            LedgerEvent::Preempted => "preempted",
+            LedgerEvent::Resumed => "resumed",
+            LedgerEvent::Spill => "shard-spill",
+            LedgerEvent::Completed { .. } => "completed",
+        }
+    }
+}
+
+/// An event stamped with the driving clock (simulated seconds in the
+/// replay drivers, wall seconds on the real serving path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedEvent {
+    pub t: f64,
+    pub ev: LedgerEvent,
+}
+
+/// Everything the ledger accumulated for one request. Time buckets
+/// partition the request's resident wall time: `queue_time` (waiting,
+/// pool not blocked), `capacity_wait_time` (waiting while admission
+/// was blocked on pages), `preempted_time` (evicted, awaiting
+/// re-admission), `prefill_compute`/`decode_compute` (this request's
+/// own share of dispatched work), and `interference_idle` (scheduled
+/// in a tick but idle behind co-batched work — the request-level
+/// "sync" bucket, the per-request analogue of the attribution pass's
+/// PrefillStall/Other gaps).
+#[derive(Debug, Clone, Default)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub tenant: String,
+    pub replica: u32,
+    pub prompt_len: usize,
+    /// Causal chain in arrival order.
+    pub events: Vec<TimedEvent>,
+    pub enqueued_at: f64,
+    pub first_token_at: Option<f64>,
+    pub completed_at: Option<f64>,
+    /// Tokens decoded so far.
+    pub decoded: u64,
+    /// Prompt tokens actually prefilled, *including* recompute after
+    /// preemptions — this is the work (and energy) really spent, which
+    /// can exceed `prompt_len`.
+    pub prefilled_tokens: usize,
+    pub preemptions: u64,
+    pub spills: u64,
+    pub queue_time: f64,
+    pub capacity_wait_time: f64,
+    pub preempted_time: f64,
+    pub prefill_compute: f64,
+    pub decode_compute: f64,
+    pub interference_idle: f64,
+    /// ∫ pages-held dt — KV occupancy cost.
+    pub page_seconds: f64,
+    /// Per-token time-between-tokens samples (parity source for the
+    /// live plane's TBT sketch).
+    pub tbt: Vec<f64>,
+    /// A preemption is open until the next admission closes it.
+    open_preempt: bool,
+}
+
+impl RequestRecord {
+    /// Time to first token (None until one is emitted). Matches the
+    /// live plane's definition: measured from the *latest* enqueue, so
+    /// a request re-delivered after a replica crash restarts its
+    /// clock on both planes.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.enqueued_at)
+    }
+
+    /// End-to-end latency (None until completed).
+    pub fn latency(&self) -> Option<f64> {
+        self.completed_at.map(|t| t - self.enqueued_at)
+    }
+
+    /// Total attributed idle time (everything that is neither this
+    /// request's own compute nor unaccounted).
+    pub fn idle_total(&self) -> f64 {
+        self.queue_time
+            + self.capacity_wait_time
+            + self.preempted_time
+            + self.interference_idle
+    }
+
+    /// One JSONL line for `--ledger-out`.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("t".to_string(), Json::Num(e.t)),
+                    ("ev".to_string(),
+                     Json::Str(e.ev.label().to_string())),
+                ];
+                match e.ev {
+                    LedgerEvent::Routed { replica } => fields.push((
+                        "replica".to_string(),
+                        Json::Num(replica as f64),
+                    )),
+                    LedgerEvent::Admitted { tokens }
+                    | LedgerEvent::PrefillChunk { tokens } => fields
+                        .push((
+                            "tokens".to_string(),
+                            Json::Num(tokens as f64),
+                        )),
+                    LedgerEvent::Completed { decoded } => fields.push((
+                        "decoded".to_string(),
+                        Json::Num(decoded as f64),
+                    )),
+                    _ => {}
+                }
+                Json::from_obj(fields)
+            })
+            .collect();
+        let opt = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        Json::from_obj(vec![
+            ("id".to_string(), Json::Num(self.id as f64)),
+            ("tenant".to_string(), Json::Str(self.tenant.clone())),
+            ("replica".to_string(), Json::Num(self.replica as f64)),
+            ("prompt_len".to_string(),
+             Json::Num(self.prompt_len as f64)),
+            ("decoded".to_string(), Json::Num(self.decoded as f64)),
+            ("prefilled_tokens".to_string(),
+             Json::Num(self.prefilled_tokens as f64)),
+            ("enqueued_at".to_string(), Json::Num(self.enqueued_at)),
+            ("ttft".to_string(), opt(self.ttft())),
+            ("latency".to_string(), opt(self.latency())),
+            ("preemptions".to_string(),
+             Json::Num(self.preemptions as f64)),
+            ("spills".to_string(), Json::Num(self.spills as f64)),
+            ("queue_time".to_string(), Json::Num(self.queue_time)),
+            ("capacity_wait_time".to_string(),
+             Json::Num(self.capacity_wait_time)),
+            ("preempted_time".to_string(),
+             Json::Num(self.preempted_time)),
+            ("prefill_compute".to_string(),
+             Json::Num(self.prefill_compute)),
+            ("decode_compute".to_string(),
+             Json::Num(self.decode_compute)),
+            ("interference_idle".to_string(),
+             Json::Num(self.interference_idle)),
+            ("page_seconds".to_string(),
+             Json::Num(self.page_seconds)),
+            ("events".to_string(), Json::Arr(events)),
+        ])
+    }
+}
+
+/// Per-tick bulk charges: which requests waited (and why), which were
+/// fed prefill compute, and how many pages each resident request held
+/// across the tick. Passed by the driver once per tick so the ledger
+/// takes one lock, not one per request.
+#[derive(Debug, Default)]
+pub struct TickCharges<'a> {
+    /// Tick duration on the driving clock.
+    pub dt: f64,
+    /// Admission was blocked on pool capacity this tick (waiting
+    /// requests charge `capacity_wait_time` instead of `queue_time`).
+    pub blocked_on_capacity: bool,
+    /// Requests staged/waiting for admission.
+    pub waiting: &'a [u64],
+    /// `(request, own prefill compute this tick)`.
+    pub prefill: &'a [(u64, f64)],
+    /// `(request, pages held)` for every resident request.
+    pub pages: &'a [(u64, u64)],
+}
+
+#[derive(Debug, Default)]
+struct LedgerCore {
+    enabled: AtomicBool,
+    state: Mutex<BTreeMap<u64, RequestRecord>>,
+}
+
+/// Cloneable per-request ledger handle (`Send + Sync`). Disabled mode
+/// is the tracer/live-plane contract: every hook is one relaxed
+/// atomic load and nothing else.
+#[derive(Debug, Clone, Default)]
+pub struct RequestLedger {
+    core: Arc<LedgerCore>,
+}
+
+impl RequestLedger {
+    /// An enabled ledger.
+    pub fn new() -> Self {
+        let led = RequestLedger::default();
+        led.core.enabled.store(true, Ordering::Relaxed);
+        led
+    }
+
+    /// A disabled ledger: every hook is one relaxed atomic load.
+    pub fn off() -> Self {
+        RequestLedger::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.core.enabled.load(Ordering::Relaxed)
+    }
+
+    /// A panicking worker must degrade the ledger, never take down
+    /// the publisher: recover the poisoned map.
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<u64, RequestRecord>> {
+        self.core
+            .state
+            .lock()
+            .unwrap_or_else(|poison| poison.into_inner())
+    }
+
+    fn with_record(&self, id: u64, f: impl FnOnce(&mut RequestRecord)) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut st = self.lock();
+        let rec = st.entry(id).or_insert_with(|| RequestRecord {
+            id,
+            ..RequestRecord::default()
+        });
+        f(rec);
+    }
+
+    /// Router picked `replica` for this request.
+    pub fn routed(&self, id: u64, replica: u32, now: f64) {
+        self.with_record(id, |rec| {
+            rec.replica = replica;
+            rec.events.push(TimedEvent {
+                t: now,
+                ev: LedgerEvent::Routed { replica },
+            });
+        });
+    }
+
+    /// Delivered into a worker's queue. Re-delivery (after a replica
+    /// crash) restarts the request's clock — matching the live
+    /// plane's TTFT definition — but keeps the accumulated buckets
+    /// and event chain: the cost was really paid.
+    pub fn enqueued(
+        &self,
+        id: u64,
+        replica: u32,
+        tenant: &str,
+        prompt_len: usize,
+        now: f64,
+    ) {
+        self.with_record(id, |rec| {
+            rec.replica = replica;
+            rec.tenant = tenant.to_string();
+            rec.prompt_len = prompt_len;
+            rec.enqueued_at = now;
+            rec.first_token_at = None;
+            rec.events
+                .push(TimedEvent { t: now, ev: LedgerEvent::Enqueued });
+        });
+    }
+
+    /// First prefill chunk admitted (`tokens` committed). Closes an
+    /// open preemption (this is the resume point).
+    pub fn admitted(&self, id: u64, tokens: usize, now: f64) {
+        self.with_record(id, |rec| {
+            if rec.open_preempt {
+                rec.open_preempt = false;
+                rec.events.push(TimedEvent {
+                    t: now,
+                    ev: LedgerEvent::Resumed,
+                });
+            }
+            rec.prefilled_tokens += tokens;
+            rec.events.push(TimedEvent {
+                t: now,
+                ev: LedgerEvent::Admitted { tokens },
+            });
+        });
+    }
+
+    /// A continuation prefill chunk was committed.
+    pub fn prefill_chunk(&self, id: u64, tokens: usize, now: f64) {
+        self.with_record(id, |rec| {
+            rec.prefilled_tokens += tokens;
+            rec.events.push(TimedEvent {
+                t: now,
+                ev: LedgerEvent::PrefillChunk { tokens },
+            });
+        });
+    }
+
+    /// First token emitted (idempotent: only the first call per
+    /// enqueue records the TTFT point).
+    pub fn first_token(&self, id: u64, now: f64) {
+        self.with_record(id, |rec| {
+            if rec.first_token_at.is_none() {
+                rec.first_token_at = Some(now);
+                rec.events.push(TimedEvent {
+                    t: now,
+                    ev: LedgerEvent::FirstToken,
+                });
+            }
+        });
+    }
+
+    /// One token decoded: `tbt` is the tick's time-between-tokens
+    /// sample (identical to what the live plane's sketch observes),
+    /// `compute` this request's own share of the tick's dispatch —
+    /// the remainder is batch-interference idle.
+    pub fn decoded(&self, id: u64, now: f64, tbt: f64, compute: f64) {
+        self.with_record(id, |rec| {
+            rec.decoded += 1;
+            rec.tbt.push(tbt);
+            rec.decode_compute += compute;
+            rec.interference_idle += (tbt - compute).max(0.0);
+            rec.events
+                .push(TimedEvent { t: now, ev: LedgerEvent::DecodeTick });
+        });
+    }
+
+    /// Evicted to reclaim pages; open until the next `admitted`.
+    pub fn preempted(&self, id: u64, now: f64) {
+        self.with_record(id, |rec| {
+            rec.preemptions += 1;
+            rec.open_preempt = true;
+            rec.events
+                .push(TimedEvent { t: now, ev: LedgerEvent::Preempted });
+        });
+    }
+
+    /// A page allocation spilled off the request's home shard.
+    pub fn spill(&self, id: u64, now: f64) {
+        self.with_record(id, |rec| {
+            rec.spills += 1;
+            rec.events
+                .push(TimedEvent { t: now, ev: LedgerEvent::Spill });
+        });
+    }
+
+    /// All tokens decoded; the request left the worker.
+    pub fn completed(&self, id: u64, now: f64) {
+        self.with_record(id, |rec| {
+            rec.completed_at = Some(now);
+            let decoded = rec.decoded;
+            rec.events.push(TimedEvent {
+                t: now,
+                ev: LedgerEvent::Completed { decoded },
+            });
+        });
+    }
+
+    /// Bulk per-tick charges (waiting buckets, prefill compute +
+    /// interference, page-seconds). One lock per tick.
+    pub fn charge_tick(&self, c: &TickCharges<'_>) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut st = self.lock();
+        for &id in c.waiting {
+            if let Some(rec) = st.get_mut(&id) {
+                if rec.open_preempt {
+                    rec.preempted_time += c.dt;
+                } else if c.blocked_on_capacity {
+                    rec.capacity_wait_time += c.dt;
+                } else {
+                    rec.queue_time += c.dt;
+                }
+            }
+        }
+        for &(id, own) in c.prefill {
+            if let Some(rec) = st.get_mut(&id) {
+                rec.prefill_compute += own;
+                rec.interference_idle += (c.dt - own).max(0.0);
+            }
+        }
+        for &(id, pages) in c.pages {
+            if let Some(rec) = st.get_mut(&id) {
+                rec.page_seconds += pages as f64 * c.dt;
+            }
+        }
+    }
+
+    /// Point-in-time copy of every record, in request-id order.
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        if !self.is_enabled() {
+            return LedgerSnapshot::default();
+        }
+        LedgerSnapshot {
+            requests: self.lock().values().cloned().collect(),
+        }
+    }
+}
+
+/// Everything the ledger knew at one instant (request-id order).
+#[derive(Debug, Clone, Default)]
+pub struct LedgerSnapshot {
+    pub requests: Vec<RequestRecord>,
+}
+
+impl LedgerSnapshot {
+    pub fn get(&self, id: u64) -> Option<&RequestRecord> {
+        self.requests.iter().find(|r| r.id == id)
+    }
+
+    /// Records that reached completion.
+    pub fn completed(&self) -> Vec<&RequestRecord> {
+        self.requests
+            .iter()
+            .filter(|r| r.completed_at.is_some())
+            .collect()
+    }
+
+    /// All per-request TTFT samples (parity source for the live
+    /// plane's TTFT sketch).
+    pub fn ttft_values(&self) -> Vec<f64> {
+        self.requests.iter().filter_map(|r| r.ttft()).collect()
+    }
+
+    /// All per-token TBT samples.
+    pub fn tbt_values(&self) -> Vec<f64> {
+        self.requests
+            .iter()
+            .flat_map(|r| r.tbt.iter().copied())
+            .collect()
+    }
+
+    /// JSONL dump, one request per line (`--ledger-out`).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for rec in &self.requests {
+            out.push_str(&rec.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lifecycle(led: &RequestLedger) {
+        led.routed(1, 2, 0.0);
+        led.enqueued(1, 2, "tenant-a", 8, 0.0);
+        led.charge_tick(&TickCharges {
+            dt: 1.0,
+            blocked_on_capacity: false,
+            waiting: &[1],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(1, 8, 1.0);
+        led.charge_tick(&TickCharges {
+            dt: 0.4,
+            blocked_on_capacity: false,
+            waiting: &[],
+            prefill: &[(1, 0.4)],
+            pages: &[(1, 1)],
+        });
+        led.first_token(1, 1.4);
+        led.decoded(1, 1.4, 0.5, 0.25);
+        led.preempted(1, 2.0);
+        led.charge_tick(&TickCharges {
+            dt: 0.5,
+            blocked_on_capacity: true,
+            waiting: &[1],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(1, 8, 2.5);
+        led.decoded(1, 3.0, 0.5, 0.5);
+        led.completed(1, 3.0);
+    }
+
+    #[test]
+    fn disabled_ledger_is_inert() {
+        let led = RequestLedger::off();
+        lifecycle(&led);
+        assert!(!led.is_enabled());
+        assert!(led.snapshot().requests.is_empty());
+    }
+
+    #[test]
+    fn lifecycle_accumulates_buckets_and_events() {
+        let led = RequestLedger::new();
+        lifecycle(&led);
+        let snap = led.snapshot();
+        let rec = snap.get(1).expect("record exists");
+        assert_eq!(rec.tenant, "tenant-a");
+        assert_eq!(rec.replica, 2);
+        assert_eq!(rec.decoded, 2);
+        // Recompute after the preemption counts twice.
+        assert_eq!(rec.prefilled_tokens, 16);
+        assert_eq!(rec.preemptions, 1);
+        assert!((rec.queue_time - 1.0).abs() < 1e-9);
+        // The open preemption wins over the capacity-blocked flag.
+        assert!((rec.preempted_time - 0.5).abs() < 1e-9);
+        assert!((rec.capacity_wait_time).abs() < 1e-9);
+        assert!((rec.prefill_compute - 0.4).abs() < 1e-9);
+        assert!((rec.decode_compute - 0.75).abs() < 1e-9);
+        assert!((rec.interference_idle - 0.25).abs() < 1e-9);
+        assert!((rec.page_seconds - 0.4).abs() < 1e-9);
+        assert_eq!(rec.ttft(), Some(1.4));
+        assert_eq!(rec.latency(), Some(3.0));
+        assert_eq!(rec.tbt, vec![0.5, 0.5]);
+        // Causal chain: routed → enqueued → admitted → first-token →
+        // decode → preempted → resumed → admitted → decode → done.
+        let labels: Vec<&str> =
+            rec.events.iter().map(|e| e.ev.label()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "routed", "enqueued", "admitted", "first-token",
+                "decode-tick", "preempted", "resumed", "admitted",
+                "decode-tick", "completed",
+            ]
+        );
+    }
+
+    #[test]
+    fn redelivery_restarts_the_clock_but_keeps_costs() {
+        let led = RequestLedger::new();
+        led.enqueued(7, 0, "-", 4, 0.0);
+        led.charge_tick(&TickCharges {
+            dt: 2.0,
+            blocked_on_capacity: false,
+            waiting: &[7],
+            prefill: &[],
+            pages: &[],
+        });
+        led.admitted(7, 4, 2.0);
+        led.first_token(7, 3.0);
+        // Replica crash: re-routed and re-delivered at t=5 on the
+        // surviving worker's clock.
+        led.enqueued(7, 1, "-", 4, 5.0);
+        led.admitted(7, 4, 6.0);
+        led.first_token(7, 7.5);
+        led.completed(7, 8.0);
+        let snap = led.snapshot();
+        let rec = snap.get(7).unwrap();
+        assert_eq!(rec.replica, 1);
+        assert_eq!(rec.ttft(), Some(2.5), "TTFT restarts on re-enqueue");
+        assert!((rec.queue_time - 2.0).abs() < 1e-9, "costs survive");
+        assert_eq!(rec.prefilled_tokens, 8);
+    }
+
+    #[test]
+    fn jsonl_roundtrips_and_snapshot_helpers_filter() {
+        let led = RequestLedger::new();
+        lifecycle(&led);
+        led.enqueued(2, 0, "tenant-b", 3, 0.0); // never completes
+        let snap = led.snapshot();
+        assert_eq!(snap.requests.len(), 2);
+        assert_eq!(snap.completed().len(), 1);
+        assert_eq!(snap.ttft_values().len(), 1);
+        assert_eq!(snap.tbt_values().len(), 2);
+        let jsonl = snap.to_jsonl();
+        assert_eq!(jsonl.lines().count(), 2);
+        for line in jsonl.lines() {
+            let doc = Json::parse(line).unwrap_or_else(|e| {
+                panic!("invalid ledger JSONL {line:?}: {e}")
+            });
+            assert!(doc.get("id").and_then(Json::as_f64).is_some());
+            assert!(doc.get("events").and_then(Json::as_arr).is_some());
+        }
+        let one = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(one.get("latency").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn charges_for_unknown_requests_are_dropped() {
+        let led = RequestLedger::new();
+        led.charge_tick(&TickCharges {
+            dt: 1.0,
+            blocked_on_capacity: false,
+            waiting: &[99],
+            prefill: &[(99, 1.0)],
+            pages: &[(99, 4)],
+        });
+        assert!(led.snapshot().requests.is_empty());
+    }
+}

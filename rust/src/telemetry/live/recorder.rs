@@ -10,7 +10,7 @@
 //! Disabled mode follows the tracer contract: one relaxed atomic load
 //! per would-be event.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -38,7 +38,10 @@ struct RecState {
     seq: u64,
     dumps: Vec<Dump>,
     dump_path: Option<PathBuf>,
-    storm_fired: bool,
+    /// Replicas whose storm latch is currently set (per-replica: a
+    /// healthy replica must never dump — or re-arm — because a sick
+    /// one is storming).
+    storm_fired: BTreeSet<String>,
     sigterm_fired: bool,
 }
 
@@ -173,27 +176,25 @@ impl FlightRecorder {
         Some(out)
     }
 
-    /// Preemption delta for one tick; at/above the storm threshold the
-    /// ring dumps once (`preemption-storm`), re-arming only after a
-    /// calm tick so a sustained storm produces one dump, not one per
-    /// tick.
-    pub fn note_preemptions(&self, delta: u64) {
+    /// Preemption delta for one tick on `replica`; at/above the storm
+    /// threshold the ring dumps once (`preemption-storm@<replica>`),
+    /// re-arming only after a calm tick *on the same replica* — a
+    /// sustained storm produces one dump, not one per tick, and a
+    /// healthy replica's calm ticks neither trigger nor re-arm a sick
+    /// replica's latch.
+    pub fn note_preemptions(&self, replica: &str, delta: u64) {
         if !self.is_enabled() || self.core.storm_threshold == 0 {
             return;
         }
         if delta == 0 {
-            self.lock().storm_fired = false;
+            self.lock().storm_fired.remove(replica);
             return;
         }
         if delta >= self.core.storm_threshold {
-            let fired = {
-                let mut st = self.lock();
-                let was = st.storm_fired;
-                st.storm_fired = true;
-                was
-            };
-            if !fired {
-                self.trigger("preemption-storm");
+            let newly =
+                self.lock().storm_fired.insert(replica.to_string());
+            if newly {
+                self.trigger(&format!("preemption-storm@{replica}"));
             }
         }
     }
@@ -325,7 +326,7 @@ mod tests {
         rec.record(ev(1));
         assert_eq!(rec.buffered(), 0);
         assert!(rec.trigger("x").is_none());
-        rec.note_preemptions(1_000);
+        rec.note_preemptions("0", 1_000);
         assert!(rec.dumps().is_empty());
     }
 
@@ -333,15 +334,38 @@ mod tests {
     fn storm_threshold_dumps_once_until_calm() {
         let rec = FlightRecorder::new(8).with_storm_threshold(4);
         rec.record(ev(0));
-        rec.note_preemptions(2); // below threshold
+        rec.note_preemptions("0", 2); // below threshold
         assert!(rec.dumps().is_empty());
-        rec.note_preemptions(5); // storm
-        rec.note_preemptions(9); // still storming: no second dump
+        rec.note_preemptions("0", 5); // storm
+        rec.note_preemptions("0", 9); // still storming: no 2nd dump
         assert_eq!(rec.dumps().len(), 1);
-        assert_eq!(rec.dumps()[0].reason, "preemption-storm");
-        rec.note_preemptions(0); // calm re-arms
-        rec.note_preemptions(4);
+        assert_eq!(rec.dumps()[0].reason, "preemption-storm@0");
+        rec.note_preemptions("0", 0); // calm re-arms
+        rec.note_preemptions("0", 4);
         assert_eq!(rec.dumps().len(), 2);
+    }
+
+    /// Regression: the storm latch is per-replica. A healthy replica
+    /// must not dump (and its calm ticks must not re-arm the latch)
+    /// because a sick replica is storming.
+    #[test]
+    fn storm_latch_is_per_replica() {
+        let rec = FlightRecorder::new(8).with_storm_threshold(4);
+        rec.note_preemptions("1", 6); // replica 1 storms
+        assert_eq!(rec.dumps().len(), 1);
+        assert_eq!(rec.dumps()[0].reason, "preemption-storm@1");
+        // Healthy replica 0 ticks calmly: no dump, and replica 1's
+        // latch must stay set.
+        rec.note_preemptions("0", 0);
+        rec.note_preemptions("1", 9);
+        assert_eq!(rec.dumps().len(), 1, "latch survives other \
+                                          replicas' calm ticks");
+        rec.note_preemptions("0", 1); // below threshold: still quiet
+        assert_eq!(rec.dumps().len(), 1);
+        // An independent storm on replica 0 is its own dump.
+        rec.note_preemptions("0", 5);
+        assert_eq!(rec.dumps().len(), 2);
+        assert_eq!(rec.dumps()[1].reason, "preemption-storm@0");
     }
 
     #[test]

@@ -202,7 +202,7 @@ impl WorkerSampler {
                 ("evictions".into(), Json::Num(d_evict as f64)),
                 ("spills".into(), Json::Num(d_spills as f64)),
             ]));
-            self.recorder.note_preemptions(d_preempt);
+            self.recorder.note_preemptions(&self.replica, d_preempt);
         }
         self.prev = stats.clone();
     }
@@ -603,7 +603,9 @@ mod tests {
         sampler.sample_tick(1, 0, &stats, &[]);
         let dumps = rec.dumps();
         assert_eq!(dumps.len(), 1);
-        assert_eq!(dumps[0].reason, "preemption-storm");
+        // The latch (and the dump reason) is keyed by this sampler's
+        // replica label.
+        assert_eq!(dumps[0].reason, "preemption-storm@1");
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   streaming quantile sketches, per-tick fleet sampler, online
 //!   idle-gap attribution, flight recorder, and Prometheus text
 //!   exposition (`mmserve stats`, `--metrics-out`).
+//! * [`ledger`] — the per-request causal cost ledger: typed event
+//!   chains across router → admission → ticks → kvpool, per-phase
+//!   compute/idle buckets, page-seconds, modeled Joules
+//!   ([`ledger::energy`]), and the tail-latency explainer
+//!   ([`ledger::explain`], `mmserve explain`).
 //!
 //! Wiring: `Engine` holds an optional [`tracer::WorkerTracer`] and
 //! wraps every PJRT execute / upload / download / compile in a span;
@@ -35,6 +40,7 @@
 pub mod aggregate;
 pub mod attribution;
 pub mod chrome_trace;
+pub mod ledger;
 pub mod live;
 pub mod report;
 pub mod timeline;
@@ -42,6 +48,7 @@ pub mod tracer;
 
 pub use aggregate::Aggregate;
 pub use attribution::Attribution;
+pub use ledger::{LedgerSnapshot, RequestLedger, RequestRecord};
 pub use live::{FlightRecorder, LiveMetrics, MetricsSnapshot,
                OnlineAttribution, QuantileSketch, WorkerSampler};
 pub use report::TraceReport;

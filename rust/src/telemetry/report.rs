@@ -45,7 +45,11 @@ impl TraceReport {
         out.push_str(&self.aggregate.render_stages());
         out.push_str("\n-- idle-gap attribution (the paper's GPU-idle \
                       decomposition) --\n");
-        out.push_str(&self.attribution.render());
+        // Percentages against the run's real wall time, not the
+        // attribution pass's dispatch-window total: on a partial
+        // trace the window is shorter than the wall, and dividing by
+        // it inflated every idle bucket.
+        out.push_str(&self.attribution.render_with_wall(self.wall));
         if !self.timeline.is_empty() {
             out.push_str(&format!(
                 "\n-- step timeline ({} ticks, mean {:.3} ms, execute \
@@ -93,5 +97,42 @@ mod tests {
         assert!(s.contains("step timeline"));
         assert!(rep.coverage > 0.99);
         assert_eq!(rep.timeline.len(), 2);
+    }
+
+    /// Partial trace: a host span extends the wall past the dispatch
+    /// window, so idle percentages must use the report's wall — not
+    /// the attribution span total — as the denominator.
+    #[test]
+    fn partial_trace_percentages_use_report_wall() {
+        let sp = |cat: Cat, t0: f64, t1: f64| Span {
+            name: cat.as_str().to_string(),
+            cat,
+            t0,
+            t1,
+            tid: 1,
+            req: Some(1),
+            tick: Some(0),
+        };
+        // Dispatch window [2,4] (wall 2s, 1s execute + 1s idle), but
+        // the trace really spans [0,10]: wall = 10s.
+        let tr = Trace {
+            spans: vec![
+                sp(Cat::Tokenize, 0.0, 10.0),
+                sp(Cat::Execute, 2.0, 3.0),
+                sp(Cat::Execute, 3.5, 4.0),
+            ],
+            workers: vec![(1, "w".into())],
+        };
+        let rep = TraceReport::from_trace(&tr);
+        assert!((rep.wall - 10.0).abs() < 1e-9);
+        assert!((rep.attribution.wall - 2.0).abs() < 1e-9);
+        let s = rep.render();
+        // Execute is 1.5s: 15% of the 10s wall — the old span-total
+        // denominator would have printed 75.0%.
+        assert!(s.contains("15.0%"), "{s}");
+        assert!(!s.contains("75.0%"), "{s}");
+        // The dispatch window shows its own share of the wall rather
+        // than a renormalized 100%.
+        assert!(s.contains("20.0%"), "{s}");
     }
 }
