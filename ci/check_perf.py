@@ -3,8 +3,9 @@
 
 Reads BENCH_kvpool.json and BENCH_routing.json (written by
 `mmserve kv --bench-json`), BENCH_stats.json (written by
-`mmserve stats --bench-json`), and BENCH_explain.json (written by
-`mmserve explain --bench-json`) and checks them three ways:
+`mmserve stats --bench-json`), BENCH_explain.json (written by
+`mmserve explain --bench-json`), and BENCH_fabric.json (written by
+`mmserve kv --disaggregate --fabric-json`) and checks them three ways:
 
 1. Hard invariants that must hold on any commit:
    - no replayed request is dropped (monolithic, sharded, or routed),
@@ -16,7 +17,10 @@ Reads BENCH_kvpool.json and BENCH_routing.json (written by
    - attaching the live metrics plane leaves the simulated clock
      bit-identical (observation must never change scheduling),
    - attaching the causal cost ledger leaves the simulated clock
-     bit-identical (same pure-observation contract).
+     bit-identical (same pure-observation contract),
+   - disaggregated prefill/decode improves decode-worker TBT p99 over
+     colocated at equal replica count, while the KV handoff stays
+     explicitly priced (non-zero transfer bytes and link utilization).
 
 2. Required schema: every metric path listed under "schema" in
    ci/perf-baseline.json must exist in the fresh bench output. A
@@ -60,11 +64,13 @@ def main():
     rt = json.load(open("BENCH_routing.json"))
     st = json.load(open("BENCH_stats.json"))
     ex = json.load(open("BENCH_explain.json"))
+    fb = json.load(open("BENCH_fabric.json"))
     docs = {
         "BENCH_kvpool.json": kv,
         "BENCH_routing.json": rt,
         "BENCH_stats.json": st,
         "BENCH_explain.json": ex,
+        "BENCH_fabric.json": fb,
     }
 
     # ---- hard invariants -------------------------------------------
@@ -111,6 +117,30 @@ def main():
         )
     if (dig(ex, "ledger.completed") or 0) <= 0:
         failures.append("ledger replay completed no requests")
+    # Disaggregation A/B: the split must win the decode tail at equal
+    # replica count, with the handoff cost genuinely priced — zero
+    # transfer bytes would mean the fabric stopped charging.
+    for arm in ("colocated", "disaggregated"):
+        if dig(fb, f"fabric.{arm}.dropped") != 0:
+            failures.append(f"fabric A/B ({arm}) dropped requests")
+    if dig(fb, "fabric.disaggregated.completed") != dig(
+        fb, "fabric.colocated.completed"
+    ):
+        failures.append(
+            "disaggregated replay completed a different request count "
+            "than the colocated replay on the same workload"
+        )
+    if (dig(fb, "fabric.deltas.p99_tbt_improvement") or 0) <= 0:
+        failures.append(
+            "disaggregated prefill/decode does not improve decode TBT "
+            "p99 over colocated "
+            f"(improvement = "
+            f"{dig(fb, 'fabric.deltas.p99_tbt_improvement')!r})"
+        )
+    if (dig(fb, "fabric.disaggregated.transfer_bytes") or 0) <= 0:
+        failures.append("disaggregated replay moved zero priced KV bytes")
+    if (dig(fb, "fabric.disaggregated.link_utilization") or 0) <= 0:
+        failures.append("disaggregated replay has zero link utilization")
 
     base = json.load(open(BASELINE))
 

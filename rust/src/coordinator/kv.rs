@@ -19,6 +19,7 @@ use std::collections::HashMap;
 
 use crate::kvpool::{AllocOutcome, CapacityView, KvError, KvPool,
                     KvPoolConfig, PoolStats, Preempted, PreemptMode};
+use crate::perfmodel::fabric::FabricSpec;
 
 /// State of one batch slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -438,6 +439,95 @@ impl PagedKvSlots {
                         -> Option<crate::kvpool::ShardId> {
         self.pool.as_ref().and_then(|p| p.growth_shard(request))
     }
+
+    /// Attach a priced transfer fabric to the underlying pool (no-op
+    /// in dense mode): spills become byte-costed, swap-outs reserve
+    /// host buffers, and [`PagedKvSlots::preempt_auto`] trades swap
+    /// against recompute by modeled nanoseconds.
+    pub fn set_fabric(&mut self, fabric: FabricSpec) {
+        if let Some(p) = &mut self.pool {
+            p.set_fabric(fabric);
+        }
+    }
+
+    /// The attached fabric, if any (copy — `FabricSpec` is plain data).
+    pub fn fabric(&self) -> Option<FabricSpec> {
+        self.pool.as_ref().and_then(|p| p.fabric().copied())
+    }
+
+    /// Cost-aware preemption: the pool picks victim *and* mode by
+    /// modeled eviction cost (swap round-trip vs. recompute); the slot
+    /// view frees the victim's slot in lockstep, exactly like
+    /// [`PagedKvSlots::preempt_targeted`]. Without a (non-free)
+    /// fabric this *is* `preempt_targeted(Recompute, prefer)`.
+    pub fn preempt_auto(&mut self, prefer: Option<crate::kvpool::ShardId>)
+                        -> Option<(usize, Preempted)> {
+        let p = self.pool.as_mut()?;
+        let pre = p.preempt_auto(prefer)?;
+        let slot = self
+            .slots
+            .slot_of(pre.request)
+            .expect("preempted request holds a slot");
+        self.slots
+            .release(slot)
+            .expect("victim slot is live");
+        Some((slot, pre))
+    }
+
+    /// Is `request` staged host-side awaiting a swap-in?
+    pub fn has_swapped(&self, request: u64) -> bool {
+        self.pool.as_ref().is_some_and(|p| p.has_swapped(request))
+    }
+
+    /// Tokens a swapped-out request would resume with.
+    pub fn swapped_tokens(&self, request: u64) -> Option<usize> {
+        self.pool.as_ref().and_then(|p| p.swapped_tokens(request))
+    }
+
+    /// Swap a staged sequence back in: the pool reallocates its pages
+    /// from the host buffer (sharing surviving prefix blocks), then a
+    /// graph slot is claimed in lockstep. Capacity failures leave the
+    /// buffer staged for a later retry; structural failures (no slot
+    /// could ever fit) surface without touching the buffer either.
+    pub fn resume_swapped(&mut self, request: u64)
+                         -> Result<(usize, AllocOutcome), KvError> {
+        let pool = self
+            .pool
+            .as_mut()
+            .ok_or(KvError::UnknownRequest(request))?;
+        let len = pool
+            .swapped_tokens(request)
+            .ok_or(KvError::UnknownRequest(request))?;
+        // Pre-flight the slot view so a slot-side refusal never costs
+        // the already-released host buffer.
+        if len >= self.slots.max_seq() {
+            return Err(KvError::MaxSeq { pos: len,
+                                         max_seq: self.slots.max_seq() });
+        }
+        if self.slots.free_count() == 0 {
+            return Err(KvError::NoFreeSlot);
+        }
+        let out = pool.resume_swapped(request)?;
+        let slot = self
+            .slots
+            .alloc(request, len)
+            .expect("pre-flighted slot claim");
+        Ok((slot, out))
+    }
+
+    /// Abandon a staged swap and take the token history back (the
+    /// caller recomputes instead). `None` when nothing is staged.
+    pub fn discard_swapped(&mut self, request: u64)
+                           -> Option<(Vec<i32>, usize)> {
+        self.pool.as_mut().and_then(|p| p.discard_swapped(request))
+    }
+
+    /// Crash teardown: drop every staged host buffer (fail-over
+    /// re-routes swapped requests from their prompts). Returns the
+    /// bytes returned to the host budget.
+    pub fn drain_host_buffers(&mut self) -> u64 {
+        self.pool.as_mut().map_or(0, |p| p.drain_host_buffers())
+    }
 }
 
 #[cfg(test)]
@@ -805,5 +895,60 @@ mod tests {
         let kv = PagedKvSlots::paged(4, 512, cfg);
         let pool = kv.pool().unwrap();
         assert_eq!(pool.total_pages(), 4 * 512 / DEFAULT_PAGE_SIZE);
+    }
+
+    /// Priced fabric at the slot layer: `preempt_auto` swaps the
+    /// cheapest victim out (slot freed in lockstep), the host buffer
+    /// holds it, and `resume_swapped` brings it back into a fresh slot
+    /// with its fill position intact. Dense mode prices nothing.
+    #[test]
+    fn fabric_swap_round_trip_keeps_views_in_lockstep() {
+        let cfg = KvPoolConfig { page_size: 4, total_pages: 4, shards: 1 };
+        let mut kv = PagedKvSlots::paged(2, 64, cfg);
+        kv.set_fabric(FabricSpec::paper(524_288.0));
+        assert!(kv.fabric().is_some());
+        let (s1, _) = kv.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
+        let (s2, _) = kv.alloc(2, &[9, 8, 7, 6, 5]).unwrap();
+        for t in 0..3 {
+            kv.advance(s1, t).unwrap();
+        }
+        let err = kv.advance(s1, 99).unwrap_err();
+        assert!(matches!(err, KvError::CapacityExhausted { .. }), "{err}");
+        // Request 2 (5 tokens) is the cheaper eviction than request 1
+        // (8): at 7B geometry its swap round-trip beats recompute.
+        let (slot, pre) = kv.preempt_auto(None).unwrap();
+        assert_eq!(slot, s2);
+        assert_eq!(pre.request, 2);
+        assert_eq!(pre.mode, PreemptMode::SwapOut);
+        assert!(kv.has_swapped(2));
+        assert_eq!(kv.swapped_tokens(2), Some(5));
+        assert_eq!(kv.live_count(), 1);
+        kv.advance(s1, 99).unwrap();
+        // No room yet: the resume fails cleanly, the buffer stays.
+        assert!(matches!(kv.resume_swapped(2),
+                         Err(KvError::CapacityExhausted { .. })));
+        assert!(kv.has_swapped(2));
+        kv.release(s1).unwrap();
+        let (slot2, _) = kv.resume_swapped(2).unwrap();
+        assert_eq!(kv.pos(slot2).unwrap(), 5);
+        assert!(!kv.has_swapped(2));
+        assert!(kv.pool().unwrap().host_buffers().is_empty());
+        kv.pool().unwrap().check_invariants().unwrap();
+        // Discard + drain paths: stage another swap, then abandon it.
+        kv.advance(slot2, 1).unwrap();
+        let (_, pre) = kv.preempt_auto(None).unwrap();
+        assert_eq!(pre.mode, PreemptMode::SwapOut);
+        let (tokens, prompt_len) = kv.discard_swapped(2).unwrap();
+        assert_eq!(tokens.len(), 6);
+        assert_eq!(prompt_len, 5);
+        assert_eq!(kv.drain_host_buffers(), 0, "nothing left staged");
+        kv.pool().unwrap().check_invariants().unwrap();
+        // Dense mode: no fabric, no swap machinery.
+        let mut dense = PagedKvSlots::dense(2, 8);
+        dense.set_fabric(FabricSpec::paper(1.0));
+        assert!(dense.fabric().is_none());
+        assert!(dense.preempt_auto(None).is_none());
+        assert!(!dense.has_swapped(1));
+        assert_eq!(dense.drain_host_buffers(), 0);
     }
 }

@@ -109,6 +109,16 @@ pub struct RouterConfig {
     pub replicas: usize,
     /// How the router picks among replicas (ignored with 1 replica).
     pub policy: RoutingPolicy,
+    /// Disaggregated topology: with 2+ replicas, the first half of
+    /// each model's replicas form the prefill tier — the only targets
+    /// arrival routing considers — and the rest the decode tier,
+    /// mirroring the modeled split in `routing::replay`. The live
+    /// engines here still serve admitted requests end-to-end (the
+    /// priced prefill→decode KV handoff runs on the simulated plane,
+    /// where the fabric clock lives); this flag pins the fleet
+    /// topology and role reporting to match that model. Inert with a
+    /// single replica.
+    pub disaggregate: bool,
 }
 
 impl Default for RouterConfig {
@@ -127,6 +137,7 @@ impl Default for RouterConfig {
             ledger: None,
             replicas: 1,
             policy: RoutingPolicy::PrefixAffinity,
+            disaggregate: false,
         }
     }
 }
@@ -142,6 +153,13 @@ struct ReplicaHandle {
 struct ModelReplicas {
     replicas: Vec<ReplicaHandle>,
     rr: AtomicU64,
+    /// Replica indices arrival routing may pick: every replica in the
+    /// colocated topology, only the prefill tier under
+    /// [`RouterConfig::disaggregate`]. Fail-over stays inside this
+    /// set — a decode-tier replica never takes arrivals, so a fully
+    /// dead prefill tier is a loud routing error, not a silent role
+    /// violation.
+    arrival: Vec<usize>,
 }
 
 /// Per-replica routing counters for reports (`mmserve trace`).
@@ -149,6 +167,9 @@ struct ModelReplicas {
 pub struct ReplicaReport {
     pub model: ModelKind,
     pub replica: usize,
+    /// Fleet role: `"prefill"` / `"decode"` under disaggregation,
+    /// `"-"` in the colocated topology.
+    pub role: &'static str,
     /// Requests the router handed to this replica.
     pub routed: u64,
     /// Prefix counters from the replica's last published snapshot.
@@ -173,7 +194,7 @@ impl ReplicaReport {
 /// counters (never averaged per-worker rates).
 pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
     let mut t = Table::new(&[
-        "worker", "routed", "prefix lookups", "prefix hits",
+        "worker", "role", "routed", "prefix lookups", "prefix hits",
         "hit rate", "hit tokens", "shard pages",
     ]);
     let (mut lookups, mut hits, mut tokens, mut routed) = (0u64, 0u64, 0u64, 0u64);
@@ -189,6 +210,7 @@ pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
         };
         t.row(&[
             format!("{:?}[{}]", r.model, r.replica),
+            r.role.to_string(),
             r.routed.to_string(),
             r.prefix_lookups.to_string(),
             r.prefix_hits.to_string(),
@@ -208,6 +230,7 @@ pub fn render_replica_reports(reports: &[ReplicaReport]) -> String {
     };
     t.row(&[
         "fleet (summed)".into(),
+        "-".into(),
         routed.to_string(),
         lookups.to_string(),
         hits.to_string(),
@@ -255,9 +278,17 @@ impl Router {
                 }));
                 replicas.push(ReplicaHandle { tx, cell });
             }
+            // Disaggregation pins the first half of the fleet as the
+            // prefill tier (at least one replica each side).
+            let arrival: Vec<usize> = if cfg.disaggregate && n >= 2 {
+                (0..(n / 2).max(1)).collect()
+            } else {
+                (0..n).collect()
+            };
             models.insert(model, ModelReplicas {
                 replicas,
                 rr: AtomicU64::new(0),
+                arrival,
             });
         }
         Router {
@@ -334,11 +365,20 @@ impl Router {
     pub fn replica_reports(&self) -> Vec<ReplicaReport> {
         let mut out = Vec::new();
         for (model, set) in &self.models {
+            let split = set.arrival.len() < set.replicas.len();
             for (i, h) in set.replicas.iter().enumerate() {
                 let (_, lookups, hits, tokens) = h.cell.counters();
+                let role = if !split {
+                    "-"
+                } else if set.arrival.contains(&i) {
+                    "prefill"
+                } else {
+                    "decode"
+                };
                 out.push(ReplicaReport {
                     model: *model,
                     replica: i,
+                    role,
                     routed: h.cell.routed(),
                     prefix_lookups: lookups,
                     prefix_hits: hits,
@@ -381,12 +421,14 @@ fn probe_tokens_for(input: &RequestInput) -> Option<Vec<i32>> {
     }
 }
 
-/// Rank a model's replicas for one request; non-probeable inputs rank
-/// on depth alone.
+/// Rank a model's arrival-eligible replicas for one request (the whole
+/// fleet, or only the prefill tier under disaggregation); non-probeable
+/// inputs rank on depth alone.
 fn route_order(policy: RoutingPolicy, set: &ModelReplicas,
                request: &Request) -> Vec<usize> {
-    if set.replicas.len() <= 1 {
-        return (0..set.replicas.len()).collect();
+    let eligible = &set.arrival;
+    if eligible.len() <= 1 {
+        return eligible.clone();
     }
     let probe_tokens: Option<Vec<i32>> =
         if policy == RoutingPolicy::PrefixAffinity {
@@ -394,10 +436,10 @@ fn route_order(policy: RoutingPolicy, set: &ModelReplicas,
         } else {
             None
         };
-    let views: Vec<ReplicaView> = set
-        .replicas
+    let views: Vec<ReplicaView> = eligible
         .iter()
-        .map(|h| {
+        .map(|&i| {
+            let h = &set.replicas[i];
             // Shard-set probe: warmth is the union over the replica's
             // device arenas; the spread feeds the depth tie-break.
             let (cached_blocks, shard_spread) = probe_tokens
@@ -412,6 +454,9 @@ fn route_order(policy: RoutingPolicy, set: &ModelReplicas,
         .collect();
     let cursor = set.rr.fetch_add(1, Ordering::Relaxed);
     rank(policy, &views, cursor)
+        .into_iter()
+        .map(|r| eligible[r])
+        .collect()
 }
 
 // ==========================================================================
@@ -1617,6 +1662,7 @@ mod tests {
         let set = ModelReplicas {
             replicas: vec![h0, h1],
             rr: AtomicU64::new(0),
+            arrival: vec![0, 1],
         };
         let req = token_request(1, prompt);
         let order = route_order(RoutingPolicy::PrefixAffinity, &set, &req);
@@ -1647,6 +1693,7 @@ mod tests {
         let set = ModelReplicas {
             replicas: vec![h0, h1],
             rr: AtomicU64::new(0),
+            arrival: vec![0, 1],
         };
         let router = router_with(set, RoutingPolicy::PrefixAffinity);
         // Cold caches + equal depth rank replica 0 first; kill it.
@@ -1686,6 +1733,7 @@ mod tests {
         let set = ModelReplicas {
             replicas: vec![h0, h1],
             rr: AtomicU64::new(0),
+            arrival: vec![0, 1],
         };
         let router = router_with(set, RoutingPolicy::RoundRobin);
         for id in 0..4u64 {
@@ -1705,6 +1753,7 @@ mod tests {
             ReplicaReport {
                 model: ModelKind::Llama,
                 replica: 0,
+                role: "prefill",
                 routed: 10,
                 prefix_lookups: 100,
                 prefix_hits: 90,
@@ -1714,6 +1763,7 @@ mod tests {
             ReplicaReport {
                 model: ModelKind::Llama,
                 replica: 1,
+                role: "decode",
                 routed: 2,
                 prefix_lookups: 10,
                 prefix_hits: 0,
@@ -1732,6 +1782,36 @@ mod tests {
         // unpublished ones a dash.
         assert!(s.contains("5/3"), "{s}");
         assert!(s.contains("shard pages"), "{s}");
+        // The fleet split is visible per worker.
+        assert!(s.contains("role"), "{s}");
+        assert!(s.contains("prefill"), "{s}");
+        assert!(s.contains("decode"), "{s}");
+    }
+
+    /// Disaggregated topology: arrivals only ever land on the prefill
+    /// tier, and a fully dead prefill tier is a loud error even while
+    /// the decode tier lives — fail-over must not violate roles.
+    #[test]
+    fn disaggregate_routes_arrivals_to_prefill_tier_only() {
+        let (h0, rx0) = handle();
+        let (h1, rx1) = handle();
+        let set = ModelReplicas {
+            replicas: vec![h0, h1],
+            rr: AtomicU64::new(0),
+            arrival: vec![0],
+        };
+        let router = router_with(set, RoutingPolicy::RoundRobin);
+        for id in 0..4u64 {
+            router.submit(token_request(id, vec![1, 2, 3])).unwrap();
+        }
+        assert_eq!(rx0.try_iter().count(), 4, "all arrivals on prefill");
+        assert_eq!(rx1.try_iter().count(), 0, "decode tier takes none");
+        drop(rx0);
+        let err = router
+            .submit(token_request(9, vec![1, 2, 3]))
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.to_string().contains("all workers"), "{err}");
     }
 }
 

@@ -1,0 +1,212 @@
+//! Host-side swap buffers: byte-accounted staging for swapped-out KV.
+//!
+//! `PreemptMode::SwapOut` used to ledger a victim as a bare
+//! `(tokens, prompt_len)` entry — host memory was implicitly infinite
+//! and free. This pool makes the host side real: every swap-out
+//! *reserves* a buffer sized by the fabric's KV geometry
+//! (`tokens × kv_bytes_per_token`), every swap-in or crash teardown
+//! *releases* it, and a reservation the capacity cannot cover fails —
+//! which is what forces the preemption policy to fall back to
+//! recompute and turns the swap-vs-recompute mix into a measurable
+//! decision instead of a hardcoded branch.
+//!
+//! Conservation contract (the property suite drives this): at every
+//! point, `reserved_bytes == Σ outstanding buffer bytes` and
+//! `total_reserved == total_released + reserved_bytes`. After a drain
+//! (replica crash) or a full resume cycle, reserved bytes return to
+//! zero with `total_reserved == total_released` — no buffer leaks,
+//! ever, including for victims killed mid-swap by `KillSpec`.
+
+use std::collections::HashMap;
+
+/// One swapped-out sequence staged in host memory.
+#[derive(Debug, Clone)]
+pub struct HostBuffer {
+    pub request: u64,
+    /// Full token history (prompt + generated) at swap-out time.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// KV bytes the buffer pins (0 when no fabric prices geometry).
+    pub bytes: u64,
+}
+
+/// The byte-budgeted pool of host swap buffers.
+#[derive(Debug, Clone, Default)]
+pub struct HostBufferPool {
+    /// Capacity in bytes; 0 = unbounded (the legacy ledger behavior).
+    capacity: u64,
+    reserved: u64,
+    total_reserved: u64,
+    total_released: u64,
+    buffers: HashMap<u64, HostBuffer>,
+}
+
+impl HostBufferPool {
+    /// Unbounded pool — reservation never fails (legacy semantics).
+    pub fn unbounded() -> Self {
+        HostBufferPool::default()
+    }
+
+    pub fn with_capacity(capacity: u64) -> Self {
+        HostBufferPool { capacity, ..HostBufferPool::default() }
+    }
+
+    /// Re-budget the pool (attaching a fabric). Outstanding buffers
+    /// are honored even if they exceed the new capacity.
+    pub fn set_capacity(&mut self, capacity: u64) {
+        self.capacity = capacity;
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    /// Bytes currently pinned by outstanding buffers.
+    pub fn reserved_bytes(&self) -> u64 {
+        self.reserved
+    }
+    /// Lifetime bytes ever reserved (monotone).
+    pub fn total_reserved(&self) -> u64 {
+        self.total_reserved
+    }
+    /// Lifetime bytes ever released (monotone).
+    pub fn total_released(&self) -> u64 {
+        self.total_released
+    }
+    /// Outstanding swapped-out sequences.
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+
+    pub fn contains(&self, request: u64) -> bool {
+        self.buffers.contains_key(&request)
+    }
+
+    pub fn get(&self, request: u64) -> Option<&HostBuffer> {
+        self.buffers.get(&request)
+    }
+
+    /// Would a `bytes`-sized reservation fit right now?
+    pub fn can_reserve(&self, bytes: u64) -> bool {
+        self.capacity == 0 || self.reserved + bytes <= self.capacity
+    }
+
+    /// Stage a swapped-out sequence. Fails (buffer not taken) when the
+    /// capacity cannot cover it or the request is already staged.
+    pub fn reserve(&mut self, request: u64, tokens: Vec<i32>,
+                   prompt_len: usize, bytes: u64) -> Result<(), ()> {
+        if !self.can_reserve(bytes) || self.buffers.contains_key(&request)
+        {
+            return Err(());
+        }
+        self.reserved += bytes;
+        self.total_reserved += bytes;
+        self.buffers
+            .insert(request, HostBuffer { request, tokens, prompt_len,
+                                          bytes });
+        Ok(())
+    }
+
+    /// Release a buffer (successful swap-in, or the request was
+    /// dropped): the bytes return to the budget.
+    pub fn release(&mut self, request: u64) -> Option<HostBuffer> {
+        let buf = self.buffers.remove(&request)?;
+        self.reserved -= buf.bytes;
+        self.total_released += buf.bytes;
+        Some(buf)
+    }
+
+    /// Crash teardown: release every outstanding buffer (a dead
+    /// replica's host memory goes back to the budget; its requests are
+    /// re-routed from the prompt, not from the buffer). Returns the
+    /// freed bytes.
+    pub fn drain(&mut self) -> u64 {
+        let freed = self.reserved;
+        self.buffers.clear();
+        self.total_released += freed;
+        self.reserved = 0;
+        freed
+    }
+
+    /// The conservation invariants described in the module doc.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let outstanding: u64 =
+            self.buffers.values().map(|b| b.bytes).sum();
+        if outstanding != self.reserved {
+            return Err(format!(
+                "host buffers: reserved {} != outstanding {}",
+                self.reserved, outstanding
+            ));
+        }
+        if self.total_reserved != self.total_released + self.reserved {
+            return Err(format!(
+                "host buffers: reserved-ever {} != released-ever {} + \
+                 outstanding {}",
+                self.total_reserved, self.total_released, self.reserved
+            ));
+        }
+        if self.capacity > 0 && self.reserved > self.capacity {
+            // set_capacity may shrink under outstanding buffers; new
+            // reservations must still be refused then.
+            if self.can_reserve(1) {
+                return Err(format!(
+                    "host buffers: over capacity ({} > {}) yet still \
+                     reserving",
+                    self.reserved, self.capacity
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_conserves_bytes() {
+        let mut h = HostBufferPool::with_capacity(100);
+        assert!(h.reserve(1, vec![1, 2], 2, 60).is_ok());
+        assert!(h.contains(1));
+        assert_eq!(h.reserved_bytes(), 60);
+        assert!(h.reserve(1, vec![9], 1, 1).is_err(), "duplicate");
+        assert!(!h.can_reserve(41));
+        assert!(h.reserve(2, vec![3], 1, 41).is_err(), "over capacity");
+        assert!(h.reserve(2, vec![3], 1, 40).is_ok());
+        h.check_conservation().unwrap();
+        let buf = h.release(1).unwrap();
+        assert_eq!(buf.tokens, vec![1, 2]);
+        assert_eq!(buf.bytes, 60);
+        assert_eq!(h.reserved_bytes(), 40);
+        assert_eq!(h.total_reserved(), 100);
+        assert_eq!(h.total_released(), 60);
+        assert!(h.release(1).is_none());
+        h.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn unbounded_pool_never_refuses() {
+        let mut h = HostBufferPool::unbounded();
+        assert!(h.can_reserve(u64::MAX / 2));
+        assert!(h.reserve(7, vec![], 0, 1 << 40).is_ok());
+        h.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn drain_releases_everything() {
+        let mut h = HostBufferPool::with_capacity(100);
+        h.reserve(1, vec![1], 1, 30).unwrap();
+        h.reserve(2, vec![2], 1, 50).unwrap();
+        assert_eq!(h.drain(), 80);
+        assert!(h.is_empty());
+        assert_eq!(h.reserved_bytes(), 0);
+        assert_eq!(h.total_reserved(), h.total_released());
+        h.check_conservation().unwrap();
+        // The budget is whole again.
+        assert!(h.reserve(3, vec![3], 1, 100).is_ok());
+        h.check_conservation().unwrap();
+    }
+}

@@ -11,6 +11,10 @@
 //!
 //! * [`block`] — [`BlockPool`]: a fixed budget of ref-counted pages
 //!   with free-list reuse; every page is Free, Live, or Cached.
+//! * [`hostbuf`] — [`HostBufferPool`]: byte-accounted host staging for
+//!   swapped-out sequences; sized by the priced transfer fabric
+//!   (`crate::perfmodel::fabric`), conserved across swap-out / resume /
+//!   crash teardown.
 //! * [`shard`] — [`ShardedBlockPool`]: the budget split across `D`
 //!   simulated device arenas (global page id = `(device, page)` via
 //!   [`shard::ShardedBlockPool::locate`]); block tables span shards,
@@ -47,6 +51,7 @@
 //! are a recorded follow-on (ROADMAP).
 
 pub mod block;
+pub mod hostbuf;
 pub mod pool;
 pub mod prefix;
 pub mod replay;
@@ -54,6 +59,7 @@ pub mod shard;
 pub mod table;
 
 pub use block::{BlockPool, PageId, PageState};
+pub use hostbuf::{HostBuffer, HostBufferPool};
 pub use pool::{AllocOutcome, CapacityView, KvPool, KvPoolConfig,
                PageBudget, PoolStats, Preempted, PreemptMode};
 pub use prefix::PrefixCache;

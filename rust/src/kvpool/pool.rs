@@ -28,9 +28,11 @@
 
 use std::collections::HashMap;
 
+use crate::perfmodel::fabric::{FabricSpec, LinkKind};
 use crate::substrate::table::Table;
 
 use super::block::{PageId, PageState};
+use super::hostbuf::HostBufferPool;
 use super::prefix::{block_hashes, PrefixCache};
 use super::shard::{ShardId, ShardView, ShardedBlockPool};
 use super::table::BlockTable;
@@ -75,7 +77,7 @@ impl KvPoolConfig {
 }
 
 /// Counters the telemetry report and `mmserve kv` print.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct PoolStats {
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
@@ -100,6 +102,19 @@ pub struct PoolStats {
     /// shard and spilled to another arena — the cross-device traffic a
     /// real TP allocator would pay a gather for.
     pub shard_spills: u64,
+    /// KV bytes those spills move over the intra-node link (0 without
+    /// a priced fabric) — what sizes the explain spill band.
+    pub spill_bytes: u64,
+    /// Cost-aware preemptions that chose the host swap path.
+    pub swap_decisions: u64,
+    /// Cost-aware preemptions that chose to drop-and-recompute
+    /// (including swap fallbacks the host budget refused).
+    pub recompute_decisions: u64,
+    /// Host swap-buffer bytes reserved / released (mirrors the
+    /// [`super::hostbuf::HostBufferPool`] lifetime counters so fleet
+    /// aggregation is a plain merge).
+    pub host_bytes_reserved: u64,
+    pub host_bytes_released: u64,
 }
 
 impl PoolStats {
@@ -139,6 +154,11 @@ impl PoolStats {
             self.shard_allocated[i] += v;
         }
         self.shard_spills += other.shard_spills;
+        self.spill_bytes += other.spill_bytes;
+        self.swap_decisions += other.swap_decisions;
+        self.recompute_decisions += other.recompute_decisions;
+        self.host_bytes_reserved += other.host_bytes_reserved;
+        self.host_bytes_released += other.host_bytes_released;
     }
 
     /// Aggregate per-worker counters into one fleet-wide view.
@@ -193,6 +213,27 @@ impl PoolStats {
                 "shard spills".into(),
                 self.shard_spills.to_string(),
             ]);
+        }
+        // Priced-fabric counters: only rendered once a fabric has
+        // actually charged something, so unpriced runs keep the
+        // legacy table verbatim.
+        if self.swap_decisions + self.recompute_decisions > 0 {
+            t.row(&[
+                "swap / recompute decisions".into(),
+                format!("{}/{}", self.swap_decisions,
+                        self.recompute_decisions),
+            ]);
+        }
+        if self.host_bytes_reserved > 0 {
+            t.row(&[
+                "host swap bytes (reserved/released)".into(),
+                format!("{}/{}", self.host_bytes_reserved,
+                        self.host_bytes_released),
+            ]);
+        }
+        if self.spill_bytes > 0 {
+            t.row(&["shard spill bytes".into(),
+                    self.spill_bytes.to_string()]);
         }
         t.render()
     }
@@ -266,8 +307,12 @@ pub struct KvPool {
     blocks: ShardedBlockPool,
     cache: PrefixCache,
     tables: HashMap<u64, BlockTable>,
-    /// Swapped-out sequences awaiting `resume_swapped`.
-    swapped: HashMap<u64, (Vec<i32>, usize)>,
+    /// Swapped-out sequences awaiting `resume_swapped`, staged in
+    /// byte-accounted host buffers.
+    host: HostBufferPool,
+    /// Transfer pricing for spills / swaps; `None` (and the zero-cost
+    /// spec) reproduce the unpriced legacy decisions bit for bit.
+    fabric: Option<FabricSpec>,
     max_seq: usize,
     next_seq: u64,
     pub stats: PoolStats,
@@ -294,7 +339,8 @@ impl KvPool {
             blocks: ShardedBlockPool::new(total_pages, page_size, shards),
             cache: PrefixCache::new(),
             tables: HashMap::new(),
-            swapped: HashMap::new(),
+            host: HostBufferPool::unbounded(),
+            fabric: None,
             max_seq,
             next_seq: 0,
             stats: PoolStats {
@@ -350,6 +396,45 @@ impl KvPool {
     /// only ever reference `Live` pages).
     pub fn page_state(&self, pid: PageId) -> PageState {
         self.blocks.state(pid)
+    }
+
+    /// Attach a priced transfer fabric: from here on spills are
+    /// byte-costed, swap-outs reserve real host buffers against the
+    /// fabric's capacity, and [`KvPool::preempt_auto`] trades swap
+    /// against recompute by modeled nanoseconds. The zero-cost fabric
+    /// ties every comparison, and ties break toward the legacy
+    /// behavior — bit-identical to an unpriced pool.
+    pub fn set_fabric(&mut self, fabric: FabricSpec) {
+        self.host.set_capacity(fabric.host_capacity_bytes);
+        self.fabric = Some(fabric);
+    }
+
+    pub fn fabric(&self) -> Option<&FabricSpec> {
+        self.fabric.as_ref()
+    }
+
+    /// The host swap-buffer pool (byte accounting + conservation).
+    pub fn host_buffers(&self) -> &HostBufferPool {
+        &self.host
+    }
+
+    /// Is `request` staged host-side awaiting [`KvPool::resume_swapped`]?
+    pub fn has_swapped(&self, request: u64) -> bool {
+        self.host.contains(request)
+    }
+
+    /// Tokens a swapped-out request would resume with.
+    pub fn swapped_tokens(&self, request: u64) -> Option<usize> {
+        self.host.get(request).map(|b| b.tokens.len())
+    }
+
+    /// Crash teardown: release every host buffer this pool holds (a
+    /// dead replica's swapped requests are re-routed from their
+    /// prompts; the bytes must return to the budget, not leak).
+    pub fn drain_host_buffers(&mut self) -> u64 {
+        let freed = self.host.drain();
+        self.stats.host_bytes_released += freed;
+        freed
     }
 
     /// Per-shard capacity counters — the per-shard `CapacityView`s the
@@ -605,8 +690,84 @@ impl KvPool {
         self.evict_seq(victim, mode)
     }
 
+    /// Cost-aware preemption: choose the victim *and* the mode by
+    /// modeled eviction cost. Each live sequence is priced at
+    /// `min(swap round-trip over the host link, recompute)` — a swap
+    /// the host budget cannot stage prices as unswappable — and the
+    /// cheapest eviction wins, tie-breaking to the latest admission
+    /// (the legacy victim rule). The winner swaps out only when its
+    /// swap is *strictly* cheaper than its recompute, so the zero-cost
+    /// fabric (all ties) reproduces `preempt(Recompute)` /
+    /// `preempt_on_shard(Recompute, s)` bit for bit — as does a pool
+    /// with no fabric at all.
+    pub fn preempt_auto(&mut self, prefer: Option<ShardId>)
+                        -> Option<Preempted> {
+        let fabric = match self.fabric {
+            Some(f) if !f.is_free() => f,
+            _ => {
+                return match prefer {
+                    Some(s) if self.blocks.shards() > 1 => {
+                        self.preempt_on_shard(PreemptMode::Recompute, s)
+                    }
+                    _ => self.preempt(PreemptMode::Recompute),
+                };
+            }
+        };
+        // Same candidate set as the unpriced rules: holders of the
+        // pressured shard when one is named (global fallback when
+        // nobody touches it), everyone otherwise.
+        let blocks = &self.blocks;
+        let on_shard = |t: &&BlockTable| match prefer {
+            Some(s) => {
+                t.pages().iter().any(|&p| blocks.shard_of(p) == s)
+            }
+            None => false,
+        };
+        let holders: Vec<&BlockTable> =
+            self.tables.values().filter(on_shard).collect();
+        let set: Vec<&BlockTable> = if holders.is_empty() {
+            self.tables.values().collect()
+        } else {
+            holders
+        };
+        // cost, admission seq, request, mode of the best victim.
+        let mut best: Option<(f64, u64, u64, PreemptMode)> = None;
+        for t in set {
+            let len = t.tokens().len();
+            let bytes = fabric.bytes_for_tokens(len);
+            let swap = if self.host.can_reserve(bytes) {
+                2.0 * fabric.swap_cost(len)
+            } else {
+                f64::INFINITY
+            };
+            let recompute = fabric.recompute_cost(len);
+            let (cost, mode) = if swap < recompute {
+                (swap, PreemptMode::SwapOut)
+            } else {
+                (recompute, PreemptMode::Recompute)
+            };
+            let better = match best {
+                None => true,
+                Some((bc, bseq, _, _)) => {
+                    cost < bc || (cost == bc && t.seq > bseq)
+                }
+            };
+            if better {
+                best = Some((cost, t.seq, t.request, mode));
+            }
+        }
+        let (_, _, victim, mode) = best?;
+        match mode {
+            PreemptMode::SwapOut => self.stats.swap_decisions += 1,
+            PreemptMode::Recompute => self.stats.recompute_decisions += 1,
+        }
+        self.evict_seq(victim, mode)
+    }
+
     /// Shared preemption teardown: remove the victim's table, park its
-    /// full blocks, ledger it when swapping out.
+    /// full blocks, stage it in a host buffer when swapping out. A
+    /// swap the host budget refuses degrades to Recompute (the caller
+    /// reads the actual mode off the returned [`Preempted`]).
     fn evict_seq(&mut self, victim: u64, mode: PreemptMode)
                  -> Option<Preempted> {
         let t = self.tables.remove(&victim)?;
@@ -614,32 +775,51 @@ impl KvPool {
         let prompt_len = t.prompt_len;
         self.finish_table(t);
         self.stats.preemptions += 1;
+        let mut mode = mode;
         if mode == PreemptMode::SwapOut {
-            self.stats.swapped_out_tokens += tokens.len() as u64;
-            self.swapped.insert(victim, (tokens.clone(), prompt_len));
+            let bytes = self
+                .fabric
+                .map_or(0, |f| f.bytes_for_tokens(tokens.len()));
+            if self
+                .host
+                .reserve(victim, tokens.clone(), prompt_len, bytes)
+                .is_ok()
+            {
+                self.stats.swapped_out_tokens += tokens.len() as u64;
+                self.stats.host_bytes_reserved += bytes;
+            } else {
+                mode = PreemptMode::Recompute;
+            }
         }
         Some(Preempted { request: victim, tokens, prompt_len, mode })
     }
 
     /// Bring a swapped-out sequence back (the swap-in): reallocates its
-    /// pages, sharing whatever prefix blocks survived in the cache.
+    /// pages, sharing whatever prefix blocks survived in the cache, and
+    /// releases the host buffer. On failure the buffer stays staged.
     pub fn resume_swapped(&mut self, request: u64)
                           -> Result<AllocOutcome, KvError> {
         let (tokens, prompt_len) = self
-            .swapped
-            .remove(&request)
+            .host
+            .get(request)
+            .map(|b| (b.tokens.clone(), b.prompt_len))
             .ok_or(KvError::UnknownRequest(request))?;
-        match self.alloc(request, &tokens) {
-            Ok(out) => {
-                self.tables.get_mut(&request).unwrap().prompt_len =
-                    prompt_len;
-                Ok(out)
-            }
-            Err(e) => {
-                self.swapped.insert(request, (tokens, prompt_len));
-                Err(e)
-            }
-        }
+        let out = self.alloc(request, &tokens)?;
+        self.tables.get_mut(&request).unwrap().prompt_len = prompt_len;
+        let buf = self.host.release(request).expect("buffer just peeked");
+        self.stats.host_bytes_released += buf.bytes;
+        Ok(out)
+    }
+
+    /// Abandon a staged swap (the caller decided to recompute after
+    /// all — e.g. a wedged swap-in, or a mid-prefill victim whose
+    /// suffix the buffer cannot restore): the bytes return to the
+    /// budget and the token history is handed back for requeueing.
+    pub fn discard_swapped(&mut self, request: u64)
+                           -> Option<(Vec<i32>, usize)> {
+        let buf = self.host.release(request)?;
+        self.stats.host_bytes_released += buf.bytes;
+        Some((buf.tokens, buf.prompt_len))
     }
 
     /// The admission view for this tick: slots plus page budget. The
@@ -717,7 +897,41 @@ impl KvPool {
 
     /// Free page (preferring `prefer`'s arena, spilling when dry),
     /// else evict the LRU cached prefix, else None.
+    ///
+    /// With a priced fabric the home-shard choice becomes a cost
+    /// decision: when the home arena is dry and a cross-shard spill
+    /// would cost a strictly positive gather, a cached page *on the
+    /// home shard* is evicted first so the claim stays device-local.
+    /// The zero-cost fabric prices the gather at 0, skipping that
+    /// branch — the legacy spill-before-evict order, bit for bit.
     fn grab_page(&mut self, prefer: Option<ShardId>) -> Option<PageId> {
+        if let Some(s) = prefer {
+            if let Some(pid) = self.blocks.alloc_on(s) {
+                self.stats.blocks_allocated += 1;
+                self.note_shard_alloc(pid, prefer);
+                return Some(pid);
+            }
+            if self.spill_gather_cost() > 0.0 {
+                let home_victim = self
+                    .cache
+                    .lru_pages()
+                    .iter()
+                    .copied()
+                    .find(|&p| self.blocks.shard_of(p) == s);
+                if let Some(victim) = home_victim {
+                    self.cache.invalidate(victim);
+                    self.blocks.evict_cached(victim);
+                    self.stats.evictions += 1;
+                    let pid = self
+                        .blocks
+                        .alloc_on(s)
+                        .expect("home page just evicted");
+                    self.stats.blocks_allocated += 1;
+                    self.note_shard_alloc(pid, prefer);
+                    return Some(pid);
+                }
+            }
+        }
         if let Some(pid) = self.blocks.alloc_prefer(prefer) {
             self.stats.blocks_allocated += 1;
             self.note_shard_alloc(pid, prefer);
@@ -735,6 +949,17 @@ impl KvPool {
         Some(pid)
     }
 
+    /// Modeled cost (sim units) of gathering one spilled page over the
+    /// intra-node link — 0 without a fabric.
+    fn spill_gather_cost(&self) -> f64 {
+        self.fabric.map_or(0.0, |f| {
+            f.transfer_cost(
+                LinkKind::NvLink,
+                f.bytes_for_pages(1, self.blocks.page_size()),
+            )
+        })
+    }
+
     /// Per-shard occupancy counters: where the fresh page landed, and
     /// whether the claim spilled off its preferred arena.
     /// (`shard_allocated` is sized at construction, so this is two
@@ -745,6 +970,13 @@ impl KvPool {
         if let Some(p) = prefer {
             if p != s {
                 self.stats.shard_spills += 1;
+                // Priced fabric: the spilled page's KV will be
+                // gathered over the intra-node link — count the bytes
+                // (0 without a fabric, so legacy counters are
+                // untouched).
+                self.stats.spill_bytes += self.fabric.map_or(0, |f| {
+                    f.bytes_for_pages(1, self.blocks.page_size())
+                });
             }
         }
     }
@@ -822,6 +1054,7 @@ impl KvPool {
                 self.blocks.cached_count()
             ));
         }
+        self.host.check_conservation()?;
         // Shard views must tile the aggregate the planner gates on:
         // summed per-shard headroom == the capacity view's pages.
         let shard_headroom: usize =
@@ -1161,6 +1394,126 @@ mod tests {
             b.available_pages,
             p.shard_views().iter().map(|v| v.headroom()).sum::<usize>()
         );
+        p.check_invariants().unwrap();
+    }
+
+    /// Tentpole: with a priced fabric, preemption trades the swap
+    /// round-trip against recompute by modeled nanoseconds — at 7B
+    /// geometry the PCIe copy wins, until the host budget runs out and
+    /// the decision degrades to recompute. The mix is counted.
+    #[test]
+    fn priced_preempt_auto_swaps_until_host_budget_refuses() {
+        use crate::perfmodel::fabric::FabricSpec;
+        let mut p = KvPool::new(8, 4, 64);
+        let mut f = FabricSpec::paper(524_288.0); // Llama-7B B/token
+        f.host_capacity_bytes = 3 << 20; // fits one 4-token victim
+        p.set_fabric(f);
+        p.alloc(1, &[1, 2, 3, 4]).unwrap();
+        p.alloc(2, &[5, 6, 7, 8]).unwrap();
+        let pre = p.preempt_auto(None).unwrap();
+        assert_eq!(pre.request, 2, "equal cost → latest admission");
+        assert_eq!(pre.mode, PreemptMode::SwapOut, "PCIe beats recompute");
+        assert!(p.has_swapped(2));
+        assert_eq!(p.host_buffers().reserved_bytes(), 4 * 524_288);
+        p.check_invariants().unwrap();
+        // The second victim no longer fits host-side: recompute.
+        let pre = p.preempt_auto(None).unwrap();
+        assert_eq!(pre.request, 1);
+        assert_eq!(pre.mode, PreemptMode::Recompute);
+        assert!(!p.has_swapped(1));
+        assert_eq!(p.stats.swap_decisions, 1);
+        assert_eq!(p.stats.recompute_decisions, 1);
+        // Swap-in releases the buffer; lifetime bytes balance.
+        p.resume_swapped(2).unwrap();
+        assert_eq!(p.host_buffers().reserved_bytes(), 0);
+        assert_eq!(p.stats.host_bytes_reserved,
+                   p.stats.host_bytes_released);
+        p.check_invariants().unwrap();
+    }
+
+    /// Bisimulation: the zero-cost fabric ties every comparison, and
+    /// ties resolve to the legacy rule — same victim, Recompute mode,
+    /// and no priced-decision counters ticking.
+    #[test]
+    fn zero_cost_fabric_preempts_exactly_like_no_fabric() {
+        use crate::perfmodel::fabric::FabricSpec;
+        let mut a = KvPool::new(8, 4, 64);
+        let mut b = KvPool::new(8, 4, 64);
+        b.set_fabric(FabricSpec::zero_cost());
+        for p in [&mut a, &mut b] {
+            p.alloc(10, &[1, 2, 3, 4]).unwrap();
+            p.alloc(11, &[5, 6, 7, 8, 9]).unwrap();
+        }
+        let pa = a.preempt_auto(None).unwrap();
+        let pb = b.preempt_auto(None).unwrap();
+        assert_eq!(pa.request, pb.request);
+        assert_eq!(pa.mode, PreemptMode::Recompute);
+        assert_eq!(pb.mode, PreemptMode::Recompute);
+        assert_eq!(a.stats.preemptions, b.stats.preemptions);
+        assert_eq!(b.stats.swap_decisions, 0);
+        assert_eq!(b.stats.recompute_decisions, 0,
+                   "a free fabric makes no priced decision");
+        assert_eq!(b.host_buffers().total_reserved(), 0);
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    /// Priced home-shard growth: when the home arena is dry and a
+    /// spill would cost a real gather, the pool evicts a cached page
+    /// *on the home shard* instead — the claim stays device-local.
+    /// The unpriced pool spills, as before.
+    #[test]
+    fn priced_growth_evicts_home_cached_page_instead_of_spilling() {
+        use crate::perfmodel::fabric::FabricSpec;
+        let run = |fabric: Option<FabricSpec>| {
+            let mut p = KvPool::with_shards(4, 4, 64, 2); // {0,1},{2,3}
+            if let Some(f) = fabric {
+                p.set_fabric(f);
+            }
+            p.alloc(1, &[1, 2, 3, 4]).unwrap(); // page 0 on shard 0
+            p.release(1).unwrap(); // full block parks cached
+            p.alloc(2, &[9, 9, 9]).unwrap(); // most-free → shard 1
+            p.alloc(3, &[8, 8, 8]).unwrap(); // tie → shard 0 (page 1)
+            p.advance(3, 7).unwrap(); // fills page 1 in place
+            p.advance(3, 7).unwrap(); // needs a page; home shard 0 dry
+            p.check_invariants().unwrap();
+            p
+        };
+        let priced = run(Some(FabricSpec::paper(524_288.0)));
+        let pages = priced.table(3).unwrap().pages().to_vec();
+        assert_eq!(priced.shard_of(pages[1]), 0, "stayed device-local");
+        assert_eq!(priced.stats.shard_spills, 0);
+        assert_eq!(priced.stats.evictions, 1, "home cached page evicted");
+        let legacy = run(None);
+        let pages = legacy.table(3).unwrap().pages().to_vec();
+        assert_eq!(legacy.shard_of(pages[1]), 1, "unpriced claim spills");
+        assert_eq!(legacy.stats.shard_spills, 1);
+        assert_eq!(legacy.stats.evictions, 0);
+        assert!(legacy.stats.spill_bytes == 0
+                    && priced.stats.spill_bytes == 0);
+    }
+
+    /// Crash teardown: draining the host buffers releases every byte
+    /// (no leak when a replica dies holding swapped requests) and the
+    /// drained sequences are gone for good.
+    #[test]
+    fn drain_host_buffers_releases_swapped_bytes() {
+        use crate::perfmodel::fabric::FabricSpec;
+        let mut p = KvPool::new(8, 4, 64);
+        p.set_fabric(FabricSpec::paper(524_288.0));
+        p.alloc(1, &[1; 5]).unwrap();
+        p.alloc(2, &[2; 5]).unwrap();
+        let pre = p.preempt_auto(None).unwrap();
+        assert_eq!(pre.mode, PreemptMode::SwapOut);
+        assert_eq!(p.host_buffers().len(), 1);
+        assert_eq!(p.swapped_tokens(pre.request), Some(5));
+        let freed = p.drain_host_buffers();
+        assert_eq!(freed, 5 * 524_288);
+        assert!(p.host_buffers().is_empty());
+        assert_eq!(p.stats.host_bytes_reserved,
+                   p.stats.host_bytes_released);
+        assert!(p.resume_swapped(pre.request).is_err(),
+                "drained buffer is gone");
         p.check_invariants().unwrap();
     }
 

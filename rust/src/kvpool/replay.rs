@@ -28,6 +28,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::coordinator::batcher::QueuedRequest;
 use crate::coordinator::kv::PagedKvSlots;
+use crate::perfmodel::fabric::{FabricSpec, LinkKind};
 use crate::sched::{SchedConfig, Scheduler};
 use crate::substrate::metrics::Histogram;
 use crate::substrate::rng::Rng;
@@ -78,6 +79,12 @@ pub struct ReplayConfig {
     /// Chunked prefill: max new prompt tokens per tick (0 = whole).
     pub chunk_prefill: usize,
     pub seed: u64,
+    /// Priced transfer fabric: swap-outs reserve byte-accounted host
+    /// buffers, preemption trades swap against recompute by modeled
+    /// nanoseconds, and disaggregated handoffs pay the inter-replica
+    /// link. `None` (the default) is the unpriced legacy replay, bit
+    /// for bit; so is `Some(FabricSpec::zero_cost())`.
+    pub fabric: Option<FabricSpec>,
 }
 
 impl Default for ReplayConfig {
@@ -99,6 +106,7 @@ impl Default for ReplayConfig {
             prefill_budget: 0,
             chunk_prefill: 0,
             seed: 7,
+            fabric: None,
         }
     }
 }
@@ -158,6 +166,38 @@ pub fn generate_workload(cfg: &ReplayConfig) -> Vec<SimRequest> {
     out
 }
 
+/// A worker's place in a disaggregated fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimRole {
+    /// Prefill and decode share the worker (classic serving).
+    #[default]
+    Colocated,
+    /// Prefill-only: each finished prompt ships its KV pages over the
+    /// inter-replica link to a decode worker instead of decoding.
+    Prefill,
+    /// Decode-only: admits shipped KV (paying the priced transfer on
+    /// its clock) and never runs prefill compute.
+    Decode,
+}
+
+/// One finished prefill in flight from a prefill worker to a decode
+/// worker: the KV pages' token history, the remaining decode budget,
+/// and the latency the request accumulated before shipping.
+#[derive(Debug, Clone)]
+pub struct SimHandoff {
+    pub id: u64,
+    /// Full prompt token history backing the shipped KV pages.
+    pub tokens: Vec<i32>,
+    /// Decode steps still owed.
+    pub decode: usize,
+    pub tenant: usize,
+    /// Sim time from delivery to prefill completion on the prefill
+    /// worker (queue wait + prefill compute); the receiving worker
+    /// back-dates the request's TTFT origin by this plus the priced
+    /// transfer, so fleet TTFT includes the whole handoff path.
+    pub elapsed: f64,
+}
+
 /// One replay's outcome.
 #[derive(Debug, Clone)]
 pub struct ReplayResult {
@@ -190,6 +230,13 @@ pub struct ReplayResult {
     /// per decode tick (length = shard count; len 1 for a monolithic
     /// paged run, empty for dense) — the per-shard occupancy report.
     pub shard_utilization: Vec<f64>,
+    /// Simulated time this worker's clock spent on fabric transfers
+    /// (swap round trips over the host link, shipped-KV admissions
+    /// over the inter-replica link). 0 without a fabric.
+    pub transfer_time: f64,
+    /// Bytes moved over the fabric (each swap direction and each
+    /// handoff counted once). 0 without a fabric.
+    pub transfer_bytes: u64,
     /// Pool counters (zeros for the dense baseline).
     pub stats: PoolStats,
     /// Decoded token stream per request — the determinism witness the
@@ -252,13 +299,31 @@ pub struct SimWorker {
     page_size: usize,
     /// Ticks taken (the sampler's tick axis; counts no-op ticks too).
     ticks_seen: u64,
+    /// Priced transfer fabric (`None` = the unpriced legacy replay).
+    fabric: Option<FabricSpec>,
+    /// Place in a disaggregated fleet (Colocated outside one).
+    role: SimRole,
+    /// Remaining decode budgets of swapped-out victims whose KV sits
+    /// in the pool's host buffers awaiting a priced swap-in.
+    swapped: HashMap<u64, usize>,
+    /// Finished prefills awaiting pickup by the routing driver
+    /// (prefill role only).
+    outbox: Vec<SimHandoff>,
+    /// Shipped KV awaiting admission on this worker (decode role).
+    inbox: Vec<SimHandoff>,
+    /// Transfer cost accrued since the clock last charged it.
+    pending_transfer: f64,
+    /// Total simulated time spent on fabric transfers.
+    transfer_time: f64,
+    /// Total bytes moved over the fabric.
+    transfer_bytes: u64,
 }
 
 impl SimWorker {
     pub fn new(cfg: &ReplayConfig, paged: bool) -> SimWorker {
         let slots_n =
             if paged { cfg.batch_slots } else { cfg.dense_slots() };
-        let kv = if paged {
+        let mut kv = if paged {
             PagedKvSlots::paged(slots_n, cfg.max_seq, KvPoolConfig {
                 page_size: cfg.page_size,
                 total_pages: cfg.total_pages,
@@ -267,6 +332,9 @@ impl SimWorker {
         } else {
             PagedKvSlots::dense(slots_n, cfg.max_seq)
         };
+        if let Some(f) = cfg.fabric {
+            kv.set_fabric(f);
+        }
         SimWorker {
             kv,
             sched: Scheduler::new(SchedConfig {
@@ -303,7 +371,26 @@ impl SimWorker {
             ledger: None,
             page_size: cfg.page_size.max(1),
             ticks_seen: 0,
+            fabric: cfg.fabric,
+            role: SimRole::Colocated,
+            swapped: HashMap::new(),
+            outbox: Vec::new(),
+            inbox: Vec::new(),
+            pending_transfer: 0.0,
+            transfer_time: 0.0,
+            transfer_bytes: 0,
         }
+    }
+
+    /// Assign this worker's place in a disaggregated fleet (the
+    /// routing replay sets this before delivering work; a standalone
+    /// replay stays Colocated).
+    pub fn set_role(&mut self, role: SimRole) {
+        self.role = role;
+    }
+
+    pub fn role(&self) -> SimRole {
+        self.role
     }
 
     /// Attach a live-metrics sampler: every tick publishes queue
@@ -346,16 +433,64 @@ impl SimWorker {
         }
     }
 
-    /// Anything queued, mid-prefill, or decoding? (A crashed worker
-    /// reports idle: its remaining work was evacuated by `kill`.)
-    pub fn has_work(&self) -> bool {
-        !self.dead
-            && (self.sched.pending() > 0 || self.kv.live_count() > 0)
+    /// Receive a finished prefill shipped from a prefill worker: the
+    /// KV pages travel the inter-replica link (priced at admission),
+    /// and the request's TTFT origin is back-dated by the latency it
+    /// already accumulated plus the transfer, so the recorded TTFT
+    /// covers queue + prefill + handoff + any admission wait here.
+    pub fn deliver_handoff(&mut self, h: SimHandoff) {
+        let tcost = self.handoff_cost(h.tokens.len());
+        self.arrived.insert(h.id, self.now - h.elapsed - tcost);
+        self.tenant_of.insert(h.id, h.tenant);
+        self.inbox.push(h);
     }
 
-    /// Routing view: outstanding requests on this worker.
+    /// Inter-replica transfer cost of one handoff (0 with no fabric).
+    fn handoff_cost(&self, tokens: usize) -> f64 {
+        self.fabric.map_or(0.0, |f| {
+            f.transfer_cost(LinkKind::Network, f.bytes_for_tokens(tokens))
+        })
+    }
+
+    /// Price a fabric movement of `tokens` tokens over `link` into the
+    /// next clock charge; returns `(bytes, cost)` for the ledger.
+    fn charge_transfer(&mut self, link: LinkKind, tokens: usize)
+                       -> (u64, f64) {
+        let Some(f) = self.fabric else { return (0, 0.0) };
+        let bytes = f.bytes_for_tokens(tokens);
+        let cost = f.transfer_cost(link, bytes);
+        self.pending_transfer += cost;
+        self.transfer_bytes += bytes;
+        (bytes, cost)
+    }
+
+    /// Drain this worker's handoff outbox (the routing driver ships
+    /// these to a decode worker after every tick round).
+    pub fn take_handoffs(&mut self) -> Vec<SimHandoff> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Anything queued, mid-prefill, decoding, swapped out, shipped
+    /// here awaiting admission, or finished and awaiting handoff
+    /// pickup? (A crashed worker reports idle: its remaining work was
+    /// evacuated by `kill`.)
+    pub fn has_work(&self) -> bool {
+        !self.dead
+            && (self.sched.pending() > 0 || self.kv.live_count() > 0
+                || !self.inbox.is_empty() || !self.swapped.is_empty()
+                || !self.outbox.is_empty())
+    }
+
+    /// Routing view: outstanding requests on this worker. Shipped-KV
+    /// admissions and their decodes bypass the scheduler, so a decode
+    /// worker counts its inbox and live budgets directly.
     pub fn depth(&self) -> usize {
-        self.sched.pending() + self.sched.in_flight()
+        self.sched.pending() + self.sched.in_flight() + self.inbox.len()
+            + if self.role == SimRole::Decode {
+                self.remaining.len() + self.swapped.len()
+            } else {
+                0
+            }
     }
 
     /// Routing view: leading prompt blocks resident in this worker's
@@ -400,13 +535,20 @@ impl SimWorker {
             .keys()
             .chain(self.inflight.keys())
             .chain(self.remaining.keys())
+            .chain(self.swapped.keys())
             .copied()
+            .chain(self.inbox.iter().map(|h| h.id))
+            .chain(self.outbox.iter().map(|h| h.id))
             .collect();
         ids.sort_unstable();
         ids.dedup();
         for (slot, _req, _pos) in self.kv.live_slots() {
             let _ = self.kv.release(slot);
         }
+        // Swapped-out victims die with the replica: their host-staged
+        // bytes return to the budget (conservation survives crashes),
+        // and the requests recompute elsewhere from their prompts.
+        self.kv.drain_host_buffers();
         for &id in &ids {
             self.sched.drop_request(id);
             self.outputs.remove(&id);
@@ -417,6 +559,10 @@ impl SimWorker {
         self.staging.clear();
         self.inflight.clear();
         self.remaining.clear();
+        self.swapped.clear();
+        self.inbox.clear();
+        self.outbox.clear();
+        self.pending_transfer = 0.0;
         self.dead = true;
         ids
     }
@@ -455,6 +601,17 @@ impl SimWorker {
         self.kv.stats().map(|s| s.shard_spills).unwrap_or(0)
     }
 
+    /// Fabric-priced cost of one spilled page's NVLink gather (0.0
+    /// without a fabric — the explainer falls back to its flat
+    /// per-spill weight). Attribution only: spills hide inside the
+    /// tick, so nothing lands on `pending_transfer`.
+    fn spill_price(&self) -> f64 {
+        self.fabric.map_or(0.0, |f| {
+            f.transfer_cost(LinkKind::NvLink,
+                            f.bytes_for_pages(1, self.page_size))
+        })
+    }
+
     fn tick_inner(&mut self) {
         // Causal-ledger handle for this tick (a cheap Arc clone);
         // None when detached *or disabled*, so the uninstrumented hot
@@ -463,6 +620,87 @@ impl SimWorker {
             Some((l, r)) if l.is_enabled() => Some((l.clone(), *r)),
             _ => None,
         };
+        // ---- swap-ins: resume staged victims before planning new
+        // work (they are the oldest admissions; the swap-in rides the
+        // host link instead of re-running their prefill) -----------------
+        if !self.swapped.is_empty() {
+            let mut ids: Vec<u64> = self.swapped.keys().copied().collect();
+            ids.sort_unstable();
+            for id in ids {
+                match self.kv.resume_swapped(id) {
+                    Ok((_slot, _out)) => {
+                        let rem = self
+                            .swapped
+                            .remove(&id)
+                            .expect("staged victim");
+                        let len = self
+                            .kv
+                            .slot_of(id)
+                            .and_then(|s| self.kv.pos(s).ok())
+                            .unwrap_or(0);
+                        self.remaining.insert(id, rem);
+                        let (bytes, cost) =
+                            self.charge_transfer(LinkKind::Pcie, len);
+                        if let Some((led, _)) = &ledger {
+                            led.transfer(id, bytes, cost, self.now);
+                        }
+                    }
+                    Err(KvError::CapacityExhausted { .. })
+                    | Err(KvError::NoFreeSlot) => break,
+                    Err(_) => {
+                        // Structural refusal: recompute from the
+                        // token history instead of waiting forever.
+                        let rem = self.swapped.remove(&id).unwrap_or(0);
+                        if let Some((tokens, _)) =
+                            self.kv.discard_swapped(id)
+                        {
+                            self.sched.requeue_front(QueuedRequest {
+                                id,
+                                prompt_len: tokens.len(),
+                                max_new_tokens: rem,
+                            });
+                            self.staging.insert(id, Pending {
+                                tokens,
+                                remaining: rem,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // ---- disaggregated admission: land shipped KV (decode role).
+        // The prompt arrives over the inter-replica link, not through
+        // prefill compute — the tick is charged the priced transfer
+        // and zero prefill tokens. ---------------------------------------
+        let mut finished_handoff: Vec<u64> = Vec::new();
+        while !self.inbox.is_empty() {
+            let admitted = self.kv.alloc(self.inbox[0].id,
+                                         &self.inbox[0].tokens);
+            match admitted {
+                Ok(_) => {
+                    let h = self.inbox.remove(0);
+                    let (bytes, cost) = self
+                        .charge_transfer(LinkKind::Network,
+                                         h.tokens.len());
+                    self.remaining.insert(h.id, h.decode);
+                    finished_handoff.push(h.id);
+                    if let Some((led, _)) = &ledger {
+                        led.admitted(h.id, h.tokens.len(), self.now);
+                        led.transfer(h.id, bytes, cost, self.now);
+                    }
+                }
+                Err(KvError::CapacityExhausted { .. })
+                | Err(KvError::NoFreeSlot) => {
+                    self.kv.note_capacity_wait();
+                    break;
+                }
+                Err(_) => {
+                    let h = self.inbox.remove(0);
+                    self.arrived.remove(&h.id);
+                    self.dropped += 1;
+                }
+            }
+        }
         // ---- plan ------------------------------------------------------
         let view = self.kv.capacity_view();
         let plan = self.sched.plan(&view);
@@ -474,7 +712,9 @@ impl SimWorker {
         // or mid-prefill work larger than the pool can ever grant
         // would stall forever — shed it (mirrors the server worker).
         if plan.chunks.is_empty() && self.remaining.is_empty()
-            && (self.sched.pending() > 0 || !self.inflight.is_empty())
+            && finished_handoff.is_empty()
+            && (self.sched.pending() > 0 || !self.inflight.is_empty()
+                || !self.inbox.is_empty() || !self.swapped.is_empty())
         {
             self.stalled += 1;
             if self.stalled > 2 {
@@ -490,6 +730,29 @@ impl SimWorker {
                     self.sched.drop_request(q.id);
                     self.staging.remove(&q.id);
                     self.dropped += 1;
+                } else if !self.inbox.is_empty() {
+                    // Shipped KV the pool can never admit.
+                    let h = self.inbox.remove(0);
+                    self.arrived.remove(&h.id);
+                    self.dropped += 1;
+                } else if let Some(&id) =
+                    self.swapped.keys().min()
+                {
+                    // Wedged swap-in: fall back to recompute.
+                    let rem = self.swapped.remove(&id).unwrap_or(0);
+                    if let Some((tokens, _)) =
+                        self.kv.discard_swapped(id)
+                    {
+                        self.sched.requeue_front(QueuedRequest {
+                            id,
+                            prompt_len: tokens.len(),
+                            max_new_tokens: rem,
+                        });
+                        self.staging.insert(id, Pending {
+                            tokens,
+                            remaining: rem,
+                        });
+                    }
                 }
                 self.stalled = 0;
             }
@@ -499,7 +762,10 @@ impl SimWorker {
 
         // ---- execute prefill chunks ------------------------------------
         let mut tick_prefill = 0usize;
-        let mut finished_prefill: Vec<u64> = Vec::new();
+        let mut finished_prefill: Vec<u64> = finished_handoff;
+        // Finished prefills a prefill-role worker ships instead of
+        // decoding (packaged after the clock advances).
+        let mut handoff_ready: Vec<(u64, Pending)> = Vec::new();
         let mut requeue: Vec<QueuedRequest> = Vec::new();
         // `(request, prompt tokens fed this tick)` — the ledger's
         // per-request prefill-compute charge (empty when detached).
@@ -516,7 +782,8 @@ impl SimWorker {
                 if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
                     let d = self.spills_now().saturating_sub(s0);
                     for _ in 0..d {
-                        led.spill(c.request, self.now);
+                        led.spill(c.request, self.spill_price(),
+                                  self.now);
                     }
                 }
                 match allocated {
@@ -527,11 +794,13 @@ impl SimWorker {
                             led.admitted(c.request, len, self.now);
                             fed.push((c.request, len));
                         }
-                        if len >= p.tokens.len() {
+                        if len < p.tokens.len() {
+                            self.inflight.insert(c.request, p);
+                        } else if self.role == SimRole::Prefill {
+                            handoff_ready.push((c.request, p));
+                        } else {
                             self.remaining.insert(c.request, p.remaining);
                             finished_prefill.push(c.request);
-                        } else {
-                            self.inflight.insert(c.request, p);
                         }
                     }
                     Err(KvError::CapacityExhausted { .. }) => {
@@ -572,7 +841,8 @@ impl SimWorker {
                 if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
                     let d = self.spills_now().saturating_sub(s0);
                     for _ in 0..d {
-                        led.spill(c.request, self.now);
+                        led.spill(c.request, self.spill_price(),
+                                  self.now);
                     }
                 }
                 match extended {
@@ -588,8 +858,13 @@ impl SimWorker {
                                 .inflight
                                 .remove(&c.request)
                                 .expect("inflight entry");
-                            self.remaining.insert(c.request, p.remaining);
-                            finished_prefill.push(c.request);
+                            if self.role == SimRole::Prefill {
+                                handoff_ready.push((c.request, p));
+                            } else {
+                                self.remaining
+                                    .insert(c.request, p.remaining);
+                                finished_prefill.push(c.request);
+                            }
                         }
                     }
                     Err(KvError::CapacityExhausted { .. }) => {
@@ -629,7 +904,15 @@ impl SimWorker {
             .into_iter()
             .filter(|(_, req, _)| self.remaining.contains_key(req))
             .collect();
+        // Fabric transfers accrued since the last charge (swap-ins,
+        // swap-outs, shipped-KV admissions) ride this tick's clock;
+        // 0.0 exactly when nothing priced moved, so the unpriced
+        // replay's clock is untouched bit for bit.
+        let transfer = self.pending_transfer;
+        self.pending_transfer = 0.0;
+        self.transfer_time += transfer;
         let tick_cost = tick_prefill as f64 * SIM_PREFILL_TOKEN_COST
+            + transfer
             + if decoding.is_empty() { 0.0 } else { SIM_DECODE_COST };
         self.now += tick_cost;
         // First token is sampled from the completing prefill's logits
@@ -685,6 +968,26 @@ impl SimWorker {
                     pages: &pages,
                 });
             }
+        }
+        // ---- ship finished prefills (prefill role) ---------------------
+        // Pages return to this worker's pool (full blocks stay cached,
+        // so same-tenant prompts keep hitting the warm prefix); the
+        // handoff carries the token history and the latency already
+        // accumulated. The receiving decode worker prices the actual
+        // transfer when it admits the pages.
+        for (id, p) in handoff_ready {
+            if let Some(slot) = self.kv.slot_of(id) {
+                let _ = self.kv.release(slot);
+            }
+            self.sched.finished(id);
+            let t0 = self.arrived.remove(&id).unwrap_or(0.0);
+            self.outbox.push(SimHandoff {
+                id,
+                tokens: p.tokens,
+                decode: p.remaining,
+                tenant: self.tenant_of.get(&id).copied().unwrap_or(0),
+                elapsed: self.now - t0,
+            });
         }
         if decoding.is_empty() {
             return;
@@ -748,7 +1051,7 @@ impl SimWorker {
             if let (Some((led, _)), Some(s0)) = (&ledger, spill0) {
                 let d = self.spills_now().saturating_sub(s0);
                 for _ in 0..d {
-                    led.spill(req, self.now);
+                    led.spill(req, self.spill_price(), self.now);
                 }
             }
             match advanced {
@@ -779,9 +1082,11 @@ impl SimWorker {
         }
     }
 
-    /// Decode outgrew the pool: preempt (latest-admitted first, on a
-    /// sharded pool targeting the grower's arena first) until the
-    /// advance fits or we evicted ourselves.
+    /// Decode outgrew the pool: preempt (cost-aware when a fabric is
+    /// attached — swap-out vs. recompute by modeled nanoseconds; the
+    /// legacy latest-admitted recompute rule otherwise, on a sharded
+    /// pool targeting the grower's arena first) until the advance fits
+    /// or we evicted ourselves.
     fn preempt_until_fits(&mut self, slot: usize, req: u64, tok: i32) {
         let ledger = match &self.ledger {
             Some((l, r)) if l.is_enabled() => Some((l.clone(), *r)),
@@ -789,8 +1094,7 @@ impl SimWorker {
         };
         let prefer = self.kv.growth_shard(req);
         loop {
-            let Some((_vslot, pre)) =
-                self.kv.preempt_targeted(PreemptMode::Recompute, prefer)
+            let Some((_vslot, pre)) = self.kv.preempt_auto(prefer)
             else {
                 break;
             };
@@ -798,8 +1102,27 @@ impl SimWorker {
             if let Some((led, _)) = &ledger {
                 led.preempted(victim, self.now);
             }
-            if let Some(p) = self.inflight.remove(&victim) {
-                // Mid-prefill victim restarts its chunks.
+            if pre.mode == PreemptMode::SwapOut
+                && victim != req
+                && !self.inflight.contains_key(&victim)
+            {
+                // The pool staged the victim's KV in a host buffer:
+                // pay the swap-out over the host link now; the swap-in
+                // pays the return trip at resume. No re-prefill.
+                let rem_v = self.remaining.remove(&victim).unwrap_or(0);
+                self.swapped.insert(victim, rem_v);
+                let (bytes, cost) = self
+                    .charge_transfer(LinkKind::Pcie, pre.tokens.len());
+                if let Some((led, _)) = &ledger {
+                    led.transfer(victim, bytes, cost, self.now);
+                }
+            } else if let Some(p) = self.inflight.remove(&victim) {
+                // Mid-prefill victim restarts its chunks (a host
+                // buffer cannot restore the unprefilled suffix — a
+                // staged swap is abandoned, bytes back to the budget).
+                if pre.mode == PreemptMode::SwapOut {
+                    let _ = self.kv.discard_swapped(victim);
+                }
                 self.sched.requeue_front(QueuedRequest {
                     id: victim,
                     prompt_len: p.tokens.len(),
@@ -807,6 +1130,12 @@ impl SimWorker {
                 });
                 self.staging.insert(victim, p);
             } else {
+                // Self-eviction keeps the just-sampled token with the
+                // requeued job, which a host buffer staged before the
+                // sample cannot carry — recompute instead.
+                if pre.mode == PreemptMode::SwapOut {
+                    let _ = self.kv.discard_swapped(victim);
+                }
                 let rem_v = self.remaining.remove(&victim).unwrap_or(0);
                 let mut tokens = pre.tokens;
                 if victim == req {
@@ -879,6 +1208,8 @@ impl SimWorker {
             ttft: self.ttft,
             tbt: self.tbt,
             max_tick_prefill_tokens: self.max_tick_prefill,
+            transfer_time: self.transfer_time,
+            transfer_bytes: self.transfer_bytes,
             shard_utilization: if self.decode_ticks == 0 {
                 vec![0.0; self.shard_util_sums.len()]
             } else {
@@ -989,6 +1320,18 @@ pub fn render_comparison(paged: &ReplayResult, dense: &ReplayResult)
     t.row(&["capacity-wait ticks".into(),
             paged.stats.capacity_wait_ticks.to_string(),
             "0".into()]);
+    if paged.transfer_bytes > 0 || paged.stats.swap_decisions > 0
+        || paged.stats.recompute_decisions > 0
+    {
+        t.row(&["fabric transfer (sim)".into(),
+                f2(paged.transfer_time), "-".into()]);
+        t.row(&["fabric bytes moved".into(),
+                paged.transfer_bytes.to_string(), "-".into()]);
+        t.row(&["swap / recompute decisions".into(),
+                format!("{}/{}", paged.stats.swap_decisions,
+                        paged.stats.recompute_decisions),
+                "0/0".into()]);
+    }
     t.render()
 }
 
@@ -1645,5 +1988,124 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Tentpole: on the proven-tight budget, a paper-priced fabric
+    /// turns preemption into a measured swap-vs-recompute decision —
+    /// at 7B KV geometry the swap round trip beats recompute, so
+    /// victims ride the host link and every reserved host byte is
+    /// released by the end (conservation), while the run still
+    /// completes everything with the same position-pure streams.
+    #[test]
+    fn priced_replay_swaps_instead_of_recomputing() {
+        let base = ReplayConfig {
+            total_pages: 40,
+            batch_slots: 12,
+            ..ReplayConfig::default()
+        };
+        let legacy = replay(&base, true);
+        assert!(legacy.stats.preemptions > 0, "budget must be tight");
+        let priced = replay(
+            &ReplayConfig {
+                fabric: Some(FabricSpec::paper(524_288.0)),
+                ..base
+            },
+            true,
+        );
+        assert_eq!(priced.completed, base.requests);
+        assert_eq!(priced.dropped, 0);
+        assert_eq!(priced.outputs, legacy.outputs,
+                   "pricing moves bytes, never tokens");
+        assert!(priced.stats.swap_decisions > 0,
+                "7B geometry makes swap the cheap eviction: {:?}",
+                priced.stats);
+        assert!(priced.stats.host_bytes_reserved > 0);
+        assert_eq!(priced.stats.host_bytes_reserved,
+                   priced.stats.host_bytes_released,
+                   "every staged host byte returns to the budget");
+        assert!(priced.transfer_bytes > 0);
+        assert!(priced.transfer_time > 0.0);
+        let s = render_comparison(&priced, &replay(&base, false));
+        assert!(s.contains("swap / recompute decisions"));
+    }
+
+    /// Satellite (bisimulation guard, spot check — the 512-case
+    /// property version lives in `tests/property_kvpool.rs`): the
+    /// zero-cost fabric prices every comparison at a tie, ties break
+    /// to the legacy rules, so the whole replay is bit-identical.
+    #[test]
+    fn zero_cost_fabric_replay_is_bit_identical() {
+        for shards in [1usize, 2] {
+            let base = ReplayConfig {
+                total_pages: 40,
+                batch_slots: 12,
+                shards,
+                ..ReplayConfig::default()
+            };
+            let legacy = replay(&base, true);
+            let zero = replay(
+                &ReplayConfig {
+                    fabric: Some(FabricSpec::zero_cost()),
+                    ..base
+                },
+                true,
+            );
+            assert_eq!(zero.outputs, legacy.outputs, "shards={shards}");
+            assert_eq!(zero.sim_time, legacy.sim_time);
+            assert_eq!(zero.decode_ticks, legacy.decode_ticks);
+            assert_eq!(zero.stats, legacy.stats,
+                       "shards={shards}: counters bit-identical");
+            assert_eq!(zero.stats.swap_decisions, 0);
+            assert_eq!(zero.transfer_bytes, 0);
+            assert_eq!(zero.transfer_time, 0.0);
+        }
+    }
+
+    /// Tentpole (disaggregation): a prefill worker ships finished
+    /// prompts' KV over the priced inter-replica link to a decode
+    /// worker. Streams stay position-pure (identical to colocated),
+    /// the handoff is explicitly priced (non-zero transfer), and the
+    /// decode worker never runs a prefill token.
+    #[test]
+    fn prefill_worker_ships_kv_and_decode_worker_serves_it() {
+        let cfg = ReplayConfig {
+            fabric: Some(FabricSpec::paper(524_288.0)),
+            ..ReplayConfig::default()
+        };
+        let mut pre = SimWorker::new(&cfg, true);
+        pre.set_role(SimRole::Prefill);
+        let mut dec = SimWorker::new(&cfg, true);
+        dec.set_role(SimRole::Decode);
+        assert_eq!(pre.role(), SimRole::Prefill);
+        for req in generate_workload(&cfg) {
+            pre.deliver(&req);
+        }
+        let mut guard = 0u64;
+        while (pre.has_work() || dec.has_work()) && guard < 100_000 {
+            guard += 1;
+            pre.tick();
+            dec.tick();
+            for h in pre.take_handoffs() {
+                dec.deliver_handoff(h);
+            }
+        }
+        let p = pre.into_result("prefill");
+        let d = dec.into_result("decode");
+        assert_eq!(p.completed, 0, "prefill workers never decode");
+        assert_eq!(p.ttft.len(), 0, "first token belongs to decode");
+        assert_eq!(d.completed, cfg.requests, "{d:?}");
+        assert_eq!(p.dropped + d.dropped, 0);
+        assert_eq!(d.max_tick_prefill_tokens, 0,
+                   "no prefill compute on the decode worker");
+        assert_eq!(d.ttft.len(), cfg.requests);
+        // Streams are position-pure: identical to a colocated run.
+        let colo = replay(&cfg, true);
+        assert_eq!(d.outputs, colo.outputs);
+        // The handoff cost is real and explicitly priced.
+        assert!(d.transfer_bytes > 0);
+        assert!(d.transfer_time > 0.0);
+        // TTFT covers queue + prefill + transfer: the fleet's slowest
+        // first token is later than a pure prefill would be.
+        assert!(d.ttft.percentile(50.0) > 0.0);
     }
 }

@@ -189,6 +189,14 @@ impl ShardedBlockPool {
         self.alloc_prefer(None)
     }
 
+    /// Claim a free page on exactly `shard` — no spill. `None` when
+    /// that arena's free list is dry; the caller decides whether the
+    /// priced fabric makes a home-shard eviction cheaper than the
+    /// cross-shard gather a spill would cost.
+    pub fn alloc_on(&mut self, shard: ShardId) -> Option<PageId> {
+        self.arenas[shard].alloc().map(|local| self.offsets[shard] + local)
+    }
+
     pub fn state(&self, pid: PageId) -> PageState {
         let (s, local) = self.locate(pid);
         self.arenas[s].state(local)
@@ -349,6 +357,18 @@ mod tests {
         assert_eq!(v.len(), 2);
         assert_eq!(v[1].free_pages, 2);
         assert_eq!(v[1].headroom(), 2);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn alloc_on_refuses_instead_of_spilling() {
+        let mut p = ShardedBlockPool::new(4, 4, 2); // shards {0,1}, {2,3}
+        let a = p.alloc_on(1).unwrap();
+        assert_eq!(p.shard_of(a), 1);
+        let b = p.alloc_on(1).unwrap();
+        assert_eq!(p.shard_of(b), 1);
+        assert_eq!(p.alloc_on(1), None, "dry arena refuses, no spill");
+        assert_eq!(p.shard_free(0), 2, "other arena untouched");
         p.check_conservation().unwrap();
     }
 

@@ -27,7 +27,11 @@
 //!                    simulated TTFT/TBT per policy; `--shards D`
 //!                    splits every page budget across D device arenas
 //!                    and prints the sharded-vs-monolithic capacity
-//!                    table with per-shard occupancy; `--bench-json`
+//!                    table with per-shard occupancy; `--disaggregate`
+//!                    A/Bs colocated vs split prefill/decode workers
+//!                    over the priced transfer fabric (KV handoff on
+//!                    the network link) and `--fabric-json` writes
+//!                    that A/B for the CI gate; `--bench-json`
 //!                    writes the metrics for the CI perf gate.
 //! * `stats`        — replay a sharded multi-replica workload with the
 //!                    live metrics plane attached and render the fleet
@@ -61,10 +65,14 @@ use mmserve::kvpool::replay::{render_chunk_comparison, render_comparison,
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
+use mmserve::perfmodel::configs as paper_configs;
 use mmserve::perfmodel::device::DeviceSpec;
+use mmserve::perfmodel::fabric::FabricSpec;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
-use mmserve::routing::replay::{compare_policies, render_policy_comparison,
+use mmserve::routing::replay::{compare_disaggregation, compare_policies,
+                               render_disagg_comparison,
+                               render_policy_comparison,
                                render_worker_counters, routing_replay,
                                routing_replay_instrumented,
                                routing_replay_live, KillSpec,
@@ -292,6 +300,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("policy",
              "replica routing: round-robin|least-loaded|prefix-affinity",
              Some("prefix-affinity"))
+        .flag("disaggregate",
+              "split replicas into prefill/decode tiers; print the \
+               modeled colocated-vs-disaggregated A/B")
         .flag("sdpa", "enable the flash-attention stages")
         .flag("eager", "per-op dispatch (launch-overhead baseline)")
         .flag("layerskip", "self-speculative decoding")
@@ -305,6 +316,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let opt = opt_from_args(&a);
     let n = a.get_usize("requests", 8);
     let max_new = a.get_usize("max-new", 16);
+    let disaggregate = a.flag("disaggregate");
     if a.get_usize("chunk-prefill", 0) > 0
         && a.get_usize("prefill-budget", 0) > 0
     {
@@ -337,6 +349,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ledger: None,
             replicas,
             policy,
+            disaggregate,
         },
     );
 
@@ -364,6 +377,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("{}", render_replica_reports(&router.replica_reports()));
     }
     router.shutdown();
+    if disaggregate {
+        // The priced prefill→decode handoff lives on the simulated
+        // plane; show the modeled A/B for the same fleet size on a
+        // long-prompt shared-prefix mix (the regime disaggregation
+        // targets).
+        let rcfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                requests: 48,
+                tenants: 2,
+                long_percent: 50,
+                long_prompt: (96, 200),
+                total_pages: 192,
+                batch_slots: 12,
+                fabric: Some(FabricSpec::paper(
+                    paper_configs::LLAMA_7B.kv_bytes_per_token(),
+                )),
+                ..ReplayConfig::default()
+            },
+            replicas: replicas.max(2),
+            ..RoutingReplayConfig::default()
+        };
+        let (colo, disagg) =
+            compare_disaggregation(&rcfg, RoutingPolicy::LeastLoaded);
+        println!(
+            "\n== modeled disaggregation A/B ({} workers, least-loaded, \
+             simulated clock) ==",
+            rcfg.replicas
+        );
+        println!("{}", render_disagg_comparison(&colo, &disagg));
+    }
     Ok(())
 }
 
@@ -497,6 +540,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
             ledger: None,
             replicas,
             policy,
+            disaggregate: false,
         },
     );
 
@@ -554,6 +598,79 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
     println!("{}", render(&standard_breakdown_rows(dev,
                                                    &Levers::baseline())));
     Ok(())
+}
+
+/// KV bytes/token for a model family name — the fabric geometry knob.
+fn kv_geometry(name: &str) -> Result<f64> {
+    Ok(match name {
+        "llama-7b" => paper_configs::LLAMA_7B.kv_bytes_per_token(),
+        "llama-34b" => paper_configs::LLAMA_34B.kv_bytes_per_token(),
+        "chameleon-7b" => paper_configs::CHAMELEON_7B.kv_bytes_per_token(),
+        "chameleon-34b" => {
+            paper_configs::CHAMELEON_34B.kv_bytes_per_token()
+        }
+        other => bail!(
+            "unknown model family {other:?} (want llama-7b, llama-34b, \
+             chameleon-7b or chameleon-34b)"
+        ),
+    })
+}
+
+/// One arm of the disaggregation A/B as a JSON object.
+fn disagg_arm_json(r: &RoutingReplayResult) -> Json {
+    Json::from_obj(vec![
+        ("mean_ttft".into(), Json::Num(r.ttft.mean())),
+        ("p99_ttft".into(), Json::Num(r.ttft.percentile(99.0))),
+        ("mean_tbt".into(), Json::Num(r.tbt.mean())),
+        ("p99_tbt".into(), Json::Num(r.tbt.percentile(99.0))),
+        ("completed".into(), Json::Num(r.completed as f64)),
+        ("dropped".into(), Json::Num(r.dropped as f64)),
+        ("preemptions".into(), Json::Num(r.fleet.preemptions as f64)),
+        ("swap_decisions".into(),
+         Json::Num(r.fleet.swap_decisions as f64)),
+        ("recompute_decisions".into(),
+         Json::Num(r.fleet.recompute_decisions as f64)),
+        ("transfer_time".into(), Json::Num(r.transfer_time)),
+        ("transfer_bytes".into(), Json::Num(r.transfer_bytes as f64)),
+        ("link_utilization".into(), Json::Num(r.link_utilization())),
+        ("sim_time".into(), Json::Num(r.sim_time)),
+    ])
+}
+
+/// The `--fabric-json` document (`BENCH_fabric.json` in CI): both arms
+/// of the colocated-vs-disaggregated A/B, the headline deltas the gate
+/// bounds, and the priced swap-vs-recompute decision mix.
+fn fabric_json(rcfg: &RoutingReplayConfig, kv_bytes_per_token: f64,
+               colo: &RoutingReplayResult,
+               disagg: &RoutingReplayResult) -> Json {
+    Json::from_obj(vec![
+        ("config".into(), Json::from_obj(vec![
+            ("requests".into(), Json::Num(rcfg.base.requests as f64)),
+            ("replicas".into(), Json::Num(rcfg.replicas as f64)),
+            ("pages".into(), Json::Num(rcfg.base.total_pages as f64)),
+            ("slots".into(), Json::Num(rcfg.base.batch_slots as f64)),
+            ("tenants".into(), Json::Num(rcfg.base.tenants as f64)),
+            ("long_percent".into(),
+             Json::Num(rcfg.base.long_percent as f64)),
+            ("kv_bytes_per_token".into(), Json::Num(kv_bytes_per_token)),
+            ("seed".into(), Json::Num(rcfg.base.seed as f64)),
+        ])),
+        ("fabric".into(), Json::from_obj(vec![
+            ("colocated".into(), disagg_arm_json(colo)),
+            ("disaggregated".into(), disagg_arm_json(disagg)),
+            ("deltas".into(), Json::from_obj(vec![
+                // > 0 when disaggregation wins the decode tail.
+                ("p99_tbt_improvement".into(),
+                 Json::Num(colo.tbt.percentile(99.0)
+                           - disagg.tbt.percentile(99.0))),
+                // The explicitly priced TTFT cost of the KV handoff
+                // (positive = disaggregated TTFT is worse).
+                ("p99_ttft_delta".into(),
+                 Json::Num(disagg.ttft.percentile(99.0)
+                           - colo.ttft.percentile(99.0))),
+            ])),
+        ])),
+    ])
 }
 
 /// Replay metrics of one run as a JSON object (the CI perf artifact).
@@ -672,8 +789,18 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     .opt("bench-json",
          "write replay metrics as JSON to this path (CI perf gate)",
          Some(""))
+    .opt("fabric-json",
+         "write the disaggregation A/B metrics as JSON (BENCH_fabric)",
+         Some(""))
+    .opt("model",
+         "fabric KV geometry: llama-7b|llama-34b|chameleon-7b|\
+          chameleon-34b",
+         Some("llama-7b"))
     .opt("seed", "workload seed", Some("7"))
     .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
+    .flag("disaggregate",
+          "A/B colocated vs disaggregated prefill/decode over the \
+           priced fabric (uses --replicas, min 2)")
     .flag("help", "show usage");
     let a = cmd.parse(argv).map_err(anyhow::Error::msg)?;
     if a.flag("help") {
@@ -778,6 +905,38 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
              (fleet rates from summed counters) =="
         );
         println!("{}", render_worker_counters(affinity));
+    }
+
+    // Disaggregated prefill/decode A/B over the priced fabric: the
+    // identical workload once colocated, once split (first half of the
+    // fleet prefills and ships KV over the network link, second half
+    // decodes) — the decode-tail-vs-handoff-TTFT tradeoff.
+    if a.flag("disaggregate") {
+        let kv_bytes = kv_geometry(&a.get_or("model", "llama-7b"))?;
+        let rcfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                tenants: a.get_usize("tenants", 4).max(1),
+                shards,
+                fabric: Some(FabricSpec::paper(kv_bytes)),
+                ..cfg.clone()
+            },
+            replicas: replicas.max(2),
+            ..RoutingReplayConfig::default()
+        };
+        let (colo, disagg) =
+            compare_disaggregation(&rcfg, RoutingPolicy::LeastLoaded);
+        println!(
+            "\n== disaggregated prefill/decode vs colocated ({} workers, \
+             least-loaded, simulated clock) ==",
+            rcfg.replicas
+        );
+        println!("{}", render_disagg_comparison(&colo, &disagg));
+        let fabric_path = a.get_or("fabric-json", "");
+        if !fabric_path.is_empty() {
+            let json = fabric_json(&rcfg, kv_bytes, &colo, &disagg);
+            std::fs::write(&fabric_path, json.to_string())?;
+            println!("wrote fabric A/B metrics to {fabric_path}");
+        }
     }
 
     let json_path = a.get_or("bench-json", "");

@@ -1,0 +1,243 @@
+//! Priced transfer fabric: the link-bandwidth/latency model for KV
+//! movement.
+//!
+//! Sharding and preemption left three kinds of KV movement counted but
+//! unpriced: cross-shard page gathers (`PoolStats::shard_spills`),
+//! swap-out host copies (a token-count ledger), and — once the fleet
+//! is split into prefill and decode workers — the prefill→decode KV
+//! handoff. This module models each as bytes over a link:
+//!
+//! ```text
+//! t_link(bytes) = latency_ns + bytes / bandwidth * 1e9
+//! ```
+//!
+//! with three links at public interconnect magnitudes: NVLink for
+//! intra-node cross-shard gathers, PCIe for the host swap path, and
+//! datacenter Ethernet for inter-replica handoff. Bytes come from the
+//! model family's KV geometry (`PaperDecoder::kv_bytes_per_token`), so
+//! one page of 16 Llama-7B tokens is ~8 MB and a 150-token handoff is
+//! ~75 MB — transfers are bandwidth-bound, exactly the shape the
+//! multimodal characterization measures for inter-accelerator traffic.
+//!
+//! Costs are returned both in nanoseconds and in *simulated clock
+//! units* (one decode tick == [`SIM_UNIT_NS`]), so the replay drivers
+//! can charge them on the same clock that prices prefill and decode
+//! compute. The whole model is a plain value type: a zero-cost fabric
+//! ([`FabricSpec::zero_cost`]) makes every comparison a tie, and every
+//! consumer breaks ties toward the legacy behavior — the bisimulation
+//! guard the property suite enforces.
+
+/// Which link a transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// GPU↔GPU inside one node (cross-shard page gather).
+    NvLink,
+    /// GPU↔host (swap-out / swap-in over the host buffer pool).
+    Pcie,
+    /// Replica↔replica over the datacenter network (KV handoff).
+    Network,
+}
+
+/// One link: sustained bandwidth plus a fixed per-transfer latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_ns: f64,
+}
+
+impl LinkSpec {
+    /// Wall nanoseconds to move `bytes` across this link.
+    pub fn transfer_ns(&self, bytes: u64) -> f64 {
+        if self.bandwidth_bytes_per_sec <= 0.0 {
+            return self.latency_ns;
+        }
+        self.latency_ns
+            + bytes as f64 / self.bandwidth_bytes_per_sec * 1e9
+    }
+}
+
+/// NVLink 3.0-class intra-node link (~300 GB/s effective).
+pub const NVLINK: LinkSpec = LinkSpec {
+    bandwidth_bytes_per_sec: 300.0e9,
+    latency_ns: 2_000.0,
+};
+
+/// PCIe gen4 x16-class host link (~32 GB/s effective).
+pub const PCIE_GEN4: LinkSpec = LinkSpec {
+    bandwidth_bytes_per_sec: 32.0e9,
+    latency_ns: 5_000.0,
+};
+
+/// 100 GbE-class inter-replica network (~12.5 GB/s line rate).
+pub const ETH_100G: LinkSpec = LinkSpec {
+    bandwidth_bytes_per_sec: 12.5e9,
+    latency_ns: 10_000.0,
+};
+
+/// Simulated-clock conversion: one decode tick (cost 1.0 on the replay
+/// clock) models ~20 ms of wall time — the right magnitude for a
+/// batched 7B decode step on an A100.
+pub const SIM_UNIT_NS: f64 = 2.0e7;
+
+/// The complete priced fabric: one spec per link kind plus the KV
+/// geometry that turns tokens/pages into bytes and the recompute rate
+/// that swap-vs-recompute decisions compare against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FabricSpec {
+    /// Cross-shard gathers inside one node.
+    pub intra_node: LinkSpec,
+    /// The swap path to host memory.
+    pub host_link: LinkSpec,
+    /// Prefill→decode KV handoff between replicas.
+    pub inter_replica: LinkSpec,
+    /// KV bytes per token for the served model family
+    /// (`PaperDecoder::kv_bytes_per_token`).
+    pub kv_bytes_per_token: f64,
+    /// Modeled nanoseconds to recompute (re-prefill) one token — what
+    /// a swap transfer is traded against. On the replay clock one
+    /// prefill token costs 0.05 sim units == 1e6 ns.
+    pub recompute_ns_per_token: f64,
+    /// Host swap buffer capacity in bytes (0 = unbounded): a failed
+    /// reservation falls back to recompute, which is what makes the
+    /// swap-vs-recompute decision mix a real policy output.
+    pub host_capacity_bytes: u64,
+}
+
+impl FabricSpec {
+    /// All-zero fabric: every transfer is free and every cost
+    /// comparison ties. Consumers break ties toward the legacy
+    /// behavior, so this spec is bit-identical to running without a
+    /// fabric at all (the bisimulation guard).
+    pub fn zero_cost() -> Self {
+        let free = LinkSpec { bandwidth_bytes_per_sec: 0.0,
+                              latency_ns: 0.0 };
+        FabricSpec {
+            intra_node: free,
+            host_link: free,
+            inter_replica: free,
+            kv_bytes_per_token: 0.0,
+            recompute_ns_per_token: 0.0,
+            host_capacity_bytes: 0,
+        }
+    }
+
+    /// Paper-scale defaults over a given KV geometry: NVLink inside
+    /// the node, PCIe gen4 to host, 100 GbE between replicas, 256 MiB
+    /// of host swap buffers.
+    pub fn paper(kv_bytes_per_token: f64) -> Self {
+        FabricSpec {
+            intra_node: NVLINK,
+            host_link: PCIE_GEN4,
+            inter_replica: ETH_100G,
+            kv_bytes_per_token,
+            recompute_ns_per_token: 1.0e6,
+            host_capacity_bytes: 256 << 20,
+        }
+    }
+
+    /// True when every link and rate is zero (tie-everywhere fabric).
+    pub fn is_free(&self) -> bool {
+        let free = |l: &LinkSpec| {
+            l.bandwidth_bytes_per_sec == 0.0 && l.latency_ns == 0.0
+        };
+        free(&self.intra_node)
+            && free(&self.host_link)
+            && free(&self.inter_replica)
+            && self.kv_bytes_per_token == 0.0
+            && self.recompute_ns_per_token == 0.0
+    }
+
+    pub fn link(&self, kind: LinkKind) -> &LinkSpec {
+        match kind {
+            LinkKind::NvLink => &self.intra_node,
+            LinkKind::Pcie => &self.host_link,
+            LinkKind::Network => &self.inter_replica,
+        }
+    }
+
+    /// KV bytes held by `tokens` tokens of cache.
+    pub fn bytes_for_tokens(&self, tokens: usize) -> u64 {
+        (tokens as f64 * self.kv_bytes_per_token) as u64
+    }
+
+    /// KV bytes held by `pages` pages of `page_size` tokens each.
+    pub fn bytes_for_pages(&self, pages: usize, page_size: usize) -> u64 {
+        self.bytes_for_tokens(pages * page_size)
+    }
+
+    /// Wall nanoseconds for one transfer of `bytes` over `kind`.
+    pub fn transfer_ns(&self, kind: LinkKind, bytes: u64) -> f64 {
+        self.link(kind).transfer_ns(bytes)
+    }
+
+    /// The same transfer priced in simulated clock units.
+    pub fn transfer_cost(&self, kind: LinkKind, bytes: u64) -> f64 {
+        self.transfer_ns(kind, bytes) / SIM_UNIT_NS
+    }
+
+    /// Re-prefilling `tokens` tokens, in simulated clock units.
+    pub fn recompute_cost(&self, tokens: usize) -> f64 {
+        tokens as f64 * self.recompute_ns_per_token / SIM_UNIT_NS
+    }
+
+    /// One direction of the host swap path for `tokens` tokens, in
+    /// simulated clock units (a full swap round-trip is out + in).
+    pub fn swap_cost(&self, tokens: usize) -> f64 {
+        self.transfer_cost(LinkKind::Pcie, self.bytes_for_tokens(tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::configs::LLAMA_7B;
+
+    #[test]
+    fn zero_cost_fabric_prices_everything_at_zero() {
+        let f = FabricSpec::zero_cost();
+        assert!(f.is_free());
+        assert_eq!(f.bytes_for_tokens(1000), 0);
+        assert_eq!(f.transfer_cost(LinkKind::NvLink, 0), 0.0);
+        assert_eq!(f.transfer_cost(LinkKind::Pcie, 0), 0.0);
+        assert_eq!(f.swap_cost(500), 0.0);
+        assert_eq!(f.recompute_cost(500), 0.0);
+        // The bisimulation tie: swap is never *strictly* cheaper.
+        assert!(!(f.swap_cost(128) * 2.0 < f.recompute_cost(128)));
+    }
+
+    #[test]
+    fn llama7b_geometry_makes_transfers_bandwidth_bound() {
+        let f = FabricSpec::paper(LLAMA_7B.kv_bytes_per_token());
+        assert!(!f.is_free());
+        // 32 layers × 2 (K,V) × 4096 dim × 2 bytes = 0.5 MB/token.
+        assert_eq!(f.bytes_for_tokens(1), 524_288);
+        // One 16-token page over NVLink: dominated by bytes/bandwidth,
+        // not the fixed latency.
+        let page = f.bytes_for_pages(1, 16);
+        let ns = f.transfer_ns(LinkKind::NvLink, page);
+        assert!(ns > 2.0 * NVLINK.latency_ns, "{ns}");
+        // Ordering: NVLink < PCIe < network for the same bytes.
+        assert!(f.transfer_ns(LinkKind::NvLink, page)
+                    < f.transfer_ns(LinkKind::Pcie, page));
+        assert!(f.transfer_ns(LinkKind::Pcie, page)
+                    < f.transfer_ns(LinkKind::Network, page));
+    }
+
+    #[test]
+    fn swap_beats_recompute_and_handoff_beats_reprefill_at_7b() {
+        let f = FabricSpec::paper(LLAMA_7B.kv_bytes_per_token());
+        // A 150-token sequence: the full swap round-trip (~5 ms over
+        // PCIe) is far cheaper than re-prefilling (~150 ms modeled).
+        let swap = 2.0 * f.swap_cost(150);
+        let recompute = f.recompute_cost(150);
+        assert!(swap < recompute, "swap {swap} vs recompute {recompute}");
+        // Shipping the same KV over the network into a decode worker
+        // also beats re-prefilling it there — disaggregation's margin.
+        let handoff =
+            f.transfer_cost(LinkKind::Network, f.bytes_for_tokens(150));
+        assert!(handoff < recompute, "{handoff} vs {recompute}");
+        // But none of it is free: the handoff is a real, non-zero TTFT
+        // charge on the simulated clock.
+        assert!(handoff > 0.1, "{handoff}");
+    }
+}

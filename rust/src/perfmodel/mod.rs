@@ -22,6 +22,7 @@
 pub mod breakdown;
 pub mod configs;
 pub mod device;
+pub mod fabric;
 pub mod latency;
 pub mod levers;
 pub mod ops;
@@ -30,6 +31,7 @@ pub mod roofline;
 
 pub use configs::{PaperDecoder, PaperHstu, PaperSeamless};
 pub use device::DeviceSpec;
+pub use fabric::{FabricSpec, LinkKind, LinkSpec};
 pub use levers::Levers;
 pub use ops::{Op, OpCategory, OpWalk};
 

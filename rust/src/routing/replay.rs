@@ -21,7 +21,8 @@
 use std::collections::HashMap;
 
 use crate::kvpool::replay::{generate_workload, ReplayConfig,
-                            ReplayResult, SimRequest, SimWorker};
+                            ReplayResult, SimRequest, SimRole,
+                            SimWorker};
 use crate::kvpool::PoolStats;
 use crate::substrate::metrics::Histogram;
 use crate::substrate::table::Table;
@@ -62,6 +63,13 @@ pub struct RoutingReplayConfig {
     pub arrivals_per_round: usize,
     /// Optional mid-run replica crash (fail-over testing).
     pub kill: Option<KillSpec>,
+    /// Disaggregated serving: split the fleet into prefill workers
+    /// (the first `replicas / 2`, min 1) and decode workers (the
+    /// rest). Arrivals route over the prefill set only; each finished
+    /// prefill ships its KV over the priced inter-replica link to a
+    /// decode worker picked by the same policy. Ignored with fewer
+    /// than 2 replicas.
+    pub disaggregate: bool,
 }
 
 impl Default for RoutingReplayConfig {
@@ -77,6 +85,7 @@ impl Default for RoutingReplayConfig {
             replicas: 2,
             arrivals_per_round: 1,
             kill: None,
+            disaggregate: false,
         }
     }
 }
@@ -104,6 +113,14 @@ pub struct RoutingReplayResult {
     pub ticks: u64,
     /// Per-request decoded streams, merged across workers.
     pub outputs: HashMap<u64, Vec<i32>>,
+    /// Each worker's place in the fleet (all Colocated unless the run
+    /// was disaggregated), index = replica id.
+    pub roles: Vec<SimRole>,
+    /// Simulated time the fleet's clocks spent on fabric transfers
+    /// (summed across workers; 0 without a fabric).
+    pub transfer_time: f64,
+    /// Bytes moved over the fabric fleet-wide.
+    pub transfer_bytes: u64,
 }
 
 impl RoutingReplayResult {
@@ -111,16 +128,32 @@ impl RoutingReplayResult {
     pub fn agg_hit_rate(&self) -> f64 {
         self.fleet.hit_rate()
     }
+
+    /// Fraction of the fleet makespan the fabric links spent busy
+    /// (summed link time over the slowest worker's drain; can exceed
+    /// 1.0 when several links run in parallel).
+    pub fn link_utilization(&self) -> f64 {
+        if self.sim_time > 0.0 {
+            self.transfer_time / self.sim_time
+        } else {
+            0.0
+        }
+    }
 }
 
-/// Rank the fleet for one request and pick the first *live* replica —
-/// the simulated analogue of the router's dead-channel fail-over walk
-/// (`rank` is a full permutation, so any live replica is reachable).
+/// Rank the `eligible` subset of the fleet for one request and pick
+/// the first *live* replica — the simulated analogue of the router's
+/// dead-channel fail-over walk (`rank` is a full permutation of the
+/// subset, so any live eligible replica is reachable). Colocated runs
+/// pass every index; disaggregated runs route arrivals over the
+/// prefill set and handoffs over the decode set.
 fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
-             tokens: &[i32], cursor: u64) -> Option<usize> {
-    let views: Vec<ReplicaView> = workers
+             tokens: &[i32], cursor: u64, eligible: &[usize])
+             -> Option<usize> {
+    let views: Vec<ReplicaView> = eligible
         .iter()
-        .map(|w| {
+        .map(|&i| {
+            let w = &workers[i];
             let (cached_blocks, shard_spread) = if w.is_dead() {
                 (0, 0)
             } else {
@@ -135,6 +168,7 @@ fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
         .collect();
     rank(policy, &views, cursor)
         .into_iter()
+        .map(|r| eligible[r])
         .find(|&i| !workers[i].is_dead())
 }
 
@@ -195,6 +229,25 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
             w
         })
         .collect();
+    // Disaggregation: the first half prefills, the rest decode.
+    // Arrivals route over the prefill set; shipped KV routes over the
+    // decode set. A 1-replica "fleet" cannot split — stay colocated.
+    let disagg = cfg.disaggregate && n >= 2;
+    let (arrival_set, decode_set): (Vec<usize>, Vec<usize>) = if disagg
+    {
+        let pn = (n / 2).max(1);
+        ((0..pn).collect(), (pn..n).collect())
+    } else {
+        ((0..n).collect(), Vec::new())
+    };
+    if disagg {
+        for &i in &arrival_set {
+            workers[i].set_role(SimRole::Prefill);
+        }
+        for &i in &decode_set {
+            workers[i].set_role(SimRole::Decode);
+        }
+    }
     let mut routed = vec![0usize; n];
     let mut dropped_unroutable = 0usize;
     let requests: Vec<SimRequest> = generate_workload(&cfg.base);
@@ -215,7 +268,8 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
             }
             let req = &requests[next];
             next += 1;
-            let pick = route_one(&workers, policy, &req.tokens, cursor);
+            let pick = route_one(&workers, policy, &req.tokens, cursor,
+                                 &arrival_set);
             cursor += 1;
             match pick {
                 Some(i) => {
@@ -262,8 +316,12 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
                         else {
                             continue;
                         };
+                        // Orphans restart from their prompt, so they
+                        // re-route over the arrival set (a decode
+                        // worker must never run prefill compute).
                         let pick = route_one(&workers, policy,
-                                             &req.tokens, cursor);
+                                             &req.tokens, cursor,
+                                             &arrival_set);
                         cursor += 1;
                         match pick {
                             Some(i) => {
@@ -286,8 +344,38 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
                 w.tick();
             }
         }
+        // ---- ship finished prefills to decode workers --------------
+        // Each handoff carries the KV's token history over the priced
+        // inter-replica link; the receiving worker pays the transfer
+        // on its clock at admission.
+        if disagg {
+            for pi in 0..n {
+                if workers[pi].role() != SimRole::Prefill {
+                    continue;
+                }
+                let handoffs = workers[pi].take_handoffs();
+                for h in handoffs {
+                    let pick = route_one(&workers, policy, &h.tokens,
+                                         cursor, &decode_set);
+                    cursor += 1;
+                    match pick {
+                        Some(i) => {
+                            if let Some(led) = ledger {
+                                led.routed(h.id, i as u32,
+                                           workers[i].now());
+                            }
+                            routed[i] += 1;
+                            workers[i].deliver_handoff(h);
+                        }
+                        None => dropped_unroutable += 1,
+                    }
+                }
+            }
+        }
     }
 
+    let roles: Vec<SimRole> =
+        workers.iter().map(|w| w.role()).collect();
     let per_worker: Vec<ReplayResult> = workers
         .into_iter()
         .map(|w| w.into_result("routed"))
@@ -303,6 +391,8 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
     let mut dropped = dropped_unroutable;
     let mut sim_time = 0.0f64;
     let mut ticks = 0u64;
+    let mut transfer_time = 0.0f64;
+    let mut transfer_bytes = 0u64;
     for r in &per_worker {
         for &v in r.ttft.samples() {
             ttft.record(v);
@@ -317,6 +407,8 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         dropped += r.dropped;
         sim_time = sim_time.max(r.sim_time);
         ticks += r.ticks;
+        transfer_time += r.transfer_time;
+        transfer_bytes += r.transfer_bytes;
     }
     RoutingReplayResult {
         policy,
@@ -331,6 +423,9 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         sim_time,
         ticks,
         outputs,
+        roles,
+        transfer_time,
+        transfer_bytes,
     }
 }
 
@@ -342,6 +437,76 @@ pub fn compare_policies(cfg: &RoutingReplayConfig)
         .iter()
         .map(|&p| routing_replay(cfg, p))
         .collect()
+}
+
+/// A/B the same workload colocated vs. disaggregated at equal replica
+/// count under one policy (the `mmserve kv --disaggregate` engine).
+/// Returns `(colocated, disaggregated)`.
+pub fn compare_disaggregation(cfg: &RoutingReplayConfig,
+                              policy: RoutingPolicy)
+                              -> (RoutingReplayResult,
+                                  RoutingReplayResult) {
+    let colo = routing_replay(
+        &RoutingReplayConfig { disaggregate: false, ..cfg.clone() },
+        policy,
+    );
+    let disagg = routing_replay(
+        &RoutingReplayConfig { disaggregate: true, ..cfg.clone() },
+        policy,
+    );
+    (colo, disagg)
+}
+
+/// Colocated vs. disaggregated table: TTFT (which now explicitly
+/// prices the KV handoff), decode-side TBT (every TBT sample in a
+/// disaggregated fleet comes from a decode worker), and the fabric's
+/// link traffic.
+pub fn render_disagg_comparison(colo: &RoutingReplayResult,
+                                disagg: &RoutingReplayResult)
+                                -> String {
+    let prefill_n = disagg
+        .roles
+        .iter()
+        .filter(|&&r| r == SimRole::Prefill)
+        .count();
+    let mut t =
+        Table::new(&["metric", "colocated", "disaggregated"]);
+    let f2 = |x: f64| format!("{x:.2}");
+    t.row(&["fleet split".into(),
+            format!("{} colocated", colo.replicas),
+            format!("{} prefill + {} decode", prefill_n,
+                    disagg.replicas - prefill_n)]);
+    t.row(&["p50 TTFT (sim)".into(),
+            f2(colo.ttft.percentile(50.0)),
+            f2(disagg.ttft.percentile(50.0))]);
+    t.row(&["p99 TTFT (sim)".into(),
+            f2(colo.ttft.percentile(99.0)),
+            f2(disagg.ttft.percentile(99.0))]);
+    t.row(&["mean TBT (decode, sim)".into(), f2(colo.tbt.mean()),
+            f2(disagg.tbt.mean())]);
+    t.row(&["p99 TBT (decode, sim)".into(),
+            f2(colo.tbt.percentile(99.0)),
+            f2(disagg.tbt.percentile(99.0))]);
+    t.row(&["fabric transfer (sim)".into(), f2(colo.transfer_time),
+            f2(disagg.transfer_time)]);
+    t.row(&["fabric bytes moved".into(),
+            colo.transfer_bytes.to_string(),
+            disagg.transfer_bytes.to_string()]);
+    t.row(&["link utilization".into(),
+            format!("{:.1}%", colo.link_utilization() * 100.0),
+            format!("{:.1}%", disagg.link_utilization() * 100.0)]);
+    t.row(&["swap / recompute decisions".into(),
+            format!("{}/{}", colo.fleet.swap_decisions,
+                    colo.fleet.recompute_decisions),
+            format!("{}/{}", disagg.fleet.swap_decisions,
+                    disagg.fleet.recompute_decisions)]);
+    t.row(&["preemptions".into(), colo.fleet.preemptions.to_string(),
+            disagg.fleet.preemptions.to_string()]);
+    t.row(&["requests completed".into(), colo.completed.to_string(),
+            disagg.completed.to_string()]);
+    t.row(&["fleet sim wall".into(), f2(colo.sim_time),
+            f2(disagg.sim_time)]);
+    t.render()
 }
 
 /// Policy comparison table: aggregate hit rate + simulated latency.
@@ -833,6 +998,126 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Long-prompt, shared-prefix mix at paper-scale fabric pricing —
+    /// the regime the disaggregation acceptance criterion names.
+    fn disagg_cfg() -> RoutingReplayConfig {
+        use crate::perfmodel::fabric::FabricSpec;
+        RoutingReplayConfig {
+            base: ReplayConfig {
+                requests: 48,
+                tenants: 2,
+                long_percent: 50,
+                long_prompt: (96, 200),
+                total_pages: 192,
+                batch_slots: 12,
+                fabric: Some(FabricSpec::paper(524_288.0)),
+                ..ReplayConfig::default()
+            },
+            replicas: 2,
+            ..RoutingReplayConfig::default()
+        }
+    }
+
+    /// Tentpole acceptance: on a long-prompt shared-prefix workload,
+    /// splitting the same 2 replicas into 1 prefill + 1 decode worker
+    /// strictly improves decode-worker TBT p99 over colocated —
+    /// prefill compute never lands on the decode clock — while the
+    /// KV handoff is explicitly priced (non-zero fleet transfer) and
+    /// the decoded streams are bit-identical.
+    #[test]
+    fn disaggregation_improves_decode_tbt_tail_at_equal_replicas() {
+        let cfg = disagg_cfg();
+        let (colo, disagg) =
+            compare_disaggregation(&cfg, RoutingPolicy::LeastLoaded);
+        let n = cfg.base.requests;
+        assert_eq!(colo.completed, n, "{colo:?}");
+        assert_eq!(disagg.completed, n, "{disagg:?}");
+        assert_eq!(colo.dropped + disagg.dropped, 0);
+        assert_eq!(disagg.outputs, colo.outputs,
+                   "disaggregation moves KV, never tokens");
+        assert_eq!(disagg.roles,
+                   vec![SimRole::Prefill, SimRole::Decode]);
+        assert!(colo.roles.iter().all(|&r| r == SimRole::Colocated));
+        // The split is real: the decode worker ran zero prefill
+        // compute and the prefill worker decoded nothing.
+        assert_eq!(disagg.per_worker[1].max_tick_prefill_tokens, 0);
+        assert_eq!(disagg.per_worker[0].completed, 0);
+        // Acceptance: decode-side TBT p99 improves at equal replicas.
+        assert!(
+            disagg.tbt.percentile(99.0) < colo.tbt.percentile(99.0),
+            "disaggregated p99 TBT {:.2} !< colocated {:.2}",
+            disagg.tbt.percentile(99.0),
+            colo.tbt.percentile(99.0)
+        );
+        // The handoff cost is real: priced, non-zero link traffic.
+        assert!(disagg.transfer_bytes > 0);
+        assert!(disagg.transfer_time > 0.0);
+        assert!(disagg.link_utilization() > 0.0);
+        // One TTFT sample per request, measured across the whole
+        // queue + prefill + handoff + admission path.
+        assert_eq!(disagg.ttft.len(), n);
+        let table = render_disagg_comparison(&colo, &disagg);
+        assert!(table.contains("link utilization"));
+        assert!(table.contains("p99 TBT (decode, sim)"));
+        assert!(table.contains("1 prefill + 1 decode"));
+    }
+
+    #[test]
+    fn disaggregated_replay_is_deterministic_and_needs_two_replicas() {
+        let cfg = RoutingReplayConfig {
+            disaggregate: true,
+            ..disagg_cfg()
+        };
+        let a = routing_replay(&cfg, RoutingPolicy::LeastLoaded);
+        let b = routing_replay(&cfg, RoutingPolicy::LeastLoaded);
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.sim_time, b.sim_time);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.transfer_bytes, b.transfer_bytes);
+        // A 1-replica fleet cannot split: the flag is inert and the
+        // run stays a plain colocated replay.
+        let one = routing_replay(
+            &RoutingReplayConfig { replicas: 1, ..cfg.clone() },
+            RoutingPolicy::LeastLoaded,
+        );
+        assert!(one.roles.iter().all(|&r| r == SimRole::Colocated));
+        assert_eq!(one.completed, cfg.base.requests);
+    }
+
+    /// Tentpole acceptance (ledger form): every disaggregated request
+    /// carries a non-zero, byte-sized `transfer` phase in its causal
+    /// chain, and the ledger's per-request transfer bytes reconcile
+    /// exactly with the fleet total.
+    #[test]
+    fn disaggregated_ledger_records_priced_transfers() {
+        let cfg = RoutingReplayConfig {
+            disaggregate: true,
+            ..disagg_cfg()
+        };
+        let ledger = RequestLedger::new();
+        let r = routing_replay_instrumented(
+            &cfg, RoutingPolicy::LeastLoaded, &LiveMetrics::off(),
+            &FlightRecorder::disabled(), &ledger);
+        assert_eq!(r.completed, cfg.base.requests);
+        let snap = ledger.snapshot();
+        let mut bytes = 0u64;
+        let mut with_transfer = 0usize;
+        for rec in &snap.requests {
+            bytes += rec.transfer_bytes;
+            if rec.transfer_bytes > 0 {
+                with_transfer += 1;
+                assert!(rec.transfer_time > 0.0, "req {}", rec.id);
+                assert!(rec.events.iter()
+                            .any(|e| e.ev.label() == "transfer"),
+                        "req {} chain has the transfer phase", rec.id);
+            }
+        }
+        assert_eq!(with_transfer, cfg.base.requests,
+                   "every handoff is priced in the ledger");
+        assert_eq!(bytes, r.transfer_bytes,
+                   "ledger bytes reconcile with the fleet total");
     }
 
     #[test]

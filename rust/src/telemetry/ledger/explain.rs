@@ -30,6 +30,9 @@ pub enum SlowCause {
     Preemption,
     /// Page allocations spilled off the home shard.
     ShardSpill,
+    /// KV moved over the priced fabric (swap round trips, the
+    /// disaggregated prefill→decode handoff).
+    Transfer,
     /// Batch-interference idle: scheduled, but waiting behind
     /// co-batched work inside ticks.
     Sync,
@@ -42,6 +45,7 @@ impl SlowCause {
             SlowCause::KvCapacity => "kv-capacity",
             SlowCause::Preemption => "preemption",
             SlowCause::ShardSpill => "shard-spill",
+            SlowCause::Transfer => "transfer",
             SlowCause::Sync => "sync",
         }
     }
@@ -60,6 +64,7 @@ pub struct ExplainRow {
     pub capacity: f64,
     pub preempt: f64,
     pub spill: f64,
+    pub transfer: f64,
     pub sync: f64,
     pub dominant: SlowCause,
 }
@@ -71,13 +76,21 @@ pub fn explain_request(rec: &RequestRecord) -> Option<ExplainRow> {
     let queue = rec.queue_time;
     let capacity = rec.capacity_wait_time;
     let preempt = rec.preempted_time;
-    let spill = rec.spills as f64 * SPILL_COST;
+    // Fabric-priced spills are sized by the actual bytes gathered
+    // over NVLink; unpriced runs keep the flat per-spill weight.
+    let spill = if rec.spill_cost > 0.0 {
+        rec.spill_cost
+    } else {
+        rec.spills as f64 * SPILL_COST
+    };
+    let transfer = rec.transfer_time;
     let sync = rec.interference_idle;
     let causes = [
         (SlowCause::Queueing, queue),
         (SlowCause::KvCapacity, capacity),
         (SlowCause::Preemption, preempt),
         (SlowCause::ShardSpill, spill),
+        (SlowCause::Transfer, transfer),
         (SlowCause::Sync, sync),
     ];
     // First-wins on ties, so the ordering above is the tiebreak
@@ -98,6 +111,7 @@ pub fn explain_request(rec: &RequestRecord) -> Option<ExplainRow> {
         capacity,
         preempt,
         spill,
+        transfer,
         sync,
         dominant: dominant.0,
     })
@@ -161,7 +175,8 @@ pub fn render_rows(title: &str, rows: &[ExplainRow]) -> String {
     let mut out = format!("-- {title} ({} requests) --\n", rows.len());
     let mut table = Table::new(&[
         "req", "tenant", "replica", "latency", "ttft", "queue",
-        "kv-capacity", "preempt", "spill", "sync", "dominant",
+        "kv-capacity", "preempt", "spill", "transfer", "sync",
+        "dominant",
     ]);
     for r in rows {
         table.row(&[
@@ -174,6 +189,7 @@ pub fn render_rows(title: &str, rows: &[ExplainRow]) -> String {
             format!("{:.2}", r.capacity),
             format!("{:.2}", r.preempt),
             format!("{:.2}", r.spill),
+            format!("{:.2}", r.transfer),
             format!("{:.2}", r.sync),
             r.dominant.as_str().to_string(),
         ]);
@@ -253,6 +269,7 @@ pub fn render_request(
         ("queueing", rec.queue_time),
         ("kv-capacity wait", rec.capacity_wait_time),
         ("preempted", rec.preempted_time),
+        ("fabric transfer", rec.transfer_time),
         ("sync (interference)", rec.interference_idle),
         ("prefill compute", rec.prefill_compute),
         ("decode compute", rec.decode_compute),
@@ -385,7 +402,7 @@ mod tests {
         led.enqueued(9, 0, "-", 4, 0.0);
         led.admitted(9, 4, 0.1);
         for _ in 0..40 {
-            led.spill(9, 0.2);
+            led.spill(9, 0.0, 0.2);
         }
         led.first_token(9, 0.5);
         led.decoded(9, 0.5, 0.4, 0.4);
@@ -394,6 +411,49 @@ mod tests {
         let row = explain_request(snap.get(9).unwrap()).unwrap();
         assert_eq!(row.dominant, SlowCause::ShardSpill);
         assert!((row.spill - 40.0 * SPILL_COST).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priced_spills_are_sized_by_modeled_bytes() {
+        // The same spill count with a fabric-priced cost: the band is
+        // the priced NVLink gather time, not count × flat weight.
+        let led = RequestLedger::new();
+        led.enqueued(9, 0, "-", 4, 0.0);
+        led.admitted(9, 4, 0.1);
+        for _ in 0..4 {
+            led.spill(9, 0.02, 0.2);
+        }
+        led.first_token(9, 0.5);
+        led.decoded(9, 0.5, 0.4, 0.4);
+        led.completed(9, 0.6);
+        let snap = led.snapshot();
+        let row = explain_request(snap.get(9).unwrap()).unwrap();
+        assert!((row.spill - 0.08).abs() < 1e-9,
+                "priced band, not {} × SPILL_COST: {}",
+                4, row.spill);
+    }
+
+    #[test]
+    fn transfer_band_can_dominate_the_tail() {
+        // A disaggregated handoff (or heavy swap traffic) shows up as
+        // its own named cause in the decomposition.
+        let led = RequestLedger::new();
+        led.enqueued(11, 0, "-", 150, 0.0);
+        led.admitted(11, 150, 0.1);
+        led.transfer(11, 78_643_200, 6.3, 0.2);
+        led.first_token(11, 6.6);
+        led.decoded(11, 6.6, 0.5, 0.4);
+        led.completed(11, 7.1);
+        let snap = led.snapshot();
+        let rec = snap.get(11).unwrap();
+        let row = explain_request(rec).unwrap();
+        assert_eq!(row.dominant, SlowCause::Transfer);
+        assert!((row.transfer - 6.3).abs() < 1e-9);
+        let table = render_rows("tail p0", &tail_rows(&snap, 0.0));
+        assert!(table.contains("transfer"));
+        let one = render_request(rec, None);
+        assert!(one.contains("fabric transfer"));
+        assert!(one.contains("dominant slow-cause: transfer"));
     }
 
     #[test]

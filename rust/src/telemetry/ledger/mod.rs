@@ -61,6 +61,10 @@ pub enum LedgerEvent {
     Resumed,
     /// A page allocation spilled off the request's home shard.
     Spill,
+    /// The request's KV moved over the priced transfer fabric (a swap
+    /// direction over the host link, or a disaggregated prefill→decode
+    /// handoff over the inter-replica link).
+    Transfer { bytes: u64 },
     /// All tokens decoded; slot released.
     Completed { decoded: u64 },
 }
@@ -77,6 +81,7 @@ impl LedgerEvent {
             LedgerEvent::Preempted => "preempted",
             LedgerEvent::Resumed => "resumed",
             LedgerEvent::Spill => "shard-spill",
+            LedgerEvent::Transfer { .. } => "transfer",
             LedgerEvent::Completed { .. } => "completed",
         }
     }
@@ -118,6 +123,17 @@ pub struct RequestRecord {
     pub prefilled_tokens: usize,
     pub preemptions: u64,
     pub spills: u64,
+    /// Modeled cost of this request's cross-shard spills when a priced
+    /// fabric sized them by actual bytes over NVLink (0.0 unpriced —
+    /// the explainer falls back to its flat per-spill constant).
+    pub spill_cost: f64,
+    /// Modeled time the request's KV spent moving over the transfer
+    /// fabric (swap round trips, disaggregated handoffs). A swap
+    /// converts what would be `preempted_time` + re-prefill compute
+    /// into this bucket.
+    pub transfer_time: f64,
+    /// Bytes of this request's KV moved over the fabric.
+    pub transfer_bytes: u64,
     pub queue_time: f64,
     pub capacity_wait_time: f64,
     pub preempted_time: f64,
@@ -178,6 +194,10 @@ impl RequestRecord {
                             "tokens".to_string(),
                             Json::Num(tokens as f64),
                         )),
+                    LedgerEvent::Transfer { bytes } => fields.push((
+                        "bytes".to_string(),
+                        Json::Num(bytes as f64),
+                    )),
                     LedgerEvent::Completed { decoded } => fields.push((
                         "decoded".to_string(),
                         Json::Num(decoded as f64),
@@ -206,6 +226,11 @@ impl RequestRecord {
             ("preemptions".to_string(),
              Json::Num(self.preemptions as f64)),
             ("spills".to_string(), Json::Num(self.spills as f64)),
+            ("spill_cost".to_string(), Json::Num(self.spill_cost)),
+            ("transfer_time".to_string(),
+             Json::Num(self.transfer_time)),
+            ("transfer_bytes".to_string(),
+             Json::Num(self.transfer_bytes as f64)),
             ("queue_time".to_string(), Json::Num(self.queue_time)),
             ("capacity_wait_time".to_string(),
              Json::Num(self.capacity_wait_time)),
@@ -398,12 +423,33 @@ impl RequestLedger {
         });
     }
 
-    /// A page allocation spilled off the request's home shard.
-    pub fn spill(&self, id: u64, now: f64) {
+    /// A page allocation spilled off the request's home shard. `cost`
+    /// is the fabric-priced NVLink gather for the spilled page (0.0
+    /// when no fabric prices it — the explainer then weighs the spill
+    /// with its flat per-spill constant).
+    pub fn spill(&self, id: u64, cost: f64, now: f64) {
         self.with_record(id, |rec| {
             rec.spills += 1;
+            rec.spill_cost += cost;
             rec.events
                 .push(TimedEvent { t: now, ev: LedgerEvent::Spill });
+        });
+    }
+
+    /// The request's KV moved `bytes` over the priced fabric at
+    /// modeled cost `cost` (one swap direction or one disaggregated
+    /// handoff — a swap round trip is two calls). Deliberately does
+    /// not close an open preemption: a swapped victim is parked in a
+    /// host buffer, not re-prefilled, and its cost lives here instead
+    /// of in `preempted_time`.
+    pub fn transfer(&self, id: u64, bytes: u64, cost: f64, now: f64) {
+        self.with_record(id, |rec| {
+            rec.transfer_time += cost;
+            rec.transfer_bytes += bytes;
+            rec.events.push(TimedEvent {
+                t: now,
+                ev: LedgerEvent::Transfer { bytes },
+            });
         });
     }
 
@@ -635,6 +681,30 @@ mod tests {
         }
         let one = Json::parse(jsonl.lines().next().unwrap()).unwrap();
         assert_eq!(one.get("latency").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn transfer_accumulates_bytes_and_cost() {
+        let led = RequestLedger::new();
+        led.enqueued(3, 0, "-", 4, 0.0);
+        // A swap round trip: out at t=1, back in at t=2.
+        led.transfer(3, 1024, 0.25, 1.0);
+        led.transfer(3, 1024, 0.25, 2.0);
+        let snap = led.snapshot();
+        let rec = snap.get(3).unwrap();
+        assert_eq!(rec.transfer_bytes, 2048);
+        assert!((rec.transfer_time - 0.5).abs() < 1e-9);
+        let labels: Vec<&str> =
+            rec.events.iter().map(|e| e.ev.label()).collect();
+        assert_eq!(labels, vec!["enqueued", "transfer", "transfer"]);
+        let doc = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("transfer_bytes").and_then(Json::as_f64),
+                   Some(2048.0));
+        assert_eq!(doc.get("transfer_time").and_then(Json::as_f64),
+                   Some(0.5));
+        let evs = doc.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs[1].get("bytes").and_then(Json::as_f64),
+                   Some(1024.0));
     }
 
     #[test]

@@ -10,10 +10,22 @@
 //!   references, and never leave a table pointing at a freed
 //!   `(device, page)`,
 //! * chunked-prefill exhaustion (`KvPool::extend`) is a structured
-//!   error that rewinds the position — requeueable, never a panic.
+//!   error that rewinds the position — requeueable, never a panic,
+//! * a zero-cost fabric with disaggregation off is bit-identical to
+//!   running without a fabric at all (outputs, routing order,
+//!   `PoolStats` counters, sim clock) — the priced-fabric lever is
+//!   purely additive,
+//! * host swap buffers conserve bytes: everything reserved by a
+//!   swap-out is released by resume, discard, end-of-run drain, or a
+//!   replica crash (`KillSpec`) — no leaked buffers.
 
+use mmserve::kvpool::replay::{replay, ReplayConfig};
 use mmserve::kvpool::{BlockPool, KvError, KvPool, PageState,
                       PreemptMode, ShardedBlockPool};
+use mmserve::perfmodel::fabric::FabricSpec;
+use mmserve::routing::replay::{routing_replay, KillSpec,
+                               RoutingReplayConfig};
+use mmserve::routing::RoutingPolicy;
 use mmserve::substrate::prop::prop_check;
 use mmserve::substrate::rng::Rng;
 
@@ -410,6 +422,187 @@ fn prop_extend_exhaustion_is_structured_and_recoverable() {
             pool.check_invariants()?;
             let mut small = KvPool::with_shards(pages, 4, 64, shards);
             small.alloc(2, &[9, 9, 9]).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+/// Bisimulation guard for the priced-fabric lever: a zero-cost fabric
+/// with `disaggregate` off must be bit-identical to today's behavior —
+/// same token outputs, same routing order, same `PoolStats` counters,
+/// same simulated clock — on both the single-worker and the fleet
+/// replay, across random workload/pool/shard/replica shapes.
+#[test]
+fn prop_zero_cost_fabric_and_disaggregate_off_bisimulate_legacy() {
+    prop_check(
+        64,
+        0xfab0,
+        |r: &mut Rng| {
+            vec![
+                r.usize(4, 33),     // requests
+                r.usize(16, 65),    // page budget
+                r.usize(2, 13),     // batch slots
+                r.usize(0, 3),      // page-size selector
+                r.usize(0, 2),      // chunked admission?
+                r.usize(0, 2),      // shards selector
+                r.usize(1, 4),      // replicas
+                r.usize(0, 10_000), // workload seed
+            ]
+        },
+        |knobs| {
+            if knobs.len() < 8 {
+                return Ok(()); // shrink artifacts
+            }
+            let base = ReplayConfig {
+                requests: knobs[0].clamp(1, 32),
+                total_pages: knobs[1].clamp(8, 64),
+                batch_slots: knobs[2].clamp(1, 12),
+                page_size: [4, 8, 16][knobs[3] % 3],
+                chunk_prefill: if knobs[4] % 2 == 1 { 8 } else { 0 },
+                shards: (knobs[5] % 2) + 1,
+                seed: knobs[7] as u64,
+                ..ReplayConfig::default()
+            };
+            let zeroed = ReplayConfig {
+                fabric: Some(FabricSpec::zero_cost()),
+                ..base.clone()
+            };
+            let legacy = replay(&base, true);
+            let zero = replay(&zeroed, true);
+            if zero.outputs != legacy.outputs {
+                return Err("single-worker outputs diverged".into());
+            }
+            if zero.sim_time != legacy.sim_time {
+                return Err(format!(
+                    "sim clock diverged: {} vs {}",
+                    zero.sim_time, legacy.sim_time
+                ));
+            }
+            if zero.stats != legacy.stats {
+                return Err(format!(
+                    "PoolStats diverged:\n  zero:   {:?}\n  legacy: {:?}",
+                    zero.stats, legacy.stats
+                ));
+            }
+            if zero.transfer_bytes != 0 || zero.transfer_time != 0.0 {
+                return Err(format!(
+                    "zero-cost fabric moved priced bytes: {} / {}",
+                    zero.transfer_bytes, zero.transfer_time
+                ));
+            }
+            // Fleet plane: same guard over replicas + routing.
+            let replicas = knobs[6].clamp(1, 3);
+            let fleet_legacy = routing_replay(
+                &RoutingReplayConfig {
+                    base: base.clone(),
+                    replicas,
+                    ..RoutingReplayConfig::default()
+                },
+                RoutingPolicy::PrefixAffinity,
+            );
+            let fleet_zero = routing_replay(
+                &RoutingReplayConfig {
+                    base: zeroed,
+                    replicas,
+                    ..RoutingReplayConfig::default()
+                },
+                RoutingPolicy::PrefixAffinity,
+            );
+            if fleet_zero.outputs != fleet_legacy.outputs {
+                return Err("fleet outputs diverged".into());
+            }
+            if fleet_zero.routed != fleet_legacy.routed {
+                return Err(format!(
+                    "routing order diverged: {:?} vs {:?}",
+                    fleet_zero.routed, fleet_legacy.routed
+                ));
+            }
+            if fleet_zero.sim_time != fleet_legacy.sim_time {
+                return Err("fleet sim clock diverged".into());
+            }
+            if fleet_zero.fleet != fleet_legacy.fleet {
+                return Err(format!(
+                    "fleet PoolStats diverged:\n  zero:   {:?}\n  \
+                     legacy: {:?}",
+                    fleet_zero.fleet, fleet_legacy.fleet
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Host-buffer conservation: with a paper-priced fabric forcing real
+/// swap decisions, every byte reserved in the host swap pool is
+/// released again — by swap-in resume, discard, the end-of-run drain,
+/// or a mid-run replica crash (`KillSpec`) that kills a worker while
+/// it holds swapped requests.
+#[test]
+fn prop_host_buffer_bytes_conserve_across_swap_and_failover() {
+    prop_check(
+        48,
+        0xb0f5,
+        |r: &mut Rng| {
+            vec![
+                r.usize(8, 25),     // requests
+                r.usize(24, 49),    // page budget (tight: forces preempt)
+                r.usize(6, 13),     // batch slots
+                r.usize(0, 10_000), // workload seed
+                r.usize(2, 4),      // replicas
+                r.usize(0, 2),      // crash a replica?
+                r.usize(1, 12),     // kill placement
+            ]
+        },
+        |knobs| {
+            if knobs.len() < 7 {
+                return Ok(()); // shrink artifacts
+            }
+            let base = ReplayConfig {
+                requests: knobs[0].clamp(4, 24),
+                total_pages: knobs[1].clamp(16, 48),
+                batch_slots: knobs[2].clamp(4, 12),
+                long_percent: 50,
+                seed: knobs[3] as u64,
+                fabric: Some(FabricSpec::paper(524_288.0)),
+                ..ReplayConfig::default()
+            };
+            let one = replay(&base, true);
+            if one.stats.host_bytes_reserved
+                != one.stats.host_bytes_released
+            {
+                return Err(format!(
+                    "single-worker leak: reserved {} != released {} \
+                     ({} swap / {} recompute decisions)",
+                    one.stats.host_bytes_reserved,
+                    one.stats.host_bytes_released,
+                    one.stats.swap_decisions,
+                    one.stats.recompute_decisions
+                ));
+            }
+            let replicas = knobs[4].clamp(2, 3);
+            let kill = (knobs[5] % 2 == 1).then(|| KillSpec {
+                replica: knobs[6] % replicas,
+                after_delivered: 1 + knobs[6] % base.requests,
+            });
+            let fleet = routing_replay(
+                &RoutingReplayConfig {
+                    base,
+                    replicas,
+                    kill,
+                    ..RoutingReplayConfig::default()
+                },
+                RoutingPolicy::LeastLoaded,
+            );
+            if fleet.fleet.host_bytes_reserved
+                != fleet.fleet.host_bytes_released
+            {
+                return Err(format!(
+                    "fleet leak (kill {kill:?}): reserved {} != \
+                     released {}",
+                    fleet.fleet.host_bytes_reserved,
+                    fleet.fleet.host_bytes_released
+                ));
+            }
             Ok(())
         },
     );
