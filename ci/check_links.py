@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only) for the docs gate.
+
+Usage: check_links.py PATH [PATH ...]
+
+Each PATH is a markdown file or a directory (searched recursively for
+*.md). For every inline link or image ``[text](target)``:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+* relative targets must exist on disk, resolved against the file;
+* ``#fragment`` parts (including fragment-only links) must match a
+  GitHub-style heading anchor in the target markdown file.
+
+Exit code 1 with one line per broken link; 0 when everything resolves.
+"""
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def strip_fences(text):
+    """Drop fenced code blocks so diagrams never look like links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def github_slug(heading):
+    """GitHub's heading → anchor rule: lowercase, drop punctuation,
+    spaces become hyphens (backticks contribute their text)."""
+    h = heading.strip().lower()
+    h = re.sub(r"`([^`]*)`", r"\1", h)
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # linked headings
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path, cache={}):
+    if path not in cache:
+        try:
+            text = path.read_text(encoding="utf-8")
+        except OSError:
+            cache[path] = set()
+        else:
+            cache[path] = {
+                github_slug(m.group(1))
+                for m in (
+                    HEADING_RE.match(line)
+                    for line in strip_fences(text).splitlines()
+                )
+                if m
+            }
+    return cache[path]
+
+
+def check_file(md, errors):
+    text = strip_fences(md.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if path_part and not dest.exists():
+            errors.append(f"{md}: broken link -> {target}")
+            continue
+        if fragment:
+            if dest.suffix != ".md" or dest.is_dir():
+                continue  # anchors into non-markdown: out of scope
+            if fragment not in anchors_of(dest):
+                errors.append(f"{md}: missing anchor -> {target}")
+
+
+def main(argv):
+    if not argv:
+        print(__doc__.strip())
+        return 2
+    files = []
+    for arg in argv:
+        p = Path(arg)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path: {arg}")
+            return 2
+    errors = []
+    for md in files:
+        check_file(md, errors)
+    for e in errors:
+        print(e)
+    print(
+        f"check_links: {len(files)} file(s), "
+        f"{len(errors)} broken link(s)"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

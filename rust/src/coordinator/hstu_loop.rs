@@ -1,14 +1,21 @@
 //! HSTU (gDLRM) inference — non-autoregressive (Obs #1): one forward
 //! pass scores the whole user history and produces ranking + retrieval
 //! outputs.
+//!
+//! On the unified serving core the one-shot pass is a *prefill-only*
+//! plan: [`HstuExecutor`] implements
+//! [`StepExecutor`](crate::sched::StepExecutor) with the whole forward
+//! inside `prefill_chunk` and a `decode_step` that refuses to run —
+//! `sched::generate` with `max_new == 0` schedules it as zero decode
+//! ticks. Timing flows through [`timed`] telemetry spans so the pass
+//! appears in `mmserve trace` with idle attribution.
 
-use std::time::Instant;
-
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::engine::{Arg, Engine};
 use crate::runtime::tensor::Tensor;
-use crate::telemetry::tracer::Cat;
+use crate::sched::{ExecDims, SlotFeed, StepExecutor};
+use crate::telemetry::tracer::{timed, Cat};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HstuAttn {
@@ -86,11 +93,15 @@ impl<'e> HstuRunner<'e> {
         Ok((s, b))
     }
 
-    /// Run one batch of user histories. Each history is right-padded to
-    /// the bucket; `tail` engagement predictions are returned per user.
-    pub fn run_batch(&self, histories: &[Vec<i32>], tail: usize,
-                     top_k: usize) -> Result<Vec<HstuResult>> {
-        let t0 = Instant::now();
+    /// Largest lowered sequence bucket (the scheduler's `max_seq`).
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.last().copied().unwrap_or(1)
+    }
+
+    /// Pack + forward + download, with the pass timed by a telemetry
+    /// span. Returns (rank logits, retrieval logits, bucket seq).
+    fn forward(&self, histories: &[Vec<i32>])
+               -> Result<(Vec<f32>, Vec<f32>, usize)> {
         let tele = self.engine.tracer();
         let maxlen = histories.iter().map(|h| h.len()).max().unwrap_or(1);
         let (s, b) = self.pick_shape(maxlen, histories.len())?;
@@ -111,7 +122,18 @@ impl<'e> HstuRunner<'e> {
             .run(&stage, &[Arg::Host(&t_ids), Arg::Host(&t_len)])?;
         let rank = self.engine.download(&outs[0])?.as_f32()?;
         let retr = self.engine.download(&outs[1])?.as_f32()?;
-        let e2e = t0.elapsed().as_secs_f64();
+        Ok((rank, retr, s))
+    }
+
+    /// Run one batch of user histories. Each history is right-padded to
+    /// the bucket; `tail` engagement predictions are returned per user.
+    pub fn run_batch(&self, histories: &[Vec<i32>], tail: usize,
+                     top_k: usize) -> Result<Vec<HstuResult>> {
+        let tele = self.engine.tracer();
+        let (fwd, e2e) = timed(tele, Cat::Other, "hstu_forward", || {
+            self.forward(histories)
+        });
+        let (rank, retr, s) = fwd?;
 
         let _rank_span = tele.map(|t| t.span(Cat::Sample, "rank_retrieve"));
         let mut results = Vec::with_capacity(histories.len());
@@ -132,5 +154,67 @@ impl<'e> HstuRunner<'e> {
             results.push(HstuResult { engagement, top_items, e2e });
         }
         Ok(results)
+    }
+}
+
+/// The HSTU one-shot scoring pass as a [`StepExecutor`].
+///
+/// The whole request is its prompt (Obs #1): `prefill_chunk` runs the
+/// full forward and `decode_step` refuses to run, so
+/// `sched::generate` with `max_new == 0` schedules the request as a
+/// prefill-only plan with zero decode ticks. The ranking/retrieval
+/// outputs land in `last`; the returned "logits" are a one-hot over
+/// the retrieval vocabulary peaked at the top item, so a greedy
+/// sampler recovers the retrieval argmax if a driver ever asks for a
+/// token.
+pub struct HstuExecutor<'e> {
+    runner: &'e HstuRunner<'e>,
+    tail: usize,
+    top_k: usize,
+    /// Outputs of the most recent one-shot pass.
+    pub last: Option<HstuResult>,
+}
+
+impl<'e> HstuExecutor<'e> {
+    pub fn new(runner: &'e HstuRunner<'e>, tail: usize, top_k: usize)
+               -> Self {
+        HstuExecutor { runner, tail, top_k, last: None }
+    }
+}
+
+impl StepExecutor for HstuExecutor<'_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: 1,
+            // +1 so the longest bucketed history fits the block table.
+            max_seq: self.runner.max_bucket() + 1,
+            vocab: self.runner.item_vocab,
+        }
+    }
+
+    fn step_span_name(&self) -> &'static str {
+        "hstu_score"
+    }
+
+    fn prefill_chunk(&mut self, _slot: usize, tokens: &[i32],
+                     start: usize, is_last: bool)
+                     -> Result<Option<Vec<f32>>> {
+        if start != 0 || !is_last {
+            bail!("hstu scores the whole history in one pass");
+        }
+        let mut rs =
+            self.runner
+                .run_batch(&[tokens.to_vec()], self.tail, self.top_k)?;
+        let r = rs.pop().context("hstu result")?;
+        let mut logits = vec![0.0f32; self.runner.item_vocab];
+        if let Some(&top) = r.top_items.first() {
+            logits[top as usize] = 1.0;
+        }
+        self.last = Some(r);
+        Ok(Some(logits))
+    }
+
+    fn decode_step(&mut self, _feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        bail!("hstu is non-autoregressive: zero decode ticks")
     }
 }

@@ -402,6 +402,29 @@ impl PagedKvSlots {
         Ok(())
     }
 
+    /// Beam split at the pool layer only: `child` becomes a block-table
+    /// fork of `parent`'s pages (refcount bump, no KV copy, no graph
+    /// slot — hypotheses share the batch lane of their root request).
+    /// Errors `UnknownRequest` in dense mode, where there are no pages
+    /// to fork. Returns the shared page count.
+    pub fn fork(&mut self, parent: u64, child: u64)
+                -> Result<usize, KvError> {
+        match &mut self.pool {
+            Some(p) => p.fork(parent, child),
+            None => Err(KvError::UnknownRequest(parent)),
+        }
+    }
+
+    /// Prune a dead beam hypothesis: drop its page references without
+    /// publishing its blocks (see [`KvPool::release_discard`]). No-op
+    /// error in dense mode, mirroring [`PagedKvSlots::fork`].
+    pub fn release_discard(&mut self, request: u64) -> Result<(), KvError> {
+        match &mut self.pool {
+            Some(p) => p.release_discard(request),
+            None => Err(KvError::UnknownRequest(request)),
+        }
+    }
+
     /// Preempt the latest-admitted live sequence (paged mode only):
     /// frees its slot and pages, returns its slot and token history so
     /// the scheduler can requeue it for recompute / swap-in.
@@ -950,5 +973,26 @@ mod tests {
         assert!(dense.preempt_auto(None).is_none());
         assert!(!dense.has_swapped(1));
         assert_eq!(dense.drain_host_buffers(), 0);
+    }
+
+    /// Beam forks live at the pool layer: a hypothesis shares its
+    /// root's pages without claiming a graph slot, and pruning it
+    /// leaves the slot view untouched.
+    #[test]
+    fn fork_and_discard_are_pool_only() {
+        let mut kv = PagedKvSlots::paged(2, 64, small_cfg());
+        let (slot, _) = kv.alloc(1, &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(kv.fork(1, 100).unwrap(), 2, "shares both pages");
+        assert_eq!(kv.live_count(), 1, "no slot claimed");
+        assert_eq!(kv.pool().unwrap().live_seqs(), 2);
+        kv.release_discard(100).unwrap();
+        assert_eq!(kv.pool().unwrap().live_seqs(), 1);
+        assert_eq!(kv.pos(slot).unwrap(), 5, "root untouched");
+        kv.pool().unwrap().check_invariants().unwrap();
+        // Dense mode has no pages to fork.
+        let mut dense = PagedKvSlots::dense(1, 8);
+        dense.alloc(1, &[1, 2]).unwrap();
+        assert!(dense.fork(1, 2).is_err());
+        assert!(dense.release_discard(1).is_err());
     }
 }

@@ -23,6 +23,11 @@
 //!        ┌──────────┴──────────┬───────────────┬───────────────┐
 //!   BatchedExecutor      GraphExecutor    EagerExecutor  LayerSkipExecutor
 //!   (server, b=N graph)  (decoder_loop)   (eager)        (layerskip)
+//!        └─────────────────────┴───────┬───────┴───────────────┘
+//!                 SeamlessExecutor            HstuExecutor
+//!                 (seamless_pipe: beam        (hstu_loop: one-shot
+//!                 fork/prune via kvpool       scoring as a prefill-
+//!                 block tables, Obs #4)       only plan, Obs #1)
 //! ```
 //!
 //! Each replica owns its engine and KV pool and republishes its cache
@@ -31,11 +36,16 @@
 //! snapshots lock-free-ish on submit and walks the policy's preference
 //! order, failing over past dead replicas.
 //!
-//! All four text-generation paths implement `sched::StepExecutor`;
-//! their generate loops live once in the sched drivers. Chunked
-//! prefill (`RouterConfig::chunk_prefill`) is therefore a pure
-//! scheduler policy: long prompts split into budget-sized chunks
-//! interleaved with decode ticks, pages claimed chunk by chunk.
+//! Every generation path — the four text decoders plus Seamless beam
+//! search and the HSTU one-shot pass — implements
+//! `sched::StepExecutor`; their generate loops live once in the sched
+//! drivers (`generate`, `generate_beam`). Chunked prefill
+//! (`RouterConfig::chunk_prefill`) is therefore a pure scheduler
+//! policy: long prompts split into budget-sized chunks interleaved
+//! with decode ticks, pages claimed chunk by chunk. A single `Router`
+//! can hold replica sets for several families at once (a mixed fleet);
+//! `docs/ARCHITECTURE.md` walks the full request lifecycle including
+//! the mixed-fleet and beam-fork branches.
 //!
 //! * [`request`] — request/response/event types flowing through the stack.
 //! * [`sampling`] — greedy / top-k / top-p / temperature samplers.
@@ -55,9 +65,12 @@
 //!   regime of Obs #2) as an executor.
 //! * [`layerskip`] — self-speculative draft/verify stages (§4.3) as an
 //!   executor.
-//! * [`seamless_pipe`] — the four-module Seamless pipeline with beam
-//!   search and KV reorder (Obs #4).
-//! * [`hstu_loop`] — non-autoregressive HSTU ranking/retrieval.
+//! * [`seamless_pipe`] — the four-module Seamless pipeline; its text
+//!   decoder runs on the unified core as `SeamlessExecutor`, beam
+//!   reorder expressed as block-table fork/prune (Obs #4).
+//! * [`hstu_loop`] — non-autoregressive HSTU ranking/retrieval;
+//!   `HstuExecutor` schedules the one-shot pass as a prefill-only
+//!   plan with zero decode ticks (Obs #1).
 //! * [`autoquant`] — per-layer-shape quantization calibration (§4.2).
 //! * [`server`] — multi-model router with N replicated engine threads
 //!   per model family, prefix-cache-aware replica routing

@@ -11,17 +11,27 @@
 //!   step, exactly the pattern the paper calls out).
 //! * `ReorderMode::Fused` — the `torch.compile`d fix: a device-side
 //!   gather stage, buffers swapped in place.
-
-use std::time::Instant;
+//!
+//! The decoder half runs on the unified serving core: the AR text
+//! decoder is a [`SeamlessExecutor`] (a
+//! [`StepExecutor`](crate::sched::StepExecutor)) driven by
+//! [`generate_beam`] — each hypothesis is a kvpool block table, a beam
+//! reorder is fork + prune in pages, and the executor only performs
+//! the per-step device gather through its `reorder_slots` hook. All
+//! per-module timing flows through [`timed`] telemetry spans, so the
+//! pipeline appears in `mmserve trace` with idle attribution like
+//! every other path.
 
 use anyhow::{bail, Context, Result};
 use xla::PjRtBuffer;
 
 use crate::models::tokenizer::{SpeechFeaturizer, TextTokenizer, BOS, EOS};
-use crate::runtime::engine::{Arg, Engine};
+use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::{DType, Tensor};
+use crate::sched::{generate_beam, BeamConfig, ExecDims, SlotFeed,
+                   StepExecutor};
 use crate::substrate::metrics::OpTimes;
-use crate::telemetry::tracer::Cat;
+use crate::telemetry::tracer::{timed, Cat};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReorderMode {
@@ -136,10 +146,24 @@ impl<'e> SeamlessPipeline<'e> {
     }
 
     /// Run the full pipeline on a speech waveform or text input.
+    /// End-to-end time is measured by the wrapping telemetry span, so
+    /// the whole request shows up in `mmserve trace`.
     pub fn run(&self, task: SeamlessTask, speech: Option<&[f32]>,
                text: Option<&str>, max_text: usize) -> Result<PipelineResult> {
-        let t0 = Instant::now();
+        let tele = self.engine.tracer();
+        let (res, e2e) = timed(tele, Cat::Other, "seamless_pipeline", || {
+            self.run_inner(task, speech, text, max_text)
+        });
+        let mut r = res?;
+        r.e2e = e2e;
+        Ok(r)
+    }
+
+    fn run_inner(&self, task: SeamlessTask, speech: Option<&[f32]>,
+                 text: Option<&str>, max_text: usize)
+                 -> Result<PipelineResult> {
         let mut times = OpTimes::new();
+        let tele = self.engine.tracer();
 
         // ---- encoder ----------------------------------------------------
         let (enc_out, enc_len_buf, src_len) = if task.speech_in() {
@@ -148,18 +172,18 @@ impl<'e> SeamlessPipeline<'e> {
             let frames = (wav.len() / sf.frame).max(1);
             let bucket = self.enc_bucket(frames)?;
             let (feats, n) = {
-                let _t = self.engine.tracer()
-                    .map(|t| t.span(Cat::Tokenize, "featurize"));
+                let _t = tele.map(|t| t.span(Cat::Tokenize, "featurize"));
                 sf.featurize(wav, bucket)
             };
-            let t = Instant::now();
-            let stage = self.engine.stage(&format!("encoder_t{bucket}"))?;
-            let t_len = Tensor::from_i32(&[1], &[n as i32]);
-            let outs = self
-                .engine
-                .run(&stage, &[Arg::Host(&feats), Arg::Host(&t_len)])?;
-            times.add("SpeechEncoder", t.elapsed().as_secs_f64());
-            let mut it = outs.into_iter();
+            let (outs, secs) = timed(tele, Cat::Other, "SpeechEncoder", || {
+                let stage =
+                    self.engine.stage(&format!("encoder_t{bucket}"))?;
+                let t_len = Tensor::from_i32(&[1], &[n as i32]);
+                self.engine
+                    .run(&stage, &[Arg::Host(&feats), Arg::Host(&t_len)])
+            });
+            times.add("SpeechEncoder", secs);
+            let mut it = outs?.into_iter();
             (
                 it.next().context("enc_out")?,
                 it.next().context("enc_len")?,
@@ -169,8 +193,7 @@ impl<'e> SeamlessPipeline<'e> {
             let txt = text.context("text input required")?;
             let tk = TextTokenizer::new();
             let ids = {
-                let _t = self.engine.tracer()
-                    .map(|t| t.span(Cat::Tokenize, "tokenize"));
+                let _t = tele.map(|t| t.span(Cat::Tokenize, "tokenize"));
                 tk.encode(txt)
             };
             let mut buckets: Vec<usize> = self
@@ -189,16 +212,16 @@ impl<'e> SeamlessPipeline<'e> {
             let n = ids.len().min(bucket);
             let mut toks = vec![0i32; bucket];
             toks[..n].copy_from_slice(&ids[..n]);
-            let t = Instant::now();
-            let stage =
-                self.engine.stage(&format!("text_encoder_t{bucket}"))?;
-            let t_toks = Tensor::from_i32(&[1, bucket], &toks);
-            let t_len = Tensor::from_i32(&[1], &[n as i32]);
-            let outs = self
-                .engine
-                .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])?;
-            times.add("TextEncoder", t.elapsed().as_secs_f64());
-            let mut it = outs.into_iter();
+            let (outs, secs) = timed(tele, Cat::Other, "TextEncoder", || {
+                let stage =
+                    self.engine.stage(&format!("text_encoder_t{bucket}"))?;
+                let t_toks = Tensor::from_i32(&[1, bucket], &toks);
+                let t_len = Tensor::from_i32(&[1], &[n as i32]);
+                self.engine
+                    .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])
+            });
+            times.add("TextEncoder", secs);
+            let mut it = outs?.into_iter();
             (
                 it.next().context("enc_out")?,
                 it.next().context("enc_len")?,
@@ -207,17 +230,19 @@ impl<'e> SeamlessPipeline<'e> {
         };
 
         // ---- cross-KV (once per request) ---------------------------------
-        let t = Instant::now();
-        let ckv_stage = self.engine.stage(&format!("cross_kv_s{src_len}"))?;
-        let outs = self.engine.run(&ckv_stage, &[Arg::Dev(&enc_out)])?;
-        let mut it = outs.into_iter();
+        let (outs, secs) = timed(tele, Cat::Other, "CrossKV", || {
+            let ckv_stage =
+                self.engine.stage(&format!("cross_kv_s{src_len}"))?;
+            self.engine.run(&ckv_stage, &[Arg::Dev(&enc_out)])
+        });
+        times.add("CrossKV", secs);
+        let mut it = outs?.into_iter();
         let cross_k = it.next().context("cross_k")?;
         let cross_v = it.next().context("cross_v")?;
-        times.add("CrossKV", t.elapsed().as_secs_f64());
 
         // ---- beam-search text decoding ------------------------------------
         let (text_tokens, steps) = self.beam_decode(
-            src_len, &cross_k, &cross_v, &enc_len_buf, max_text, &mut times,
+            src_len, cross_k, cross_v, enc_len_buf, max_text, &mut times,
         )?;
         let tk = TextTokenizer::new();
         let text_out = tk.decode(&text_tokens);
@@ -238,148 +263,31 @@ impl<'e> SeamlessPipeline<'e> {
             waveform,
             decode_steps: steps,
             times,
-            e2e: t0.elapsed().as_secs_f64(),
+            e2e: 0.0, // overwritten by `run`'s wrapping span
         })
     }
 
-    /// Beam search over the AR text decoder.
-    fn beam_decode(&self, src_len: usize, cross_k: &PjRtBuffer,
-                   cross_v: &PjRtBuffer, enc_len: &PjRtBuffer,
+    /// Beam search over the AR text decoder, run by the generic
+    /// [`generate_beam`] driver: each hypothesis is a kvpool block
+    /// table (a reorder is fork + prune, no KV copy), and the
+    /// [`SeamlessExecutor`] below only performs the per-step device
+    /// gather through its `reorder_slots` hook.
+    fn beam_decode(&self, src_len: usize, cross_k: PjRtBuffer,
+                   cross_v: PjRtBuffer, enc_len: PjRtBuffer,
                    max_text: usize, times: &mut OpTimes)
                    -> Result<(Vec<i32>, usize)> {
-        let bm = self.dims.beam;
-        let dec_stage = self
-            .engine
-            .stage(&format!("dec_step_b{bm}_s{src_len}"))?;
-        let reorder_stage = self.engine.stage(&format!("kv_reorder_b{bm}"))?;
-
-        let kv_shape = self.dims.self_kv_shape(bm);
-        let zero = Tensor::zeros(DType::F32, &kv_shape);
-        let mut ck = self.engine.upload(&zero)?;
-        let mut cv = self.engine.upload(&zero)?;
-
-        // Beam state on host.
-        let mut tokens = vec![BOS; bm];
-        let mut seqs: Vec<Vec<i32>> = vec![vec![]; bm];
-        let mut scores = vec![f32::NEG_INFINITY; bm];
-        scores[0] = 0.0; // only beam 0 live initially
-        let mut finished: Vec<(Vec<i32>, f32)> = Vec::new();
-        let mut steps = 0usize;
-
-        let tele = self.engine.tracer();
-        let _tick_scope = tele.map(|t| t.tick_scope());
-        for pos in 0..max_text.min(self.dims.max_tgt - 1) {
-            if let Some(t) = tele {
-                t.next_tick();
-            }
-            let _step_span = tele.map(|t| t.span(Cat::Decode, "beam_step"));
-            // one batched decode step over the beams
-            let t = Instant::now();
-            let t_toks = Tensor::from_i32(&[bm], &tokens);
-            let t_pos = Tensor::from_i32(&[bm], &vec![pos as i32; bm]);
-            let outs = self.engine.run(
-                &dec_stage,
-                &[Arg::Host(&t_toks), Arg::Host(&t_pos), Arg::Dev(&ck),
-                  Arg::Dev(&cv), Arg::Dev(cross_k), Arg::Dev(cross_v),
-                  Arg::Dev(enc_len)],
-            )?;
-            let mut it = outs.into_iter();
-            let logits_buf = it.next().context("logits")?;
-            ck = it.next().context("self_ck")?;
-            cv = it.next().context("self_cv")?;
-            times.add("TextDecoder", t.elapsed().as_secs_f64());
-            steps += 1;
-
-            let logits = self.engine.download(&logits_buf)?.as_f32()?;
-            let v = self.dims.text_vocab;
-
-            // expand: per live beam, top candidates by logprob
-            let beam_span = tele.map(|t| t.span(Cat::Sample, "beam_expand"));
-            let mut cands: Vec<(f32, usize, i32)> = Vec::new();
-            for b in 0..bm {
-                if scores[b] == f32::NEG_INFINITY {
-                    continue;
-                }
-                let lp = log_softmax(&logits[b * v..(b + 1) * v]);
-                for (tok, &l) in top_n(&lp, bm + 1) {
-                    cands.push((scores[b] + l, b, tok as i32));
-                }
-            }
-            cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-
-            let mut new_scores = vec![f32::NEG_INFINITY; bm];
-            let mut new_tokens = vec![EOS; bm];
-            let mut beam_idx = vec![0i32; bm];
-            let mut new_seqs: Vec<Vec<i32>> = vec![vec![]; bm];
-            let mut filled = 0usize;
-            for (score, src, tok) in cands {
-                if filled == bm {
-                    break;
-                }
-                if tok == EOS {
-                    let seq = seqs[src].clone();
-                    let norm = score
-                        / ((seq.len() + 1) as f32).powf(self.len_penalty);
-                    finished.push((seq, norm));
-                    continue;
-                }
-                new_scores[filled] = score;
-                new_tokens[filled] = tok;
-                beam_idx[filled] = src as i32;
-                let mut s = seqs[src].clone();
-                s.push(tok);
-                new_seqs[filled] = s;
-                filled += 1;
-            }
-            if filled == 0 {
-                break; // all beams finished
-            }
-            drop(beam_span);
-
-            // ---- KV reorder (the Obs #4 operation) ------------------
-            let t = Instant::now();
-            match self.reorder {
-                ReorderMode::Fused => {
-                    let t_idx = Tensor::from_i32(&[bm], &beam_idx);
-                    let outs = self.engine.run(
-                        &reorder_stage,
-                        &[Arg::Dev(&ck), Arg::Dev(&cv), Arg::Host(&t_idx)],
-                    )?;
-                    let mut it = outs.into_iter();
-                    ck = it.next().context("ck")?;
-                    cv = it.next().context("cv")?;
-                }
-                ReorderMode::HostCopy => {
-                    // Baseline: full round-trip + host gather — the
-                    // `index_select` allocation pattern.
-                    let hk = self.engine.download(&ck)?;
-                    let hv = self.engine.download(&cv)?;
-                    let gk = gather_beams(&hk, &beam_idx)?;
-                    let gv = gather_beams(&hv, &beam_idx)?;
-                    ck = self.engine.upload(&gk)?;
-                    cv = self.engine.upload(&gv)?;
-                }
-            }
-            times.add("KV_Cache_Reorder", t.elapsed().as_secs_f64());
-
-            scores = new_scores;
-            tokens = new_tokens;
-            seqs = new_seqs;
-        }
-        drop(_tick_scope);
-
-        // pick best finished (or best live) sequence
-        for b in 0..bm {
-            if scores[b] > f32::NEG_INFINITY {
-                let norm = scores[b]
-                    / (seqs[b].len().max(1) as f32).powf(self.len_penalty);
-                finished.push((seqs[b].clone(), norm));
-            }
-        }
-        finished.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        let best = finished.into_iter().next().map(|(s, _)| s)
-            .unwrap_or_default();
-        Ok((best, steps))
+        let mut exec = SeamlessExecutor::new(self, src_len, cross_k,
+                                             cross_v, enc_len)?;
+        let cfg = BeamConfig {
+            beams: self.dims.beam,
+            max_steps: max_text,
+            len_penalty: self.len_penalty,
+            bos: BOS,
+            eos: EOS,
+        };
+        let r = generate_beam(&mut exec, self.engine.tracer(), &[], &cfg)?;
+        times.merge(&exec.times);
+        Ok((r.tokens, r.decode_steps))
     }
 
     /// NAR text-to-unit.
@@ -402,17 +310,19 @@ impl<'e> SeamlessPipeline<'e> {
         let n = n.min(bucket);
         let mut toks = vec![0i32; bucket];
         toks[..n].copy_from_slice(&text_tokens[..n]);
-        let t = Instant::now();
-        let stage = self.engine.stage(&format!("t2u_t{bucket}"))?;
-        let t_toks = Tensor::from_i32(&[1, bucket], &toks);
-        let t_len = Tensor::from_i32(&[1], &[n as i32]);
-        let outs = self
-            .engine
-            .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])?;
-        let mut it = outs.into_iter();
-        let logits = self.engine.download(&it.next().context("t2u")?)?;
-        times.add("T2U", t.elapsed().as_secs_f64());
-        let l = logits.as_f32()?;
+        let (logits, secs) =
+            timed(self.engine.tracer(), Cat::Other, "T2U", || {
+                let stage = self.engine.stage(&format!("t2u_t{bucket}"))?;
+                let t_toks = Tensor::from_i32(&[1, bucket], &toks);
+                let t_len = Tensor::from_i32(&[1], &[n as i32]);
+                let outs = self
+                    .engine
+                    .run(&stage, &[Arg::Host(&t_toks), Arg::Host(&t_len)])?;
+                let mut it = outs.into_iter();
+                self.engine.download(&it.next().context("t2u")?)
+            });
+        times.add("T2U", secs);
+        let l = logits?.as_f32()?;
         let uv = self.engine.manifest.cfg_usize("unit_vocab")?;
         let n_units = n * self.dims.t2u_upsample;
         let mut units = Vec::with_capacity(n_units);
@@ -442,28 +352,163 @@ impl<'e> SeamlessPipeline<'e> {
         let n = n.min(bucket);
         let mut u = vec![0i32; bucket];
         u[..n].copy_from_slice(&units[..n]);
-        let t = Instant::now();
-        let stage = self.engine.stage(&format!("vocoder_u{bucket}"))?;
-        let t_units = Tensor::from_i32(&[1, bucket], &u);
-        let outs = self.engine.run(&stage, &[Arg::Host(&t_units)])?;
-        let wav = self.engine.download(&outs[0])?.as_f32()?;
-        times.add("Vocoder", t.elapsed().as_secs_f64());
+        let (wav, secs) =
+            timed(self.engine.tracer(), Cat::Other, "Vocoder", || {
+                let stage =
+                    self.engine.stage(&format!("vocoder_u{bucket}"))?;
+                let t_units = Tensor::from_i32(&[1, bucket], &u);
+                let outs =
+                    self.engine.run(&stage, &[Arg::Host(&t_units)])?;
+                self.engine.download(&outs[0])?.as_f32()
+            });
+        times.add("Vocoder", secs);
+        let wav = wav?;
         Ok(wav[..n * self.dims.voc_rate].to_vec())
     }
 }
 
-fn log_softmax(logits: &[f32]) -> Vec<f32> {
-    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let z: f32 = logits.iter().map(|&x| (x - m).exp()).sum();
-    let lz = z.ln() + m;
-    logits.iter().map(|&x| x - lz).collect()
+/// The Seamless AR text decoder as a [`StepExecutor`].
+///
+/// `decode_step` is one batched decode over all beams (the
+/// `dec_step_b{B}_s{S}` stage), `reorder_slots` is the Obs #4 KV
+/// gather in the configured [`ReorderMode`]. The executor owns the
+/// dense per-slot device state — the self-KV ring plus the request's
+/// cross-KV — while the paging half of beam search (hypothesis fork /
+/// prune) lives in [`generate_beam`]'s block tables. Per-module
+/// timings accumulate in `times` (the Fig. 7 ladder keys) through
+/// [`timed`] spans, so the decoder also shows up in `mmserve trace`.
+pub struct SeamlessExecutor<'e> {
+    engine: &'e Engine,
+    dims: SeamlessDims,
+    reorder: ReorderMode,
+    dec_stage: StageHandle,
+    reorder_stage: StageHandle,
+    /// Self-attention KV ring `[L, B, H, S, Dh]` (and its V half).
+    ck: PjRtBuffer,
+    cv: PjRtBuffer,
+    cross_k: PjRtBuffer,
+    cross_v: PjRtBuffer,
+    enc_len: PjRtBuffer,
+    /// Per-module wall time: `TextDecoder` + `KV_Cache_Reorder`.
+    pub times: OpTimes,
 }
 
-/// Top-n (index, value) pairs by value, descending.
-fn top_n(xs: &[f32], n: usize) -> Vec<(usize, &f32)> {
-    let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
-    idx.into_iter().take(n).map(|i| (i, &xs[i])).collect()
+impl<'e> SeamlessExecutor<'e> {
+    pub fn new(pipe: &SeamlessPipeline<'e>, src_len: usize,
+               cross_k: PjRtBuffer, cross_v: PjRtBuffer,
+               enc_len: PjRtBuffer) -> Result<Self> {
+        let dims = pipe.dims;
+        let bm = dims.beam;
+        let zero = Tensor::zeros(DType::F32, &dims.self_kv_shape(bm));
+        Ok(SeamlessExecutor {
+            engine: pipe.engine,
+            dims,
+            reorder: pipe.reorder,
+            dec_stage: pipe
+                .engine
+                .stage(&format!("dec_step_b{bm}_s{src_len}"))?,
+            reorder_stage: pipe
+                .engine
+                .stage(&format!("kv_reorder_b{bm}"))?,
+            ck: pipe.engine.upload(&zero)?,
+            cv: pipe.engine.upload(&zero)?,
+            cross_k,
+            cross_v,
+            enc_len,
+            times: OpTimes::new(),
+        })
+    }
+}
+
+impl StepExecutor for SeamlessExecutor<'_> {
+    fn plan_dims(&self) -> ExecDims {
+        ExecDims {
+            batch: self.dims.beam,
+            max_seq: self.dims.max_tgt,
+            vocab: self.dims.text_vocab,
+        }
+    }
+
+    fn step_span_name(&self) -> &'static str {
+        "beam_step"
+    }
+
+    /// The decoder has no prompt side — encoder and cross-KV run
+    /// before the executor is built — so prefill is a no-op.
+    fn prefill_chunk(&mut self, _slot: usize, _tokens: &[i32],
+                     _start: usize, _is_last: bool)
+                     -> Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
+    fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+        let bm = self.dims.beam;
+        let tokens: Vec<i32> = feeds.iter().map(|f| f.token).collect();
+        let pos = feeds.first().map(|f| f.pos as i32).unwrap_or(0);
+        let tele = self.engine.tracer();
+        let (outs, secs) = timed(tele, Cat::Other, "TextDecoder", || {
+            let t_toks = Tensor::from_i32(&[bm], &tokens);
+            let t_pos = Tensor::from_i32(&[bm], &vec![pos; bm]);
+            self.engine.run(
+                &self.dec_stage,
+                &[Arg::Host(&t_toks), Arg::Host(&t_pos),
+                  Arg::Dev(&self.ck), Arg::Dev(&self.cv),
+                  Arg::Dev(&self.cross_k), Arg::Dev(&self.cross_v),
+                  Arg::Dev(&self.enc_len)],
+            )
+        });
+        self.times.add("TextDecoder", secs);
+        let mut it = outs?.into_iter();
+        let logits_buf = it.next().context("logits")?;
+        self.ck = it.next().context("self_ck")?;
+        self.cv = it.next().context("self_cv")?;
+        self.engine.download(&logits_buf)?.as_f32()
+    }
+
+    /// The Obs #4 operation: gather the dense self-KV ring so new slot
+    /// `b` continues hypothesis `src[b]`. Fused mode runs the compiled
+    /// device gather; HostCopy reproduces the baseline
+    /// download→gather→upload round trip the paper calls out.
+    fn reorder_slots(&mut self, src: &[i32]) -> Result<()> {
+        let bm = self.dims.beam;
+        let reorder = self.reorder;
+        let tele = self.engine.tracer();
+        let (res, secs) = timed(
+            tele,
+            Cat::Other,
+            "KV_Cache_Reorder",
+            || -> Result<(PjRtBuffer, PjRtBuffer)> {
+                match reorder {
+                    ReorderMode::Fused => {
+                        let t_idx = Tensor::from_i32(&[bm], src);
+                        let outs = self.engine.run(
+                            &self.reorder_stage,
+                            &[Arg::Dev(&self.ck), Arg::Dev(&self.cv),
+                              Arg::Host(&t_idx)],
+                        )?;
+                        let mut it = outs.into_iter();
+                        Ok((it.next().context("ck")?,
+                            it.next().context("cv")?))
+                    }
+                    ReorderMode::HostCopy => {
+                        // Baseline: full round-trip + host gather —
+                        // the `index_select` allocation pattern.
+                        let hk = self.engine.download(&self.ck)?;
+                        let hv = self.engine.download(&self.cv)?;
+                        let gk = gather_beams(&hk, src)?;
+                        let gv = gather_beams(&hv, src)?;
+                        Ok((self.engine.upload(&gk)?,
+                            self.engine.upload(&gv)?))
+                    }
+                }
+            },
+        );
+        self.times.add("KV_Cache_Reorder", secs);
+        let (ck, cv) = res?;
+        self.ck = ck;
+        self.cv = cv;
+        Ok(())
+    }
 }
 
 /// Host-side beam gather of a [L, B, H, S, Dh] tensor along axis 1.
@@ -486,6 +531,7 @@ fn gather_beams(t: &Tensor, beam_idx: &[i32]) -> Result<Tensor> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::{log_softmax, top_n};
 
     #[test]
     fn log_softmax_normalizes() {

@@ -22,8 +22,19 @@
 //!   append incrementally through the batched decode graph while the
 //!   block tables claim pages chunk by chunk.
 //! * **Chameleon T-I** — bs=1 contrastive decoding (two decodes/step).
-//! * **Seamless** — the four-module pipeline with beam search.
-//! * **HSTU** — non-AR batch forward.
+//! * **Seamless** — the four-module pipeline; its beam search runs on
+//!   the unified core (`SeamlessExecutor` + `sched::generate_beam`),
+//!   so beam reorder is a block-table fork/prune in the kvpool rather
+//!   than a KV copy (Obs #4).
+//! * **HSTU** — non-AR one-shot scoring (`HstuExecutor` +
+//!   `sched::generate` with `max_new == 0`): a prefill-only plan with
+//!   zero decode ticks (Obs #1).
+//!
+//! A single `Router` can hold replica sets for *several* families at
+//! once (a mixed fleet): the dispatch map keys queues by `ModelKind`,
+//! so chat, Seamless, and HSTU workers tick side by side in one run
+//! while per-family TTFT/TBT and idle attribution flow through the
+//! shared telemetry plane.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,8 +52,9 @@ use crate::models::{ModelKind, TaskKind};
 use crate::routing::{rank, ReplicaCell, ReplicaView, RoutingPolicy};
 use crate::runtime::engine::{Arg, Engine, StageHandle};
 use crate::runtime::tensor::{DType, Tensor};
-use crate::sched::{ExecDims, PlannedChunk, SchedConfig, Scheduler,
-                   SlotFeed, SlotStateError, StepExecutor, TickPlan};
+use crate::sched::{generate, ExecDims, PlannedChunk, SchedConfig,
+                   Scheduler, SlotFeed, SlotStateError, StepExecutor,
+                   TickPlan};
 use crate::substrate::metrics::ServeStats;
 use crate::substrate::rng::Rng;
 use crate::substrate::table::Table;
@@ -54,7 +66,7 @@ use crate::telemetry::tracer::{Cat, Tracer, WorkerTracer};
 
 use super::batcher::QueuedRequest;
 use super::decoder_loop::{encode_prompt, DecoderSession, KvBufs};
-use super::hstu_loop::{HstuAttn, HstuRunner};
+use super::hstu_loop::{HstuAttn, HstuExecutor, HstuRunner};
 use super::kv::PagedKvSlots;
 use super::opts::{ExecMode, OptConfig};
 use super::request::{Request, RequestInput, Response, ResponseOutput};
@@ -1578,9 +1590,16 @@ fn serve_one_hstu(runner: &HstuRunner, req: &Request) -> Result<Response> {
     let RequestInput::History(h) = &req.input else {
         bail!("hstu expects History input");
     };
-    let _req_scope = runner.engine.tracer().map(|t| t.req_scope(req.id));
-    let results = runner.run_batch(std::slice::from_ref(h), 8, 10)?;
-    let r = results.into_iter().next().context("hstu result")?;
+    let tele = runner.engine.tracer();
+    let _req_scope = tele.map(|t| t.req_scope(req.id));
+    // The one-shot scoring pass scheduled as a prefill-only plan
+    // (Obs #1): `generate` with `max_new == 0` runs the whole request
+    // as its prompt and takes zero decode ticks.
+    let mut exec = HstuExecutor::new(runner, 8, 10);
+    let gen = generate(&mut exec, tele, h, 0,
+                       &crate::coordinator::request::SamplingParams::greedy())?;
+    debug_assert_eq!(gen.decode_steps, 0);
+    let r = exec.last.take().context("hstu result")?;
     Ok(Response {
         id: req.id,
         task: req.task,
@@ -1590,8 +1609,8 @@ fn serve_one_hstu(runner: &HstuRunner, req: &Request) -> Result<Response> {
         },
         tokens: vec![],
         prompt_tokens: h.len(),
-        decode_steps: 0, // non-autoregressive (Obs #1)
-        ttft: r.e2e,
+        decode_steps: gen.decode_steps, // non-autoregressive (Obs #1)
+        ttft: gen.ttft,
         e2e: started.elapsed().as_secs_f64(),
     })
 }

@@ -14,8 +14,16 @@
 //!                   boundary, copy-on-write fork before overwriting a
 //!                   shared page, cache invalidation when the sole
 //!                   owner diverges from a cached block.
+//! fork(child)     — beam split: the child table references every one
+//!                   of the parent's pages (refcount bump, zero KV
+//!                   copied); divergence pays one COW page at the
+//!                   first overwritten shared block. Beam reorder is
+//!                   fork + prune, not a cache gather.
 //! rewind_to(pos)  — LayerSkip rollback; pages are kept (overwrite
 //!                   semantics, like the dense slot view).
+//! release_discard — prune a dead beam: drop refs *without* publishing
+//!                   its blocks, so an abandoned hypothesis leaves the
+//!                   prefix cache exactly as it found it.
 //! release()       — register finished full blocks, then drop refs;
 //!                   zero-ref hashed pages park on the cache LRU,
 //!                   the rest return to the free list.
@@ -86,6 +94,9 @@ pub struct PoolStats {
     pub blocks_freed: u64,
     pub evictions: u64,
     pub cow_forks: u64,
+    /// Beam splits served as block-table forks (refcount bumps) — the
+    /// pages a dense beam reorder would have copied are shared instead.
+    pub beam_forks: u64,
     pub preemptions: u64,
     pub swapped_out_tokens: u64,
     /// Scheduler ticks where admission was blocked on KV capacity —
@@ -143,6 +154,7 @@ impl PoolStats {
         self.blocks_freed += other.blocks_freed;
         self.evictions += other.evictions;
         self.cow_forks += other.cow_forks;
+        self.beam_forks += other.beam_forks;
         self.preemptions += other.preemptions;
         self.swapped_out_tokens += other.swapped_out_tokens;
         self.capacity_wait_ticks += other.capacity_wait_ticks;
@@ -190,6 +202,11 @@ impl PoolStats {
         t.row(&["block churn".into(), self.block_churn().to_string()]);
         t.row(&["evictions (LRU)".into(), self.evictions.to_string()]);
         t.row(&["copy-on-write forks".into(), self.cow_forks.to_string()]);
+        // Beam-search pools only: absent from chat-only runs so the
+        // legacy table stays verbatim.
+        if self.beam_forks > 0 {
+            t.row(&["beam forks".into(), self.beam_forks.to_string()]);
+        }
         t.row(&["preemptions".into(), self.preemptions.to_string()]);
         t.row(&[
             "swapped-out tokens".into(),
@@ -302,6 +319,39 @@ impl CapacityView {
 }
 
 /// The paged KV-cache pool.
+///
+/// # Examples
+///
+/// The full page lifecycle — allocation, a beam-style fork that shares
+/// every page, the copy-on-write split the fork pays at its first
+/// divergence, and the two release flavors (publish vs discard):
+///
+/// ```
+/// use mmserve::kvpool::KvPool;
+///
+/// let mut pool = KvPool::new(8, 4, 64); // 8 pages of 4 tokens
+/// let out = pool.alloc(0, &[10, 11, 12, 13, 14])?;
+/// assert_eq!(out.pages, 2); // 5 tokens → 2 pages
+///
+/// // A beam hypothesis forks the table: every page is shared, no
+/// // copy happens yet.
+/// assert_eq!(pool.fork(0, 1)?, 2);
+/// assert_eq!(pool.live_pages(), 2);
+///
+/// // The hypothesis diverges inside the shared tail page: exactly
+/// // one page is copy-on-write split.
+/// pool.advance(1, 42)?;
+/// assert_eq!(pool.live_pages(), 3);
+/// assert_eq!(pool.stats.cow_forks, 1);
+///
+/// // Pruning the hypothesis frees only its private page; releasing
+/// // the root publishes its full pages into the prefix cache.
+/// pool.release_discard(1)?;
+/// assert_eq!(pool.live_pages(), 2);
+/// pool.release(0)?;
+/// assert!(pool.check_invariants().is_ok());
+/// # Ok::<(), mmserve::kvpool::KvError>(())
+/// ```
 #[derive(Debug, Clone)]
 pub struct KvPool {
     blocks: ShardedBlockPool,
@@ -658,6 +708,66 @@ impl KvPool {
             .remove(&request)
             .ok_or(KvError::UnknownRequest(request))?;
         self.finish_table(t);
+        Ok(())
+    }
+
+    /// Beam split: admit `child` as a block-table fork of `parent` —
+    /// every parent page gains one reference, zero KV is copied. The
+    /// whole parent history counts as the child's shared prefix, so
+    /// the first divergent append pays exactly one copy-on-write page
+    /// (the paper's Obs #4 fix expressed in pages: beam reorder is a
+    /// refcount bump, not a cache gather). Returns the page count
+    /// shared. The fork inherits the parent's fill position; use
+    /// [`KvPool::rewind_to`] on the child to re-split from an earlier
+    /// position.
+    pub fn fork(&mut self, parent: u64, child: u64)
+                -> Result<usize, KvError> {
+        if self.tables.contains_key(&child) {
+            return Err(KvError::DuplicateRequest(child));
+        }
+        let (tokens, pages, prompt_len) = {
+            let t = self
+                .tables
+                .get(&parent)
+                .ok_or(KvError::UnknownRequest(parent))?;
+            (t.tokens().to_vec(), t.pages().to_vec(), t.prompt_len)
+        };
+        for &pid in &pages {
+            // Every table-mapped page is Live (the table invariant),
+            // so the bump can never resurrect a cached page.
+            self.blocks.retain(pid);
+        }
+        let shared = pages.len();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let mut t = BlockTable::new(child, tokens, pages, seq, shared);
+        t.prompt_len = prompt_len;
+        self.tables.insert(child, t);
+        self.stats.beam_forks += 1;
+        Ok(shared)
+    }
+
+    /// Prune a dead beam: drop the table's page references *without*
+    /// publishing its blocks to the prefix cache. Pages the fork
+    /// still shares with a live sibling keep their references; COW
+    /// pages the dead hypothesis claimed for itself were never hashed,
+    /// so they return straight to the free list — the cache is left
+    /// bit-identical to its pre-fork state (the property test's
+    /// contract). Finished *winning* beams go through
+    /// [`KvPool::release`], which does publish.
+    pub fn release_discard(&mut self, request: u64) -> Result<(), KvError> {
+        let t = self
+            .tables
+            .remove(&request)
+            .ok_or(KvError::UnknownRequest(request))?;
+        let (pages, _tokens, _prompt_len) = t.into_parts();
+        for &pid in &pages {
+            // `cacheable: true` parks a page that already has a hash
+            // entry (a prefix block another request published) instead
+            // of invalidating it — discarding must not shrink the
+            // cache. Unhashed pages fail `park` and free.
+            self.release_page_ref(pid, true);
+        }
         Ok(())
     }
 
@@ -1602,6 +1712,178 @@ mod tests {
                         pool.live_pages()
                     ));
                 }
+                Ok(())
+            },
+        );
+    }
+
+    /// Tentpole: a beam split is a refcount bump. The child shares
+    /// every parent page; the first divergent token pays exactly one
+    /// COW page; the parent's history is untouched.
+    #[test]
+    fn fork_shares_pages_and_first_divergence_pays_one_cow() {
+        let mut p = KvPool::new(16, 4, 64);
+        p.alloc(1, &[1, 2, 3, 4, 5, 6]).unwrap(); // 2 pages
+        let shared = p.fork(1, 2).unwrap();
+        assert_eq!(shared, 2);
+        assert_eq!(p.stats.beam_forks, 1);
+        assert_eq!(p.live_pages(), 2, "fork copied nothing");
+        assert_eq!(p.table(2).unwrap().pages(), p.table(1).unwrap().pages());
+        assert_eq!(p.pos(2).unwrap(), 6, "fill position inherited");
+        // Divergent appends: each beam overwrites the shared partial
+        // page → one COW fork each, then in-place growth.
+        p.advance(1, 70).unwrap();
+        p.advance(2, 80).unwrap();
+        assert_eq!(p.stats.cow_forks, 1, "second writer owns its page");
+        assert_ne!(p.table(1).unwrap().pages()[1],
+                   p.table(2).unwrap().pages()[1]);
+        assert_eq!(p.table(1).unwrap().pages()[0],
+                   p.table(2).unwrap().pages()[0],
+                   "full shared block still shared");
+        // Double-fork and unknown-parent errors.
+        assert_eq!(p.fork(1, 2).unwrap_err(), KvError::DuplicateRequest(2));
+        assert_eq!(p.fork(99, 3).unwrap_err(), KvError::UnknownRequest(99));
+        p.check_invariants().unwrap();
+        p.release(1).unwrap();
+        p.release(2).unwrap();
+        assert_eq!(p.live_pages(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    /// Pruning a dead beam must not publish its blocks: the cache ends
+    /// bit-identical to the pre-fork state even though the dead
+    /// hypothesis filled whole blocks of its own.
+    #[test]
+    fn release_discard_leaves_cache_bit_identical() {
+        let mut p = KvPool::new(16, 4, 64);
+        // A released request seeds the cache with two hashed blocks.
+        p.alloc(9, &[50, 51, 52, 53, 54, 55, 56, 57]).unwrap();
+        p.release(9).unwrap();
+        p.alloc(1, &[50, 51, 52, 53, 54, 55, 56, 57]).unwrap();
+        let cache_before: std::collections::BTreeMap<u64, PageId> =
+            p.cache.entries().collect();
+        let lru_before = p.cache.lru_pages().to_vec();
+        let live_before = p.live_pages();
+        p.fork(1, 2).unwrap();
+        // The dead beam diverges across a whole fresh block …
+        for t in 0..6 {
+            p.advance(2, 200 + t).unwrap();
+        }
+        // … rewinds (LayerSkip machinery), grows again, then dies.
+        p.rewind_to(2, 9).unwrap();
+        p.advance(2, 300).unwrap();
+        p.release_discard(2).unwrap();
+        let cache_after: std::collections::BTreeMap<u64, PageId> =
+            p.cache.entries().collect();
+        assert_eq!(cache_before, cache_after, "no block published");
+        assert_eq!(p.cache.lru_pages(), &lru_before[..]);
+        assert_eq!(p.live_pages(), live_before, "COW pages all freed");
+        assert_eq!(p.pos(1).unwrap(), 8, "survivor untouched");
+        p.check_invariants().unwrap();
+        assert_eq!(p.release_discard(7).unwrap_err(),
+                   KvError::UnknownRequest(7));
+        p.release(1).unwrap();
+        p.check_invariants().unwrap();
+    }
+
+    /// Satellite: random beam fork/advance/rewind/prune walks conserve
+    /// page refcounts (every page's count equals its table references,
+    /// `free + live + cached == total`) and leave the prefix cache —
+    /// hash map *and* LRU order — bit-identical to the pre-fork state
+    /// once every forked beam is pruned.
+    #[test]
+    fn prop_beam_fork_prune_conserves_refcounts_and_cache() {
+        prop_check(
+            96,
+            0xbea8,
+            |r: &mut Rng| {
+                let prompt_len = r.usize(1, 20);
+                let n = r.usize(1, 40);
+                let ops =
+                    (0..n).map(|_| r.usize(0, 4000)).collect::<Vec<_>>();
+                (prompt_len, ops)
+            },
+            |(prompt_len, ops)| {
+                let mut pool = KvPool::new(48, 4, 64);
+                // Seed the cache the way serving does: a finished
+                // request publishes its full blocks.
+                let stem: Vec<i32> = (0..16).collect();
+                pool.alloc(98, &stem).map_err(|e| e.to_string())?;
+                pool.release(98).map_err(|e| e.to_string())?;
+                let prompt: Vec<i32> =
+                    stem.iter().copied().take(*prompt_len).collect();
+                pool.alloc(0, &prompt).map_err(|e| e.to_string())?;
+                let root_pos = pool.pos(0).unwrap();
+                let cache_before: std::collections::BTreeMap<u64, PageId> =
+                    pool.cache.entries().collect();
+                let lru_before = pool.cache.lru_pages().to_vec();
+                let live_before = pool.live_pages();
+                let mut beams: Vec<u64> = Vec::new();
+                let mut next = 1u64;
+                for &x in ops {
+                    match x % 4 {
+                        0 => {
+                            // Fork off the root or a live beam.
+                            let parents = beams.len() + 1;
+                            let parent = match (x / 4) % parents {
+                                0 => 0,
+                                i => beams[i - 1],
+                            };
+                            if pool.fork(parent, next).is_ok() {
+                                beams.push(next);
+                                next += 1;
+                            }
+                        }
+                        1 | 2 => {
+                            if !beams.is_empty() {
+                                let id = beams[(x / 4) % beams.len()];
+                                let tok = 500 + (x % 97) as i32;
+                                let _ = pool.advance(id, tok);
+                            }
+                        }
+                        _ => {
+                            if !beams.is_empty() {
+                                let id = beams[(x / 4) % beams.len()];
+                                let pos = pool.pos(id).unwrap();
+                                let back = (x / 7) % 6;
+                                let to = pos
+                                    .saturating_sub(back)
+                                    .max(root_pos.min(pos));
+                                let _ = pool.rewind_to(id, to);
+                            }
+                        }
+                    }
+                    pool.check_invariants()?;
+                }
+                // Prune every hypothesis; the root survives.
+                for id in beams.drain(..) {
+                    pool.release_discard(id).map_err(|e| e.to_string())?;
+                    pool.check_invariants()?;
+                }
+                let cache_after: std::collections::BTreeMap<u64, PageId> =
+                    pool.cache.entries().collect();
+                if cache_before != cache_after {
+                    return Err(format!(
+                        "cache changed: {} entries → {}",
+                        cache_before.len(),
+                        cache_after.len()
+                    ));
+                }
+                if pool.cache.lru_pages() != &lru_before[..] {
+                    return Err("cache LRU order changed".into());
+                }
+                if pool.live_pages() != live_before {
+                    return Err(format!(
+                        "live pages {} != pre-fork {}",
+                        pool.live_pages(),
+                        live_before
+                    ));
+                }
+                if pool.pos(0).unwrap() != root_pos {
+                    return Err("root position moved".into());
+                }
+                pool.release(0).map_err(|e| e.to_string())?;
+                pool.check_invariants()?;
                 Ok(())
             },
         );

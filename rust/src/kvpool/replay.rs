@@ -23,6 +23,15 @@
 //! replica-routing replay (`crate::routing::replay`) can run N of
 //! them in lockstep under a routing policy; [`replay`] is the
 //! single-worker driver those semantics are defined by.
+//!
+//! With a [`MixSpec`] the stream becomes a *mixed fleet*: a slice of
+//! the requests are Seamless (beam search — every decode tick forks
+//! and prunes sibling hypotheses through the pool's block-table COW
+//! machinery, the paper's Obs #4 fix expressed in pages) and a slice
+//! are HSTU (one-shot scoring — the whole request is prefill, zero
+//! decode ticks, Obs #1). One scheduler ticks all three families side
+//! by side, and the result carries per-modality TTFT/TBT plus
+//! busy/idle attribution ([`FamilyStats`], `mmserve kv --mix`).
 
 use std::collections::{HashMap, HashSet};
 
@@ -43,6 +52,95 @@ use super::{KvError, KvPoolConfig, PoolStats, PreemptMode};
 pub const SIM_DECODE_COST: f64 = 1.0;
 /// Simulated cost of prefilling one prompt token.
 pub const SIM_PREFILL_TOKEN_COST: f64 = 0.05;
+
+/// Pool-request id space for transient beam-hypothesis forks — far
+/// above any replayed request id, so ghosts can never collide with
+/// real work.
+const GHOST_BASE: u64 = 1 << 48;
+
+/// Model family of one simulated request. The mixed-fleet replay
+/// serves all three through the same scheduler and pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+         Default)]
+pub enum SimFamily {
+    /// Autoregressive chat decode (the legacy replay's only family).
+    #[default]
+    Chat,
+    /// Beam-searched translation: every decode tick forks and prunes
+    /// sibling hypotheses through the pool's block-table fork/prune
+    /// machinery — beam reorder as page refcounts, never a KV copy.
+    Seamless,
+    /// One-shot recommendation scoring: the whole request is prefill
+    /// and it completes at its first token — zero decode ticks.
+    Hstu,
+}
+
+impl SimFamily {
+    /// Stable lowercase label (CLI selector, sketch/ledger cohort).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimFamily::Chat => "chat",
+            SimFamily::Seamless => "seamless",
+            SimFamily::Hstu => "hstu",
+        }
+    }
+}
+
+/// Mixed-fleet selector: what fraction of the request stream each
+/// non-chat family gets (the rest stay chat), plus the beam width
+/// Seamless requests fork per decode tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MixSpec {
+    /// Percent of requests served as Seamless.
+    pub seamless_percent: usize,
+    /// Percent of requests served as HSTU.
+    pub hstu_percent: usize,
+    /// Sibling hypotheses per Seamless decode tick (≤ 1 = no forks).
+    pub beam: usize,
+}
+
+impl MixSpec {
+    /// Parse a `--mix` selector like `"seamless:25,hstu:25"`.
+    pub fn parse(spec: &str, beam: usize) -> Result<MixSpec, String> {
+        let mut m = MixSpec {
+            seamless_percent: 0,
+            hstu_percent: 0,
+            beam: beam.clamp(1, 32),
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (fam, pct) = part.split_once(':').ok_or_else(|| {
+                format!("mix part {part:?}: want family:percent")
+            })?;
+            let pct: usize = pct.trim().parse().map_err(|_| {
+                format!("mix part {part:?}: bad percent")
+            })?;
+            match fam.trim() {
+                "seamless" => m.seamless_percent = pct,
+                "hstu" => m.hstu_percent = pct,
+                // Chat is the remainder; naming it is allowed but its
+                // share is implied.
+                "chat" => {}
+                other => {
+                    return Err(format!(
+                        "unknown family {other:?} \
+                         (want seamless|hstu|chat)"
+                    ))
+                }
+            }
+        }
+        if m.seamless_percent + m.hstu_percent > 100 {
+            return Err(format!(
+                "mix percentages exceed 100 (seamless {} + hstu {})",
+                m.seamless_percent, m.hstu_percent
+            ));
+        }
+        Ok(m)
+    }
+}
 
 /// The replayed request mix (defaults: short-chat-heavy with a shared
 /// system prompt — the regime where paging pays most).
@@ -85,6 +183,11 @@ pub struct ReplayConfig {
     /// link. `None` (the default) is the unpriced legacy replay, bit
     /// for bit; so is `Some(FabricSpec::zero_cost())`.
     pub fabric: Option<FabricSpec>,
+    /// Mixed-fleet mode: a slice of the stream served as Seamless
+    /// (beam-forking) and HSTU (zero-decode) requests. `None` (the
+    /// default) is the pure-chat replay — and, like `tenants: 1`,
+    /// deliberately keeps the historical RNG stream bit-identical.
+    pub mix: Option<MixSpec>,
 }
 
 impl Default for ReplayConfig {
@@ -107,6 +210,7 @@ impl Default for ReplayConfig {
             chunk_prefill: 0,
             seed: 7,
             fabric: None,
+            mix: None,
         }
     }
 }
@@ -124,10 +228,12 @@ pub struct SimRequest {
     pub id: u64,
     /// Full prompt: the tenant's shared system prefix + unique tail.
     pub tokens: Vec<i32>,
-    /// Decode steps to run.
+    /// Decode steps to run (0 for one-shot HSTU scoring).
     pub decode: usize,
     /// Tenant index (which shared system prompt it carries).
     pub tenant: usize,
+    /// Model family (always `Chat` without a [`MixSpec`]).
+    pub family: SimFamily,
 }
 
 /// The deterministic request mix for `cfg` (same seed → same
@@ -159,9 +265,27 @@ pub fn generate_workload(cfg: &ReplayConfig) -> Vec<SimRequest> {
         // Only drawn in multi-tenant mode so the single-tenant RNG
         // stream (and every replay built on it) stays bit-identical.
         let tenant = if tenants > 1 { rng.usize(0, tenants) } else { 0 };
+        // Same protection: the family roll happens only with a mix
+        // configured, so `mix: None` replays the historical stream.
+        let family = match &cfg.mix {
+            Some(m) => {
+                let roll = rng.usize(0, 100);
+                if roll < m.seamless_percent {
+                    SimFamily::Seamless
+                } else if roll < m.seamless_percent + m.hstu_percent {
+                    SimFamily::Hstu
+                } else {
+                    SimFamily::Chat
+                }
+            }
+            None => SimFamily::Chat,
+        };
+        // One-shot scoring owes no decode ticks: its first token is
+        // its result.
+        let decode = if family == SimFamily::Hstu { 0 } else { decode };
         let mut tokens = sys[tenant].clone();
         tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
-        out.push(SimRequest { id, tokens, decode, tenant });
+        out.push(SimRequest { id, tokens, decode, tenant, family });
     }
     out
 }
@@ -191,11 +315,49 @@ pub struct SimHandoff {
     /// Decode steps still owed.
     pub decode: usize,
     pub tenant: usize,
+    /// Model family (zero-decode handoffs complete at admission).
+    pub family: SimFamily,
     /// Sim time from delivery to prefill completion on the prefill
     /// worker (queue wait + prefill compute); the receiving worker
     /// back-dates the request's TTFT origin by this plus the priced
     /// transfer, so fleet TTFT includes the whole handoff path.
     pub elapsed: f64,
+}
+
+/// Per-modality slice of one replay (mixed-fleet mode).
+#[derive(Debug, Clone)]
+pub struct FamilyStats {
+    pub family: SimFamily,
+    /// Requests delivered to the worker (fail-over re-deliveries
+    /// count again, matching the fleet's routed totals).
+    pub requests: usize,
+    pub completed: usize,
+    /// Simulated TTFT of this family's requests.
+    pub ttft: Histogram,
+    /// Simulated per-tick latency this family's decoders experienced.
+    pub tbt: Histogram,
+    /// Simulated compute attributed to this family: its prefill
+    /// tokens priced at [`SIM_PREFILL_TOKEN_COST`] plus its share of
+    /// every batched decode dispatch it rode.
+    pub busy: f64,
+    /// Batch-interference idle: tick time this family's decoding
+    /// requests sat through that was spent on co-batched work
+    /// (`tick cost − own share`, summed over participations).
+    pub idle: f64,
+}
+
+impl FamilyStats {
+    pub fn empty(family: SimFamily) -> FamilyStats {
+        FamilyStats {
+            family,
+            requests: 0,
+            completed: 0,
+            ttft: Histogram::new(),
+            tbt: Histogram::new(),
+            busy: 0.0,
+            idle: 0.0,
+        }
+    }
 }
 
 /// One replay's outcome.
@@ -239,6 +401,9 @@ pub struct ReplayResult {
     pub transfer_bytes: u64,
     /// Pool counters (zeros for the dense baseline).
     pub stats: PoolStats,
+    /// Per-modality latency and attribution slices, sorted by family
+    /// (a pure-chat replay has a single `Chat` entry).
+    pub families: Vec<FamilyStats>,
     /// Decoded token stream per request — the determinism witness the
     /// routing replay compares across policies.
     pub outputs: HashMap<u64, Vec<i32>>,
@@ -317,6 +482,17 @@ pub struct SimWorker {
     transfer_time: f64,
     /// Total bytes moved over the fabric.
     transfer_bytes: u64,
+    /// Model family of each delivered request (mixed-fleet replay).
+    family_of: HashMap<u64, SimFamily>,
+    /// Sibling hypotheses a Seamless request forks per decode tick
+    /// (≤ 1 = no forking).
+    beam: usize,
+    /// Mixed-fleet run: sampler/ledger cohort labels carry the family
+    /// instead of the tenant, so `mmserve stats` / `mmserve explain`
+    /// break their tables out per modality.
+    mixed: bool,
+    /// Per-family accumulators folded into [`ReplayResult::families`].
+    fam: HashMap<SimFamily, FamilyStats>,
 }
 
 impl SimWorker {
@@ -379,6 +555,31 @@ impl SimWorker {
             pending_transfer: 0.0,
             transfer_time: 0.0,
             transfer_bytes: 0,
+            family_of: HashMap::new(),
+            beam: cfg.mix.map_or(1, |m| m.beam.clamp(1, 32)),
+            mixed: cfg.mix.is_some(),
+            fam: HashMap::new(),
+        }
+    }
+
+    /// This request's family (`Chat` if never delivered here).
+    fn family(&self, req: u64) -> SimFamily {
+        self.family_of.get(&req).copied().unwrap_or_default()
+    }
+
+    /// Per-family accumulator, created on first touch.
+    fn fam_mut(&mut self, req: u64) -> &mut FamilyStats {
+        let f = self.family(req);
+        self.fam.entry(f).or_insert_with(|| FamilyStats::empty(f))
+    }
+
+    /// Sketch/ledger cohort label: the tenant in the classic replay,
+    /// the model family in a mixed-fleet one.
+    fn cohort_label(&self, req: u64) -> String {
+        if self.mixed {
+            self.family(req).label().to_string()
+        } else {
+            self.tenant_of.get(&req).copied().unwrap_or(0).to_string()
         }
     }
 
@@ -427,8 +628,11 @@ impl SimWorker {
         });
         self.arrived.insert(req.id, self.now);
         self.tenant_of.insert(req.id, req.tenant);
+        self.family_of.insert(req.id, req.family);
+        self.fam_mut(req.id).requests += 1;
         if let Some((led, replica)) = &self.ledger {
-            led.enqueued(req.id, *replica, &req.tenant.to_string(),
+            let (led, replica) = (led.clone(), *replica);
+            led.enqueued(req.id, replica, &self.cohort_label(req.id),
                          req.tokens.len(), self.now);
         }
     }
@@ -442,6 +646,7 @@ impl SimWorker {
         let tcost = self.handoff_cost(h.tokens.len());
         self.arrived.insert(h.id, self.now - h.elapsed - tcost);
         self.tenant_of.insert(h.id, h.tenant);
+        self.family_of.insert(h.id, h.family);
         self.inbox.push(h);
     }
 
@@ -790,6 +995,8 @@ impl SimWorker {
                     Ok(_) => {
                         tick_prefill += len;
                         self.sched.chunk_committed(c.request, len);
+                        self.fam_mut(c.request).busy +=
+                            len as f64 * SIM_PREFILL_TOKEN_COST;
                         if let Some((led, _)) = &ledger {
                             led.admitted(c.request, len, self.now);
                             fed.push((c.request, len));
@@ -849,6 +1056,8 @@ impl SimWorker {
                     Ok(_) => {
                         tick_prefill += len;
                         self.sched.chunk_committed(c.request, len);
+                        self.fam_mut(c.request).busy +=
+                            len as f64 * SIM_PREFILL_TOKEN_COST;
                         if let Some((led, _)) = &ledger {
                             led.prefill_chunk(c.request, len, self.now);
                             fed.push((c.request, len));
@@ -898,11 +1107,17 @@ impl SimWorker {
         self.max_tick_prefill = self.max_tick_prefill.max(tick_prefill);
 
         // ---- one batched decode step + the simulated clock -------------
+        // Requests with no decode budget (one-shot HSTU scoring) never
+        // join the decode dispatch — they complete below, the moment
+        // their prefill lands. Pure-chat replays never stage a zero
+        // budget, so the extra predicate changes nothing there.
         let decoding: Vec<(usize, u64, usize)> = self
             .kv
             .live_slots()
             .into_iter()
-            .filter(|(_, req, _)| self.remaining.contains_key(req))
+            .filter(|(_, req, _)| {
+                self.remaining.get(req).is_some_and(|&r| r > 0)
+            })
             .collect();
         // Fabric transfers accrued since the last charge (swap-ins,
         // swap-outs, shipped-KV admissions) ride this tick's clock;
@@ -920,16 +1135,12 @@ impl SimWorker {
         for req in &finished_prefill {
             if self.ttft_done.insert(*req) {
                 let t0 = self.arrived.get(req).copied().unwrap_or(0.0);
-                self.ttft.record(self.now - t0);
+                let dt = self.now - t0;
+                self.ttft.record(dt);
+                self.fam_mut(*req).ttft.record(dt);
                 if let Some(s) = &self.sampler {
                     if s.live().is_enabled() {
-                        let tenant = self
-                            .tenant_of
-                            .get(req)
-                            .copied()
-                            .unwrap_or(0);
-                        s.observe_ttft_ms(&tenant.to_string(),
-                                          self.now - t0);
+                        s.observe_ttft_ms(&self.cohort_label(*req), dt);
                     }
                 }
                 if let Some((led, _)) = &ledger {
@@ -986,8 +1197,29 @@ impl SimWorker {
                 tokens: p.tokens,
                 decode: p.remaining,
                 tenant: self.tenant_of.get(&id).copied().unwrap_or(0),
+                family: self.family(id),
                 elapsed: self.now - t0,
             });
+        }
+        // ---- zero-decode completion (one-shot scoring families) --------
+        // An HSTU request's first token *is* its result: no decode
+        // budget means it completes the moment its prefill does
+        // (Obs #1) — a prefill-only plan with zero decode ticks.
+        for req in finished_prefill {
+            if self.remaining.get(&req) != Some(&0) {
+                continue;
+            }
+            self.remaining.remove(&req);
+            if let Some(slot) = self.kv.slot_of(req) {
+                let _ = self.kv.release(slot);
+            }
+            self.sched.finished(req);
+            self.completed += 1;
+            self.fam_mut(req).completed += 1;
+            self.outputs.entry(req).or_default();
+            if let Some((led, _)) = &ledger {
+                led.completed(req, self.now);
+            }
         }
         if decoding.is_empty() {
             return;
@@ -1015,11 +1247,15 @@ impl SimWorker {
                 continue;
             }
             self.tbt.record(tick_cost);
+            {
+                let f = self.fam_mut(req);
+                f.tbt.record(tick_cost);
+                f.busy += share;
+                f.idle += tick_cost - share;
+            }
             if let Some(s) = &self.sampler {
                 if s.live().is_enabled() {
-                    let tenant =
-                        self.tenant_of.get(&req).copied().unwrap_or(0);
-                    s.observe_tbt_ms(&tenant.to_string(), tick_cost);
+                    s.observe_tbt_ms(&self.cohort_label(req), tick_cost);
                 }
             }
             if let Some((led, _)) = &ledger {
@@ -1036,11 +1272,28 @@ impl SimWorker {
             // serves the request or how often it is preempted.
             let tok = 900 + (pos as i32 % 50);
             self.outputs.entry(req).or_default().push(tok);
+            // Beam expansion (Seamless): fork sibling hypotheses off
+            // this request's block table and prune them — beam reorder
+            // as page-table fork/prune (Obs #4), never a KV copy. The
+            // forks are refcount bumps and the prunes discard without
+            // publishing, so pages are conserved, the clock never
+            // moves, and streams are identical with beams on or off;
+            // only the pool's `beam_forks` counter advances.
+            if self.beam > 1 && self.family(req) == SimFamily::Seamless {
+                for k in 1..self.beam as u64 {
+                    let ghost = GHOST_BASE + req * 64 + k;
+                    if self.kv.fork(req, ghost).is_err() {
+                        break; // dense mode: nothing to fork
+                    }
+                    let _ = self.kv.release_discard(ghost);
+                }
+            }
             if rem == 0 {
                 self.kv.release(slot).expect("live slot");
                 self.remaining.remove(&req);
                 self.sched.finished(req);
                 self.completed += 1;
+                self.fam_mut(req).completed += 1;
                 if let Some((led, _)) = &ledger {
                     led.completed(req, self.now);
                 }
@@ -1062,6 +1315,7 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    self.fam_mut(req).completed += 1;
                     if let Some((led, _)) = &ledger {
                         led.completed(req, self.now);
                     }
@@ -1074,6 +1328,7 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    self.fam_mut(req).completed += 1;
                     if let Some((led, _)) = &ledger {
                         led.completed(req, self.now);
                     }
@@ -1168,6 +1423,7 @@ impl SimWorker {
                     self.remaining.remove(&req);
                     self.sched.finished(req);
                     self.completed += 1;
+                    self.fam_mut(req).completed += 1;
                     if let Some((led, _)) = &ledger {
                         led.completed(req, self.now);
                     }
@@ -1185,6 +1441,9 @@ impl SimWorker {
                 .expect("pool invariants after replay");
         }
         let stats = self.kv.stats().cloned().unwrap_or_default();
+        let mut families: Vec<FamilyStats> =
+            self.fam.into_values().collect();
+        families.sort_by_key(|f| f.family);
         ReplayResult {
             label,
             slots: self.slots_n,
@@ -1219,6 +1478,7 @@ impl SimWorker {
                     .collect()
             },
             stats,
+            families,
             outputs: self.outputs,
         }
     }
@@ -1320,6 +1580,12 @@ pub fn render_comparison(paged: &ReplayResult, dense: &ReplayResult)
     t.row(&["capacity-wait ticks".into(),
             paged.stats.capacity_wait_ticks.to_string(),
             "0".into()]);
+    if paged.stats.beam_forks > 0 {
+        // Beam reorder as page fork/prune (Obs #4): only a paged pool
+        // can express it — dense slots would have copied the KV.
+        t.row(&["beam forks (fork/prune)".into(),
+                paged.stats.beam_forks.to_string(), "0".into()]);
+    }
     if paged.transfer_bytes > 0 || paged.stats.swap_decisions > 0
         || paged.stats.recompute_decisions > 0
     {
@@ -1331,6 +1597,33 @@ pub fn render_comparison(paged: &ReplayResult, dense: &ReplayResult)
                 format!("{}/{}", paged.stats.swap_decisions,
                         paged.stats.recompute_decisions),
                 "0/0".into()]);
+    }
+    t.render()
+}
+
+/// Per-modality latency and attribution table for a mixed-fleet
+/// replay (`mmserve kv --mix`): one row per request family with the
+/// paper's per-modality lens — TTFT/TBT percentiles (Fig. 6/7), plus
+/// simulated busy/idle attribution so batch interference between
+/// chat, Seamless, and HSTU cohorts is visible per family.
+pub fn render_family_table(r: &ReplayResult) -> String {
+    let mut t = Table::new(&[
+        "family", "requests", "completed", "mean TTFT", "p99 TTFT",
+        "mean TBT", "p99 TBT", "busy (sim)", "batch idle (sim)",
+    ]);
+    let f2 = |x: f64| format!("{x:.2}");
+    for f in &r.families {
+        t.row(&[
+            f.family.label().into(),
+            f.requests.to_string(),
+            f.completed.to_string(),
+            f2(f.ttft.mean()),
+            f2(f.ttft.percentile(99.0)),
+            f2(f.tbt.mean()),
+            f2(f.tbt.percentile(99.0)),
+            f2(f.busy),
+            f2(f.idle),
+        ]);
     }
     t.render()
 }
@@ -2107,5 +2400,134 @@ mod tests {
         // TTFT covers queue + prefill + transfer: the fleet's slowest
         // first token is later than a pure prefill would be.
         assert!(d.ttft.percentile(50.0) > 0.0);
+    }
+
+    /// Tentpole acceptance: chat + Seamless + HSTU in one replay,
+    /// completing deterministically with per-modality TTFT/TBT and
+    /// idle attribution.
+    #[test]
+    fn mixed_fleet_replay_reports_per_modality_latency() {
+        let mix = MixSpec::parse("seamless:30,hstu:30", 2).unwrap();
+        let cfg = ReplayConfig {
+            mix: Some(mix),
+            ..ReplayConfig::default()
+        };
+        let a = replay(&cfg, true);
+        let b = replay(&cfg, true);
+        assert_eq!(a.outputs, b.outputs, "mixed replay is deterministic");
+        assert_eq!(a.sim_time, b.sim_time);
+        assert_eq!(a.stats.beam_forks, b.stats.beam_forks);
+        assert_eq!(a.completed, cfg.requests);
+        // Per-family slices cover the workload exactly.
+        let w = generate_workload(&cfg);
+        let mut expect: HashMap<SimFamily, usize> = HashMap::new();
+        for r in &w {
+            *expect.entry(r.family).or_default() += 1;
+        }
+        assert_eq!(expect.len(), 3, "64 draws cover all three families");
+        assert_eq!(a.families.len(), 3);
+        for f in &a.families {
+            assert_eq!(f.requests, expect[&f.family], "{:?}", f.family);
+            assert_eq!(f.completed, f.requests, "{:?}", f.family);
+            assert_eq!(f.ttft.len(), f.requests,
+                       "one TTFT per request: {:?}", f.family);
+        }
+        let hstu = a.families.iter()
+            .find(|f| f.family == SimFamily::Hstu).unwrap();
+        assert!(hstu.tbt.is_empty(), "zero decode ticks (Obs #1)");
+        assert_eq!(hstu.idle, 0.0, "no batch interference without decode");
+        let seam = a.families.iter()
+            .find(|f| f.family == SimFamily::Seamless).unwrap();
+        assert!(!seam.tbt.is_empty());
+        // Width 2: exactly one fork/prune per Seamless decode
+        // participation, and nobody else forks.
+        assert_eq!(a.stats.beam_forks, seam.tbt.len() as u64);
+        // HSTU streams are empty (first token = result); the
+        // autoregressive families decode their full budgets.
+        for r in &w {
+            match r.family {
+                SimFamily::Hstu => assert!(a.outputs[&r.id].is_empty()),
+                _ => assert_eq!(a.outputs[&r.id].len(), r.decode,
+                                "request {}", r.id),
+            }
+        }
+        let s = render_family_table(&a);
+        assert!(s.contains("chat") && s.contains("seamless")
+                && s.contains("hstu"));
+    }
+
+    /// Obs #4 expressed in pages: beam reorder is refcount fork/prune,
+    /// so widening the beam moves *only* the `beam_forks` counter —
+    /// streams, clock, completions, and preemptions are bit-identical.
+    #[test]
+    fn beam_width_never_perturbs_streams_or_clock() {
+        let mk = |beam| ReplayConfig {
+            mix: Some(MixSpec::parse("seamless:100", beam).unwrap()),
+            ..ReplayConfig::default()
+        };
+        let b1 = replay(&mk(1), true);
+        let b4 = replay(&mk(4), true);
+        assert_eq!(b1.stats.beam_forks, 0, "width 1 never forks");
+        assert!(b4.stats.beam_forks > 0, "width 4 forks siblings");
+        assert_eq!(b4.stats.beam_forks % 3, 0,
+                   "three siblings per participation");
+        assert_eq!(b4.outputs, b1.outputs);
+        assert_eq!(b4.sim_time, b1.sim_time);
+        assert_eq!(b4.completed, b1.completed);
+        assert_eq!(b4.stats.preemptions, b1.stats.preemptions);
+    }
+
+    /// Obs #1: an all-HSTU stream is served entirely as prefill-only
+    /// plans — the replay completes without a single decode tick.
+    #[test]
+    fn hstu_only_mix_is_prefill_only() {
+        let cfg = ReplayConfig {
+            mix: Some(MixSpec::parse("hstu:100", 2).unwrap()),
+            ..ReplayConfig::default()
+        };
+        let r = replay(&cfg, true);
+        assert_eq!(r.completed, cfg.requests, "{r:?}");
+        assert_eq!(r.decode_ticks, 0, "zero decode ticks");
+        assert_eq!(r.tokens_decoded, 0);
+        assert_eq!(r.ttft.len(), cfg.requests,
+                   "the first token is the result");
+        assert!(r.tbt.is_empty());
+        assert!(r.outputs.values().all(|o| o.is_empty()));
+        assert_eq!(r.stats.beam_forks, 0);
+        assert!(r.sim_time > 0.0, "prefill compute still costs");
+    }
+
+    #[test]
+    fn mix_spec_parses_and_rejects_garbage() {
+        let m = MixSpec::parse("seamless:25,hstu:10", 3).unwrap();
+        assert_eq!(m, MixSpec {
+            seamless_percent: 25,
+            hstu_percent: 10,
+            beam: 3,
+        });
+        // Empty spec: pure chat; width clamps into 1..=32.
+        let m = MixSpec::parse("", 0).unwrap();
+        assert_eq!((m.seamless_percent, m.hstu_percent, m.beam),
+                   (0, 0, 1));
+        assert_eq!(MixSpec::parse("chat:40,hstu:60", 40).unwrap().beam,
+                   32);
+        assert!(MixSpec::parse("vision:10", 2).is_err());
+        assert!(MixSpec::parse("seamless:999,hstu:0", 2).is_err());
+        assert!(MixSpec::parse("seamless", 2).is_err());
+    }
+
+    /// Guard for every pre-mix caller: without a [`MixSpec`] the
+    /// workload is pure chat (nonzero decode everywhere) and the
+    /// result carries a single Chat family slice.
+    #[test]
+    fn no_mix_keeps_every_request_chat_with_nonzero_decode() {
+        let cfg = ReplayConfig::default();
+        let w = generate_workload(&cfg);
+        assert!(w.iter()
+            .all(|r| r.family == SimFamily::Chat && r.decode > 0));
+        let r = replay(&cfg, true);
+        assert_eq!(r.families.len(), 1);
+        assert_eq!(r.families[0].family, SimFamily::Chat);
+        assert_eq!(r.families[0].completed, r.completed);
     }
 }

@@ -60,8 +60,9 @@ use mmserve::coordinator::seamless_pipe::ReorderMode;
 use mmserve::coordinator::server::{collect_stats, render_replica_reports,
                                    Router, RouterConfig};
 use mmserve::kvpool::replay::{render_chunk_comparison, render_comparison,
+                              render_family_table,
                               render_shard_comparison, replay,
-                              ReplayConfig, ReplayResult};
+                              MixSpec, ReplayConfig, ReplayResult};
 use mmserve::kvpool::KvPoolConfig;
 use mmserve::models::{ModelKind, TaskKind};
 use mmserve::perfmodel::breakdown::render;
@@ -796,6 +797,13 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
          "fabric KV geometry: llama-7b|llama-34b|chameleon-7b|\
           chameleon-34b",
          Some("llama-7b"))
+    .opt("mix",
+         "mixed fleet: percent per family, e.g. \"seamless:25,hstu:25\" \
+          (rest chat; empty = pure chat)",
+         Some(""))
+    .opt("beam",
+         "beam width Seamless replay requests fork per decode tick",
+         Some("2"))
     .opt("seed", "workload seed", Some("7"))
     .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
     .flag("disaggregate",
@@ -808,6 +816,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let chunk = a.get_usize("chunk-prefill", 0);
+    let mix = parse_mix(&a)?;
     let cfg = ReplayConfig {
         requests: a.get_usize("requests", 64),
         system_prompt_len: a.get_usize("system-prompt", 48),
@@ -818,6 +827,7 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         max_seq: a.get_usize("max-seq", 512),
         prefill_budget: a.get_usize("prefill-budget", 0),
         seed: a.get_usize("seed", 7) as u64,
+        mix,
         ..ReplayConfig::default()
     };
     let replicas = a.get_usize("replicas", 1).max(1);
@@ -846,6 +856,17 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     // summed aggregate below).
     println!("\n== pool counters (single worker, this replay only) ==");
     println!("{}", paged.stats.render());
+
+    // Mixed fleet: chat + Seamless (beam fork/prune) + HSTU
+    // (prefill-only) through the same scheduler and pool, with the
+    // paper's per-modality latency/attribution lens.
+    if mix.is_some() {
+        println!(
+            "\n== mixed fleet: per-modality latency and attribution \
+             (simulated clock) =="
+        );
+        println!("{}", render_family_table(&paged));
+    }
 
     // Sharded run: the same budget split across `--shards` device
     // arenas — per-shard occupancy, spills, and the capacity parity
@@ -970,6 +991,18 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `--mix "seamless:25,hstu:25" --beam B`: the mixed-fleet selector
+/// shared by `kv`, `stats`, and `explain` (empty `--mix` = pure chat).
+fn parse_mix(a: &mmserve::substrate::cli::Args)
+             -> Result<Option<MixSpec>> {
+    let spec = a.get_or("mix", "");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    let beam = a.get_usize("beam", 2);
+    Ok(Some(MixSpec::parse(&spec, beam).map_err(anyhow::Error::msg)?))
+}
+
 /// `--kill R@K`: crash replica R after K requests were delivered.
 fn parse_kill(spec: &str) -> Result<Option<KillSpec>> {
     if spec.is_empty() {
@@ -1016,6 +1049,13 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     .opt("chunk-prefill",
          "chunked prefill: max new prompt tokens per tick (0 = whole)",
          Some("0"))
+    .opt("mix",
+         "mixed fleet: percent per family, e.g. \"seamless:25,hstu:25\" \
+          (rest chat; empty = pure chat)",
+         Some(""))
+    .opt("beam",
+         "beam width Seamless replay requests fork per decode tick",
+         Some("2"))
     .opt("kill",
          "crash injection R@K: kill replica R after K deliveries",
          Some(""))
@@ -1037,6 +1077,7 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     let shards = a.get_usize("shards", 2).max(1);
     let policy = parse_policy(&a)?;
     let kill = parse_kill(&a.get_or("kill", ""))?;
+    let mix = parse_mix(&a)?;
     let rcfg = RoutingReplayConfig {
         base: ReplayConfig {
             requests: a.get_usize("requests", 96),
@@ -1047,6 +1088,7 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
             tenants: a.get_usize("tenants", 3).max(1),
             shards,
             seed: a.get_usize("seed", 7) as u64,
+            mix,
             ..ReplayConfig::default()
         },
         replicas,
@@ -1139,8 +1181,12 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
     let tenant_energy: std::collections::HashMap<String, EnergyBreakdown> =
         energy.energy_by_tenant(&ledger.snapshot()).into_iter().collect();
 
+    // In a mixed fleet the sketch/ledger cohort label carries the
+    // model family instead of the tenant id, so the same table (and
+    // the energy attribution behind it) becomes per-modality.
+    let who = if mix.is_some() { "family" } else { "tenant" };
     let mut tt = Table::new(&[
-        "tenant", "requests", "ttft p50", "ttft p99", "tbt p50",
+        who, "requests", "ttft p50", "ttft p99", "tbt p50",
         "tbt p99", "energy J", "tok/J",
     ]);
     for tenant in snap.sketch_label_values(TTFT_MS, "tenant") {
@@ -1161,7 +1207,7 @@ fn cmd_stats(argv: &[String]) -> Result<()> {
         ]);
     }
     println!(
-        "\nper-tenant SLO percentiles + modeled energy ({} on {}):\n{}",
+        "\nper-{who} SLO percentiles + modeled energy ({} on {}):\n{}",
         energy.family.as_str(),
         energy.device.name,
         tt.render()
@@ -1277,6 +1323,13 @@ fn cmd_explain(argv: &[String]) -> Result<()> {
     .opt("chunk-prefill",
          "chunked prefill: max new prompt tokens per tick (0 = whole)",
          Some("0"))
+    .opt("mix",
+         "mixed fleet: percent per family, e.g. \"seamless:25,hstu:25\" \
+          (rest chat; empty = pure chat)",
+         Some(""))
+    .opt("beam",
+         "beam width Seamless replay requests fork per decode tick",
+         Some("2"))
     .opt("kill",
          "crash injection R@K: kill replica R after K deliveries",
          Some(""))
@@ -1327,6 +1380,7 @@ fn cmd_explain(argv: &[String]) -> Result<()> {
             tenants: a.get_usize("tenants", 3).max(1),
             shards,
             seed: a.get_usize("seed", 7) as u64,
+            mix: parse_mix(&a)?,
             ..ReplayConfig::default()
         },
         replicas,

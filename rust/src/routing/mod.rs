@@ -47,6 +47,26 @@ use std::sync::{Mutex, MutexGuard};
 use crate::kvpool::prefix::block_hashes;
 
 /// How the router picks a replica for each request.
+///
+/// # Examples
+///
+/// The policy only chooses *how* [`rank`] orders the per-replica
+/// views; the decision itself is a pure function:
+///
+/// ```
+/// use mmserve::routing::{rank, ReplicaView, RoutingPolicy};
+///
+/// // Replica 0: cold cache, short queue. Replica 1: four cached
+/// // prompt blocks, longer queue.
+/// let views = [
+///     ReplicaView { cached_blocks: 0, depth: 1, shard_spread: 0 },
+///     ReplicaView { cached_blocks: 4, depth: 3, shard_spread: 1 },
+/// ];
+/// // Prefix affinity pays the deeper queue to reuse the warm cache;
+/// // least-loaded ignores warmth and takes the short queue.
+/// assert_eq!(rank(RoutingPolicy::PrefixAffinity, &views, 0)[0], 1);
+/// assert_eq!(rank(RoutingPolicy::LeastLoaded, &views, 0)[0], 0);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum RoutingPolicy {
     /// Rotate through replicas regardless of state.

@@ -20,9 +20,9 @@
 
 use std::collections::HashMap;
 
-use crate::kvpool::replay::{generate_workload, ReplayConfig,
-                            ReplayResult, SimRequest, SimRole,
-                            SimWorker};
+use crate::kvpool::replay::{generate_workload, FamilyStats,
+                            ReplayConfig, ReplayResult, SimFamily,
+                            SimRequest, SimRole, SimWorker};
 use crate::kvpool::PoolStats;
 use crate::substrate::metrics::Histogram;
 use crate::substrate::table::Table;
@@ -121,6 +121,10 @@ pub struct RoutingReplayResult {
     pub transfer_time: f64,
     /// Bytes moved over the fabric fleet-wide.
     pub transfer_bytes: u64,
+    /// Per-modality slices merged across workers (sorted by family;
+    /// counts summed, latency histograms merged sample-by-sample) —
+    /// the mixed-fleet lens on a replicated run.
+    pub families: Vec<FamilyStats>,
 }
 
 impl RoutingReplayResult {
@@ -393,12 +397,28 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
     let mut ticks = 0u64;
     let mut transfer_time = 0.0f64;
     let mut transfer_bytes = 0u64;
+    let mut fam: HashMap<SimFamily, FamilyStats> = HashMap::new();
     for r in &per_worker {
         for &v in r.ttft.samples() {
             ttft.record(v);
         }
         for &v in r.tbt.samples() {
             tbt.record(v);
+        }
+        for f in &r.families {
+            let e = fam
+                .entry(f.family)
+                .or_insert_with(|| FamilyStats::empty(f.family));
+            e.requests += f.requests;
+            e.completed += f.completed;
+            for &v in f.ttft.samples() {
+                e.ttft.record(v);
+            }
+            for &v in f.tbt.samples() {
+                e.tbt.record(v);
+            }
+            e.busy += f.busy;
+            e.idle += f.idle;
         }
         outputs.extend(
             r.outputs.iter().map(|(k, v)| (*k, v.clone())),
@@ -410,6 +430,8 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         transfer_time += r.transfer_time;
         transfer_bytes += r.transfer_bytes;
     }
+    let mut families: Vec<FamilyStats> = fam.into_values().collect();
+    families.sort_by_key(|f| f.family);
     RoutingReplayResult {
         policy,
         replicas: n,
@@ -426,6 +448,7 @@ fn routing_replay_inner(cfg: &RoutingReplayConfig,
         roles,
         transfer_time,
         transfer_bytes,
+        families,
     }
 }
 
@@ -622,8 +645,50 @@ pub fn render_worker_counters(result: &RoutingReplayResult) -> String {
 mod tests {
     use super::*;
 
+    use crate::kvpool::replay::MixSpec;
+
     fn cfg2() -> RoutingReplayConfig {
         RoutingReplayConfig::default()
+    }
+
+    /// Mixed fleet behind one router: the per-worker family slices
+    /// reassemble exactly into the fleet's per-modality view.
+    #[test]
+    fn fleet_merges_per_family_slices() {
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                mix: Some(MixSpec::parse("seamless:30,hstu:30", 2)
+                    .unwrap()),
+                ..ReplayConfig::default()
+            },
+            ..RoutingReplayConfig::default()
+        };
+        let r = routing_replay(&cfg, RoutingPolicy::RoundRobin);
+        assert_eq!(r.completed, cfg.base.requests);
+        assert_eq!(r.families.len(), 3, "all three families served");
+        let mut sum: HashMap<SimFamily, (usize, usize, usize)> =
+            HashMap::new();
+        for w in &r.per_worker {
+            for f in &w.families {
+                let e = sum.entry(f.family).or_default();
+                e.0 += f.requests;
+                e.1 += f.completed;
+                e.2 += f.ttft.len();
+            }
+        }
+        let mut completed = 0;
+        for f in &r.families {
+            let e = sum[&f.family];
+            assert_eq!(f.requests, e.0, "{:?}", f.family);
+            assert_eq!(f.completed, e.1, "{:?}", f.family);
+            assert_eq!(f.ttft.len(), e.2, "{:?}", f.family);
+            completed += f.completed;
+        }
+        assert_eq!(completed, r.completed,
+                   "family slices partition the fleet's completions");
+        let hstu = r.families.iter()
+            .find(|f| f.family == SimFamily::Hstu).unwrap();
+        assert!(hstu.tbt.is_empty(), "zero decode ticks fleet-wide");
     }
 
     /// Acceptance criterion (tentpole): on a workload where every

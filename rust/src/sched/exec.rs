@@ -4,7 +4,7 @@
 //! scheduler: it can feed prompt chunks (`prefill_chunk`), take one
 //! decode step for a set of slots (`decode_step`), and — for
 //! self-speculative engines — verify a drafted window in one pass
-//! (`verify`). Four implementations exist:
+//! (`verify`). Six implementations exist:
 //!
 //! | executor                         | lives in                  |
 //! |----------------------------------|---------------------------|
@@ -12,16 +12,25 @@
 //! | `GraphExecutor` (compiled graph, bs=1)      | `coordinator::decoder_loop` |
 //! | `EagerExecutor` (per-op dispatch, bs=1)     | `coordinator::eager` |
 //! | `LayerSkipExecutor` (draft/verify, bs=1)    | `coordinator::layerskip` |
+//! | `SeamlessExecutor` (beam decoder, B beams)  | `coordinator::seamless_pipe` |
+//! | `HstuExecutor` (one-shot scoring, prefill-only) | `coordinator::hstu_loop` |
 //!
-//! The drivers here replace the four hand-rolled generate loops:
+//! The drivers here replace the hand-rolled generate loops:
 //! [`generate`] runs the shared bs=1 prefill→sample→decode loop (the
 //! compiled-graph and eager paths differ only in how their executor
-//! consumes the prompt), and [`generate_speculative`] runs the
-//! LayerSkip draft/verify round against the `decode_step` (draft) and
-//! `verify` hooks. The batched worker's tick driver consumes a
+//! consumes the prompt), [`generate_speculative`] runs the LayerSkip
+//! draft/verify round against the `decode_step` (draft) and `verify`
+//! hooks, and [`generate_beam`] runs length-normalized beam search
+//! where every hypothesis is a kvpool block table — a beam reorder is
+//! fork + prune plus one [`StepExecutor::reorder_slots`] device
+//! gather, not a KV copy (the paper's Obs #4 fix expressed in pages).
+//! The batched worker's tick driver consumes a
 //! [`TickPlan`](super::plan::TickPlan) against the same trait in
-//! `coordinator::server::run_tick`.
+//! `coordinator::server::run_tick`. A prefill-only executor (HSTU's
+//! one-shot scoring pass) is simply [`generate`] with `max_new == 0`:
+//! zero decode ticks, the whole request is its prompt.
 
+use std::cmp::Ordering;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -29,7 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::decoder_loop::GenResult;
 use crate::coordinator::request::SamplingParams;
 use crate::coordinator::sampling;
-use crate::kvpool::KvPool;
+use crate::kvpool::{pages_for, KvPool, DEFAULT_PAGE_SIZE};
 use crate::models::tokenizer;
 use crate::substrate::rng::Rng;
 use crate::telemetry::tracer::{Cat, WorkerTracer};
@@ -84,6 +93,48 @@ impl std::fmt::Display for SlotStateError {
 impl std::error::Error for SlotStateError {}
 
 /// One serving engine, as seen by the scheduler.
+///
+/// Implement `plan_dims`, `prefill_chunk`, and `decode_step` and any
+/// of the generic drivers ([`generate`], [`generate_speculative`],
+/// [`generate_beam`], `coordinator::server::run_tick`) can serve the
+/// engine; the optional hooks (`verify`, `reorder_slots`) opt into
+/// self-speculative and beam-search scheduling.
+///
+/// # Examples
+///
+/// A minimal greedy engine the [`generate`] driver can run — the
+/// "model" predicts token 2 after the prompt, then EOS (token 1):
+///
+/// ```
+/// use anyhow::Result;
+/// use mmserve::coordinator::request::SamplingParams;
+/// use mmserve::sched::{generate, ExecDims, SlotFeed, StepExecutor};
+///
+/// struct Scripted;
+///
+/// impl StepExecutor for Scripted {
+///     fn plan_dims(&self) -> ExecDims {
+///         ExecDims { batch: 1, max_seq: 32, vocab: 4 }
+///     }
+///     fn prefill_chunk(&mut self, _slot: usize, _tokens: &[i32],
+///                      _start: usize, is_last: bool)
+///                      -> Result<Option<Vec<f32>>> {
+///         // Logits for the last prompt position: predict token 2.
+///         Ok(is_last.then(|| vec![0.0, 0.0, 1.0, 0.0]))
+///     }
+///     fn decode_step(&mut self, _feeds: &[SlotFeed])
+///                    -> Result<Vec<f32>> {
+///         // After any decode token: predict EOS.
+///         Ok(vec![0.0, 1.0, 0.0, 0.0])
+///     }
+/// }
+///
+/// let mut exec = Scripted;
+/// let r = generate(&mut exec, None, &[3, 3], 8,
+///                  &SamplingParams::greedy())?;
+/// assert_eq!(r.tokens, vec![2, 1]); // scripted token, then EOS
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait StepExecutor {
     /// Batch width, sequence capacity, and vocab size.
     fn plan_dims(&self) -> ExecDims;
@@ -120,6 +171,16 @@ pub trait StepExecutor {
     /// speculative executor).
     fn verify_window(&self) -> usize {
         0
+    }
+
+    /// Permute per-slot device KV after a beam reorder: new slot `b`
+    /// continues from old slot `src[b]`. By the time this runs the
+    /// paging layer has already re-pointed the hypotheses' block
+    /// tables (fork + prune, no page copied); this hook is only the
+    /// device-side gather a dense decoder cache needs. Only beam
+    /// executors implement it.
+    fn reorder_slots(&mut self, _src: &[i32]) -> Result<()> {
+        bail!("this executor has no beam reorder")
     }
 }
 
@@ -304,6 +365,234 @@ pub fn generate_speculative(exec: &mut impl StepExecutor,
     })
 }
 
+/// Numerically stable log-softmax over one logits row (max-shifted
+/// log-sum-exp).
+pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse = xs.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    xs.iter().map(|&x| x - lse).collect()
+}
+
+/// The `n` largest entries of `xs` as `(index, value)`, descending.
+/// Ties keep index order (the sort is stable), so expansion is
+/// deterministic.
+pub fn top_n(xs: &[f32], n: usize) -> Vec<(usize, &f32)> {
+    let mut v: Vec<(usize, &f32)> = xs.iter().enumerate().collect();
+    v.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap_or(Ordering::Equal));
+    v.truncate(n);
+    v
+}
+
+/// Knobs for [`generate_beam`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BeamConfig {
+    /// Hypotheses kept per step (clamped to the executor's batch).
+    pub beams: usize,
+    /// Decode-step budget.
+    pub max_steps: usize,
+    /// GNMT length-normalization exponent (0 = raw log-prob).
+    pub len_penalty: f32,
+    /// Decoding starts from this token at position 0.
+    pub bos: i32,
+    /// A hypothesis emitting this token is finished (the token itself
+    /// is not part of the returned sequence).
+    pub eos: i32,
+}
+
+/// What [`generate_beam`] hands back: the best hypothesis plus the
+/// paging counters that show the reorder ran as forks, not copies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BeamResult {
+    /// Best hypothesis (EOS excluded), by normalized score.
+    pub tokens: Vec<i32>,
+    /// Length-normalized log-probability of `tokens`.
+    pub score: f32,
+    /// Decode steps taken (each steps all beams at once).
+    pub decode_steps: usize,
+    /// Block-table forks the beam reorders performed.
+    pub beam_forks: u64,
+    /// Copy-on-write page splits those forks later paid at divergence.
+    pub cow_forks: u64,
+    /// Wall-clock end-to-end seconds.
+    pub e2e: f64,
+}
+
+/// Length-normalized beam search over a [`StepExecutor`].
+///
+/// The prompt (if any) is fed through `prefill_chunk` once as
+/// encoder/cross-attention context; decoding then starts from
+/// `cfg.bos`. Every hypothesis is a block table in a private
+/// [`KvPool`]: a beam reorder forks the surviving parents' tables
+/// (refcount bumps — no page is copied until a hypothesis diverges
+/// within a shared page, which costs one COW split) and prunes dead
+/// hypotheses with `release_discard`, leaving any cached prefix
+/// untouched. The executor only sees one
+/// [`StepExecutor::reorder_slots`] gather per step for whatever dense
+/// per-slot state it still holds. This is the paper's Obs #4 fix
+/// (beam-search KV churn) expressed in pages instead of copies.
+///
+/// Finished hypotheses are scored `logprob / len^len_penalty` (GNMT);
+/// a hypothesis that never emits `cfg.eos` within `cfg.max_steps` is
+/// scored over its current length.
+pub fn generate_beam(exec: &mut impl StepExecutor,
+                     tele: Option<&WorkerTracer>, prompt: &[i32],
+                     cfg: &BeamConfig) -> Result<BeamResult> {
+    const ROOT: u64 = 0;
+    let t0 = Instant::now();
+    let dims = exec.plan_dims();
+    let bm = cfg.beams.max(1).min(dims.batch.max(1));
+    let _tick_scope = tele.map(|t| t.tick_scope());
+
+    if !prompt.is_empty() {
+        let prefill_span = tele.map(|t| t.span(Cat::Prefill, "prefill"));
+        exec.prefill_chunk(0, prompt, 0, true)?;
+        drop(prefill_span);
+    }
+
+    // Worst case mid-reorder: the root anchor plus bm old and bm new
+    // hypothesis tables, each at most one sequence deep.
+    let mut pool = KvPool::new(
+        (2 * bm + 1) * pages_for(dims.max_seq, DEFAULT_PAGE_SIZE),
+        DEFAULT_PAGE_SIZE,
+        dims.max_seq,
+    );
+    pool.alloc(ROOT, &[cfg.bos])?;
+    let mut next_id: u64 = 1;
+    // ids[b] = the block table behind hypothesis b (root for beam 0 at
+    // step 0, a forked child afterwards). The root table stays live for
+    // the whole search as the shared ancestor every fork chains off.
+    let mut ids: Vec<Option<u64>> = vec![None; bm];
+    ids[0] = Some(ROOT);
+
+    let mut tokens = vec![cfg.bos; bm];
+    let mut scores = vec![f32::NEG_INFINITY; bm];
+    scores[0] = 0.0;
+    let mut seqs: Vec<Vec<i32>> = vec![Vec::new(); bm];
+    let mut finished: Vec<(Vec<i32>, f32)> = Vec::new();
+    let mut decode_steps = 0usize;
+
+    let budget = cfg.max_steps.min(dims.max_seq.saturating_sub(2));
+    for step in 0..budget {
+        if let Some(t) = tele {
+            t.next_tick();
+        }
+        let _step_span =
+            tele.map(|t| t.span(Cat::Decode, exec.step_span_name()));
+        let feeds: Vec<SlotFeed> = (0..bm)
+            .map(|b| SlotFeed { slot: b, token: tokens[b], pos: step })
+            .collect();
+        let logits = exec.decode_step(&feeds)?;
+        decode_steps += 1;
+
+        let mut new_tokens = vec![cfg.bos; bm];
+        let mut new_scores = vec![f32::NEG_INFINITY; bm];
+        let mut new_seqs: Vec<Vec<i32>> = vec![Vec::new(); bm];
+        let mut src_idx = vec![0i32; bm];
+        let mut filled = 0usize;
+        {
+            let _s = tele.map(|t| t.span(Cat::Sample, "beam_expand"));
+            let mut candidates: Vec<(f32, usize, i32)> = Vec::new();
+            for (b, &score) in scores.iter().enumerate().take(bm) {
+                if score == f32::NEG_INFINITY {
+                    continue;
+                }
+                let row = &logits[b * dims.vocab..(b + 1) * dims.vocab];
+                let lp = log_softmax(row);
+                for (tok, val) in top_n(&lp, bm + 1) {
+                    candidates.push((score + *val, b, tok as i32));
+                }
+            }
+            candidates.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal)
+            });
+            for &(score, src, tok) in &candidates {
+                if tok == cfg.eos {
+                    let len = seqs[src].len();
+                    finished.push((
+                        seqs[src].clone(),
+                        score / ((len + 1) as f32).powf(cfg.len_penalty),
+                    ));
+                } else if filled < bm {
+                    new_tokens[filled] = tok;
+                    new_scores[filled] = score;
+                    let mut s = seqs[src].clone();
+                    s.push(tok);
+                    new_seqs[filled] = s;
+                    src_idx[filled] = src as i32;
+                    filled += 1;
+                }
+                if filled == bm {
+                    break;
+                }
+            }
+        }
+        if filled == 0 {
+            break;
+        }
+
+        // The reorder, in pages: every surviving hypothesis forks its
+        // parent's table (refcount bump) and advances by its own new
+        // token (COW only where it diverges inside a shared page); the
+        // superseded hypotheses are discarded without touching the
+        // prefix cache.
+        let mut new_ids: Vec<Option<u64>> = vec![None; bm];
+        for b in 0..filled {
+            let child = next_id;
+            next_id += 1;
+            let parent = ids[src_idx[b] as usize]
+                .context("beam candidate came from a dead hypothesis")?;
+            pool.fork(parent, child)?;
+            pool.advance(child, new_tokens[b])?;
+            new_ids[b] = Some(child);
+        }
+        for id in ids.iter().flatten() {
+            if *id != ROOT {
+                pool.release_discard(*id)?;
+            }
+        }
+        ids = new_ids;
+        exec.reorder_slots(&src_idx)?;
+
+        tokens = new_tokens;
+        scores = new_scores;
+        seqs = new_seqs;
+    }
+
+    // Unfinished hypotheses compete at their current length.
+    for b in 0..bm {
+        if scores[b] == f32::NEG_INFINITY {
+            continue;
+        }
+        let len = seqs[b].len().max(1);
+        finished.push((
+            std::mem::take(&mut seqs[b]),
+            scores[b] / (len as f32).powf(cfg.len_penalty),
+        ));
+    }
+    for id in ids.iter().flatten() {
+        if *id != ROOT {
+            pool.release_discard(*id)?;
+        }
+    }
+    pool.release(ROOT)?;
+    debug_assert!(pool.check_invariants().is_ok());
+    let (beam_forks, cow_forks) =
+        (pool.stats.beam_forks, pool.stats.cow_forks);
+
+    let (tokens, score) = finished
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+        .unwrap_or_default();
+    Ok(BeamResult {
+        tokens,
+        score,
+        decode_steps,
+        beam_forks,
+        cow_forks,
+        e2e: t0.elapsed().as_secs_f64(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -472,6 +761,151 @@ mod tests {
         // The emitted chain still follows the *full* model: bonus after
         // window[0] at pos p is next[p].
         assert_eq!(r.tokens[1], Scripted::at(&next, 3));
+    }
+
+    const BEAM_VOCAB: usize = 8;
+
+    /// Two-slot beam mock: logits are scripted per step (rows for both
+    /// slots), and every `reorder_slots` call is recorded.
+    struct ScriptedBeam {
+        /// `rows[step][slot * BEAM_VOCAB ..]` = raw logits.
+        rows: Vec<Vec<f32>>,
+        step: usize,
+        reorders: Vec<Vec<i32>>,
+    }
+
+    impl ScriptedBeam {
+        /// Raw logits favoring `tok` overwhelmingly (one row).
+        fn dominant(tok: usize) -> Vec<f32> {
+            let mut r = vec![0.0f32; BEAM_VOCAB];
+            r[tok] = 50.0;
+            r
+        }
+
+        fn flat() -> Vec<f32> {
+            vec![0.0f32; BEAM_VOCAB]
+        }
+    }
+
+    impl StepExecutor for ScriptedBeam {
+        fn plan_dims(&self) -> ExecDims {
+            ExecDims { batch: 2, max_seq: 32, vocab: BEAM_VOCAB }
+        }
+
+        fn prefill_chunk(&mut self, _slot: usize, _tokens: &[i32],
+                         _start: usize, _is_last: bool)
+                         -> Result<Option<Vec<f32>>> {
+            Ok(None)
+        }
+
+        fn decode_step(&mut self, feeds: &[SlotFeed]) -> Result<Vec<f32>> {
+            assert_eq!(feeds.len(), 2);
+            assert_eq!(feeds[0].pos, self.step);
+            let row = self.rows[self.step].clone();
+            self.step += 1;
+            Ok(row)
+        }
+
+        fn reorder_slots(&mut self, src: &[i32]) -> Result<()> {
+            self.reorders.push(src.to_vec());
+            Ok(())
+        }
+    }
+
+    fn beam_cfg(max_steps: usize) -> BeamConfig {
+        BeamConfig {
+            beams: 2,
+            max_steps,
+            len_penalty: 0.0,
+            bos: 0,
+            eos: tokenizer::EOS,
+        }
+    }
+
+    #[test]
+    fn beam_follows_dominant_path_and_reorders_by_fork() {
+        // Slot 0 carries the dominant chain 4 → 6 → EOS; slot 1's rows
+        // are flat, so its hypotheses stay ~50 nats behind and never
+        // win. The EOS at step 2 finishes hypothesis [4, 6].
+        let mut exec = ScriptedBeam {
+            rows: vec![
+                [ScriptedBeam::dominant(4), ScriptedBeam::flat()].concat(),
+                [ScriptedBeam::dominant(6), ScriptedBeam::flat()].concat(),
+                [ScriptedBeam::dominant(tokenizer::EOS as usize),
+                 ScriptedBeam::flat()]
+                .concat(),
+            ],
+            step: 0,
+            reorders: Vec::new(),
+        };
+        let r =
+            generate_beam(&mut exec, None, &[], &beam_cfg(3)).unwrap();
+        assert_eq!(r.tokens, vec![4, 6]);
+        assert!(r.score > -1.0, "dominant path scores near zero nats");
+        assert_eq!(r.decode_steps, 3);
+        // Every step re-fills both beams from slot 0's candidates, so
+        // every reorder is a fork of the step's best hypothesis.
+        assert_eq!(exec.reorders, vec![vec![0, 0]; 3]);
+        // 2 forks per reorder; each fork pays COW when it diverges
+        // inside the shared tail page.
+        assert_eq!(r.beam_forks, 6);
+        assert!(r.cow_forks >= 1);
+    }
+
+    #[test]
+    fn beam_scores_unfinished_hypotheses_at_budget() {
+        // No EOS within the budget: the best live hypothesis wins with
+        // a length-normalized score.
+        let mut exec = ScriptedBeam {
+            rows: vec![
+                [ScriptedBeam::dominant(4), ScriptedBeam::flat()].concat(),
+                [ScriptedBeam::dominant(6), ScriptedBeam::flat()].concat(),
+            ],
+            step: 0,
+            reorders: Vec::new(),
+        };
+        let r =
+            generate_beam(&mut exec, None, &[], &beam_cfg(2)).unwrap();
+        assert_eq!(r.tokens, vec![4, 6]);
+        assert_eq!(r.decode_steps, 2);
+        assert_eq!(exec.reorders.len(), 2);
+    }
+
+    #[test]
+    fn beam_on_executor_without_reorder_hook_errors() {
+        // `Scripted` (bs=1, no reorder_slots) cannot run beam search:
+        // the default hook refuses after the first expansion.
+        let mut exec = Scripted::new(vec![5; MAX_SEQ]);
+        let err = generate_beam(
+            &mut exec,
+            None,
+            &[],
+            &BeamConfig {
+                beams: 1,
+                max_steps: 2,
+                len_penalty: 0.0,
+                bos: 0,
+                eos: tokenizer::EOS,
+            },
+        );
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("no beam reorder"));
+    }
+
+    #[test]
+    fn top_n_is_stable_on_ties() {
+        let xs = [1.0f32, 5.0, 1.0, 5.0];
+        let idx: Vec<usize> =
+            top_n(&xs, 4).into_iter().map(|(i, _)| i).collect();
+        assert_eq!(idx, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn log_softmax_is_normalized() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp.iter().all(|&x| x < 0.0));
     }
 
     #[test]

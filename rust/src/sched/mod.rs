@@ -16,12 +16,15 @@
 //!   chunks interleaved with decode ticks, which is the paper's
 //!   prefill/decode-interference lever.
 //! * [`exec`] — the [`StepExecutor`] trait (`plan_dims` /
-//!   `prefill_chunk` / `decode_step` / `verify` hooks) and the generic
-//!   drivers: [`exec::generate`] (one-request decode loop shared by the
-//!   compiled-graph and eager executors) and
-//!   [`exec::generate_speculative`] (the LayerSkip draft/verify round).
-//!   The batched worker's `run_tick` in `coordinator::server` consumes
-//!   a [`TickPlan`] against the same trait.
+//!   `prefill_chunk` / `decode_step` / `verify` / `reorder_slots`
+//!   hooks) and the generic drivers: [`exec::generate`] (one-request
+//!   decode loop shared by the compiled-graph and eager executors),
+//!   [`exec::generate_speculative`] (the LayerSkip draft/verify
+//!   round), and [`exec::generate_beam`] (length-normalized beam
+//!   search whose reorder is a kvpool block-table fork + prune, not a
+//!   KV copy). The batched worker's `run_tick` in
+//!   `coordinator::server` consumes a [`TickPlan`] against the same
+//!   trait.
 //!
 //! ```text
 //!            requests ──► Batcher queue
@@ -33,12 +36,14 @@
 //!                              run_tick(plan, executor)
 //!                              │  prefill_chunk / decode_step
 //!                              ▼
-//!              StepExecutor: batched graph │ bs=1 graph │ eager │ layerskip
+//!   StepExecutor: batched graph │ bs=1 graph │ eager │ layerskip
+//!                 │ seamless beam │ hstu one-shot
 //! ```
 
 pub mod exec;
 pub mod plan;
 
-pub use exec::{generate, generate_speculative, ExecDims, SlotFeed,
-               SlotStateError, StepExecutor};
+pub use exec::{generate, generate_beam, generate_speculative,
+               log_softmax, top_n, BeamConfig, BeamResult, ExecDims,
+               SlotFeed, SlotStateError, StepExecutor};
 pub use plan::{PlannedChunk, SchedConfig, Scheduler, TickPlan};

@@ -288,6 +288,21 @@ impl WorkerTracer {
     }
 }
 
+/// Run `f` under a span (when `wt` is tracing) and return its result
+/// plus the measured wall-clock seconds. The measurement itself does
+/// not depend on tracing being on — callers that keep their own
+/// per-stage accumulators (`OpTimes`) get identical numbers either
+/// way, with the span recorded as a bonus when a tracer is attached.
+pub fn timed<R>(wt: Option<&WorkerTracer>, cat: Cat, name: &str,
+                f: impl FnOnce() -> R) -> (R, f64) {
+    let guard = wt.map(|t| t.span(cat, name));
+    let t0 = Instant::now();
+    let r = f();
+    let secs = t0.elapsed().as_secs_f64();
+    drop(guard);
+    (r, secs)
+}
+
 /// Clears the worker's ambient tick when dropped (see
 /// [`WorkerTracer::tick_scope`]).
 pub struct TickScope<'a> {
@@ -554,6 +569,25 @@ mod tests {
         assert_eq!(exec.tick, Some(1));
         let after = t.spans.iter().find(|s| s.name == "after").unwrap();
         assert_eq!(after.tick, None, "tick must not leak past the scope");
+    }
+
+    #[test]
+    fn timed_measures_with_and_without_tracer() {
+        let ((), secs) = timed(None, Cat::Execute, "untracked", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(secs >= 0.001, "timing works with no tracer attached");
+
+        let tr = Tracer::new();
+        let wt = tr.worker("w0");
+        let (v, secs) =
+            timed(Some(&wt), Cat::Tokenize, "tracked", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+        let t = tr.drain();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.spans[0].name, "tracked");
+        assert_eq!(t.spans[0].cat, Cat::Tokenize);
     }
 
     #[test]
