@@ -4,8 +4,10 @@
 Reads BENCH_kvpool.json and BENCH_routing.json (written by
 `mmserve kv --bench-json`), BENCH_stats.json (written by
 `mmserve stats --bench-json`), BENCH_explain.json (written by
-`mmserve explain --bench-json`), and BENCH_fabric.json (written by
-`mmserve kv --disaggregate --fabric-json`) and checks them three ways:
+`mmserve explain --bench-json`), BENCH_fabric.json (written by
+`mmserve kv --disaggregate --fabric-json`), and BENCH_autoscale.json
+(written by `mmserve kv --arrivals ... --autoscale --autoscale-json`)
+and checks them three ways:
 
 1. Hard invariants that must hold on any commit:
    - no replayed request is dropped (monolithic, sharded, or routed),
@@ -20,7 +22,12 @@ Reads BENCH_kvpool.json and BENCH_routing.json (written by
      bit-identical (same pure-observation contract),
    - disaggregated prefill/decode improves decode-worker TBT p99 over
      colocated at equal replica count, while the KV handoff stays
-     explicitly priced (non-zero transfer bytes and link utilization).
+     explicitly priced (non-zero transfer bytes and link utilization),
+   - on the open-loop diurnal+burst stream the autoscaled fleet drops
+     nothing, serves every arrival, actually scales (>= 1 scale-up and
+     >= 1 drain), beats the fixed-min fleet on burst-phase p99 TTFT,
+     pays strictly fewer replica-seconds than the fixed-max fleet, and
+     keeps goodput per replica-second within tolerance of fixed-max.
 
 2. Required schema: every metric path listed under "schema" in
    ci/perf-baseline.json must exist in the fresh bench output. A
@@ -65,12 +72,14 @@ def main():
     st = json.load(open("BENCH_stats.json"))
     ex = json.load(open("BENCH_explain.json"))
     fb = json.load(open("BENCH_fabric.json"))
+    au = json.load(open("BENCH_autoscale.json"))
     docs = {
         "BENCH_kvpool.json": kv,
         "BENCH_routing.json": rt,
         "BENCH_stats.json": st,
         "BENCH_explain.json": ex,
         "BENCH_fabric.json": fb,
+        "BENCH_autoscale.json": au,
     }
 
     # ---- hard invariants -------------------------------------------
@@ -141,8 +150,54 @@ def main():
         failures.append("disaggregated replay moved zero priced KV bytes")
     if (dig(fb, "fabric.disaggregated.link_utilization") or 0) <= 0:
         failures.append("disaggregated replay has zero link utilization")
+    # Autoscale A/B on the open-loop diurnal+burst stream: all three
+    # arms serve the identical timestamped arrivals, so drops and
+    # unserved arrivals are scheduler bugs, not load shedding. The
+    # elastic fleet must genuinely scale and must win both headline
+    # tradeoffs it exists for: burst tail latency vs the fixed-min
+    # fleet and paid capacity vs the fixed-max fleet.
+    for arm in ("autoscaled", "fixed_min", "fixed_max"):
+        if dig(au, f"autoscale.{arm}.dropped") != 0:
+            failures.append(f"autoscale A/B ({arm}) dropped requests")
+        if dig(au, f"autoscale.{arm}.completed") != dig(
+            au, f"autoscale.{arm}.arrivals"
+        ):
+            failures.append(
+                f"autoscale A/B ({arm}) left arrivals unserved "
+                f"(completed {dig(au, f'autoscale.{arm}.completed')!r} "
+                f"of {dig(au, f'autoscale.{arm}.arrivals')!r})"
+            )
+    if (dig(au, "autoscale.autoscaled.scale_ups") or 0) < 1:
+        failures.append("autoscaled replay never scaled up on the burst")
+    if (dig(au, "autoscale.autoscaled.drains") or 0) < 1:
+        failures.append(
+            "autoscaled replay never drained an idle replica"
+        )
+    if (dig(au, "autoscale.deltas.burst_p99_ttft_improvement") or 0) <= 0:
+        failures.append(
+            "autoscaled fleet does not beat the fixed-min fleet on "
+            "burst-phase p99 TTFT (improvement = "
+            f"{dig(au, 'autoscale.deltas.burst_p99_ttft_improvement')!r})"
+        )
+    if (dig(au, "autoscale.deltas.replica_seconds_saved") or 0) <= 0:
+        failures.append(
+            "autoscaled fleet does not pay fewer replica-seconds than "
+            "the fixed-max fleet (saved = "
+            f"{dig(au, 'autoscale.deltas.replica_seconds_saved')!r})"
+        )
 
     base = json.load(open(BASELINE))
+
+    # Efficiency guard tied to the committed tolerance: the elastic
+    # fleet may trade a little goodput-per-replica-second for its
+    # capacity savings, but no more than the gate tolerance below the
+    # always-on fixed-max fleet.
+    ratio = dig(au, "autoscale.deltas.goodput_ratio_vs_max")
+    if ratio is None or ratio < 1.0 - base.get("tolerance", 0.10):
+        failures.append(
+            "autoscaled goodput per replica-second fell more than the "
+            f"tolerance below the fixed-max fleet (ratio = {ratio!r})"
+        )
 
     # ---- required schema: missing keys are hard failures -----------
     for fname, paths in base.get("schema", {}).items():

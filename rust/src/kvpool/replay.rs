@@ -45,6 +45,8 @@ use crate::substrate::table::Table;
 use crate::telemetry::ledger::{RequestLedger, TickCharges};
 use crate::telemetry::live::{FlightRecorder, LiveMetrics,
                              WorkerSampler};
+use crate::workload::arrivals::{generate_arrivals, zipf_cdf,
+                                zipf_pick, ArrivalSpec};
 
 use super::{KvError, KvPoolConfig, PoolStats, PreemptMode};
 
@@ -188,6 +190,13 @@ pub struct ReplayConfig {
     /// default) is the pure-chat replay — and, like `tenants: 1`,
     /// deliberately keeps the historical RNG stream bit-identical.
     pub mix: Option<MixSpec>,
+    /// Open-loop arrival process (`--arrivals`): requests carry
+    /// timestamps from a rate curve instead of all queueing at t = 0,
+    /// multi-tenant draws become Zipf-popular, and a slice of the
+    /// stream re-arrives as warm-prefix conversation follow-ups.
+    /// `None` (the default) is the closed-loop replay — and, like
+    /// `mix: None`, keeps the historical RNG stream bit-identical.
+    pub arrivals: Option<ArrivalSpec>,
 }
 
 impl Default for ReplayConfig {
@@ -211,6 +220,7 @@ impl Default for ReplayConfig {
             seed: 7,
             fabric: None,
             mix: None,
+            arrivals: None,
         }
     }
 }
@@ -251,6 +261,15 @@ pub fn generate_workload(cfg: &ReplayConfig) -> Vec<SimRequest> {
                 .collect()
         })
         .collect();
+    // Open-loop multi-tenant replays draw tenants by Zipf popularity
+    // (a few shared prompts dominate, the fleet-scale shape); the
+    // closed-loop replay keeps the uniform draw — and its RNG stream.
+    let zipf = match &cfg.arrivals {
+        Some(spec) if tenants > 1 && spec.zipf_s > 0.0 => {
+            Some(zipf_cdf(tenants, spec.zipf_s))
+        }
+        _ => None,
+    };
     let mut out = Vec::with_capacity(cfg.requests);
     for i in 0..cfg.requests {
         let id = i as u64 + 1;
@@ -264,7 +283,14 @@ pub fn generate_workload(cfg: &ReplayConfig) -> Vec<SimRequest> {
         let decode = rng.usize(dr.0, dr.1 + 1).max(1);
         // Only drawn in multi-tenant mode so the single-tenant RNG
         // stream (and every replay built on it) stays bit-identical.
-        let tenant = if tenants > 1 { rng.usize(0, tenants) } else { 0 };
+        let tenant = if tenants > 1 {
+            match &zipf {
+                Some(cdf) => zipf_pick(cdf, rng.f64()),
+                None => rng.usize(0, tenants),
+            }
+        } else {
+            0
+        };
         // Same protection: the family roll happens only with a mix
         // configured, so `mix: None` replays the historical stream.
         let family = match &cfg.mix {
@@ -407,6 +433,9 @@ pub struct ReplayResult {
     /// Decoded token stream per request — the determinism witness the
     /// routing replay compares across policies.
     pub outputs: HashMap<u64, Vec<i32>>,
+    /// Per-request TTFT samples (same values `ttft` aggregates) — the
+    /// open-loop drivers slice these per rate-curve phase.
+    pub ttft_by_request: HashMap<u64, f64>,
 }
 
 struct Pending {
@@ -437,6 +466,8 @@ pub struct SimWorker {
     slots_n: usize,
     now: f64,
     ttft: Histogram,
+    /// Per-request TTFT mirror of `ttft` (phase-sliced reporting).
+    ttft_by_req: HashMap<u64, f64>,
     tbt: Histogram,
     decode_ticks: u64,
     occupancy_sum: u64,
@@ -525,6 +556,7 @@ impl SimWorker {
             slots_n,
             now: 0.0,
             ttft: Histogram::new(),
+            ttft_by_req: HashMap::new(),
             tbt: Histogram::new(),
             decode_ticks: 0,
             occupancy_sum: 0,
@@ -635,6 +667,62 @@ impl SimWorker {
             led.enqueued(req.id, replica, &self.cohort_label(req.id),
                          req.tokens.len(), self.now);
         }
+    }
+
+    /// Advance this worker's idle clock to `t` (open-loop waiting: no
+    /// work arrived yet, the hardware sits and the clock runs). No-op
+    /// when the worker is dead or already past `t` — clocks never run
+    /// backwards.
+    pub fn advance_to(&mut self, t: f64) {
+        if self.dead || t <= self.now {
+            return;
+        }
+        self.now = t;
+    }
+
+    /// Hand one request to this worker at absolute arrival time `at`
+    /// (open-loop delivery). A worker whose clock lags the arrival is
+    /// first advanced to it — the request cannot be served before it
+    /// exists — and its TTFT origin is the *arrival* time, so queueing
+    /// delay on a busy worker (clock already past `at`) is charged to
+    /// TTFT exactly like real admission wait.
+    pub fn deliver_at(&mut self, req: &SimRequest, at: f64) {
+        self.advance_to(at);
+        self.deliver(req);
+        self.arrived.insert(req.id, at);
+    }
+
+    /// Gracefully withdraw everything *queued but never admitted*:
+    /// the autoscaler's drain path. In-flight work (mid-prefill and
+    /// decoding) stays and runs to completion; only staged queue
+    /// entries are withdrawn, their ids returned sorted for
+    /// re-routing. The worker keeps ticking — the caller retires it
+    /// once `has_work()` clears.
+    pub fn drain_queued(&mut self) -> Vec<u64> {
+        if let Some(s) = &self.sampler {
+            s.recorder().trigger("replica-drain");
+        }
+        let mut ids = Vec::new();
+        while let Some(q) = self.sched.shed_front() {
+            let id = q.id;
+            self.sched.drop_request(id);
+            self.staging.remove(&id);
+            self.arrived.remove(&id);
+            self.ttft_done.remove(&id);
+            // A preemption victim parked back in staging may hold
+            // partial outputs; the re-routed request recomputes from
+            // scratch (same semantics as crash fail-over).
+            self.outputs.remove(&id);
+            ids.push(id);
+        }
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Cumulative capacity-wait ticks from the pool (0 on dense
+    /// pools) — the autoscaler's pressure signal alongside `depth()`.
+    pub fn capacity_waits(&self) -> u64 {
+        self.kv.stats().map(|s| s.capacity_wait_ticks).unwrap_or(0)
     }
 
     /// Receive a finished prefill shipped from a prefill worker: the
@@ -1137,6 +1225,7 @@ impl SimWorker {
                 let t0 = self.arrived.get(req).copied().unwrap_or(0.0);
                 let dt = self.now - t0;
                 self.ttft.record(dt);
+                self.ttft_by_req.insert(*req, dt);
                 self.fam_mut(*req).ttft.record(dt);
                 if let Some(s) = &self.sampler {
                     if s.live().is_enabled() {
@@ -1480,6 +1569,7 @@ impl SimWorker {
             stats,
             families,
             outputs: self.outputs,
+            ttft_by_request: self.ttft_by_req,
         }
     }
 }
@@ -1545,6 +1635,43 @@ pub fn replay_instrumented(cfg: &ReplayConfig, paged: bool,
     while w.has_work() && guard < 1_000_000 {
         guard += 1;
         w.tick();
+    }
+    w.into_result(if paged { "paged" } else { "dense" })
+}
+
+/// Open-loop single-worker replay: requests are delivered at their
+/// [`generate_arrivals`] timestamps instead of all at t = 0, and the
+/// worker's clock jumps across idle gaps. TTFT now includes genuine
+/// queueing delay — a burst stacks the queue and the tail pays for it
+/// — which is the signal the autoscaled fleet replay
+/// (`crate::routing::autoscale`) closes the loop on. With
+/// `cfg.arrivals == None` every timestamp is 0 and this is exactly
+/// [`replay`].
+pub fn replay_open_loop(cfg: &ReplayConfig, paged: bool)
+                        -> ReplayResult {
+    let arrivals = generate_arrivals(cfg);
+    let mut w = SimWorker::new(cfg, paged);
+    let mut next = 0usize;
+    let mut guard = 0u64;
+    while (next < arrivals.len() || w.has_work())
+        && guard < 2_000_000
+    {
+        guard += 1;
+        // Idle with a future arrival pending: jump the clock to it
+        // (open-loop hardware waits; the clock keeps running).
+        if !w.has_work() && next < arrivals.len() {
+            let t = arrivals[next].at;
+            w.advance_to(t);
+        }
+        // Deliver everything that has arrived by the worker's now.
+        while next < arrivals.len() && arrivals[next].at <= w.now() {
+            let a = &arrivals[next];
+            w.deliver_at(&a.req, a.at);
+            next += 1;
+        }
+        if w.has_work() {
+            w.tick();
+        }
     }
     w.into_result(if paged { "paged" } else { "dense" })
 }
@@ -1766,6 +1893,54 @@ mod tests {
         assert_eq!(a.stats.prefix_hits, b.stats.prefix_hits);
         assert_eq!(a.stats.preemptions, b.stats.preemptions);
         assert_eq!(a.outputs, b.outputs);
+    }
+
+    /// With no arrival spec every timestamp is 0 — the open-loop
+    /// driver must reproduce the closed-loop replay bit for bit.
+    #[test]
+    fn open_loop_without_arrivals_is_bit_identical_to_closed() {
+        let cfg = ReplayConfig::default();
+        let closed = replay(&cfg, true);
+        let open = replay_open_loop(&cfg, true);
+        assert_eq!(open.outputs, closed.outputs);
+        assert_eq!(open.completed, closed.completed);
+        assert_eq!(open.decode_ticks, closed.decode_ticks);
+        assert_eq!(open.sim_time.to_bits(), closed.sim_time.to_bits());
+        assert_eq!(open.stats.prefix_hits, closed.stats.prefix_hits);
+    }
+
+    /// Open-loop arrivals spread the queue out: the replay completes
+    /// every arrival (base + burst + follow-ups), per-request TTFTs
+    /// are recorded for all of them, and TTFT origin is the arrival
+    /// time — never negative even when the worker's clock lags.
+    #[test]
+    fn open_loop_replay_serves_the_timestamped_stream() {
+        let cfg = ReplayConfig {
+            requests: 32,
+            tenants: 3,
+            arrivals: Some(
+                crate::workload::arrivals::ArrivalSpec::parse(
+                    "poisson:0.8+burst:20:15:3+followups:30",
+                )
+                .unwrap(),
+            ),
+            ..ReplayConfig::default()
+        };
+        let arrivals = generate_arrivals(&cfg);
+        assert!(arrivals.len() > cfg.requests, "bursts + followups");
+        let r = replay_open_loop(&cfg, true);
+        assert_eq!(r.completed, arrivals.len(), "all arrivals served");
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.ttft_by_request.len(), r.completed);
+        assert!(r.ttft_by_request.values().all(|&dt| dt >= 0.0),
+                "TTFT can never precede arrival");
+        // The clock ran at least to the last arrival.
+        let last = arrivals.last().unwrap().at;
+        assert!(r.sim_time >= last, "{} < {last}", r.sim_time);
+        // Determinism holds under open loop too.
+        let again = replay_open_loop(&cfg, true);
+        assert_eq!(again.outputs, r.outputs);
+        assert_eq!(again.sim_time.to_bits(), r.sim_time.to_bits());
     }
 
     #[test]

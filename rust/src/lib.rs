@@ -38,6 +38,17 @@
 //! scheduler tick. `mmserve kv --replicas N` replays the policies
 //! side by side on the simulated clock.
 //!
+//! [`workload::arrivals`] turns those replays open-loop: seeded
+//! Poisson/diurnal/burst arrival processes over a Zipf-skewed tenant
+//! population (with warm-prefix conversation follow-ups) emit
+//! timestamped requests the fleet serves as the simulated clock
+//! reaches them, and [`routing::autoscale`] closes the loop — an
+//! autoscaler watches queue depth and capacity-wait telemetry,
+//! spawning replicas under sustained pressure and gracefully draining
+//! idle ones (in-flight work finishes; only queued requests
+//! re-route). `mmserve kv --arrivals ... --autoscale MIN:MAX` A/Bs
+//! the elastic fleet against fixed min/max fleets.
+//!
 //! [`sched`] sits between the batcher/kvpool and the execution
 //! engines: a tick `Scheduler` that turns queue + capacity state into
 //! an explicit `TickPlan` (decode batch ∪ prefill *chunks* under a

@@ -31,7 +31,13 @@
 //!                    A/Bs colocated vs split prefill/decode workers
 //!                    over the priced transfer fabric (KV handoff on
 //!                    the network link) and `--fabric-json` writes
-//!                    that A/B for the CI gate; `--bench-json`
+//!                    that A/B for the CI gate; `--arrivals` replaces
+//!                    the pre-queued closed loop with an open-loop
+//!                    timestamped stream (Poisson / diurnal / burst,
+//!                    Zipf tenants, warm-prefix follow-ups) and
+//!                    `--autoscale MIN:MAX` A/Bs an elastic fleet
+//!                    against fixed min/max fleets (`--autoscale-json`
+//!                    writes that A/B for the CI gate); `--bench-json`
 //!                    writes the metrics for the CI perf gate.
 //! * `stats`        — replay a sharded multi-replica workload with the
 //!                    live metrics plane attached and render the fleet
@@ -71,6 +77,13 @@ use mmserve::perfmodel::device::DeviceSpec;
 use mmserve::perfmodel::fabric::FabricSpec;
 use mmserve::perfmodel::levers::Levers;
 use mmserve::perfmodel::standard_breakdown_rows;
+use mmserve::routing::autoscale::{autoscale_replay, compare_autoscale,
+                                  render_autoscale_comparison,
+                                  render_phase_ttft,
+                                  render_scale_timeline,
+                                  AutoscaleComparison,
+                                  AutoscaleReplayConfig,
+                                  AutoscaleReplayResult, AutoscaleSpec};
 use mmserve::routing::replay::{compare_disaggregation, compare_policies,
                                render_disagg_comparison,
                                render_policy_comparison,
@@ -100,6 +113,7 @@ use mmserve::telemetry::live::{prometheus, FlightRecorder, LiveMetrics,
                                SketchSnapshot};
 use mmserve::telemetry::tracer::Tracer;
 use mmserve::telemetry::TraceReport;
+use mmserve::workload::arrivals::{ArrivalPhase, ArrivalSpec};
 
 /// One CLI subcommand: its name, a one-line summary, and its entry
 /// point. `usage()` and `run()` both read this table — adding a
@@ -804,6 +818,19 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
     .opt("beam",
          "beam width Seamless replay requests fork per decode tick",
          Some("2"))
+    .opt("arrivals",
+         "open-loop arrival process: poisson:R or diurnal:BASE:PEAK:T, \
+          '+'-joined with burst:AT:LEN:MULT / followups:P / think:T / \
+          zipf:S (empty = closed loop, everything queued at t=0)",
+         Some(""))
+    .opt("autoscale",
+         "elastic fleet bounds MIN:MAX for the open-loop replay; A/Bs \
+          the autoscaler against fixed fleets pinned at MIN and MAX \
+          (requires --arrivals)",
+         Some(""))
+    .opt("autoscale-json",
+         "write the autoscale A/B metrics as JSON (BENCH_autoscale)",
+         Some(""))
     .opt("seed", "workload seed", Some("7"))
     .opt("device", "A100|H100 for the Table-3 projection", Some("A100"))
     .flag("disaggregate",
@@ -828,8 +855,13 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         prefill_budget: a.get_usize("prefill-budget", 0),
         seed: a.get_usize("seed", 7) as u64,
         mix,
+        arrivals: parse_arrivals(&a)?,
         ..ReplayConfig::default()
     };
+    let autoscale = parse_autoscale(&a.get_or("autoscale", ""))?;
+    if autoscale.is_some() && cfg.arrivals.is_none() {
+        bail!("--autoscale needs an open-loop stream; pass --arrivals");
+    }
     let replicas = a.get_usize("replicas", 1).max(1);
     let shards = a.get_usize("shards", 1).max(1);
     println!(
@@ -928,6 +960,65 @@ fn cmd_kv(argv: &[String]) -> Result<()> {
         println!("{}", render_worker_counters(affinity));
     }
 
+    // Open-loop arrivals: requests land on the fleet when the rate
+    // curve says so instead of being pre-queued at t=0. With
+    // `--autoscale MIN:MAX` an elastic fleet chases the curve and is
+    // A/B'd against fixed fleets pinned at MIN and at MAX.
+    if let Some(spec) = cfg.arrivals.clone() {
+        let acfg = AutoscaleReplayConfig {
+            base: ReplayConfig {
+                tenants: a.get_usize("tenants", 4).max(1),
+                shards,
+                ..cfg.clone()
+            },
+            policy: RoutingPolicy::LeastLoaded,
+            replicas,
+            autoscale,
+            ..AutoscaleReplayConfig::default()
+        };
+        match autoscale {
+            None => {
+                let r = autoscale_replay(&acfg);
+                println!(
+                    "\n== open-loop replay: {spec} over a fixed fleet \
+                     of {replicas} (least-loaded, simulated clock) =="
+                );
+                println!(
+                    "arrivals {}  completed {}  dropped {}  p50 TTFT \
+                     {:.2}  p99 TTFT {:.2}  sim time {:.1}",
+                    r.arrivals,
+                    r.completed,
+                    r.dropped,
+                    r.ttft.percentile(50.0),
+                    r.ttft.percentile(99.0),
+                    r.sim_time
+                );
+                println!("\n== TTFT by arrival phase ==");
+                println!("{}", render_phase_ttft(&r));
+            }
+            Some(sc) => {
+                let c = compare_autoscale(&acfg);
+                println!(
+                    "\n== autoscaled open-loop replay: {spec}, elastic \
+                     fleet {}..{} vs fixed min/max (least-loaded, \
+                     simulated clock) ==",
+                    sc.min, sc.max
+                );
+                println!("{}", render_autoscale_comparison(&c));
+                println!("\n== scale-event timeline (autoscaled) ==");
+                println!("{}", render_scale_timeline(&c.autoscaled));
+                println!("\n== TTFT by arrival phase (autoscaled) ==");
+                println!("{}", render_phase_ttft(&c.autoscaled));
+                let as_path = a.get_or("autoscale-json", "");
+                if !as_path.is_empty() {
+                    let json = autoscale_json(&acfg, &spec, &sc, &c);
+                    std::fs::write(&as_path, json.to_string())?;
+                    println!("wrote autoscale A/B metrics to {as_path}");
+                }
+            }
+        }
+    }
+
     // Disaggregated prefill/decode A/B over the priced fabric: the
     // identical workload once colocated, once split (first half of the
     // fleet prefills and ships KV over the network link, second half
@@ -1015,6 +1106,96 @@ fn parse_kill(spec: &str) -> Result<Option<KillSpec>> {
         replica: r.trim().parse()?,
         after_delivered: k.trim().parse()?,
     }))
+}
+
+/// `--arrivals SPEC`: the open-loop arrival process (empty = the
+/// historical closed loop, every request queued at t=0).
+fn parse_arrivals(a: &mmserve::substrate::cli::Args)
+                  -> Result<Option<ArrivalSpec>> {
+    let spec = a.get_or("arrivals", "");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(ArrivalSpec::parse(&spec).map_err(anyhow::Error::msg)?))
+}
+
+/// `--autoscale MIN:MAX`: elastic fleet bounds (empty = fixed fleet).
+fn parse_autoscale(spec: &str) -> Result<Option<AutoscaleSpec>> {
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(AutoscaleSpec::parse(spec).map_err(anyhow::Error::msg)?))
+}
+
+/// One arm of the autoscale A/B as a JSON object (the CI artifact).
+fn autoscale_arm_json(r: &AutoscaleReplayResult) -> Json {
+    Json::from_obj(vec![
+        ("p50_ttft".into(), Json::Num(r.ttft.percentile(50.0))),
+        ("p99_ttft".into(), Json::Num(r.ttft.percentile(99.0))),
+        ("burst_p99_ttft".into(),
+         Json::Num(r.phase_p99(ArrivalPhase::Burst))),
+        ("goodput_per_replica".into(),
+         Json::Num(r.goodput_per_replica())),
+        ("replica_seconds".into(), Json::Num(r.replica_seconds)),
+        ("peak_replicas".into(), Json::Num(r.peak_replicas as f64)),
+        ("arrivals".into(), Json::Num(r.arrivals as f64)),
+        ("completed".into(), Json::Num(r.completed as f64)),
+        ("dropped".into(), Json::Num(r.dropped as f64)),
+        ("scale_ups".into(), Json::Num(r.scale_ups() as f64)),
+        ("drains".into(), Json::Num(r.drains() as f64)),
+        ("sim_time".into(), Json::Num(r.sim_time)),
+    ])
+}
+
+/// The `--autoscale-json` document (BENCH_autoscale): config echo,
+/// the three arms, and the headline deltas the CI gate checks
+/// (autoscaled must beat the fixed-min fleet on burst tail latency
+/// and the fixed-max fleet on paid replica-seconds).
+fn autoscale_json(cfg: &AutoscaleReplayConfig, spec: &ArrivalSpec,
+                  sc: &AutoscaleSpec,
+                  c: &AutoscaleComparison) -> Json {
+    let auto_ = &c.autoscaled;
+    let min_ = &c.fixed_min;
+    let max_ = &c.fixed_max;
+    let goodput_ratio = if max_.goodput_per_replica() > 0.0 {
+        auto_.goodput_per_replica() / max_.goodput_per_replica()
+    } else {
+        1.0
+    };
+    Json::from_obj(vec![
+        ("config".into(), Json::from_obj(vec![
+            ("requests".into(), Json::Num(cfg.base.requests as f64)),
+            ("tenants".into(), Json::Num(cfg.base.tenants as f64)),
+            ("shards".into(), Json::Num(cfg.base.shards as f64)),
+            ("seed".into(), Json::Num(cfg.base.seed as f64)),
+            ("arrivals".into(), Json::Str(spec.to_string())),
+            ("min".into(), Json::Num(sc.min as f64)),
+            ("max".into(), Json::Num(sc.max as f64)),
+            ("policy".into(),
+             Json::Str(cfg.policy.as_str().to_string())),
+        ])),
+        ("autoscale".into(), Json::from_obj(vec![
+            ("autoscaled".into(), autoscale_arm_json(auto_)),
+            ("fixed_min".into(), autoscale_arm_json(min_)),
+            ("fixed_max".into(), autoscale_arm_json(max_)),
+            ("deltas".into(), Json::from_obj(vec![
+                // > 0 when the elastic fleet absorbs the burst better
+                // than the fleet pinned at MIN.
+                ("burst_p99_ttft_improvement".into(),
+                 Json::Num(min_.phase_p99(ArrivalPhase::Burst)
+                           - auto_.phase_p99(ArrivalPhase::Burst))),
+                // > 0 when it pays less capacity than the fleet
+                // pinned at MAX.
+                ("replica_seconds_saved".into(),
+                 Json::Num(max_.replica_seconds
+                           - auto_.replica_seconds)),
+                // Efficiency guard: elastic goodput per replica-second
+                // must stay within tolerance of the fixed-max fleet.
+                ("goodput_ratio_vs_max".into(),
+                 Json::Num(goodput_ratio)),
+            ])),
+        ])),
+    ])
 }
 
 /// A percentile cell: "-" for an empty sketch (e.g. a crashed replica

@@ -1,0 +1,879 @@
+//! Elastic autoscaling over the open-loop fleet replay: replicas are
+//! added under sustained queue pressure and gracefully drained when
+//! idle, on the same simulated clock the workers tick on.
+//!
+//! The closed loop the ISSUE names: `workload::arrivals` generates a
+//! timestamped request stream (Poisson/diurnal curves, flash-crowd
+//! bursts, Zipf tenants, warm-prefix follow-ups), this driver routes
+//! each arrival through the usual [`RoutingPolicy`] machinery as it
+//! occurs, and an [`AutoscaleSpec`] watches two per-round telemetry
+//! signals — outstanding-request depth per accepting replica and the
+//! pool's cumulative capacity-wait ticks — to decide when the fleet
+//! grows or shrinks:
+//!
+//! * **Scale up** after `sustain` consecutive pressured rounds (depth
+//!   per replica above `high_depth`, or capacity waits still rising
+//!   while depth sits above `low_depth`), bounded by `max` and a
+//!   `cooldown` between scale events. A new worker spawns with its
+//!   clock advanced to the fleet's now — replica-seconds start
+//!   accruing at spawn, not at t = 0.
+//! * **Drain** after `idle_sustain` consecutive idle rounds (depth per
+//!   replica below `low_depth`), never below `min`. A drain reuses
+//!   the crash fail-over path for *queued* work only
+//!   ([`SimWorker::drain_queued`] → re-route through the policy), but
+//!   unlike [`SimWorker::kill`] the replica keeps ticking until its
+//!   in-flight prefills and decodes complete, and only then retires
+//!   ([`ScaleKind::DrainDone`]). Drain drops nothing; crash recomputes
+//!   — the drain-vs-crash regression test pins the exact relation
+//!   (`crash reroutes == drain reroutes + in-flight kept`).
+//!
+//! Every decision lands in a [`ScaleEvent`] timeline (rendered by
+//! `mmserve kv --autoscale`), and the comparison that CI gates runs
+//! the same arrival stream through three arms: autoscaled, fixed
+//! fleet at `min`, fixed fleet at `max`. The scaler must beat the min
+//! fleet on burst-phase p99 TTFT *and* spend fewer replica-seconds
+//! than the max fleet while staying within goodput tolerance of it.
+
+use std::collections::HashMap;
+
+use crate::kvpool::replay::{ReplayConfig, ReplayResult, SimWorker};
+use crate::kvpool::PoolStats;
+use crate::substrate::metrics::Histogram;
+use crate::substrate::table::Table;
+use crate::workload::arrivals::{generate_arrivals, ArrivalPhase,
+                                TimedArrival};
+
+use super::replay::{route_one, KillSpec};
+use super::RoutingPolicy;
+
+/// Autoscaling policy knobs (`--autoscale min:max` with defaults for
+/// the thresholds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Fleet floor (also the starting size).
+    pub min: usize,
+    /// Fleet ceiling.
+    pub max: usize,
+    /// Depth-per-replica above which a round counts as pressured.
+    pub high_depth: f64,
+    /// Depth-per-replica below which a round counts as idle; between
+    /// the two thresholds, rising capacity waits still count as
+    /// pressure (the pool is thrashing even if the queue looks sane).
+    pub low_depth: f64,
+    /// Consecutive pressured rounds before a scale-up.
+    pub sustain: usize,
+    /// Consecutive idle rounds before a drain.
+    pub idle_sustain: usize,
+    /// Minimum rounds between any two scale events.
+    pub cooldown: usize,
+}
+
+impl AutoscaleSpec {
+    /// `min:max` with default thresholds.
+    pub fn new(min: usize, max: usize) -> AutoscaleSpec {
+        AutoscaleSpec {
+            min: min.max(1),
+            max: max.max(min.max(1)),
+            high_depth: 6.0,
+            low_depth: 2.0,
+            sustain: 3,
+            idle_sustain: 5,
+            cooldown: 6,
+        }
+    }
+
+    /// Parse the CLI's `--autoscale min:max`.
+    pub fn parse(spec: &str) -> Result<AutoscaleSpec, String> {
+        let (lo, hi) = spec.split_once(':').ok_or_else(|| {
+            format!("autoscale spec {spec:?}: want min:max")
+        })?;
+        let min: usize = lo.trim().parse().map_err(|_| {
+            format!("autoscale spec {spec:?}: bad min")
+        })?;
+        let max: usize = hi.trim().parse().map_err(|_| {
+            format!("autoscale spec {spec:?}: bad max")
+        })?;
+        if min == 0 {
+            return Err(format!("autoscale spec {spec:?}: min must be \
+                                ≥ 1"));
+        }
+        if max < min {
+            return Err(format!("autoscale spec {spec:?}: max {max} < \
+                                min {min}"));
+        }
+        Ok(AutoscaleSpec::new(min, max))
+    }
+}
+
+/// What happened at one point of the scale timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// A replica spawned under sustained pressure.
+    Up,
+    /// A replica began draining: queued work re-routed, in-flight
+    /// kept; the event's `depth` is the in-flight count it keeps.
+    DrainStart,
+    /// A draining replica finished its in-flight work and retired.
+    DrainDone,
+    /// A replica crashed ([`KillSpec`]): everything re-routed.
+    Crash,
+}
+
+impl ScaleKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleKind::Up => "scale-up",
+            ScaleKind::DrainStart => "drain-start",
+            ScaleKind::DrainDone => "drain-done",
+            ScaleKind::Crash => "crash",
+        }
+    }
+}
+
+/// One entry of the scale-event timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// Fleet simulated time of the decision.
+    pub at: f64,
+    /// Driver round of the decision.
+    pub round: u64,
+    pub kind: ScaleKind,
+    pub replica: usize,
+    /// Kind-specific depth: fleet outstanding requests for `Up`, the
+    /// drained replica's kept in-flight count for `DrainStart`,
+    /// orphans re-routed for `Crash`, 0 for `DrainDone`.
+    pub depth: usize,
+    /// Accepting replicas *after* the event took effect.
+    pub live: usize,
+}
+
+/// Gracefully drain one replica mid-run (the manual counterpart of
+/// the autoscaler's idle drain, and the graceful sibling of
+/// [`KillSpec`]): after `after_delivered` first-time arrivals have
+/// been routed fleet-wide, `replica` stops accepting work, its queued
+/// requests re-route through the policy, and it retires once its
+/// in-flight work completes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainSpec {
+    pub replica: usize,
+    pub after_delivered: usize,
+}
+
+/// Knobs of one autoscaled (or fixed-fleet) open-loop replay.
+#[derive(Debug, Clone)]
+pub struct AutoscaleReplayConfig {
+    /// Per-worker sizing + the arrival process
+    /// ([`ReplayConfig::arrivals`]).
+    pub base: ReplayConfig,
+    pub policy: RoutingPolicy,
+    /// Fixed fleet size when `autoscale` is `None` (ignored otherwise
+    /// — an autoscaled fleet starts at `min`).
+    pub replicas: usize,
+    pub autoscale: Option<AutoscaleSpec>,
+    /// Optional mid-run graceful drain (regression testing).
+    pub drain: Option<DrainSpec>,
+    /// Optional mid-run crash (regression testing).
+    pub kill: Option<KillSpec>,
+}
+
+impl Default for AutoscaleReplayConfig {
+    fn default() -> Self {
+        AutoscaleReplayConfig {
+            base: ReplayConfig::default(),
+            policy: RoutingPolicy::default(),
+            replicas: 2,
+            autoscale: None,
+            drain: None,
+            kill: None,
+        }
+    }
+}
+
+/// Outcome of one open-loop fleet replay.
+#[derive(Debug, Clone)]
+pub struct AutoscaleReplayResult {
+    pub policy: RoutingPolicy,
+    /// Per-worker results, index = replica id (spawn order).
+    pub per_worker: Vec<ReplayResult>,
+    /// First-time deliveries routed to each replica.
+    pub routed: Vec<usize>,
+    /// Fleet-wide pool counters (summed).
+    pub fleet: PoolStats,
+    /// TTFT/TBT merged across workers.
+    pub ttft: Histogram,
+    pub tbt: Histogram,
+    /// TTFT sliced by the rate-curve phase each request *arrived* in
+    /// (report order: base, peak, burst).
+    pub phase_ttft: Vec<(ArrivalPhase, Histogram)>,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Fleet makespan (slowest worker's clock at drain).
+    pub sim_time: f64,
+    /// Scheduler ticks summed across workers.
+    pub ticks: u64,
+    pub tokens_decoded: u64,
+    /// Per-request decoded streams, merged across workers.
+    pub outputs: HashMap<u64, Vec<i32>>,
+    /// The scale-event timeline, in decision order.
+    pub events: Vec<ScaleEvent>,
+    /// Σ over replicas of (retire time − spawn time): the paid
+    /// capacity. A fixed fleet pays `replicas × sim_time`.
+    pub replica_seconds: f64,
+    /// Most replicas ever accepting work at once.
+    pub peak_replicas: usize,
+    /// Requests re-routed by drains and crashes.
+    pub reroutes: usize,
+    /// Arrivals the run served (base + bursts + follow-ups).
+    pub arrivals: usize,
+}
+
+impl AutoscaleReplayResult {
+    /// Decoded tokens per replica-second — the efficiency headline
+    /// the CI gate tracks (0.0 on a degenerate zero-duration run).
+    pub fn goodput_per_replica(&self) -> f64 {
+        if self.replica_seconds <= 0.0 {
+            return 0.0;
+        }
+        let g = self.tokens_decoded as f64 / self.replica_seconds;
+        if g.is_finite() { g } else { 0.0 }
+    }
+
+    /// p99 TTFT of requests that arrived in `phase` (0.0 when the
+    /// phase saw no arrivals).
+    pub fn phase_p99(&self, phase: ArrivalPhase) -> f64 {
+        self.phase_ttft
+            .iter()
+            .find(|(p, _)| *p == phase)
+            .map(|(_, h)| h.percentile(99.0))
+            .unwrap_or(0.0)
+    }
+
+    pub fn scale_ups(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == ScaleKind::Up)
+            .count()
+    }
+
+    pub fn drains(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == ScaleKind::DrainStart)
+            .count()
+    }
+}
+
+/// Per-replica lifecycle bookkeeping the workers themselves don't
+/// carry.
+struct Meta {
+    spawned_at: f64,
+    retired_at: Option<f64>,
+    draining: bool,
+}
+
+/// Run the open-loop arrival stream of `cfg.base` through an elastic
+/// (or fixed) fleet under `cfg.policy`. Deterministic: same config ⇒
+/// same scale-event timeline, same per-request outputs, same
+/// counters, bit for bit.
+pub fn autoscale_replay(cfg: &AutoscaleReplayConfig)
+                        -> AutoscaleReplayResult {
+    let arrivals = generate_arrivals(&cfg.base);
+    let by_id: HashMap<u64, &TimedArrival> =
+        arrivals.iter().map(|a| (a.req.id, a)).collect();
+    let start = match cfg.autoscale {
+        Some(a) => a.min,
+        None => cfg.replicas.max(1),
+    };
+    if let Some(k) = cfg.kill {
+        assert!(k.replica < start, "kill target out of range");
+    }
+    if let Some(d) = cfg.drain {
+        assert!(d.replica < start, "drain target out of range");
+    }
+    let mut workers: Vec<SimWorker> =
+        (0..start).map(|_| SimWorker::new(&cfg.base, true)).collect();
+    let mut meta: Vec<Meta> = (0..start)
+        .map(|_| Meta {
+            spawned_at: 0.0,
+            retired_at: None,
+            draining: false,
+        })
+        .collect();
+    let mut routed = vec![0usize; start];
+    let mut events: Vec<ScaleEvent> = Vec::new();
+    let mut orphans: Vec<u64> = Vec::new();
+    let mut reroutes = 0usize;
+    let mut cursor = 0u64;
+    let mut next = 0usize;
+    let mut killed = false;
+    let mut drained = false;
+    let mut hot = 0usize;
+    let mut cold = 0usize;
+    let mut last_scale_round: Option<u64> = None;
+    let mut prev_cap_waits = 0u64;
+    let mut peak = start;
+    let mut round = 0u64;
+    let mut guard = 0u64;
+
+    // Accepting = can take new deliveries: alive and not on the way
+    // out. Live = alive (draining replicas still tick and count for
+    // the fleet clock).
+    let accepting = |workers: &[SimWorker], meta: &[Meta]| -> Vec<usize> {
+        (0..workers.len())
+            .filter(|&i| {
+                !workers[i].is_dead()
+                    && meta[i].retired_at.is_none()
+                    && !meta[i].draining
+            })
+            .collect()
+    };
+    let fleet_now = |workers: &[SimWorker], meta: &[Meta]| -> f64 {
+        (0..workers.len())
+            .filter(|&i| {
+                !workers[i].is_dead() && meta[i].retired_at.is_none()
+            })
+            .map(|i| workers[i].now())
+            .fold(0.0f64, f64::max)
+    };
+
+    while (next < arrivals.len()
+        || !orphans.is_empty()
+        || workers.iter().any(|w| w.has_work()))
+        && guard < 4_000_000
+    {
+        guard += 1;
+        let mut now = fleet_now(&workers, &meta);
+        let any_work = workers.iter().any(|w| w.has_work());
+        // Idle with the next arrival in the future: jump the fleet
+        // clock to it (open-loop time passes whether or not anyone
+        // works).
+        if !any_work && orphans.is_empty() && next < arrivals.len() {
+            now = now.max(arrivals[next].at);
+        }
+
+        // ---- deliveries: everything due by the fleet clock --------
+        let elig = accepting(&workers, &meta);
+        while next < arrivals.len() && arrivals[next].at <= now {
+            let a = &arrivals[next];
+            let t = route_one(&workers, cfg.policy, &a.req.tokens,
+                              cursor, &elig)
+                .expect("an accepting replica always exists");
+            workers[t].deliver_at(&a.req, a.at);
+            routed[t] += 1;
+            cursor += 1;
+            next += 1;
+        }
+        // Orphans of drains/crashes re-enter through the same policy
+        // at the fleet's now (they cannot re-arrive in the past).
+        if !orphans.is_empty() {
+            let pending = std::mem::take(&mut orphans);
+            for id in pending {
+                let a = by_id[&id];
+                let t = route_one(&workers, cfg.policy, &a.req.tokens,
+                                  cursor, &elig)
+                    .expect("an accepting replica always exists");
+                workers[t].deliver_at(&a.req, now);
+                cursor += 1;
+            }
+        }
+
+        // ---- injected failure / manual drain triggers -------------
+        if let Some(k) = cfg.kill {
+            if !killed && next >= k.after_delivered {
+                killed = true;
+                let ids = workers[k.replica].kill();
+                meta[k.replica].retired_at =
+                    Some(workers[k.replica].now());
+                reroutes += ids.len();
+                let live = accepting(&workers, &meta).len();
+                events.push(ScaleEvent {
+                    at: now,
+                    round,
+                    kind: ScaleKind::Crash,
+                    replica: k.replica,
+                    depth: ids.len(),
+                    live,
+                });
+                orphans.extend(ids);
+            }
+        }
+        if let Some(d) = cfg.drain {
+            if !drained && next >= d.after_delivered {
+                drained = true;
+                let ids = workers[d.replica].drain_queued();
+                meta[d.replica].draining = true;
+                reroutes += ids.len();
+                let kept = workers[d.replica].depth();
+                let live = accepting(&workers, &meta).len();
+                events.push(ScaleEvent {
+                    at: now,
+                    round,
+                    kind: ScaleKind::DrainStart,
+                    replica: d.replica,
+                    depth: kept,
+                    live,
+                });
+                orphans.extend(ids);
+            }
+        }
+
+        // ---- autoscaler decision ----------------------------------
+        if let Some(spec) = cfg.autoscale {
+            let acc = accepting(&workers, &meta);
+            let n_acc = acc.len().max(1);
+            let depth_total: usize =
+                acc.iter().map(|&i| workers[i].depth()).sum();
+            let depth_per = depth_total as f64 / n_acc as f64;
+            // Capacity waits are monotone per worker (retired clocks
+            // freeze), so the fleet sum is monotone and the delta is
+            // a per-round pressure signal.
+            let cap_now: u64 =
+                workers.iter().map(|w| w.capacity_waits()).sum();
+            let cap_rising = cap_now > prev_cap_waits;
+            prev_cap_waits = cap_now;
+            let pressured = depth_per > spec.high_depth
+                || (cap_rising && depth_per > spec.low_depth);
+            hot = if pressured { hot + 1 } else { 0 };
+            cold = if depth_per < spec.low_depth { cold + 1 } else { 0 };
+            let cooled = last_scale_round
+                .map_or(true, |r| round - r >= spec.cooldown as u64);
+            if hot >= spec.sustain && cooled && acc.len() < spec.max {
+                let mut w = SimWorker::new(&cfg.base, true);
+                w.advance_to(now);
+                workers.push(w);
+                meta.push(Meta {
+                    spawned_at: now,
+                    retired_at: None,
+                    draining: false,
+                });
+                routed.push(0);
+                let live = accepting(&workers, &meta).len();
+                events.push(ScaleEvent {
+                    at: now,
+                    round,
+                    kind: ScaleKind::Up,
+                    replica: workers.len() - 1,
+                    depth: depth_total,
+                    live,
+                });
+                hot = 0;
+                last_scale_round = Some(round);
+                peak = peak.max(live);
+            } else if cold >= spec.idle_sustain
+                && cooled
+                && acc.len() > spec.min
+            {
+                // Shallowest accepting replica retires first; ties
+                // break toward the newest (keep the original floor
+                // fleet stable).
+                let victim = *acc
+                    .iter()
+                    .min_by_key(|&&i| (workers[i].depth(),
+                                       std::cmp::Reverse(i)))
+                    .expect("accepting set non-empty");
+                let ids = workers[victim].drain_queued();
+                meta[victim].draining = true;
+                reroutes += ids.len();
+                let kept = workers[victim].depth();
+                let live = accepting(&workers, &meta).len();
+                events.push(ScaleEvent {
+                    at: now,
+                    round,
+                    kind: ScaleKind::DrainStart,
+                    replica: victim,
+                    depth: kept,
+                    live,
+                });
+                orphans.extend(ids);
+                cold = 0;
+                last_scale_round = Some(round);
+            }
+        }
+
+        // ---- tick every live worker that has work -----------------
+        for i in 0..workers.len() {
+            if !workers[i].is_dead()
+                && meta[i].retired_at.is_none()
+                && workers[i].has_work()
+            {
+                workers[i].tick();
+            }
+        }
+
+        // ---- retire finished drains -------------------------------
+        for i in 0..workers.len() {
+            if meta[i].draining
+                && meta[i].retired_at.is_none()
+                && !workers[i].has_work()
+            {
+                // A drained replica that sat idle has a stale clock;
+                // it existed until the fleet's now, so that is what
+                // its replica-seconds (and the timeline) charge.
+                let at = workers[i].now().max(now);
+                meta[i].retired_at = Some(at);
+                meta[i].draining = false;
+                let live = accepting(&workers, &meta).len();
+                events.push(ScaleEvent {
+                    at,
+                    round,
+                    kind: ScaleKind::DrainDone,
+                    replica: i,
+                    depth: 0,
+                    live,
+                });
+            }
+        }
+        round += 1;
+    }
+    assert!(guard < 4_000_000, "autoscale replay wedged");
+
+    // ---- aggregate ------------------------------------------------
+    let end = workers.iter().map(|w| w.now()).fold(0.0f64, f64::max);
+    let replica_seconds: f64 = meta
+        .iter()
+        .map(|m| (m.retired_at.unwrap_or(end) - m.spawned_at).max(0.0))
+        .sum();
+    let per_worker: Vec<ReplayResult> = workers
+        .into_iter()
+        .map(|w| w.into_result("paged"))
+        .collect();
+    let fleet = PoolStats::aggregate(per_worker.iter().map(|r| &r.stats));
+    let mut ttft = Histogram::new();
+    let mut tbt = Histogram::new();
+    let mut outputs: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut phase_ttft: Vec<(ArrivalPhase, Histogram)> = ArrivalPhase::ALL
+        .iter()
+        .map(|&p| (p, Histogram::new()))
+        .collect();
+    let mut completed = 0usize;
+    let mut dropped = 0usize;
+    let mut ticks = 0u64;
+    let mut tokens = 0u64;
+    for r in &per_worker {
+        for &s in r.ttft.samples() {
+            ttft.record(s);
+        }
+        for &s in r.tbt.samples() {
+            tbt.record(s);
+        }
+        for (&id, &dt) in &r.ttft_by_request {
+            if let Some(a) = by_id.get(&id) {
+                if let Some((_, h)) = phase_ttft
+                    .iter_mut()
+                    .find(|(p, _)| *p == a.phase)
+                {
+                    h.record(dt);
+                }
+            }
+        }
+        outputs.extend(r.outputs.iter()
+            .map(|(k, v)| (*k, v.clone())));
+        completed += r.completed;
+        dropped += r.dropped;
+        ticks += r.ticks;
+        tokens += r.tokens_decoded;
+    }
+    AutoscaleReplayResult {
+        policy: cfg.policy,
+        routed,
+        fleet,
+        ttft,
+        tbt,
+        phase_ttft,
+        completed,
+        dropped,
+        sim_time: end,
+        ticks,
+        tokens_decoded: tokens,
+        outputs,
+        events,
+        replica_seconds,
+        peak_replicas: peak,
+        reroutes,
+        arrivals: arrivals.len(),
+        per_worker,
+    }
+}
+
+/// The three-arm comparison CI gates: the autoscaled fleet vs fixed
+/// fleets pinned at the scaler's floor and ceiling, all serving the
+/// identical arrival stream.
+#[derive(Debug, Clone)]
+pub struct AutoscaleComparison {
+    pub autoscaled: AutoscaleReplayResult,
+    pub fixed_min: AutoscaleReplayResult,
+    pub fixed_max: AutoscaleReplayResult,
+}
+
+/// Run the comparison for an autoscaled config (panics without an
+/// [`AutoscaleSpec`] — the fixed arms are derived from its bounds).
+pub fn compare_autoscale(cfg: &AutoscaleReplayConfig)
+                         -> AutoscaleComparison {
+    let spec = cfg.autoscale
+        .expect("compare_autoscale needs an AutoscaleSpec");
+    let fixed = |n: usize| AutoscaleReplayConfig {
+        autoscale: None,
+        replicas: n,
+        ..cfg.clone()
+    };
+    AutoscaleComparison {
+        autoscaled: autoscale_replay(cfg),
+        fixed_min: autoscale_replay(&fixed(spec.min)),
+        fixed_max: autoscale_replay(&fixed(spec.max)),
+    }
+}
+
+/// Side-by-side table of the three arms for `mmserve kv`.
+pub fn render_autoscale_comparison(c: &AutoscaleComparison) -> String {
+    let mut t = Table::new(&["metric", "autoscaled", "fixed-min",
+                             "fixed-max"]);
+    let f2 = |x: f64| format!("{x:.2}");
+    let row3 =
+        |t: &mut Table, name: &str,
+         f: &dyn Fn(&AutoscaleReplayResult) -> String| {
+            t.row(&[name.to_string(), f(&c.autoscaled),
+                    f(&c.fixed_min), f(&c.fixed_max)]);
+        };
+    row3(&mut t, "arrivals served",
+         &|r| r.completed.to_string());
+    row3(&mut t, "dropped", &|r| r.dropped.to_string());
+    row3(&mut t, "p50 TTFT", &|r| f2(r.ttft.percentile(50.0)));
+    row3(&mut t, "p99 TTFT", &|r| f2(r.ttft.percentile(99.0)));
+    row3(&mut t, "burst p99 TTFT",
+         &|r| f2(r.phase_p99(ArrivalPhase::Burst)));
+    row3(&mut t, "replica-seconds", &|r| f2(r.replica_seconds));
+    row3(&mut t, "goodput/replica-s",
+         &|r| format!("{:.3}", r.goodput_per_replica()));
+    row3(&mut t, "peak replicas",
+         &|r| r.peak_replicas.to_string());
+    row3(&mut t, "scale-ups", &|r| r.scale_ups().to_string());
+    row3(&mut t, "drains", &|r| r.drains().to_string());
+    row3(&mut t, "sim time", &|r| f2(r.sim_time));
+    t.render()
+}
+
+/// The scale-event timeline for `mmserve kv` (empty string when no
+/// events fired).
+pub fn render_scale_timeline(r: &AutoscaleReplayResult) -> String {
+    if r.events.is_empty() {
+        return String::new();
+    }
+    let mut t = Table::new(&["time", "round", "event", "replica",
+                             "depth", "live"]);
+    for e in &r.events {
+        t.row(&[format!("{:.2}", e.at), e.round.to_string(),
+                e.kind.label().to_string(), e.replica.to_string(),
+                e.depth.to_string(), e.live.to_string()]);
+    }
+    t.render()
+}
+
+/// Per-rate-curve-phase TTFT table for `mmserve kv`.
+pub fn render_phase_ttft(r: &AutoscaleReplayResult) -> String {
+    let mut t = Table::new(&["phase", "requests", "p50 TTFT",
+                             "p99 TTFT"]);
+    for (p, h) in &r.phase_ttft {
+        t.row(&[p.label().to_string(), h.len().to_string(),
+                format!("{:.2}", h.percentile(50.0)),
+                format!("{:.2}", h.percentile(99.0))]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrivals::ArrivalSpec;
+
+    fn open_base(spec: &str, requests: usize, tenants: usize)
+                 -> ReplayConfig {
+        ReplayConfig {
+            requests,
+            tenants,
+            arrivals: Some(ArrivalSpec::parse(spec).unwrap()),
+            ..ReplayConfig::default()
+        }
+    }
+
+    #[test]
+    fn autoscale_spec_parses_and_rejects_garbage() {
+        let s = AutoscaleSpec::parse("1:4").unwrap();
+        assert_eq!((s.min, s.max), (1, 4));
+        assert!(s.high_depth > s.low_depth);
+        for bad in ["", "4", "0:4", "4:2", "a:b", "1:"] {
+            assert!(AutoscaleSpec::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    /// Satellite: graceful drain vs crash on the same seeded
+    /// workload. Drain drops nothing and completes its in-flight
+    /// decodes on the draining replica; a crash at the same trigger
+    /// re-routes *everything* the replica held — so its re-route
+    /// count exceeds the drain's by exactly the in-flight work the
+    /// drain kept.
+    #[test]
+    fn drain_completes_in_flight_while_crash_reroutes_it() {
+        let base = open_base("poisson:0.9+followups:0", 48, 2);
+        let mk = |drain, kill| AutoscaleReplayConfig {
+            base: base.clone(),
+            policy: RoutingPolicy::LeastLoaded,
+            replicas: 3,
+            autoscale: None,
+            drain,
+            kill,
+        };
+        let baseline = autoscale_replay(&mk(None, None));
+        let drain = autoscale_replay(&mk(
+            Some(DrainSpec { replica: 1, after_delivered: 20 }),
+            None,
+        ));
+        let crash = autoscale_replay(&mk(
+            None,
+            Some(KillSpec { replica: 1, after_delivered: 20 }),
+        ));
+        let n = baseline.arrivals;
+        for (name, r) in [("baseline", &baseline), ("drain", &drain),
+                          ("crash", &crash)] {
+            assert_eq!(r.completed, n, "{name} completes all");
+            assert_eq!(r.dropped, 0, "{name} drops none");
+            assert_eq!(r.outputs.len(), n);
+        }
+        // Scheduling moves *where* requests run, never *what* they
+        // decode: all three runs agree token-for-token.
+        assert_eq!(drain.outputs, baseline.outputs);
+        assert_eq!(crash.outputs, baseline.outputs);
+        // Drain timeline: start (with kept in-flight) then done.
+        let start = drain
+            .events
+            .iter()
+            .find(|e| e.kind == ScaleKind::DrainStart)
+            .expect("drain-start event");
+        assert_eq!(start.replica, 1);
+        let done = drain
+            .events
+            .iter()
+            .find(|e| e.kind == ScaleKind::DrainDone)
+            .expect("drain-done event");
+        assert_eq!(done.replica, 1);
+        assert!(done.at >= start.at);
+        assert!(start.depth > 0,
+                "trigger mid-run must catch in-flight work");
+        // Crash timeline mirrors it with a crash event.
+        let boom = crash
+            .events
+            .iter()
+            .find(|e| e.kind == ScaleKind::Crash)
+            .expect("crash event");
+        assert_eq!(boom.replica, 1);
+        // The exact relation: the crash re-routes the drain's
+        // re-routed queue *plus* the in-flight work the drain kept.
+        assert_eq!(crash.reroutes, drain.reroutes + start.depth,
+                   "crash orphans = drained queue + kept in-flight");
+        assert!(crash.reroutes > drain.reroutes);
+    }
+
+    /// Acceptance criterion: on a diurnal + flash-crowd stream the
+    /// autoscaler absorbs the burst — strictly better burst-phase p99
+    /// TTFT than the fixed floor fleet, strictly fewer
+    /// replica-seconds than the fixed ceiling fleet, within goodput
+    /// tolerance of it, with both scale directions on the timeline.
+    #[test]
+    fn autoscaler_absorbs_burst_cheaper_than_fixed_fleets() {
+        let cfg = AutoscaleReplayConfig {
+            base: open_base("diurnal:0.25:0.9:180+burst:60:30:4", 96,
+                            4),
+            policy: RoutingPolicy::LeastLoaded,
+            replicas: 1,
+            autoscale: Some(AutoscaleSpec::new(1, 4)),
+            drain: None,
+            kill: None,
+        };
+        let c = compare_autoscale(&cfg);
+        let (auto_, min_, max_) =
+            (&c.autoscaled, &c.fixed_min, &c.fixed_max);
+        for (name, r) in
+            [("auto", auto_), ("min", min_), ("max", max_)]
+        {
+            assert_eq!(r.completed, r.arrivals,
+                       "{name} serves every arrival");
+            assert_eq!(r.dropped, 0, "{name} drops none");
+        }
+        assert!(auto_.scale_ups() >= 1, "burst must trigger scale-up");
+        assert!(auto_.drains() >= 1,
+                "the post-burst tail must trigger a drain");
+        assert!(auto_.peak_replicas > 1);
+        // Latency: the scaler beats the floor fleet where it hurts.
+        let a99 = auto_.phase_p99(ArrivalPhase::Burst);
+        let m99 = min_.phase_p99(ArrivalPhase::Burst);
+        assert!(a99 < m99,
+                "burst p99 TTFT: autoscaled {a99:.2} vs fixed-min \
+                 {m99:.2}");
+        assert!(auto_.ttft.percentile(99.0)
+                    < min_.ttft.percentile(99.0));
+        // Cost: strictly cheaper than pinning the ceiling.
+        assert!(auto_.replica_seconds < max_.replica_seconds,
+                "replica-seconds: autoscaled {:.1} vs fixed-max {:.1}",
+                auto_.replica_seconds, max_.replica_seconds);
+        // Efficiency: the same decoded streams from less capacity ⇒
+        // goodput at least within tolerance of (in practice above)
+        // the ceiling fleet. (`tokens_decoded` may differ slightly
+        // across arms: recompute preemption re-decodes, and arms
+        // preempt differently.)
+        assert_eq!(auto_.outputs, max_.outputs);
+        assert!(auto_.goodput_per_replica()
+                    >= 0.9 * max_.goodput_per_replica());
+    }
+
+    /// Same seed + config ⇒ bit-identical timeline, outputs and
+    /// counters (the non-property smoke of the 512-case prop test).
+    #[test]
+    fn autoscaled_replay_is_deterministic() {
+        let cfg = AutoscaleReplayConfig {
+            base: open_base("diurnal:0.3:1.0:120+burst:40:20:3", 48,
+                            3),
+            policy: RoutingPolicy::PrefixAffinity,
+            replicas: 1,
+            autoscale: Some(AutoscaleSpec::new(1, 3)),
+            drain: None,
+            kill: None,
+        };
+        let a = autoscale_replay(&cfg);
+        let b = autoscale_replay(&cfg);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(a.replica_seconds.to_bits(),
+                   b.replica_seconds.to_bits());
+        assert_eq!(format!("{:?}", a.fleet), format!("{:?}", b.fleet));
+    }
+
+    /// The renderers include every arm / event / phase.
+    #[test]
+    fn renderers_cover_timeline_and_phases() {
+        let cfg = AutoscaleReplayConfig {
+            base: open_base("diurnal:0.25:0.9:180+burst:60:30:4", 64,
+                            2),
+            policy: RoutingPolicy::LeastLoaded,
+            replicas: 1,
+            autoscale: Some(AutoscaleSpec::new(1, 3)),
+            drain: None,
+            kill: None,
+        };
+        let c = compare_autoscale(&cfg);
+        let cmp = render_autoscale_comparison(&c);
+        for needle in ["autoscaled", "fixed-min", "fixed-max",
+                       "burst p99 TTFT", "replica-seconds",
+                       "goodput/replica-s"] {
+            assert!(cmp.contains(needle), "{needle:?} in\n{cmp}");
+        }
+        let tl = render_scale_timeline(&c.autoscaled);
+        assert!(tl.contains("scale-up"), "timeline:\n{tl}");
+        let ph = render_phase_ttft(&c.autoscaled);
+        for needle in ["base", "peak", "burst"] {
+            assert!(ph.contains(needle), "{needle:?} in\n{ph}");
+        }
+        // A fixed fleet has no events — the timeline renders empty.
+        assert!(render_scale_timeline(&c.fixed_min).is_empty());
+    }
+}

@@ -30,6 +30,11 @@
 //!   back to least-loaded, it never blocks and never errors.
 //! * [`replay`] — the deviceless multi-worker replay that compares
 //!   policies on the simulated clock (`mmserve kv --replicas N`).
+//! * [`autoscale`] — the open-loop elastic-fleet replay: arrivals
+//!   from `workload::arrivals` route as they occur, and an
+//!   autoscaler adds replicas under sustained queue pressure and
+//!   gracefully drains idle ones (`mmserve kv --arrivals ...
+//!   --autoscale min:max`).
 //!
 //! The probe itself is `PrefixCache` chain hashes
 //! ([`crate::kvpool::prefix::block_hashes`]): equal hashes imply an
@@ -38,6 +43,7 @@
 //! tokens are shipped to workers and no worker locks are taken on the
 //! submit path.
 
+pub mod autoscale;
 pub mod replay;
 
 use std::collections::HashSet;

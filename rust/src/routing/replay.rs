@@ -128,20 +128,29 @@ pub struct RoutingReplayResult {
 }
 
 impl RoutingReplayResult {
-    /// Aggregate prefix hit rate from summed fleet counters.
+    /// Aggregate prefix hit rate from summed fleet counters. An empty
+    /// fleet (zero lookups — e.g. a `requests: 0` replay or an
+    /// all-dead fleet) is 0.0, never NaN: the CI gates divide by and
+    /// compare against this.
     pub fn agg_hit_rate(&self) -> f64 {
-        self.fleet.hit_rate()
+        if self.fleet.prefix_lookups == 0 {
+            return 0.0;
+        }
+        let r = self.fleet.hit_rate();
+        if r.is_finite() { r } else { 0.0 }
     }
 
     /// Fraction of the fleet makespan the fabric links spent busy
     /// (summed link time over the slowest worker's drain; can exceed
-    /// 1.0 when several links run in parallel).
+    /// 1.0 when several links run in parallel). A zero-duration replay
+    /// (instant completion — nothing ever ticked) is 0.0, never
+    /// NaN/inf, even if transfer time was somehow recorded.
     pub fn link_utilization(&self) -> f64 {
-        if self.sim_time > 0.0 {
-            self.transfer_time / self.sim_time
-        } else {
-            0.0
+        if self.sim_time <= 0.0 {
+            return 0.0;
         }
+        let u = self.transfer_time / self.sim_time;
+        if u.is_finite() { u } else { 0.0 }
     }
 }
 
@@ -151,9 +160,9 @@ impl RoutingReplayResult {
 /// subset, so any live eligible replica is reachable). Colocated runs
 /// pass every index; disaggregated runs route arrivals over the
 /// prefill set and handoffs over the decode set.
-fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
-             tokens: &[i32], cursor: u64, eligible: &[usize])
-             -> Option<usize> {
+pub(crate) fn route_one(workers: &[SimWorker], policy: RoutingPolicy,
+                        tokens: &[i32], cursor: u64,
+                        eligible: &[usize]) -> Option<usize> {
     let views: Vec<ReplicaView> = eligible
         .iter()
         .map(|&i| {
@@ -1183,6 +1192,52 @@ mod tests {
                    "every handoff is priced in the ledger");
         assert_eq!(bytes, r.transfer_bytes,
                    "ledger bytes reconcile with the fleet total");
+    }
+
+    /// Satellite (zero-denominator guards): an empty-fleet replay —
+    /// zero requests, so zero prefix lookups, zero ticks, zero
+    /// duration — must report 0.0 aggregates, never NaN (the CI gate
+    /// compares these values numerically).
+    #[test]
+    fn empty_fleet_aggregates_are_zero_not_nan() {
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                requests: 0,
+                ..ReplayConfig::default()
+            },
+            ..RoutingReplayConfig::default()
+        };
+        let r = routing_replay(&cfg, RoutingPolicy::PrefixAffinity);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.fleet.prefix_lookups, 0);
+        assert_eq!(r.agg_hit_rate(), 0.0, "no lookups ⇒ 0.0, not NaN");
+        assert!(r.agg_hit_rate().is_finite());
+        assert_eq!(r.sim_time, 0.0);
+        assert_eq!(r.link_utilization(), 0.0,
+                   "zero duration ⇒ 0.0, not NaN");
+        assert!(r.link_utilization().is_finite());
+    }
+
+    /// Satellite (zero-denominator guards): instant completion — a
+    /// synthetic zero-duration result that somehow carries transfer
+    /// time must still divide to 0.0, not inf.
+    #[test]
+    fn instant_completion_link_utilization_is_finite() {
+        let cfg = RoutingReplayConfig {
+            base: ReplayConfig {
+                requests: 0,
+                ..ReplayConfig::default()
+            },
+            ..RoutingReplayConfig::default()
+        };
+        let mut r = routing_replay(&cfg, RoutingPolicy::LeastLoaded);
+        r.sim_time = 0.0;
+        r.transfer_time = 3.5;
+        assert_eq!(r.link_utilization(), 0.0);
+        // And a degenerate negative-duration clock (can only come
+        // from a future accounting bug) still never divides.
+        r.sim_time = -1.0;
+        assert_eq!(r.link_utilization(), 0.0);
     }
 
     #[test]

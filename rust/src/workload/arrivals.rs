@@ -1,0 +1,804 @@
+//! Open-loop arrival engine: timestamped request streams shaped like
+//! fleet-scale traffic.
+//!
+//! The kvpool/routing replays historically enqueued the whole mix at
+//! t = 0 ("closed loop"), so admission policy was the only thing ever
+//! stressed — queueing delay, rate transients, and scaling policy were
+//! invisible. This module generates the *arrival process* instead: a
+//! seeded, deterministic sequence of `(time, SimRequest)` pairs drawn
+//! from
+//!
+//! * a **rate curve** — homogeneous Poisson (`poisson:R`) or a smooth
+//!   diurnal curve (`diurnal:base:peak:period`, sampled by
+//!   Lewis–Shedler thinning against the peak rate);
+//! * **burst episodes** (`burst:at:len:mult`) — flash crowds that
+//!   multiply the instantaneous rate inside a window, realized as
+//!   extra arrivals placed strictly inside `[at, at+len)`;
+//! * a **Zipf tenant population** (`zipf:s`) — multi-tenant workloads
+//!   draw their shared system prompt by rank-frequency popularity, so
+//!   a handful of tenants dominate the stream the way shared prompts
+//!   do at fleet scale;
+//! * **conversation follow-ups** (`followups:p`, `think:t`) — a slice
+//!   of requests re-arrive after their estimated service plus an
+//!   exponential think time, carrying the full prior turn (prompt +
+//!   the decoded tokens the sim will deterministically emit) as a
+//!   *warm prefix*, plus a fresh user tail. Follow-ups are where
+//!   prefix caching pays under open-loop load.
+//!
+//! Everything is a pure function of `(ReplayConfig, ArrivalSpec)`:
+//! same seed, same stream, bit for bit — the property-test harness in
+//! `rust/tests/property_workload.rs` checks the statistics (Poisson
+//! mean/CV, Zipf slope, burst containment) *and* the bit-identity.
+
+use crate::kvpool::replay::{generate_workload, ReplayConfig,
+                            SimFamily, SimRequest, SIM_DECODE_COST,
+                            SIM_PREFILL_TOKEN_COST};
+use crate::substrate::rng::Rng;
+
+/// Follow-up request ids live far above the base/burst id space
+/// (base ids are 1..=requests, burst ids continue from there) and far
+/// below the replay's ghost-fork space (1 << 48), so a follow-up can
+/// never collide with its parent or with beam ghosts.
+pub const FOLLOWUP_ID_BASE: u64 = 1 << 32;
+
+/// Seed salt for the arrival clock's RNG stream: timestamps draw from
+/// a stream independent of `generate_workload`'s, so the *payloads*
+/// of the base mix stay byte-identical to the closed-loop workload at
+/// the same seed.
+const ARRIVAL_SALT: u64 = 0xA211_1A75_0C10_CC01;
+
+/// Time-varying arrival rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateCurve {
+    /// Homogeneous Poisson at `rate` requests per simulated time unit.
+    Poisson { rate: f64 },
+    /// Smooth day-shaped curve: `base` at t = 0, cresting at `peak`
+    /// mid-`period`, back to `base` — one cosine hump per period.
+    Diurnal { base: f64, peak: f64, period: f64 },
+}
+
+impl RateCurve {
+    /// Instantaneous rate at simulated time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            RateCurve::Poisson { rate } => rate,
+            RateCurve::Diurnal { base, peak, period } => {
+                let p = period.max(1e-9);
+                let phase = (t / p) * std::f64::consts::TAU;
+                base + (peak - base) * 0.5 * (1.0 - phase.cos())
+            }
+        }
+    }
+
+    /// The thinning envelope: the curve's maximum instantaneous rate.
+    pub fn max_rate(&self) -> f64 {
+        match *self {
+            RateCurve::Poisson { rate } => rate,
+            RateCurve::Diurnal { base, peak, .. } => base.max(peak),
+        }
+    }
+}
+
+/// One flash-crowd episode: inside `[at, at + len)` the arrival rate
+/// is multiplied by `mult` (realized as extra injected arrivals on
+/// top of the base process).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstSpec {
+    pub at: f64,
+    pub len: f64,
+    pub mult: f64,
+}
+
+impl BurstSpec {
+    /// Does the window contain `t`? (Half-open: `at <= t < at+len`.)
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.at && t < self.at + self.len
+    }
+}
+
+/// Which regime of the rate curve an arrival landed in — the replay
+/// reports TTFT percentiles per phase, so a burst's queueing damage
+/// is visible separately from steady-state latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ArrivalPhase {
+    /// Off-peak steady state (a Poisson curve is all Base).
+    Base,
+    /// The diurnal crest: instantaneous rate ≥ the base/peak midpoint.
+    Peak,
+    /// Inside a configured burst window (wins over Base/Peak).
+    Burst,
+}
+
+impl ArrivalPhase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalPhase::Base => "base",
+            ArrivalPhase::Peak => "peak",
+            ArrivalPhase::Burst => "burst",
+        }
+    }
+
+    /// All phases, in report order.
+    pub const ALL: [ArrivalPhase; 3] = [
+        ArrivalPhase::Base,
+        ArrivalPhase::Peak,
+        ArrivalPhase::Burst,
+    ];
+}
+
+/// The open-loop arrival process: rate curve + burst episodes +
+/// conversation and tenant shaping. Parsed from the CLI's
+/// `--arrivals` spec; `None` in [`ReplayConfig::arrivals`] keeps the
+/// historical closed-loop replay (and its RNG stream) bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalSpec {
+    pub curve: RateCurve,
+    /// Flash-crowd episodes layered on the curve.
+    pub bursts: Vec<BurstSpec>,
+    /// Percent of arrivals that spawn a warm-prefix follow-up turn.
+    pub followup_percent: usize,
+    /// Mean exponential think time before a follow-up re-arrives
+    /// (measured from the parent's estimated completion).
+    pub think_mean: f64,
+    /// Zipf exponent for tenant popularity (multi-tenant workloads);
+    /// 0 keeps the uniform tenant draw.
+    pub zipf_s: f64,
+}
+
+impl ArrivalSpec {
+    /// Defaults for the knobs a spec string doesn't name.
+    fn with_curve(curve: RateCurve) -> ArrivalSpec {
+        ArrivalSpec {
+            curve,
+            bursts: Vec::new(),
+            followup_percent: 20,
+            think_mean: 25.0,
+            zipf_s: 1.1,
+        }
+    }
+
+    /// Parse an `--arrivals` spec: `+`-separated segments, exactly one
+    /// of which is a rate curve.
+    ///
+    /// * `poisson:R` — homogeneous Poisson at rate `R`;
+    /// * `diurnal:BASE:PEAK:PERIOD` — cosine day curve;
+    /// * `burst:AT:LEN:MULT` — flash crowd (repeatable);
+    /// * `followups:P` — percent of arrivals with a follow-up turn;
+    /// * `think:T` — mean think time before a follow-up;
+    /// * `zipf:S` — tenant-popularity exponent (0 = uniform).
+    ///
+    /// Example: `diurnal:0.25:0.9:180+burst:60:30:4+followups:25`.
+    pub fn parse(spec: &str) -> Result<ArrivalSpec, String> {
+        let mut curve: Option<RateCurve> = None;
+        let mut bursts: Vec<BurstSpec> = Vec::new();
+        let mut followups: Option<usize> = None;
+        let mut think: Option<f64> = None;
+        let mut zipf: Option<f64> = None;
+        let num = |part: &str, field: &str| -> Result<f64, String> {
+            field.trim().parse::<f64>().map_err(|_| {
+                format!("arrivals segment {part:?}: bad number \
+                         {field:?}")
+            })
+        };
+        for part in spec.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut it = part.split(':');
+            let kind = it.next().unwrap_or("").trim();
+            let args: Vec<&str> = it.collect();
+            match kind {
+                "poisson" => {
+                    if args.len() != 1 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want poisson:R"
+                        ));
+                    }
+                    let rate = num(part, args[0])?;
+                    if !(rate > 0.0) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: rate must be \
+                             > 0"
+                        ));
+                    }
+                    if curve.replace(RateCurve::Poisson { rate })
+                        .is_some()
+                    {
+                        return Err("arrivals: more than one rate \
+                                    curve".into());
+                    }
+                }
+                "diurnal" => {
+                    if args.len() != 3 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want \
+                             diurnal:BASE:PEAK:PERIOD"
+                        ));
+                    }
+                    let base = num(part, args[0])?;
+                    let peak = num(part, args[1])?;
+                    let period = num(part, args[2])?;
+                    if !(base >= 0.0 && peak > 0.0 && period > 0.0) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want base ≥ 0, \
+                             peak > 0, period > 0"
+                        ));
+                    }
+                    let c = RateCurve::Diurnal { base, peak, period };
+                    if curve.replace(c).is_some() {
+                        return Err("arrivals: more than one rate \
+                                    curve".into());
+                    }
+                }
+                "burst" => {
+                    if args.len() != 3 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want \
+                             burst:AT:LEN:MULT"
+                        ));
+                    }
+                    let at = num(part, args[0])?;
+                    let len = num(part, args[1])?;
+                    let mult = num(part, args[2])?;
+                    if !(at >= 0.0 && len > 0.0 && mult >= 1.0) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want at ≥ 0, \
+                             len > 0, mult ≥ 1"
+                        ));
+                    }
+                    bursts.push(BurstSpec { at, len, mult });
+                }
+                "followups" => {
+                    if args.len() != 1 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want \
+                             followups:P"
+                        ));
+                    }
+                    let p = num(part, args[0])?;
+                    if !(0.0..=100.0).contains(&p) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: percent out \
+                             of range"
+                        ));
+                    }
+                    followups = Some(p as usize);
+                }
+                "think" => {
+                    if args.len() != 1 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want think:T"
+                        ));
+                    }
+                    let t = num(part, args[0])?;
+                    if !(t >= 0.0) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: think must be \
+                             ≥ 0"
+                        ));
+                    }
+                    think = Some(t);
+                }
+                "zipf" => {
+                    if args.len() != 1 {
+                        return Err(format!(
+                            "arrivals segment {part:?}: want zipf:S"
+                        ));
+                    }
+                    let s = num(part, args[0])?;
+                    if !(s >= 0.0) {
+                        return Err(format!(
+                            "arrivals segment {part:?}: exponent must \
+                             be ≥ 0"
+                        ));
+                    }
+                    zipf = Some(s);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown arrivals segment {other:?} (want \
+                         poisson|diurnal|burst|followups|think|zipf)"
+                    ));
+                }
+            }
+        }
+        let Some(curve) = curve else {
+            return Err("arrivals: no rate curve (need poisson:R or \
+                        diurnal:BASE:PEAK:PERIOD)".into());
+        };
+        let mut out = ArrivalSpec::with_curve(curve);
+        out.bursts = bursts;
+        if let Some(p) = followups {
+            out.followup_percent = p;
+        }
+        if let Some(t) = think {
+            out.think_mean = t;
+        }
+        if let Some(s) = zipf {
+            out.zipf_s = s;
+        }
+        Ok(out)
+    }
+
+    /// Which phase an arrival at time `t` belongs to. Burst windows
+    /// win; a diurnal curve splits the rest at the base/peak midpoint;
+    /// a Poisson curve is all Base.
+    pub fn phase_at(&self, t: f64) -> ArrivalPhase {
+        if self.bursts.iter().any(|b| b.contains(t)) {
+            return ArrivalPhase::Burst;
+        }
+        match self.curve {
+            RateCurve::Poisson { .. } => ArrivalPhase::Base,
+            RateCurve::Diurnal { base, peak, .. } => {
+                if self.curve.rate_at(t) >= 0.5 * (base + peak) {
+                    ArrivalPhase::Peak
+                } else {
+                    ArrivalPhase::Base
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.curve {
+            RateCurve::Poisson { rate } => {
+                write!(f, "poisson:{rate}")?;
+            }
+            RateCurve::Diurnal { base, peak, period } => {
+                write!(f, "diurnal:{base}:{peak}:{period}")?;
+            }
+        }
+        for b in &self.bursts {
+            write!(f, "+burst:{}:{}:{}", b.at, b.len, b.mult)?;
+        }
+        write!(f, "+followups:{}+think:{}+zipf:{}",
+               self.followup_percent, self.think_mean, self.zipf_s)
+    }
+}
+
+/// One timestamped arrival of the open-loop stream.
+#[derive(Debug, Clone)]
+pub struct TimedArrival {
+    /// Absolute simulated arrival time.
+    pub at: f64,
+    /// Rate-curve phase at `at` (per-phase TTFT reporting).
+    pub phase: ArrivalPhase,
+    /// Id of the conversation turn this follows up on (`None` for
+    /// first turns and burst injections).
+    pub followup_of: Option<u64>,
+    pub req: SimRequest,
+}
+
+/// Inverse-CDF table for a Zipf(s) distribution over `n` ranks:
+/// `cdf[k]` is P(rank ≤ k). Rank 0 is the most popular tenant.
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let n = n.max(1);
+    let mut w: Vec<f64> =
+        (1..=n).map(|k| (k as f64).powf(-s)).collect();
+    let sum: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for x in w.iter_mut() {
+        acc += *x / sum;
+        *x = acc;
+    }
+    // Guard float drift: the last bucket must cover u → 1.
+    if let Some(last) = w.last_mut() {
+        *last = 1.0;
+    }
+    w
+}
+
+/// Draw a rank from a [`zipf_cdf`] table with a uniform `u` in [0,1).
+pub fn zipf_pick(cdf: &[f64], u: f64) -> usize {
+    cdf.iter()
+        .position(|&c| u < c)
+        .unwrap_or(cdf.len().saturating_sub(1))
+}
+
+/// One exponential gap at `rate` (mean `1/rate`).
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    // f64() ∈ [0,1) ⇒ 1-u ∈ (0,1] ⇒ ln ≤ 0 ⇒ gap ≥ 0, never NaN.
+    -(1.0 - rng.f64()).ln() / rate.max(1e-9)
+}
+
+/// Estimated solo service time of one request on the simulated
+/// hardware (prefill tokens priced per token + one decode dispatch
+/// per output token) — the follow-up scheduler's "the user read the
+/// answer" offset.
+fn service_estimate(req: &SimRequest) -> f64 {
+    req.tokens.len() as f64 * SIM_PREFILL_TOKEN_COST
+        + req.decode as f64 * SIM_DECODE_COST
+}
+
+/// Synthesize one extra request (burst injections) with the same
+/// per-request shape as [`generate_workload`], drawn from the arrival
+/// RNG stream.
+fn synth_request(id: u64, cfg: &ReplayConfig, zipf: Option<&[f64]>,
+                 rng: &mut Rng) -> SimRequest {
+    let tenants = cfg.tenants.max(1);
+    let long = rng.usize(0, 100) < cfg.long_percent;
+    let (pr, dr) = if long {
+        (cfg.long_prompt, cfg.long_decode)
+    } else {
+        (cfg.short_prompt, cfg.short_decode)
+    };
+    let extra = rng.usize(pr.0, pr.1 + 1);
+    let decode = rng.usize(dr.0, dr.1 + 1).max(1);
+    let tenant = if tenants > 1 {
+        match zipf {
+            Some(cdf) => zipf_pick(cdf, rng.f64()),
+            None => rng.usize(0, tenants),
+        }
+    } else {
+        0
+    };
+    let family = match cfg.mix {
+        Some(m) => {
+            let roll = rng.usize(0, 100);
+            if roll < m.seamless_percent {
+                SimFamily::Seamless
+            } else if roll < m.seamless_percent + m.hstu_percent {
+                SimFamily::Hstu
+            } else {
+                SimFamily::Chat
+            }
+        }
+        None => SimFamily::Chat,
+    };
+    let decode = if family == SimFamily::Hstu { 0 } else { decode };
+    let mut tokens: Vec<i32> = (0..cfg.system_prompt_len)
+        .map(|i| ((i + tenant * 101) % 200) as i32)
+        .collect();
+    tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
+    SimRequest { id, tokens, decode, tenant, family }
+}
+
+/// Build the follow-up turn of a conversation: the parent's full
+/// prompt, the exact token stream the sim will deterministically
+/// decode for it (the replay emits `900 + pos % 50` at position
+/// `pos`), and a fresh short user tail — so the follow-up's leading
+/// blocks are a *warm prefix* wherever the parent's KV chain is still
+/// cached.
+fn followup_request(parent: &SimRequest, cfg: &ReplayConfig,
+                    rng: &mut Rng) -> SimRequest {
+    let mut tokens = parent.tokens.clone();
+    let p0 = tokens.len();
+    for k in 0..parent.decode {
+        tokens.push(900 + ((p0 + k) % 50) as i32);
+    }
+    let extra =
+        rng.usize(cfg.short_prompt.0, cfg.short_prompt.1 + 1);
+    tokens.extend((0..extra).map(|_| rng.range(300, 800) as i32));
+    let decode = if parent.family == SimFamily::Hstu {
+        0
+    } else {
+        rng.usize(cfg.short_decode.0, cfg.short_decode.1 + 1).max(1)
+    };
+    // Never synthesize a turn the pool structurally cannot serve:
+    // prompt + decode + 1 must fit max_seq.
+    let cap = cfg.max_seq.saturating_sub(decode + 1).max(1);
+    tokens.truncate(cap);
+    SimRequest {
+        id: parent.id + FOLLOWUP_ID_BASE,
+        tokens,
+        decode,
+        tenant: parent.tenant,
+        family: parent.family,
+    }
+}
+
+fn sort_arrivals(v: &mut [TimedArrival]) {
+    v.sort_by(|a, b| {
+        a.at.total_cmp(&b.at).then(a.req.id.cmp(&b.req.id))
+    });
+}
+
+/// The full timestamped stream for `cfg`: the base mix (byte-identical
+/// payloads to [`generate_workload`]) spaced by the rate curve, burst
+/// injections strictly inside their windows, and warm-prefix
+/// follow-ups. Deterministic: a pure function of the config.
+///
+/// With `cfg.arrivals == None` every request arrives at t = 0 — the
+/// closed-loop stream, so open-loop drivers degrade gracefully.
+pub fn generate_arrivals(cfg: &ReplayConfig) -> Vec<TimedArrival> {
+    let base = generate_workload(cfg);
+    let Some(spec) = cfg.arrivals.clone() else {
+        return base
+            .into_iter()
+            .map(|req| TimedArrival {
+                at: 0.0,
+                phase: ArrivalPhase::Base,
+                followup_of: None,
+                req,
+            })
+            .collect();
+    };
+    let mut rng = Rng::new(cfg.seed ^ ARRIVAL_SALT);
+    // ---- base process: Lewis–Shedler thinning against the peak ----
+    let rmax = spec.curve.max_rate().max(1e-9);
+    let mut t = 0.0f64;
+    let mut out: Vec<TimedArrival> = Vec::new();
+    for req in base {
+        loop {
+            t += exp_gap(&mut rng, rmax);
+            if rng.f64() * rmax < spec.curve.rate_at(t) {
+                break;
+            }
+        }
+        out.push(TimedArrival {
+            at: t,
+            phase: spec.phase_at(t),
+            followup_of: None,
+            req,
+        });
+    }
+    // ---- burst injections: extra arrivals strictly inside windows --
+    let tenants = cfg.tenants.max(1);
+    let zipf = if tenants > 1 && spec.zipf_s > 0.0 {
+        Some(zipf_cdf(tenants, spec.zipf_s))
+    } else {
+        None
+    };
+    let mut next_id = cfg.requests as u64 + 1;
+    for b in &spec.bursts {
+        let mid_rate = spec.curve.rate_at(b.at + 0.5 * b.len);
+        let extra =
+            (mid_rate * (b.mult - 1.0).max(0.0) * b.len).round()
+                as usize;
+        for _ in 0..extra {
+            // f64() < 1 keeps the injection strictly inside the
+            // half-open window.
+            let at = b.at + rng.f64() * b.len;
+            let req =
+                synth_request(next_id, cfg, zipf.as_deref(), &mut rng);
+            next_id += 1;
+            out.push(TimedArrival {
+                at,
+                phase: spec.phase_at(at),
+                followup_of: None,
+                req,
+            });
+        }
+    }
+    sort_arrivals(&mut out);
+    // ---- conversation follow-ups (warm-prefix re-arrivals) ---------
+    if spec.followup_percent > 0 {
+        let mut follows: Vec<TimedArrival> = Vec::new();
+        for a in &out {
+            if rng.usize(0, 100) >= spec.followup_percent {
+                continue;
+            }
+            let think =
+                exp_gap(&mut rng, 1.0 / spec.think_mean.max(1e-9));
+            let at = a.at + service_estimate(&a.req) + think;
+            let req = followup_request(&a.req, cfg, &mut rng);
+            follows.push(TimedArrival {
+                at,
+                phase: spec.phase_at(at),
+                followup_of: Some(a.req.id),
+                req,
+            });
+        }
+        out.extend(follows);
+        sort_arrivals(&mut out);
+    }
+    out
+}
+
+/// Per-phase arrival counts (report order: base, peak, burst).
+pub fn phase_counts(arrivals: &[TimedArrival])
+                    -> Vec<(ArrivalPhase, usize)> {
+    ArrivalPhase::ALL
+        .iter()
+        .map(|&p| {
+            (p, arrivals.iter().filter(|a| a.phase == p).count())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open_cfg(spec: &str) -> ReplayConfig {
+        ReplayConfig {
+            requests: 48,
+            tenants: 4,
+            arrivals: Some(ArrivalSpec::parse(spec).unwrap()),
+            ..ReplayConfig::default()
+        }
+    }
+
+    #[test]
+    fn parse_accepts_full_spec_and_rejects_garbage() {
+        let s = ArrivalSpec::parse(
+            "diurnal:0.25:0.9:180+burst:60:30:4+burst:200:20:6\
+             +followups:30+think:10+zipf:1.3",
+        )
+        .unwrap();
+        assert_eq!(s.bursts.len(), 2);
+        assert_eq!(s.followup_percent, 30);
+        assert_eq!(s.think_mean, 10.0);
+        assert_eq!(s.zipf_s, 1.3);
+        assert!(matches!(s.curve, RateCurve::Diurnal { .. }));
+        let p = ArrivalSpec::parse("poisson:2.5").unwrap();
+        assert!(matches!(p.curve,
+                         RateCurve::Poisson { rate } if rate == 2.5));
+        assert!(p.bursts.is_empty());
+        for bad in [
+            "",
+            "burst:1:2:3",            // no curve
+            "poisson:0",              // zero rate
+            "poisson:2+diurnal:1:2:3", // two curves
+            "diurnal:1:2",            // missing arg
+            "burst:5:0:2",            // zero-length window
+            "burst:5:10:0.5",         // de-amplifying "burst"
+            "warp:9",                 // unknown segment
+            "poisson:wat",            // not a number
+            "followups:140",          // percent out of range
+        ] {
+            assert!(ArrivalSpec::parse(bad).is_err(), "{bad:?}");
+        }
+        // Round-trip: Display output re-parses to the same spec.
+        let again = ArrivalSpec::parse(&s.to_string()).unwrap();
+        assert_eq!(again, s);
+    }
+
+    #[test]
+    fn diurnal_curve_crests_mid_period_and_phases_split() {
+        let s =
+            ArrivalSpec::parse("diurnal:0.2:1.0:100+burst:10:5:3")
+                .unwrap();
+        assert!((s.curve.rate_at(0.0) - 0.2).abs() < 1e-9);
+        assert!((s.curve.rate_at(50.0) - 1.0).abs() < 1e-9);
+        assert!((s.curve.rate_at(100.0) - 0.2).abs() < 1e-9);
+        assert_eq!(s.curve.max_rate(), 1.0);
+        assert_eq!(s.phase_at(50.0), ArrivalPhase::Peak);
+        assert_eq!(s.phase_at(99.0), ArrivalPhase::Base);
+        // Burst wins over the underlying curve phase.
+        assert_eq!(s.phase_at(12.0), ArrivalPhase::Burst);
+        assert_eq!(s.phase_at(15.0), ArrivalPhase::Base,
+                   "window is half-open");
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_rank0_dominates() {
+        let cdf = zipf_cdf(6, 1.2);
+        assert_eq!(cdf.len(), 6);
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*cdf.last().unwrap(), 1.0);
+        // Rank 0 holds the largest single mass.
+        let m0 = cdf[0];
+        assert!(m0 > 1.0 / 6.0, "rank-0 mass {m0}");
+        assert_eq!(zipf_pick(&cdf, 0.0), 0);
+        assert_eq!(zipf_pick(&cdf, 0.999_999), 5);
+    }
+
+    #[test]
+    fn closed_loop_config_degenerates_to_t_zero() {
+        let cfg = ReplayConfig::default();
+        let arr = generate_arrivals(&cfg);
+        assert_eq!(arr.len(), cfg.requests);
+        assert!(arr.iter().all(|a| a.at == 0.0));
+        assert!(arr.iter().all(|a| a.phase == ArrivalPhase::Base));
+        // Payloads are exactly the closed-loop workload.
+        let base = generate_workload(&cfg);
+        for (a, b) in arr.iter().zip(&base) {
+            assert_eq!(a.req.id, b.id);
+            assert_eq!(a.req.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn base_payloads_match_generate_workload_and_times_are_sorted() {
+        let cfg = open_cfg("poisson:1.5+followups:0");
+        let arr = generate_arrivals(&cfg);
+        assert_eq!(arr.len(), cfg.requests);
+        assert!(arr.windows(2).all(|w| w[0].at <= w[1].at));
+        let base = generate_workload(&cfg);
+        for (a, b) in arr.iter().zip(&base) {
+            assert_eq!(a.req.id, b.id);
+            assert_eq!(a.req.tokens, b.tokens);
+            assert_eq!(a.req.decode, b.decode);
+            assert_eq!(a.req.tenant, b.tenant);
+        }
+    }
+
+    #[test]
+    fn bursts_inject_extra_arrivals_inside_their_windows() {
+        let cfg = open_cfg("poisson:1.0+burst:10:20:5+followups:0");
+        let arr = generate_arrivals(&cfg);
+        assert!(arr.len() > cfg.requests,
+                "burst injected extras: {}", arr.len());
+        let injected: Vec<_> = arr
+            .iter()
+            .filter(|a| a.req.id > cfg.requests as u64)
+            .collect();
+        assert!(!injected.is_empty());
+        for a in &injected {
+            assert!(a.at >= 10.0 && a.at < 30.0, "at {}", a.at);
+            assert_eq!(a.phase, ArrivalPhase::Burst);
+        }
+    }
+
+    #[test]
+    fn followups_carry_the_parents_warm_prefix() {
+        let cfg = open_cfg("poisson:1.0+followups:100+think:5");
+        let arr = generate_arrivals(&cfg);
+        let by_id: std::collections::HashMap<u64, &TimedArrival> =
+            arr.iter().map(|a| (a.req.id, a)).collect();
+        let follows: Vec<_> =
+            arr.iter().filter(|a| a.followup_of.is_some()).collect();
+        assert_eq!(follows.len(), cfg.requests,
+                   "every turn follows up at 100%");
+        for f in follows {
+            let parent = by_id[&f.followup_of.unwrap()];
+            assert_eq!(f.req.id,
+                       parent.req.id + FOLLOWUP_ID_BASE);
+            assert!(f.at > parent.at, "re-arrives strictly later");
+            assert_eq!(f.req.tenant, parent.req.tenant);
+            // Warm prefix: parent prompt + the exact tokens the sim
+            // will decode for it (900 + pos % 50 at position pos).
+            let p = &parent.req;
+            assert!(f.req.tokens.len() >= p.tokens.len() + p.decode);
+            assert_eq!(&f.req.tokens[..p.tokens.len()], &p.tokens[..]);
+            for (k, &tok) in f.req.tokens
+                [p.tokens.len()..p.tokens.len() + p.decode]
+                .iter()
+                .enumerate()
+            {
+                assert_eq!(tok,
+                           900 + ((p.tokens.len() + k) % 50) as i32);
+            }
+            assert!(f.req.tokens.len() + f.req.decode + 1
+                        <= cfg.max_seq);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream_different_seed_differs() {
+        let cfg =
+            open_cfg("diurnal:0.3:1.2:120+burst:30:20:4+followups:25");
+        let a = generate_arrivals(&cfg);
+        let b = generate_arrivals(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at.to_bits(), y.at.to_bits());
+            assert_eq!(x.req.id, y.req.id);
+            assert_eq!(x.req.tokens, y.req.tokens);
+            assert_eq!(x.phase, y.phase);
+            assert_eq!(x.followup_of, y.followup_of);
+        }
+        let other = ReplayConfig { seed: 99, ..cfg };
+        let c = generate_arrivals(&other);
+        assert!(a.iter().zip(&c).any(|(x, y)| {
+            x.at.to_bits() != y.at.to_bits()
+                || x.req.tokens != y.req.tokens
+        }));
+    }
+
+    #[test]
+    fn multi_tenant_open_loop_draws_zipf_popular_tenants() {
+        let cfg = ReplayConfig {
+            requests: 600,
+            tenants: 5,
+            arrivals: Some(
+                ArrivalSpec::parse("poisson:2+followups:0+zipf:1.3")
+                    .unwrap(),
+            ),
+            ..ReplayConfig::default()
+        };
+        let w = generate_workload(&cfg);
+        let mut counts = vec![0usize; cfg.tenants];
+        for r in &w {
+            counts[r.tenant] += 1;
+        }
+        // Rank 0 dominates (Zipf), unlike the uniform draw.
+        assert!(counts[0] > counts[4] * 2,
+                "zipf head {counts:?}");
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+}

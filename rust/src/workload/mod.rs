@@ -6,7 +6,13 @@
 //! those statistics — the evaluation consumes only length
 //! distributions, which Table 2 fully specifies (DESIGN.md
 //! §Substitutions).
+//!
+//! [`arrivals`] layers fleet-scale *timing* on top: open-loop
+//! Poisson/diurnal/burst arrival processes with Zipf tenant
+//! populations and warm-prefix conversation follow-ups, feeding the
+//! replay drivers timestamped requests instead of a pre-queued mix.
 
+pub mod arrivals;
 pub mod batchcfg;
 
 use crate::models::TaskKind;

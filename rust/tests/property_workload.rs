@@ -1,0 +1,378 @@
+//! Property suite for the open-loop workload engine and the elastic
+//! autoscaler (mini-proptest, `PROPTEST_CASES=512` in CI):
+//!
+//! * Poisson arrival gaps have the exponential signature: empirical
+//!   inter-arrival mean within tolerance of `1/rate` and coefficient
+//!   of variation near 1,
+//! * the Zipf tenant sampler reproduces the rank-frequency law: the
+//!   log-log slope of rank counts tracks `-s`, and the workload
+//!   generator's multi-tenant head dominates its tail,
+//! * burst/flash-crowd episodes are strictly contained in their
+//!   configured windows — every Burst-phase arrival lies inside a
+//!   window, every injected extra inside *its* window, and no
+//!   Base/Peak arrival lies inside any,
+//! * same seed ⇒ bit-identical arrival streams (timestamps compared
+//!   by `to_bits`, payloads token-for-token),
+//! * same seed + config ⇒ bit-identical autoscaled fleet replays:
+//!   scale-event timeline, per-request outputs, routing counts, pool
+//!   counters and both clocks agree across two runs — including runs
+//!   mixing `--autoscale` with `--mix` and `--shards`.
+
+use mmserve::kvpool::replay::{generate_workload, MixSpec,
+                              ReplayConfig};
+use mmserve::routing::autoscale::{autoscale_replay, AutoscaleSpec,
+                                  AutoscaleReplayConfig};
+use mmserve::routing::RoutingPolicy;
+use mmserve::substrate::prop::prop_check;
+use mmserve::substrate::rng::Rng;
+use mmserve::workload::arrivals::{generate_arrivals, zipf_cdf,
+                                  zipf_pick, ArrivalPhase,
+                                  ArrivalSpec, BurstSpec, RateCurve};
+
+/// An open-loop config with a raw [`ArrivalSpec`] (no string round
+/// trip — the parser has its own unit tests).
+fn open_cfg(requests: usize, tenants: usize, seed: u64,
+            spec: ArrivalSpec) -> ReplayConfig {
+    ReplayConfig {
+        requests,
+        tenants,
+        seed,
+        arrivals: Some(spec),
+        ..ReplayConfig::default()
+    }
+}
+
+/// Poisson arrivals: the gap stream must look exponential — mean
+/// `1/rate` and CV ≈ 1 (a drifting or clumping generator fails one or
+/// both).
+#[test]
+fn prop_poisson_interarrival_mean_and_cv() {
+    prop_check(
+        60,
+        0x90A1_55E1,
+        |r: &mut Rng| (r.usize(5, 40), r.range(0, 1 << 32)),
+        |&(rate_decis, seed)| {
+            let rate = rate_decis as f64 / 10.0;
+            let spec = ArrivalSpec {
+                curve: RateCurve::Poisson { rate },
+                bursts: vec![],
+                followup_percent: 0,
+                think_mean: 25.0,
+                zipf_s: 0.0,
+            };
+            let cfg = open_cfg(512, 1, seed, spec);
+            let arr = generate_arrivals(&cfg);
+            let gaps: Vec<f64> = arr
+                .windows(2)
+                .map(|w| w[1].at - w[0].at)
+                .collect();
+            let n = gaps.len() as f64;
+            let mean = gaps.iter().sum::<f64>() / n;
+            let want = 1.0 / rate;
+            if (mean - want).abs() > 0.25 * want {
+                return Err(format!(
+                    "rate {rate}: mean gap {mean:.4}, want \
+                     {want:.4} ± 25%"
+                ));
+            }
+            let var = gaps.iter()
+                .map(|g| (g - mean).powi(2))
+                .sum::<f64>() / n;
+            let cv = var.sqrt() / mean;
+            if !(0.7..=1.3).contains(&cv) {
+                return Err(format!(
+                    "rate {rate}: CV {cv:.3} outside [0.7, 1.3] — \
+                     not exponential"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Zipf rank-frequency: the sampler's log-log slope over ranks tracks
+/// `-s`, and the workload generator's multi-tenant head beats its
+/// tail.
+#[test]
+fn prop_zipf_rank_frequency_slope() {
+    prop_check(
+        60,
+        0x21FF_A0B3,
+        |r: &mut Rng| {
+            ((r.usize(4, 9), r.usize(10, 17)), r.range(0, 1 << 32))
+        },
+        |&((tenants, s_decis), seed)| {
+            let s = s_decis as f64 / 10.0;
+            // Direct sampler check: 5000 inverse-CDF draws.
+            let cdf = zipf_cdf(tenants, s);
+            let mut rng = Rng::new(seed);
+            let mut counts = vec![0usize; tenants];
+            for _ in 0..5000 {
+                counts[zipf_pick(&cdf, rng.f64())] += 1;
+            }
+            // Least-squares slope of ln(count) on ln(rank+1) over
+            // non-empty ranks.
+            let pts: Vec<(f64, f64)> = counts
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(k, &c)| {
+                    ((k as f64 + 1.0).ln(), (c as f64).ln())
+                })
+                .collect();
+            if pts.len() < 3 {
+                return Err(format!(
+                    "s {s}: only {} non-empty ranks", pts.len()
+                ));
+            }
+            let m = pts.len() as f64;
+            let (sx, sy): (f64, f64) = pts.iter()
+                .fold((0.0, 0.0), |(a, b), &(x, y)| (a + x, b + y));
+            let (sxx, sxy): (f64, f64) = pts.iter().fold(
+                (0.0, 0.0),
+                |(a, b), &(x, y)| (a + x * x, b + x * y),
+            );
+            let slope = (m * sxy - sx * sy) / (m * sxx - sx * sx);
+            if (slope + s).abs() > 0.35 {
+                return Err(format!(
+                    "s {s}: rank-frequency slope {slope:.3}, want \
+                     ≈ {:.3}", -s
+                ));
+            }
+            // End to end: the generator's tenant draw uses the same
+            // sampler — its most popular tenant must dominate the
+            // least popular.
+            let spec = ArrivalSpec {
+                curve: RateCurve::Poisson { rate: 1.0 },
+                bursts: vec![],
+                followup_percent: 0,
+                think_mean: 25.0,
+                zipf_s: s,
+            };
+            let cfg = open_cfg(300, tenants, seed, spec);
+            let mut wc = vec![0usize; tenants];
+            for r in generate_workload(&cfg) {
+                wc[r.tenant] += 1;
+            }
+            if wc[0] <= wc[tenants - 1] {
+                return Err(format!(
+                    "s {s}: workload head {} ≤ tail {}", wc[0],
+                    wc[tenants - 1]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Burst episodes are strictly contained: Burst-phase ⟺ inside a
+/// window, and injected extras (ids above the base range) land inside
+/// windows only.
+#[test]
+fn prop_burst_arrivals_contained() {
+    prop_check(
+        60,
+        0xB0B5_7CA7,
+        |r: &mut Rng| {
+            // (window start decis, window len decis, mult, second
+            // window gap decis), seed
+            ((r.usize(0, 300), r.usize(50, 200)),
+             (r.usize(2, 6), r.range(0, 1 << 32)))
+        },
+        |&((at_d, len_d), (mult, seed))| {
+            let b1 = BurstSpec {
+                at: at_d as f64 / 10.0,
+                len: len_d as f64 / 10.0,
+                mult: mult as f64,
+            };
+            // A second, disjoint window after the first.
+            let b2 = BurstSpec {
+                at: b1.at + b1.len + 7.0,
+                len: 5.0,
+                mult: mult as f64,
+            };
+            let spec = ArrivalSpec {
+                curve: RateCurve::Diurnal {
+                    base: 0.4,
+                    peak: 1.2,
+                    period: 90.0,
+                },
+                bursts: vec![b1, b2],
+                followup_percent: 20,
+                think_mean: 10.0,
+                zipf_s: 1.1,
+            };
+            let cfg = open_cfg(64, 2, seed, spec);
+            let arr = generate_arrivals(&cfg);
+            let inside =
+                |t: f64| b1.contains(t) || b2.contains(t);
+            for a in &arr {
+                let burst_phase = a.phase == ArrivalPhase::Burst;
+                if burst_phase != inside(a.at) {
+                    return Err(format!(
+                        "id {} at {:.3}: phase {:?} vs windows \
+                         [{:.1},{:.1}) [{:.1},{:.1})",
+                        a.req.id, a.at, a.phase, b1.at,
+                        b1.at + b1.len, b2.at, b2.at + b2.len
+                    ));
+                }
+                // Injected extras carry ids above the base range and
+                // never above the follow-up space.
+                let injected = a.req.id > cfg.requests as u64
+                    && a.followup_of.is_none();
+                if injected && !inside(a.at) {
+                    return Err(format!(
+                        "injected id {} escaped its window (at \
+                         {:.3})", a.req.id, a.at
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same seed ⇒ the same stream, bit for bit; timestamps compared via
+/// `f64::to_bits`, payloads token-for-token.
+#[test]
+fn prop_same_seed_bitidentical_stream() {
+    prop_check(
+        60,
+        0x5EED_5EED,
+        |r: &mut Rng| (r.range(0, 1 << 32), r.usize(16, 96)),
+        |&(seed, requests)| {
+            let spec = ArrivalSpec {
+                curve: RateCurve::Diurnal {
+                    base: 0.3,
+                    peak: 1.1,
+                    period: 120.0,
+                },
+                bursts: vec![BurstSpec {
+                    at: 30.0,
+                    len: 20.0,
+                    mult: 4.0,
+                }],
+                followup_percent: 25,
+                think_mean: 15.0,
+                zipf_s: 1.2,
+            };
+            let cfg = open_cfg(requests, 3, seed, spec);
+            let a = generate_arrivals(&cfg);
+            let b = generate_arrivals(&cfg);
+            if a.len() != b.len() {
+                return Err(format!(
+                    "stream lengths differ: {} vs {}", a.len(),
+                    b.len()
+                ));
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.at.to_bits() != y.at.to_bits()
+                    || x.req.id != y.req.id
+                    || x.req.tokens != y.req.tokens
+                    || x.req.decode != y.req.decode
+                    || x.req.tenant != y.req.tenant
+                    || x.phase != y.phase
+                    || x.followup_of != y.followup_of
+                {
+                    return Err(format!(
+                        "stream diverged at id {} / {}", x.req.id,
+                        y.req.id
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Autoscaler determinism: same seed + config ⇒ bit-identical
+/// scale-event timeline, per-request outputs, routing counts, pool
+/// counters and clocks — including `--mix` and `--shards` runs.
+#[test]
+fn prop_autoscale_determinism() {
+    prop_check(
+        24,
+        0xAC57_0CA1,
+        |r: &mut Rng| {
+            ((r.range(0, 1 << 32), r.usize(1, 4)),
+             (r.usize(0, 2), r.usize(0, 3)))
+        },
+        |&((seed, shards), (mixed, policy_idx))| {
+            let spec = ArrivalSpec {
+                curve: RateCurve::Diurnal {
+                    base: 0.3,
+                    peak: 1.0,
+                    period: 100.0,
+                },
+                bursts: vec![BurstSpec {
+                    at: 20.0,
+                    len: 15.0,
+                    mult: 3.0,
+                }],
+                followup_percent: 20,
+                think_mean: 10.0,
+                zipf_s: 1.1,
+            };
+            let mut base = open_cfg(40, 2, seed, spec);
+            base.shards = shards;
+            if mixed == 1 {
+                base.mix = Some(MixSpec {
+                    seamless_percent: 20,
+                    hstu_percent: 20,
+                    beam: 3,
+                });
+            }
+            let cfg = AutoscaleReplayConfig {
+                base,
+                policy: RoutingPolicy::ALL[policy_idx],
+                replicas: 1,
+                autoscale: Some(AutoscaleSpec::new(1, 3)),
+                drain: None,
+                kill: None,
+            };
+            let a = autoscale_replay(&cfg);
+            let b = autoscale_replay(&cfg);
+            if format!("{:?}", a.events) != format!("{:?}", b.events)
+            {
+                return Err(format!(
+                    "scale timelines diverged:\n{:?}\n{:?}",
+                    a.events, b.events
+                ));
+            }
+            if a.outputs != b.outputs {
+                return Err("per-request outputs diverged".into());
+            }
+            if a.routed != b.routed {
+                return Err(format!(
+                    "routing counts diverged: {:?} vs {:?}", a.routed,
+                    b.routed
+                ));
+            }
+            if format!("{:?}", a.fleet) != format!("{:?}", b.fleet) {
+                return Err("fleet pool counters diverged".into());
+            }
+            if a.sim_time.to_bits() != b.sim_time.to_bits()
+                || a.replica_seconds.to_bits()
+                    != b.replica_seconds.to_bits()
+            {
+                return Err(format!(
+                    "clocks diverged: sim {} vs {}, replica-s {} vs \
+                     {}",
+                    a.sim_time, b.sim_time, a.replica_seconds,
+                    b.replica_seconds
+                ));
+            }
+            if a.completed != b.completed || a.dropped != b.dropped {
+                return Err("completion counters diverged".into());
+            }
+            if a.completed != a.arrivals || a.dropped != 0 {
+                return Err(format!(
+                    "autoscaled run must serve every arrival: \
+                     completed {} of {}, dropped {}",
+                    a.completed, a.arrivals, a.dropped
+                ));
+            }
+            Ok(())
+        },
+    );
+}
